@@ -1,0 +1,101 @@
+//! The paper's future work, §6, realised: the EAPruned scheme applied to
+//! other elastic distances (ERP, MSM, TWE, WDTW) via the generalised
+//! skeleton. For each measure we run NN1 search with and without early
+//! abandoning and report the saving — "we should be able to speed up most
+//! of elastic distances" made concrete.
+//!
+//! Run with: `cargo run --release --example elastic_extensions`
+
+use repro::data::Dataset;
+use repro::distances::elastic::erp::{eap_erp, erp_naive};
+use repro::distances::elastic::msm::{eap_msm, msm_naive};
+use repro::distances::elastic::twe::{eap_twe, twe_naive};
+use repro::distances::elastic::wdtw::{eap_wdtw, wdtw_naive};
+use repro::distances::DtwWorkspace;
+use repro::metrics::Timer;
+use repro::norm::znorm::znorm;
+
+const LEN: usize = 128;
+const CANDS: usize = 200;
+
+fn main() {
+    let r = Dataset::Pamap2.generate(CANDS * LEN * 2 + 4000, 7);
+    let candidates: Vec<Vec<f64>> =
+        (0..CANDS).map(|i| znorm(&r[i * LEN * 2..i * LEN * 2 + LEN])).collect();
+    let query = znorm(&r[999..999 + LEN]);
+    let mut ws = DtwWorkspace::default();
+
+    type NaiveFn = Box<dyn Fn(&[f64], &[f64]) -> f64>;
+    type EapFn = Box<dyn Fn(&[f64], &[f64], f64, &mut DtwWorkspace) -> f64>;
+    let measures: Vec<(&str, NaiveFn, EapFn)> = vec![
+        (
+            "ERP(g=0)",
+            Box::new(|a, b| erp_naive(a, b, 0.0, LEN)),
+            Box::new(|a, b, ub, ws| eap_erp(a, b, 0.0, LEN, ub, ws)),
+        ),
+        (
+            "MSM(c=0.5)",
+            Box::new(|a, b| msm_naive(a, b, 0.5, LEN)),
+            Box::new(|a, b, ub, ws| eap_msm(a, b, 0.5, LEN, ub, ws)),
+        ),
+        (
+            "TWE(nu=1e-3,l=1)",
+            Box::new(|a, b| twe_naive(a, b, 0.001, 1.0, LEN)),
+            Box::new(|a, b, ub, ws| eap_twe(a, b, 0.001, 1.0, LEN, ub, ws)),
+        ),
+        (
+            "WDTW(g=0.05)",
+            Box::new(|a, b| wdtw_naive(a, b, 0.05, LEN)),
+            Box::new(|a, b, ub, ws| eap_wdtw(a, b, 0.05, LEN, ub, ws)),
+        ),
+    ];
+
+    println!(
+        "NN1 over {CANDS} candidates, series length {LEN} — naive full-matrix vs EAPruned\n"
+    );
+    println!(
+        "{:<17} {:>12} {:>12} {:>9} {:>11}",
+        "measure", "naive", "EAPruned", "speedup", "abandoned"
+    );
+    for (name, naive, eap) in measures {
+        // naive NN1: full matrix every time
+        let t = Timer::start();
+        let mut best_naive = (0usize, f64::INFINITY);
+        for (i, c) in candidates.iter().enumerate() {
+            let d = naive(&query, c);
+            if d < best_naive.1 {
+                best_naive = (i, d);
+            }
+        }
+        let t_naive = t.elapsed_secs();
+
+        // EAPruned NN1: shrinking upper bound
+        let t = Timer::start();
+        let mut best_eap = (0usize, f64::INFINITY);
+        let mut abandoned = 0usize;
+        for (i, c) in candidates.iter().enumerate() {
+            let d = eap(&query, c, best_eap.1, &mut ws);
+            if d.is_infinite() {
+                abandoned += 1;
+            } else if d < best_eap.1 {
+                best_eap = (i, d);
+            }
+        }
+        let t_eap = t.elapsed_secs();
+
+        assert_eq!(best_naive.0, best_eap.0, "{name}: EAPruned changed the NN!");
+        assert!((best_naive.1 - best_eap.1).abs() < 1e-9);
+        println!(
+            "{:<17} {:>11.2}ms {:>11.2}ms {:>8.2}x {:>10.1}%",
+            name,
+            t_naive * 1e3,
+            t_eap * 1e3,
+            t_naive / t_eap,
+            100.0 * abandoned as f64 / CANDS as f64
+        );
+    }
+    println!(
+        "\nIdentical nearest neighbours, large fractions of candidates abandoned —\n\
+         the paper's §6 claim demonstrated beyond DTW."
+    );
+}

@@ -1,0 +1,29 @@
+// Minimal reproducer for the staged-vs-generic anomaly.
+use repro::distances::eap_dtw::eap_cdtw;
+use repro::distances::elastic::core::{eap_elastic, DtwAsElastic};
+use repro::distances::dtw::cdtw_ws;
+use repro::distances::DtwWorkspace;
+use repro::norm::znorm::znorm;
+use repro::data::{extract_queries, Dataset};
+
+fn main() {
+    let n = 512; let w = n/5;
+    let r = Dataset::Ecg.generate(50 * n + 4000, 11);
+    let q = znorm(&extract_queries(&r, 1, n, 0.1, 5).remove(0));
+    let cands: Vec<Vec<f64>> = (0..30).map(|i| znorm(&r[i*n..i*n+n])).collect();
+    let mut ws = DtwWorkspace::default();
+    let mode = std::env::args().nth(1).unwrap_or_default();
+    let reps = 2000;
+    let t = std::time::Instant::now();
+    let mut acc = 0.0;
+    match mode.as_str() {
+        "staged" => for _ in 0..reps { for c in &cands {
+            acc += std::hint::black_box(eap_cdtw(&q, c, w, f64::INFINITY, None, &mut ws)); } },
+        "generic" => for _ in 0..reps { for c in &cands {
+            acc += std::hint::black_box(eap_elastic(&DtwAsElastic{li:&q, co:c}, w, f64::INFINITY, &mut ws)); } },
+        "plain" => for _ in 0..reps { for c in &cands {
+            acc += std::hint::black_box(cdtw_ws(&q, c, w, &mut ws)); } },
+        _ => panic!("mode: staged|generic|plain"),
+    }
+    println!("{mode}: {:?} acc={acc}", t.elapsed());
+}

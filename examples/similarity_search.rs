@@ -1,0 +1,63 @@
+//! The paper's core workload (§5): subsequence similarity search on every
+//! dataset, comparing the four suites — a miniature of Figure 5 you can
+//! run in under a minute.
+//!
+//! Run with: `cargo run --release --example similarity_search`
+//! Optional: `-- --ref-len 100000 --qlen 512 --ratio 0.2`
+
+use repro::data::{extract_queries, Dataset};
+use repro::metrics::{Counters, Timer};
+use repro::search::subsequence::{search_subsequence, window_cells};
+use repro::search::suite::Suite;
+use repro::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let ref_len = args.usize_or("ref-len", 60_000)?;
+    let qlen = args.usize_or("qlen", 256)?;
+    let ratio = args.f64_or("ratio", 0.1)?;
+    let w = window_cells(qlen, ratio);
+
+    println!(
+        "subsequence search: ref_len={ref_len}, qlen={qlen}, ratio={ratio} (w={w})\n"
+    );
+    println!(
+        "{:<8} {:>14} {:>14} {:>14} {:>14}",
+        "dataset",
+        Suite::Ucr.name(),
+        Suite::UcrUsp.name(),
+        Suite::UcrMon.name(),
+        Suite::UcrMonNoLb.name()
+    );
+    let mut totals = [0.0f64; 4];
+    for d in Dataset::ALL {
+        let reference = d.generate(ref_len, 42);
+        let query = extract_queries(&reference, 1, qlen, 0.1, 7).remove(0);
+        let mut row = format!("{:<8}", d.name());
+        let mut pos_check = None;
+        for (i, suite) in Suite::ALL.into_iter().enumerate() {
+            let mut c = Counters::new();
+            let t = Timer::start();
+            let m = search_subsequence(&reference, &query, w, suite, &mut c);
+            let secs = t.elapsed_secs();
+            totals[i] += secs;
+            row.push_str(&format!(" {:>13.3}s", secs));
+            match pos_check {
+                None => pos_check = Some(m.pos),
+                Some(p) => assert_eq!(p, m.pos, "suites disagree!"),
+            }
+        }
+        println!("{row}");
+    }
+    println!(
+        "\ntotals: UCR {:.2}s | USP {:.2}s | MON {:.2}s | MON-nolb {:.2}s",
+        totals[0], totals[1], totals[2], totals[3]
+    );
+    println!(
+        "speedups vs UCR: USP {:.2}x, MON {:.2}x, MON-nolb {:.2}x  (paper: 4.3x, 8.8x, 6.4x at full scale)",
+        totals[0] / totals[1],
+        totals[0] / totals[2],
+        totals[0] / totals[3]
+    );
+    Ok(())
+}

@@ -1,0 +1,105 @@
+# AOT bridge: lower the Layer-2 graphs to HLO *text* artifacts for the Rust
+# PJRT runtime.
+#
+# HLO text — NOT ``lowered.compile()`` or proto ``.serialize()`` — is the
+# interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+# ids which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <=
+# INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+# /opt/xla-example/load_hlo/ and its README.
+#
+# Run as ``python -m compile.aot --out-dir ../artifacts`` (what `make
+# artifacts` does). Python runs ONCE here; the Rust binary is self-contained
+# afterwards.
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The paper's experiment grid uses query lengths {128, 256, 512, 1024}
+# (prefixes of 1024-point queries). One artifact per (graph, length); the
+# warping window is a *runtime* input so all five window ratios share one
+# artifact. BATCH is the coordinator's panel size.
+QUERY_LENGTHS = (128, 256, 512, 1024)
+BATCH = 64
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def graphs_for(n: int, batch: int):
+    """(name, fn, example_args) for every artifact at query length ``n``."""
+    return [
+        (f"znorm_b{batch}_n{n}", model.batched_znorm,
+         (_spec((batch, n)),)),
+        (f"lb_keogh_b{batch}_n{n}", model.batched_lb_keogh,
+         (_spec((n,)), _spec((n,)), _spec((batch, n)))),
+        (f"prefilter_b{batch}_n{n}", model.prefilter,
+         (_spec((n,)), _spec((n,)), _spec((batch, n)))),
+        (f"dtw_b{batch}_n{n}", model.batched_dtw,
+         (_spec((n,)), _spec((1,), I32), _spec((batch, n)))),
+        (f"prefilter_verify_b{batch}_n{n}", model.prefilter_verify,
+         (_spec((n,)), _spec((n,)), _spec((n,)), _spec((1,), I32),
+          _spec((batch, n)))),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name, fn, args, out_dir):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    entry = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+        ],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "bytes": len(text),
+    }
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--lengths", type=int, nargs="*", default=QUERY_LENGTHS)
+    ap.add_argument("--batch", type=int, default=BATCH)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"batch": args.batch, "lengths": list(args.lengths),
+                "artifacts": []}
+    for n in args.lengths:
+        for name, fn, specs in graphs_for(n, args.batch):
+            entry = lower_one(name, fn, specs, args.out_dir)
+            manifest["artifacts"].append(entry)
+            print(f"  wrote {entry['file']} ({entry['bytes']} bytes)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> "
+          f"{args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+# L1: Pallas kernels for the batched prefilter/verify path.
+from .lb_keogh import lb_keogh_batch
+from .znorm import znorm_batch
+from .dtw_wavefront import dtw_batch
+from . import ref
+
+__all__ = ["lb_keogh_batch", "znorm_batch", "dtw_batch", "ref"]

@@ -1,0 +1,83 @@
+# Layer-1 Pallas kernel: batched anti-diagonal (wavefront) windowed DTW.
+#
+# This is the "vectorised DTW" comparator the paper cites (Xiao et al. [22]
+# parallelise DTW on GPU with prefix computations) re-thought for TPU
+# (DESIGN.md §Hardware-Adaptation): the DP recurrence has no intra-diagonal
+# dependency, so diagonal k is one vector op over the whole batch panel.
+# Three diagonals (k, k-1, k-2) of shape (block_b, n+1) stay VMEM-resident;
+# the scan over 2n-1 diagonals is a lax.fori_loop *inside* the kernel body,
+# i.e. the HBM<->VMEM traffic is one candidate panel in, one distance vector
+# out, per grid step.
+#
+# No pruning happens here — pruning is data-dependent and branchy, which is
+# exactly why the paper's EAPrunedDTW lives in the Rust scalar core. This
+# kernel is the batch *verifier* used by the UcrMonXla suite and the exact
+# DTW used to double-check survivors of the LB prefilter.
+#
+# The warping window ``w`` is a runtime scalar (i32), so one AOT artifact
+# per query length serves every window ratio in the paper's grid.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 8
+INF = float("inf")  # plain python float: jnp array constants can't be
+                    # captured by a pallas kernel body
+
+
+def _dtw_kernel(q_ref, w_ref, c_ref, o_ref):
+    q = q_ref[...]        # (n,) z-normalised query
+    c = c_ref[...]        # (block_b, n) candidate panel
+    w = w_ref[0]          # scalar warping window, in cells
+    bb, n = c.shape
+    idx = jnp.arange(n + 1)
+    # qp[i] = q[i-1] (1-based DP indexing); cp[:, j] = c[:, j-1].
+    qp = jnp.concatenate([jnp.zeros((1,), jnp.float32), q])
+    cp = jnp.concatenate([jnp.zeros((bb, 1), jnp.float32), c], axis=1)
+
+    def shift(a):  # a[:, i] -> a[:, i-1], INF border at i=0
+        return jnp.concatenate([jnp.full((bb, 1), INF), a[:, :-1]], axis=1)
+
+    # Diagonal k holds cells (i, j=k-i). k=0: only (0,0)=0. k=1: borders.
+    dm2 = jnp.broadcast_to(jnp.where(idx == 0, 0.0, INF), (bb, n + 1))
+    dm1 = jnp.full((bb, n + 1), INF)
+
+    def body(k, carry):
+        dm2, dm1 = carry
+        j = k - idx
+        valid = (idx >= 1) & (j >= 1) & (j <= n) & (jnp.abs(idx - j) <= w)
+        cj = jnp.take(cp, jnp.clip(j, 0, n), axis=1)       # (bb, n+1)
+        cost = (qp[None, :] - cj) ** 2
+        # D[i-1,j] -> shift(dm1); D[i,j-1] -> dm1; D[i-1,j-1] -> shift(dm2)
+        best = jnp.minimum(jnp.minimum(shift(dm1), dm1), shift(dm2))
+        d = jnp.where(valid[None, :], cost + best, INF)
+        return (dm1, d)
+
+    dm2, dm1 = jax.lax.fori_loop(2, 2 * n + 1, body, (dm2, dm1))
+    o_ref[...] = dm1[:, n]  # diagonal k=2n, cell (n, n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def dtw_batch(q, w, c, *, block_b=DEFAULT_BLOCK_B):
+    """Windowed DTW between ``q`` (n,) and every row of ``c`` (batch, n).
+
+    ``w`` is an i32 scalar array of shape (1,) — the Sakoe-Chiba band width
+    in cells. Returns (batch,) float32 exact distances (no pruning)."""
+    batch, n = c.shape
+    assert q.shape == (n,), (q.shape, c.shape)
+    assert batch % block_b == 0, (batch, block_b)
+    grid = (batch // block_b,)
+    return pl.pallas_call(
+        _dtw_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),            # query
+            pl.BlockSpec((1,), lambda i: (0,)),            # window scalar
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),  # candidate panel
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
+        interpret=True,
+    )(q.astype(jnp.float32), w.astype(jnp.int32), c.astype(jnp.float32))

@@ -1,0 +1,54 @@
+# Layer-1 Pallas kernel: batched LB_Keogh.
+#
+# TPU mapping of the paper's "prune before you compute" insight (DESIGN.md
+# §Hardware-Adaptation): where the CPU algorithm prunes cells *within* one
+# DTW matrix, this kernel prunes *across* candidates — a whole batch of
+# lower bounds in one VMEM-resident pass, so only survivors reach the scalar
+# EAPrunedDTW core in Rust.
+#
+# Tiling: the grid walks the batch dimension in blocks of ``block_b`` rows;
+# each grid step holds a (block_b, n) candidate panel plus one broadcast copy
+# of the U/L envelopes in VMEM (block_b=8, n=1024 → 8*1024*4 B = 32 KiB panel
+# + 8 KiB envelopes — far under the 16 MiB VMEM budget, leaving room for
+# double buffering of the HBM->VMEM stream). The clamp+square is VPU
+# elementwise work; the row reduction is a lane reduction inside the tile.
+#
+# interpret=True always: CPU PJRT cannot run Mosaic custom-calls. Real-TPU
+# performance is argued by the VMEM/roofline accounting in DESIGN.md §7.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 8
+
+
+def _lb_keogh_kernel(u_ref, l_ref, c_ref, o_ref):
+    c = c_ref[...]  # (block_b, n) candidate panel
+    u = u_ref[...]  # (n,) upper envelope (broadcast to the panel)
+    l = l_ref[...]  # (n,) lower envelope
+    over = jnp.maximum(c - u[None, :], 0.0)
+    under = jnp.maximum(l[None, :] - c, 0.0)
+    o_ref[...] = jnp.sum(over * over + under * under, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def lb_keogh_batch(u, l, c, *, block_b=DEFAULT_BLOCK_B):
+    """LB_Keogh for every row of ``c`` (batch, n) against envelopes ``u``/``l``
+    (n,). Returns (batch,) float32. ``batch`` must be a multiple of block_b."""
+    batch, n = c.shape
+    assert batch % block_b == 0, (batch, block_b)
+    grid = (batch // block_b,)
+    return pl.pallas_call(
+        _lb_keogh_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),          # U: one VMEM copy
+            pl.BlockSpec((n,), lambda i: (0,)),          # L: one VMEM copy
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),  # candidate panel
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.float32),
+        interpret=True,
+    )(u.astype(jnp.float32), l.astype(jnp.float32), c.astype(jnp.float32))

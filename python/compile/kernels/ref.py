@@ -1,0 +1,85 @@
+# Pure-python/jnp correctness oracles for the Pallas kernels.
+#
+# These are the CORE correctness signal for Layer 1: every kernel in this
+# package is checked against these references by pytest (+hypothesis sweeps
+# over shapes) before anything is AOT-lowered for the Rust runtime.
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "znorm_ref",
+    "envelopes_ref",
+    "lb_keogh_ref",
+    "dtw_ref",
+    "dtw_batch_ref",
+]
+
+# Guard used when a window is (near) constant: the UCR suite convention is to
+# treat such a window as flat zeros rather than dividing by ~0.
+STD_EPS = 1e-8
+
+
+def znorm_ref(x):
+    """Z-normalise each row of ``x`` (batch, n) using the UCR running-stats
+    formula: std = sqrt(E[x^2] - E[x]^2)."""
+    x = jnp.asarray(x, jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    ex2 = jnp.mean(x * x, axis=-1, keepdims=True)
+    var = jnp.maximum(ex2 - mean * mean, 0.0)
+    std = jnp.sqrt(var)
+    safe = std > STD_EPS
+    return jnp.where(safe, (x - mean) / jnp.where(safe, std, 1.0), 0.0)
+
+
+def envelopes_ref(q, w):
+    """Keogh envelopes of ``q`` (n,) for warping window ``w`` (cells):
+    U[i] = max(q[i-w..i+w]), L[i] = min(q[i-w..i+w]). O(n*w) naive oracle
+    for the Rust Lemire implementation and for building kernel inputs."""
+    q = np.asarray(q, np.float32)
+    n = q.shape[0]
+    u = np.empty(n, np.float32)
+    l = np.empty(n, np.float32)
+    for i in range(n):
+        lo, hi = max(0, i - w), min(n, i + w + 1)
+        u[i] = q[lo:hi].max()
+        l[i] = q[lo:hi].min()
+    return u, l
+
+
+def lb_keogh_ref(u, l, c):
+    """LB_Keogh of each candidate row ``c`` (batch, n) against the query
+    envelopes ``u``/``l`` (n,). Squared-Euclidean cost, as in the UCR suite."""
+    u = jnp.asarray(u, jnp.float32)
+    l = jnp.asarray(l, jnp.float32)
+    c = jnp.asarray(c, jnp.float32)
+    over = jnp.maximum(c - u[None, :], 0.0)
+    under = jnp.maximum(l[None, :] - c, 0.0)
+    return jnp.sum(over * over + under * under, axis=-1)
+
+
+def dtw_ref(q, c, w=None):
+    """Windowed DTW (squared Euclidean cost) between 1-D ``q`` and ``c``.
+
+    Full-matrix numpy DP — the slow, obviously-correct oracle (Algorithm 1
+    of the paper plus the Sakoe-Chiba band of §2.1). ``w=None`` = no window.
+    """
+    q = np.asarray(q, np.float64)
+    c = np.asarray(c, np.float64)
+    n, m = len(q), len(c)
+    if w is None:
+        w = max(n, m)
+    D = np.full((n + 1, m + 1), np.inf)
+    D[0, 0] = 0.0
+    for i in range(1, n + 1):
+        lo = max(1, i - w)
+        hi = min(m, i + w)
+        for j in range(lo, hi + 1):
+            cost = (q[i - 1] - c[j - 1]) ** 2
+            D[i, j] = cost + min(D[i - 1, j], D[i, j - 1], D[i - 1, j - 1])
+    return D[n, m]
+
+
+def dtw_batch_ref(q, cands, w):
+    """Batched windowed DTW oracle: ``q`` (n,), ``cands`` (batch, n)."""
+    return np.array([dtw_ref(q, cands[b], w) for b in range(cands.shape[0])],
+                    np.float32)

@@ -1,0 +1,46 @@
+# Layer-1 Pallas kernel: batched z-normalisation.
+#
+# The UCR suite z-normalises every candidate window before any distance is
+# evaluated. On the service's batched path this is the first stage of the
+# prefilter pipeline (znorm -> LB_Keogh), fused into a single AOT artifact by
+# model.prefilter so XLA keeps the normalised panel in registers/VMEM.
+#
+# Uses the UCR running-stats identity std = sqrt(E[x^2] - E[x]^2) — the same
+# formula the Rust `norm::StreamingStats` implements — so the two paths agree
+# bit-for-bit modulo f32 rounding. Near-constant windows (std <= STD_EPS)
+# z-normalise to all-zeros, matching the Rust convention.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import STD_EPS
+
+DEFAULT_BLOCK_B = 8
+
+
+def _znorm_kernel(x_ref, o_ref):
+    x = x_ref[...]  # (block_b, n)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    ex2 = jnp.mean(x * x, axis=-1, keepdims=True)
+    var = jnp.maximum(ex2 - mean * mean, 0.0)
+    std = jnp.sqrt(var)
+    safe = std > STD_EPS
+    o_ref[...] = jnp.where(safe, (x - mean) / jnp.where(safe, std, 1.0), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def znorm_batch(x, *, block_b=DEFAULT_BLOCK_B):
+    """Z-normalise each row of ``x`` (batch, n) → (batch, n) float32."""
+    batch, n = x.shape
+    assert batch % block_b == 0, (batch, block_b)
+    grid = (batch // block_b,)
+    return pl.pallas_call(
+        _znorm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,50 @@
+# Layer-2: the batched compute graphs the Rust coordinator executes via PJRT.
+#
+# Each public function here is a jit-able graph over *fixed* shapes that
+# aot.py lowers to HLO text, one artifact per (function, query length). They
+# call the Layer-1 Pallas kernels so kernel and graph lower into one module.
+#
+# All functions return 1-tuples: the AOT bridge lowers with
+# ``return_tuple=True`` and the Rust side unwraps with ``to_tuple1()``
+# (see /opt/xla-example/load_hlo/).
+import jax.numpy as jnp
+
+from .kernels import dtw_batch, lb_keogh_batch, znorm_batch
+
+
+def batched_znorm(windows):
+    """Z-normalise a (batch, n) panel of raw candidate windows."""
+    return (znorm_batch(windows),)
+
+
+def batched_lb_keogh(u, l, z_windows):
+    """LB_Keogh of a (batch, n) panel of *z-normalised* windows against the
+    query envelopes ``u``/``l`` (n,). Returns (batch,) bounds."""
+    return (lb_keogh_batch(u, l, z_windows),)
+
+
+def prefilter(u, l, raw_windows):
+    """The service's batched admission filter: z-normalise raw candidate
+    windows, then LB_Keogh them against the query envelopes — fused so the
+    normalised panel never leaves VMEM. Returns (batch,) lower bounds; the
+    coordinator only sends survivors (lb <= best-so-far) to the scalar
+    EAPrunedDTW core."""
+    z = znorm_batch(raw_windows)
+    return (lb_keogh_batch(u, l, z),)
+
+
+def batched_dtw(q, w, z_windows):
+    """Exact windowed DTW (wavefront, no pruning) of a z-normalised panel
+    against query ``q``; ``w`` is a runtime i32 (1,) window. The batch
+    verifier for the UcrMonXla suite."""
+    return (dtw_batch(q, w, z_windows),)
+
+
+def prefilter_verify(q, u, l, w, raw_windows):
+    """Fused znorm -> LB_Keogh -> wavefront-DTW graph: returns both the
+    lower bounds and the exact distances for a raw panel. Used by the
+    ablation A3 path where the whole batch is resolved on the XLA side."""
+    z = znorm_batch(raw_windows)
+    lb = lb_keogh_batch(u, l, z)
+    d = dtw_batch(q, w, z)
+    return (jnp.stack([lb, d], axis=0),)

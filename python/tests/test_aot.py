@@ -1,0 +1,63 @@
+# AOT bridge: every graph lowers to parseable HLO text with the expected
+# entry signature, and the manifest indexes it correctly. Uses a small
+# length so the test is fast; `make artifacts` runs the full grid.
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def art_dir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(d),
+         "--lengths", "16", "--batch", "8"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    return d
+
+
+def test_all_artifacts_written(art_dir):
+    names = {e["name"] for e in
+             json.load(open(art_dir / "manifest.json"))["artifacts"]}
+    assert names == {
+        "znorm_b8_n16", "lb_keogh_b8_n16", "prefilter_b8_n16",
+        "dtw_b8_n16", "prefilter_verify_b8_n16"}
+    for n in names:
+        assert (art_dir / f"{n}.hlo.txt").exists()
+
+
+def test_hlo_text_looks_like_hlo(art_dir):
+    text = (art_dir / "dtw_b8_n16.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_manifest_shapes(art_dir):
+    man = json.load(open(art_dir / "manifest.json"))
+    by_name = {e["name"]: e for e in man["artifacts"]}
+    pf = by_name["prefilter_b8_n16"]
+    assert [i["shape"] for i in pf["inputs"]] == [[16], [16], [8, 16]]
+    dt = by_name["dtw_b8_n16"]
+    assert [i["shape"] for i in dt["inputs"]] == [[16], [1], [8, 16]]
+    assert dt["inputs"][1]["dtype"] == "int32"
+
+
+def test_manifest_hashes_match_files(art_dir):
+    import hashlib
+    man = json.load(open(art_dir / "manifest.json"))
+    for e in man["artifacts"]:
+        text = (art_dir / e["file"]).read_text()
+        assert hashlib.sha256(text.encode()).hexdigest() == e["sha256"]
+        assert len(text) == e["bytes"]
+
+
+def test_graphs_for_covers_every_model_fn():
+    names = [n for (n, _, _) in aot.graphs_for(16, 8)]
+    assert len(names) == len(set(names)) == 5

@@ -1,0 +1,96 @@
+# Layer-1: wavefront DTW Pallas kernel vs full-matrix DP oracle.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dtw_batch
+from compile.kernels.ref import dtw_ref, dtw_batch_ref
+
+
+def _run(q, c, w, block_b=4):
+    return np.array(
+        dtw_batch(jnp.array(q), jnp.array([w], dtype=jnp.int32),
+                  jnp.array(c), block_b=block_b))
+
+
+def test_paper_worked_example():
+    """S=(3,1,4,4,1,1), T=(1,3,2,1,2,2) -> DTW = 9 (paper Fig. 2)."""
+    s = np.array([3, 1, 4, 4, 1, 1], np.float32)
+    t = np.array([1, 3, 2, 1, 2, 2], np.float32)
+    got = _run(s, np.stack([t] * 4), w=6)
+    np.testing.assert_allclose(got, 9.0)
+
+
+def test_identity_is_zero(rng):
+    q = rng.normal(size=32).astype(np.float32)
+    got = _run(q, np.stack([q] * 4), w=5)
+    np.testing.assert_allclose(got, 0.0, atol=1e-5)
+
+
+def test_window_zero_is_squared_euclidean(rng):
+    """w=0 degenerates to the squared Euclidean distance (paper §2.1)."""
+    n = 24
+    q = rng.normal(size=n).astype(np.float32)
+    c = rng.normal(size=(4, n)).astype(np.float32)
+    got = _run(q, c, w=0)
+    want = ((c - q[None, :]) ** 2).sum(axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_full_window_is_dtw(rng):
+    n = 20
+    q = rng.normal(size=n).astype(np.float32)
+    c = rng.normal(size=(4, n)).astype(np.float32)
+    got = _run(q, c, w=n)
+    want = dtw_batch_ref(q, c, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_monotone_in_window(rng):
+    """DTW_w is non-increasing in w."""
+    n = 16
+    q = rng.normal(size=n).astype(np.float32)
+    c = rng.normal(size=(4, n)).astype(np.float32)
+    prev = np.full(4, np.inf)
+    for w in (0, 1, 2, 4, 8, n):
+        got = _run(q, c, w)
+        assert np.all(got <= prev + 1e-4)
+        prev = got
+
+
+def test_batch_rows_independent(rng):
+    n = 16
+    q = rng.normal(size=n).astype(np.float32)
+    c = rng.normal(size=(8, n)).astype(np.float32)
+    full = _run(q, c, w=3, block_b=4)
+    for b in range(8):
+        solo = _run(q, np.stack([c[b]] * 4), w=3)
+        np.testing.assert_allclose(full[b], solo[0], rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 40),
+    wfrac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(n, wfrac, seed):
+    rng = np.random.default_rng(seed)
+    w = int(round(wfrac * n))
+    q = rng.normal(size=n).astype(np.float32)
+    c = rng.normal(size=(4, n)).astype(np.float32)
+    got = _run(q, c, w)
+    want = dtw_batch_ref(q, c, w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+def test_runtime_window_matches_static_oracle(rng):
+    """One artifact serves all window ratios: sweep w at runtime."""
+    n = 24
+    q = rng.normal(size=n).astype(np.float32)
+    c = rng.normal(size=(4, n)).astype(np.float32)
+    for ratio in (0.1, 0.2, 0.3, 0.4, 0.5):
+        w = max(1, int(round(ratio * n)))
+        np.testing.assert_allclose(
+            _run(q, c, w), dtw_batch_ref(q, c, w), rtol=1e-4)

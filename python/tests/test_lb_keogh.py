@@ -1,0 +1,92 @@
+# Layer-1: LB_Keogh Pallas kernel vs pure-jnp oracle, plus the lower-bound
+# property LB_Keogh <= DTW that the whole cascade relies on.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lb_keogh_batch
+from compile.kernels.ref import lb_keogh_ref, envelopes_ref, dtw_ref
+
+
+def _check(u, l, c, block_b=8):
+    got = np.array(lb_keogh_batch(jnp.array(u), jnp.array(l), jnp.array(c),
+                                  block_b=block_b))
+    want = np.array(lb_keogh_ref(u, l, c))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    return got
+
+
+def test_basic(rng):
+    n = 64
+    q = rng.normal(size=n).astype(np.float32)
+    u, l = envelopes_ref(q, 5)
+    c = rng.normal(size=(16, n)).astype(np.float32)
+    _check(u, l, c)
+
+
+def test_candidate_inside_envelope_is_zero(rng):
+    n = 32
+    q = rng.normal(size=n).astype(np.float32)
+    u, l = envelopes_ref(q, 4)
+    # the query itself lies within its own envelope
+    c = np.broadcast_to(q, (8, n)).copy()
+    got = _check(u, l, c)
+    assert np.all(got == 0.0)
+
+
+def test_far_candidate_positive(rng):
+    n = 32
+    q = rng.normal(size=n).astype(np.float32)
+    u, l = envelopes_ref(q, 4)
+    c = (q + 100.0).reshape(1, n).repeat(8, axis=0)
+    got = _check(u, l, c)
+    assert np.all(got > 0.0)
+
+
+def test_lb_is_lower_bound_on_dtw(rng):
+    """LB_Keogh(q, c) <= DTW_w(q, c) — the invariant the UCR cascade needs."""
+    n, w = 24, 3
+    for _ in range(10):
+        q = rng.normal(size=n).astype(np.float32)
+        c = rng.normal(size=(8, n)).astype(np.float32)
+        u, l = envelopes_ref(q, w)
+        lb = _check(u, l, c)
+        for b in range(8):
+            d = dtw_ref(q, c[b], w)
+            assert lb[b] <= d + 1e-4, (lb[b], d)
+
+
+def test_wider_window_gives_looser_bound(rng):
+    n = 40
+    q = rng.normal(size=n).astype(np.float32)
+    c = rng.normal(size=(8, n)).astype(np.float32)
+    prev = np.full(8, np.inf)
+    for w in (1, 3, 8, 20, n):
+        u, l = envelopes_ref(q, w)
+        lb = _check(u, l, c)
+        assert np.all(lb <= prev + 1e-5)
+        prev = lb
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 80),
+    w=st.integers(0, 20),
+    b_blocks=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(n, w, b_blocks, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=n).astype(np.float32)
+    u, l = envelopes_ref(q, min(w, n))
+    c = rng.normal(size=(4 * b_blocks, n)).astype(np.float32)
+    _check(u, l, c, block_b=4)
+
+
+def test_rejects_unaligned_batch(rng):
+    q = rng.normal(size=16).astype(np.float32)
+    u, l = envelopes_ref(q, 2)
+    c = rng.normal(size=(5, 16)).astype(np.float32)
+    with pytest.raises(AssertionError):
+        lb_keogh_batch(jnp.array(u), jnp.array(l), jnp.array(c), block_b=8)

@@ -1,0 +1,66 @@
+# Layer-2: the composed graphs (prefilter, prefilter_verify) agree with the
+# composition of their parts and with the oracles.
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import (
+    znorm_ref, lb_keogh_ref, envelopes_ref, dtw_batch_ref)
+
+
+def _mk(rng, b=8, n=32, w=4):
+    q = znorm_ref(rng.normal(size=(1, n)).astype(np.float32))[0]
+    u, l = envelopes_ref(np.array(q), w)
+    raw = rng.normal(3.0, 2.0, size=(b, n)).astype(np.float32)
+    return np.array(q), u, l, raw, w
+
+
+def test_prefilter_equals_znorm_then_lb(rng):
+    q, u, l, raw, w = _mk(rng)
+    (got,) = model.prefilter(jnp.array(u), jnp.array(l), jnp.array(raw))
+    z = znorm_ref(raw)
+    want = lb_keogh_ref(u, l, z)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_prefilter_is_lower_bound_on_dtw_of_znormed(rng):
+    q, u, l, raw, w = _mk(rng)
+    (lb,) = model.prefilter(jnp.array(u), jnp.array(l), jnp.array(raw))
+    z = np.array(znorm_ref(raw))
+    d = dtw_batch_ref(q, z, w)
+    assert np.all(np.array(lb) <= d + 1e-3)
+
+
+def test_prefilter_verify_stacks_lb_and_dtw(rng):
+    q, u, l, raw, w = _mk(rng)
+    (both,) = model.prefilter_verify(
+        jnp.array(q), jnp.array(u), jnp.array(l),
+        jnp.array([w], dtype=jnp.int32), jnp.array(raw))
+    both = np.array(both)
+    assert both.shape == (2, raw.shape[0])
+    lb, d = both[0], both[1]
+    z = np.array(znorm_ref(raw))
+    np.testing.assert_allclose(lb, np.array(lb_keogh_ref(u, l, z)),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(d, dtw_batch_ref(q, z, w), rtol=1e-3,
+                               atol=1e-4)
+    assert np.all(lb <= d + 1e-3)
+
+
+def test_batched_znorm_tuple_contract(rng):
+    raw = rng.normal(size=(8, 16)).astype(np.float32)
+    out = model.batched_znorm(jnp.array(raw))
+    assert isinstance(out, tuple) and len(out) == 1
+    np.testing.assert_allclose(np.array(out[0]), np.array(znorm_ref(raw)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_batched_dtw_tuple_contract(rng):
+    q, u, l, raw, w = _mk(rng)
+    z = np.array(znorm_ref(raw))
+    out = model.batched_dtw(jnp.array(q), jnp.array([w], dtype=jnp.int32),
+                            jnp.array(z))
+    assert isinstance(out, tuple) and len(out) == 1
+    np.testing.assert_allclose(np.array(out[0]), dtw_batch_ref(q, z, w),
+                               rtol=1e-3, atol=1e-4)

@@ -1,0 +1,76 @@
+# Layer-1: znorm Pallas kernel vs pure-jnp oracle.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import znorm_batch
+from compile.kernels.ref import znorm_ref
+
+
+def _check(x, block_b=8, rtol=1e-4, atol=1e-5):
+    got = np.array(znorm_batch(jnp.array(x), block_b=block_b))
+    want = np.array(znorm_ref(x))
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
+    return got
+
+
+def test_basic(rng):
+    x = rng.normal(2.0, 5.0, size=(16, 64)).astype(np.float32)
+    z = _check(x)
+    # each row ends up ~N(0,1)
+    np.testing.assert_allclose(z.mean(axis=1), 0.0, atol=1e-4)
+    np.testing.assert_allclose((z * z).mean(axis=1), 1.0, rtol=1e-3)
+
+
+def test_constant_rows_become_zero(rng):
+    x = np.full((8, 32), 3.25, np.float32)
+    z = _check(x)
+    assert np.all(z == 0.0)
+
+
+def test_mixed_constant_and_normal_rows(rng):
+    x = rng.normal(size=(8, 32)).astype(np.float32)
+    x[3] = -1.5
+    z = _check(x)
+    assert np.all(z[3] == 0.0)
+    assert np.any(z[2] != 0.0)
+
+
+def test_scale_shift_invariance(rng):
+    x = rng.normal(size=(8, 48)).astype(np.float32)
+    z1 = _check(x)
+    z2 = _check((x * 7.5 + 100.0).astype(np.float32))
+    np.testing.assert_allclose(z1, z2, rtol=1e-2, atol=1e-3)
+
+
+def test_single_block(rng):
+    x = rng.normal(size=(8, 16)).astype(np.float32)
+    got8 = np.array(znorm_batch(jnp.array(x), block_b=8))
+    got4 = np.array(znorm_batch(jnp.array(x), block_b=4))
+    np.testing.assert_allclose(got8, got4, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_blocks=st.integers(1, 4),
+    n=st.integers(2, 96),
+    loc=st.floats(-50, 50),
+    scale=st.floats(0.01, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(b_blocks, n, loc, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(loc, scale, size=(4 * b_blocks, n)).astype(np.float32)
+    # E[x^2]-E[x]^2 cancels catastrophically in f32 when |loc| >> scale:
+    # both kernel and oracle lose the same leading digits but not
+    # bit-identically, so the sweep tolerance scales with the conditioning.
+    cond = 1.0 + (abs(loc) / max(scale, 1e-3)) ** 2
+    tol = min(1e-4 * cond, 0.2)
+    _check(x, block_b=4, rtol=max(1e-4, tol), atol=max(1e-5, tol))
+
+
+def test_rejects_unaligned_batch(rng):
+    x = rng.normal(size=(7, 16)).astype(np.float32)
+    with pytest.raises(AssertionError):
+        znorm_batch(jnp.array(x), block_b=8)

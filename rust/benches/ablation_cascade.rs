@@ -1,0 +1,76 @@
+//! Ablation A3 — the cascade itself: UCR-MON with every subset of the
+//! lower-bound cascade (none / kim / +keoghEQ / +keoghEC = full) and with
+//! upper-bound tightening on/off. Quantifies the paper's headline §5
+//! finding: with EAPrunedDTW, lower bounds still help but are
+//! *dispensable*.
+
+use repro::bench_support::harness::{bench, fmt_secs};
+use repro::bounds::cascade::CascadePolicy;
+use repro::data::{extract_queries, Dataset};
+use repro::metrics::Counters;
+use repro::search::subsequence::{scan_policy, window_cells, DataEnvelopes, QueryContext};
+use repro::search::suite::Suite;
+
+fn main() {
+    let ref_len = std::env::var("REPRO_REF_LEN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000usize);
+    let qlen = 256;
+    let ratio = 0.2;
+    let w = window_cells(qlen, ratio);
+    let policies: [(&str, CascadePolicy); 5] = [
+        ("none (nolb)", CascadePolicy::none()),
+        ("kim only", CascadePolicy { kim: true, keogh_eq: false, keogh_ec: false, tighten: false }),
+        ("kim+EQ", CascadePolicy { kim: true, keogh_eq: true, keogh_ec: false, tighten: true }),
+        ("full", CascadePolicy::full()),
+        ("full, no tighten", CascadePolicy { tighten: false, ..CascadePolicy::full() }),
+    ];
+    println!("ablation A3: cascade subsets with the EAPrunedDTW core (ref_len={ref_len}, qlen={qlen}, w={w})");
+    println!(
+        "{:<8} {:<17} {:>10} {:>8} {:>9}",
+        "dataset", "cascade", "time", "dtw%", "abandon%"
+    );
+    for d in Dataset::ALL {
+        let r = d.generate(ref_len, 3);
+        let q = extract_queries(&r, 1, qlen, 0.1, 5).remove(0);
+        let denv = DataEnvelopes::new(&r, w);
+        let total = r.len() - qlen + 1;
+        let mut baseline_pos = None;
+        for (name, pol) in policies {
+            let mut counters = Counters::new();
+            let mut pos = 0usize;
+            let stats = bench(0, 3, || {
+                let mut ctx = QueryContext::new(&q, w);
+                counters = Counters::new();
+                let m = scan_policy(
+                    &r,
+                    0,
+                    total,
+                    &mut ctx,
+                    Some(&denv),
+                    Suite::UcrMon,
+                    pol,
+                    f64::INFINITY,
+                    &mut counters,
+                )
+                .expect("match");
+                pos = m.pos;
+                m.dist
+            });
+            match baseline_pos {
+                None => baseline_pos = Some(pos),
+                Some(p) => assert_eq!(p, pos, "{name} changed the result"),
+            }
+            println!(
+                "{:<8} {:<17} {:>10} {:>7.1}% {:>8.1}%",
+                d.name(),
+                name,
+                fmt_secs(stats.median),
+                100.0 * counters.dtw_calls as f64 / counters.candidates.max(1) as f64,
+                100.0 * counters.dtw_abandons as f64 / counters.dtw_calls.max(1) as f64,
+            );
+        }
+    }
+    println!("\n(paper §5: 'none' stays within ~1.5x of 'full' — bounds help, but are dispensable)");
+}

@@ -1,0 +1,68 @@
+//! Ablation A1 — what the **border-collision early abandon** buys over the
+//! row-minimum abandon (the paper's §4 argument for why EAPrunedDTW
+//! abandons earlier than PrunedDTW).
+//!
+//! Protocol: DTW calls as they occur inside a real search — candidate
+//! windows from each dataset, the upper bound set at quantiles of the true
+//! distance distribution (tight ub = late in a search; loose = early).
+//! Reports wall time and DP cells for PrunedDTW (row-min EA, 3-way min)
+//! vs EAPrunedDTW (collision EA, staged updates).
+
+use repro::bench_support::harness::{bench, fmt_secs};
+use repro::data::{extract_queries, Dataset};
+use repro::distances::dtw::cdtw;
+use repro::distances::eap_dtw::eap_cdtw_counted;
+use repro::distances::pruned_dtw::pruned_cdtw_counted;
+use repro::distances::DtwWorkspace;
+use repro::norm::znorm::znorm;
+
+fn main() {
+    let n = 512;
+    let w = n / 5;
+    let per_dataset = 40;
+    println!("ablation A1: PrunedDTW (row-min EA) vs EAPrunedDTW (collision EA), n={n} w={w}");
+    println!(
+        "{:<8} {:>6} | {:>10} {:>12} | {:>10} {:>12} | {:>7} {:>7}",
+        "dataset", "ub@q", "usp time", "usp cells", "eap time", "eap cells", "t-ratio", "c-ratio"
+    );
+    for d in Dataset::ALL {
+        let r = d.generate(per_dataset * n * 2 + 2000, 7);
+        let q = znorm(&extract_queries(&r, 1, n, 0.1, 3).remove(0));
+        let cands: Vec<Vec<f64>> =
+            (0..per_dataset).map(|i| znorm(&r[i * n * 2..i * n * 2 + n])).collect();
+        let mut dists: Vec<f64> = cands.iter().map(|c| cdtw(&q, c, w)).collect();
+        dists.sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
+        for (label, qt) in [("p05", 0.05), ("p50", 0.50)] {
+            let ub = dists[((dists.len() - 1) as f64 * qt) as usize];
+            let mut ws = DtwWorkspace::default();
+            let mut usp_cells = 0u64;
+            let t_usp = bench(1, 5, || {
+                usp_cells = 0;
+                for c in &cands {
+                    let (_, cc) = pruned_cdtw_counted(&q, c, w, ub, None, &mut ws);
+                    usp_cells += cc;
+                }
+            });
+            let mut eap_cells = 0u64;
+            let t_eap = bench(1, 5, || {
+                eap_cells = 0;
+                for c in &cands {
+                    let (_, cc) = eap_cdtw_counted(&q, c, w, ub, None, &mut ws);
+                    eap_cells += cc;
+                }
+            });
+            println!(
+                "{:<8} {:>6} | {:>10} {:>12} | {:>10} {:>12} | {:>6.2}x {:>6.2}x",
+                d.name(),
+                label,
+                fmt_secs(t_usp.median),
+                usp_cells,
+                fmt_secs(t_eap.median),
+                eap_cells,
+                t_usp.median / t_eap.median,
+                usp_cells as f64 / eap_cells.max(1) as f64,
+            );
+        }
+    }
+    println!("\n(expect c-ratio > 1: the collision abandon cuts rows the row-min check keeps)");
+}

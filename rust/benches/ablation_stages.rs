@@ -1,0 +1,71 @@
+//! Ablation A2 — what the **stage decomposition** (1-/2-dependency cell
+//! updates) buys, holding everything else fixed: `eap_cdtw` (specialised
+//! stages) vs the same EAP logic run through the generic elastic skeleton
+//! with DTW costs (`DtwAsElastic`: 3-way min everywhere, per-move cost
+//! closures). Identical pruning decisions, different inner loops — the
+//! paper's "saving considerable computation" claim isolated.
+
+use repro::bench_support::harness::{bench, fmt_secs};
+use repro::data::{extract_queries, Dataset};
+use repro::distances::dtw::cdtw;
+use repro::distances::eap_dtw::eap_cdtw;
+use repro::distances::elastic::core::{eap_elastic, DtwAsElastic};
+use repro::distances::DtwWorkspace;
+use repro::norm::znorm::znorm;
+
+fn main() {
+    println!("ablation A2: staged EAPrunedDTW vs generic-skeleton EAP (3-way min)");
+    println!(
+        "{:<8} {:>5} {:>6} | {:>10} {:>10} {:>8}",
+        "dataset", "n", "ub", "staged", "generic", "speedup"
+    );
+    for d in [Dataset::Ecg, Dataset::Refit, Dataset::Ppg] {
+        for n in [128usize, 512] {
+            let w = n / 5;
+            let r = d.generate(50 * n + 4000, 11);
+            let q = znorm(&extract_queries(&r, 1, n, 0.1, 5).remove(0));
+            let cands: Vec<Vec<f64>> = (0..30).map(|i| znorm(&r[i * n..i * n + n])).collect();
+            let mut dists: Vec<f64> = cands.iter().map(|c| cdtw(&q, c, w)).collect();
+            dists.sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
+            for (label, ub) in
+                [("inf", f64::INFINITY), ("p25", dists[dists.len() / 4])]
+            {
+                let mut ws = DtwWorkspace::default();
+                // correctness cross-check before timing
+                for c in &cands {
+                    let a = eap_cdtw(&q, c, w, ub, None, &mut ws);
+                    let b = eap_elastic(&DtwAsElastic { li: &q, co: c }, w, ub, &mut ws);
+                    assert!(
+                        (a == b) || (a - b).abs() < 1e-9 || (a.is_infinite() && b.is_infinite()),
+                        "staged {a} vs generic {b}"
+                    );
+                }
+                let t_staged = bench(1, 7, || {
+                    for c in &cands {
+                        std::hint::black_box(eap_cdtw(&q, c, w, ub, None, &mut ws));
+                    }
+                });
+                let t_generic = bench(1, 7, || {
+                    for c in &cands {
+                        std::hint::black_box(eap_elastic(
+                            &DtwAsElastic { li: &q, co: c },
+                            w,
+                            ub,
+                            &mut ws,
+                        ));
+                    }
+                });
+                println!(
+                    "{:<8} {:>5} {:>6} | {:>10} {:>10} {:>7.2}x",
+                    d.name(),
+                    n,
+                    label,
+                    fmt_secs(t_staged.median),
+                    fmt_secs(t_generic.median),
+                    t_generic.median / t_staged.median
+                );
+            }
+        }
+    }
+    println!("\n(speedup > 1 = the stage decomposition itself, not the pruning, paying off)");
+}

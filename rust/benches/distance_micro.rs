@@ -1,0 +1,50 @@
+//! Distance-core micro-benchmarks: ns/call for every DTW variant across
+//! query lengths, window ratios and upper-bound tightness — the paper's
+//! §2.4 "overheads" discussion in numbers, and the perf pass's primary
+//! probe (EXPERIMENTS.md §Perf).
+
+use repro::bench_support::harness::{bench, fmt_secs};
+use repro::data::{extract_queries, Dataset};
+use repro::distances::dtw::{cdtw_ws, cdtw};
+use repro::distances::dtw_ea::dtw_ea;
+use repro::distances::eap_dtw::eap_cdtw;
+use repro::distances::pruned_dtw::pruned_cdtw;
+use repro::distances::DtwWorkspace;
+use repro::norm::znorm::znorm;
+
+fn main() {
+    println!("distance micro (median of reps, per call):");
+    println!(
+        "{:>5} {:>5} {:>5} | {:>10} {:>10} {:>10} {:>10}",
+        "n", "w", "ub", "dtw", "dtw_ea", "pruned", "eap"
+    );
+    for n in [128usize, 512, 1024] {
+        let r = Dataset::Pamap2.generate(4 * n + 2000, 9);
+        let q = znorm(&extract_queries(&r, 1, n, 0.1, 3).remove(0));
+        let c = znorm(&r[2 * n..3 * n]);
+        for ratio in [0.1, 0.5] {
+            let w = (ratio * n as f64) as usize;
+            let exact = cdtw(&q, &c, w);
+            for (label, ub) in [("inf", f64::INFINITY), ("1.2d", exact * 1.2), ("0.5d", exact * 0.5)]
+            {
+                let mut ws = DtwWorkspace::with_capacity(n);
+                let reps = if n >= 1024 { 20 } else { 50 };
+                let t_dtw = bench(2, reps, || cdtw_ws(&q, &c, w, &mut ws));
+                let t_ea = bench(2, reps, || dtw_ea(&q, &c, w, ub, None, &mut ws));
+                let t_pr = bench(2, reps, || pruned_cdtw(&q, &c, w, ub, None, &mut ws));
+                let t_eap = bench(2, reps, || eap_cdtw(&q, &c, w, ub, None, &mut ws));
+                println!(
+                    "{:>5} {:>5} {:>5} | {:>10} {:>10} {:>10} {:>10}",
+                    n,
+                    w,
+                    label,
+                    fmt_secs(t_dtw.median),
+                    fmt_secs(t_ea.median),
+                    fmt_secs(t_pr.median),
+                    fmt_secs(t_eap.median),
+                );
+            }
+        }
+    }
+    println!("\n(ub=inf rows expose pure overhead vs plain dtw; 0.5d rows expose abandon speed)");
+}

@@ -1,0 +1,45 @@
+//! Figure 5a: average runtime per dataset by **query length** (averaged
+//! over window ratios), four suites. The paper's shape to reproduce:
+//! UCR-MON fastest at every length, the gap growing with length (3.7–9.7×
+//! over UCR at length 1024); UCR-MON-nolb beating UCR-USP overall.
+//!
+//! Scale with REPRO_REF_LEN / REPRO_QUERIES / REPRO_DATASETS (see
+//! bench_support::grid_from_env).
+
+use repro::bench_support::grid::{experiments, run_experiment, Workload};
+use repro::bench_support::grid_from_env;
+use repro::bench_support::report::fig5_table;
+use repro::search::suite::Suite;
+
+fn main() {
+    let (mut grid, datasets) = grid_from_env(20_000);
+    // Fig 5a averages over ratios; trim the ratio axis if unset to keep
+    // default runs minutes-scale
+    if std::env::var("REPRO_RATIOS").is_err() {
+        grid.window_ratios = vec![0.1, 0.3, 0.5];
+    }
+    eprintln!(
+        "fig5a: ref_len={} queries={} lengths={:?} ratios={:?}",
+        grid.ref_len, grid.queries, grid.query_lengths, grid.window_ratios
+    );
+    let mut results = Vec::new();
+    for &d in &datasets {
+        let w = Workload::build(d, &grid);
+        for exp in experiments(&grid, &[d]) {
+            for s in Suite::ALL {
+                results.push(run_experiment(&w, &exp, s));
+            }
+        }
+        eprintln!("  {} done", d.name());
+    }
+    println!(
+        "{}",
+        fig5_table(&results, &Suite::ALL, &grid.query_lengths, "query length", |r| r.exp.qlen)
+    );
+    // the paper's headline shape, asserted loosely: MON total <= UCR total
+    let total = |s: Suite| -> f64 {
+        results.iter().filter(|r| r.suite == s).map(|r| r.seconds).sum()
+    };
+    let (ucr, mon) = (total(Suite::Ucr), total(Suite::UcrMon));
+    println!("totals: UCR {ucr:.2}s vs UCR-MON {mon:.2}s — speedup {:.2}x", ucr / mon);
+}

@@ -1,0 +1,50 @@
+//! Figure 5b: average runtime per dataset by **window ratio** (averaged
+//! over query lengths), four suites. The paper's shape: varying the window
+//! has much less impact on the MON suites than on UCR/USP (pruning absorbs
+//! the extra cells as w grows — §5's closing observation, REFIT excepted).
+
+use repro::bench_support::grid::{experiments, run_experiment, Workload};
+use repro::bench_support::grid_from_env;
+use repro::bench_support::report::fig5_table;
+use repro::search::suite::Suite;
+
+fn main() {
+    let (mut grid, datasets) = grid_from_env(20_000);
+    // Fig 5b averages over lengths; trim the length axis by default
+    if std::env::var("REPRO_QLENS").is_err() {
+        grid.query_lengths = vec![128, 512];
+    }
+    eprintln!(
+        "fig5b: ref_len={} queries={} lengths={:?} ratios={:?}",
+        grid.ref_len, grid.queries, grid.query_lengths, grid.window_ratios
+    );
+    let mut results = Vec::new();
+    for &d in &datasets {
+        let w = Workload::build(d, &grid);
+        for exp in experiments(&grid, &[d]) {
+            for s in Suite::ALL {
+                results.push(run_experiment(&w, &exp, s));
+            }
+        }
+        eprintln!("  {} done", d.name());
+    }
+    let xs: Vec<usize> = grid.window_ratios.iter().map(|r| (r * 100.0).round() as usize).collect();
+    println!(
+        "{}",
+        fig5_table(&results, &Suite::ALL, &xs, "window ratio %", |r| {
+            (r.exp.ratio * 100.0).round() as usize
+        })
+    );
+    // window sensitivity: max/min runtime across ratios, per suite
+    println!("\nwindow sensitivity (max/min across ratios, all datasets pooled):");
+    for s in Suite::ALL {
+        let mut per_ratio: std::collections::BTreeMap<usize, f64> = Default::default();
+        for r in results.iter().filter(|r| r.suite == s) {
+            *per_ratio.entry((r.exp.ratio * 100.0).round() as usize).or_insert(0.0) += r.seconds;
+        }
+        let mx = per_ratio.values().cloned().fold(f64::MIN, f64::max);
+        let mn = per_ratio.values().cloned().fold(f64::MAX, f64::min);
+        println!("  {:<13} {:.2}x", s.name(), mx / mn);
+    }
+    println!("(paper: MON suites markedly flatter than UCR/USP)");
+}

@@ -1,0 +1,32 @@
+//! Figure 5's inset rows: the proportion of candidates pruned by each
+//! lower bound and the proportion reaching the DTW core, per dataset —
+//! the paper's point that our algorithm only sees cascade *survivors*
+//! (and that MON-nolb is "100% DTW").
+
+use repro::bench_support::grid::{experiments, run_experiment, Workload};
+use repro::bench_support::grid_from_env;
+use repro::bench_support::report::pruning_table;
+use repro::search::suite::Suite;
+
+fn main() {
+    let (mut grid, datasets) = grid_from_env(20_000);
+    if std::env::var("REPRO_QLENS").is_err() {
+        grid.query_lengths = vec![256];
+    }
+    if std::env::var("REPRO_RATIOS").is_err() {
+        grid.window_ratios = vec![0.1, 0.3, 0.5];
+    }
+    let mut results = Vec::new();
+    for &d in &datasets {
+        let w = Workload::build(d, &grid);
+        for exp in experiments(&grid, &[d]) {
+            for s in [Suite::UcrMon, Suite::UcrMonNoLb] {
+                results.push(run_experiment(&w, &exp, s));
+            }
+        }
+        eprintln!("  {} done", d.name());
+    }
+    println!("== Fig 5 inset: cascade pruning proportions ==");
+    println!("{}", pruning_table(&results));
+    println!("(UCR-MON-nolb rows must show dtw% = 100 — no lower bounds at all)");
+}

@@ -1,0 +1,35 @@
+//! The §5 headline table: total time per suite over the whole grid,
+//! speedups vs UCR and UCR-USP, and the slower-case statistics (the paper
+//! reports MON slower than UCR in 7.3% of 600 runs, by small margins —
+//! versus USP slower than UCR in 18% by up to ~986s).
+
+use repro::bench_support::grid::{experiments, run_experiment, Workload};
+use repro::bench_support::grid_from_env;
+use repro::bench_support::report::speedup_summary;
+use repro::search::suite::Suite;
+
+fn main() {
+    let (mut grid, datasets) = grid_from_env(20_000);
+    if std::env::var("REPRO_QLENS").is_err() {
+        grid.query_lengths = vec![128, 256, 512, 1024];
+    }
+    if std::env::var("REPRO_RATIOS").is_err() {
+        grid.window_ratios = vec![0.1, 0.3, 0.5];
+    }
+    eprintln!(
+        "speedup grid: ref_len={} queries={} lengths={:?} ratios={:?}",
+        grid.ref_len, grid.queries, grid.query_lengths, grid.window_ratios
+    );
+    let mut results = Vec::new();
+    for &d in &datasets {
+        let w = Workload::build(d, &grid);
+        for exp in experiments(&grid, &[d]) {
+            for s in Suite::ALL {
+                results.push(run_experiment(&w, &exp, s));
+            }
+        }
+        eprintln!("  {} done", d.name());
+    }
+    println!("== §5 totals & speedups (paper: MON 8.78x vs UCR, 2.04x vs USP; nolb 6.44x/1.49x) ==");
+    println!("{}", speedup_summary(&results));
+}

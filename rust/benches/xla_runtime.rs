@@ -1,0 +1,78 @@
+//! K1 — Layer-1/2 runtime micro-bench: throughput of the AOT-compiled
+//! graphs (znorm, LB_Keogh prefilter, wavefront DTW) through PJRT, vs the
+//! scalar Rust equivalents, per query length. Also reports compile (first
+//! call) vs steady-state cost, i.e. what the executable cache buys.
+//!
+//! Skips politely when `artifacts/` is missing.
+
+use std::path::Path;
+
+use repro::bench_support::harness::{bench, fmt_secs};
+use repro::bounds::envelope::envelopes;
+use repro::bounds::lb_keogh::{lb_keogh_eq, reorder, sort_order};
+use repro::data::{extract_queries, Dataset};
+use repro::metrics::Timer;
+use repro::norm::znorm::{stats, znorm};
+use repro::runtime::XlaEngine;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        return;
+    }
+    let mut engine = XlaEngine::open(&dir).unwrap();
+    let b = engine.batch();
+    let lengths = engine.manifest().lengths.clone();
+    println!("xla runtime micro (batch={b}):");
+    println!(
+        "{:>5} | {:>10} {:>12} {:>12} | {:>12} {:>14}",
+        "n", "compile", "prefilter", "dtw(w=n/5)", "scalar LB", "LB speedup"
+    );
+    for &n in &lengths {
+        let r = Dataset::Ecg.generate(b + n + 100, 5);
+        let q = znorm(&extract_queries(&r, 1, n, 0.1, 3).remove(0));
+        let w = n / 5;
+        let (u, l) = envelopes(&q, w);
+        let u32v: Vec<f32> = u.iter().map(|&v| v as f32).collect();
+        let l32v: Vec<f32> = l.iter().map(|&v| v as f32).collect();
+        let q32: Vec<f32> = q.iter().map(|&v| v as f32).collect();
+        let mut panel = vec![0f32; b * n];
+        for k in 0..b {
+            for j in 0..n {
+                panel[k * n + j] = r[k + j] as f32;
+            }
+        }
+        // compile cost = first call
+        let t0 = Timer::start();
+        engine.prefilter(n, &u32v, &l32v, &panel).unwrap();
+        let compile = t0.elapsed_secs();
+        let pf = bench(2, 10, || engine.prefilter(n, &u32v, &l32v, &panel).unwrap());
+        let zn = engine.znorm(n, &panel).unwrap();
+        let dtw = bench(1, 3, || engine.batched_dtw(n, &q32, w, &zn).unwrap());
+        // scalar comparator: LB_Keogh EQ over the same b windows
+        let order = sort_order(&q);
+        let uo = reorder(&u, &order);
+        let lo = reorder(&l, &order);
+        let mut cb = vec![0.0; n];
+        let scalar = bench(2, 10, || {
+            let mut acc = 0.0;
+            for k in 0..b {
+                let window = &r[k..k + n];
+                let (mean, std) = stats(window);
+                acc += lb_keogh_eq(&order, &uo, &lo, window, mean, std, f64::INFINITY, &mut cb);
+            }
+            acc
+        });
+        println!(
+            "{:>5} | {:>10} {:>12} {:>12} | {:>12} {:>13.2}x",
+            n,
+            fmt_secs(compile),
+            fmt_secs(pf.median),
+            fmt_secs(dtw.median),
+            fmt_secs(scalar.median),
+            scalar.median / pf.median,
+        );
+    }
+    println!("\n(prefilter throughput is the UcrMonXla admission rate; dtw is the A3 full-resolve cost)");
+}

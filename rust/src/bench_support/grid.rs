@@ -1,0 +1,133 @@
+//! The paper's §5 experiment design: 6 datasets × 5 queries × 4 query
+//! lengths × 5 window ratios = 600 experiments per suite. Queries of
+//! length < 1024 are *prefixes* of the 1024-point queries, exactly as in
+//! the paper.
+
+use crate::config::GridConfig;
+use crate::data::{extract_queries, Dataset};
+use crate::metrics::{Counters, Timer};
+use crate::search::subsequence::{search_subsequence, window_cells, Match};
+use crate::search::suite::Suite;
+
+/// Base query length the grid extracts (everything else is a prefix).
+pub const BASE_QLEN: usize = 1024;
+
+/// One cell of the experiment grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Experiment {
+    pub dataset: Dataset,
+    pub query_idx: usize,
+    pub qlen: usize,
+    pub ratio: f64,
+}
+
+/// One dataset's materialised workload: the reference stream and the
+/// full-length queries (prefix-sliced per experiment).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub dataset: Dataset,
+    pub reference: Vec<f64>,
+    pub queries: Vec<Vec<f64>>,
+}
+
+impl Workload {
+    pub fn build(dataset: Dataset, grid: &GridConfig) -> Self {
+        let reference = dataset.generate(grid.ref_len, grid.seed);
+        let queries = extract_queries(
+            &reference,
+            grid.queries,
+            BASE_QLEN.min(grid.ref_len / 2),
+            grid.query_noise,
+            grid.seed ^ (dataset as u64 + 1),
+        );
+        Self { dataset, reference, queries }
+    }
+
+    /// The prefix query for an experiment.
+    pub fn query(&self, exp: &Experiment) -> &[f64] {
+        &self.queries[exp.query_idx][..exp.qlen]
+    }
+}
+
+/// All experiments of the grid, in dataset-major order.
+pub fn experiments(grid: &GridConfig, datasets: &[Dataset]) -> Vec<Experiment> {
+    let mut out = Vec::new();
+    for &dataset in datasets {
+        for query_idx in 0..grid.queries {
+            for &qlen in &grid.query_lengths {
+                for &ratio in &grid.window_ratios {
+                    out.push(Experiment { dataset, query_idx, qlen, ratio });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Result of running one experiment under one suite.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub exp: Experiment,
+    pub suite: Suite,
+    pub matched: Match,
+    pub seconds: f64,
+    pub counters: Counters,
+}
+
+/// Run one experiment (timed).
+pub fn run_experiment(workload: &Workload, exp: &Experiment, suite: Suite) -> RunResult {
+    let q = workload.query(exp);
+    let w = window_cells(exp.qlen, exp.ratio);
+    let mut counters = Counters::new();
+    let t = Timer::start();
+    let matched = search_subsequence(&workload.reference, q, w, suite, &mut counters);
+    RunResult { exp: *exp, suite, matched, seconds: t.elapsed_secs(), counters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_grid() -> GridConfig {
+        GridConfig {
+            ref_len: 4000,
+            queries: 2,
+            query_lengths: vec![128, 256],
+            window_ratios: vec![0.1, 0.3],
+            query_noise: 0.1,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn grid_size_matches_paper_formula() {
+        // paper: 5 q × 4 lengths × 5 ratios = 100 per dataset, 600 total
+        let g = GridConfig::default();
+        let exps = experiments(&g, &Dataset::ALL);
+        assert_eq!(exps.len(), 600);
+        let one = experiments(&g, &[Dataset::Ecg]);
+        assert_eq!(one.len(), 100);
+    }
+
+    #[test]
+    fn queries_are_prefixes() {
+        let g = tiny_grid();
+        let w = Workload::build(Dataset::Ppg, &g);
+        let e128 = Experiment { dataset: Dataset::Ppg, query_idx: 0, qlen: 128, ratio: 0.1 };
+        let e256 = Experiment { dataset: Dataset::Ppg, query_idx: 0, qlen: 256, ratio: 0.1 };
+        assert_eq!(w.query(&e128), &w.query(&e256)[..128]);
+    }
+
+    #[test]
+    fn experiments_run_and_agree_across_suites() {
+        let g = tiny_grid();
+        let w = Workload::build(Dataset::Ecg, &g);
+        let exp = Experiment { dataset: Dataset::Ecg, query_idx: 0, qlen: 128, ratio: 0.1 };
+        let results: Vec<RunResult> =
+            Suite::ALL.iter().map(|&s| run_experiment(&w, &exp, s)).collect();
+        for r in &results[1..] {
+            assert_eq!(r.matched.pos, results[0].matched.pos, "{}", r.suite.name());
+            assert!((r.matched.dist - results[0].matched.dist).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Tiny timing harness (criterion is unavailable offline): warmup +
+//! repeated measurement with min/median/mean reporting. Used by every
+//! target under `rust/benches/`.
+
+use crate::metrics::Timer;
+
+/// Timing summary over repetitions, in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub reps: usize,
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("no NaN timings"));
+        let reps = samples.len();
+        Stats {
+            reps,
+            min: samples[0],
+            median: samples[reps / 2],
+            mean: samples.iter().sum::<f64>() / reps as f64,
+            max: samples[reps - 1],
+        }
+    }
+}
+
+/// Measure `f` with `warmup` unrecorded runs then `reps` timed runs.
+/// The closure's return value is passed through `std::hint::black_box` so
+/// the work cannot be optimised away.
+pub fn bench<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let samples = (0..reps.max(1))
+        .map(|_| {
+            let t = Timer::start();
+            std::hint::black_box(f());
+            t.elapsed_secs()
+        })
+        .collect();
+    Stats::from_samples(samples)
+}
+
+/// Pretty duration (µs/ms/s auto-scale).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_expected_reps() {
+        let mut count = 0;
+        let s = bench(2, 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 7);
+        assert_eq!(s.reps, 5);
+        assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,36 @@
+//! Benchmark support (system S14): the paper's experiment grid, shared
+//! workload construction, a small timing harness (criterion is unavailable
+//! offline), and the table/series reporters every bench and the
+//! `bench-suite` CLI subcommand print through.
+
+pub mod grid;
+pub mod harness;
+pub mod report;
+
+use crate::config::GridConfig;
+use crate::data::Dataset;
+
+/// Bench scaling knobs via environment (benches can't take CLI args):
+/// `REPRO_REF_LEN`, `REPRO_QUERIES`, `REPRO_DATASETS` (comma list),
+/// `REPRO_QLENS`, `REPRO_RATIOS`. Defaults keep `cargo bench` minutes-scale
+/// on one core; the recorded EXPERIMENTS.md run raises `REPRO_REF_LEN`.
+pub fn grid_from_env(default_ref_len: usize) -> (GridConfig, Vec<Dataset>) {
+    let env_usize =
+        |k: &str, d: usize| std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d);
+    let mut grid = GridConfig {
+        ref_len: env_usize("REPRO_REF_LEN", default_ref_len),
+        queries: env_usize("REPRO_QUERIES", 1),
+        ..GridConfig::default()
+    };
+    if let Ok(v) = std::env::var("REPRO_QLENS") {
+        grid.query_lengths = v.split(',').filter_map(|x| x.trim().parse().ok()).collect();
+    }
+    if let Ok(v) = std::env::var("REPRO_RATIOS") {
+        grid.window_ratios = v.split(',').filter_map(|x| x.trim().parse().ok()).collect();
+    }
+    let datasets = match std::env::var("REPRO_DATASETS") {
+        Ok(v) => v.split(',').filter_map(|d| Dataset::from_name(d.trim())).collect(),
+        Err(_) => Dataset::ALL.to_vec(),
+    };
+    (grid, datasets)
+}

@@ -1,0 +1,260 @@
+//! Table/series reporters: fixed-width text tables matching the rows and
+//! series the paper's Figure 5 and §5 text report, so `cargo bench` output
+//! reads side-by-side with the paper.
+
+use std::collections::BTreeMap;
+
+use crate::bench_support::grid::RunResult;
+use crate::data::Dataset;
+use crate::search::suite::Suite;
+
+/// Fixed-width table printer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Average runtime per (dataset, suite, key) where `key` extracts the
+/// x-axis (query length for Fig 5a, window ratio ×100 for Fig 5b).
+pub fn average_series(
+    results: &[RunResult],
+    key: impl Fn(&RunResult) -> usize,
+) -> BTreeMap<(Dataset, Suite, usize), f64> {
+    let mut acc: BTreeMap<(Dataset, Suite, usize), (f64, usize)> = BTreeMap::new();
+    for r in results {
+        let e = acc.entry((r.exp.dataset, r.suite, key(r))).or_insert((0.0, 0));
+        e.0 += r.seconds;
+        e.1 += 1;
+    }
+    acc.into_iter().map(|(k, (s, n))| (k, s / n as f64)).collect()
+}
+
+/// Render a Fig-5-style table: one block per dataset, rows = suites,
+/// columns = x-axis values.
+pub fn fig5_table(
+    results: &[RunResult],
+    suites: &[Suite],
+    xs: &[usize],
+    x_label: &str,
+    key: impl Fn(&RunResult) -> usize,
+) -> String {
+    let series = average_series(results, key);
+    let datasets: Vec<Dataset> = Dataset::ALL
+        .into_iter()
+        .filter(|d| results.iter().any(|r| r.exp.dataset == *d))
+        .collect();
+    let mut out = String::new();
+    for d in datasets {
+        out.push_str(&format!("\n== {} — avg runtime by {x_label} ==\n", d.name()));
+        let mut header = vec!["suite".to_string()];
+        header.extend(xs.iter().map(|x| x.to_string()));
+        let mut t = Table::new(header);
+        for &s in suites {
+            let mut row = vec![s.name().to_string()];
+            for &x in xs {
+                match series.get(&(d, s, x)) {
+                    Some(v) => row.push(format!("{:.3}s", v)),
+                    None => row.push("-".to_string()),
+                }
+            }
+            t.row(row);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// The §5 headline numbers: total seconds per suite + speedups vs UCR and
+/// UCR-USP, plus slower-case statistics (paper T1/T2).
+pub fn speedup_summary(results: &[RunResult]) -> String {
+    let mut totals: BTreeMap<Suite, f64> = BTreeMap::new();
+    for r in results {
+        *totals.entry(r.suite).or_insert(0.0) += r.seconds;
+    }
+    let ucr = totals.get(&Suite::Ucr).copied();
+    let usp = totals.get(&Suite::UcrUsp).copied();
+    let mut t = Table::new(vec!["suite", "total", "vs UCR", "vs UCR-USP"]);
+    for (s, secs) in &totals {
+        t.row(vec![
+            s.name().to_string(),
+            format!("{secs:.3}s"),
+            ucr.map_or("-".into(), |u| format!("{:.3}x", u / secs)),
+            usp.map_or("-".into(), |u| format!("{:.3}x", u / secs)),
+        ]);
+    }
+    let mut out = t.render();
+    // per-run slower-than statistics (paper T2)
+    let mut by_key: BTreeMap<(Dataset, usize, usize, usize), BTreeMap<Suite, f64>> =
+        BTreeMap::new();
+    for r in results {
+        by_key
+            .entry((
+                r.exp.dataset,
+                r.exp.query_idx,
+                r.exp.qlen,
+                (r.exp.ratio * 100.0).round() as usize,
+            ))
+            .or_default()
+            .insert(r.suite, r.seconds);
+    }
+    for (a, b) in [(Suite::UcrMon, Suite::Ucr), (Suite::UcrMon, Suite::UcrUsp), (Suite::UcrUsp, Suite::Ucr)]
+    {
+        let mut slower = 0usize;
+        let mut total = 0usize;
+        let mut sum_delta = 0.0;
+        let mut max_delta: f64 = 0.0;
+        for times in by_key.values() {
+            if let (Some(&ta), Some(&tb)) = (times.get(&a), times.get(&b)) {
+                total += 1;
+                if ta > tb {
+                    slower += 1;
+                    sum_delta += ta - tb;
+                    max_delta = max_delta.max(ta - tb);
+                }
+            }
+        }
+        if total > 0 {
+            out.push_str(&format!(
+                "{} slower than {} in {}/{} runs ({:.1}%), avg +{:.4}s, max +{:.4}s\n",
+                a.name(),
+                b.name(),
+                slower,
+                total,
+                100.0 * slower as f64 / total as f64,
+                if slower > 0 { sum_delta / slower as f64 } else { 0.0 },
+                max_delta,
+            ));
+        }
+    }
+    out
+}
+
+/// The Fig-5 inset: per-dataset cascade pruning proportions.
+pub fn pruning_table(results: &[RunResult]) -> String {
+    let mut t = Table::new(vec!["dataset", "suite", "kim%", "keoghEQ%", "keoghEC%", "dtw%", "abandon%"]);
+    let mut acc: BTreeMap<(Dataset, Suite), crate::metrics::Counters> = BTreeMap::new();
+    for r in results {
+        acc.entry((r.exp.dataset, r.suite))
+            .or_default()
+            .merge(&r.counters);
+    }
+    for ((d, s), c) in &acc {
+        let (kim, eq, ec, _xla, dtw) = c.prune_fractions();
+        let ab = if c.dtw_calls > 0 {
+            c.dtw_abandons as f64 / c.dtw_calls as f64
+        } else {
+            0.0
+        };
+        t.row(vec![
+            d.name().to_string(),
+            s.name().to_string(),
+            format!("{:.1}", kim * 100.0),
+            format!("{:.1}", eq * 100.0),
+            format!("{:.1}", ec * 100.0),
+            format!("{:.1}", dtw * 100.0),
+            format!("{:.1}", ab * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::grid::{run_experiment, Experiment, Workload};
+    use crate::config::GridConfig;
+
+    fn small_results() -> Vec<RunResult> {
+        let g = GridConfig {
+            ref_len: 3000,
+            queries: 1,
+            query_lengths: vec![128],
+            window_ratios: vec![0.1, 0.2],
+            query_noise: 0.1,
+            seed: 3,
+        };
+        let w = Workload::build(Dataset::Ecg, &g);
+        let mut out = Vec::new();
+        for ratio in [0.1, 0.2] {
+            let exp = Experiment { dataset: Dataset::Ecg, query_idx: 0, qlen: 128, ratio };
+            for s in [Suite::Ucr, Suite::UcrUsp, Suite::UcrMon] {
+                out.push(run_experiment(&w, &exp, s));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["a", "bb"]);
+        t.row(vec!["1", "2"]);
+        t.row(vec!["333", "4"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a"]);
+        t.row(vec!["1", "2"]);
+    }
+
+    #[test]
+    fn reports_render() {
+        let results = small_results();
+        let fig = fig5_table(
+            &results,
+            &[Suite::Ucr, Suite::UcrUsp, Suite::UcrMon],
+            &[10, 20],
+            "window%",
+            |r| (r.exp.ratio * 100.0).round() as usize,
+        );
+        assert!(fig.contains("ECG"));
+        assert!(fig.contains("UCR-MON"));
+        let sp = speedup_summary(&results);
+        assert!(sp.contains("vs UCR"));
+        let pt = pruning_table(&results);
+        assert!(pt.contains("dtw%"));
+    }
+}

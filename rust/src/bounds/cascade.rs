@@ -1,0 +1,54 @@
+//! Cascade policy: which lower bounds run before the DTW core, and whether
+//! their per-position contributions tighten the DTW threshold (the paper's
+//! "upper bound tightening", available to every suite except MON-nolb,
+//! which by construction has no LB information to tighten with).
+
+/// Which cascade stages a suite enables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CascadePolicy {
+    /// LB_KimFL (O(1), first stage)
+    pub kim: bool,
+    /// LB_Keogh on the query envelope
+    pub keogh_eq: bool,
+    /// LB_Keogh on the data envelope
+    pub keogh_ec: bool,
+    /// pass the cumulative LB tail into the DTW core
+    pub tighten: bool,
+}
+
+impl CascadePolicy {
+    /// The full UCR cascade (UCR, UCR-USP, UCR-MON).
+    pub const fn full() -> Self {
+        Self { kim: true, keogh_eq: true, keogh_ec: true, tighten: true }
+    }
+
+    /// No lower bounds at all (UCR-MON-nolb): every candidate reaches DTW,
+    /// and nothing is available for tightening.
+    pub const fn none() -> Self {
+        Self { kim: false, keogh_eq: false, keogh_ec: false, tighten: false }
+    }
+
+    /// Does any envelope-based bound run (i.e. do we need envelopes)?
+    pub fn needs_query_envelopes(&self) -> bool {
+        self.keogh_eq
+    }
+    pub fn needs_data_envelopes(&self) -> bool {
+        self.keogh_ec
+    }
+    pub fn any(&self) -> bool {
+        self.kim || self.keogh_eq || self.keogh_ec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets() {
+        let f = CascadePolicy::full();
+        assert!(f.kim && f.keogh_eq && f.keogh_ec && f.tighten && f.any());
+        let n = CascadePolicy::none();
+        assert!(!n.kim && !n.keogh_eq && !n.keogh_ec && !n.tighten && !n.any());
+    }
+}

@@ -1,0 +1,134 @@
+//! Keogh envelopes via Lemire's streaming min/max (monotonic deques):
+//! `U[i] = max(s[i-w ..= i+w])`, `L[i] = min(...)` in O(n) regardless of
+//! `w`. Used on the query (LB_Keogh "EQ") and on the raw data stream
+//! (LB_Keogh "EC"); the naive O(n·w) version stays as the test oracle.
+
+/// Compute upper and lower envelopes of `s` for window `w` into `upper` /
+/// `lower` (resized to `s.len()`). Lemire 2009, "Faster retrieval with a
+/// two-pass dynamic-time-warping lower bound".
+pub fn envelopes_into(s: &[f64], w: usize, upper: &mut Vec<f64>, lower: &mut Vec<f64>) {
+    let n = s.len();
+    upper.clear();
+    upper.resize(n, 0.0);
+    lower.clear();
+    lower.resize(n, 0.0);
+    if n == 0 {
+        return;
+    }
+    // Monotonic deques of indices: front is the current max (resp. min).
+    let mut maxq: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+    let mut minq: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+    for i in 0..n + w {
+        if i < n {
+            while maxq.back().is_some_and(|&b| s[b] <= s[i]) {
+                maxq.pop_back();
+            }
+            maxq.push_back(i);
+            while minq.back().is_some_and(|&b| s[b] >= s[i]) {
+                minq.pop_back();
+            }
+            minq.push_back(i);
+        }
+        // envelope position whose window [p-w, p+w] we just completed
+        if i >= w {
+            let p = i - w;
+            while maxq.front().is_some_and(|&f| f + w < p) {
+                maxq.pop_front();
+            }
+            while minq.front().is_some_and(|&f| f + w < p) {
+                minq.pop_front();
+            }
+            upper[p] = s[*maxq.front().expect("window never empty")];
+            lower[p] = s[*minq.front().expect("window never empty")];
+        }
+    }
+}
+
+/// Allocating convenience wrapper around [`envelopes_into`].
+pub fn envelopes(s: &[f64], w: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut u = Vec::new();
+    let mut l = Vec::new();
+    envelopes_into(s, w, &mut u, &mut l);
+    (u, l)
+}
+
+/// Naive O(n·w) envelopes — the oracle.
+pub fn envelopes_naive(s: &[f64], w: usize) -> (Vec<f64>, Vec<f64>) {
+    let n = s.len();
+    let mut u = vec![0.0; n];
+    let mut l = vec![0.0; n];
+    for i in 0..n {
+        let lo = i.saturating_sub(w);
+        let hi = (i + w).min(n.saturating_sub(1));
+        let win = &s[lo..=hi];
+        u[i] = win.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        l[i] = win.iter().copied().fold(f64::INFINITY, f64::min);
+    }
+    (u, l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xorshift(seed: u64) -> impl FnMut() -> f64 {
+        let mut x = seed;
+        move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 4.0 - 2.0
+        }
+    }
+
+    #[test]
+    fn matches_naive() {
+        for seed in 1..=4u64 {
+            let mut rnd = xorshift(seed);
+            for n in [1usize, 2, 7, 32, 100] {
+                let s: Vec<f64> = (0..n).map(|_| rnd()).collect();
+                for w in [0usize, 1, 3, n / 2, n, n + 5] {
+                    let (u, l) = envelopes(&s, w);
+                    let (nu, nl) = envelopes_naive(&s, w);
+                    assert_eq!(u, nu, "upper n={n} w={w}");
+                    assert_eq!(l, nl, "lower n={n} w={w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn window_zero_is_identity() {
+        let s = [3.0, 1.0, 4.0, 1.0, 5.0];
+        let (u, l) = envelopes(&s, 0);
+        assert_eq!(u, s.to_vec());
+        assert_eq!(l, s.to_vec());
+    }
+
+    #[test]
+    fn envelope_sandwiches_series() {
+        let mut rnd = xorshift(9);
+        let s: Vec<f64> = (0..50).map(|_| rnd()).collect();
+        let (u, l) = envelopes(&s, 5);
+        for i in 0..s.len() {
+            assert!(l[i] <= s[i] && s[i] <= u[i]);
+        }
+    }
+
+    #[test]
+    fn wider_window_widens_envelope() {
+        let mut rnd = xorshift(10);
+        let s: Vec<f64> = (0..40).map(|_| rnd()).collect();
+        let (u1, l1) = envelopes(&s, 2);
+        let (u2, l2) = envelopes(&s, 8);
+        for i in 0..s.len() {
+            assert!(u2[i] >= u1[i] && l2[i] <= l1[i]);
+        }
+    }
+
+    #[test]
+    fn empty_series() {
+        let (u, l) = envelopes(&[], 3);
+        assert!(u.is_empty() && l.is_empty());
+    }
+}

@@ -1,0 +1,246 @@
+//! LB_Keogh, both directions, with the UCR suite's tricks: sorted-order
+//! early abandon and per-position contributions (`cb`) whose suffix sums
+//! tighten the DTW threshold line by line (paper §2.2, §5).
+//!
+//! * **EQ** ("envelope-query"): envelopes of the *query* vs the
+//!   z-normalised candidate.
+//! * **EC** ("envelope-candidate"): envelopes of the *raw data stream* vs
+//!   the query — the envelope of an affine transform is the transform of
+//!   the envelope, so per-candidate z-normalisation is applied to the
+//!   precomputed raw envelopes on the fly.
+
+use crate::distances::cost::sqed;
+use crate::norm::znorm::znorm_point;
+
+/// Indices of `q` sorted by `|q[i]|` descending — large-magnitude positions
+/// of a z-normalised query contribute the largest envelope violations
+/// first, making the early abandon in the bounds (and the UCR DTW cascade)
+/// trigger sooner.
+pub fn sort_order(q: &[f64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..q.len()).collect();
+    order.sort_by(|&a, &b| q[b].abs().partial_cmp(&q[a].abs()).expect("no NaN in query"));
+    order
+}
+
+/// Reorder `v` by `order` (`out[k] = v[order[k]]`).
+pub fn reorder(v: &[f64], order: &[usize]) -> Vec<f64> {
+    order.iter().map(|&i| v[i]).collect()
+}
+
+/// LB_Keogh EQ. `uo`/`lo` are the query envelopes *already reordered* by
+/// `order`; `c` is the raw candidate window with stats (mean, std);
+/// `cb` (len n) receives the per-position contribution at the *original*
+/// position (`cb[order[k]]`). Abandons once the bound exceeds `ub`
+/// (contributions stay valid, the bound is then partial).
+#[allow(clippy::too_many_arguments)]
+pub fn lb_keogh_eq(
+    order: &[usize],
+    uo: &[f64],
+    lo: &[f64],
+    c: &[f64],
+    mean: f64,
+    std: f64,
+    ub: f64,
+    cb: &mut [f64],
+) -> f64 {
+    let n = order.len();
+    debug_assert_eq!(c.len(), n);
+    debug_assert_eq!(cb.len(), n);
+    let mut lb = 0.0;
+    for k in 0..n {
+        let i = order[k];
+        let x = znorm_point(c[i], mean, std);
+        let d = if x > uo[k] {
+            sqed(x, uo[k])
+        } else if x < lo[k] {
+            sqed(x, lo[k])
+        } else {
+            0.0
+        };
+        cb[i] = d;
+        lb += d;
+        if lb > ub {
+            // zero the rest so a caller that *does* use cb after an
+            // abandon still holds a valid (under-) estimate
+            for &i2 in &order[k + 1..] {
+                cb[i2] = 0.0;
+            }
+            return lb;
+        }
+    }
+    lb
+}
+
+/// LB_Keogh EC: query points vs the z-normalised *data* envelopes.
+/// `u`/`l` are the raw-stream envelopes for this window (slices of the
+/// precomputed reference envelopes), `qo` the query reordered by `order`.
+#[allow(clippy::too_many_arguments)]
+pub fn lb_keogh_ec(
+    order: &[usize],
+    qo: &[f64],
+    u: &[f64],
+    l: &[f64],
+    mean: f64,
+    std: f64,
+    ub: f64,
+    cb: &mut [f64],
+) -> f64 {
+    let n = order.len();
+    debug_assert_eq!(u.len(), n);
+    debug_assert_eq!(l.len(), n);
+    debug_assert_eq!(cb.len(), n);
+    let mut lb = 0.0;
+    for k in 0..n {
+        let i = order[k];
+        let x = qo[k];
+        let uz = znorm_point(u[i], mean, std);
+        let d = if x > uz {
+            sqed(x, uz)
+        } else {
+            let lz = znorm_point(l[i], mean, std);
+            if x < lz {
+                sqed(x, lz)
+            } else {
+                0.0
+            }
+        };
+        cb[i] = d;
+        lb += d;
+        if lb > ub {
+            for &i2 in &order[k + 1..] {
+                cb[i2] = 0.0;
+            }
+            return lb;
+        }
+    }
+    lb
+}
+
+/// Turn per-position contributions into the suffix-cumulative array the
+/// DTW cores consume: `out[j] = sum(cb[j..])`, `out[n] = 0`.
+pub fn cumulate_bound(cb: &[f64], out: &mut Vec<f64>) {
+    let n = cb.len();
+    out.clear();
+    out.resize(n + 1, 0.0);
+    let mut acc = 0.0;
+    for j in (0..n).rev() {
+        acc += cb[j];
+        out[j] = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::envelope::envelopes;
+    use crate::distances::dtw::dtw_oracle;
+    use crate::norm::znorm::znorm;
+
+    fn xorshift(seed: u64) -> impl FnMut() -> f64 {
+        let mut x = seed;
+        move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 4.0 - 2.0
+        }
+    }
+
+    fn stats(c: &[f64]) -> (f64, f64) {
+        let n = c.len() as f64;
+        let mean = c.iter().sum::<f64>() / n;
+        let std = (c.iter().map(|x| x * x).sum::<f64>() / n - mean * mean)
+            .max(0.0)
+            .sqrt();
+        (mean, std)
+    }
+
+    #[test]
+    fn eq_is_lower_bound_on_windowed_dtw() {
+        for seed in 1..=5u64 {
+            let mut rnd = xorshift(seed);
+            let n = 32;
+            let q = znorm(&(0..n).map(|_| rnd()).collect::<Vec<_>>());
+            let c: Vec<f64> = (0..n).map(|_| rnd() * 2.0 - 0.5).collect();
+            let (mean, std) = stats(&c);
+            let zc: Vec<f64> = c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+            for w in [1usize, 4, 10] {
+                let (u, l) = envelopes(&q, w);
+                let order = sort_order(&q);
+                let uo = reorder(&u, &order);
+                let lo = reorder(&l, &order);
+                let mut cb = vec![0.0; n];
+                let lb = lb_keogh_eq(&order, &uo, &lo, &c, mean, std, f64::INFINITY, &mut cb);
+                let d = dtw_oracle(&q, &zc, Some(w));
+                assert!(lb <= d + 1e-9, "seed={seed} w={w}: {lb} > {d}");
+                // contributions sum to the bound
+                let s: f64 = cb.iter().sum();
+                assert!((s - lb).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn ec_is_lower_bound_on_windowed_dtw() {
+        for seed in 1..=5u64 {
+            let mut rnd = xorshift(seed + 100);
+            let n = 32;
+            let q = znorm(&(0..n).map(|_| rnd()).collect::<Vec<_>>());
+            let c: Vec<f64> = (0..n).map(|_| rnd() * 3.0 + 2.0).collect();
+            let (mean, std) = stats(&c);
+            let zc: Vec<f64> = c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+            for w in [1usize, 4, 10] {
+                // envelopes of the RAW data, z-normalised inside the bound
+                let (u, l) = envelopes(&c, w);
+                let order = sort_order(&q);
+                let qo = reorder(&q, &order);
+                let mut cb = vec![0.0; n];
+                let lb = lb_keogh_ec(&order, &qo, &u, &l, mean, std, f64::INFINITY, &mut cb);
+                let d = dtw_oracle(&q, &zc, Some(w));
+                assert!(lb <= d + 1e-9, "seed={seed} w={w}: {lb} > {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_inside_envelope_gives_zero() {
+        let q = znorm(&[1.0, 2.0, 3.0, 2.0, 1.0, 0.0, 1.0, 2.0]);
+        let (u, l) = envelopes(&q, 2);
+        let order = sort_order(&q);
+        let uo = reorder(&u, &order);
+        let lo = reorder(&l, &order);
+        let mut cb = vec![0.0; q.len()];
+        // the query against itself (already normalised: mean 0, std 1)
+        let lb = lb_keogh_eq(&order, &uo, &lo, &q, 0.0, 1.0, f64::INFINITY, &mut cb);
+        assert_eq!(lb, 0.0);
+    }
+
+    #[test]
+    fn abandon_zeroes_tail_contributions() {
+        let q = znorm(&[5.0, -5.0, 5.0, -5.0, 5.0, -5.0]);
+        let (u, l) = envelopes(&q, 1);
+        let order = sort_order(&q);
+        let uo = reorder(&u, &order);
+        let lo = reorder(&l, &order);
+        let c = [100.0, -100.0, 100.0, -100.0, 100.0, -100.0];
+        let mut cb = vec![f64::NAN; q.len()];
+        let lb = lb_keogh_eq(&order, &uo, &lo, &c, 0.0, 1.0, 1e-6, &mut cb);
+        assert!(lb > 1e-6);
+        assert!(cb.iter().all(|v| v.is_finite()), "tail must be zeroed, not NaN");
+    }
+
+    #[test]
+    fn cumulate_bound_suffix_sums() {
+        let cb = [1.0, 2.0, 3.0];
+        let mut out = Vec::new();
+        cumulate_bound(&cb, &mut out);
+        assert_eq!(out, vec![6.0, 5.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn sort_order_is_permutation_by_magnitude() {
+        let q = [0.1, -3.0, 2.0, -0.5];
+        let order = sort_order(&q);
+        assert_eq!(order, vec![1, 2, 3, 0]);
+    }
+}

@@ -1,0 +1,131 @@
+//! LB_KimFL hierarchy — the UCR suite's O(1)-ish first cascade stage.
+//!
+//! DTW anchors the first and last points of both series, so
+//! `d(q_0,c_0) + d(q_{n-1},c_{n-1})` is a lower bound; the hierarchy then
+//! adds the cheapest admissible alignment of the 2nd and 3rd points from
+//! each end (a superset of the alignments any window allows, hence still a
+//! bound), abandoning between steps once the running bound exceeds `ub`.
+//!
+//! Candidates arrive as *raw* stream windows plus their (mean, std): points
+//! are z-normalised on the fly, so the whole cascade touches at most six
+//! candidate points when it prunes.
+
+use crate::distances::cost::sqed;
+use crate::norm::znorm::znorm_point;
+
+/// LB_KimFL hierarchy of `q` (z-normalised) vs the raw window `c` with
+/// normalisation (mean, std). Returns a lower bound on `DTW_w(q, znorm(c))`
+/// for any window `w`; once the bound exceeds `ub` it returns early (the
+/// value is then a valid but partial bound).
+pub fn lb_kim_hierarchy(q: &[f64], c: &[f64], mean: f64, std: f64, ub: f64) -> f64 {
+    let n = q.len();
+    debug_assert_eq!(n, c.len());
+    if n == 0 {
+        return 0.0;
+    }
+    let z = |i: usize| znorm_point(c[i], mean, std);
+    // 1 point at front and back (always exactly aligned)
+    let x0 = z(0);
+    let y0 = z(n - 1);
+    let mut lb = sqed(x0, q[0]) + sqed(y0, q[n - 1]);
+    if lb > ub || n < 3 {
+        return lb;
+    }
+    // 2 points at front
+    let x1 = z(1);
+    let d = sqed(x1, q[0]).min(sqed(x0, q[1])).min(sqed(x1, q[1]));
+    lb += d;
+    if lb > ub {
+        return lb;
+    }
+    // 2 points at back
+    let y1 = z(n - 2);
+    let d = sqed(y1, q[n - 1]).min(sqed(y0, q[n - 2])).min(sqed(y1, q[n - 2]));
+    lb += d;
+    if lb > ub || n < 5 {
+        return lb;
+    }
+    // 3 points at front
+    let x2 = z(2);
+    let d = sqed(x0, q[2])
+        .min(sqed(x1, q[2]))
+        .min(sqed(x2, q[2]))
+        .min(sqed(x2, q[1]))
+        .min(sqed(x2, q[0]));
+    lb += d;
+    if lb > ub {
+        return lb;
+    }
+    // 3 points at back
+    let y2 = z(n - 3);
+    let d = sqed(y0, q[n - 3])
+        .min(sqed(y1, q[n - 3]))
+        .min(sqed(y2, q[n - 3]))
+        .min(sqed(y2, q[n - 2]))
+        .min(sqed(y2, q[n - 1]));
+    lb + d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::dtw::dtw_oracle;
+    use crate::norm::znorm::znorm;
+
+    fn xorshift(seed: u64) -> impl FnMut() -> f64 {
+        let mut x = seed;
+        move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 4.0 - 2.0
+        }
+    }
+
+    #[test]
+    fn is_lower_bound_for_all_windows() {
+        for seed in 1..=6u64 {
+            let mut rnd = xorshift(seed);
+            let n = 24;
+            let q_raw: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let c: Vec<f64> = (0..n).map(|_| rnd() * 3.0 + 1.0).collect();
+            let q = znorm(&q_raw);
+            let mean = c.iter().sum::<f64>() / n as f64;
+            let std = (c.iter().map(|x| x * x).sum::<f64>() / n as f64 - mean * mean).sqrt();
+            let zc: Vec<f64> = c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+            let lb = lb_kim_hierarchy(&q, &c, mean, std, f64::INFINITY);
+            for w in [1usize, 3, n / 2, n] {
+                let d = dtw_oracle(&q, &zc, Some(w));
+                assert!(lb <= d + 1e-9, "seed={seed} w={w}: lb={lb} > d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn identical_series_zero() {
+        let q = [0.5, -1.0, 1.5, -1.0];
+        // candidate already normalised: mean 0, std 1
+        let lb = lb_kim_hierarchy(&q, &q, 0.0, 1.0, f64::INFINITY);
+        assert_eq!(lb, 0.0);
+    }
+
+    #[test]
+    fn early_exit_is_partial_but_valid() {
+        let q = [0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let c = [10.0, 10.0, 10.0, 10.0, 10.0, 20.0];
+        // ub tiny: the hierarchy exits after the first pair but the value
+        // returned must still be <= the full bound
+        let part = lb_kim_hierarchy(&q, &c, 0.0, 1.0, 1e-9);
+        let full = lb_kim_hierarchy(&q, &c, 0.0, 1.0, f64::INFINITY);
+        assert!(part <= full);
+        assert!(part > 1e-9);
+    }
+
+    #[test]
+    fn short_series() {
+        let q = [1.0, -1.0];
+        let c = [1.0, -1.0];
+        let lb = lb_kim_hierarchy(&q, &c, 0.0, 1.0, f64::INFINITY);
+        assert_eq!(lb, 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Lower bounds for DTW and the UCR cascade (paper §2.2, systems S7–S8).
+//!
+//! The UCR suite skips most DTW calls entirely with a cascade of ever more
+//! expensive, ever tighter lower bounds: LB_KimFL (O(1)) → LB_Keogh on the
+//! query envelope (O(n), abandonable) → LB_Keogh on the data envelope.
+//! Only survivors reach the DTW core — which is why the paper reports the
+//! per-dataset proportion each stage prunes (Fig. 5's insets) and why
+//! showing EAPrunedDTW makes the cascade *dispensable* is a headline
+//! result.
+
+pub mod cascade;
+pub mod envelope;
+pub mod lb_keogh;
+pub mod lb_kim;

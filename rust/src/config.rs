@@ -1,0 +1,308 @@
+//! Configuration — one TOML-subset config shared by the CLI, the examples
+//! and the benches, so every entry point runs the same code path with the
+//! same knobs (DESIGN.md §5).
+//!
+//! The parser covers the subset we use: `[section]` headers, `key = value`
+//! with integers, floats, strings, booleans and flat arrays. (The toml
+//! crate is unavailable in this offline build.)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Experiment-grid settings: the paper's §5 design, scaled by `ref_len`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridConfig {
+    /// reference stream length per dataset (paper: multi-million; scaled)
+    pub ref_len: usize,
+    /// queries per dataset (paper: 5)
+    pub queries: usize,
+    /// query lengths (paper: 128, 256, 512, 1024 — prefixes of 1024)
+    pub query_lengths: Vec<usize>,
+    /// window ratios (paper: 0.1..=0.5)
+    pub window_ratios: Vec<f64>,
+    /// noise added to extracted queries, in units of excerpt std
+    pub query_noise: f64,
+    /// RNG seed for data generation + query extraction
+    pub seed: u64,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        Self {
+            ref_len: 200_000,
+            queries: 5,
+            query_lengths: vec![128, 256, 512, 1024],
+            window_ratios: vec![0.1, 0.2, 0.3, 0.4, 0.5],
+            query_noise: 0.1,
+            seed: 0xDA7A5E7,
+        }
+    }
+}
+
+/// Search settings for one-shot `repro search` runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchConfig {
+    /// dataset name (FoG/Soccer/PAMAP2/ECG/REFIT/PPG) or a file path
+    pub dataset: String,
+    pub query_len: usize,
+    pub window_ratio: f64,
+    /// suite name: ucr | usp | mon | nolb | xla
+    pub suite: String,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "ECG".into(),
+            query_len: 256,
+            window_ratio: 0.1,
+            suite: "mon".into(),
+        }
+    }
+}
+
+/// Coordinator / serving settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// number of shard workers the reference is split across
+    pub shards: usize,
+    /// candidate panel size for the XLA prefilter (must match the AOT batch)
+    pub batch: usize,
+    /// where the AOT artifacts live
+    pub artifacts_dir: String,
+    /// bounded queue depth between router and workers
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            shards: 2,
+            batch: 64,
+            artifacts_dir: "artifacts".into(),
+            queue_depth: 64,
+        }
+    }
+}
+
+/// Top-level config.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub grid: GridConfig,
+    pub search: SearchConfig,
+    pub serve: ServeConfig,
+}
+
+impl Config {
+    /// Parse from TOML-subset text.
+    pub fn from_str(text: &str) -> Result<Self> {
+        let sections = parse_toml_subset(text)?;
+        let mut c = Config::default();
+        for (section, kv) in &sections {
+            for (key, val) in kv {
+                c.apply(section, key, val)
+                    .map_err(|e| anyhow!("[{section}] {key}: {e}"))?;
+            }
+        }
+        Ok(c)
+    }
+
+    fn apply(&mut self, section: &str, key: &str, v: &TomlValue) -> Result<()> {
+        match (section, key) {
+            ("grid", "ref_len") => self.grid.ref_len = v.usize()?,
+            ("grid", "queries") => self.grid.queries = v.usize()?,
+            ("grid", "query_lengths") => self.grid.query_lengths = v.usize_array()?,
+            ("grid", "window_ratios") => self.grid.window_ratios = v.f64_array()?,
+            ("grid", "query_noise") => self.grid.query_noise = v.f64()?,
+            ("grid", "seed") => self.grid.seed = v.usize()? as u64,
+            ("search", "dataset") => self.search.dataset = v.string()?,
+            ("search", "query_len") => self.search.query_len = v.usize()?,
+            ("search", "window_ratio") => self.search.window_ratio = v.f64()?,
+            ("search", "suite") => self.search.suite = v.string()?,
+            ("serve", "shards") => self.serve.shards = v.usize()?,
+            ("serve", "batch") => self.serve.batch = v.usize()?,
+            ("serve", "artifacts_dir") => self.serve.artifacts_dir = v.string()?,
+            ("serve", "queue_depth") => self.serve.queue_depth = v.usize()?,
+            _ => bail!("unknown config key"),
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        Self::from_str(&text).map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Load `path` if given, defaults otherwise.
+    pub fn load_or_default(path: Option<&Path>) -> Result<Self> {
+        match path {
+            Some(p) => Self::load(p),
+            None => Ok(Self::default()),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum TomlValue {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    fn usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Num(v) if *v >= 0.0 && v.fract() == 0.0 => Ok(*v as usize),
+            _ => bail!("expected non-negative integer"),
+        }
+    }
+    fn f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Num(v) => Ok(*v),
+            _ => bail!("expected number"),
+        }
+    }
+    fn string(&self) -> Result<String> {
+        match self {
+            TomlValue::Str(s) => Ok(s.clone()),
+            _ => bail!("expected string"),
+        }
+    }
+    fn usize_array(&self) -> Result<Vec<usize>> {
+        match self {
+            TomlValue::Arr(v) => v.iter().map(|x| x.usize()).collect(),
+            _ => bail!("expected array of integers"),
+        }
+    }
+    fn f64_array(&self) -> Result<Vec<f64>> {
+        match self {
+            TomlValue::Arr(v) => v.iter().map(|x| x.f64()).collect(),
+            _ => bail!("expected array of numbers"),
+        }
+    }
+}
+
+type Sections = BTreeMap<String, Vec<(String, TomlValue)>>;
+
+fn parse_toml_subset(text: &str) -> Result<Sections> {
+    let mut out: Sections = BTreeMap::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = match raw.split_once('#') {
+            // keep '#' inside quoted strings
+            Some((before, _)) if before.matches('"').count() % 2 == 0 => before,
+            _ => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", ln + 1))?;
+        let val = parse_value(v.trim()).map_err(|e| anyhow!("line {}: {e}", ln + 1))?;
+        out.entry(section.clone())
+            .or_default()
+            .push((k.trim().to_string(), val));
+    }
+    Ok(out)
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items: Result<Vec<_>> = inner.split(',').map(|x| parse_value(x.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    // allow 0x hex for seeds
+    if let Some(hex) = s.strip_prefix("0x") {
+        let v = u64::from_str_radix(hex, 16).map_err(|e| anyhow!("bad hex {s:?}: {e}"))?;
+        return Ok(TomlValue::Num(v as f64));
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|e| anyhow!("bad value {s:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_grid() {
+        let c = Config::default();
+        assert_eq!(c.grid.query_lengths, vec![128, 256, 512, 1024]);
+        assert_eq!(c.grid.window_ratios, vec![0.1, 0.2, 0.3, 0.4, 0.5]);
+        assert_eq!(c.grid.queries, 5);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+            # comment
+            [grid]
+            ref_len = 50_000
+            queries = 3
+            query_lengths = [128, 256]
+            window_ratios = [0.1, 0.5]   # inline comment
+            seed = 0xBEEF
+
+            [search]
+            dataset = "REFIT"
+            suite = "nolb"
+
+            [serve]
+            shards = 4
+        "#;
+        let c = Config::from_str(text).unwrap();
+        assert_eq!(c.grid.ref_len, 50_000);
+        assert_eq!(c.grid.queries, 3);
+        assert_eq!(c.grid.query_lengths, vec![128, 256]);
+        assert_eq!(c.grid.window_ratios, vec![0.1, 0.5]);
+        assert_eq!(c.grid.seed, 0xBEEF);
+        assert_eq!(c.search.dataset, "REFIT");
+        assert_eq!(c.search.suite, "nolb");
+        assert_eq!(c.serve.shards, 4);
+        // untouched keys keep defaults
+        assert_eq!(c.serve.batch, 64);
+    }
+
+    #[test]
+    fn unknown_key_errors() {
+        assert!(Config::from_str("[grid]\nnope = 1\n").is_err());
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        assert!(Config::from_str("[grid]\nref_len = \"x\"\n").is_err());
+        assert!(Config::from_str("[grid]\nref_len = 1.5\n").is_err());
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(Config::load(Path::new("/no/such/file.toml")).is_err());
+    }
+}

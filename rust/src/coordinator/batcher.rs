@@ -1,0 +1,148 @@
+//! The batched XLA prefilter path (suite `UcrMonXla`): candidate windows
+//! stream through the AOT-compiled znorm→LB_Keogh graph in panels of
+//! `batch` (Layer 1/2 work), and only survivors reach the scalar
+//! EAPrunedDTW core.
+//!
+//! This is the TPU-shaped inversion of the paper's insight (DESIGN.md
+//! §Hardware-Adaptation): prune *across* candidates in a vector unit, then
+//! prune *within* the survivors' DP matrices in scalar code.
+//!
+//! The XLA graphs run in f32 while the scalar core is f64, so bounds are
+//! deflated by [`F32_SAFETY`] before being compared against the
+//! best-so-far — a pruned candidate is then pruned with margin, never
+//! wrongly (verified against the scalar suites in `integration_runtime`).
+
+use anyhow::Result;
+
+use crate::bounds::envelope::envelopes;
+use crate::metrics::Counters;
+use crate::norm::znorm::{znorm, znorm_point, stats};
+use crate::runtime::XlaEngine;
+use crate::search::subsequence::Match;
+use crate::search::suite::Suite;
+use crate::distances::DtwWorkspace;
+
+/// Relative deflation applied to f32 bounds before pruning decisions.
+pub const F32_SAFETY: f64 = 1e-3;
+
+/// Search `reference` for `query_raw` with the XLA prefilter + scalar
+/// EAPrunedDTW verification. `w` in cells. The query length must be one of
+/// the AOT-lowered lengths (`manifest.lengths`).
+pub fn xla_search(
+    engine: &mut XlaEngine,
+    reference: &[f64],
+    query_raw: &[f64],
+    w: usize,
+    counters: &mut Counters,
+) -> Result<Match> {
+    let n = query_raw.len();
+    anyhow::ensure!(
+        engine.manifest().supports_length(n),
+        "query length {n} not in AOT artifact set {:?} — regenerate with \
+         `python -m compile.aot --lengths ... {n}`",
+        engine.manifest().lengths
+    );
+    anyhow::ensure!(reference.len() >= n, "reference shorter than query");
+    let b = engine.batch();
+    let q = znorm(query_raw);
+    let (u, l) = envelopes(&q, w);
+    let u32v: Vec<f32> = u.iter().map(|&v| v as f32).collect();
+    let l32v: Vec<f32> = l.iter().map(|&v| v as f32).collect();
+    let total = reference.len() - n + 1;
+
+    let mut bsf = f64::INFINITY;
+    let mut best = Match { pos: 0, dist: f64::INFINITY };
+    let mut ws = DtwWorkspace::with_capacity(n);
+    let mut panel = vec![0f32; b * n];
+    let mut zbuf = vec![0f64; n];
+
+    let mut pos = 0usize;
+    while pos < total {
+        let count = (total - pos).min(b);
+        // pack `count` consecutive raw windows; pad the tail panel by
+        // repeating the last window (its result is simply ignored)
+        for k in 0..b {
+            let p = pos + k.min(count - 1);
+            for (j, v) in reference[p..p + n].iter().enumerate() {
+                panel[k * n + j] = *v as f32;
+            }
+        }
+        let bounds = engine.prefilter(n, &u32v, &l32v, &panel)?;
+        for k in 0..count {
+            counters.candidates += 1;
+            let lb = bounds[k] as f64 * (1.0 - F32_SAFETY);
+            if lb > bsf {
+                counters.xla_prunes += 1;
+                continue;
+            }
+            // scalar verify (f64 exactness)
+            let p = pos + k;
+            let window = &reference[p..p + n];
+            let (mean, std) = stats(window);
+            zbuf.clear();
+            zbuf.extend(window.iter().map(|&x| znorm_point(x, mean, std)));
+            counters.dtw_calls += 1;
+            let d = Suite::UcrMonXla.dtw(&q, &zbuf, w, bsf, None, &mut ws);
+            if d.is_infinite() {
+                counters.dtw_abandons += 1;
+            } else if d < bsf {
+                bsf = d;
+                best = Match { pos: p, dist: d };
+                counters.ub_updates += 1;
+            }
+        }
+        pos += count;
+    }
+    anyhow::ensure!(best.dist.is_finite(), "no match found (empty scan?)");
+    Ok(best)
+}
+
+/// Ablation A3: resolve *everything* on the XLA side — prefilter + batched
+/// wavefront DTW per panel, no scalar DP at all. Exact in f32; used to
+/// quantify what the scalar EAP core buys over brute-force batching.
+pub fn xla_search_full(
+    engine: &mut XlaEngine,
+    reference: &[f64],
+    query_raw: &[f64],
+    w: usize,
+    counters: &mut Counters,
+) -> Result<Match> {
+    let n = query_raw.len();
+    anyhow::ensure!(
+        engine.manifest().supports_length(n),
+        "query length {n} not in AOT artifact set"
+    );
+    let b = engine.batch();
+    let q = znorm(query_raw);
+    let (u, l) = envelopes(&q, w);
+    let q32: Vec<f32> = q.iter().map(|&v| v as f32).collect();
+    let u32v: Vec<f32> = u.iter().map(|&v| v as f32).collect();
+    let l32v: Vec<f32> = l.iter().map(|&v| v as f32).collect();
+    let total = reference.len() - n + 1;
+
+    let mut best = Match { pos: 0, dist: f64::INFINITY };
+    let mut panel = vec![0f32; b * n];
+    let mut pos = 0usize;
+    while pos < total {
+        let count = (total - pos).min(b);
+        for k in 0..b {
+            let p = pos + k.min(count - 1);
+            for (j, v) in reference[p..p + n].iter().enumerate() {
+                panel[k * n + j] = *v as f32;
+            }
+        }
+        let (_lb, dist) = engine.prefilter_verify(n, &q32, &u32v, &l32v, w, &panel)?;
+        for k in 0..count {
+            counters.candidates += 1;
+            counters.dtw_calls += 1;
+            let d = dist[k] as f64;
+            if d < best.dist {
+                best = Match { pos: pos + k, dist: d };
+                counters.ub_updates += 1;
+            }
+        }
+        pos += count;
+    }
+    anyhow::ensure!(best.dist.is_finite(), "no match found");
+    Ok(best)
+}

@@ -1,0 +1,27 @@
+//! Layer-3 serving coordinator (system S13): the similarity-search engine
+//! packaged as a service — query admission, sharded scanning with a shared
+//! best-so-far bound, and the batched XLA prefilter path.
+//!
+//! Note on runtime: the image's vendored crate set has no async runtime,
+//! so the event loop is OS threads + channels (`std::sync::mpsc`) instead
+//! of tokio tasks; the architecture (router → bounded queues → shard
+//! workers → aggregation) is the same (DESIGN.md §4).
+//!
+//! * [`protocol`] — request/response types + JSON wire format
+//! * [`state`] — the shared upper bound (the serving analogue of the
+//!   paper's upper-bound tightening: every shard's improvement immediately
+//!   tightens every other shard's abandon threshold)
+//! * [`worker`] — shard scan workers
+//! * [`batcher`] — panels of candidates through the AOT XLA prefilter
+//! * [`router`] — per-query fan-out/fan-in
+//! * [`service`] — lifecycle: spawn, submit, drain, shutdown
+
+pub mod batcher;
+pub mod protocol;
+pub mod router;
+pub mod service;
+pub mod state;
+pub mod worker;
+
+pub use protocol::{QueryRequest, QueryResponse};
+pub use service::{Service, ServiceConfig};

@@ -1,0 +1,141 @@
+//! Wire protocol of the serve loop: line-delimited JSON requests and
+//! responses (one object per line), so the service can be driven from a
+//! socket, a pipe, or in-process.
+
+use anyhow::{anyhow, Result};
+
+use crate::search::suite::Suite;
+use crate::util::json::{obj, Json};
+
+/// A similarity-search request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryRequest {
+    pub id: u64,
+    /// raw (un-normalised) query points
+    pub query: Vec<f64>,
+    /// warping window as a ratio of the query length
+    pub window_ratio: f64,
+    pub suite: Suite,
+}
+
+impl QueryRequest {
+    pub fn to_json(&self) -> String {
+        obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("window_ratio", Json::Num(self.window_ratio)),
+            ("suite", Json::Str(self.suite.name().to_string())),
+            ("query", Json::Arr(self.query.iter().map(|&v| Json::Num(v)).collect())),
+        ])
+        .to_string()
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = Json::parse(line)?;
+        let id = v
+            .get("id")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("request missing id"))? as u64;
+        let window_ratio = v
+            .get("window_ratio")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("request missing window_ratio"))?;
+        let suite_name = v
+            .get("suite")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("request missing suite"))?;
+        let suite = Suite::from_name(suite_name)
+            .ok_or_else(|| anyhow!("unknown suite {suite_name:?}"))?;
+        let query = v
+            .get("query")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("request missing query"))?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow!("non-numeric query point")))
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!query.is_empty(), "empty query");
+        Ok(Self { id, query, window_ratio, suite })
+    }
+}
+
+/// The located match plus serving metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryResponse {
+    pub id: u64,
+    pub pos: usize,
+    pub dist: f64,
+    /// wall-clock service latency in milliseconds
+    pub latency_ms: f64,
+    /// candidates examined / pruned / DTW calls (aggregated over shards)
+    pub candidates: u64,
+    pub pruned: u64,
+    pub dtw_calls: u64,
+}
+
+impl QueryResponse {
+    pub fn to_json(&self) -> String {
+        obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("pos", Json::Num(self.pos as f64)),
+            ("dist", Json::Num(self.dist)),
+            ("latency_ms", Json::Num(self.latency_ms)),
+            ("candidates", Json::Num(self.candidates as f64)),
+            ("pruned", Json::Num(self.pruned as f64)),
+            ("dtw_calls", Json::Num(self.dtw_calls as f64)),
+        ])
+        .to_string()
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = Json::parse(line)?;
+        let num = |k: &str| -> Result<f64> {
+            v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("response missing {k:?}"))
+        };
+        Ok(Self {
+            id: num("id")? as u64,
+            pos: num("pos")? as usize,
+            dist: num("dist")?,
+            latency_ms: num("latency_ms")?,
+            candidates: num("candidates")? as u64,
+            pruned: num("pruned")? as u64,
+            dtw_calls: num("dtw_calls")? as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trip() {
+        let r = QueryRequest {
+            id: 7,
+            query: vec![1.0, -2.5, 3.0],
+            window_ratio: 0.2,
+            suite: Suite::UcrMon,
+        };
+        let back = QueryRequest::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let r = QueryResponse {
+            id: 1,
+            pos: 42,
+            dist: 3.5,
+            latency_ms: 12.25,
+            candidates: 100,
+            pruned: 90,
+            dtw_calls: 10,
+        };
+        assert_eq!(QueryResponse::from_json(&r.to_json()).unwrap(), r);
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(QueryRequest::from_json("{}").is_err());
+        assert!(QueryRequest::from_json(r#"{"id":1,"window_ratio":0.1,"suite":"zzz","query":[1]}"#).is_err());
+        assert!(QueryRequest::from_json(r#"{"id":1,"window_ratio":0.1,"suite":"mon","query":[]}"#).is_err());
+    }
+}

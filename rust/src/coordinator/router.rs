@@ -1,0 +1,98 @@
+//! Per-query routing: split the reference's candidate positions across the
+//! shard workers, fan the job out, fan the results in, merge counters.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::state::SharedUb;
+use crate::coordinator::worker::Job;
+use crate::metrics::Counters;
+use crate::search::subsequence::{DataEnvelopes, Match, QueryContext};
+use crate::search::suite::Suite;
+
+/// Balanced shard ranges over `total` candidate positions.
+pub fn shard_ranges(total: usize, shards: usize) -> Vec<(usize, usize)> {
+    let shards = shards.max(1);
+    (0..shards)
+        .map(|s| (s * total / shards, (s + 1) * total / shards))
+        .filter(|(a, b)| a < b)
+        .collect()
+}
+
+/// Fan one query out over the worker channels; blocks until every shard
+/// reports. Returns the best match plus aggregated counters.
+#[allow(clippy::too_many_arguments)]
+pub fn route_query(
+    workers: &[Sender<Job>],
+    reference: &Arc<Vec<f64>>,
+    query_raw: &[f64],
+    w: usize,
+    suite: Suite,
+    sync_every: usize,
+) -> Result<(Match, Counters)> {
+    let n = query_raw.len();
+    anyhow::ensure!(reference.len() >= n, "reference shorter than query");
+    let total = reference.len() - n + 1;
+    let ranges = shard_ranges(total, workers.len());
+    let shared = SharedUb::new(f64::INFINITY);
+    let denv = suite
+        .cascade()
+        .needs_data_envelopes()
+        .then(|| Arc::new(DataEnvelopes::new(reference, w)));
+    let (reply_tx, reply_rx) = channel();
+    let mut dispatched = 0usize;
+    for (i, &(start, end)) in ranges.iter().enumerate() {
+        let job = Job {
+            reference: Arc::clone(reference),
+            start,
+            end,
+            ctx: QueryContext::new(query_raw, w),
+            denv: denv.clone(),
+            suite,
+            shared: Arc::clone(&shared),
+            sync_every,
+            reply: reply_tx.clone(),
+        };
+        workers[i % workers.len()]
+            .send(job)
+            .map_err(|_| anyhow!("worker pool shut down"))?;
+        dispatched += 1;
+    }
+    drop(reply_tx);
+    let mut best: Option<Match> = None;
+    let mut counters = Counters::new();
+    for _ in 0..dispatched {
+        let (m, c) = reply_rx.recv().map_err(|_| anyhow!("worker died mid-query"))?;
+        counters.merge(&c);
+        if let Some(m) = m {
+            if best.is_none_or(|b| m.dist < b.dist || (m.dist == b.dist && m.pos < b.pos)) {
+                best = Some(m);
+            }
+        }
+    }
+    best.map(|m| (m, counters)).ok_or_else(|| anyhow!("no match found"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_everything_once() {
+        for total in [1usize, 7, 100, 101] {
+            for shards in [1usize, 2, 3, 8, 200] {
+                let r = shard_ranges(total, shards);
+                let mut covered = vec![false; total];
+                for (a, b) in r {
+                    for c in covered.iter_mut().take(b).skip(a) {
+                        assert!(!*c, "overlap");
+                        *c = true;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "gap: total={total} shards={shards}");
+            }
+        }
+    }
+}

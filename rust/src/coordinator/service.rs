@@ -1,0 +1,314 @@
+//! Service lifecycle: owns the reference stream, the worker pool, and
+//! (optionally) a dedicated **engine thread** for the XLA suite; serves
+//! [`QueryRequest`]s until dropped.
+//!
+//! Concurrency model: `submit` can be called from many client threads; the
+//! scalar suites fan out across the shard workers. The PJRT client is not
+//! `Send` (Rc internals in the xla crate), so the XLA engine lives on its
+//! own thread and `UcrMonXla` queries are serialised through a channel —
+//! PJRT CPU already parallelises internally and the box has one core
+//! anyway.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::batcher;
+use crate::coordinator::protocol::{QueryRequest, QueryResponse};
+use crate::coordinator::router::route_query;
+use crate::coordinator::worker::{worker_loop, Job, DEFAULT_SYNC_EVERY};
+use crate::metrics::{Counters, Timer};
+use crate::runtime::XlaEngine;
+use crate::search::subsequence::{window_cells, Match};
+use crate::search::suite::Suite;
+
+/// Service construction knobs (see also [`crate::config::ServeConfig`]).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub shards: usize,
+    /// positions between shared-UB syncs in the workers
+    pub sync_every: usize,
+    /// artifacts directory; `None` disables the XLA suite
+    pub artifacts_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { shards: 2, sync_every: DEFAULT_SYNC_EVERY, artifacts_dir: None }
+    }
+}
+
+/// A unit of work for the engine thread.
+struct EngineJob {
+    query: Vec<f64>,
+    w: usize,
+    /// resolve entirely on the XLA side (ablation A3) instead of
+    /// prefilter + scalar verify
+    full: bool,
+    reply: Sender<Result<(Match, Counters)>>,
+}
+
+/// Engine thread: owns the (non-Send) PJRT client for its whole life.
+fn engine_loop(dir: std::path::PathBuf, reference: Arc<Vec<f64>>, rx: std::sync::mpsc::Receiver<EngineJob>) {
+    let mut engine = match XlaEngine::open(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            // report the open failure to every client that asks
+            let msg = format!("{e:#}");
+            while let Ok(job) = rx.recv() {
+                let _ = job.reply.send(Err(anyhow!("XLA engine unavailable: {msg}")));
+            }
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        let mut counters = Counters::new();
+        let r = if job.full {
+            batcher::xla_search_full(&mut engine, &reference, &job.query, job.w, &mut counters)
+        } else {
+            batcher::xla_search(&mut engine, &reference, &job.query, job.w, &mut counters)
+        };
+        let _ = job.reply.send(r.map(|m| (m, counters)));
+    }
+}
+
+/// A running similarity-search service.
+pub struct Service {
+    reference: Arc<Vec<f64>>,
+    senders: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    engine_tx: Option<Sender<EngineJob>>,
+    engine_handle: Option<JoinHandle<()>>,
+    sync_every: usize,
+    busy: Arc<AtomicU64>,
+    served: AtomicU64,
+}
+
+impl Service {
+    /// Spawn the worker pool (and engine thread, if artifacts are given)
+    /// over `reference`.
+    pub fn new(reference: Vec<f64>, cfg: &ServiceConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
+        let reference = Arc::new(reference);
+        let busy = Arc::new(AtomicU64::new(0));
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..cfg.shards {
+            let (tx, rx) = channel::<Job>();
+            let busy = Arc::clone(&busy);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("shard-{i}"))
+                    .spawn(move || worker_loop(rx, busy))?,
+            );
+            senders.push(tx);
+        }
+        let (engine_tx, engine_handle) = match &cfg.artifacts_dir {
+            Some(dir) => {
+                let (tx, rx) = channel::<EngineJob>();
+                let dir = dir.clone();
+                let r = Arc::clone(&reference);
+                let h = std::thread::Builder::new()
+                    .name("xla-engine".into())
+                    .spawn(move || engine_loop(dir, r, rx))?;
+                (Some(tx), Some(h))
+            }
+            None => (None, None),
+        };
+        Ok(Self {
+            reference,
+            senders,
+            handles,
+            engine_tx,
+            engine_handle,
+            sync_every: cfg.sync_every,
+            busy,
+            served: AtomicU64::new(0),
+        })
+    }
+
+    /// Convenience: open artifacts if the directory exists.
+    pub fn with_optional_artifacts(reference: Vec<f64>, shards: usize, dir: &Path) -> Result<Self> {
+        let cfg = ServiceConfig {
+            shards,
+            artifacts_dir: dir.join("manifest.json").exists().then(|| dir.to_path_buf()),
+            ..Default::default()
+        };
+        Self::new(reference, &cfg)
+    }
+
+    pub fn reference_len(&self) -> usize {
+        self.reference.len()
+    }
+
+    pub fn queries_served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    pub fn has_engine(&self) -> bool {
+        self.engine_tx.is_some()
+    }
+
+    fn submit_xla(&self, req: &QueryRequest, w: usize, full: bool) -> Result<(Match, Counters)> {
+        let tx = self
+            .engine_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("XLA suite requested but no artifacts loaded"))?;
+        let (reply_tx, reply_rx) = channel();
+        tx.send(EngineJob { query: req.query.clone(), w, full, reply: reply_tx })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("engine thread died mid-query"))?
+    }
+
+    /// Serve one request to completion (blocking).
+    pub fn submit(&self, req: &QueryRequest) -> Result<QueryResponse> {
+        let timer = Timer::start();
+        let w = window_cells(req.query.len(), req.window_ratio);
+        let (m, counters) = match req.suite {
+            Suite::UcrMonXla => self.submit_xla(req, w, false)?,
+            _ => route_query(
+                &self.senders,
+                &self.reference,
+                &req.query,
+                w,
+                req.suite,
+                self.sync_every,
+            )?,
+        };
+        self.served.fetch_add(1, Ordering::Relaxed);
+        let pruned = counters.lb_kim_prunes
+            + counters.lb_keogh_eq_prunes
+            + counters.lb_keogh_ec_prunes
+            + counters.xla_prunes;
+        Ok(QueryResponse {
+            id: req.id,
+            pos: m.pos,
+            dist: m.dist,
+            latency_ms: timer.elapsed_secs() * 1e3,
+            candidates: counters.candidates,
+            pruned,
+            dtw_calls: counters.dtw_calls,
+        })
+    }
+
+    /// Ablation A3 entry: resolve a query entirely on the XLA side.
+    pub fn submit_xla_full(&self, req: &QueryRequest) -> Result<QueryResponse> {
+        let timer = Timer::start();
+        let w = window_cells(req.query.len(), req.window_ratio);
+        let (m, counters) = self.submit_xla(req, w, true)?;
+        self.served.fetch_add(1, Ordering::Relaxed);
+        Ok(QueryResponse {
+            id: req.id,
+            pos: m.pos,
+            dist: m.dist,
+            latency_ms: timer.elapsed_secs() * 1e3,
+            candidates: counters.candidates,
+            pruned: counters.xla_prunes,
+            dtw_calls: counters.dtw_calls,
+        })
+    }
+
+    /// Workers currently scanning (for backpressure/introspection).
+    pub fn busy_workers(&self) -> u64 {
+        self.busy.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        // closing the channels ends the worker loops
+        self.senders.clear();
+        self.engine_tx = None;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.engine_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::search::subsequence::search_subsequence;
+
+    #[test]
+    fn service_matches_direct_search() {
+        let r = Dataset::Ecg.generate(3000, 2);
+        let q = crate::data::extract_queries(&r, 1, 128, 0.1, 3).remove(0);
+        let svc = Service::new(r.clone(), &ServiceConfig { shards: 3, ..Default::default() })
+            .unwrap();
+        let req = QueryRequest { id: 1, query: q.clone(), window_ratio: 0.1, suite: Suite::UcrMon };
+        let resp = svc.submit(&req).unwrap();
+        let mut c = Counters::new();
+        let want = search_subsequence(&r, &q, window_cells(q.len(), 0.1), Suite::UcrMon, &mut c);
+        assert_eq!(resp.pos, want.pos);
+        assert!((resp.dist - want.dist).abs() < 1e-9);
+        assert_eq!(resp.candidates, c.candidates);
+        assert_eq!(svc.queries_served(), 1);
+    }
+
+    #[test]
+    fn concurrent_submissions() {
+        let r = Dataset::Ppg.generate(2000, 4);
+        let svc = Arc::new(
+            Service::new(r.clone(), &ServiceConfig { shards: 2, ..Default::default() }).unwrap(),
+        );
+        let qs = crate::data::extract_queries(&r, 4, 128, 0.1, 9);
+        let mut handles = Vec::new();
+        for (i, q) in qs.into_iter().enumerate() {
+            let svc = Arc::clone(&svc);
+            handles.push(std::thread::spawn(move || {
+                let req = QueryRequest {
+                    id: i as u64,
+                    query: q,
+                    window_ratio: 0.2,
+                    suite: Suite::UcrMon,
+                };
+                svc.submit(&req).unwrap()
+            }));
+        }
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert!(resp.dist.is_finite());
+        }
+        assert_eq!(svc.queries_served(), 4);
+    }
+
+    #[test]
+    fn xla_without_artifacts_errors() {
+        let r = Dataset::Ecg.generate(1000, 5);
+        let svc = Service::new(r.clone(), &ServiceConfig::default()).unwrap();
+        let q = crate::data::extract_queries(&r, 1, 128, 0.1, 6).remove(0);
+        let req = QueryRequest { id: 1, query: q, window_ratio: 0.1, suite: Suite::UcrMonXla };
+        assert!(svc.submit(&req).is_err());
+        assert!(!svc.has_engine());
+    }
+
+    #[test]
+    fn bad_artifacts_dir_reports_through_channel() {
+        let r = Dataset::Ecg.generate(1000, 5);
+        let svc = Service::new(
+            r,
+            &ServiceConfig {
+                artifacts_dir: Some("/no/such/dir".into()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let req = QueryRequest {
+            id: 1,
+            query: vec![0.0; 128],
+            window_ratio: 0.1,
+            suite: Suite::UcrMonXla,
+        };
+        let err = svc.submit(&req).unwrap_err();
+        assert!(err.to_string().contains("unavailable"), "{err}");
+    }
+}

@@ -1,0 +1,80 @@
+//! Shared search state: the global best-so-far upper bound.
+//!
+//! This is the serving-layer analogue of the paper's upper-bound
+//! tightening: every shard worker abandons against the *global* best, so a
+//! good early match in one shard immediately accelerates every other
+//! shard. Implemented as an atomic f64 (bits in an `AtomicU64`) — lock-free
+//! on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Lock-free shared upper bound (monotonically non-increasing).
+#[derive(Debug)]
+pub struct SharedUb {
+    bits: AtomicU64,
+}
+
+impl SharedUb {
+    pub fn new(init: f64) -> Arc<Self> {
+        Arc::new(Self { bits: AtomicU64::new(init.to_bits()) })
+    }
+
+    /// Current bound.
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Acquire))
+    }
+
+    /// Tighten to `v` if it improves the bound; returns `true` if this call
+    /// lowered it. Monotonicity is preserved under races (CAS loop).
+    pub fn tighten(&self, v: f64) -> bool {
+        let mut cur = self.bits.load(Ordering::Acquire);
+        loop {
+            if v >= f64::from_bits(cur) {
+                return false;
+            }
+            match self.bits.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tighten_monotone() {
+        let ub = SharedUb::new(f64::INFINITY);
+        assert!(ub.tighten(10.0));
+        assert!(!ub.tighten(12.0));
+        assert!(ub.tighten(5.0));
+        assert_eq!(ub.get(), 5.0);
+    }
+
+    #[test]
+    fn concurrent_tighten_keeps_minimum() {
+        let ub = SharedUb::new(f64::INFINITY);
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let ub = ub.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    ub.tighten(((t * 1000 + i) % 977) as f64 + 1.0);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(ub.get(), 1.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Shard workers: each scans a slice of the reference with the suite's
+//! cascade + DTW core, abandoning against the *global* shared upper bound.
+//!
+//! Shards overlap by `qlen - 1` positions implicitly: a shard owns the
+//! candidate *start positions* `[start, end)`, while its windows read up to
+//! `end + qlen - 1` points — so every window is scanned by exactly one
+//! shard and none is missed (tested in `integration_coordinator`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::coordinator::state::SharedUb;
+use crate::metrics::Counters;
+use crate::search::subsequence::{scan, DataEnvelopes, Match, QueryContext};
+use crate::search::suite::Suite;
+
+/// How many candidate positions a worker scans between synchronisations
+/// with the shared upper bound.
+pub const DEFAULT_SYNC_EVERY: usize = 1024;
+
+/// Scan shard `[start, end)` in blocks, syncing the upper bound with
+/// `shared` between blocks: improvements flow both ways (the serving
+/// analogue of upper-bound tightening).
+#[allow(clippy::too_many_arguments)]
+pub fn scan_shard(
+    reference: &[f64],
+    start: usize,
+    end: usize,
+    ctx: &mut QueryContext,
+    denv: Option<&DataEnvelopes>,
+    suite: Suite,
+    shared: &SharedUb,
+    sync_every: usize,
+    counters: &mut Counters,
+) -> Option<Match> {
+    let n = ctx.len();
+    let end = end.min(reference.len().saturating_sub(n) + 1);
+    let mut best: Option<Match> = None;
+    let mut block_start = start;
+    while block_start < end {
+        let block_end = (block_start + sync_every).min(end);
+        // local best-so-far = global, tightened by our own best
+        let bsf = shared.get().min(best.map_or(f64::INFINITY, |m| m.dist));
+        if let Some(m) = scan(
+            reference, block_start, block_end, ctx, denv, suite, bsf, counters,
+        ) {
+            if best.is_none_or(|b| m.dist < b.dist) {
+                best = Some(m);
+                shared.tighten(m.dist);
+            }
+        }
+        block_start = block_end;
+    }
+    best
+}
+
+/// A unit of shard work dispatched to a worker thread.
+pub struct Job {
+    pub reference: Arc<Vec<f64>>,
+    pub start: usize,
+    pub end: usize,
+    /// fresh context for this query (each worker owns its buffers)
+    pub ctx: QueryContext,
+    pub denv: Option<Arc<DataEnvelopes>>,
+    pub suite: Suite,
+    pub shared: Arc<SharedUb>,
+    pub sync_every: usize,
+    pub reply: Sender<(Option<Match>, Counters)>,
+}
+
+/// Worker loop: run jobs until the channel closes.
+pub fn worker_loop(rx: Receiver<Job>, busy: Arc<AtomicU64>) {
+    while let Ok(mut job) = rx.recv() {
+        busy.fetch_add(1, Ordering::Relaxed);
+        let mut counters = Counters::new();
+        let m = scan_shard(
+            &job.reference,
+            job.start,
+            job.end,
+            &mut job.ctx,
+            job.denv.as_deref(),
+            job.suite,
+            &job.shared,
+            job.sync_every,
+            &mut counters,
+        );
+        // receiver may have given up (service shutdown): ignore send errors
+        let _ = job.reply.send((m, counters));
+        busy.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::search::subsequence::search_subsequence;
+
+    #[test]
+    fn scan_shard_with_shared_ub_matches_plain_search() {
+        let r = Dataset::Ppg.generate(4000, 3);
+        let q = crate::data::extract_queries(&r, 1, 128, 0.1, 5).remove(0);
+        let w = 12;
+        let suite = Suite::UcrMon;
+        let mut cfull = Counters::new();
+        let want = search_subsequence(&r, &q, w, suite, &mut cfull);
+
+        let shared = SharedUb::new(f64::INFINITY);
+        let denv = DataEnvelopes::new(&r, w);
+        let nshards = 4;
+        let total = r.len() - q.len() + 1;
+        let mut best: Option<Match> = None;
+        let mut counters = Counters::new();
+        for s in 0..nshards {
+            let start = s * total / nshards;
+            let end = (s + 1) * total / nshards;
+            let mut ctx = QueryContext::new(&q, w);
+            if let Some(m) = scan_shard(
+                &r, start, end, &mut ctx, Some(&denv), suite, &shared, 256, &mut counters,
+            ) {
+                if best.is_none_or(|b| m.dist < b.dist) {
+                    best = Some(m);
+                }
+            }
+        }
+        let got = best.expect("found");
+        assert_eq!(got.pos, want.pos);
+        assert!((got.dist - want.dist).abs() < 1e-9);
+        // shared bound lets later shards prune at least as hard
+        assert!(counters.dtw_calls <= cfull.dtw_calls + (nshards as u64) * 4);
+    }
+}

@@ -1,0 +1,74 @@
+//! Plain-text series I/O — the UCR suite's format: whitespace/newline
+//! separated floats. Lets users run the engine on their own recordings and
+//! lets `repro gen-data` materialise the synthetic datasets for
+//! inspection.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Read a series from a text file of whitespace-separated floats.
+pub fn read_series(path: &Path) -> anyhow::Result<Vec<f64>> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        for tok in line.split_whitespace() {
+            let v: f64 = tok
+                .parse()
+                .map_err(|e| anyhow::anyhow!("{}:{}: bad float {tok:?}: {e}", path.display(), ln + 1))?;
+            out.push(v);
+        }
+    }
+    Ok(out)
+}
+
+/// Write a series as one float per line (UCR convention).
+pub fn write_series(path: &Path, s: &[f64]) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("create {}: {e}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for v in s {
+        writeln!(w, "{v}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("repro_loader_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("series.txt");
+        let s = vec![1.5, -2.25, 0.0, 3.125e-3];
+        write_series(&p, &s).unwrap();
+        let r = read_series(&p).unwrap();
+        assert_eq!(r, s);
+    }
+
+    #[test]
+    fn whitespace_separated() {
+        let dir = std::env::temp_dir().join("repro_loader_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ws.txt");
+        std::fs::write(&p, "1 2 3\n4\t5\n").unwrap();
+        assert_eq!(read_series(&p).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn bad_float_errors() {
+        let dir = std::env::temp_dir().join("repro_loader_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.txt");
+        std::fs::write(&p, "1 two 3").unwrap();
+        assert!(read_series(&p).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(read_series(Path::new("/nonexistent/xyz.txt")).is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Datasets (system S11): synthetic stand-ins for the paper's six sensor
+//! datasets, a plain-text loader, and the query-extraction protocol of the
+//! UCR-USP evaluation.
+//!
+//! The real recordings (FoG, Soccer, PAMAP2, MIT-BIH ECG, REFIT, PPG) are
+//! licence/size-gated here; the generators reproduce the *statistical
+//! regimes* that drive pruning behaviour — periodicity, spikiness,
+//! regime-switching, self-similarity (DESIGN.md §4). Queries are noisy
+//! excerpts of the reference, as in the paper's setup.
+
+pub mod loader;
+pub mod rng;
+pub mod synth;
+
+use rng::Rng;
+
+/// The six datasets of the paper's evaluation (§5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dataset {
+    /// Freezing of Gait — bursty walking oscillation with freeze episodes
+    FoG,
+    /// Soccer player speed — mean-reverting walk with sprint bursts
+    Soccer,
+    /// PAMAP2 activity monitoring — regime-switching periodic patterns
+    Pamap2,
+    /// MIT-BIH ECG — periodic beats with RR jitter and arrhythmic events
+    Ecg,
+    /// REFIT electrical load — stepwise appliance loads with spikes
+    Refit,
+    /// Photoplethysmography — smooth quasi-periodic pulse waves
+    Ppg,
+}
+
+impl Dataset {
+    pub const ALL: [Dataset; 6] = [
+        Dataset::FoG,
+        Dataset::Soccer,
+        Dataset::Pamap2,
+        Dataset::Ecg,
+        Dataset::Refit,
+        Dataset::Ppg,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::FoG => "FoG",
+            Dataset::Soccer => "Soccer",
+            Dataset::Pamap2 => "PAMAP2",
+            Dataset::Ecg => "ECG",
+            Dataset::Refit => "REFIT",
+            Dataset::Ppg => "PPG",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Dataset> {
+        Dataset::ALL.iter().copied().find(|d| d.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Generate a reference stream of `len` points.
+    pub fn generate(&self, len: usize, seed: u64) -> Vec<f64> {
+        match self {
+            Dataset::FoG => synth::fog::generate(len, seed),
+            Dataset::Soccer => synth::soccer::generate(len, seed),
+            Dataset::Pamap2 => synth::pamap2::generate(len, seed),
+            Dataset::Ecg => synth::ecg::generate(len, seed),
+            Dataset::Refit => synth::refit::generate(len, seed),
+            Dataset::Ppg => synth::ppg::generate(len, seed),
+        }
+    }
+}
+
+/// Extract `count` queries of length `qlen` from `reference` following the
+/// UCR-USP protocol: excerpts at random positions, perturbed with Gaussian
+/// noise of `noise` × the excerpt's std so the best match is non-trivial
+/// but findable.
+pub fn extract_queries(
+    reference: &[f64],
+    count: usize,
+    qlen: usize,
+    noise: f64,
+    seed: u64,
+) -> Vec<Vec<f64>> {
+    assert!(reference.len() > qlen, "reference shorter than query");
+    let mut rng = Rng::new(seed ^ 0x9E3779B97F4A7C15);
+    (0..count)
+        .map(|_| {
+            let pos = rng.below((reference.len() - qlen) as u64) as usize;
+            let ex = &reference[pos..pos + qlen];
+            let (_, std) = crate::norm::znorm::stats(ex);
+            let s = if std > 0.0 { std } else { 1.0 };
+            ex.iter().map(|&x| x + rng.normal() * noise * s).collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_datasets_generate_and_are_deterministic() {
+        for d in Dataset::ALL {
+            let a = d.generate(2048, 42);
+            let b = d.generate(2048, 42);
+            assert_eq!(a.len(), 2048);
+            assert_eq!(a, b, "{} must be deterministic", d.name());
+            let c = d.generate(2048, 43);
+            assert_ne!(a, c, "{} must vary with seed", d.name());
+            assert!(a.iter().all(|v| v.is_finite()), "{}", d.name());
+            // non-degenerate: some variance
+            let (_, std) = crate::norm::znorm::stats(&a);
+            assert!(std > 1e-6, "{} is flat", d.name());
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for d in Dataset::ALL {
+            assert_eq!(Dataset::from_name(d.name()), Some(d));
+        }
+        assert_eq!(Dataset::from_name("ecg"), Some(Dataset::Ecg));
+        assert_eq!(Dataset::from_name("nope"), None);
+    }
+
+    #[test]
+    fn queries_are_near_their_source() {
+        let r = Dataset::Ecg.generate(8192, 7);
+        let qs = extract_queries(&r, 5, 256, 0.05, 7);
+        assert_eq!(qs.len(), 5);
+        for q in &qs {
+            assert_eq!(q.len(), 256);
+            assert!(q.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn query_longer_than_reference_panics() {
+        let r = vec![0.0; 10];
+        extract_queries(&r, 1, 20, 0.0, 1);
+    }
+}

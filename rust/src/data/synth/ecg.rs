@@ -1,0 +1,67 @@
+//! MIT-BIH ECG stand-in [3, 10]: a periodic PQRST beat template with RR
+//! interval jitter, baseline wander, and occasional arrhythmic events
+//! (premature beats with distorted morphology) — the mix that makes ECG
+//! similarity search both highly prunable (periodicity) and occasionally
+//! hard (ectopic beats).
+
+use crate::data::rng::Rng;
+
+/// One PQRST complex sampled at `t` in [0,1): sum of Gaussians.
+#[inline]
+fn beat(t: f64, qrs_amp: f64) -> f64 {
+    let g = |mu: f64, sig: f64, a: f64| a * (-((t - mu) * (t - mu)) / (2.0 * sig * sig)).exp();
+    g(0.15, 0.03, 0.12)            // P
+        + g(0.28, 0.012, -0.18)    // Q
+        + g(0.31, 0.015, qrs_amp)  // R
+        + g(0.34, 0.012, -0.25)    // S
+        + g(0.55, 0.06, 0.30)      // T
+}
+
+pub fn generate(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0xEC6);
+    let mut out = Vec::with_capacity(len);
+    let mut t_in_beat = 0.0f64;
+    let mut rr = rng.range(180.0, 220.0); // samples per beat (~72 bpm @ 250 Hz)
+    let mut qrs = rng.range(0.9, 1.1);
+    let mut wander_phase = 0.0f64;
+    for _ in 0..len {
+        t_in_beat += 1.0 / rr;
+        if t_in_beat >= 1.0 {
+            t_in_beat -= 1.0;
+            // next beat's RR and morphology
+            if rng.chance(0.03) {
+                rr = rng.range(120.0, 150.0); // premature
+                qrs = rng.range(1.4, 1.8); // wide/tall
+            } else {
+                rr = rng.range(185.0, 215.0);
+                qrs = rng.range(0.9, 1.1);
+            }
+        }
+        wander_phase += 0.002;
+        let wander = 0.05 * (2.0 * std::f64::consts::PI * wander_phase).sin();
+        out.push(beat(t_in_beat, qrs) + wander + 0.01 * rng.normal());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn periodic_with_r_peaks() {
+        let s = super::generate(8_000, 11);
+        let mx = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(mx > 0.7, "no R peaks: max={mx}");
+        // count threshold crossings ~ beats: 8000 samples / ~200 rr ≈ 40
+        let mut beats = 0;
+        let mut above = false;
+        for &v in &s {
+            if v > 0.5 && !above {
+                beats += 1;
+                above = true;
+            } else if v < 0.2 {
+                above = false;
+            }
+        }
+        assert!((25..=70).contains(&beats), "beats={beats}");
+    }
+}

@@ -1,0 +1,59 @@
+//! Freezing-of-Gait stand-in: ankle-accelerometer-like walking oscillation
+//! (~1 Hz stride at 64 Hz sampling) whose amplitude collapses during
+//! "freeze" episodes, replaced by low-amplitude trembling at 6–8 Hz — the
+//! signature the FoG dataset [1] was collected to capture.
+
+use crate::data::rng::Rng;
+
+pub fn generate(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0xF06);
+    let mut out = Vec::with_capacity(len);
+    let mut phase = 0.0f64;
+    let mut stride_freq = rng.range(0.9, 1.3) / 64.0; // cycles per sample
+    let mut amp = rng.range(0.8, 1.2);
+    let mut frozen = false;
+    let mut regime_left = rng.below(2000) as i64 + 500;
+    for _ in 0..len {
+        regime_left -= 1;
+        if regime_left <= 0 {
+            frozen = !frozen;
+            regime_left = if frozen {
+                rng.below(400) as i64 + 100 // freezes are short
+            } else {
+                rng.below(3000) as i64 + 800
+            };
+            stride_freq = rng.range(0.9, 1.3) / 64.0;
+            amp = rng.range(0.8, 1.2);
+        }
+        let v = if frozen {
+            // trembling: 6-8 Hz, low amplitude
+            phase += rng.range(6.0, 8.0) / 64.0;
+            0.15 * amp * (2.0 * std::f64::consts::PI * phase).sin()
+        } else {
+            phase += stride_freq;
+            let base = (2.0 * std::f64::consts::PI * phase).sin();
+            // heel-strike harmonic
+            let h = 0.35 * (4.0 * std::f64::consts::PI * phase).sin();
+            amp * (base + h)
+        };
+        out.push(v + 0.05 * rng.normal());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn has_bursty_structure() {
+        let s = super::generate(10_000, 1);
+        // rolling std should vary strongly (walk vs freeze)
+        let win = 500;
+        let stds: Vec<f64> = (0..s.len() - win)
+            .step_by(win)
+            .map(|i| crate::norm::znorm::stats(&s[i..i + win]).1)
+            .collect();
+        let mx = stds.iter().cloned().fold(0.0f64, f64::max);
+        let mn = stds.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(mx / mn > 2.0, "no freeze/walk contrast: {mn}..{mx}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Synthetic generators for the six evaluation datasets (DESIGN.md §4).
+//!
+//! Each generator targets the statistical regime that shapes how well
+//! lower bounds and in-DTW pruning work on the real recording it stands in
+//! for: smooth quasi-periodic signals (PPG, ECG) give tight envelopes and
+//! heavy LB pruning; spiky, stepwise loads (REFIT) defeat envelopes and
+//! push work into the DTW core — matching the paper's observation that
+//! REFIT behaves differently from every other dataset (§5).
+//!
+//! All generators share the contract: `generate(len, seed) -> Vec<f64>`,
+//! deterministic in `(len, seed)`, finite, non-degenerate.
+
+pub mod ecg;
+pub mod fog;
+pub mod pamap2;
+pub mod ppg;
+pub mod refit;
+pub mod soccer;

@@ -1,0 +1,80 @@
+//! PAMAP2 stand-in: wrist-IMU magnitude during scripted activities [15] —
+//! long regimes (walking, cycling, ironing, lying...) each with its own
+//! fundamental frequency, harmonic mix and noise floor, switching at
+//! activity boundaries.
+
+use crate::data::rng::Rng;
+
+pub fn generate(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0x9A3A92);
+    let mut out = Vec::with_capacity(len);
+    let mut phase = 0.0f64;
+    // regime parameters
+    let mut freq = 0.02;
+    let mut amp = 1.0;
+    let mut harm = 0.3;
+    let mut offset = 0.0;
+    let mut noise = 0.1;
+    let mut left = 0i64;
+    for _ in 0..len {
+        left -= 1;
+        if left <= 0 {
+            left = rng.below(6000) as i64 + 2000; // long activities
+            match rng.below(4) {
+                0 => {
+                    // walking: 1.8 Hz-ish, strong harmonic
+                    freq = rng.range(0.025, 0.035);
+                    amp = rng.range(0.9, 1.3);
+                    harm = 0.5;
+                    offset = 1.0;
+                    noise = 0.12;
+                }
+                1 => {
+                    // cycling: smooth, faster
+                    freq = rng.range(0.04, 0.055);
+                    amp = rng.range(0.5, 0.8);
+                    harm = 0.1;
+                    offset = 0.8;
+                    noise = 0.06;
+                }
+                2 => {
+                    // housework: irregular, mid amplitude
+                    freq = rng.range(0.01, 0.02);
+                    amp = rng.range(0.4, 0.9);
+                    harm = 0.8;
+                    offset = 0.9;
+                    noise = 0.25;
+                }
+                _ => {
+                    // lying/sitting: flat with breathing ripple
+                    freq = rng.range(0.004, 0.006);
+                    amp = rng.range(0.05, 0.12);
+                    harm = 0.0;
+                    offset = 0.2;
+                    noise = 0.03;
+                }
+            }
+        }
+        phase += freq;
+        let tau = 2.0 * std::f64::consts::PI * phase;
+        let v = offset + amp * (tau.sin() + harm * (2.0 * tau).sin()) + noise * rng.normal();
+        out.push(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn regime_switching_visible() {
+        let s = super::generate(30_000, 5);
+        let win = 2000;
+        let means: Vec<f64> = (0..s.len() - win)
+            .step_by(win)
+            .map(|i| s[i..i + win].iter().sum::<f64>() / win as f64)
+            .collect();
+        let mx = means.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mn = means.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(mx - mn > 0.3, "regimes indistinct: {mn}..{mx}");
+    }
+}

@@ -1,0 +1,66 @@
+//! REFIT stand-in [12]: household electrical load — a small base load with
+//! stepwise appliance activations (square pulses of assorted magnitudes
+//! and durations), compressor cycling, and rare high spikes. Flat segments
+//! + abrupt steps defeat envelope-based lower bounds, which is exactly why
+//! the paper singles REFIT out in §5.
+
+use crate::data::rng::Rng;
+
+pub fn generate(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0x2EF17);
+    let mut out = Vec::with_capacity(len);
+    let base = rng.range(60.0, 100.0);
+    // up to 4 concurrent appliances
+    let mut level = [0.0f64; 4];
+    let mut left = [0i64; 4];
+    let mut fridge_on = false;
+    let mut fridge_left = rng.below(500) as i64 + 200;
+    for _ in 0..len {
+        // fridge compressor duty cycle
+        fridge_left -= 1;
+        if fridge_left <= 0 {
+            fridge_on = !fridge_on;
+            fridge_left = if fridge_on {
+                rng.below(600) as i64 + 300
+            } else {
+                rng.below(1200) as i64 + 600
+            };
+        }
+        // appliance events
+        for k in 0..4 {
+            if left[k] > 0 {
+                left[k] -= 1;
+                if left[k] == 0 {
+                    level[k] = 0.0;
+                }
+            } else if rng.chance(0.0004) {
+                // kettle/oven/washer: big steps, varied duration
+                level[k] = match rng.below(3) {
+                    0 => rng.range(1800.0, 3000.0), // kettle
+                    1 => rng.range(700.0, 1200.0),  // oven element
+                    _ => rng.range(300.0, 600.0),   // washer
+                };
+                left[k] = rng.below(400) as i64 + 40;
+            }
+        }
+        let fridge = if fridge_on { 120.0 } else { 0.0 };
+        let spike = if rng.chance(0.0002) { rng.range(2000.0, 4000.0) } else { 0.0 };
+        let v = base + fridge + level.iter().sum::<f64>() + spike + 3.0 * rng.normal();
+        out.push(v.max(0.0));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn stepwise_heavy_tail() {
+        let s = super::generate(50_000, 9);
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        let mx = s.iter().cloned().fold(0.0f64, f64::max);
+        assert!(mx > 5.0 * mean, "no spikes: max={mx} mean={mean}");
+        // most of the time near base load (flat-ish segments)
+        let below = s.iter().filter(|&&v| v < 2.0 * mean).count();
+        assert!(below as f64 / s.len() as f64 > 0.5);
+    }
+}

@@ -1,0 +1,43 @@
+//! Soccer stand-in: player-speed traces from the MMSys'14 position dataset
+//! [13] — a mean-reverting (Ornstein-Uhlenbeck-like) base speed with
+//! occasional sprint bursts and rests, non-negative.
+
+use crate::data::rng::Rng;
+
+pub fn generate(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0x50CC);
+    let mut out = Vec::with_capacity(len);
+    let mut v = 2.0f64; // jogging speed m/s
+    let mut sprint_left = 0i64;
+    for _ in 0..len {
+        if sprint_left > 0 {
+            sprint_left -= 1;
+            v += 0.25 * (7.5 - v) + 0.15 * rng.normal();
+        } else {
+            // mean-revert to jog, sometimes rest
+            v += 0.05 * (2.2 - v) + 0.12 * rng.normal();
+            if rng.chance(0.002) {
+                sprint_left = rng.below(80) as i64 + 20;
+            }
+            if rng.chance(0.001) {
+                v *= 0.3; // sudden stop
+            }
+        }
+        v = v.max(0.0);
+        out.push(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn non_negative_and_bursty() {
+        let s = super::generate(20_000, 3);
+        assert!(s.iter().all(|&x| x >= 0.0));
+        let mx = s.iter().cloned().fold(0.0f64, f64::max);
+        assert!(mx > 5.0, "no sprints reached: max={mx}");
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        assert!(mean > 1.0 && mean < 4.0, "mean speed {mean}");
+    }
+}

@@ -1,0 +1,36 @@
+//! Point-wise cost functions.
+//!
+//! The paper (and the UCR suite) use the squared Euclidean distance between
+//! points; the elastic extensions in [`super::elastic`] reuse these for
+//! their gap/match costs.
+
+/// Squared Euclidean distance between two points — the default DTW cost.
+#[inline(always)]
+pub fn sqed(a: f64, b: f64) -> f64 {
+    let d = a - b;
+    d * d
+}
+
+/// Absolute difference — the classic MSM/TWE point cost.
+#[inline(always)]
+pub fn absd(a: f64, b: f64) -> f64 {
+    (a - b).abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sqed_basic() {
+        assert_eq!(sqed(3.0, 1.0), 4.0);
+        assert_eq!(sqed(1.0, 3.0), 4.0);
+        assert_eq!(sqed(2.5, 2.5), 0.0);
+    }
+
+    #[test]
+    fn absd_basic() {
+        assert_eq!(absd(3.0, 1.0), 2.0);
+        assert_eq!(absd(-1.0, 1.0), 2.0);
+    }
+}

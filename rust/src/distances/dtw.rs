@@ -1,0 +1,219 @@
+//! Baseline DTW — Algorithm 1 of the paper (O(n) space, no pruning), its
+//! Sakoe-Chiba-banded variant (§2.1), and a full-matrix oracle for tests.
+
+use super::{lines_cols, DtwWorkspace};
+use crate::distances::cost::sqed;
+
+/// Unconstrained DTW, O(n) space — the paper's Algorithm 1, verbatim.
+pub fn dtw(a: &[f64], b: &[f64]) -> f64 {
+    let mut ws = DtwWorkspace::default();
+    dtw_ws(a, b, &mut ws)
+}
+
+/// [`dtw`] with a caller-provided workspace (allocation-free hot path).
+pub fn dtw_ws(a: &[f64], b: &[f64], ws: &mut DtwWorkspace) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return if a.len() == b.len() { 0.0 } else { f64::INFINITY };
+    }
+    let (li, co) = lines_cols(a, b);
+    ws.reset(co.len());
+    // Horizontal border: curr holds line 0, swapped into prev on entry
+    // (Algorithm 1 lines 4–7).
+    ws.curr[0] = 0.0;
+    for i in 0..li.len() {
+        std::mem::swap(&mut ws.prev, &mut ws.curr);
+        ws.curr[0] = f64::INFINITY;
+        let v = li[i];
+        // `left` carries curr[j-1] in a register, and the prev-row min is
+        // taken *before* the loop-carried value enters the chain: the
+        // critical path per cell is min+add instead of min+min+add.
+        // (IEEE-exact: addition is rounding-monotone, so the reassociation
+        // cannot change the result.)
+        let mut left = f64::INFINITY;
+        for j in 1..=co.len() {
+            let c = sqed(v, co[j - 1]);
+            let bp = ws.prev[j].min(ws.prev[j - 1]);
+            let d = c + left.min(bp);
+            ws.curr[j] = d;
+            left = d;
+        }
+    }
+    ws.curr[co.len()]
+}
+
+/// Sakoe-Chiba-banded DTW (cDTW): warping paths may deviate at most `w`
+/// cells from the diagonal. `w >= max(len)` degenerates to [`dtw`]; if the
+/// length difference exceeds `w` no warping path exists and the distance
+/// is `+inf`.
+pub fn cdtw(a: &[f64], b: &[f64], w: usize) -> f64 {
+    let mut ws = DtwWorkspace::default();
+    cdtw_ws(a, b, w, &mut ws)
+}
+
+/// [`cdtw`] with a caller-provided workspace.
+pub fn cdtw_ws(a: &[f64], b: &[f64], w: usize, ws: &mut DtwWorkspace) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return if a.len() == b.len() { 0.0 } else { f64::INFINITY };
+    }
+    let (li, co) = lines_cols(a, b);
+    if li.len() - co.len() > w {
+        return f64::INFINITY;
+    }
+    let m = co.len();
+    ws.reset(m);
+    ws.curr[0] = 0.0;
+    for i in 1..=li.len() {
+        std::mem::swap(&mut ws.prev, &mut ws.curr);
+        let lo = i.saturating_sub(w).max(1);
+        let hi = (i + w).min(m);
+        // Borders of the band: the cell left of the band start must not
+        // leak a value from two lines ago.
+        ws.curr[lo - 1] = f64::INFINITY;
+        let v = li[i - 1];
+        let mut left = f64::INFINITY; // register-carried curr[j-1]
+        for j in lo..=hi {
+            let c = sqed(v, co[j - 1]);
+            let bp = ws.prev[j].min(ws.prev[j - 1]);
+            let d = c + left.min(bp);
+            ws.curr[j] = d;
+            left = d;
+        }
+        // Cell one past the band end is read as prev[j] by the next line
+        // (whose band can extend one further right): kill the stale value.
+        if hi + 1 <= m {
+            ws.curr[hi + 1] = f64::INFINITY;
+        }
+    }
+    ws.curr[m]
+}
+
+/// Full-matrix DP — the slow, obviously-correct oracle used by tests.
+/// Returns the whole (n+1)×(m+1) matrix so tests can also check individual
+/// cells against the paper's worked examples (Figs. 2–4).
+pub fn dtw_matrix(a: &[f64], b: &[f64], w: Option<usize>) -> Vec<Vec<f64>> {
+    let (n, m) = (a.len(), b.len());
+    let w = w.unwrap_or(n.max(m));
+    let mut d = vec![vec![f64::INFINITY; m + 1]; n + 1];
+    d[0][0] = 0.0;
+    for i in 1..=n {
+        for j in 1..=m {
+            if i.abs_diff(j) > w {
+                continue;
+            }
+            let c = sqed(a[i - 1], b[j - 1]);
+            let best = d[i - 1][j].min(d[i][j - 1]).min(d[i - 1][j - 1]);
+            if best.is_finite() {
+                d[i][j] = c + best;
+            }
+        }
+    }
+    d
+}
+
+/// Oracle distance: last cell of [`dtw_matrix`].
+pub fn dtw_oracle(a: &[f64], b: &[f64], w: Option<usize>) -> f64 {
+    let d = dtw_matrix(a, b, w);
+    d[a.len()][b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: [f64; 6] = [3.0, 1.0, 4.0, 4.0, 1.0, 1.0];
+    const T: [f64; 6] = [1.0, 3.0, 2.0, 1.0, 2.0, 2.0];
+
+    #[test]
+    fn paper_worked_example() {
+        // Fig. 2: DTW(S, T) = 9.
+        assert_eq!(dtw(&S, &T), 9.0);
+        assert_eq!(dtw_oracle(&S, &T, None), 9.0);
+    }
+
+    #[test]
+    fn paper_matrix_cells() {
+        // Fig. 2a spot checks (colours run 0..=22 in the paper figure).
+        let d = dtw_matrix(&S, &T, None);
+        assert_eq!(d[1][1], 4.0); // (3-1)^2
+        assert_eq!(d[6][6], 9.0);
+        // max value 22 appears in the matrix
+        let mx = d
+            .iter()
+            .flatten()
+            .copied()
+            .filter(|v| v.is_finite())
+            .fold(0.0f64, f64::max);
+        assert_eq!(mx, 22.0);
+    }
+
+    #[test]
+    fn symmetric() {
+        assert_eq!(dtw(&S, &T), dtw(&T, &S));
+        assert_eq!(cdtw(&S, &T, 2), cdtw(&T, &S, 2));
+    }
+
+    #[test]
+    fn identity_zero() {
+        assert_eq!(dtw(&S, &S), 0.0);
+        assert_eq!(cdtw(&S, &S, 0), 0.0);
+    }
+
+    #[test]
+    fn window_zero_is_sqed() {
+        let want: f64 = S.iter().zip(T.iter()).map(|(x, y)| sqed(*x, *y)).sum();
+        assert_eq!(cdtw(&S, &T, 0), want);
+    }
+
+    #[test]
+    fn window_full_is_dtw() {
+        assert_eq!(cdtw(&S, &T, 6), dtw(&S, &T));
+        assert_eq!(cdtw(&S, &T, 100), dtw(&S, &T));
+    }
+
+    #[test]
+    fn window_monotone() {
+        let mut prev = f64::INFINITY;
+        for w in 0..=6 {
+            let v = cdtw(&S, &T, w);
+            assert!(v <= prev, "w={w}: {v} > {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn unequal_lengths() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [1.0, 3.0, 5.0];
+        assert_eq!(dtw(&a, &b), dtw_oracle(&a, &b, None));
+        // band narrower than the length gap: no valid path
+        assert_eq!(cdtw(&a, &b, 1), f64::INFINITY);
+        assert_eq!(cdtw(&a, &b, 2), dtw_oracle(&a, &b, Some(2)));
+    }
+
+    #[test]
+    fn banded_matches_oracle_random() {
+        let mut x = 1234u64;
+        let mut rnd = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 4.0 - 2.0
+        };
+        for n in [5usize, 9, 17, 33] {
+            let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            for w in [0usize, 1, 2, n / 2, n] {
+                let got = cdtw(&a, &b, w);
+                let want = dtw_oracle(&a, &b, Some(w));
+                assert!((got - want).abs() < 1e-9, "n={n} w={w}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_series() {
+        assert_eq!(dtw(&[], &[]), 0.0);
+        assert_eq!(dtw(&[], &[1.0]), f64::INFINITY);
+        assert_eq!(cdtw(&[1.0], &[], 3), f64::INFINITY);
+    }
+}

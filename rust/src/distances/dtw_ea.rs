@@ -1,0 +1,140 @@
+//! Early-abandoned DTW, UCR-suite style (paper §2.2 and [14]).
+//!
+//! Computes banded DTW keeping the minimum of each line; abandons (returns
+//! `+inf`) as soon as that minimum *strictly* exceeds the upper bound — the
+//! strictness keeps ties (paper §2.2). Optionally tightens the bound per
+//! line with the cumulative lower-bound tail `cb` computed from LB_Keogh
+//! (the UCR suite trick: any path through line `i` must still pay at least
+//! `cb[min(i + w + 1, m)]` in the future).
+//!
+//! This is the DTW used by our `Suite::Ucr` baseline.
+
+use super::DtwWorkspace;
+use crate::distances::cost::sqed;
+
+/// Early-abandoned banded DTW. `query` plays the lines, `cand` the columns;
+/// both must have equal length (the subsequence-search setting). `cb`, if
+/// given, is the cumulative LB_Keogh tail over `cand` positions
+/// (`cb[j] = sum of per-position bound contributions from j to end`,
+/// `cb.len() == cand.len() + 1`, `cb[len] = 0`).
+pub fn dtw_ea(
+    query: &[f64],
+    cand: &[f64],
+    w: usize,
+    ub: f64,
+    cb: Option<&[f64]>,
+    ws: &mut DtwWorkspace,
+) -> f64 {
+    let n = query.len();
+    let m = cand.len();
+    debug_assert_eq!(n, m, "subsequence search uses equal lengths");
+    if n == 0 {
+        return 0.0;
+    }
+    if let Some(cb) = cb {
+        debug_assert_eq!(cb.len(), m + 1);
+    }
+    ws.reset(m);
+    ws.curr[0] = 0.0;
+    for i in 1..=n {
+        std::mem::swap(&mut ws.prev, &mut ws.curr);
+        let lo = i.saturating_sub(w).max(1);
+        let hi = (i + w).min(m);
+        ws.curr[lo - 1] = f64::INFINITY;
+        let v = query[i - 1];
+        let mut line_min = f64::INFINITY;
+        let mut left = f64::INFINITY; // register-carried curr[j-1]
+        for j in lo..=hi {
+            let c = sqed(v, cand[j - 1]);
+            let bp = ws.prev[j].min(ws.prev[j - 1]);
+            let d = c + left.min(bp);
+            ws.curr[j] = d;
+            left = d;
+            if d < line_min {
+                line_min = d;
+            }
+        }
+        if hi + 1 <= m {
+            ws.curr[hi + 1] = f64::INFINITY;
+        }
+        // UCR-style abandon: future cost of any path through this line is
+        // at least cb[min(i+w+1, m)] (0 without cb).
+        let future = cb.map_or(0.0, |cb| cb[(i + w + 1).min(m)]);
+        if line_min + future > ub {
+            return f64::INFINITY;
+        }
+    }
+    ws.curr[m]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::dtw::{cdtw, dtw};
+
+    const S: [f64; 6] = [3.0, 1.0, 4.0, 4.0, 1.0, 1.0];
+    const T: [f64; 6] = [1.0, 3.0, 2.0, 1.0, 2.0, 2.0];
+
+    fn ea(q: &[f64], c: &[f64], w: usize, ub: f64) -> f64 {
+        dtw_ea(q, c, w, ub, None, &mut DtwWorkspace::default())
+    }
+
+    #[test]
+    fn no_ub_matches_dtw() {
+        assert_eq!(ea(&S, &T, 6, f64::INFINITY), dtw(&S, &T));
+        for w in 0..=6 {
+            assert_eq!(ea(&S, &T, w, f64::INFINITY), cdtw(&S, &T, w));
+        }
+    }
+
+    #[test]
+    fn exact_when_at_most_ub() {
+        // ub equal to the true distance: ties must NOT be abandoned.
+        assert_eq!(ea(&S, &T, 6, 9.0), 9.0);
+    }
+
+    #[test]
+    fn never_underestimates_below_ub() {
+        // Row-min early abandon is *opportunistic* (the paper's point in
+        // §4: PrunedDTW/UCR-style EA can fail to trigger): with ub below
+        // the true distance the result is either +inf (abandoned) or the
+        // exact value — never something smaller.
+        for ub in [0.0, 3.0, 6.0, 8.999] {
+            let got = ea(&S, &T, 6, ub);
+            assert!(got.is_infinite() || got == 9.0, "ub={ub}: {got}");
+        }
+    }
+
+    #[test]
+    fn cb_tail_triggers_earlier_abandon_but_stays_exact() {
+        // A valid cb (all zeros) must not change the result.
+        let cb = vec![0.0; T.len() + 1];
+        let got = dtw_ea(&S, &T, 6, 9.0, Some(&cb), &mut DtwWorkspace::default());
+        assert_eq!(got, 9.0);
+    }
+
+    #[test]
+    fn random_equivalence_with_cdtw() {
+        let mut x = 99u64;
+        let mut rnd = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 2.0 - 1.0
+        };
+        for n in [8usize, 16, 31] {
+            let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            for w in [1usize, n / 4, n] {
+                let exact = cdtw(&a, &b, w);
+                assert!((ea(&a, &b, w, f64::INFINITY) - exact).abs() < 1e-12);
+                assert_eq!(ea(&a, &b, w, exact), exact, "tie must be kept");
+                let below = ea(&a, &b, w, exact * 0.999 - 1e-9);
+                assert!(
+                    below.is_infinite() || (below - exact).abs() < 1e-12,
+                    "opportunistic abandon must not underestimate: {below} vs {exact}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! ERP — Edit distance with Real Penalty (Chen & Ng, 2004) under the
+//! EAPruned skeleton. Gaps are matched against a constant gap value `g`
+//! (conventionally 0 on z-normalised data); unlike DTW its borders are
+//! *finite*: `D(i,0)` / `D(0,j)` accumulate gap penalties, which is exactly
+//! the case the generalised skeleton's gated pruning handles.
+
+use super::core::{eap_elastic, naive_elastic, ElasticModel};
+use crate::distances::cost::sqed;
+use crate::distances::DtwWorkspace;
+
+/// ERP cost structure over two series with gap value `g`.
+pub struct Erp<'a> {
+    li: &'a [f64],
+    co: &'a [f64],
+    g: f64,
+    /// prefix sums of gap penalties: `row_acc[j] = sum_{k<=j} (co[k]-g)^2`
+    row_acc: Vec<f64>,
+    col_acc: Vec<f64>,
+}
+
+impl<'a> Erp<'a> {
+    pub fn new(li: &'a [f64], co: &'a [f64], g: f64) -> Self {
+        let acc = |s: &[f64]| {
+            let mut v = Vec::with_capacity(s.len() + 1);
+            v.push(0.0);
+            let mut a = 0.0;
+            for &x in s {
+                a += sqed(x, g);
+                v.push(a);
+            }
+            v
+        };
+        Self { li, co, g, row_acc: acc(co), col_acc: acc(li) }
+    }
+}
+
+impl ElasticModel for Erp<'_> {
+    fn n_lines(&self) -> usize {
+        self.li.len()
+    }
+    fn n_cols(&self) -> usize {
+        self.co.len()
+    }
+    fn diag(&self, i: usize, j: usize) -> f64 {
+        sqed(self.li[i - 1], self.co[j - 1])
+    }
+    fn top(&self, i: usize, _j: usize) -> f64 {
+        sqed(self.li[i - 1], self.g)
+    }
+    fn left(&self, _i: usize, j: usize) -> f64 {
+        sqed(self.co[j - 1], self.g)
+    }
+    fn border_row(&self, j: usize) -> f64 {
+        self.row_acc[j]
+    }
+    fn border_col(&self, i: usize) -> f64 {
+        self.col_acc[i]
+    }
+}
+
+/// Early-abandoning pruned ERP: exact when `<= ub`, `+inf` once provably
+/// above. `w` is the Sakoe-Chiba band.
+pub fn eap_erp(a: &[f64], b: &[f64], g: f64, w: usize, ub: f64, ws: &mut DtwWorkspace) -> f64 {
+    eap_elastic(&Erp::new(a, b, g), w, ub, ws)
+}
+
+/// Full-matrix ERP oracle.
+pub fn erp_naive(a: &[f64], b: &[f64], g: f64, w: usize) -> f64 {
+    naive_elastic(&Erp::new(a, b, g), w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_zero() {
+        let a = [1.0, 2.0, 3.0, 2.0];
+        assert_eq!(eap_erp(&a, &a, 0.0, 4, f64::INFINITY, &mut DtwWorkspace::default()), 0.0);
+    }
+
+    #[test]
+    fn pure_gap_alignment() {
+        // one series empty of information: ERP vs itself shifted
+        let a = [0.0, 0.0, 5.0];
+        let b = [5.0, 0.0, 0.0];
+        let d = erp_naive(&a, &b, 0.0, 3);
+        let got = eap_erp(&a, &b, 0.0, 3, f64::INFINITY, &mut DtwWorkspace::default());
+        assert!((got - d).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exactness_sweep_vs_naive() {
+        let mut x = 77u64;
+        let mut rnd = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 2.0 - 1.0
+        };
+        let mut ws = DtwWorkspace::default();
+        for n in [5usize, 11, 23] {
+            let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            for g in [0.0, 0.5] {
+                for w in [2usize, n / 2, n] {
+                    let want = erp_naive(&a, &b, g, w);
+                    let got = eap_erp(&a, &b, g, w, f64::INFINITY, &mut ws);
+                    assert!((got - want).abs() < 1e-12, "n={n} g={g} w={w}: {got} vs {want}");
+                    let tie = eap_erp(&a, &b, g, w, want, &mut ws);
+                    assert!((tie - want).abs() < 1e-12, "tie n={n} g={g} w={w}");
+                    if want > 0.0 {
+                        assert_eq!(
+                            eap_erp(&a, &b, g, w, want * (1.0 - 1e-9) - 1e-12, &mut ws),
+                            f64::INFINITY,
+                            "abandon n={n} g={g} w={w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn finite_border_paths_survive_pruning() {
+        // A series pair whose optimal path hugs the border column: the
+        // gated discard logic must not cut it off.
+        let a = [10.0, 10.0, 10.0, 0.0];
+        let b = [0.0, 0.1, 0.0, 0.05];
+        let want = erp_naive(&a, &b, 0.0, 4);
+        let got = eap_erp(&a, &b, 0.0, 4, want + 1.0, &mut DtwWorkspace::default());
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+}

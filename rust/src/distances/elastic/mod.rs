@@ -1,0 +1,22 @@
+//! The paper's future-work claim, §6: *"many elastic measures share the
+//! same structure as DTW, only differing in their cost function"* — so the
+//! EAPruned early-abandon/pruning scheme should transfer to them.
+//!
+//! [`core`] generalises Algorithm 3 over an [`core::ElasticModel`]: per-move
+//! costs (diagonal/match, top/delete, left/insert) plus finite or infinite
+//! border rows/columns (ERP's gap borders are finite!). The concrete
+//! models:
+//!
+//! * [`erp`] — Edit distance with Real Penalty (gap value `g`)
+//! * [`msm`] — Move-Split-Merge (split/merge cost `c`)
+//! * [`twe`] — Time Warp Edit distance (stiffness `nu`, penalty `lambda`)
+//! * [`wdtw`] — Weighted DTW (sigmoid weight steepness `g`)
+//!
+//! Each module ships a naive full-matrix oracle; tests check the EAPruned
+//! version is exact for `ub = inf`, exact at ties, and abandons below.
+
+pub mod core;
+pub mod erp;
+pub mod msm;
+pub mod twe;
+pub mod wdtw;

@@ -1,0 +1,126 @@
+//! TWE — Time Warp Edit distance (Marteau, 2009 — reference [9] of the
+//! paper, the motivating example for measures *without* cheap lower
+//! bounds) under the EAPruned skeleton. Stiffness `nu` penalises timestamp
+//! drift; `lambda` penalises delete operations. Borders are infinite with
+//! the conventional 0-padding of both series.
+
+use super::core::{eap_elastic, naive_elastic, ElasticModel};
+use crate::distances::cost::sqed;
+use crate::distances::DtwWorkspace;
+
+/// TWE cost structure with stiffness `nu` and deletion penalty `lambda`.
+pub struct Twe<'a> {
+    li: &'a [f64],
+    co: &'a [f64],
+    nu: f64,
+    lambda: f64,
+}
+
+impl<'a> Twe<'a> {
+    pub fn new(li: &'a [f64], co: &'a [f64], nu: f64, lambda: f64) -> Self {
+        Self { li, co, nu, lambda }
+    }
+    #[inline(always)]
+    fn li_at(&self, i: usize) -> f64 {
+        // 0-padding convention: x(0) = 0
+        if i == 0 {
+            0.0
+        } else {
+            self.li[i - 1]
+        }
+    }
+    #[inline(always)]
+    fn co_at(&self, j: usize) -> f64 {
+        if j == 0 {
+            0.0
+        } else {
+            self.co[j - 1]
+        }
+    }
+}
+
+impl ElasticModel for Twe<'_> {
+    fn n_lines(&self) -> usize {
+        self.li.len()
+    }
+    fn n_cols(&self) -> usize {
+        self.co.len()
+    }
+    fn diag(&self, i: usize, j: usize) -> f64 {
+        // match: d(a_i, b_j) + d(a_{i-1}, b_{j-1}) + 2*nu*|i-j|
+        sqed(self.li_at(i), self.co_at(j))
+            + sqed(self.li_at(i - 1), self.co_at(j - 1))
+            + 2.0 * self.nu * (i.abs_diff(j) as f64)
+    }
+    fn top(&self, i: usize, _j: usize) -> f64 {
+        // delete in lines: d(a_i, a_{i-1}) + nu + lambda
+        sqed(self.li_at(i), self.li_at(i - 1)) + self.nu + self.lambda
+    }
+    fn left(&self, _i: usize, j: usize) -> f64 {
+        sqed(self.co_at(j), self.co_at(j - 1)) + self.nu + self.lambda
+    }
+}
+
+/// Early-abandoning pruned TWE: exact when `<= ub`, `+inf` once provably
+/// above.
+pub fn eap_twe(
+    a: &[f64],
+    b: &[f64],
+    nu: f64,
+    lambda: f64,
+    w: usize,
+    ub: f64,
+    ws: &mut DtwWorkspace,
+) -> f64 {
+    eap_elastic(&Twe::new(a, b, nu, lambda), w, ub, ws)
+}
+
+/// Full-matrix TWE oracle.
+pub fn twe_naive(a: &[f64], b: &[f64], nu: f64, lambda: f64, w: usize) -> f64 {
+    naive_elastic(&Twe::new(a, b, nu, lambda), w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_zero() {
+        let a = [1.0, 2.0, 1.0, 0.5];
+        assert_eq!(
+            eap_twe(&a, &a, 0.001, 1.0, 4, f64::INFINITY, &mut DtwWorkspace::default()),
+            0.0
+        );
+    }
+
+    #[test]
+    fn exactness_sweep_vs_naive() {
+        let mut x = 808u64;
+        let mut rnd = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 2.0 - 1.0
+        };
+        let mut ws = DtwWorkspace::default();
+        for n in [5usize, 13, 21] {
+            let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            for (nu, lambda) in [(0.001, 1.0), (0.1, 0.5)] {
+                for w in [2usize, n / 2, n] {
+                    let want = twe_naive(&a, &b, nu, lambda, w);
+                    let got = eap_twe(&a, &b, nu, lambda, w, f64::INFINITY, &mut ws);
+                    assert!((got - want).abs() < 1e-12, "n={n} nu={nu} w={w}");
+                    let tie = eap_twe(&a, &b, nu, lambda, w, want, &mut ws);
+                    assert!((tie - want).abs() < 1e-12);
+                    if want > 0.0 {
+                        assert_eq!(
+                            eap_twe(&a, &b, nu, lambda, w, want * (1.0 - 1e-9) - 1e-12, &mut ws),
+                            f64::INFINITY
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! WDTW — Weighted DTW (Jeong, Jeong & Omitaomu, 2011) under the EAPruned
+//! skeleton. Every move pays the point cost scaled by a sigmoid weight of
+//! the phase difference `|i-j|` — a soft alternative to the hard
+//! Sakoe-Chiba band. Borders are infinite, all three moves share the cost,
+//! so this is the closest cousin of plain DTW in the extension set.
+
+use super::core::{eap_elastic, naive_elastic, ElasticModel};
+use crate::distances::cost::sqed;
+use crate::distances::DtwWorkspace;
+
+/// Maximum weight (the UEA/tsml convention).
+const WMAX: f64 = 1.0;
+
+/// WDTW cost structure; `g` is the sigmoid steepness (commonly 0.05).
+pub struct Wdtw<'a> {
+    li: &'a [f64],
+    co: &'a [f64],
+    /// weights[d] = WMAX / (1 + exp(-g * (d - mid)))
+    weights: Vec<f64>,
+}
+
+impl<'a> Wdtw<'a> {
+    pub fn new(li: &'a [f64], co: &'a [f64], g: f64) -> Self {
+        let len = li.len().max(co.len());
+        let mid = len as f64 / 2.0;
+        let weights = (0..=len)
+            .map(|d| WMAX / (1.0 + (-g * (d as f64 - mid)).exp()))
+            .collect();
+        Self { li, co, weights }
+    }
+    #[inline(always)]
+    fn cost(&self, i: usize, j: usize) -> f64 {
+        self.weights[i.abs_diff(j)] * sqed(self.li[i - 1], self.co[j - 1])
+    }
+}
+
+impl ElasticModel for Wdtw<'_> {
+    fn n_lines(&self) -> usize {
+        self.li.len()
+    }
+    fn n_cols(&self) -> usize {
+        self.co.len()
+    }
+    fn diag(&self, i: usize, j: usize) -> f64 {
+        self.cost(i, j)
+    }
+    fn top(&self, i: usize, j: usize) -> f64 {
+        self.cost(i, j)
+    }
+    fn left(&self, i: usize, j: usize) -> f64 {
+        self.cost(i, j)
+    }
+}
+
+/// Early-abandoning pruned WDTW: exact when `<= ub`, `+inf` once provably
+/// above. WDTW is conventionally unwindowed (the weights do the banding);
+/// pass `w = len` for that.
+pub fn eap_wdtw(a: &[f64], b: &[f64], g: f64, w: usize, ub: f64, ws: &mut DtwWorkspace) -> f64 {
+    eap_elastic(&Wdtw::new(a, b, g), w, ub, ws)
+}
+
+/// Full-matrix WDTW oracle.
+pub fn wdtw_naive(a: &[f64], b: &[f64], g: f64, w: usize) -> f64 {
+    naive_elastic(&Wdtw::new(a, b, g), w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::dtw::dtw;
+
+    #[test]
+    fn identity_zero() {
+        let a = [1.0, -1.0, 2.0];
+        assert_eq!(eap_wdtw(&a, &a, 0.05, 3, f64::INFINITY, &mut DtwWorkspace::default()), 0.0);
+    }
+
+    #[test]
+    fn flat_weights_recover_scaled_dtw() {
+        // g=0 makes every weight 0.5: WDTW = 0.5 * DTW
+        let a = [3.0, 1.0, 4.0, 4.0, 1.0, 1.0];
+        let b = [1.0, 3.0, 2.0, 1.0, 2.0, 2.0];
+        let got = eap_wdtw(&a, &b, 0.0, 6, f64::INFINITY, &mut DtwWorkspace::default());
+        assert!((got - 0.5 * dtw(&a, &b)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exactness_sweep_vs_naive() {
+        let mut x = 2024u64;
+        let mut rnd = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 2.0 - 1.0
+        };
+        let mut ws = DtwWorkspace::default();
+        for n in [6usize, 14, 22] {
+            let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            for g in [0.05, 0.25] {
+                for w in [n / 2, n] {
+                    let want = wdtw_naive(&a, &b, g, w);
+                    let got = eap_wdtw(&a, &b, g, w, f64::INFINITY, &mut ws);
+                    assert!((got - want).abs() < 1e-12, "n={n} g={g} w={w}");
+                    let tie = eap_wdtw(&a, &b, g, w, want, &mut ws);
+                    assert!((tie - want).abs() < 1e-12);
+                    if want > 0.0 {
+                        assert_eq!(
+                            eap_wdtw(&a, &b, g, w, want * (1.0 - 1e-9) - 1e-12, &mut ws),
+                            f64::INFINITY
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Algorithm 2 of the paper: pruning and early abandoning **from the left**
+//! only — the pedagogical stepping stone between plain DTW and the full
+//! EAPrunedDTW (Algorithm 3).
+//!
+//! As a line is scanned, a contiguous run of cells `> ub` starting at the
+//! left border forms *discard points*; by monotonicity everything below
+//! them stays `> ub`, so the next line starts after the last discard point
+//! (`next_start`). When the discard points swallow a whole line the left
+//! border has crossed the matrix and we early abandon (paper Fig. 3b).
+
+use super::{lines_cols, DtwWorkspace};
+use crate::distances::cost::sqed;
+
+/// Paper Algorithm 2, verbatim (unwindowed). Returns `+inf` if the true
+/// DTW strictly exceeds `ub`, the exact distance otherwise.
+pub fn left_pruned_dtw(a: &[f64], b: &[f64], ub: f64, ws: &mut DtwWorkspace) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return if a.len() == b.len() { 0.0 } else { f64::INFINITY };
+    }
+    let (li, co) = lines_cols(a, b);
+    let m = co.len();
+    ws.reset(m);
+    ws.curr[0] = 0.0;
+    let mut next_start = 1usize;
+    for i in 1..=li.len() {
+        std::mem::swap(&mut ws.prev, &mut ws.curr);
+        let v = li[i - 1];
+        let mut j = next_start;
+        ws.curr[j - 1] = f64::INFINITY;
+        // Stage 1: advance over discard points — the left neighbour is
+        // known `> ub`, so only two dependencies (Algorithm 2 line 12).
+        while j == next_start && j <= m {
+            let c = sqed(v, co[j - 1]);
+            let d = c + ws.prev[j].min(ws.prev[j - 1]);
+            ws.curr[j] = d;
+            if d > ub {
+                next_start += 1;
+            }
+            j += 1;
+        }
+        // Early abandon: the border crossed the whole line (line 15).
+        if j > m && next_start == j {
+            return f64::INFINITY;
+        }
+        // Stage 2: plain DTW for the rest of the line.
+        while j <= m {
+            let c = sqed(v, co[j - 1]);
+            ws.curr[j] = c + ws.curr[j - 1].min(ws.prev[j]).min(ws.prev[j - 1]);
+            j += 1;
+        }
+    }
+    ws.curr[m]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::dtw::dtw;
+
+    const S: [f64; 6] = [3.0, 1.0, 4.0, 4.0, 1.0, 1.0];
+    const T: [f64; 6] = [1.0, 3.0, 2.0, 1.0, 2.0, 2.0];
+
+    fn lp(a: &[f64], b: &[f64], ub: f64) -> f64 {
+        left_pruned_dtw(a, b, ub, &mut DtwWorkspace::default())
+    }
+
+    #[test]
+    fn paper_fig3a_ub9_no_abandon() {
+        // ub = 9 = DTW(S,T): pruning happens but the exact value survives.
+        assert_eq!(lp(&S, &T, 9.0), 9.0);
+    }
+
+    #[test]
+    fn paper_fig3b_ub6_abandons() {
+        // ub = 6 < 9: the paper shows early abandon at the end of line 5.
+        assert_eq!(lp(&S, &T, 6.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn infinite_ub_is_exact_dtw() {
+        assert_eq!(lp(&S, &T, f64::INFINITY), dtw(&S, &T));
+    }
+
+    #[test]
+    fn random_exactness() {
+        let mut x = 7u64;
+        let mut rnd = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 2.0 - 1.0
+        };
+        for n in [4usize, 12, 33, 64] {
+            let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let exact = dtw(&a, &b);
+            assert!((lp(&a, &b, f64::INFINITY) - exact).abs() < 1e-12);
+            assert!((lp(&a, &b, exact) - exact).abs() < 1e-12, "tie kept");
+            // below the true distance: abandon is opportunistic for the
+            // left-only algorithm — it may return an (over-approximated)
+            // value > ub instead, but never an underestimate
+            let lo = lp(&a, &b, exact - exact.abs() * 1e-6 - 1e-9);
+            assert!(lo.is_infinite() || lo >= exact - 1e-9, "{lo} vs {exact}");
+            // any ub above the distance keeps exactness
+            assert!((lp(&a, &b, exact * 1.5 + 1.0) - exact).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn unequal_lengths() {
+        let a = [1.0, 2.0, 3.0, 2.0, 1.0, 0.0, 1.0];
+        let b = [1.0, 3.0, 1.0];
+        assert_eq!(lp(&a, &b, f64::INFINITY), dtw(&a, &b));
+    }
+}

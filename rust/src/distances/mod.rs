@@ -1,0 +1,60 @@
+//! The distance zoo: every DTW variant the paper builds on, compares
+//! against, or contributes (DESIGN.md §2, systems S1–S6).
+//!
+//! All functions use `f64` and the squared-Euclidean point cost (the UCR
+//! suite convention). Every early-abandoning variant takes an upper bound
+//! `ub` and returns `f64::INFINITY` when it can prove the true distance
+//! *strictly* exceeds `ub` (strictness preserves ties — paper §2.2).
+//!
+//! | module | algorithm | role |
+//! |--------|-----------|------|
+//! | [`dtw`] | Algorithm 1 (+ Sakoe-Chiba band) | baseline & oracle |
+//! | [`dtw_ea`] | UCR row-min early abandon (+ cb tightening) | UCR suite |
+//! | [`pruned_dtw`] | PrunedDTW as in UCR-USP [19,20] | prior art |
+//! | [`left_prune`] | Algorithm 2 (left pruning only) | stepping stone |
+//! | [`eap_dtw`] | **Algorithm 3 — EAPrunedDTW** | the contribution |
+//! | [`elastic`] | EAPruned skeleton on ERP/MSM/TWE/WDTW | future work §6 |
+
+pub mod cost;
+pub mod dtw;
+pub mod dtw_ea;
+pub mod eap_dtw;
+pub mod elastic;
+pub mod left_prune;
+pub mod pruned_dtw;
+
+/// Workspace reused across distance calls to keep the hot path
+/// allocation-free: two DP lines of `len + 1` cells.
+#[derive(Debug, Default, Clone)]
+pub struct DtwWorkspace {
+    pub(crate) prev: Vec<f64>,
+    pub(crate) curr: Vec<f64>,
+}
+
+impl DtwWorkspace {
+    /// Workspace able to handle series up to `cap` points.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { prev: Vec::with_capacity(cap + 1), curr: Vec::with_capacity(cap + 1) }
+    }
+
+    /// (Re)initialise both lines to `len + 1` cells of `+inf`.
+    #[inline]
+    pub(crate) fn reset(&mut self, len: usize) {
+        self.prev.clear();
+        self.prev.resize(len + 1, f64::INFINITY);
+        self.curr.clear();
+        self.curr.resize(len + 1, f64::INFINITY);
+    }
+}
+
+/// Order two series as (lines, columns) = (longest, shortest): the DP lines
+/// match the shortest series so the O(n)-space buffers are minimal
+/// (paper Algorithm 1, lines 1–2). DTW is symmetric so this is free.
+#[inline]
+pub(crate) fn lines_cols<'a>(a: &'a [f64], b: &'a [f64]) -> (&'a [f64], &'a [f64]) {
+    if a.len() >= b.len() {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}

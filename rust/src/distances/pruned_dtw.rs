@@ -1,0 +1,239 @@
+//! PrunedDTW — the prior-art comparator, as fitted to similarity search by
+//! the UCR-USP suite (Silva & Batista [19]; Silva et al. [20], paper §2.3).
+//!
+//! Prunes from the left (`sc`, contiguous run of above-threshold cells from
+//! the row start) and from the right (`ec`, last below-threshold cell + 1 of
+//! the previous row), and early abandons on the **row minimum** — *not* on
+//! border collision, and with the classic three-way min in every cell. Those
+//! two differences are exactly what EAPrunedDTW improves on (paper §4), so
+//! this implementation keeps them faithfully, including the INF back-fill
+//! after a right-prune break that the ec bookkeeping requires.
+
+use super::DtwWorkspace;
+use crate::distances::cost::sqed;
+
+/// Windowed PrunedDTW with row-minimum early abandon and optional
+/// cumulative-bound tightening (same `cb` contract as
+/// [`crate::distances::eap_dtw::eap_cdtw`]). Equal-length inputs are not
+/// required, but `|len(a)-len(b)| <= w` is.
+pub fn pruned_cdtw(
+    a: &[f64],
+    b: &[f64],
+    w: usize,
+    ub: f64,
+    cb: Option<&[f64]>,
+    ws: &mut DtwWorkspace,
+) -> f64 {
+    let mut cells = 0u64;
+    pruned_impl::<false>(a, b, w, ub, cb, ws, &mut cells)
+}
+
+/// Unwindowed PrunedDTW.
+pub fn pruned_dtw(a: &[f64], b: &[f64], ub: f64, ws: &mut DtwWorkspace) -> f64 {
+    let w = a.len().max(b.len());
+    pruned_cdtw(a, b, w, ub, None, ws)
+}
+
+/// [`pruned_cdtw`] that also reports the number of DP cells computed
+/// (ablation instrumentation, monomorphised separately).
+pub fn pruned_cdtw_counted(
+    a: &[f64],
+    b: &[f64],
+    w: usize,
+    ub: f64,
+    cb: Option<&[f64]>,
+    ws: &mut DtwWorkspace,
+) -> (f64, u64) {
+    let mut cells = 0u64;
+    let d = pruned_impl::<true>(a, b, w, ub, cb, ws, &mut cells);
+    (d, cells)
+}
+
+#[inline(always)]
+fn pruned_impl<const COUNT: bool>(
+    a: &[f64],
+    b: &[f64],
+    w: usize,
+    ub: f64,
+    cb: Option<&[f64]>,
+    ws: &mut DtwWorkspace,
+    cells: &mut u64,
+) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return if a.len() == b.len() { 0.0 } else { f64::INFINITY };
+    }
+    let (li, co) = super::lines_cols(a, b);
+    let n = li.len();
+    let m = co.len();
+    if n - m > w {
+        return f64::INFINITY;
+    }
+    ws.reset(m);
+    ws.curr[0] = 0.0;
+    let mut sc = 1usize; // start column (left pruning, persistent)
+    let mut ec = 1usize; // previous row's end column (right pruning)
+
+    for i in 1..=n {
+        std::mem::swap(&mut ws.prev, &mut ws.curr);
+        let v = li[i - 1];
+        let band_lo = i.saturating_sub(w).max(1);
+        let band_hi = i.checked_add(w).map_or(m, |x| x.min(m));
+        let beg = sc.max(band_lo);
+        let th = match cb {
+            Some(cb) => {
+                let idx = i
+                    .checked_add(w)
+                    .and_then(|x| x.checked_add(1))
+                    .map_or(m, |x| x.min(m));
+                ub - cb[idx]
+            }
+            None => ub,
+        };
+        let prev = &mut ws.prev;
+        let curr = &mut ws.curr;
+        curr[beg - 1] = f64::INFINITY;
+        let mut smaller_found = false;
+        let mut ec_next = beg;
+        let mut row_min = f64::INFINITY;
+        let mut left = f64::INFINITY; // register-carried curr[j-1]
+        let mut j = beg;
+        while j <= band_hi {
+            let c = sqed(v, co[j - 1]);
+            // PrunedDTW keeps the full three-way min in every cell — the
+            // overhead the EAPrunedDTW stage decomposition removes.
+            // (Loop-carried value enters the chain last; see dtw.rs.)
+            let bp = prev[j].min(prev[j - 1]);
+            let d = c + left.min(bp);
+            curr[j] = d;
+            left = d;
+            if COUNT {
+                *cells += 1;
+            }
+            if d > th {
+                if !smaller_found {
+                    sc = j + 1;
+                }
+                if j >= ec {
+                    // Right prune: everything further on this row exceeds
+                    // the threshold. Back-fill so the next row's stale
+                    // reads see INF (part of PrunedDTW's bookkeeping cost).
+                    for k in j + 1..=band_hi {
+                        curr[k] = f64::INFINITY;
+                    }
+                    j = band_hi; // loop epilogue advances past band_hi
+                }
+            } else {
+                smaller_found = true;
+                ec_next = j + 1;
+                if d < row_min {
+                    row_min = d;
+                }
+            }
+            j += 1;
+        }
+        // Band growth sentinel (next row's band can extend one column).
+        if band_hi + 1 <= m {
+            curr[band_hi + 1] = f64::INFINITY;
+        }
+        // Row-minimum early abandon — PrunedDTW's abandon test (§2.3/§4).
+        if row_min > th {
+            return f64::INFINITY;
+        }
+        if sc > band_hi {
+            return f64::INFINITY;
+        }
+        ec = ec_next;
+    }
+    ws.curr[m]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::dtw::{cdtw, dtw, dtw_oracle};
+
+    const S: [f64; 6] = [3.0, 1.0, 4.0, 4.0, 1.0, 1.0];
+    const T: [f64; 6] = [1.0, 3.0, 2.0, 1.0, 2.0, 2.0];
+
+    #[test]
+    fn exact_with_infinite_ub() {
+        assert_eq!(pruned_dtw(&S, &T, f64::INFINITY, &mut DtwWorkspace::default()), 9.0);
+    }
+
+    #[test]
+    fn exact_at_tie() {
+        assert_eq!(pruned_dtw(&S, &T, 9.0, &mut DtwWorkspace::default()), 9.0);
+    }
+
+    #[test]
+    fn never_underestimates_below_ub() {
+        // PrunedDTW's row-min abandon is opportunistic (paper §4): below
+        // the true distance we get +inf or an over-approximation, never
+        // an underestimate.
+        for ub in [0.0, 6.0, 8.9] {
+            let got = pruned_dtw(&S, &T, ub, &mut DtwWorkspace::default());
+            assert!(got.is_infinite() || got >= 9.0, "ub={ub}: {got}");
+        }
+    }
+
+    #[test]
+    fn windowed_matches_cdtw() {
+        let mut ws = DtwWorkspace::default();
+        for w in 0..=6 {
+            assert_eq!(
+                pruned_cdtw(&S, &T, w, f64::INFINITY, None, &mut ws),
+                cdtw(&S, &T, w),
+                "w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn random_exactness_sweep() {
+        let mut x = 4242u64;
+        let mut rnd = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 2.0 - 1.0
+        };
+        let mut ws = DtwWorkspace::default();
+        for n in [9usize, 17, 32] {
+            let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            for w in [1usize, n / 3, n] {
+                let exact = cdtw(&a, &b, w);
+                assert!((pruned_cdtw(&a, &b, w, f64::INFINITY, None, &mut ws) - exact).abs() < 1e-12);
+                assert!((pruned_cdtw(&a, &b, w, exact, None, &mut ws) - exact).abs() < 1e-12);
+                let below = pruned_cdtw(&a, &b, w, exact * 0.999 - 1e-9, None, &mut ws);
+                assert!(
+                    below.is_infinite() || below >= exact - 1e-9,
+                    "underestimate: {below} vs {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn counted_prunes_fewer_than_full_matrix() {
+        let mut ws = DtwWorkspace::default();
+        let (d, c_full) = pruned_cdtw_counted(&S, &T, 6, f64::INFINITY, None, &mut ws);
+        assert_eq!(d, 9.0);
+        assert_eq!(c_full, 36);
+        let (d2, c_pruned) = pruned_cdtw_counted(&S, &T, 6, 9.0, None, &mut ws);
+        assert_eq!(d2, 9.0);
+        assert!(c_pruned < c_full);
+    }
+
+    #[test]
+    fn unequal_lengths() {
+        let a = [0.0, 1.0, 2.0, 1.0, 0.0, -1.0, 0.5];
+        let b = [0.0, 2.0, 0.0];
+        assert_eq!(pruned_dtw(&a, &b, f64::INFINITY, &mut DtwWorkspace::default()), dtw(&a, &b));
+        let mut ws = DtwWorkspace::default();
+        assert_eq!(
+            pruned_cdtw(&a, &b, 4, f64::INFINITY, None, &mut ws),
+            dtw_oracle(&a, &b, Some(4))
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! # repro — EAPrunedDTW similarity search
+//!
+//! A production-shaped reproduction of *"Early Abandoning PrunedDTW and its
+//! application to similarity search"* (Herrmann & Webb, 2020).
+//!
+//! The crate is the Layer-3 Rust coordinator of a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the scalar distance zoo ([`distances`],
+//!   including the paper's [`distances::eap_dtw`]), the UCR-style
+//!   lower-bound cascade ([`bounds`]), the subsequence search engine
+//!   ([`search`]), synthetic stand-ins for the paper's six datasets
+//!   ([`data`]), and a tokio serving layer ([`coordinator`]) that shards a
+//!   long reference across workers and batches candidates for the XLA
+//!   prefilter.
+//! * **Layer 2/1 (build-time Python, `python/compile/`)** — JAX graphs and
+//!   Pallas kernels (batched z-norm, LB_Keogh, wavefront DTW), AOT-lowered
+//!   to HLO text in `artifacts/` and executed by [`runtime`] via PJRT.
+//!   Python never runs on the request path.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use repro::distances::eap_dtw::eap_dtw;
+//! let a = [3.0, 1.0, 4.0, 4.0, 1.0, 1.0];
+//! let b = [1.0, 3.0, 2.0, 1.0, 2.0, 2.0];
+//! // paper worked example: DTW = 9
+//! assert_eq!(eap_dtw(&a, &b, f64::INFINITY), 9.0);
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench_support;
+pub mod bounds;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod distances;
+pub mod metrics;
+pub mod norm;
+pub mod runtime;
+pub mod search;
+pub mod util;
+
+/// Convenience re-exports for the common entry points.
+pub mod prelude {
+    pub use crate::bounds::cascade::CascadePolicy;
+    pub use crate::config::SearchConfig;
+    pub use crate::data::Dataset;
+    pub use crate::distances::eap_dtw::{eap_cdtw, eap_dtw};
+    pub use crate::metrics::Counters;
+    pub use crate::search::subsequence::{search_subsequence, Match};
+    pub use crate::search::suite::Suite;
+}

@@ -1,0 +1,306 @@
+//! `repro` — the Layer-3 leader binary: similarity search, the serving
+//! loop, the paper's experiment grid, data generation, and artifact
+//! introspection. Run `repro help` for usage.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use repro::bench_support::grid::{experiments, run_experiment, Workload};
+use repro::bench_support::report::{fig5_table, pruning_table, speedup_summary};
+use repro::config::Config;
+use repro::coordinator::{QueryRequest, Service, ServiceConfig};
+use repro::data::{extract_queries, Dataset};
+use repro::metrics::{Counters, Timer};
+use repro::runtime::XlaEngine;
+use repro::search::subsequence::{search_subsequence, window_cells};
+use repro::search::suite::Suite;
+use repro::util::cli::Args;
+
+const USAGE: &str = "\
+repro — EAPrunedDTW similarity search (Herrmann & Webb 2020 reproduction)
+
+USAGE: repro <command> [options]
+
+COMMANDS
+  search      locate a query in a reference stream
+              --dataset <name|file> --qlen N --ratio R --suite S
+              [--ref-len N] [--seed N] [--config F]
+  serve       run the search service over synthetic queries and report
+              latency/throughput
+              --dataset <name> [--queries N] [--shards N] [--suite S]
+              [--ref-len N] [--artifacts DIR]
+  bench-suite run the paper's experiment grid and print Fig 5a/5b + tables
+              [--axis length|window|all] [--ref-len N] [--datasets a,b]
+              [--qlens 128,256] [--ratios 0.1,0.2] [--queries N]
+              [--suites ucr,usp,mon,nolb]
+  gen-data    write a synthetic dataset to disk
+              --dataset <name> --out FILE [--len N] [--seed N]
+  info        check artifacts + runtime (loads the PJRT engine)
+              [--artifacts DIR]
+  help        this text
+
+Suites: ucr | usp | mon | nolb | xla     Datasets: FoG Soccer PAMAP2 ECG REFIT PPG";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
+    let r = match cmd.as_str() {
+        "search" => cmd_search(&args),
+        "serve" => cmd_serve(&args),
+        "bench-suite" => cmd_bench_suite(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}\n{USAGE}")),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_reference(name: &str, ref_len: usize, seed: u64) -> Result<Vec<f64>> {
+    match Dataset::from_name(name) {
+        Some(d) => Ok(d.generate(ref_len, seed)),
+        None => {
+            let p = Path::new(name);
+            if p.exists() {
+                repro::data::loader::read_series(p)
+            } else {
+                bail!("{name:?} is neither a dataset name nor a file")
+            }
+        }
+    }
+}
+
+fn parse_suite(s: &str) -> Result<Suite> {
+    Suite::from_name(s).ok_or_else(|| anyhow!("unknown suite {s:?} (ucr|usp|mon|nolb|xla)"))
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let cfg = Config::load_or_default(args.get("config").map(Path::new))?;
+    let dataset = args.get_or("dataset", &cfg.search.dataset).to_string();
+    let qlen = args.usize_or("qlen", cfg.search.query_len)?;
+    let ratio = args.f64_or("ratio", cfg.search.window_ratio)?;
+    let suite = parse_suite(args.get_or("suite", &cfg.search.suite))?;
+    let ref_len = args.usize_or("ref-len", cfg.grid.ref_len)?;
+    let seed = args.u64_or("seed", cfg.grid.seed)?;
+
+    let reference = load_reference(&dataset, ref_len, seed)?;
+    let query = extract_queries(&reference, 1, qlen, cfg.grid.query_noise, seed ^ 1).remove(0);
+    let w = window_cells(qlen, ratio);
+    println!(
+        "searching {dataset} (len {}) for a {qlen}-point query, w={w} ({ratio}), suite {}",
+        reference.len(),
+        suite.name()
+    );
+    let mut counters = Counters::new();
+    let t = Timer::start();
+    let m = if suite == Suite::UcrMonXla {
+        let dir = PathBuf::from(args.get_or("artifacts", &cfg.serve.artifacts_dir));
+        let mut engine = XlaEngine::open(&dir)?;
+        repro::coordinator::batcher::xla_search(&mut engine, &reference, &query, w, &mut counters)?
+    } else {
+        search_subsequence(&reference, &query, w, suite, &mut counters)
+    };
+    let secs = t.elapsed_secs();
+    println!("best match: pos={} dist={:.6} in {:.3}s", m.pos, m.dist, secs);
+    let (kim, eq, ec, xla, dtw) = counters.prune_fractions();
+    println!(
+        "candidates={} | pruned: kim {:.1}% keoghEQ {:.1}% keoghEC {:.1}% xla {:.1}% | \
+         dtw reached {:.1}% ({} calls, {} abandoned)",
+        counters.candidates,
+        kim * 100.0,
+        eq * 100.0,
+        ec * 100.0,
+        xla * 100.0,
+        dtw * 100.0,
+        counters.dtw_calls,
+        counters.dtw_abandons
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = Config::load_or_default(args.get("config").map(Path::new))?;
+    let dataset = args.get_or("dataset", &cfg.search.dataset).to_string();
+    let ref_len = args.usize_or("ref-len", cfg.grid.ref_len)?;
+    let seed = args.u64_or("seed", cfg.grid.seed)?;
+    let shards = args.usize_or("shards", cfg.serve.shards)?;
+    let n_queries = args.usize_or("queries", 20)?;
+    let qlen = args.usize_or("qlen", cfg.search.query_len)?;
+    let ratio = args.f64_or("ratio", cfg.search.window_ratio)?;
+    let suite = parse_suite(args.get_or("suite", &cfg.search.suite))?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", &cfg.serve.artifacts_dir));
+
+    let reference = load_reference(&dataset, ref_len, seed)?;
+    let queries = extract_queries(&reference, n_queries, qlen, cfg.grid.query_noise, seed ^ 2);
+    let svc = Service::new(
+        reference,
+        &ServiceConfig {
+            shards,
+            artifacts_dir: artifacts.join("manifest.json").exists().then_some(artifacts),
+            ..Default::default()
+        },
+    )?;
+    println!(
+        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}) over {shards} shards",
+        suite.name()
+    );
+    let mut latencies = Vec::new();
+    let t = Timer::start();
+    for (i, q) in queries.into_iter().enumerate() {
+        let resp = svc.submit(&QueryRequest {
+            id: i as u64,
+            query: q,
+            window_ratio: ratio,
+            suite,
+        })?;
+        println!("{}", resp.to_json());
+        latencies.push(resp.latency_ms);
+    }
+    let wall = t.elapsed_secs();
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
+    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
+    println!(
+        "served {} queries in {:.3}s — throughput {:.2} q/s, latency p50 {:.1}ms p95 {:.1}ms max {:.1}ms",
+        latencies.len(),
+        wall,
+        latencies.len() as f64 / wall,
+        pct(0.5),
+        pct(0.95),
+        latencies[latencies.len() - 1],
+    );
+    Ok(())
+}
+
+fn parse_list<T: std::str::FromStr>(s: &str) -> Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    s.split(',')
+        .map(|x| x.trim().parse().map_err(|e| anyhow!("bad list item {x:?}: {e}")))
+        .collect()
+}
+
+fn cmd_bench_suite(args: &Args) -> Result<()> {
+    let cfg = Config::load_or_default(args.get("config").map(Path::new))?;
+    let mut grid = cfg.grid.clone();
+    grid.ref_len = args.usize_or("ref-len", grid.ref_len)?;
+    grid.queries = args.usize_or("queries", grid.queries)?;
+    if let Some(q) = args.get("qlens") {
+        grid.query_lengths = parse_list(q)?;
+    }
+    if let Some(r) = args.get("ratios") {
+        grid.window_ratios = parse_list(r)?;
+    }
+    let datasets: Vec<Dataset> = match args.get("datasets") {
+        Some(list) => list
+            .split(',')
+            .map(|d| Dataset::from_name(d.trim()).ok_or_else(|| anyhow!("unknown dataset {d:?}")))
+            .collect::<Result<_>>()?,
+        None => Dataset::ALL.to_vec(),
+    };
+    let suites: Vec<Suite> = match args.get("suites") {
+        Some(list) => list.split(',').map(parse_suite).collect::<Result<_>>()?,
+        None => Suite::ALL.to_vec(),
+    };
+    let axis = args.get_or("axis", "all").to_string();
+
+    eprintln!(
+        "grid: {} datasets × {} queries × {:?} lengths × {:?} ratios × {} suites (ref_len {})",
+        datasets.len(),
+        grid.queries,
+        grid.query_lengths,
+        grid.window_ratios,
+        suites.len(),
+        grid.ref_len
+    );
+    let mut results = Vec::new();
+    for &d in &datasets {
+        eprintln!("building workload {}...", d.name());
+        let w = Workload::build(d, &grid);
+        for exp in experiments(&grid, &[d]) {
+            for &s in &suites {
+                let r = run_experiment(&w, &exp, s);
+                eprintln!(
+                    "  {} q{} len{} w{:.1} {}: {:.3}s (dtw {:.1}%)",
+                    d.name(),
+                    exp.query_idx,
+                    exp.qlen,
+                    exp.ratio,
+                    s.name(),
+                    r.seconds,
+                    r.counters.prune_fractions().4 * 100.0
+                );
+                results.push(r);
+            }
+        }
+    }
+    if axis == "length" || axis == "all" {
+        println!(
+            "{}",
+            fig5_table(&results, &suites, &grid.query_lengths, "query length", |r| r.exp.qlen)
+        );
+    }
+    if axis == "window" || axis == "all" {
+        let xs: Vec<usize> =
+            grid.window_ratios.iter().map(|r| (r * 100.0).round() as usize).collect();
+        println!(
+            "{}",
+            fig5_table(&results, &suites, &xs, "window ratio %", |r| {
+                (r.exp.ratio * 100.0).round() as usize
+            })
+        );
+    }
+    println!("\n== §5 totals & speedups ==\n{}", speedup_summary(&results));
+    println!("\n== Fig 5 inset: cascade pruning ==\n{}", pruning_table(&results));
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let name = args.get("dataset").ok_or_else(|| anyhow!("--dataset required"))?;
+    let out = args.get("out").ok_or_else(|| anyhow!("--out required"))?;
+    let len = args.usize_or("len", 200_000)?;
+    let seed = args.u64_or("seed", 0xDA7A5E7)?;
+    let d = Dataset::from_name(name).ok_or_else(|| anyhow!("unknown dataset {name:?}"))?;
+    let series = d.generate(len, seed);
+    repro::data::loader::write_series(Path::new(out), &series)?;
+    println!("wrote {} points of {} to {out}", series.len(), d.name());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    println!("artifacts dir: {}", dir.display());
+    let mut engine = XlaEngine::open(&dir)?;
+    let m = engine.manifest().clone();
+    println!("batch={} lengths={:?} artifacts={}", m.batch, m.lengths, m.artifacts.len());
+    for a in &m.artifacts {
+        println!("  {} ({} bytes)", a.name, a.bytes);
+    }
+    // smoke: run the smallest prefilter
+    let n = *m.lengths.iter().min().ok_or_else(|| anyhow!("empty manifest"))?;
+    let u = vec![1.0f32; n];
+    let l = vec![-1.0f32; n];
+    let raw = vec![0.5f32; m.batch * n];
+    let t = Timer::start();
+    let out = engine.prefilter(n, &u, &l, &raw)?;
+    println!(
+        "smoke prefilter n={n}: ok ({} bounds, all-zero={}, {:.1}ms incl. compile)",
+        out.len(),
+        out.iter().all(|&v| v == 0.0),
+        t.elapsed_secs() * 1e3
+    );
+    Ok(())
+}

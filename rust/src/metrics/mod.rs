@@ -1,0 +1,124 @@
+//! Search instrumentation (system S14): what the paper's Fig. 5 insets
+//! report — how many candidates each cascade stage prunes and how many
+//! reach the DTW core — plus wall-clock timers and DP cell counts for the
+//! ablations.
+
+use std::time::{Duration, Instant};
+
+/// Per-search counters. Plain `u64`s mutated on the hot path (no atomics);
+/// the coordinator aggregates per-worker copies with [`Counters::merge`].
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Counters {
+    /// candidate windows examined
+    pub candidates: u64,
+    /// pruned by LB_KimFL
+    pub lb_kim_prunes: u64,
+    /// pruned by LB_Keogh (query envelope)
+    pub lb_keogh_eq_prunes: u64,
+    /// pruned by LB_Keogh (data envelope)
+    pub lb_keogh_ec_prunes: u64,
+    /// pruned by the batched XLA prefilter
+    pub xla_prunes: u64,
+    /// DTW core invocations (cascade survivors)
+    pub dtw_calls: u64,
+    /// DTW calls that early abandoned
+    pub dtw_abandons: u64,
+    /// best-so-far improvements
+    pub ub_updates: u64,
+    /// DP cells computed (only filled by counted distance variants)
+    pub dp_cells: u64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Proportion of candidates each stage removed, as fractions of the
+    /// total: (kim, keogh_eq, keogh_ec, xla, dtw_reached) — the Fig. 5
+    /// inset row.
+    pub fn prune_fractions(&self) -> (f64, f64, f64, f64, f64) {
+        let t = self.candidates.max(1) as f64;
+        (
+            self.lb_kim_prunes as f64 / t,
+            self.lb_keogh_eq_prunes as f64 / t,
+            self.lb_keogh_ec_prunes as f64 / t,
+            self.xla_prunes as f64 / t,
+            self.dtw_calls as f64 / t,
+        )
+    }
+
+    /// Aggregate another worker's counters into this one.
+    pub fn merge(&mut self, o: &Counters) {
+        self.candidates += o.candidates;
+        self.lb_kim_prunes += o.lb_kim_prunes;
+        self.lb_keogh_eq_prunes += o.lb_keogh_eq_prunes;
+        self.lb_keogh_ec_prunes += o.lb_keogh_ec_prunes;
+        self.xla_prunes += o.xla_prunes;
+        self.dtw_calls += o.dtw_calls;
+        self.dtw_abandons += o.dtw_abandons;
+        self.ub_updates += o.ub_updates;
+        self.dp_cells += o.dp_cells;
+    }
+}
+
+/// Simple scope timer for the bench reporters.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sum_to_one_when_exhaustive() {
+        let c = Counters {
+            candidates: 100,
+            lb_kim_prunes: 50,
+            lb_keogh_eq_prunes: 30,
+            lb_keogh_ec_prunes: 10,
+            xla_prunes: 0,
+            dtw_calls: 10,
+            ..Default::default()
+        };
+        let (a, b, d, x, e) = c.prune_fractions();
+        assert!((a + b + d + x + e - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Counters { candidates: 3, dtw_calls: 1, ..Default::default() };
+        let b = Counters { candidates: 5, dtw_calls: 2, dp_cells: 7, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.candidates, 8);
+        assert_eq!(a.dtw_calls, 3);
+        assert_eq!(a.dp_cells, 7);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::hint::black_box((0..1000).sum::<u64>());
+        assert!(t.elapsed_secs() >= 0.0);
+    }
+}

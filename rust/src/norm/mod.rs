@@ -1,0 +1,7 @@
+//! Z-normalisation — batch and streaming (system S9).
+//!
+//! Every UCR-style comparison happens between z-normalised windows; over a
+//! long stream the per-window stats are maintained incrementally with
+//! periodic refreshes against floating-point drift.
+
+pub mod znorm;

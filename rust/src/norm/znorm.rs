@@ -1,0 +1,185 @@
+//! Z-normalisation primitives and the streaming window statistics of the
+//! UCR subsequence search.
+
+/// Windows with std below this are treated as flat: all points normalise
+/// to 0 (matches `python/compile/kernels/ref.py::STD_EPS`).
+pub const STD_EPS: f64 = 1e-8;
+
+/// Z-normalise one point given window stats.
+#[inline(always)]
+pub fn znorm_point(x: f64, mean: f64, std: f64) -> f64 {
+    if std > STD_EPS {
+        (x - mean) / std
+    } else {
+        0.0
+    }
+}
+
+/// Mean and std (UCR running-stats formula `sqrt(E[x^2]-E[x]^2)`).
+pub fn stats(s: &[f64]) -> (f64, f64) {
+    if s.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = s.len() as f64;
+    let mut ex = 0.0;
+    let mut ex2 = 0.0;
+    for &x in s {
+        ex += x;
+        ex2 += x * x;
+    }
+    let mean = ex / n;
+    let std = (ex2 / n - mean * mean).max(0.0).sqrt();
+    (mean, std)
+}
+
+/// Z-normalise a whole series into a fresh vector.
+pub fn znorm(s: &[f64]) -> Vec<f64> {
+    let (mean, std) = stats(s);
+    s.iter().map(|&x| znorm_point(x, mean, std)).collect()
+}
+
+/// Z-normalise into a caller-provided buffer.
+pub fn znorm_into(s: &[f64], out: &mut Vec<f64>) {
+    let (mean, std) = stats(s);
+    out.clear();
+    out.extend(s.iter().map(|&x| znorm_point(x, mean, std)));
+}
+
+/// Streaming statistics of a sliding window over a reference stream:
+/// O(1) advance via running sums, with a periodic full refresh to bound
+/// floating-point drift (the UCR suite resets per chunk; we refresh every
+/// [`WindowStats::REFRESH_EVERY`] advances).
+#[derive(Debug, Clone)]
+pub struct WindowStats<'a> {
+    s: &'a [f64],
+    n: usize,
+    pos: usize,
+    ex: f64,
+    ex2: f64,
+    since_refresh: u32,
+}
+
+impl<'a> WindowStats<'a> {
+    pub const REFRESH_EVERY: u32 = 1 << 17;
+
+    /// Stats of windows of length `n` over `s`, starting at position 0.
+    /// Panics if `s.len() < n` or `n == 0`.
+    pub fn new(s: &'a [f64], n: usize) -> Self {
+        assert!(n > 0 && s.len() >= n, "stream shorter than window");
+        let mut ws = Self { s, n, pos: 0, ex: 0.0, ex2: 0.0, since_refresh: 0 };
+        ws.refresh();
+        ws
+    }
+
+    /// Current window start position.
+    #[inline]
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Current window as a slice.
+    #[inline]
+    pub fn window(&self) -> &'a [f64] {
+        &self.s[self.pos..self.pos + self.n]
+    }
+
+    /// (mean, std) of the current window.
+    #[inline]
+    pub fn mean_std(&self) -> (f64, f64) {
+        let n = self.n as f64;
+        let mean = self.ex / n;
+        let std = (self.ex2 / n - mean * mean).max(0.0).sqrt();
+        (mean, std)
+    }
+
+    /// Advance the window one position; `false` when the stream is
+    /// exhausted (the window would run off the end).
+    #[inline]
+    pub fn advance(&mut self) -> bool {
+        if self.pos + self.n >= self.s.len() {
+            return false;
+        }
+        let out = self.s[self.pos];
+        let inc = self.s[self.pos + self.n];
+        self.ex += inc - out;
+        self.ex2 += inc * inc - out * out;
+        self.pos += 1;
+        self.since_refresh += 1;
+        if self.since_refresh >= Self::REFRESH_EVERY {
+            self.refresh();
+        }
+        true
+    }
+
+    /// Recompute the sums exactly from the window.
+    pub fn refresh(&mut self) {
+        let (mut ex, mut ex2) = (0.0, 0.0);
+        for &x in self.window() {
+            ex += x;
+            ex2 += x * x;
+        }
+        self.ex = ex;
+        self.ex2 = ex2;
+        self.since_refresh = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn znorm_unit_stats() {
+        let s = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let z = znorm(&s);
+        let (m, d) = stats(&z);
+        assert!(m.abs() < 1e-12);
+        assert!((d - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flat_window_normalises_to_zero() {
+        let z = znorm(&[4.2; 8]);
+        assert!(z.iter().all(|&v| v == 0.0));
+        assert_eq!(znorm_point(4.2, 4.2, 0.0), 0.0);
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        let mut x = 3u64;
+        let s: Vec<f64> = (0..500)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                (x as f64 / u64::MAX as f64) * 10.0 - 5.0
+            })
+            .collect();
+        let n = 32;
+        let mut ws = WindowStats::new(&s, n);
+        loop {
+            let (m1, d1) = ws.mean_std();
+            let (m2, d2) = stats(ws.window());
+            assert!((m1 - m2).abs() < 1e-8, "pos={}", ws.pos());
+            assert!((d1 - d2).abs() < 1e-8, "pos={}", ws.pos());
+            if !ws.advance() {
+                break;
+            }
+        }
+        assert_eq!(ws.pos(), s.len() - n);
+    }
+
+    #[test]
+    fn znorm_into_reuses_buffer() {
+        let mut buf = vec![9.0; 3];
+        znorm_into(&[1.0, 2.0, 3.0], &mut buf);
+        assert_eq!(buf.len(), 3);
+        assert!(buf[0] < 0.0 && buf[2] > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn window_longer_than_stream_panics() {
+        WindowStats::new(&[1.0, 2.0], 3);
+    }
+}

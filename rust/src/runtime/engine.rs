@@ -1,0 +1,173 @@
+//! The XLA execution engine: one PJRT CPU client, one compiled executable
+//! per artifact (compiled on first use, cached for the life of the
+//! process), typed entry points for the graph families the coordinator
+//! uses.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::Manifest;
+
+fn lit_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(shape)
+        .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
+}
+
+fn lit_i32(v: i32) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+/// PJRT client + executable cache over one artifacts directory.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl std::fmt::Debug for XlaEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaEngine")
+            .field("dir", &self.dir)
+            .field("batch", &self.manifest.batch)
+            .field("compiled", &self.exes.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl XlaEngine {
+    /// Open the artifacts directory (reads `manifest.json`; compiles
+    /// nothing yet).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, manifest, dir: dir.to_path_buf(), exes: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Panel (batch) size all artifacts expect.
+    pub fn batch(&self) -> usize {
+        self.manifest.batch
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let entry = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(&self.exes[name])
+    }
+
+    /// Execute an artifact; returns the flattened f32 payload of the
+    /// 1-tuple result (the AOT bridge lowers with `return_tuple=True`).
+    fn run(&mut self, name: &str, lits: &[xla::Literal]) -> Result<Vec<f32>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("read result of {name}: {e:?}"))
+    }
+
+    /// Batched z-norm + LB_Keogh prefilter: raw candidate panel
+    /// `(batch, n)` against query envelopes `u`/`l` (n each) → `batch`
+    /// lower bounds.
+    pub fn prefilter(&mut self, n: usize, u: &[f32], l: &[f32], raw: &[f32]) -> Result<Vec<f32>> {
+        let b = self.batch();
+        anyhow::ensure!(u.len() == n && l.len() == n, "envelope length mismatch");
+        anyhow::ensure!(raw.len() == b * n, "panel must be batch*n");
+        let name = self.manifest.graph_name("prefilter", n);
+        let lits = [
+            lit_f32(u, &[n as i64])?,
+            lit_f32(l, &[n as i64])?,
+            lit_f32(raw, &[b as i64, n as i64])?,
+        ];
+        self.run(&name, &lits)
+    }
+
+    /// Batched z-norm: raw panel `(batch, n)` → z-normalised panel.
+    pub fn znorm(&mut self, n: usize, raw: &[f32]) -> Result<Vec<f32>> {
+        let b = self.batch();
+        anyhow::ensure!(raw.len() == b * n, "panel must be batch*n");
+        let name = self.manifest.graph_name("znorm", n);
+        let lits = [lit_f32(raw, &[b as i64, n as i64])?];
+        self.run(&name, &lits)
+    }
+
+    /// Batched LB_Keogh on an already-normalised panel.
+    pub fn lb_keogh(&mut self, n: usize, u: &[f32], l: &[f32], z: &[f32]) -> Result<Vec<f32>> {
+        let b = self.batch();
+        anyhow::ensure!(z.len() == b * n, "panel must be batch*n");
+        let name = self.manifest.graph_name("lb_keogh", n);
+        let lits = [
+            lit_f32(u, &[n as i64])?,
+            lit_f32(l, &[n as i64])?,
+            lit_f32(z, &[b as i64, n as i64])?,
+        ];
+        self.run(&name, &lits)
+    }
+
+    /// Batched exact wavefront DTW: z-normalised query `q` (n), window `w`
+    /// (cells), z-normalised panel `(batch, n)` → `batch` exact distances.
+    pub fn batched_dtw(&mut self, n: usize, q: &[f32], w: usize, z: &[f32]) -> Result<Vec<f32>> {
+        let b = self.batch();
+        anyhow::ensure!(q.len() == n, "query length mismatch");
+        anyhow::ensure!(z.len() == b * n, "panel must be batch*n");
+        let name = self.manifest.graph_name("dtw", n);
+        let lits = [
+            lit_f32(q, &[n as i64])?,
+            lit_i32(w as i32),
+            lit_f32(z, &[b as i64, n as i64])?,
+        ];
+        self.run(&name, &lits)
+    }
+
+    /// Fused prefilter + exact DTW on a raw panel: returns
+    /// (lower bounds, exact distances), each `batch` long (ablation A3).
+    pub fn prefilter_verify(
+        &mut self,
+        n: usize,
+        q: &[f32],
+        u: &[f32],
+        l: &[f32],
+        w: usize,
+        raw: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let b = self.batch();
+        anyhow::ensure!(raw.len() == b * n, "panel must be batch*n");
+        let name = self.manifest.graph_name("prefilter_verify", n);
+        let lits = [
+            lit_f32(q, &[n as i64])?,
+            lit_f32(u, &[n as i64])?,
+            lit_f32(l, &[n as i64])?,
+            lit_i32(w as i32),
+            lit_f32(raw, &[b as i64, n as i64])?,
+        ];
+        let flat = self.run(&name, &lits)?;
+        anyhow::ensure!(flat.len() == 2 * b, "unexpected output size {}", flat.len());
+        Ok((flat[..b].to_vec(), flat[b..].to_vec()))
+    }
+}

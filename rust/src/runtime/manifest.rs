@@ -1,0 +1,154 @@
+//! `artifacts/manifest.json` — the contract between the AOT pipeline and
+//! the runtime: which graphs exist, at which shapes, in which files.
+//! Parsed with the in-tree JSON reader (serde_json is unavailable offline).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// One lowered graph.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub sha256: String,
+    pub bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// The full manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// panel (batch) size every artifact was lowered with
+    pub batch: usize,
+    /// query lengths covered
+    pub lengths: Vec<usize>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let field = |k: &str| v.get(k).ok_or_else(|| anyhow!("manifest missing {k:?}"));
+        let batch = field("batch")?.as_usize().ok_or_else(|| anyhow!("batch not an int"))?;
+        let lengths = field("lengths")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("lengths not an array"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad length")))
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = Vec::new();
+        for a in field("artifacts")?.as_arr().ok_or_else(|| anyhow!("artifacts not an array"))? {
+            let s = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing {k:?}"))?
+                    .to_string())
+            };
+            let mut inputs = Vec::new();
+            for i in a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact missing inputs"))?
+            {
+                let shape = i
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("input missing shape"))?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = i
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("float32")
+                    .to_string();
+                inputs.push(InputSpec { shape, dtype });
+            }
+            artifacts.push(ArtifactEntry {
+                name: s("name")?,
+                file: s("file")?,
+                inputs,
+                sha256: a.get("sha256").and_then(Json::as_str).unwrap_or("").to_string(),
+                bytes: a.get("bytes").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+        Ok(Self { batch, lengths, artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let p = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&p).map_err(|e| {
+            anyhow!(
+                "read {}: {e} — run `make artifacts` first (python AOT pass)",
+                p.display()
+            )
+        })?;
+        Self::parse(&text).map_err(|e| anyhow!("{}: {e}", p.display()))
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Artifact name for a graph family at a query length, e.g.
+    /// `prefilter_b64_n256`.
+    pub fn graph_name(&self, family: &str, n: usize) -> String {
+        format!("{family}_b{}_n{n}", self.batch)
+    }
+
+    /// Is a query length directly supported?
+    pub fn supports_length(&self, n: usize) -> bool {
+        self.lengths.contains(&n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "batch": 8, "lengths": [16, 32],
+        "artifacts": [
+            {"name": "prefilter_b8_n16", "file": "prefilter_b8_n16.hlo.txt",
+             "sha256": "ab", "bytes": 120,
+             "inputs": [{"shape": [16], "dtype": "float32"},
+                        {"shape": [16], "dtype": "float32"},
+                        {"shape": [8, 16], "dtype": "float32"}]}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_finds() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.lengths, vec![16, 32]);
+        let a = m.find("prefilter_b8_n16").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[2].shape, vec![8, 16]);
+        assert!(m.find("nope").is_none());
+        assert_eq!(m.graph_name("prefilter", 16), "prefilter_b8_n16");
+        assert!(m.supports_length(32));
+        assert!(!m.supports_length(64));
+    }
+
+    #[test]
+    fn missing_dir_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/no/such/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"batch": 1, "lengths": [], "artifacts": [{}]}"#).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime (system S12): loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO **text** — see the aot docstring for why
+//! not protos) and executes them from the Rust hot path. Python is never
+//! involved at runtime.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo/: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`, with
+//! tuple outputs unwrapped via `to_tuple1`.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::XlaEngine;
+pub use manifest::{ArtifactEntry, Manifest};

@@ -1,0 +1,7 @@
+//! The similarity-search engine (system S10): the UCR-style subsequence
+//! search loop, the four suite variants of the paper's evaluation (plus our
+//! XLA-prefilter variant), and whole-series NN1 search.
+
+pub mod nn1;
+pub mod subsequence;
+pub mod suite;

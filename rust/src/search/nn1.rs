@@ -1,0 +1,173 @@
+//! Whole-series NN1 search / classification — the paper's motivating
+//! scenario (§1: NN1-DTW is embedded in EE, Proximity Forest, TS-CHIEF;
+//! §6: EAPrunedDTW makes those ensembles affordable again).
+//!
+//! Candidates are visited in ascending LB_Keogh order (best-first), so the
+//! upper bound tightens as fast as possible and EAPrunedDTW abandons the
+//! rest almost immediately.
+
+use crate::bounds::envelope::envelopes;
+use crate::bounds::lb_keogh::{reorder, sort_order};
+use crate::distances::cost::sqed;
+use crate::distances::DtwWorkspace;
+use crate::metrics::Counters;
+use crate::search::suite::Suite;
+
+/// Result of an NN1 search.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Nn1Result {
+    /// index of the nearest candidate
+    pub index: usize,
+    /// its windowed DTW distance
+    pub dist: f64,
+}
+
+/// LB_Keogh of pre-normalised `c` against envelopes of the query
+/// (plain order, no candidate stats — whole-series setting).
+fn lb_keogh_plain(uo: &[f64], lo: &[f64], order: &[usize], c: &[f64]) -> f64 {
+    let mut lb = 0.0;
+    for (k, &i) in order.iter().enumerate() {
+        let x = c[i];
+        if x > uo[k] {
+            lb += sqed(x, uo[k]);
+        } else if x < lo[k] {
+            lb += sqed(x, lo[k]);
+        }
+    }
+    lb
+}
+
+/// Find the nearest neighbour of `query` among `candidates` under windowed
+/// DTW (all series assumed pre-normalised and equal length). `suite` picks
+/// the DTW core, so the ablation benches can compare cores on NN1 too.
+pub fn nn1_search(
+    query: &[f64],
+    candidates: &[Vec<f64>],
+    w: usize,
+    suite: Suite,
+    counters: &mut Counters,
+) -> Option<Nn1Result> {
+    if candidates.is_empty() {
+        return None;
+    }
+    let (u, l) = envelopes(query, w);
+    let order = sort_order(query);
+    let uo = reorder(&u, &order);
+    let lo = reorder(&l, &order);
+    // best-first: ascending lower bound
+    let mut idx: Vec<(usize, f64)> = candidates
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (i, lb_keogh_plain(&uo, &lo, &order, c)))
+        .collect();
+    idx.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("no NaN bounds"));
+
+    let mut ws = DtwWorkspace::with_capacity(query.len());
+    let mut best = Nn1Result { index: idx[0].0, dist: f64::INFINITY };
+    for &(i, lb) in &idx {
+        counters.candidates += 1;
+        if lb > best.dist {
+            counters.lb_keogh_eq_prunes += 1;
+            continue;
+        }
+        counters.dtw_calls += 1;
+        let d = suite.dtw(query, &candidates[i], w, best.dist, None, &mut ws);
+        if d.is_infinite() {
+            counters.dtw_abandons += 1;
+        } else if d < best.dist {
+            best = Nn1Result { index: i, dist: d };
+            counters.ub_updates += 1;
+        }
+    }
+    Some(best)
+}
+
+/// NN1 classification: label of the nearest training series.
+pub fn nn1_classify(
+    query: &[f64],
+    train: &[(usize, Vec<f64>)],
+    w: usize,
+    suite: Suite,
+    counters: &mut Counters,
+) -> Option<usize> {
+    let series: Vec<Vec<f64>> = train.iter().map(|(_, s)| s.clone()).collect();
+    nn1_search(query, &series, w, suite, counters).map(|r| train[r.index].0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::dtw::cdtw;
+    use crate::norm::znorm::znorm;
+
+    fn xorshift(seed: u64) -> impl FnMut() -> f64 {
+        let mut x = seed;
+        move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 2.0 - 1.0
+        }
+    }
+
+    fn mk_candidates(n: usize, len: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rnd = xorshift(seed);
+        (0..n)
+            .map(|_| znorm(&(0..len).map(|_| rnd()).collect::<Vec<_>>()))
+            .collect()
+    }
+
+    #[test]
+    fn matches_brute_force_for_all_suites() {
+        let q = znorm(&mk_candidates(1, 64, 1)[0]);
+        let cands = mk_candidates(20, 64, 2);
+        for w in [3usize, 16] {
+            // brute force
+            let mut want = (0usize, f64::INFINITY);
+            for (i, c) in cands.iter().enumerate() {
+                let d = cdtw(&q, c, w);
+                if d < want.1 {
+                    want = (i, d);
+                }
+            }
+            for suite in Suite::ALL {
+                let mut c = Counters::new();
+                let got = nn1_search(&q, &cands, w, suite, &mut c).unwrap();
+                assert_eq!(got.index, want.0, "{} w={w}", suite.name());
+                assert!((got.dist - want.1).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn prunes_or_abandons_most_candidates() {
+        let q = znorm(&mk_candidates(1, 128, 5)[0]);
+        let cands = mk_candidates(100, 128, 6);
+        let mut c = Counters::new();
+        nn1_search(&q, &cands, 12, Suite::UcrMon, &mut c).unwrap();
+        assert!(
+            c.lb_keogh_eq_prunes + c.dtw_abandons > 50,
+            "expected heavy pruning: {c:?}"
+        );
+    }
+
+    #[test]
+    fn classify_picks_nearest_label() {
+        // class 0: sine-like; class 1: noise
+        let mut rnd = xorshift(9);
+        let mk_sine = |phase: f64| {
+            znorm(&(0..64).map(|i| (0.2 * i as f64 + phase).sin()).collect::<Vec<_>>())
+        };
+        let mut train: Vec<(usize, Vec<f64>)> = (0..5).map(|k| (0, mk_sine(k as f64))).collect();
+        train.extend((0..5).map(|_| (1usize, znorm(&(0..64).map(|_| rnd()).collect::<Vec<_>>()))));
+        let q = mk_sine(0.5);
+        let mut c = Counters::new();
+        assert_eq!(nn1_classify(&q, &train, 6, Suite::UcrMon, &mut c), Some(0));
+    }
+
+    #[test]
+    fn empty_candidates() {
+        let mut c = Counters::new();
+        assert!(nn1_search(&[1.0, 2.0], &[], 1, Suite::UcrMon, &mut c).is_none());
+    }
+}

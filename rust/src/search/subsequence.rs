@@ -1,0 +1,390 @@
+//! UCR-style subsequence similarity search (paper §5's workload): slide a
+//! z-normalised query over a long reference stream, z-normalising every
+//! candidate window on the fly, and keep the best-so-far match under
+//! windowed DTW, pruning with the suite's cascade along the way.
+//!
+//! The loop is allocation-free per candidate: all buffers live in
+//! [`QueryContext`] and are reused across the scan; stream statistics are
+//! maintained incrementally ([`crate::norm::znorm::WindowStats`]).
+
+use crate::bounds::envelope::envelopes_into;
+use crate::bounds::lb_keogh::{cumulate_bound, lb_keogh_ec, lb_keogh_eq, reorder, sort_order};
+use crate::bounds::lb_kim::lb_kim_hierarchy;
+use crate::distances::DtwWorkspace;
+use crate::metrics::Counters;
+use crate::norm::znorm::{znorm, znorm_point, WindowStats};
+use crate::search::suite::Suite;
+
+/// A located subsequence match.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Match {
+    /// start position in the reference stream
+    pub pos: usize,
+    /// DTW distance (z-normalised, squared-Euclidean cost)
+    pub dist: f64,
+}
+
+/// Convert the paper's window *ratio* (0.1–0.5 in the grid) to cells.
+pub fn window_cells(qlen: usize, ratio: f64) -> usize {
+    (ratio * qlen as f64).floor() as usize
+}
+
+/// Everything derived from one (query, window) pair, reusable across scans
+/// and shards: the z-normalised query, its sorted order, envelopes, and
+/// all work buffers.
+#[derive(Debug, Clone)]
+pub struct QueryContext {
+    /// z-normalised query
+    pub q: Vec<f64>,
+    /// warping window in cells
+    pub w: usize,
+    /// indices of `q` by |value| descending
+    pub order: Vec<usize>,
+    /// q reordered by `order`
+    qo: Vec<f64>,
+    /// query envelopes reordered by `order`
+    uo: Vec<f64>,
+    lo: Vec<f64>,
+    // work buffers
+    cb1: Vec<f64>,
+    cb2: Vec<f64>,
+    cb_cum: Vec<f64>,
+    zbuf: Vec<f64>,
+    ws: DtwWorkspace,
+}
+
+impl QueryContext {
+    pub fn new(query_raw: &[f64], w: usize) -> Self {
+        let q = znorm(query_raw);
+        let n = q.len();
+        let order = sort_order(&q);
+        let mut u = Vec::new();
+        let mut l = Vec::new();
+        envelopes_into(&q, w, &mut u, &mut l);
+        let uo = reorder(&u, &order);
+        let lo = reorder(&l, &order);
+        let qo = reorder(&q, &order);
+        Self {
+            q,
+            w,
+            order,
+            qo,
+            uo,
+            lo,
+            cb1: vec![0.0; n],
+            cb2: vec![0.0; n],
+            cb_cum: vec![0.0; n + 1],
+            zbuf: vec![0.0; n],
+            ws: DtwWorkspace::with_capacity(n),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+/// Envelopes of the *raw* reference stream for one window size — computed
+/// once per (reference, w) and shared by every query and shard (LB_Keogh
+/// EC z-normalises them per candidate on the fly).
+#[derive(Debug, Clone)]
+pub struct DataEnvelopes {
+    pub upper: Vec<f64>,
+    pub lower: Vec<f64>,
+}
+
+impl DataEnvelopes {
+    pub fn new(reference: &[f64], w: usize) -> Self {
+        let mut upper = Vec::new();
+        let mut lower = Vec::new();
+        envelopes_into(reference, w, &mut upper, &mut lower);
+        Self { upper, lower }
+    }
+}
+
+/// Scan candidate start positions `[start, end)` of `reference`, beginning
+/// from upper bound `bsf` (pass `+inf` for a fresh search). Returns the
+/// best match found *below* `bsf` (ties keep the earlier position), or
+/// `None` if nothing beat it. This is the shard worker's inner loop.
+#[allow(clippy::too_many_arguments)]
+pub fn scan(
+    reference: &[f64],
+    start: usize,
+    end: usize,
+    ctx: &mut QueryContext,
+    denv: Option<&DataEnvelopes>,
+    suite: Suite,
+    bsf: f64,
+    counters: &mut Counters,
+) -> Option<Match> {
+    scan_policy(reference, start, end, ctx, denv, suite, suite.cascade(), bsf, counters)
+}
+
+/// [`scan`] with an explicit cascade policy (the ablation entry point:
+/// any DTW core × any subset of the lower-bound cascade).
+#[allow(clippy::too_many_arguments)]
+pub fn scan_policy(
+    reference: &[f64],
+    start: usize,
+    end: usize,
+    ctx: &mut QueryContext,
+    denv: Option<&DataEnvelopes>,
+    suite: Suite,
+    cascade: crate::bounds::cascade::CascadePolicy,
+    mut bsf: f64,
+    counters: &mut Counters,
+) -> Option<Match> {
+    let n = ctx.len();
+    assert!(n > 0, "empty query");
+    assert!(reference.len() >= n, "reference shorter than query");
+    let end = end.min(reference.len() - n + 1);
+    if start >= end {
+        return None;
+    }
+    debug_assert!(
+        !cascade.needs_data_envelopes() || denv.is_some(),
+        "suite {:?} needs data envelopes",
+        suite
+    );
+    let mut best: Option<Match> = None;
+    let mut stats = WindowStats::new(&reference[start..], n);
+    loop {
+        let pos = start + stats.pos();
+        let window = stats.window();
+        let (mean, std) = stats.mean_std();
+        counters.candidates += 1;
+        'candidate: {
+            if cascade.kim {
+                let lb = lb_kim_hierarchy(&ctx.q, window, mean, std, bsf);
+                if lb > bsf {
+                    counters.lb_kim_prunes += 1;
+                    break 'candidate;
+                }
+            }
+            let mut lb1 = 0.0;
+            if cascade.keogh_eq {
+                lb1 = lb_keogh_eq(
+                    &ctx.order, &ctx.uo, &ctx.lo, window, mean, std, bsf, &mut ctx.cb1,
+                );
+                if lb1 > bsf {
+                    counters.lb_keogh_eq_prunes += 1;
+                    break 'candidate;
+                }
+            }
+            let mut lb2 = 0.0;
+            let mut have2 = false;
+            if cascade.keogh_ec {
+                let denv = denv.expect("data envelopes required");
+                lb2 = lb_keogh_ec(
+                    &ctx.order,
+                    &ctx.qo,
+                    &denv.upper[pos..pos + n],
+                    &denv.lower[pos..pos + n],
+                    mean,
+                    std,
+                    bsf,
+                    &mut ctx.cb2,
+                );
+                have2 = true;
+                if lb2 > bsf {
+                    counters.lb_keogh_ec_prunes += 1;
+                    break 'candidate;
+                }
+            }
+            // cumulative tail from the tighter of the two Keogh bounds
+            let cb = if cascade.tighten && (cascade.keogh_eq || have2) {
+                let src = if have2 && lb2 > lb1 { &ctx.cb2 } else { &ctx.cb1 };
+                cumulate_bound(src, &mut ctx.cb_cum);
+                Some(ctx.cb_cum.as_slice())
+            } else {
+                None
+            };
+            // z-normalise the candidate and run the suite's DTW core
+            ctx.zbuf.clear();
+            ctx.zbuf.extend(window.iter().map(|&x| znorm_point(x, mean, std)));
+            counters.dtw_calls += 1;
+            let d = suite.dtw(&ctx.q, &ctx.zbuf, ctx.w, bsf, cb, &mut ctx.ws);
+            if d.is_infinite() {
+                counters.dtw_abandons += 1;
+            } else if d < bsf {
+                bsf = d;
+                best = Some(Match { pos, dist: d });
+                counters.ub_updates += 1;
+            }
+        }
+        if pos + 1 >= end || !stats.advance() {
+            break;
+        }
+    }
+    best
+}
+
+/// Full-stream similarity search: the paper's §5 task. Locates the closest
+/// z-normalised subsequence of `reference` to `query_raw` under windowed
+/// DTW with window `w` (cells).
+pub fn search_subsequence(
+    reference: &[f64],
+    query_raw: &[f64],
+    w: usize,
+    suite: Suite,
+    counters: &mut Counters,
+) -> Match {
+    let mut ctx = QueryContext::new(query_raw, w);
+    let denv = suite
+        .cascade()
+        .needs_data_envelopes()
+        .then(|| DataEnvelopes::new(reference, w));
+    scan(
+        reference,
+        0,
+        reference.len() - ctx.len() + 1,
+        &mut ctx,
+        denv.as_ref(),
+        suite,
+        f64::INFINITY,
+        counters,
+    )
+    .expect("fresh search always finds a best match")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    /// Brute force oracle: exact banded DTW at every position.
+    fn brute(reference: &[f64], query_raw: &[f64], w: usize) -> Match {
+        let q = znorm(query_raw);
+        let n = q.len();
+        let mut best = Match { pos: 0, dist: f64::INFINITY };
+        let mut ws = DtwWorkspace::default();
+        for pos in 0..=(reference.len() - n) {
+            let z = znorm(&reference[pos..pos + n]);
+            let d = crate::distances::dtw::cdtw_ws(&q, &z, w, &mut ws);
+            if d < best.dist {
+                best = Match { pos, dist: d };
+            }
+        }
+        best
+    }
+
+    fn small_workload() -> (Vec<f64>, Vec<f64>) {
+        let r = Dataset::Ecg.generate(3000, 21);
+        let q = crate::data::extract_queries(&r, 1, 128, 0.1, 99).remove(0);
+        (r, q)
+    }
+
+    #[test]
+    fn all_suites_agree_with_brute_force() {
+        let (r, q) = small_workload();
+        for w_ratio in [0.1, 0.3] {
+            let w = window_cells(q.len(), w_ratio);
+            let want = brute(&r, &q, w);
+            for suite in Suite::ALL {
+                let mut c = Counters::new();
+                let got = search_subsequence(&r, &q, w, suite, &mut c);
+                assert_eq!(got.pos, want.pos, "{} w={w}", suite.name());
+                assert!(
+                    (got.dist - want.dist).abs() < 1e-9,
+                    "{} w={w}: {} vs {}",
+                    suite.name(),
+                    got.dist,
+                    want.dist
+                );
+                assert_eq!(c.candidates, (r.len() - q.len() + 1) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn cascade_actually_prunes() {
+        let (r, q) = small_workload();
+        let w = window_cells(q.len(), 0.1);
+        let mut c = Counters::new();
+        search_subsequence(&r, &q, w, Suite::UcrMon, &mut c);
+        assert!(
+            c.lb_kim_prunes + c.lb_keogh_eq_prunes + c.lb_keogh_ec_prunes > 0,
+            "{c:?}"
+        );
+        assert!(c.dtw_calls < c.candidates);
+    }
+
+    #[test]
+    fn nolb_reaches_dtw_everywhere() {
+        let (r, q) = small_workload();
+        let w = window_cells(q.len(), 0.1);
+        let mut c = Counters::new();
+        search_subsequence(&r, &q, w, Suite::UcrMonNoLb, &mut c);
+        assert_eq!(c.dtw_calls, c.candidates, "nolb is 100% DTW (Fig. 5 note)");
+        assert!(c.dtw_abandons > 0, "EAP must abandon most candidates");
+    }
+
+    #[test]
+    fn sharded_scan_equals_full_scan() {
+        let (r, q) = small_workload();
+        let w = window_cells(q.len(), 0.2);
+        let suite = Suite::UcrMon;
+        let mut c = Counters::new();
+        let full = search_subsequence(&r, &q, w, suite, &mut c);
+        // two shards sharing the bsf sequentially
+        let denv = DataEnvelopes::new(&r, w);
+        let mut ctx = QueryContext::new(&q, w);
+        let mid = r.len() / 2;
+        let mut c1 = Counters::new();
+        let m1 = scan(&r, 0, mid, &mut ctx, Some(&denv), suite, f64::INFINITY, &mut c1);
+        let bsf = m1.map_or(f64::INFINITY, |m| m.dist);
+        let m2 = scan(
+            &r,
+            mid,
+            r.len() - q.len() + 1,
+            &mut ctx,
+            Some(&denv),
+            suite,
+            bsf,
+            &mut c1,
+        );
+        let best = match (m1, m2) {
+            (Some(a), Some(b)) => {
+                if b.dist < a.dist {
+                    b
+                } else {
+                    a
+                }
+            }
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (None, None) => panic!("no match"),
+        };
+        assert_eq!(best.pos, full.pos);
+        assert!((best.dist - full.dist).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_cells_matches_paper_grid() {
+        assert_eq!(window_cells(1024, 0.1), 102);
+        assert_eq!(window_cells(128, 0.5), 64);
+        assert_eq!(window_cells(256, 0.2), 51);
+    }
+
+    #[test]
+    fn finds_planted_exact_copy() {
+        // plant the query exactly: distance must be ~0 at that position
+        let mut r = Dataset::Ppg.generate(2000, 77);
+        let q: Vec<f64> = r[700..828].to_vec();
+        // perturb the rest slightly so the plant is unique
+        for (i, v) in r.iter_mut().enumerate() {
+            if !(700..828).contains(&i) {
+                *v += 1e-3 * ((i * 2654435761) % 97) as f64 / 97.0;
+            }
+        }
+        for suite in Suite::ALL {
+            let mut c = Counters::new();
+            let m = search_subsequence(&r, &q, 12, suite, &mut c);
+            assert_eq!(m.pos, 700, "{}", suite.name());
+            assert!(m.dist < 1e-9, "{}: {}", suite.name(), m.dist);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! The suite variants compared in the paper's evaluation (§5). All share
+//! the same search loop, cascade code and normalisation — the paper's §2.4
+//! point that only same-codebase comparisons are fair — and differ *only*
+//! in the DTW core and cascade policy.
+
+use crate::bounds::cascade::CascadePolicy;
+use crate::distances::{dtw_ea::dtw_ea, eap_dtw::eap_cdtw, pruned_dtw::pruned_cdtw, DtwWorkspace};
+
+/// A suite = a DTW core + a cascade policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Suite {
+    /// Original UCR suite: full cascade + row-min early-abandoned DTW.
+    Ucr,
+    /// UCR-USP: full cascade + PrunedDTW.
+    UcrUsp,
+    /// UCR-MON: full cascade + **EAPrunedDTW** (the paper's system).
+    UcrMon,
+    /// UCR-MON without lower bounds: EAPrunedDTW does all the work.
+    UcrMonNoLb,
+    /// Our TPU-shaped variant: batched XLA LB_Keogh prefilter (Layer 1/2)
+    /// + EAPrunedDTW on survivors. Driven by the coordinator.
+    UcrMonXla,
+}
+
+impl Suite {
+    pub const ALL: [Suite; 4] = [Suite::Ucr, Suite::UcrUsp, Suite::UcrMon, Suite::UcrMonNoLb];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Suite::Ucr => "UCR",
+            Suite::UcrUsp => "UCR-USP",
+            Suite::UcrMon => "UCR-MON",
+            Suite::UcrMonNoLb => "UCR-MON-nolb",
+            Suite::UcrMonXla => "UCR-MON-xla",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Suite> {
+        match s.to_ascii_lowercase().as_str() {
+            "ucr" => Some(Suite::Ucr),
+            "ucr-usp" | "usp" => Some(Suite::UcrUsp),
+            "ucr-mon" | "mon" => Some(Suite::UcrMon),
+            "ucr-mon-nolb" | "nolb" => Some(Suite::UcrMonNoLb),
+            "ucr-mon-xla" | "xla" => Some(Suite::UcrMonXla),
+            _ => None,
+        }
+    }
+
+    pub fn cascade(&self) -> CascadePolicy {
+        match self {
+            Suite::UcrMonNoLb => CascadePolicy::none(),
+            // the XLA prefilter replaces the scalar cascade; the
+            // coordinator injects batched bounds instead
+            Suite::UcrMonXla => CascadePolicy::none(),
+            _ => CascadePolicy::full(),
+        }
+    }
+
+    /// Evaluate this suite's DTW core: exact distance when `<= ub`, `+inf`
+    /// once provably above.
+    #[inline]
+    pub fn dtw(
+        &self,
+        q: &[f64],
+        c: &[f64],
+        w: usize,
+        ub: f64,
+        cb: Option<&[f64]>,
+        ws: &mut DtwWorkspace,
+    ) -> f64 {
+        match self {
+            Suite::Ucr => dtw_ea(q, c, w, ub, cb, ws),
+            Suite::UcrUsp => pruned_cdtw(q, c, w, ub, cb, ws),
+            Suite::UcrMon | Suite::UcrMonNoLb | Suite::UcrMonXla => {
+                eap_cdtw(q, c, w, ub, cb, ws)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::dtw::cdtw;
+
+    #[test]
+    fn names_round_trip() {
+        for s in Suite::ALL {
+            assert_eq!(Suite::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Suite::from_name("xla"), Some(Suite::UcrMonXla));
+    }
+
+    #[test]
+    fn all_cores_agree_on_exact_distance() {
+        let a = [3.0, 1.0, 4.0, 4.0, 1.0, 1.0];
+        let b = [1.0, 3.0, 2.0, 1.0, 2.0, 2.0];
+        let mut ws = DtwWorkspace::default();
+        for w in [1usize, 3, 6] {
+            let want = cdtw(&a, &b, w);
+            for s in Suite::ALL {
+                let got = s.dtw(&a, &b, w, f64::INFINITY, None, &mut ws);
+                assert_eq!(got, want, "{} w={w}", s.name());
+                let tie = s.dtw(&a, &b, w, want, None, &mut ws);
+                assert_eq!(tie, want, "{} tie w={w}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn cascade_policies() {
+        assert!(Suite::Ucr.cascade().any());
+        assert!(Suite::UcrUsp.cascade().any());
+        assert!(Suite::UcrMon.cascade().any());
+        assert!(!Suite::UcrMonNoLb.cascade().any());
+        assert!(!Suite::UcrMonXla.cascade().any());
+    }
+}

@@ -1,0 +1,127 @@
+//! Tiny CLI argument helper (clap is unavailable offline): positional
+//! subcommand + `--key value` / `--flag` options with typed getters.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments: one optional subcommand, then options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare -- not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.opts.insert(key.to_string(), it.next().expect("peeked"));
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.command.is_none() && out.positional.is_empty() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("search --dataset ECG --qlen 256 --verbose");
+        assert_eq!(a.command.as_deref(), Some("search"));
+        assert_eq!(a.get("dataset"), Some("ECG"));
+        assert_eq!(a.usize_or("qlen", 0).unwrap(), 256);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --ratio=0.25");
+        assert_eq!(a.f64_or("ratio", 0.0).unwrap(), 0.25);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("n", 42).unwrap(), 42);
+        assert_eq!(a.get_or("suite", "mon"), "mon");
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse("x --n abc");
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("x --fast");
+        assert!(a.flag("fast"));
+    }
+}

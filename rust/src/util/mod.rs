@@ -1,0 +1,8 @@
+//! Small in-tree utilities that stand in for crates unavailable in this
+//! fully-offline build (DESIGN.md §4): a minimal JSON parser/printer (for
+//! the artifact manifest and the serve protocol), a tiny CLI argument
+//! helper, and the property-test harness used by `rust/tests/`.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;

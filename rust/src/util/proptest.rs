@@ -1,0 +1,74 @@
+//! Mini property-test harness (the proptest crate is unavailable offline):
+//! deterministic random-case generation with failure reporting that prints
+//! the seed + case so a failure is reproducible by construction. Used by
+//! `rust/tests/prop_invariants.rs` on the coordinator/distance invariants.
+
+use crate::data::rng::Rng;
+
+/// Run `cases` random test cases. `gen` builds an input from the RNG,
+/// `check` returns `Err(msg)` to fail. On failure, panics with the seed,
+/// case index and the input's `Debug` form.
+pub fn run_prop<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property {name:?} failed (seed={seed}, case={case}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Random series of length in [lo, hi], values ~ N(0,1).
+pub fn arb_series(rng: &mut Rng, lo: usize, hi: usize) -> Vec<f64> {
+    let n = lo + (rng.below((hi - lo + 1) as u64) as usize);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Random window in [0, n].
+pub fn arb_window(rng: &mut Rng, n: usize) -> usize {
+    rng.below((n + 1) as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("trivial", 1, 50, |r| r.uniform(), |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\"")]
+    fn failing_property_reports() {
+        run_prop("fails", 2, 10, |r| r.uniform(), |v| {
+            if *v < 2.0 {
+                Err(format!("{v} < 2"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn arb_series_in_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let s = arb_series(&mut rng, 2, 10);
+            assert!((2..=10).contains(&s.len()));
+        }
+    }
+}

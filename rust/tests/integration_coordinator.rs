@@ -1,0 +1,157 @@
+//! Coordinator integration: the threaded service returns exactly what the
+//! single-threaded search returns, for every suite, under concurrency; the
+//! wire protocol round-trips; shard arithmetic covers every candidate.
+
+use std::sync::Arc;
+
+use repro::coordinator::router::shard_ranges;
+use repro::coordinator::{QueryRequest, QueryResponse, Service, ServiceConfig};
+use repro::data::{extract_queries, Dataset};
+use repro::metrics::Counters;
+use repro::search::subsequence::{search_subsequence, window_cells};
+use repro::search::suite::Suite;
+
+fn service(r: &[f64], shards: usize) -> Service {
+    Service::new(r.to_vec(), &ServiceConfig { shards, ..Default::default() }).unwrap()
+}
+
+#[test]
+fn service_equals_direct_search_for_all_scalar_suites() {
+    let r = Dataset::Refit.generate(6000, 77);
+    let q = extract_queries(&r, 1, 256, 0.1, 78).remove(0);
+    let svc = service(&r, 3);
+    for s in Suite::ALL {
+        let resp = svc
+            .submit(&QueryRequest { id: 0, query: q.clone(), window_ratio: 0.2, suite: s })
+            .unwrap();
+        let mut c = Counters::new();
+        let want = search_subsequence(&r, &q, window_cells(q.len(), 0.2), s, &mut c);
+        assert_eq!(resp.pos, want.pos, "{}", s.name());
+        assert!((resp.dist - want.dist).abs() < 1e-9, "{}", s.name());
+        // sharding never examines more candidates than the direct scan
+        assert_eq!(resp.candidates, c.candidates, "{}", s.name());
+    }
+}
+
+#[test]
+fn shard_count_does_not_change_results() {
+    let r = Dataset::FoG.generate(5000, 5);
+    let q = extract_queries(&r, 1, 128, 0.1, 6).remove(0);
+    let mut results = Vec::new();
+    for shards in [1usize, 2, 5, 9] {
+        let svc = service(&r, shards);
+        let resp = svc
+            .submit(&QueryRequest {
+                id: 0,
+                query: q.clone(),
+                window_ratio: 0.1,
+                suite: Suite::UcrMon,
+            })
+            .unwrap();
+        results.push((shards, resp.pos, resp.dist));
+    }
+    for w in results.windows(2) {
+        assert_eq!(w[0].1, w[1].1, "{:?}", results);
+        assert!((w[0].2 - w[1].2).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn many_concurrent_clients_one_service() {
+    let r = Dataset::Ecg.generate(4000, 21);
+    let svc = Arc::new(service(&r, 2));
+    let qs = extract_queries(&r, 8, 128, 0.1, 22);
+    // compute expected answers serially first
+    let expected: Vec<_> = qs
+        .iter()
+        .map(|q| {
+            let mut c = Counters::new();
+            search_subsequence(&r, q, window_cells(q.len(), 0.1), Suite::UcrMon, &mut c)
+        })
+        .collect();
+    let mut handles = Vec::new();
+    for (i, q) in qs.into_iter().enumerate() {
+        let svc = Arc::clone(&svc);
+        handles.push(std::thread::spawn(move || {
+            (
+                i,
+                svc.submit(&QueryRequest {
+                    id: i as u64,
+                    query: q,
+                    window_ratio: 0.1,
+                    suite: Suite::UcrMon,
+                })
+                .unwrap(),
+            )
+        }));
+    }
+    for h in handles {
+        let (i, resp) = h.join().unwrap();
+        assert_eq!(resp.pos, expected[i].pos, "query {i}");
+        assert!((resp.dist - expected[i].dist).abs() < 1e-9);
+    }
+    assert_eq!(svc.queries_served(), 8);
+    // the busy gauge is decremented *after* the reply is sent — give the
+    // workers a beat to settle
+    for _ in 0..100 {
+        if svc.busy_workers() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(svc.busy_workers(), 0, "workers idle after drain");
+}
+
+#[test]
+fn protocol_survives_the_wire() {
+    let req = QueryRequest {
+        id: 99,
+        query: vec![1.5, -2.0, 0.0, 3.25],
+        window_ratio: 0.35,
+        suite: Suite::UcrMonNoLb,
+    };
+    let line = req.to_json();
+    assert!(!line.contains('\n'), "line-delimited");
+    let back = QueryRequest::from_json(&line).unwrap();
+    assert_eq!(back, req);
+
+    let resp = QueryResponse {
+        id: 99,
+        pos: 1234,
+        dist: 0.5,
+        latency_ms: 3.125,
+        candidates: 1000,
+        pruned: 900,
+        dtw_calls: 100,
+    };
+    assert_eq!(QueryResponse::from_json(&resp.to_json()).unwrap(), resp);
+}
+
+#[test]
+fn shard_ranges_match_candidate_space() {
+    let r = Dataset::Ppg.generate(3000, 9);
+    let qlen = 128;
+    let total = r.len() - qlen + 1;
+    for shards in [1usize, 3, 7] {
+        let ranges = shard_ranges(total, shards);
+        assert_eq!(ranges.first().unwrap().0, 0);
+        assert_eq!(ranges.last().unwrap().1, total);
+        for pair in ranges.windows(2) {
+            assert_eq!(pair[0].1, pair[1].0, "contiguous");
+        }
+    }
+}
+
+#[test]
+fn empty_and_oversized_queries_error_cleanly() {
+    let r = Dataset::Ecg.generate(500, 2);
+    let svc = service(&r, 2);
+    // oversized
+    let req = QueryRequest {
+        id: 1,
+        query: vec![0.0; 1000],
+        window_ratio: 0.1,
+        suite: Suite::UcrMon,
+    };
+    assert!(svc.submit(&req).is_err());
+}

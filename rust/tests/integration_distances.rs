@@ -1,0 +1,124 @@
+//! Cross-module distance integration: every DTW variant and every elastic
+//! extension agrees with its oracle on realistic (dataset-derived) series,
+//! at sizes larger than the unit tests use.
+
+use repro::data::Dataset;
+use repro::distances::dtw::{cdtw, dtw_oracle};
+use repro::distances::dtw_ea::dtw_ea;
+use repro::distances::eap_dtw::{eap_cdtw, eap_cdtw_counted, eap_dtw};
+use repro::distances::elastic::erp::{eap_erp, erp_naive};
+use repro::distances::elastic::msm::{eap_msm, msm_naive};
+use repro::distances::elastic::twe::{eap_twe, twe_naive};
+use repro::distances::elastic::wdtw::{eap_wdtw, wdtw_naive};
+use repro::distances::left_prune::left_pruned_dtw;
+use repro::distances::pruned_dtw::pruned_cdtw;
+use repro::distances::DtwWorkspace;
+use repro::norm::znorm::znorm;
+
+fn pairs() -> Vec<(Vec<f64>, Vec<f64>)> {
+    let mut out = Vec::new();
+    for (i, d) in Dataset::ALL.into_iter().enumerate() {
+        let r = d.generate(4096, 17 + i as u64);
+        out.push((znorm(&r[100..356]), znorm(&r[2000..2256])));
+    }
+    out
+}
+
+#[test]
+fn all_dtw_variants_agree_on_real_series() {
+    let mut ws = DtwWorkspace::default();
+    for (a, b) in pairs() {
+        for w in [12usize, 64, 256] {
+            let want = cdtw(&a, &b, w);
+            let oracle = dtw_oracle(&a, &b, Some(w));
+            assert!((want - oracle).abs() < 1e-9);
+            let ea = dtw_ea(&a, &b, w, f64::INFINITY, None, &mut ws);
+            assert!((ea - want).abs() < 1e-9, "dtw_ea w={w}");
+            let pr = pruned_cdtw(&a, &b, w, f64::INFINITY, None, &mut ws);
+            assert!((pr - want).abs() < 1e-9, "pruned w={w}");
+            let eap = eap_cdtw(&a, &b, w, f64::INFINITY, None, &mut ws);
+            assert!((eap - want).abs() < 1e-9, "eap w={w}");
+            // ties are never abandoned by any variant
+            for (name, got) in [
+                ("dtw_ea", dtw_ea(&a, &b, w, want, None, &mut ws)),
+                ("pruned", pruned_cdtw(&a, &b, w, want, None, &mut ws)),
+                ("eap", eap_cdtw(&a, &b, w, want, None, &mut ws)),
+            ] {
+                assert!((got - want).abs() < 1e-9, "{name} tie w={w}");
+            }
+            // EAP (the paper's algorithm) abandons *reliably* below
+            let below = eap_cdtw(&a, &b, w, want * (1.0 - 1e-9) - 1e-12, None, &mut ws);
+            assert_eq!(below, f64::INFINITY, "eap below w={w}");
+        }
+    }
+}
+
+#[test]
+fn unwindowed_entry_points_match() {
+    let mut ws = DtwWorkspace::default();
+    for (a, b) in pairs().into_iter().take(2) {
+        let want = cdtw(&a, &b, a.len().max(b.len()));
+        assert!((eap_dtw(&a, &b, f64::INFINITY) - want).abs() < 1e-9);
+        assert!((left_pruned_dtw(&a, &b, f64::INFINITY, &mut ws) - want).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn eap_with_tight_ub_computes_fewer_cells() {
+    let mut ws = DtwWorkspace::default();
+    for (a, b) in pairs() {
+        let w = 64;
+        let exact = cdtw(&a, &b, w);
+        let (_, loose) = eap_cdtw_counted(&a, &b, w, f64::INFINITY, None, &mut ws);
+        let (d, tight) = eap_cdtw_counted(&a, &b, w, exact, None, &mut ws);
+        assert!((d - exact).abs() < 1e-9);
+        assert!(tight <= loose);
+    }
+}
+
+#[test]
+fn elastic_extensions_match_oracles_on_real_series() {
+    let mut ws = DtwWorkspace::default();
+    for (a, b) in pairs().into_iter().take(3) {
+        let a = &a[..96];
+        let b = &b[..96];
+        let n = a.len();
+        let cases: Vec<(&str, f64, f64)> = vec![
+            ("erp", erp_naive(a, b, 0.0, n), eap_erp(a, b, 0.0, n, f64::INFINITY, &mut ws)),
+            ("msm", msm_naive(a, b, 0.5, n), eap_msm(a, b, 0.5, n, f64::INFINITY, &mut ws)),
+            (
+                "twe",
+                twe_naive(a, b, 0.001, 1.0, n),
+                eap_twe(a, b, 0.001, 1.0, n, f64::INFINITY, &mut ws),
+            ),
+            ("wdtw", wdtw_naive(a, b, 0.05, n), eap_wdtw(a, b, 0.05, n, f64::INFINITY, &mut ws)),
+        ];
+        for (name, want, got) in cases {
+            assert!((got - want).abs() < 1e-9, "{name}: {got} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn elastic_extensions_early_abandon_correctly() {
+    // paper §6: the EAP scheme transfers to other elastic measures —
+    // exact at ties, +inf (or never below) under tight bounds
+    let mut ws = DtwWorkspace::default();
+    for (a, b) in pairs().into_iter().take(2) {
+        let a = &a[..64];
+        let b = &b[..64];
+        let n = a.len();
+        let erp = erp_naive(a, b, 0.0, n);
+        assert!((eap_erp(a, b, 0.0, n, erp, &mut ws) - erp).abs() < 1e-9);
+        let msm = msm_naive(a, b, 0.5, n);
+        assert!((eap_msm(a, b, 0.5, n, msm, &mut ws) - msm).abs() < 1e-9);
+        let twe = twe_naive(a, b, 0.001, 1.0, n);
+        assert!((eap_twe(a, b, 0.001, 1.0, n, twe, &mut ws) - twe).abs() < 1e-9);
+        let wdtw = wdtw_naive(a, b, 0.05, n);
+        assert!((eap_wdtw(a, b, 0.05, n, wdtw, &mut ws) - wdtw).abs() < 1e-9);
+        // reliable abandon below (all have infinite or gated borders)
+        assert_eq!(eap_msm(a, b, 0.5, n, msm * 0.99 - 1e-9, &mut ws), f64::INFINITY);
+        assert_eq!(eap_twe(a, b, 0.001, 1.0, n, twe * 0.99 - 1e-9, &mut ws), f64::INFINITY);
+        assert_eq!(eap_wdtw(a, b, 0.05, n, wdtw * 0.99 - 1e-9, &mut ws), f64::INFINITY);
+    }
+}

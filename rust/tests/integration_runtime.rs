@@ -1,0 +1,184 @@
+//! Runtime integration: the AOT artifacts, loaded through PJRT, must agree
+//! numerically with the Rust scalar implementations — the L1/L2 ⇄ L3
+//! contract. Requires `make artifacts`; tests auto-skip (with a loud note)
+//! when the artifacts directory is missing so `cargo test` works in a
+//! fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use repro::bounds::envelope::envelopes;
+use repro::bounds::lb_keogh::{lb_keogh_eq, reorder, sort_order};
+use repro::coordinator::batcher::{xla_search, xla_search_full, F32_SAFETY};
+use repro::data::{extract_queries, Dataset};
+use repro::distances::dtw::cdtw;
+use repro::metrics::Counters;
+use repro::norm::znorm::{znorm, znorm_point, stats};
+use repro::runtime::XlaEngine;
+use repro::search::subsequence::{search_subsequence, window_cells};
+use repro::search::suite::Suite;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn engine_loads_and_lists_expected_graphs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::open(&dir).unwrap();
+    let m = engine.manifest();
+    assert!(m.batch >= 8);
+    for n in &m.lengths {
+        for fam in ["znorm", "lb_keogh", "prefilter", "dtw", "prefilter_verify"] {
+            let name = m.graph_name(fam, *n);
+            assert!(m.find(&name).is_some(), "missing {name}");
+        }
+    }
+}
+
+#[test]
+fn xla_znorm_matches_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = XlaEngine::open(&dir).unwrap();
+    let b = engine.batch();
+    let n = 128;
+    let r = Dataset::Ecg.generate(b * n + 500, 31);
+    let mut panel = vec![0f32; b * n];
+    for k in 0..b {
+        for j in 0..n {
+            panel[k * n + j] = r[k * 7 + j] as f32;
+        }
+    }
+    let out = engine.znorm(n, &panel).unwrap();
+    for k in 0..b {
+        let window: Vec<f64> = (0..n).map(|j| r[k * 7 + j]).collect();
+        let want = znorm(&window);
+        for j in 0..n {
+            let got = out[k * n + j] as f64;
+            assert!(
+                (got - want[j]).abs() < 1e-3,
+                "row {k} col {j}: {got} vs {}",
+                want[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_lb_keogh_matches_rust_scalar_bound() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = XlaEngine::open(&dir).unwrap();
+    let b = engine.batch();
+    let n = 128;
+    let w = 12;
+    let r = Dataset::Ppg.generate(b + n + 10, 33);
+    let q = znorm(&extract_queries(&r, 1, n, 0.1, 3).remove(0));
+    let (u, l) = envelopes(&q, w);
+    let u32v: Vec<f32> = u.iter().map(|&v| v as f32).collect();
+    let l32v: Vec<f32> = l.iter().map(|&v| v as f32).collect();
+    // raw panel of consecutive windows
+    let mut panel = vec![0f32; b * n];
+    for k in 0..b {
+        for j in 0..n {
+            panel[k * n + j] = r[k + j] as f32;
+        }
+    }
+    let bounds = engine.prefilter(n, &u32v, &l32v, &panel).unwrap();
+    // scalar path: znorm window then LB_Keogh EQ
+    let order = sort_order(&q);
+    let uo = reorder(&u, &order);
+    let lo = reorder(&l, &order);
+    for k in 0..b {
+        let window = &r[k..k + n];
+        let (mean, std) = stats(window);
+        let mut cb = vec![0.0; n];
+        let want = lb_keogh_eq(&order, &uo, &lo, window, mean, std, f64::INFINITY, &mut cb);
+        let got = bounds[k] as f64;
+        let tol = 1e-2 + want * 2e-3;
+        assert!((got - want).abs() < tol, "row {k}: {got} vs {want}");
+        // the deflated bound never exceeds the true bound by the margin
+        assert!(got * (1.0 - F32_SAFETY) <= want + 1e-6, "safety margin violated");
+    }
+}
+
+#[test]
+fn xla_batched_dtw_matches_rust_cdtw() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = XlaEngine::open(&dir).unwrap();
+    let b = engine.batch();
+    let n = 128;
+    let r = Dataset::Pamap2.generate(b + n + 10, 35);
+    let q = znorm(&extract_queries(&r, 1, n, 0.1, 5).remove(0));
+    let q32: Vec<f32> = q.iter().map(|&v| v as f32).collect();
+    for w in [0usize, 12, 64] {
+        let mut panel = vec![0f32; b * n];
+        let mut zrows: Vec<Vec<f64>> = Vec::new();
+        for k in 0..b {
+            let window = &r[k..k + n];
+            let (mean, std) = stats(window);
+            let z: Vec<f64> = window.iter().map(|&x| znorm_point(x, mean, std)).collect();
+            for j in 0..n {
+                panel[k * n + j] = z[j] as f32;
+            }
+            zrows.push(z);
+        }
+        let got = engine.batched_dtw(n, &q32, w, &panel).unwrap();
+        for k in 0..b {
+            let want = cdtw(&q, &zrows[k], w);
+            let tol = 1e-2 + want * 5e-3;
+            assert!(
+                (got[k] as f64 - want).abs() < tol,
+                "w={w} row {k}: {} vs {want}",
+                got[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_search_agrees_with_scalar_suites() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = XlaEngine::open(&dir).unwrap();
+    let r = Dataset::Ecg.generate(12_000, 41);
+    let q = extract_queries(&r, 1, 128, 0.1, 6).remove(0);
+    let w = window_cells(q.len(), 0.1);
+    let mut c_scalar = Counters::new();
+    let want = search_subsequence(&r, &q, w, Suite::UcrMon, &mut c_scalar);
+    let mut c_xla = Counters::new();
+    let got = xla_search(&mut engine, &r, &q, w, &mut c_xla).unwrap();
+    assert_eq!(got.pos, want.pos);
+    assert!((got.dist - want.dist).abs() < 1e-6);
+    assert!(c_xla.xla_prunes > 0, "prefilter should prune: {c_xla:?}");
+}
+
+#[test]
+fn xla_search_full_finds_same_match_in_f32() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = XlaEngine::open(&dir).unwrap();
+    let r = Dataset::Ppg.generate(4_000, 43);
+    let q = extract_queries(&r, 1, 128, 0.1, 8).remove(0);
+    let w = window_cells(q.len(), 0.2);
+    let mut c1 = Counters::new();
+    let want = search_subsequence(&r, &q, w, Suite::UcrMon, &mut c1);
+    let mut c2 = Counters::new();
+    let got = xla_search_full(&mut engine, &r, &q, w, &mut c2).unwrap();
+    assert_eq!(got.pos, want.pos);
+    assert!((got.dist - want.dist).abs() < 1e-3 + want.dist * 1e-3);
+    assert_eq!(c2.dtw_calls, c2.candidates, "full path verifies everything");
+}
+
+#[test]
+fn unsupported_length_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = XlaEngine::open(&dir).unwrap();
+    let r = Dataset::Ecg.generate(2000, 1);
+    let q = vec![0.0; 100]; // not an AOT length
+    let mut c = Counters::new();
+    let err = xla_search(&mut engine, &r, &q, 10, &mut c).unwrap_err();
+    assert!(err.to_string().contains("not in AOT artifact set"), "{err}");
+}

@@ -1,0 +1,132 @@
+//! End-to-end search integration: every suite returns the identical match
+//! on every dataset (the paper's correctness requirement — the suites
+//! differ only in *speed*), and the counters tell the Fig-5-inset story.
+
+use repro::data::{extract_queries, Dataset};
+use repro::metrics::Counters;
+use repro::search::nn1::nn1_search;
+use repro::search::subsequence::{search_subsequence, window_cells};
+use repro::search::suite::Suite;
+use repro::norm::znorm::znorm;
+
+#[test]
+fn suites_agree_on_every_dataset() {
+    for d in Dataset::ALL {
+        let r = d.generate(6000, 99);
+        let q = extract_queries(&r, 1, 256, 0.1, 7).remove(0);
+        let w = window_cells(q.len(), 0.1);
+        let mut base = None;
+        for s in Suite::ALL {
+            let mut c = Counters::new();
+            let m = search_subsequence(&r, &q, w, s, &mut c);
+            match base {
+                None => base = Some(m),
+                Some(b) => {
+                    assert_eq!(m.pos, b.pos, "{} on {}", s.name(), d.name());
+                    assert!(
+                        (m.dist - b.dist).abs() < 1e-9,
+                        "{} on {}: {} vs {}",
+                        s.name(),
+                        d.name(),
+                        m.dist,
+                        b.dist
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mon_does_fewer_dp_work_than_baselines_via_abandon_rate() {
+    // EAPrunedDTW abandons reliably; the UCR core only on row minima.
+    // On the DTW calls that survive the cascade, MON must abandon at
+    // least as often as UCR.
+    let d = Dataset::Pamap2;
+    let r = d.generate(8000, 5);
+    let q = extract_queries(&r, 1, 256, 0.1, 11).remove(0);
+    let w = window_cells(q.len(), 0.2);
+    let mut c_ucr = Counters::new();
+    let mut c_mon = Counters::new();
+    search_subsequence(&r, &q, w, Suite::Ucr, &mut c_ucr);
+    search_subsequence(&r, &q, w, Suite::UcrMon, &mut c_mon);
+    assert_eq!(c_ucr.dtw_calls, c_mon.dtw_calls, "same cascade → same survivors");
+    assert!(
+        c_mon.dtw_abandons >= c_ucr.dtw_abandons,
+        "mon {} < ucr {}",
+        c_mon.dtw_abandons,
+        c_ucr.dtw_abandons
+    );
+}
+
+#[test]
+fn window_ratio_zero_equals_euclidean_matching() {
+    let r = Dataset::Ppg.generate(3000, 1);
+    let q = extract_queries(&r, 1, 128, 0.05, 2).remove(0);
+    let mut c = Counters::new();
+    let m = search_subsequence(&r, &q, 0, Suite::UcrMon, &mut c);
+    // brute force squared euclidean on z-normalised windows
+    let qz = znorm(&q);
+    let mut best = (0usize, f64::INFINITY);
+    for pos in 0..=(r.len() - q.len()) {
+        let cz = znorm(&r[pos..pos + q.len()]);
+        let d: f64 = qz.iter().zip(&cz).map(|(a, b)| (a - b) * (a - b)).sum();
+        if d < best.1 {
+            best = (pos, d);
+        }
+    }
+    assert_eq!(m.pos, best.0);
+    assert!((m.dist - best.1).abs() < 1e-9);
+}
+
+#[test]
+fn counters_partition_candidates() {
+    // every candidate is either pruned by exactly one stage or reaches DTW
+    for s in Suite::ALL {
+        let r = Dataset::Ecg.generate(5000, 3);
+        let q = extract_queries(&r, 1, 128, 0.1, 4).remove(0);
+        let mut c = Counters::new();
+        search_subsequence(&r, &q, window_cells(q.len(), 0.3), s, &mut c);
+        assert_eq!(
+            c.candidates,
+            c.lb_kim_prunes + c.lb_keogh_eq_prunes + c.lb_keogh_ec_prunes + c.dtw_calls,
+            "{}: {c:?}",
+            s.name()
+        );
+    }
+}
+
+#[test]
+fn larger_windows_cost_more_dtw_cells_but_same_result() {
+    let r = Dataset::Soccer.generate(4000, 8);
+    let q = extract_queries(&r, 1, 128, 0.1, 9).remove(0);
+    let mut prev_dist = f64::INFINITY;
+    for ratio in [0.1, 0.2, 0.3, 0.4, 0.5] {
+        let w = window_cells(q.len(), ratio);
+        let mut c = Counters::new();
+        let m = search_subsequence(&r, &q, w, Suite::UcrMon, &mut c);
+        // more window ⇒ match can only improve (monotone in w)
+        assert!(m.dist <= prev_dist + 1e-9, "ratio={ratio}");
+        prev_dist = m.dist;
+    }
+}
+
+#[test]
+fn nn1_all_suites_agree_on_dataset_snippets() {
+    let r = Dataset::FoG.generate(40_000, 12);
+    let cands: Vec<Vec<f64>> =
+        (0..40).map(|i| znorm(&r[i * 900..i * 900 + 256])).collect();
+    let q = znorm(&r[777..1033]);
+    let mut base = None;
+    for s in Suite::ALL {
+        let mut c = Counters::new();
+        let got = nn1_search(&q, &cands, 25, s, &mut c).unwrap();
+        match base {
+            None => base = Some(got),
+            Some(b) => {
+                assert_eq!(got.index, b.index, "{}", s.name());
+                assert!((got.dist - b.dist).abs() < 1e-9);
+            }
+        }
+    }
+}

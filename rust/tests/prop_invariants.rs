@@ -1,0 +1,331 @@
+//! Property tests on the system's core invariants (DESIGN.md §6), using
+//! the in-tree harness (`repro::util::proptest`) since the proptest crate
+//! is unavailable offline. Every failure prints seed + case + input.
+
+use repro::bounds::envelope::{envelopes, envelopes_naive};
+use repro::bounds::lb_keogh::{cumulate_bound, lb_keogh_ec, lb_keogh_eq, reorder, sort_order};
+use repro::bounds::lb_kim::lb_kim_hierarchy;
+use repro::data::rng::Rng;
+use repro::data::{extract_queries, Dataset};
+use repro::distances::dtw::{cdtw, dtw_oracle};
+use repro::distances::dtw_ea::dtw_ea;
+use repro::distances::eap_dtw::eap_cdtw;
+use repro::distances::pruned_dtw::pruned_cdtw;
+use repro::distances::DtwWorkspace;
+use repro::metrics::Counters;
+use repro::norm::znorm::{stats, znorm, znorm_point, WindowStats};
+use repro::search::subsequence::{scan, search_subsequence, DataEnvelopes, QueryContext};
+use repro::search::suite::Suite;
+use repro::util::proptest::{arb_series, arb_window, run_prop};
+
+const CASES: usize = 120;
+
+#[derive(Debug)]
+struct Pair {
+    a: Vec<f64>,
+    b: Vec<f64>,
+    w: usize,
+}
+
+fn arb_pair(rng: &mut Rng) -> Pair {
+    let a = arb_series(rng, 1, 48);
+    let b = arb_series(rng, 1, 48);
+    let w = arb_window(rng, a.len().max(b.len()));
+    Pair { a, b, w }
+}
+
+#[test]
+fn prop_eap_equals_cdtw_with_infinite_ub() {
+    run_prop("eap == cdtw @ ub=inf", 0xA1, CASES, arb_pair, |p| {
+        let mut ws = DtwWorkspace::default();
+        let want = cdtw(&p.a, &p.b, p.w);
+        let got = eap_cdtw(&p.a, &p.b, p.w, f64::INFINITY, None, &mut ws);
+        if (got - want).abs() > 1e-9 && got != want {
+            return Err(format!("{got} != {want}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eap_exact_at_tie_and_abandons_below() {
+    run_prop("eap tie/below", 0xA2, CASES, arb_pair, |p| {
+        let mut ws = DtwWorkspace::default();
+        let want = cdtw(&p.a, &p.b, p.w);
+        if !want.is_finite() {
+            return Ok(());
+        }
+        let tie = eap_cdtw(&p.a, &p.b, p.w, want, None, &mut ws);
+        if (tie - want).abs() > 1e-9 {
+            return Err(format!("tie broken: {tie} != {want}"));
+        }
+        if want > 0.0 {
+            let below = eap_cdtw(&p.a, &p.b, p.w, want * (1.0 - 1e-12) - 1e-300, None, &mut ws);
+            // EAP abandons *reliably* (this is the paper's headline claim)
+            if below.is_finite() && below < want {
+                return Err(format!("underestimate {below} < {want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_variants_sandwich_the_truth() {
+    run_prop("variants never underestimate", 0xA3, CASES, arb_pair, |p| {
+        let mut ws = DtwWorkspace::default();
+        let want = cdtw(&p.a, &p.b, p.w);
+        if !want.is_finite() {
+            return Ok(());
+        }
+        let mut rng = Rng::new(p.a.len() as u64 * 31 + p.b.len() as u64);
+        let ub = want * rng.range(0.25, 1.5);
+        if p.a.len() == p.b.len() {
+            let ea = dtw_ea(&p.a, &p.b, p.w, ub, None, &mut ws);
+            if ea.is_finite() && ea < want - 1e-9 {
+                return Err(format!("dtw_ea underestimates: {ea} < {want}"));
+            }
+        }
+        let pr = pruned_cdtw(&p.a, &p.b, p.w, ub, None, &mut ws);
+        if pr.is_finite() && pr < want - 1e-9 {
+            return Err(format!("pruned underestimates: {pr} < {want}"));
+        }
+        let eap = eap_cdtw(&p.a, &p.b, p.w, ub, None, &mut ws);
+        if eap.is_finite() && eap < want - 1e-9 {
+            return Err(format!("eap underestimates: {eap} < {want}"));
+        }
+        // and above-ub results from EAP are exactly +inf or exact
+        if eap.is_finite() && (eap - want).abs() > 1e-9 {
+            return Err(format!("eap inexact: {eap} vs {want}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_window_monotonicity() {
+    run_prop("cdtw monotone in w", 0xA4, CASES, arb_pair, |p| {
+        let d1 = cdtw(&p.a, &p.b, p.w);
+        let d2 = cdtw(&p.a, &p.b, p.w + 1);
+        if d2 > d1 + 1e-9 {
+            return Err(format!("w={} -> {d1}, w+1 -> {d2}", p.w));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_envelopes_match_naive_and_bound_dtw() {
+    #[derive(Debug)]
+    struct Env {
+        q: Vec<f64>,
+        c: Vec<f64>,
+        w: usize,
+    }
+    run_prop(
+        "envelopes + lb_keogh <= dtw",
+        0xA5,
+        60,
+        |rng| {
+            let n = 4 + rng.below(40) as usize;
+            Env {
+                q: znorm(&(0..n).map(|_| rng.normal()).collect::<Vec<_>>()),
+                c: (0..n).map(|_| rng.normal() * 2.0 + 0.5).collect(),
+                w: arb_window(rng, n / 2),
+            }
+        },
+        |e| {
+            let (u, l) = envelopes(&e.q, e.w);
+            let (nu, nl) = envelopes_naive(&e.q, e.w);
+            if u != nu || l != nl {
+                return Err("lemire != naive".into());
+            }
+            let (mean, std) = stats(&e.c);
+            let zc: Vec<f64> = e.c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+            let d = dtw_oracle(&e.q, &zc, Some(e.w));
+            let order = sort_order(&e.q);
+            let uo = reorder(&u, &order);
+            let lo = reorder(&l, &order);
+            let mut cb = vec![0.0; e.q.len()];
+            let lb1 = lb_keogh_eq(&order, &uo, &lo, &e.c, mean, std, f64::INFINITY, &mut cb);
+            if lb1 > d + 1e-6 {
+                return Err(format!("lb_eq {lb1} > dtw {d}"));
+            }
+            let (du, dl) = envelopes(&e.c, e.w);
+            let qo = reorder(&e.q, &order);
+            let lb2 = lb_keogh_ec(&order, &qo, &du, &dl, mean, std, f64::INFINITY, &mut cb);
+            if lb2 > d + 1e-6 {
+                return Err(format!("lb_ec {lb2} > dtw {d}"));
+            }
+            let kim = lb_kim_hierarchy(&e.q, &e.c, mean, std, f64::INFINITY);
+            if kim > d + 1e-6 {
+                return Err(format!("lb_kim {kim} > dtw {d}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cb_tightened_dtw_stays_exact_below_ub() {
+    #[derive(Debug)]
+    struct Case {
+        q: Vec<f64>,
+        c: Vec<f64>,
+        w: usize,
+    }
+    run_prop(
+        "cb tightening preserves exactness",
+        0xA6,
+        60,
+        |rng| {
+            let n = 8 + rng.below(40) as usize;
+            Case {
+                q: znorm(&(0..n).map(|_| rng.normal()).collect::<Vec<_>>()),
+                c: (0..n).map(|_| rng.normal()).collect(),
+                w: 1 + arb_window(rng, n / 2),
+            }
+        },
+        |e| {
+            let (mean, std) = stats(&e.c);
+            let zc: Vec<f64> = e.c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+            let exact = cdtw(&e.q, &zc, e.w);
+            let (u, l) = envelopes(&e.q, e.w);
+            let order = sort_order(&e.q);
+            let uo = reorder(&u, &order);
+            let lo = reorder(&l, &order);
+            let mut cb = vec![0.0; e.q.len()];
+            lb_keogh_eq(&order, &uo, &lo, &e.c, mean, std, f64::INFINITY, &mut cb);
+            let mut cbc = Vec::new();
+            cumulate_bound(&cb, &mut cbc);
+            let mut ws = DtwWorkspace::default();
+            // ub = exact: must stay exact with cb plugged in, for every core
+            for (name, got) in [
+                ("eap", eap_cdtw(&e.q, &zc, e.w, exact, Some(&cbc), &mut ws)),
+                ("pruned", pruned_cdtw(&e.q, &zc, e.w, exact, Some(&cbc), &mut ws)),
+                ("ea", dtw_ea(&e.q, &zc, e.w, exact, Some(&cbc), &mut ws)),
+            ] {
+                if (got - exact).abs() > 1e-9 {
+                    return Err(format!("{name}: {got} != {exact}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_streaming_stats_equal_batch_stats() {
+    run_prop(
+        "windowstats == batch",
+        0xA7,
+        40,
+        |rng| {
+            let len = 50 + rng.below(200) as usize;
+            let n = 5 + rng.below(30) as usize;
+            let s: Vec<f64> = (0..len).map(|_| rng.normal() * 10.0).collect();
+            (s, n.min(len))
+        },
+        |(s, n)| {
+            let mut wsx = WindowStats::new(s, *n);
+            loop {
+                let (m1, d1) = wsx.mean_std();
+                let (m2, d2) = stats(wsx.window());
+                if (m1 - m2).abs() > 1e-7 || (d1 - d2).abs() > 1e-7 {
+                    return Err(format!("pos {}: ({m1},{d1}) vs ({m2},{d2})", wsx.pos()));
+                }
+                if !wsx.advance() {
+                    return Ok(());
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_scan_equals_full_scan() {
+    #[derive(Debug)]
+    struct Case {
+        seed: u64,
+        shards: usize,
+        dataset: Dataset,
+    }
+    run_prop(
+        "shard == full",
+        0xA8,
+        12,
+        |rng| Case {
+            seed: rng.next_u64(),
+            shards: 1 + rng.below(6) as usize,
+            dataset: Dataset::ALL[rng.below(6) as usize],
+        },
+        |c| {
+            let r = c.dataset.generate(1500, c.seed);
+            let q = extract_queries(&r, 1, 64, 0.1, c.seed ^ 5).remove(0);
+            let w = 6;
+            let suite = Suite::UcrMon;
+            let mut cnt = Counters::new();
+            let want = search_subsequence(&r, &q, w, suite, &mut cnt);
+            let denv = DataEnvelopes::new(&r, w);
+            let total = r.len() - q.len() + 1;
+            let mut best: Option<repro::search::subsequence::Match> = None;
+            let mut bsf = f64::INFINITY;
+            let mut cnt2 = Counters::new();
+            for s in 0..c.shards {
+                let (a, b) = (s * total / c.shards, (s + 1) * total / c.shards);
+                let mut ctx = QueryContext::new(&q, w);
+                if let Some(m) = scan(&r, a, b, &mut ctx, Some(&denv), suite, bsf, &mut cnt2) {
+                    if best.is_none() || m.dist < best.unwrap().dist {
+                        best = Some(m);
+                        bsf = m.dist;
+                    }
+                }
+            }
+            let got = best.ok_or("no match")?;
+            if got.pos != want.pos || (got.dist - want.dist).abs() > 1e-9 {
+                return Err(format!("{got:?} vs {want:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_search_result_is_true_minimum() {
+    // randomised small-scale end-to-end: the suite result equals the
+    // brute-force minimum over all positions
+    #[derive(Debug)]
+    struct Case {
+        seed: u64,
+        suite: Suite,
+    }
+    run_prop(
+        "search == brute min",
+        0xA9,
+        10,
+        |rng| Case {
+            seed: rng.next_u64(),
+            suite: Suite::ALL[rng.below(4) as usize],
+        },
+        |c| {
+            let r = Dataset::Ecg.generate(800, c.seed);
+            let q = extract_queries(&r, 1, 48, 0.15, c.seed ^ 9).remove(0);
+            let w = 5;
+            let mut cnt = Counters::new();
+            let got = search_subsequence(&r, &q, w, c.suite, &mut cnt);
+            let qz = znorm(&q);
+            let mut best = (0usize, f64::INFINITY);
+            for pos in 0..=(r.len() - q.len()) {
+                let cz = znorm(&r[pos..pos + q.len()]);
+                let d = cdtw(&qz, &cz, w);
+                if d < best.1 {
+                    best = (pos, d);
+                }
+            }
+            if got.pos != best.0 || (got.dist - best.1).abs() > 1e-9 {
+                return Err(format!("{got:?} vs {best:?} under {}", c.suite.name()));
+            }
+            Ok(())
+        },
+    );
+}
