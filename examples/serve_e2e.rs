@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
                 query: q.clone(),
                 window_ratio: ratio,
                 suite,
+                k: 1,
             })?;
             latencies.push(resp.latency_ms);
             answers.push((resp.pos, resp.dist));

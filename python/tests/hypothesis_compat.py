@@ -1,0 +1,47 @@
+"""Optional-hypothesis shim.
+
+The property sweeps use hypothesis when it is installed; in environments
+without it (the build image pins a minimal package set) the sweep tests
+skip cleanly instead of breaking collection for the whole suite.
+
+Usage in test modules:
+
+    from hypothesis_compat import given, settings, st
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - depends on the image
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            @pytest.mark.skip(
+                reason="hypothesis not installed; property sweep skipped"
+            )
+            def _skipped():
+                pass
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    class _StrategyStub:
+        """st.integers(...), st.floats(...), ... — inert placeholders."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

@@ -1,0 +1,83 @@
+//! K2 — reference-side amortization: what the shared `RefIndex` buys as
+//! the query batch grows. The unindexed path re-does all reference-side
+//! work per query (streamed window stats, per-query data envelopes — the
+//! seed behaviour); the indexed path pays one build on the batch's first
+//! query and serves every later one from cache. Amortized per-query cost
+//! must *fall* with batch size on the indexed path and stay flat on the
+//! unindexed one.
+//!
+//! Scaling knobs (env): `REPRO_REF_LEN` (default 20000), `REPRO_DATASETS`.
+
+use repro::bench_support::grid_from_env;
+use repro::bench_support::harness::{bench, fmt_secs};
+use repro::data::extract_queries;
+use repro::index::{Engine, EngineConfig, Query};
+use repro::metrics::Counters;
+use repro::search::subsequence::{search_subsequence, window_cells};
+use repro::search::suite::Suite;
+
+const QLEN: usize = 128;
+const RATIO: f64 = 0.1;
+const BATCHES: [usize; 3] = [1, 8, 64];
+
+fn main() {
+    let (grid, datasets) = grid_from_env(20_000);
+    let suite = Suite::UcrMon;
+    println!(
+        "index amortization (qlen {QLEN}, ratio {RATIO}, suite {}, ref_len {}):",
+        suite.name(),
+        grid.ref_len
+    );
+    println!(
+        "{:<8} {:>6} | {:>14} {:>14} | {:>9}",
+        "dataset", "batch", "unindexed /q", "indexed /q", "speedup"
+    );
+    for &d in &datasets {
+        let reference = d.generate(grid.ref_len, grid.seed);
+        let all_queries = extract_queries(&reference, *BATCHES.iter().max().unwrap(), QLEN, 0.1, grid.seed ^ 3);
+        let mut indexed_per_q = Vec::new();
+        for &batch in &BATCHES {
+            let queries = &all_queries[..batch];
+            let w = window_cells(QLEN, RATIO);
+
+            // seed path: every query rebuilds envelopes + streams stats
+            let un = bench(1, 3, || {
+                let mut c = Counters::new();
+                for q in queries {
+                    std::hint::black_box(search_subsequence(&reference, q, w, suite, &mut c));
+                }
+                c.candidates
+            });
+
+            // indexed path: a fresh engine per rep, so the index build is
+            // *inside* the measurement and amortizes across the batch
+            let engine_queries: Vec<Query> =
+                queries.iter().map(|q| Query::new(q.clone(), RATIO)).collect();
+            let ix = bench(1, 3, || {
+                let engine = Engine::new(
+                    reference.clone(),
+                    &EngineConfig { shards: 1, suite, ..Default::default() },
+                )
+                .expect("engine");
+                engine.search_batch(&engine_queries, 1).expect("batch")
+            });
+
+            let un_q = un.median / batch as f64;
+            let ix_q = ix.median / batch as f64;
+            indexed_per_q.push(ix_q);
+            println!(
+                "{:<8} {:>6} | {:>14} {:>14} | {:>8.2}x",
+                d.name(),
+                batch,
+                fmt_secs(un_q),
+                fmt_secs(ix_q),
+                un_q / ix_q
+            );
+        }
+        let falling = indexed_per_q.windows(2).all(|p| p[1] <= p[0] * 1.10);
+        println!(
+            "  -> indexed per-query cost {} with batch size",
+            if falling { "falls (amortized)" } else { "did NOT fall — investigate" }
+        );
+    }
+}

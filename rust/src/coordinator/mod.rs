@@ -1,21 +1,26 @@
 //! Layer-3 serving coordinator (system S13): the similarity-search engine
-//! packaged as a service — query admission, sharded scanning with a shared
-//! best-so-far bound, and the batched XLA prefilter path.
+//! packaged as a service — query admission, sharded top-k scanning with a
+//! shared k-th-best threshold, reference-side artifacts served by the
+//! shared [`crate::index::RefIndex`], and (behind the `xla` feature) the
+//! batched XLA prefilter path.
 //!
 //! Note on runtime: the image's vendored crate set has no async runtime,
 //! so the event loop is OS threads + channels (`std::sync::mpsc`) instead
 //! of tokio tasks; the architecture (router → bounded queues → shard
 //! workers → aggregation) is the same (DESIGN.md §4).
 //!
-//! * [`protocol`] — request/response types + JSON wire format
-//! * [`state`] — the shared upper bound (the serving analogue of the
-//!   paper's upper-bound tightening: every shard's improvement immediately
-//!   tightens every other shard's abandon threshold)
-//! * [`worker`] — shard scan workers
+//! * [`protocol`] — request/response types + JSON wire format (top-k
+//!   aware: requests carry `k`, responses a ranked `matches` list)
+//! * [`state`] — the shared threshold (the serving analogue of the
+//!   paper's upper-bound tightening: every shard's k-th-best improvement
+//!   immediately tightens every other shard's abandon threshold)
+//! * [`worker`] — shard scan workers, each collecting a local top-k
 //! * [`batcher`] — panels of candidates through the AOT XLA prefilter
-//! * [`router`] — per-query fan-out/fan-in
+//! * [`router`] — per-query fan-out/fan-in with deterministic
+//!   `(dist, pos)` merge of the shards' result heaps
 //! * [`service`] — lifecycle: spawn, submit, drain, shutdown
 
+#[cfg(feature = "xla")]
 pub mod batcher;
 pub mod protocol;
 pub mod router;

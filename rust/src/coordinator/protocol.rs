@@ -1,9 +1,15 @@
 //! Wire protocol of the serve loop: line-delimited JSON requests and
 //! responses (one object per line), so the service can be driven from a
 //! socket, a pipe, or in-process.
+//!
+//! Requests carry an optional `k` (top-k result count, default 1) and
+//! responses carry the ranked `matches` list; the scalar `pos`/`dist`
+//! fields always mirror the best match, so pre-top-k clients keep
+//! working unchanged.
 
 use anyhow::{anyhow, Result};
 
+use crate::search::subsequence::Match;
 use crate::search::suite::Suite;
 use crate::util::json::{obj, Json};
 
@@ -16,6 +22,8 @@ pub struct QueryRequest {
     /// warping window as a ratio of the query length
     pub window_ratio: f64,
     pub suite: Suite,
+    /// how many ranked matches to return (>= 1)
+    pub k: usize,
 }
 
 impl QueryRequest {
@@ -24,6 +32,7 @@ impl QueryRequest {
             ("id", Json::Num(self.id as f64)),
             ("window_ratio", Json::Num(self.window_ratio)),
             ("suite", Json::Str(self.suite.name().to_string())),
+            ("k", Json::Num(self.k as f64)),
             ("query", Json::Arr(self.query.iter().map(|&v| Json::Num(v)).collect())),
         ])
         .to_string()
@@ -45,6 +54,12 @@ impl QueryRequest {
             .ok_or_else(|| anyhow!("request missing suite"))?;
         let suite = Suite::from_name(suite_name)
             .ok_or_else(|| anyhow!("unknown suite {suite_name:?}"))?;
+        // absent k = 1: the pre-top-k wire format stays valid
+        let k = match v.get("k") {
+            Some(x) => x.as_f64().ok_or_else(|| anyhow!("non-numeric k"))? as usize,
+            None => 1,
+        };
+        anyhow::ensure!(k >= 1, "k must be >= 1");
         let query = v
             .get("query")
             .and_then(Json::as_arr)
@@ -53,16 +68,20 @@ impl QueryRequest {
             .map(|x| x.as_f64().ok_or_else(|| anyhow!("non-numeric query point")))
             .collect::<Result<Vec<_>>>()?;
         anyhow::ensure!(!query.is_empty(), "empty query");
-        Ok(Self { id, query, window_ratio, suite })
+        Ok(Self { id, query, window_ratio, suite, k })
     }
 }
 
-/// The located match plus serving metadata.
+/// The located matches plus serving metadata.
 #[derive(Debug, Clone, PartialEq)]
 pub struct QueryResponse {
     pub id: u64,
+    /// best match position (== `matches[0].pos`)
     pub pos: usize,
+    /// best match distance (== `matches[0].dist`)
     pub dist: f64,
+    /// the k best matches, ascending `(dist, pos)`
+    pub matches: Vec<Match>,
     /// wall-clock service latency in milliseconds
     pub latency_ms: f64,
     /// candidates examined / pruned / DTW calls (aggregated over shards)
@@ -77,6 +96,20 @@ impl QueryResponse {
             ("id", Json::Num(self.id as f64)),
             ("pos", Json::Num(self.pos as f64)),
             ("dist", Json::Num(self.dist)),
+            (
+                "matches",
+                Json::Arr(
+                    self.matches
+                        .iter()
+                        .map(|m| {
+                            obj(vec![
+                                ("pos", Json::Num(m.pos as f64)),
+                                ("dist", Json::Num(m.dist)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("latency_ms", Json::Num(self.latency_ms)),
             ("candidates", Json::Num(self.candidates as f64)),
             ("pruned", Json::Num(self.pruned as f64)),
@@ -90,10 +123,32 @@ impl QueryResponse {
         let num = |k: &str| -> Result<f64> {
             v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("response missing {k:?}"))
         };
+        let pos = num("pos")? as usize;
+        let dist = num("dist")?;
+        let matches = match v.get("matches").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(|m| {
+                    Ok(Match {
+                        pos: m
+                            .get("pos")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow!("match missing pos"))?,
+                        dist: m
+                            .get("dist")
+                            .and_then(Json::as_f64)
+                            .ok_or_else(|| anyhow!("match missing dist"))?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            // pre-top-k responses: the scalar fields are the only match
+            None => vec![Match { pos, dist }],
+        };
         Ok(Self {
             id: num("id")? as u64,
-            pos: num("pos")? as usize,
-            dist: num("dist")?,
+            pos,
+            dist,
+            matches,
             latency_ms: num("latency_ms")?,
             candidates: num("candidates")? as u64,
             pruned: num("pruned")? as u64,
@@ -113,9 +168,19 @@ mod tests {
             query: vec![1.0, -2.5, 3.0],
             window_ratio: 0.2,
             suite: Suite::UcrMon,
+            k: 5,
         };
         let back = QueryRequest::from_json(&r.to_json()).unwrap();
         assert_eq!(back, r);
+    }
+
+    #[test]
+    fn request_without_k_defaults_to_1() {
+        let r = QueryRequest::from_json(
+            r#"{"id":1,"window_ratio":0.1,"suite":"mon","query":[1,2]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.k, 1);
     }
 
     #[test]
@@ -124,6 +189,7 @@ mod tests {
             id: 1,
             pos: 42,
             dist: 3.5,
+            matches: vec![Match { pos: 42, dist: 3.5 }, Match { pos: 7, dist: 4.25 }],
             latency_ms: 12.25,
             candidates: 100,
             pruned: 90,
@@ -133,9 +199,20 @@ mod tests {
     }
 
     #[test]
+    fn legacy_response_without_matches_parses() {
+        let line = r#"{"id":1,"pos":42,"dist":3.5,"latency_ms":1,"candidates":10,"pruned":9,"dtw_calls":1}"#;
+        let r = QueryResponse::from_json(line).unwrap();
+        assert_eq!(r.matches, vec![Match { pos: 42, dist: 3.5 }]);
+    }
+
+    #[test]
     fn rejects_bad_requests() {
         assert!(QueryRequest::from_json("{}").is_err());
         assert!(QueryRequest::from_json(r#"{"id":1,"window_ratio":0.1,"suite":"zzz","query":[1]}"#).is_err());
         assert!(QueryRequest::from_json(r#"{"id":1,"window_ratio":0.1,"suite":"mon","query":[]}"#).is_err());
+        assert!(QueryRequest::from_json(
+            r#"{"id":1,"window_ratio":0.1,"suite":"mon","k":0,"query":[1]}"#
+        )
+        .is_err());
     }
 }

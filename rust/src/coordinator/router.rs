@@ -1,5 +1,6 @@
 //! Per-query routing: split the reference's candidate positions across the
-//! shard workers, fan the job out, fan the results in, merge counters.
+//! shard workers, fan the job out, fan the results in, merge the shards'
+//! local top-k lists and counters.
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
@@ -8,6 +9,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::state::SharedUb;
 use crate::coordinator::worker::Job;
+use crate::index::ref_index::BucketStats;
 use crate::metrics::Counters;
 use crate::search::subsequence::{DataEnvelopes, Match, QueryContext};
 use crate::search::suite::Suite;
@@ -21,26 +23,54 @@ pub fn shard_ranges(total: usize, shards: usize) -> Vec<(usize, usize)> {
         .collect()
 }
 
-/// Fan one query out over the worker channels; blocks until every shard
-/// reports. Returns the best match plus aggregated counters.
+/// Fan one top-k query out over the worker channels; blocks until every
+/// shard reports. Returns the k best matches over the union of shards
+/// (ascending `(dist, pos)`; fewer than k only if the candidate space is
+/// smaller than k — `k` is clamped to the candidate count, so a hostile
+/// request cannot force proportional allocation) plus aggregated
+/// counters.
+///
+/// `denv` / `stats` are the reference-side artifacts: pass `Arc`s served
+/// by a shared [`crate::index::RefIndex`] to amortise them across
+/// queries, or `None` to fall back to per-query computation (envelopes)
+/// and streaming statistics — the seed behaviour.
+///
+/// Tie caveat: candidates whose distance *exactly* equals the k-th best
+/// another shard already published are dropped (strict-< acceptance,
+/// matching the seed's scalar rule), so on data with bit-identical
+/// distances at the k-th boundary the tail of the list can depend on
+/// shard timing. Distinct distances — any real-valued signal — are
+/// deterministic.
 #[allow(clippy::too_many_arguments)]
-pub fn route_query(
+pub fn route_query_topk(
     workers: &[Sender<Job>],
     reference: &Arc<Vec<f64>>,
     query_raw: &[f64],
     w: usize,
     suite: Suite,
+    k: usize,
     sync_every: usize,
-) -> Result<(Match, Counters)> {
+    denv: Option<Arc<DataEnvelopes>>,
+    stats: Option<Arc<BucketStats>>,
+) -> Result<(Vec<Match>, Counters)> {
     let n = query_raw.len();
+    anyhow::ensure!(n > 0, "empty query");
+    anyhow::ensure!(k >= 1, "k must be >= 1");
     anyhow::ensure!(reference.len() >= n, "reference shorter than query");
+    if let Some(t) = &stats {
+        anyhow::ensure!(t.qlen() == n, "stats bucket is for qlen {}, query has {n}", t.qlen());
+    }
     let total = reference.len() - n + 1;
+    let k = k.min(total);
     let ranges = shard_ranges(total, workers.len());
     let shared = SharedUb::new(f64::INFINITY);
-    let denv = suite
-        .cascade()
-        .needs_data_envelopes()
-        .then(|| Arc::new(DataEnvelopes::new(reference, w)));
+    let denv = match denv {
+        Some(d) => Some(d),
+        None => suite
+            .cascade()
+            .needs_data_envelopes()
+            .then(|| Arc::new(DataEnvelopes::new(reference, w))),
+    };
     let (reply_tx, reply_rx) = channel();
     let mut dispatched = 0usize;
     for (i, &(start, end)) in ranges.iter().enumerate() {
@@ -50,7 +80,9 @@ pub fn route_query(
             end,
             ctx: QueryContext::new(query_raw, w),
             denv: denv.clone(),
+            stats: stats.clone(),
             suite,
+            k,
             shared: Arc::clone(&shared),
             sync_every,
             reply: reply_tx.clone(),
@@ -61,18 +93,38 @@ pub fn route_query(
         dispatched += 1;
     }
     drop(reply_tx);
-    let mut best: Option<Match> = None;
+    let mut all: Vec<Match> = Vec::new();
     let mut counters = Counters::new();
     for _ in 0..dispatched {
-        let (m, c) = reply_rx.recv().map_err(|_| anyhow!("worker died mid-query"))?;
+        let (matches, c) = reply_rx.recv().map_err(|_| anyhow!("worker died mid-query"))?;
         counters.merge(&c);
-        if let Some(m) = m {
-            if best.is_none_or(|b| m.dist < b.dist || (m.dist == b.dist && m.pos < b.pos)) {
-                best = Some(m);
-            }
-        }
+        all.extend(matches);
     }
-    best.map(|m| (m, counters)).ok_or_else(|| anyhow!("no match found"))
+    // shards cover disjoint position ranges, so the union has no
+    // duplicates; rank deterministically and keep the k best
+    all.sort_by(|a, b| {
+        a.dist
+            .partial_cmp(&b.dist)
+            .expect("no NaN distances")
+            .then(a.pos.cmp(&b.pos))
+    });
+    all.truncate(k);
+    anyhow::ensure!(!all.is_empty(), "no match found");
+    Ok((all, counters))
+}
+
+/// The scalar (`k = 1`) fan-out the seed exposed: best match + counters.
+pub fn route_query(
+    workers: &[Sender<Job>],
+    reference: &Arc<Vec<f64>>,
+    query_raw: &[f64],
+    w: usize,
+    suite: Suite,
+    sync_every: usize,
+) -> Result<(Match, Counters)> {
+    let (mut matches, counters) =
+        route_query_topk(workers, reference, query_raw, w, suite, 1, sync_every, None, None)?;
+    Ok((matches.remove(0), counters))
 }
 
 #[cfg(test)]

@@ -1,9 +1,11 @@
-//! Service lifecycle: owns the reference stream, the worker pool, and
-//! (optionally) a dedicated **engine thread** for the XLA suite; serves
-//! [`QueryRequest`]s until dropped.
+//! Service lifecycle: owns the reference stream, its shared [`RefIndex`],
+//! the worker pool, and (optionally, behind the `xla` feature) a dedicated
+//! **engine thread** for the XLA suite; serves [`QueryRequest`]s until
+//! dropped.
 //!
 //! Concurrency model: `submit` can be called from many client threads; the
-//! scalar suites fan out across the shard workers. The PJRT client is not
+//! scalar suites fan out across the shard workers, sharing the index's
+//! stats buckets and envelope tables read-only. The PJRT client is not
 //! `Send` (Rc internals in the xla crate), so the XLA engine lives on its
 //! own thread and `UcrMonXla` queries are serialised through a channel —
 //! PJRT CPU already parallelises internally and the box has one core
@@ -15,24 +17,32 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
+#[cfg(feature = "xla")]
+use anyhow::anyhow;
 
+#[cfg(feature = "xla")]
 use crate::coordinator::batcher;
 use crate::coordinator::protocol::{QueryRequest, QueryResponse};
-use crate::coordinator::router::route_query;
+use crate::coordinator::router::route_query_topk;
 use crate::coordinator::worker::{worker_loop, Job, DEFAULT_SYNC_EVERY};
+use crate::index::ref_index::RefIndex;
 use crate::metrics::{Counters, Timer};
+#[cfg(feature = "xla")]
 use crate::runtime::XlaEngine;
-use crate::search::subsequence::{window_cells, Match};
+#[cfg(feature = "xla")]
+use crate::search::subsequence::Match;
+use crate::search::subsequence::window_cells;
 use crate::search::suite::Suite;
 
 /// Service construction knobs (see also [`crate::config::ServeConfig`]).
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub shards: usize,
-    /// positions between shared-UB syncs in the workers
+    /// positions between shared-threshold syncs in the workers
     pub sync_every: usize,
-    /// artifacts directory; `None` disables the XLA suite
+    /// artifacts directory; `None` disables the XLA suite. Ignored when
+    /// the crate is built without the `xla` feature.
     pub artifacts_dir: Option<std::path::PathBuf>,
 }
 
@@ -43,6 +53,7 @@ impl Default for ServiceConfig {
 }
 
 /// A unit of work for the engine thread.
+#[cfg(feature = "xla")]
 struct EngineJob {
     query: Vec<f64>,
     w: usize,
@@ -53,7 +64,12 @@ struct EngineJob {
 }
 
 /// Engine thread: owns the (non-Send) PJRT client for its whole life.
-fn engine_loop(dir: std::path::PathBuf, reference: Arc<Vec<f64>>, rx: std::sync::mpsc::Receiver<EngineJob>) {
+#[cfg(feature = "xla")]
+fn engine_loop(
+    dir: std::path::PathBuf,
+    reference: Arc<Vec<f64>>,
+    rx: std::sync::mpsc::Receiver<EngineJob>,
+) {
     let mut engine = match XlaEngine::open(&dir) {
         Ok(e) => e,
         Err(e) => {
@@ -79,9 +95,12 @@ fn engine_loop(dir: std::path::PathBuf, reference: Arc<Vec<f64>>, rx: std::sync:
 /// A running similarity-search service.
 pub struct Service {
     reference: Arc<Vec<f64>>,
+    index: Arc<RefIndex>,
     senders: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
+    #[cfg(feature = "xla")]
     engine_tx: Option<Sender<EngineJob>>,
+    #[cfg(feature = "xla")]
     engine_handle: Option<JoinHandle<()>>,
     sync_every: usize,
     busy: Arc<AtomicU64>,
@@ -89,11 +108,12 @@ pub struct Service {
 }
 
 impl Service {
-    /// Spawn the worker pool (and engine thread, if artifacts are given)
-    /// over `reference`.
+    /// Spawn the worker pool (and engine thread, if artifacts are given
+    /// and the `xla` feature is on) over `reference`.
     pub fn new(reference: Vec<f64>, cfg: &ServiceConfig) -> Result<Self> {
         anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
         let reference = Arc::new(reference);
+        let index = Arc::new(RefIndex::new(Arc::clone(&reference)));
         let busy = Arc::new(AtomicU64::new(0));
         let mut senders = Vec::new();
         let mut handles = Vec::new();
@@ -107,6 +127,7 @@ impl Service {
             );
             senders.push(tx);
         }
+        #[cfg(feature = "xla")]
         let (engine_tx, engine_handle) = match &cfg.artifacts_dir {
             Some(dir) => {
                 let (tx, rx) = channel::<EngineJob>();
@@ -121,9 +142,12 @@ impl Service {
         };
         Ok(Self {
             reference,
+            index,
             senders,
             handles,
+            #[cfg(feature = "xla")]
             engine_tx,
+            #[cfg(feature = "xla")]
             engine_handle,
             sync_every: cfg.sync_every,
             busy,
@@ -145,14 +169,26 @@ impl Service {
         self.reference.len()
     }
 
+    /// The shared reference-side index (stats buckets + envelope tables).
+    pub fn index(&self) -> &Arc<RefIndex> {
+        &self.index
+    }
+
     pub fn queries_served(&self) -> u64 {
         self.served.load(Ordering::Relaxed)
     }
 
+    #[cfg(feature = "xla")]
     pub fn has_engine(&self) -> bool {
         self.engine_tx.is_some()
     }
 
+    #[cfg(not(feature = "xla"))]
+    pub fn has_engine(&self) -> bool {
+        false
+    }
+
+    #[cfg(feature = "xla")]
     fn submit_xla(&self, req: &QueryRequest, w: usize, full: bool) -> Result<(Match, Counters)> {
         let tx = self
             .engine_tx
@@ -164,30 +200,60 @@ impl Service {
         reply_rx.recv().map_err(|_| anyhow!("engine thread died mid-query"))?
     }
 
-    /// Serve one request to completion (blocking).
+    /// Serve one request to completion (blocking): top-k over the shard
+    /// workers, reference-side artifacts served by the shared index.
     pub fn submit(&self, req: &QueryRequest) -> Result<QueryResponse> {
         let timer = Timer::start();
         let w = window_cells(req.query.len(), req.window_ratio);
-        let (m, counters) = match req.suite {
-            Suite::UcrMonXla => self.submit_xla(req, w, false)?,
-            _ => route_query(
-                &self.senders,
-                &self.reference,
-                &req.query,
-                w,
-                req.suite,
-                self.sync_every,
-            )?,
+        let (matches, counters) = match req.suite {
+            #[cfg(feature = "xla")]
+            Suite::UcrMonXla => {
+                // the batched prefilter path keeps a single best-so-far
+                anyhow::ensure!(req.k == 1, "suite {} serves k = 1 only", req.suite.name());
+                let (m, c) = self.submit_xla(req, w, false)?;
+                (vec![m], c)
+            }
+            #[cfg(not(feature = "xla"))]
+            Suite::UcrMonXla => anyhow::bail!(
+                "suite {} unavailable: this build has the `xla` feature compiled out",
+                req.suite.name()
+            ),
+            _ => {
+                // empty / oversized queries and k = 0 error inside
+                // stats_for and route_query_topk respectively
+                let mut pre = Counters::new();
+                let stats = self.index.stats_for(req.query.len(), &mut pre)?;
+                let denv = req
+                    .suite
+                    .cascade()
+                    .needs_data_envelopes()
+                    .then(|| self.index.envelopes_for(w, &mut pre));
+                let (matches, mut counters) = route_query_topk(
+                    &self.senders,
+                    &self.reference,
+                    &req.query,
+                    w,
+                    req.suite,
+                    req.k,
+                    self.sync_every,
+                    denv,
+                    Some(stats),
+                )?;
+                counters.merge(&pre);
+                (matches, counters)
+            }
         };
         self.served.fetch_add(1, Ordering::Relaxed);
         let pruned = counters.lb_kim_prunes
             + counters.lb_keogh_eq_prunes
             + counters.lb_keogh_ec_prunes
             + counters.xla_prunes;
+        let best = matches[0];
         Ok(QueryResponse {
             id: req.id,
-            pos: m.pos,
-            dist: m.dist,
+            pos: best.pos,
+            dist: best.dist,
+            matches,
             latency_ms: timer.elapsed_secs() * 1e3,
             candidates: counters.candidates,
             pruned,
@@ -196,6 +262,7 @@ impl Service {
     }
 
     /// Ablation A3 entry: resolve a query entirely on the XLA side.
+    #[cfg(feature = "xla")]
     pub fn submit_xla_full(&self, req: &QueryRequest) -> Result<QueryResponse> {
         let timer = Timer::start();
         let w = window_cells(req.query.len(), req.window_ratio);
@@ -205,6 +272,7 @@ impl Service {
             id: req.id,
             pos: m.pos,
             dist: m.dist,
+            matches: vec![m],
             latency_ms: timer.elapsed_secs() * 1e3,
             candidates: counters.candidates,
             pruned: counters.xla_prunes,
@@ -222,10 +290,14 @@ impl Drop for Service {
     fn drop(&mut self) {
         // closing the channels ends the worker loops
         self.senders.clear();
-        self.engine_tx = None;
+        #[cfg(feature = "xla")]
+        {
+            self.engine_tx = None;
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        #[cfg(feature = "xla")]
         if let Some(h) = self.engine_handle.take() {
             let _ = h.join();
         }
@@ -236,7 +308,7 @@ impl Drop for Service {
 mod tests {
     use super::*;
     use crate::data::Dataset;
-    use crate::search::subsequence::search_subsequence;
+    use crate::search::subsequence::{search_subsequence, search_subsequence_topk};
 
     #[test]
     fn service_matches_direct_search() {
@@ -244,14 +316,63 @@ mod tests {
         let q = crate::data::extract_queries(&r, 1, 128, 0.1, 3).remove(0);
         let svc = Service::new(r.clone(), &ServiceConfig { shards: 3, ..Default::default() })
             .unwrap();
-        let req = QueryRequest { id: 1, query: q.clone(), window_ratio: 0.1, suite: Suite::UcrMon };
+        let req = QueryRequest {
+            id: 1,
+            query: q.clone(),
+            window_ratio: 0.1,
+            suite: Suite::UcrMon,
+            k: 1,
+        };
         let resp = svc.submit(&req).unwrap();
         let mut c = Counters::new();
         let want = search_subsequence(&r, &q, window_cells(q.len(), 0.1), Suite::UcrMon, &mut c);
         assert_eq!(resp.pos, want.pos);
         assert!((resp.dist - want.dist).abs() < 1e-9);
         assert_eq!(resp.candidates, c.candidates);
+        assert_eq!(resp.matches.len(), 1);
         assert_eq!(svc.queries_served(), 1);
+    }
+
+    #[test]
+    fn topk_submit_matches_direct_topk() {
+        let r = Dataset::Refit.generate(3000, 12);
+        let q = crate::data::extract_queries(&r, 1, 128, 0.1, 13).remove(0);
+        let svc = Service::new(r.clone(), &ServiceConfig { shards: 4, ..Default::default() })
+            .unwrap();
+        let k = 5;
+        let req =
+            QueryRequest { id: 9, query: q.clone(), window_ratio: 0.2, suite: Suite::UcrMon, k };
+        let resp = svc.submit(&req).unwrap();
+        let mut c = Counters::new();
+        let want =
+            search_subsequence_topk(&r, &q, window_cells(q.len(), 0.2), k, Suite::UcrMon, &mut c);
+        assert_eq!(resp.matches.len(), k);
+        for (g, m) in resp.matches.iter().zip(&want) {
+            assert_eq!(g.pos, m.pos);
+            assert!((g.dist - m.dist).abs() < 1e-9);
+        }
+        assert_eq!(resp.pos, resp.matches[0].pos);
+    }
+
+    #[test]
+    fn repeated_submissions_hit_the_index() {
+        let r = Dataset::Ppg.generate(2000, 6);
+        let svc =
+            Service::new(r.clone(), &ServiceConfig { shards: 2, ..Default::default() }).unwrap();
+        let qs = crate::data::extract_queries(&r, 3, 128, 0.1, 7);
+        for (i, q) in qs.into_iter().enumerate() {
+            let req = QueryRequest {
+                id: i as u64,
+                query: q,
+                window_ratio: 0.1,
+                suite: Suite::UcrMon,
+                k: 2,
+            };
+            svc.submit(&req).unwrap();
+        }
+        let (hits, misses) = svc.index().hit_counts();
+        assert_eq!(misses, 2, "stats bucket + envelopes built once");
+        assert_eq!(hits, 4, "…and reused by the two later queries");
     }
 
     #[test]
@@ -270,6 +391,7 @@ mod tests {
                     query: q,
                     window_ratio: 0.2,
                     suite: Suite::UcrMon,
+                    k: 1,
                 };
                 svc.submit(&req).unwrap()
             }));
@@ -286,11 +408,13 @@ mod tests {
         let r = Dataset::Ecg.generate(1000, 5);
         let svc = Service::new(r.clone(), &ServiceConfig::default()).unwrap();
         let q = crate::data::extract_queries(&r, 1, 128, 0.1, 6).remove(0);
-        let req = QueryRequest { id: 1, query: q, window_ratio: 0.1, suite: Suite::UcrMonXla };
+        let req =
+            QueryRequest { id: 1, query: q, window_ratio: 0.1, suite: Suite::UcrMonXla, k: 1 };
         assert!(svc.submit(&req).is_err());
         assert!(!svc.has_engine());
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn bad_artifacts_dir_reports_through_channel() {
         let r = Dataset::Ecg.generate(1000, 5);
@@ -307,6 +431,7 @@ mod tests {
             query: vec![0.0; 128],
             window_ratio: 0.1,
             suite: Suite::UcrMonXla,
+            k: 1,
         };
         let err = svc.submit(&req).unwrap_err();
         assert!(err.to_string().contains("unavailable"), "{err}");

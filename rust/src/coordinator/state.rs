@@ -1,10 +1,13 @@
-//! Shared search state: the global best-so-far upper bound.
+//! Shared search state: the global abandon threshold.
 //!
 //! This is the serving-layer analogue of the paper's upper-bound
-//! tightening: every shard worker abandons against the *global* best, so a
-//! good early match in one shard immediately accelerates every other
-//! shard. Implemented as an atomic f64 (bits in an `AtomicU64`) — lock-free
-//! on the hot path.
+//! tightening, generalised to top-k: every shard worker abandons against
+//! the tightest *k-th best* distance any shard has published (a shard
+//! whose local heap holds k results publishes its k-th best — the union
+//! of all shards then has at least k results at or below it, so the
+//! value is a valid global cutoff; with k = 1 this degenerates to the
+//! seed's shared best-so-far). Implemented as an atomic f64 (bits in an
+//! `AtomicU64`) — lock-free on the hot path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;

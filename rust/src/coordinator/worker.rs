@@ -1,5 +1,7 @@
 //! Shard workers: each scans a slice of the reference with the suite's
-//! cascade + DTW core, abandoning against the *global* shared upper bound.
+//! cascade + DTW core, collecting its local top-k and abandoning against
+//! the *global* shared threshold (the k-th best distance any shard has
+//! published).
 //!
 //! Shards overlap by `qlen - 1` positions implicitly: a shard owns the
 //! candidate *start positions* `[start, end)`, while its windows read up to
@@ -11,17 +13,71 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 use crate::coordinator::state::SharedUb;
+use crate::index::ref_index::BucketStats;
+use crate::index::topk::TopK;
 use crate::metrics::Counters;
-use crate::search::subsequence::{scan, DataEnvelopes, Match, QueryContext};
+use crate::search::subsequence::{
+    scan_topk_policy, DataEnvelopes, Match, QueryContext, ScanStats,
+};
 use crate::search::suite::Suite;
 
 /// How many candidate positions a worker scans between synchronisations
-/// with the shared upper bound.
+/// with the shared threshold.
 pub const DEFAULT_SYNC_EVERY: usize = 1024;
 
-/// Scan shard `[start, end)` in blocks, syncing the upper bound with
-/// `shared` between blocks: improvements flow both ways (the serving
-/// analogue of upper-bound tightening).
+/// Scan shard `[start, end)` in blocks, collecting the local top-k and
+/// syncing the threshold with `shared` between blocks: a full local heap
+/// publishes its k-th best (a valid upper bound on the global k-th best,
+/// since the union already holds k results at or below it), and adopts
+/// whatever tighter value other shards published — the serving analogue
+/// of the paper's upper-bound tightening, generalised to k results.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_shard_topk(
+    reference: &[f64],
+    start: usize,
+    end: usize,
+    ctx: &mut QueryContext,
+    denv: Option<&DataEnvelopes>,
+    stats: Option<&BucketStats>,
+    suite: Suite,
+    k: usize,
+    shared: &SharedUb,
+    sync_every: usize,
+    counters: &mut Counters,
+) -> TopK {
+    let n = ctx.len();
+    let end = end.min(reference.len().saturating_sub(n) + 1);
+    let mut topk = TopK::new(k);
+    let mut block_start = start;
+    while block_start < end {
+        let block_end = (block_start + sync_every.max(1)).min(end);
+        topk.set_bound(shared.get());
+        let src = match stats {
+            Some(table) => ScanStats::Indexed(table),
+            None => ScanStats::Streaming,
+        };
+        scan_topk_policy(
+            reference,
+            block_start,
+            block_end,
+            ctx,
+            denv,
+            src,
+            suite,
+            suite.cascade(),
+            &mut topk,
+            counters,
+        );
+        if let Some(kth) = topk.kth_dist() {
+            shared.tighten(kth);
+        }
+        block_start = block_end;
+    }
+    topk
+}
+
+/// The scalar (`k = 1`) shard scan the seed exposed; returns the shard's
+/// best match strictly below the bounds seen, or `None`.
 #[allow(clippy::too_many_arguments)]
 pub fn scan_shard(
     reference: &[f64],
@@ -34,25 +90,12 @@ pub fn scan_shard(
     sync_every: usize,
     counters: &mut Counters,
 ) -> Option<Match> {
-    let n = ctx.len();
-    let end = end.min(reference.len().saturating_sub(n) + 1);
-    let mut best: Option<Match> = None;
-    let mut block_start = start;
-    while block_start < end {
-        let block_end = (block_start + sync_every).min(end);
-        // local best-so-far = global, tightened by our own best
-        let bsf = shared.get().min(best.map_or(f64::INFINITY, |m| m.dist));
-        if let Some(m) = scan(
-            reference, block_start, block_end, ctx, denv, suite, bsf, counters,
-        ) {
-            if best.is_none_or(|b| m.dist < b.dist) {
-                best = Some(m);
-                shared.tighten(m.dist);
-            }
-        }
-        block_start = block_end;
-    }
-    best
+    scan_shard_topk(
+        reference, start, end, ctx, denv, None, suite, 1, shared, sync_every, counters,
+    )
+    .into_sorted()
+    .into_iter()
+    .next()
 }
 
 /// A unit of shard work dispatched to a worker thread.
@@ -62,11 +105,17 @@ pub struct Job {
     pub end: usize,
     /// fresh context for this query (each worker owns its buffers)
     pub ctx: QueryContext,
+    /// reference envelopes — per-query or served by the shared index
     pub denv: Option<Arc<DataEnvelopes>>,
+    /// precomputed window stats from the shared index (`None` = stream)
+    pub stats: Option<Arc<BucketStats>>,
     pub suite: Suite,
+    /// how many results the query wants
+    pub k: usize,
     pub shared: Arc<SharedUb>,
     pub sync_every: usize,
-    pub reply: Sender<(Option<Match>, Counters)>,
+    /// local top-k (ascending) + this shard's counters
+    pub reply: Sender<(Vec<Match>, Counters)>,
 }
 
 /// Worker loop: run jobs until the channel closes.
@@ -74,19 +123,21 @@ pub fn worker_loop(rx: Receiver<Job>, busy: Arc<AtomicU64>) {
     while let Ok(mut job) = rx.recv() {
         busy.fetch_add(1, Ordering::Relaxed);
         let mut counters = Counters::new();
-        let m = scan_shard(
+        let topk = scan_shard_topk(
             &job.reference,
             job.start,
             job.end,
             &mut job.ctx,
             job.denv.as_deref(),
+            job.stats.as_deref(),
             job.suite,
+            job.k,
             &job.shared,
             job.sync_every,
             &mut counters,
         );
         // receiver may have given up (service shutdown): ignore send errors
-        let _ = job.reply.send((m, counters));
+        let _ = job.reply.send((topk.into_sorted(), counters));
         busy.fetch_sub(1, Ordering::Relaxed);
     }
 }
@@ -95,7 +146,7 @@ pub fn worker_loop(rx: Receiver<Job>, busy: Arc<AtomicU64>) {
 mod tests {
     use super::*;
     use crate::data::Dataset;
-    use crate::search::subsequence::search_subsequence;
+    use crate::search::subsequence::{search_subsequence, search_subsequence_topk};
 
     #[test]
     fn scan_shard_with_shared_ub_matches_plain_search() {
@@ -129,5 +180,48 @@ mod tests {
         assert!((got.dist - want.dist).abs() < 1e-9);
         // shared bound lets later shards prune at least as hard
         assert!(counters.dtw_calls <= cfull.dtw_calls + (nshards as u64) * 4);
+    }
+
+    #[test]
+    fn sharded_topk_union_equals_full_topk() {
+        let r = Dataset::Ecg.generate(3000, 17);
+        let q = crate::data::extract_queries(&r, 1, 96, 0.1, 18).remove(0);
+        let w = 9;
+        let k = 6;
+        let suite = Suite::UcrMon;
+        let mut cfull = Counters::new();
+        let want = search_subsequence_topk(&r, &q, w, k, suite, &mut cfull);
+
+        let table = BucketStats::build(&r, q.len());
+        let shared = SharedUb::new(f64::INFINITY);
+        let denv = DataEnvelopes::new(&r, w);
+        let total = r.len() - q.len() + 1;
+        let mut merged = TopK::new(k);
+        let mut counters = Counters::new();
+        for s in 0..3 {
+            let start = s * total / 3;
+            let end = (s + 1) * total / 3;
+            let mut ctx = QueryContext::new(&q, w);
+            let local = scan_shard_topk(
+                &r,
+                start,
+                end,
+                &mut ctx,
+                Some(&denv),
+                Some(&table),
+                suite,
+                k,
+                &shared,
+                512,
+                &mut counters,
+            );
+            merged.merge(local);
+        }
+        let got = merged.into_sorted();
+        assert_eq!(got.len(), want.len());
+        for (g, m) in got.iter().zip(&want) {
+            assert_eq!(g.pos, m.pos);
+            assert!((g.dist - m.dist).abs() < 1e-9);
+        }
     }
 }

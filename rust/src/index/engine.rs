@@ -1,0 +1,223 @@
+//! The batched multi-query search engine: one shared [`RefIndex`], one
+//! shard-worker pool, many concurrent top-k queries.
+//!
+//! [`Engine::search_batch`] is the amortisation point the index exists
+//! for: the first query of a batch pays to build the stats bucket and
+//! envelope arrays; every later query (and every later batch) reuses them
+//! for free. `benches/index_amortization.rs` measures the per-query cost
+//! falling as the batch grows.
+
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::coordinator::router::route_query_topk;
+use crate::coordinator::worker::{worker_loop, Job, DEFAULT_SYNC_EVERY};
+use crate::index::ref_index::RefIndex;
+use crate::metrics::Counters;
+use crate::search::subsequence::{window_cells, Match};
+use crate::search::suite::Suite;
+
+/// One query of a batch: raw (un-normalised) points plus its warping
+/// window as a ratio of the query length, the paper's §5 convention.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    pub query: Vec<f64>,
+    pub window_ratio: f64,
+}
+
+impl Query {
+    pub fn new(query: Vec<f64>, window_ratio: f64) -> Self {
+        Self { query, window_ratio }
+    }
+}
+
+/// The k best matches of one query, ascending `(dist, pos)`, plus the
+/// aggregated counters of its sharded scan.
+#[derive(Debug, Clone)]
+pub struct TopKResult {
+    pub matches: Vec<Match>,
+    pub counters: Counters,
+}
+
+impl TopKResult {
+    /// The single best match (always present: a fresh scan accepts its
+    /// first candidate).
+    pub fn best(&self) -> Match {
+        self.matches[0]
+    }
+}
+
+/// Engine construction knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// shard workers the candidate space is split across
+    pub shards: usize,
+    /// positions between shared-threshold syncs in the workers
+    pub sync_every: usize,
+    /// DTW core + cascade policy every query runs under
+    pub suite: Suite,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { shards: 2, sync_every: DEFAULT_SYNC_EVERY, suite: Suite::UcrMon }
+    }
+}
+
+/// A running multi-query engine over one indexed reference stream.
+pub struct Engine {
+    index: Arc<RefIndex>,
+    suite: Suite,
+    sync_every: usize,
+    senders: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    busy: Arc<AtomicU64>,
+}
+
+impl Engine {
+    /// Index `reference` and spawn the worker pool.
+    pub fn new(reference: Vec<f64>, cfg: &EngineConfig) -> Result<Self> {
+        Self::over_index(Arc::new(RefIndex::new(Arc::new(reference))), cfg)
+    }
+
+    /// Spawn a pool over an existing (possibly already warm) index —
+    /// several engines can share one index of the same stream.
+    pub fn over_index(index: Arc<RefIndex>, cfg: &EngineConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
+        anyhow::ensure!(index.reference_len() > 0, "empty reference");
+        let busy = Arc::new(AtomicU64::new(0));
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..cfg.shards {
+            let (tx, rx) = channel::<Job>();
+            let busy = Arc::clone(&busy);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("engine-shard-{i}"))
+                    .spawn(move || worker_loop(rx, busy))?,
+            );
+            senders.push(tx);
+        }
+        Ok(Self {
+            index,
+            suite: cfg.suite,
+            sync_every: cfg.sync_every,
+            senders,
+            handles,
+            busy,
+        })
+    }
+
+    pub fn index(&self) -> &Arc<RefIndex> {
+        &self.index
+    }
+
+    pub fn reference_len(&self) -> usize {
+        self.index.reference_len()
+    }
+
+    /// Answer one top-k query through the shared index and worker pool.
+    pub fn search_one(&self, q: &Query, k: usize) -> Result<TopKResult> {
+        anyhow::ensure!(k >= 1, "k must be >= 1");
+        anyhow::ensure!(!q.query.is_empty(), "empty query");
+        let w = window_cells(q.query.len(), q.window_ratio);
+        let mut pre = Counters::new();
+        let stats = self.index.stats_for(q.query.len(), &mut pre)?;
+        let denv = self
+            .suite
+            .cascade()
+            .needs_data_envelopes()
+            .then(|| self.index.envelopes_for(w, &mut pre));
+        let (matches, mut counters) = route_query_topk(
+            &self.senders,
+            self.index.reference(),
+            &q.query,
+            w,
+            self.suite,
+            k,
+            self.sync_every,
+            denv,
+            Some(stats),
+        )?;
+        counters.merge(&pre);
+        Ok(TopKResult { matches, counters })
+    }
+
+    /// Answer a batch of top-k queries, reusing the index across the
+    /// whole batch. Results are in query order.
+    pub fn search_batch(&self, queries: &[Query], k: usize) -> Result<Vec<TopKResult>> {
+        queries.iter().map(|q| self.search_one(q, k)).collect()
+    }
+
+    /// Workers currently scanning.
+    pub fn busy_workers(&self) -> u64 {
+        self.busy.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{extract_queries, Dataset};
+    use crate::search::subsequence::search_subsequence;
+
+    #[test]
+    fn batch_k1_matches_direct_search() {
+        let r = Dataset::Ecg.generate(3000, 8);
+        let qs: Vec<Query> = extract_queries(&r, 3, 128, 0.1, 9)
+            .into_iter()
+            .map(|q| Query::new(q, 0.1))
+            .collect();
+        let engine = Engine::new(r.clone(), &EngineConfig::default()).unwrap();
+        let results = engine.search_batch(&qs, 1).unwrap();
+        for (q, res) in qs.iter().zip(&results) {
+            let mut c = Counters::new();
+            let want =
+                search_subsequence(&r, &q.query, window_cells(q.query.len(), 0.1), Suite::UcrMon, &mut c);
+            assert_eq!(res.matches.len(), 1);
+            assert_eq!(res.best().pos, want.pos);
+            assert!((res.best().dist - want.dist).abs() < 1e-9);
+            assert_eq!(res.counters.candidates, c.candidates);
+        }
+        // batch of 3 same-shape queries: stats + envelopes built once,
+        // then served from cache
+        let (hits, misses) = engine.index().hit_counts();
+        assert_eq!(misses, 2, "one stats bucket + one envelope build");
+        assert_eq!(hits, 4, "two later queries x two artifacts");
+    }
+
+    #[test]
+    fn topk_results_are_sorted_and_distinct() {
+        let r = Dataset::Ppg.generate(2500, 4);
+        let q = Query::new(extract_queries(&r, 1, 128, 0.1, 5).remove(0), 0.2);
+        let engine = Engine::new(r, &EngineConfig { shards: 3, ..Default::default() }).unwrap();
+        let res = engine.search_one(&q, 8).unwrap();
+        assert_eq!(res.matches.len(), 8);
+        for pair in res.matches.windows(2) {
+            assert!(pair[0].dist <= pair[1].dist);
+            assert_ne!(pair[0].pos, pair[1].pos);
+        }
+        assert!(res.counters.topk_updates >= 8);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let engine = Engine::new(Dataset::Ecg.generate(500, 1), &EngineConfig::default()).unwrap();
+        assert!(engine.search_one(&Query::new(vec![], 0.1), 1).is_err());
+        assert!(engine.search_one(&Query::new(vec![0.0; 1000], 0.1), 1).is_err());
+        assert!(engine.search_one(&Query::new(vec![0.0; 64], 0.1), 0).is_err());
+    }
+}

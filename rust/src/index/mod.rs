@@ -1,0 +1,27 @@
+//! Reference-side index + top-k multi-query search engine (system S15).
+//!
+//! The paper's UCR-style loop does all reference-side work per query:
+//! candidate stats are streamed, data envelopes rebuilt, and a single
+//! scalar best-so-far drives early abandoning. Once EAPrunedDTW makes the
+//! query-side cheap (paper §5), that per-query reference work dominates a
+//! serving workload. This layer amortises it:
+//!
+//! * [`ref_index::RefIndex`] — per-position window stats (one table per
+//!   query-length bucket) and raw-stream envelopes for the reversed
+//!   LB_Keogh "EC" bound, computed once per reference and shared
+//!   read-only across queries, batches and shard workers.
+//! * [`topk::TopK`] — a bounded max-heap of the k best matches whose k-th
+//!   distance replaces the scalar best-so-far as the early-abandon
+//!   threshold threaded through the cascade and the DTW cores.
+//! * [`engine::Engine`] — the batched multi-query front end:
+//!   [`engine::Engine::search_batch`] answers a batch of top-k queries
+//!   over one shared index, fanning each query out across the coordinator
+//!   shard workers.
+
+pub mod engine;
+pub mod ref_index;
+pub mod topk;
+
+pub use engine::{Engine, EngineConfig, Query, TopKResult};
+pub use ref_index::{BucketStats, RefIndex};
+pub use topk::TopK;

@@ -1,0 +1,267 @@
+//! The reference-side index: everything about one reference stream that is
+//! query-independent, computed once and shared read-only across queries,
+//! batches and shard workers.
+//!
+//! Two artifact families live here, keyed by the only two query parameters
+//! they depend on:
+//!
+//! * [`BucketStats`] — per-position window mean/std for one query-length
+//!   bucket, so candidate z-normalisation needs no streaming state. The
+//!   table is built with the *same* running-sum recurrence (including the
+//!   periodic refresh) as [`crate::norm::znorm::WindowStats`] scanning
+//!   from position 0, so an indexed scan is bit-identical to the seed's
+//!   full streaming scan — and, unlike streaming, independent of where
+//!   shard boundaries fall.
+//! * Reference envelopes for one warping-window size — the Lemire
+//!   envelopes of the *raw* stream that the reversed LB_Keogh "EC" bound
+//!   consumes ([`crate::search::subsequence::DataEnvelopes`]). The seed
+//!   recomputed these O(ref_len) arrays per query; the index computes them
+//!   once per window size and hands out `Arc`s.
+//!
+//! Both caches fill lazily and count hits into
+//! [`Counters::index_hits`](crate::metrics::Counters), so the serving
+//! layer can report how much reference-side work the index amortised.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::Result;
+
+use crate::metrics::Counters;
+use crate::norm::znorm::WindowStats;
+use crate::search::subsequence::DataEnvelopes;
+
+/// Per-position (mean, std) of every window of one length over the
+/// reference — the z-norm statistics table for one query-length bucket.
+#[derive(Debug, Clone)]
+pub struct BucketStats {
+    qlen: usize,
+    mean: Vec<f64>,
+    std: Vec<f64>,
+}
+
+impl BucketStats {
+    /// Build the table for windows of `qlen` points. Panics if the
+    /// reference is shorter than `qlen` or `qlen == 0` (as
+    /// [`WindowStats::new`] does).
+    pub fn build(reference: &[f64], qlen: usize) -> Self {
+        let mut ws = WindowStats::new(reference, qlen);
+        let total = reference.len() - qlen + 1;
+        let mut mean = Vec::with_capacity(total);
+        let mut std = Vec::with_capacity(total);
+        loop {
+            let (m, s) = ws.mean_std();
+            mean.push(m);
+            std.push(s);
+            if !ws.advance() {
+                break;
+            }
+        }
+        debug_assert_eq!(mean.len(), total);
+        Self { qlen, mean, std }
+    }
+
+    /// Window length this bucket serves.
+    pub fn qlen(&self) -> usize {
+        self.qlen
+    }
+
+    /// Number of candidate positions covered.
+    pub fn positions(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// (mean, std) of the window starting at `pos`.
+    #[inline]
+    pub fn mean_std(&self, pos: usize) -> (f64, f64) {
+        (self.mean[pos], self.std[pos])
+    }
+}
+
+/// Shared, read-only reference-side index: one per reference stream,
+/// `Arc`-shared by every query, batch and shard worker that scans it.
+#[derive(Debug)]
+pub struct RefIndex {
+    reference: Arc<Vec<f64>>,
+    stats: RwLock<BTreeMap<usize, Arc<BucketStats>>>,
+    envelopes: RwLock<BTreeMap<usize, Arc<DataEnvelopes>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl RefIndex {
+    /// Cache cap per artifact family. Query lengths and window sizes are
+    /// client-controlled; past this many distinct keys, new artifacts are
+    /// built per call and *not* retained, so a scan over many shapes
+    /// cannot grow the index without bound (real workloads use a handful
+    /// of length buckets, which stay cached).
+    pub const MAX_CACHED: usize = 32;
+
+    pub fn new(reference: Arc<Vec<f64>>) -> Self {
+        Self {
+            reference,
+            stats: RwLock::new(BTreeMap::new()),
+            envelopes: RwLock::new(BTreeMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The indexed reference stream.
+    pub fn reference(&self) -> &Arc<Vec<f64>> {
+        &self.reference
+    }
+
+    pub fn reference_len(&self) -> usize {
+        self.reference.len()
+    }
+
+    /// Cache hits / misses over both artifact families since construction.
+    pub fn hit_counts(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    fn record(&self, hit: bool, counters: &mut Counters) {
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            counters.index_hits += 1;
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The window-stats table for query length `qlen`, building it on
+    /// first use. Errors on a degenerate bucket instead of panicking.
+    pub fn stats_for(&self, qlen: usize, counters: &mut Counters) -> Result<Arc<BucketStats>> {
+        anyhow::ensure!(qlen > 0, "empty query length bucket");
+        anyhow::ensure!(
+            self.reference.len() >= qlen,
+            "reference ({} points) shorter than query ({qlen})",
+            self.reference.len()
+        );
+        if let Some(t) = self.stats.read().expect("stats lock").get(&qlen) {
+            self.record(true, counters);
+            return Ok(Arc::clone(t));
+        }
+        // build outside any lock: O(ref_len), and concurrent builders of
+        // the same bucket produce identical tables (first insert wins)
+        let built = Arc::new(BucketStats::build(&self.reference, qlen));
+        let mut map = self.stats.write().expect("stats lock");
+        let out = if map.len() < Self::MAX_CACHED || map.contains_key(&qlen) {
+            Arc::clone(map.entry(qlen).or_insert(built))
+        } else {
+            built
+        };
+        drop(map);
+        self.record(false, counters);
+        Ok(out)
+    }
+
+    /// The raw-stream envelopes for warping window `w` (cells), building
+    /// them on first use.
+    pub fn envelopes_for(&self, w: usize, counters: &mut Counters) -> Arc<DataEnvelopes> {
+        if let Some(e) = self.envelopes.read().expect("envelope lock").get(&w) {
+            self.record(true, counters);
+            return Arc::clone(e);
+        }
+        let built = Arc::new(DataEnvelopes::new(&self.reference, w));
+        let mut map = self.envelopes.write().expect("envelope lock");
+        let out = if map.len() < Self::MAX_CACHED || map.contains_key(&w) {
+            Arc::clone(map.entry(w).or_insert(built))
+        } else {
+            built
+        };
+        drop(map);
+        self.record(false, counters);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::norm::znorm::stats;
+
+    #[test]
+    fn bucket_stats_match_streaming_and_batch() {
+        let r = Dataset::Ecg.generate(600, 11);
+        let n = 48;
+        let t = BucketStats::build(&r, n);
+        assert_eq!(t.positions(), r.len() - n + 1);
+        // bit-identical to the streaming scan it mirrors
+        let mut ws = WindowStats::new(&r, n);
+        loop {
+            let (m, s) = ws.mean_std();
+            let (tm, ts) = t.mean_std(ws.pos());
+            assert_eq!(m, tm, "pos {}", ws.pos());
+            assert_eq!(s, ts, "pos {}", ws.pos());
+            if !ws.advance() {
+                break;
+            }
+        }
+        // and within fp tolerance of the batch oracle
+        for pos in [0usize, 7, 100, r.len() - n] {
+            let (bm, bs) = stats(&r[pos..pos + n]);
+            let (tm, ts) = t.mean_std(pos);
+            assert!((tm - bm).abs() < 1e-8);
+            assert!((ts - bs).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn caches_hit_on_reuse() {
+        let r = Arc::new(Dataset::Ppg.generate(500, 3));
+        let idx = RefIndex::new(r);
+        let mut c = Counters::new();
+        let a = idx.stats_for(32, &mut c).unwrap();
+        assert_eq!(c.index_hits, 0);
+        let b = idx.stats_for(32, &mut c).unwrap();
+        assert_eq!(c.index_hits, 1);
+        assert!(Arc::ptr_eq(&a, &b));
+        let e1 = idx.envelopes_for(5, &mut c);
+        let e2 = idx.envelopes_for(5, &mut c);
+        assert!(Arc::ptr_eq(&e1, &e2));
+        assert_eq!(c.index_hits, 2);
+        assert_eq!(idx.hit_counts(), (2, 2));
+    }
+
+    #[test]
+    fn envelopes_match_direct_construction() {
+        let r = Arc::new(Dataset::FoG.generate(400, 9));
+        let idx = RefIndex::new(Arc::clone(&r));
+        let mut c = Counters::new();
+        let e = idx.envelopes_for(7, &mut c);
+        let want = DataEnvelopes::new(&r, 7);
+        assert_eq!(e.upper, want.upper);
+        assert_eq!(e.lower, want.lower);
+    }
+
+    #[test]
+    fn cache_stops_growing_at_cap() {
+        let r = Arc::new(Dataset::Soccer.generate(400, 5));
+        let idx = RefIndex::new(r);
+        let mut c = Counters::new();
+        for qlen in 2..(RefIndex::MAX_CACHED + 50) {
+            idx.stats_for(qlen, &mut c).unwrap();
+        }
+        // every key past the cap was served uncached (a repeat is a miss)
+        let over = RefIndex::MAX_CACHED + 10;
+        let (hits_before, _) = idx.hit_counts();
+        idx.stats_for(over, &mut c).unwrap();
+        assert_eq!(idx.hit_counts().0, hits_before, "over-cap key must not be cached");
+        // …while keys below the cap still hit
+        idx.stats_for(2, &mut c).unwrap();
+        assert_eq!(idx.hit_counts().0, hits_before + 1);
+    }
+
+    #[test]
+    fn degenerate_buckets_error() {
+        let idx = RefIndex::new(Arc::new(vec![0.0; 10]));
+        let mut c = Counters::new();
+        assert!(idx.stats_for(0, &mut c).is_err());
+        assert!(idx.stats_for(11, &mut c).is_err());
+        assert!(idx.stats_for(10, &mut c).is_ok());
+    }
+}

@@ -1,0 +1,268 @@
+//! Bounded top-k result collector: a max-heap of the k best matches whose
+//! worst (k-th best) distance is the search's early-abandon threshold.
+//!
+//! This generalises the scalar best-so-far of the UCR loop: with `k = 1`
+//! the collector *is* a best-so-far — [`TopK::offer`] accepts exactly when
+//! the scalar update `d < bsf` would have fired, and [`TopK::threshold`]
+//! returns exactly what the scalar `bsf` would hold — so every k = 1 path
+//! is bit-identical to the seed behaviour (property-tested in
+//! `tests/integration_index.rs`).
+//!
+//! Tie handling follows the seed convention: `offer` requires a *strict*
+//! improvement, so in an ascending-position scan the earliest position
+//! wins a distance tie. Cross-shard merges sort by `(dist, pos)` instead
+//! ([`TopK::merge`]), which resolves ties deterministically in favour of
+//! the smaller position — the same rule the router always used.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::search::subsequence::Match;
+
+/// Heap entry ordered worst-first: larger distance is "greater", and on an
+/// exact distance tie the larger position is "greater" (evicted first).
+#[derive(Debug, Clone, Copy)]
+struct Worst(Match);
+
+impl PartialEq for Worst {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Worst {}
+impl PartialOrd for Worst {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Worst {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0
+            .dist
+            .partial_cmp(&other.0.dist)
+            .expect("no NaN distances")
+            .then(self.0.pos.cmp(&other.0.pos))
+    }
+}
+
+/// Bounded collector of the k best (smallest-distance) matches seen so
+/// far, with an optional external upper bound (the serving layer's shared
+/// global threshold) folded into the abandon cutoff.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+    /// external cutoff: results at or above it can never be accepted
+    bound: f64,
+    heap: BinaryHeap<Worst>,
+}
+
+impl TopK {
+    /// Collector for the k best matches, unbounded from above.
+    pub fn new(k: usize) -> Self {
+        Self::with_bound(k, f64::INFINITY)
+    }
+
+    /// Collector whose cutoff starts at `bound` (pass the incoming
+    /// best-so-far when resuming a scan). Panics if `k == 0`. The heap
+    /// grows on demand, so a large k costs nothing until results arrive
+    /// (callers clamp k to the candidate count; a hostile k must not
+    /// pre-allocate).
+    pub fn with_bound(k: usize, bound: f64) -> Self {
+        assert!(k >= 1, "top-k needs k >= 1");
+        Self { k, bound, heap: BinaryHeap::with_capacity(k.min(1024) + 1) }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Is the collector holding k results already?
+    pub fn is_full(&self) -> bool {
+        self.heap.len() == self.k
+    }
+
+    /// The current early-abandon cutoff: the k-th best distance once k
+    /// results are held, the external bound before that (a not-yet-full
+    /// collector must not discard anything below the external bound).
+    #[inline]
+    pub fn threshold(&self) -> f64 {
+        if self.heap.len() < self.k {
+            self.bound
+        } else {
+            let kth = self.heap.peek().expect("full heap").0.dist;
+            kth.min(self.bound)
+        }
+    }
+
+    /// The k-th best distance held, if the collector is full. This is the
+    /// value a shard publishes to the shared global threshold: the union
+    /// of all shards' results has at least k entries at or below it, so
+    /// it is a valid global cutoff.
+    pub fn kth_dist(&self) -> Option<f64> {
+        if self.is_full() {
+            self.heap.peek().map(|w| w.0.dist)
+        } else {
+            None
+        }
+    }
+
+    /// Lower the external bound (monotone: a looser value is ignored).
+    pub fn set_bound(&mut self, bound: f64) {
+        if bound < self.bound {
+            self.bound = bound;
+        }
+    }
+
+    /// Offer a match; accepted iff it *strictly* beats the current
+    /// threshold (the scalar `d < bsf` rule — which also rejects NaN, as
+    /// the seed's `d < bsf` comparison did; a NaN inside the heap would
+    /// poison its ordering). Returns whether it was kept.
+    pub fn offer(&mut self, m: Match) -> bool {
+        if m.dist.is_nan() || m.dist >= self.threshold() {
+            return false;
+        }
+        if self.is_full() {
+            self.heap.pop();
+        }
+        self.heap.push(Worst(m));
+        true
+    }
+
+    /// Fold another collector's results in, re-ranking by `(dist, pos)` so
+    /// the outcome is independent of merge order (cross-shard ties go to
+    /// the smaller position, the router's historical rule).
+    pub fn merge(&mut self, other: TopK) {
+        let mut all: Vec<Worst> = self.heap.drain().collect();
+        all.extend(other.heap);
+        all.sort();
+        all.truncate(self.k);
+        self.heap.extend(all);
+    }
+
+    /// Results in ascending `(dist, pos)` order, consuming the collector.
+    pub fn into_sorted(self) -> Vec<Match> {
+        self.heap.into_sorted_vec().into_iter().map(|w| w.0).collect()
+    }
+
+    /// Results in ascending `(dist, pos)` order, without consuming.
+    pub fn to_sorted(&self) -> Vec<Match> {
+        self.clone().into_sorted()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(pos: usize, dist: f64) -> Match {
+        Match { pos, dist }
+    }
+
+    #[test]
+    fn k1_behaves_like_best_so_far() {
+        let mut t = TopK::new(1);
+        assert_eq!(t.threshold(), f64::INFINITY);
+        assert!(t.offer(m(5, 3.0)));
+        assert_eq!(t.threshold(), 3.0);
+        // equal distance at a later position is rejected (strict <)
+        assert!(!t.offer(m(9, 3.0)));
+        assert!(t.offer(m(2, 1.0)));
+        assert_eq!(t.into_sorted(), vec![m(2, 1.0)]);
+    }
+
+    #[test]
+    fn keeps_k_smallest_in_order() {
+        let mut t = TopK::new(3);
+        for (pos, dist) in [(0, 5.0), (1, 2.0), (2, 9.0), (3, 1.0), (4, 4.0)] {
+            t.offer(m(pos, dist));
+        }
+        assert_eq!(t.into_sorted(), vec![m(3, 1.0), m(1, 2.0), m(4, 4.0)]);
+    }
+
+    #[test]
+    fn threshold_stays_at_bound_until_full() {
+        let mut t = TopK::with_bound(2, 10.0);
+        assert!(t.offer(m(0, 8.0)));
+        // one slot free: the external bound still rules
+        assert_eq!(t.threshold(), 10.0);
+        assert!(t.offer(m(1, 9.5)));
+        assert_eq!(t.threshold(), 9.5);
+        assert_eq!(t.kth_dist(), Some(9.5));
+        // nothing at/above the cutoff enters
+        assert!(!t.offer(m(2, 9.5)));
+        assert!(t.offer(m(2, 0.5)));
+        assert_eq!(t.into_sorted(), vec![m(2, 0.5), m(0, 8.0)]);
+    }
+
+    #[test]
+    fn external_bound_caps_acceptance() {
+        let mut t = TopK::with_bound(4, 2.0);
+        assert!(!t.offer(m(0, 2.0)));
+        assert!(!t.offer(m(0, 3.0)));
+        assert!(t.offer(m(1, 1.0)));
+        t.set_bound(0.5);
+        assert!(!t.offer(m(2, 0.75)));
+        // loosening is ignored
+        t.set_bound(100.0);
+        assert!(!t.offer(m(3, 0.75)));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn merge_is_order_independent_and_tie_breaks_by_pos() {
+        let mut a = TopK::new(2);
+        a.offer(m(10, 1.0));
+        a.offer(m(11, 3.0));
+        let mut b = TopK::new(2);
+        b.offer(m(4, 3.0));
+        b.offer(m(5, 2.0));
+        let mut ab = a.clone();
+        ab.merge(b.clone());
+        let mut ba = b;
+        ba.merge(a);
+        assert_eq!(ab.to_sorted(), ba.to_sorted());
+        // 1.0@10, then 2.0@5 — the 3.0 tie pair is cut entirely
+        assert_eq!(ab.into_sorted(), vec![m(10, 1.0), m(5, 2.0)]);
+    }
+
+    #[test]
+    fn kth_dist_only_when_full() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.kth_dist(), None);
+        t.offer(m(0, 1.0));
+        assert_eq!(t.kth_dist(), None);
+        t.offer(m(1, 2.0));
+        assert_eq!(t.kth_dist(), Some(2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "k >= 1")]
+    fn zero_k_panics() {
+        TopK::new(0);
+    }
+
+    #[test]
+    fn nan_distance_is_rejected_not_stored() {
+        let mut t = TopK::new(2);
+        assert!(!t.offer(m(0, f64::NAN)));
+        assert!(t.offer(m(1, 1.0)));
+        assert!(!t.offer(m(2, f64::NAN)));
+        assert_eq!(t.into_sorted(), vec![m(1, 1.0)]);
+    }
+
+    #[test]
+    fn huge_k_does_not_preallocate() {
+        // a hostile k must not translate into a proportional allocation
+        let mut t = TopK::new(usize::MAX / 2);
+        assert!(t.offer(m(0, 1.0)));
+        assert_eq!(t.len(), 1);
+    }
+}

@@ -8,14 +8,19 @@
 //! * **Layer 3 (this crate)** — the scalar distance zoo ([`distances`],
 //!   including the paper's [`distances::eap_dtw`]), the UCR-style
 //!   lower-bound cascade ([`bounds`]), the subsequence search engine
-//!   ([`search`]), synthetic stand-ins for the paper's six datasets
-//!   ([`data`]), and a tokio serving layer ([`coordinator`]) that shards a
+//!   ([`search`]), the reference-side index + top-k multi-query engine
+//!   ([`index`]: per-stream window-stats buckets and shared envelopes,
+//!   a bounded top-k heap whose k-th best distance replaces the scalar
+//!   best-so-far, and `Engine::search_batch` amortising the index across
+//!   query batches), synthetic stand-ins for the paper's six datasets
+//!   ([`data`]), and a serving layer ([`coordinator`]) that shards a
 //!   long reference across workers and batches candidates for the XLA
 //!   prefilter.
 //! * **Layer 2/1 (build-time Python, `python/compile/`)** — JAX graphs and
 //!   Pallas kernels (batched z-norm, LB_Keogh, wavefront DTW), AOT-lowered
-//!   to HLO text in `artifacts/` and executed by [`runtime`] via PJRT.
-//!   Python never runs on the request path.
+//!   to HLO text in `artifacts/` and executed by the `runtime` module via
+//!   PJRT (compiled in with the `xla` cargo feature). Python never runs
+//!   on the request path.
 //!
 //! Quickstart:
 //!
@@ -36,8 +41,10 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod distances;
+pub mod index;
 pub mod metrics;
 pub mod norm;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod search;
 pub mod util;
@@ -48,7 +55,10 @@ pub mod prelude {
     pub use crate::config::SearchConfig;
     pub use crate::data::Dataset;
     pub use crate::distances::eap_dtw::{eap_cdtw, eap_dtw};
+    pub use crate::index::{Engine, EngineConfig, Query, RefIndex, TopK, TopKResult};
     pub use crate::metrics::Counters;
-    pub use crate::search::subsequence::{search_subsequence, Match};
+    pub use crate::search::subsequence::{
+        search_subsequence, search_subsequence_topk, Match,
+    };
     pub use crate::search::suite::Suite;
 }

@@ -12,6 +12,7 @@ use repro::config::Config;
 use repro::coordinator::{QueryRequest, Service, ServiceConfig};
 use repro::data::{extract_queries, Dataset};
 use repro::metrics::{Counters, Timer};
+#[cfg(feature = "xla")]
 use repro::runtime::XlaEngine;
 use repro::search::subsequence::{search_subsequence, window_cells};
 use repro::search::suite::Suite;
@@ -29,7 +30,7 @@ COMMANDS
   serve       run the search service over synthetic queries and report
               latency/throughput
               --dataset <name> [--queries N] [--shards N] [--suite S]
-              [--ref-len N] [--artifacts DIR]
+              [--k N] [--ref-len N] [--artifacts DIR]
   bench-suite run the paper's experiment grid and print Fig 5a/5b + tables
               [--axis length|window|all] [--ref-len N] [--datasets a,b]
               [--qlens 128,256] [--ratios 0.1,0.2] [--queries N]
@@ -87,6 +88,29 @@ fn parse_suite(s: &str) -> Result<Suite> {
     Suite::from_name(s).ok_or_else(|| anyhow!("unknown suite {s:?} (ucr|usp|mon|nolb|xla)"))
 }
 
+#[cfg(feature = "xla")]
+fn search_xla(
+    dir: &Path,
+    reference: &[f64],
+    query: &[f64],
+    w: usize,
+    counters: &mut Counters,
+) -> Result<repro::search::subsequence::Match> {
+    let mut engine = XlaEngine::open(dir)?;
+    repro::coordinator::batcher::xla_search(&mut engine, reference, query, w, counters)
+}
+
+#[cfg(not(feature = "xla"))]
+fn search_xla(
+    _dir: &Path,
+    _reference: &[f64],
+    _query: &[f64],
+    _w: usize,
+    _counters: &mut Counters,
+) -> Result<repro::search::subsequence::Match> {
+    bail!("suite xla unavailable: rebuild with `cargo build --features xla`")
+}
+
 fn cmd_search(args: &Args) -> Result<()> {
     let cfg = Config::load_or_default(args.get("config").map(Path::new))?;
     let dataset = args.get_or("dataset", &cfg.search.dataset).to_string();
@@ -108,8 +132,7 @@ fn cmd_search(args: &Args) -> Result<()> {
     let t = Timer::start();
     let m = if suite == Suite::UcrMonXla {
         let dir = PathBuf::from(args.get_or("artifacts", &cfg.serve.artifacts_dir));
-        let mut engine = XlaEngine::open(&dir)?;
-        repro::coordinator::batcher::xla_search(&mut engine, &reference, &query, w, &mut counters)?
+        search_xla(&dir, &reference, &query, w, &mut counters)?
     } else {
         search_subsequence(&reference, &query, w, suite, &mut counters)
     };
@@ -140,6 +163,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_queries = args.usize_or("queries", 20)?;
     let qlen = args.usize_or("qlen", cfg.search.query_len)?;
     let ratio = args.f64_or("ratio", cfg.search.window_ratio)?;
+    let k = args.usize_or("k", 1)?;
     let suite = parse_suite(args.get_or("suite", &cfg.search.suite))?;
     let artifacts = PathBuf::from(args.get_or("artifacts", &cfg.serve.artifacts_dir));
 
@@ -154,7 +178,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     )?;
     println!(
-        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}) over {shards} shards",
+        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}, top-{k}) over {shards} shards",
         suite.name()
     );
     let mut latencies = Vec::new();
@@ -165,6 +189,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             query: q,
             window_ratio: ratio,
             suite,
+            k,
         })?;
         println!("{}", resp.to_json());
         latencies.push(resp.latency_ms);
@@ -280,6 +305,12 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_info(_args: &Args) -> Result<()> {
+    bail!("info inspects the PJRT runtime: rebuild with `cargo build --features xla`")
+}
+
+#[cfg(feature = "xla")]
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     println!("artifacts dir: {}", dir.display());

@@ -27,6 +27,15 @@ pub struct Counters {
     pub ub_updates: u64,
     /// DP cells computed (only filled by counted distance variants)
     pub dp_cells: u64,
+    /// reference-index cache hits (stats buckets + envelope tables served
+    /// without rebuilding — the index subsystem's amortisation win)
+    pub index_hits: u64,
+    /// top-k collector insertions/replacements (== `ub_updates` at k = 1)
+    pub topk_updates: u64,
+    /// LB_Keogh EC prunes achieved with *index-shared* reference
+    /// envelopes (a subset of `lb_keogh_ec_prunes`): the pruning power
+    /// attributable to the shared index rather than per-query work
+    pub index_ec_prunes: u64,
 }
 
 impl Counters {
@@ -59,6 +68,24 @@ impl Counters {
         self.dtw_abandons += o.dtw_abandons;
         self.ub_updates += o.ub_updates;
         self.dp_cells += o.dp_cells;
+        self.index_hits += o.index_hits;
+        self.topk_updates += o.topk_updates;
+        self.index_ec_prunes += o.index_ec_prunes;
+    }
+
+    /// One-line report of the index subsystem's contribution: cache hits,
+    /// heap activity, and how much of the EC pruning the shared envelopes
+    /// delivered.
+    pub fn index_report(&self) -> String {
+        let ec_share = if self.lb_keogh_ec_prunes > 0 {
+            100.0 * self.index_ec_prunes as f64 / self.lb_keogh_ec_prunes as f64
+        } else {
+            0.0
+        };
+        format!(
+            "index: {} cache hits | top-k: {} heap updates | EC prunes via shared envelopes: {} ({ec_share:.1}% of EC)",
+            self.index_hits, self.topk_updates, self.index_ec_prunes
+        )
     }
 }
 
@@ -107,12 +134,38 @@ mod tests {
 
     #[test]
     fn merge_adds() {
-        let mut a = Counters { candidates: 3, dtw_calls: 1, ..Default::default() };
-        let b = Counters { candidates: 5, dtw_calls: 2, dp_cells: 7, ..Default::default() };
+        let mut a = Counters { candidates: 3, dtw_calls: 1, topk_updates: 2, ..Default::default() };
+        let b = Counters {
+            candidates: 5,
+            dtw_calls: 2,
+            dp_cells: 7,
+            index_hits: 4,
+            topk_updates: 1,
+            index_ec_prunes: 6,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.candidates, 8);
         assert_eq!(a.dtw_calls, 3);
         assert_eq!(a.dp_cells, 7);
+        assert_eq!(a.index_hits, 4);
+        assert_eq!(a.topk_updates, 3);
+        assert_eq!(a.index_ec_prunes, 6);
+    }
+
+    #[test]
+    fn index_report_mentions_all_counters() {
+        let c = Counters {
+            index_hits: 3,
+            topk_updates: 9,
+            lb_keogh_ec_prunes: 10,
+            index_ec_prunes: 5,
+            ..Default::default()
+        };
+        let r = c.index_report();
+        assert!(r.contains("3 cache hits"), "{r}");
+        assert!(r.contains("9 heap updates"), "{r}");
+        assert!(r.contains("50.0% of EC"), "{r}");
     }
 
     #[test]

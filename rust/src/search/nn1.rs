@@ -1,16 +1,19 @@
-//! Whole-series NN1 search / classification — the paper's motivating
-//! scenario (§1: NN1-DTW is embedded in EE, Proximity Forest, TS-CHIEF;
-//! §6: EAPrunedDTW makes those ensembles affordable again).
+//! Whole-series NN1 / k-NN search and classification — the paper's
+//! motivating scenario (§1: NN1-DTW is embedded in EE, Proximity Forest,
+//! TS-CHIEF; §6: EAPrunedDTW makes those ensembles affordable again).
 //!
 //! Candidates are visited in ascending LB_Keogh order (best-first), so the
-//! upper bound tightens as fast as possible and EAPrunedDTW abandons the
-//! rest almost immediately.
+//! upper bound — the k-th best distance of a [`TopK`] collector — tightens
+//! as fast as possible and EAPrunedDTW abandons the rest almost
+//! immediately. NN1 is the `k = 1` case.
 
 use crate::bounds::envelope::envelopes;
 use crate::bounds::lb_keogh::{reorder, sort_order};
 use crate::distances::cost::sqed;
 use crate::distances::DtwWorkspace;
+use crate::index::topk::TopK;
 use crate::metrics::Counters;
+use crate::search::subsequence::Match;
 use crate::search::suite::Suite;
 
 /// Result of an NN1 search.
@@ -37,18 +40,20 @@ fn lb_keogh_plain(uo: &[f64], lo: &[f64], order: &[usize], c: &[f64]) -> f64 {
     lb
 }
 
-/// Find the nearest neighbour of `query` among `candidates` under windowed
-/// DTW (all series assumed pre-normalised and equal length). `suite` picks
-/// the DTW core, so the ablation benches can compare cores on NN1 too.
-pub fn nn1_search(
+/// Find the k nearest neighbours of `query` among `candidates` under
+/// windowed DTW (all series assumed pre-normalised and equal length),
+/// ascending `(dist, index)`. `suite` picks the DTW core, so the ablation
+/// benches can compare cores on k-NN too.
+pub fn nn1_topk(
     query: &[f64],
     candidates: &[Vec<f64>],
     w: usize,
+    k: usize,
     suite: Suite,
     counters: &mut Counters,
-) -> Option<Nn1Result> {
-    if candidates.is_empty() {
-        return None;
+) -> Vec<Nn1Result> {
+    if candidates.is_empty() || k == 0 {
+        return Vec::new();
     }
     let (u, l) = envelopes(query, w);
     let order = sort_order(query);
@@ -63,23 +68,39 @@ pub fn nn1_search(
     idx.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("no NaN bounds"));
 
     let mut ws = DtwWorkspace::with_capacity(query.len());
-    let mut best = Nn1Result { index: idx[0].0, dist: f64::INFINITY };
+    let mut topk = TopK::new(k);
     for &(i, lb) in &idx {
         counters.candidates += 1;
-        if lb > best.dist {
+        let ub = topk.threshold();
+        if lb > ub {
             counters.lb_keogh_eq_prunes += 1;
             continue;
         }
         counters.dtw_calls += 1;
-        let d = suite.dtw(query, &candidates[i], w, best.dist, None, &mut ws);
+        let d = suite.dtw(query, &candidates[i], w, ub, None, &mut ws);
         if d.is_infinite() {
             counters.dtw_abandons += 1;
-        } else if d < best.dist {
-            best = Nn1Result { index: i, dist: d };
+        } else if topk.offer(Match { pos: i, dist: d }) {
+            counters.topk_updates += 1;
             counters.ub_updates += 1;
         }
     }
-    Some(best)
+    topk.into_sorted()
+        .into_iter()
+        .map(|m| Nn1Result { index: m.pos, dist: m.dist })
+        .collect()
+}
+
+/// Find the nearest neighbour of `query` among `candidates`: the `k = 1`
+/// case of [`nn1_topk`] (bit-identical to the seed's scalar loop).
+pub fn nn1_search(
+    query: &[f64],
+    candidates: &[Vec<f64>],
+    w: usize,
+    suite: Suite,
+    counters: &mut Counters,
+) -> Option<Nn1Result> {
+    nn1_topk(query, candidates, w, 1, suite, counters).into_iter().next()
 }
 
 /// NN1 classification: label of the nearest training series.
@@ -169,5 +190,25 @@ mod tests {
     fn empty_candidates() {
         let mut c = Counters::new();
         assert!(nn1_search(&[1.0, 2.0], &[], 1, Suite::UcrMon, &mut c).is_none());
+        assert!(nn1_topk(&[1.0, 2.0], &[], 1, 3, Suite::UcrMon, &mut c).is_empty());
+    }
+
+    #[test]
+    fn topk_matches_brute_force_ranking() {
+        let q = znorm(&mk_candidates(1, 64, 3)[0]);
+        let cands = mk_candidates(30, 64, 4);
+        let w = 8;
+        let mut want: Vec<(usize, f64)> =
+            cands.iter().enumerate().map(|(i, c)| (i, cdtw(&q, c, w))).collect();
+        want.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        for k in [1usize, 4, 30] {
+            let mut c = Counters::new();
+            let got = nn1_topk(&q, &cands, w, k, Suite::UcrMon, &mut c);
+            assert_eq!(got.len(), k.min(cands.len()));
+            for (rank, r) in got.iter().enumerate() {
+                assert_eq!(r.index, want[rank].0, "k={k} rank={rank}");
+                assert!((r.dist - want[rank].1).abs() < 1e-9, "k={k} rank={rank}");
+            }
+        }
     }
 }

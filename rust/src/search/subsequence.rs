@@ -1,16 +1,25 @@
 //! UCR-style subsequence similarity search (paper §5's workload): slide a
 //! z-normalised query over a long reference stream, z-normalising every
-//! candidate window on the fly, and keep the best-so-far match under
+//! candidate window on the fly, and collect the top-k matches under
 //! windowed DTW, pruning with the suite's cascade along the way.
 //!
+//! The early-abandon threshold is the k-th best distance of a
+//! [`TopK`] collector (`k = 1` reproduces the paper's scalar best-so-far
+//! bit-for-bit); candidate statistics come either from the seed's
+//! streaming recurrence ([`crate::norm::znorm::WindowStats`]) or from a
+//! shared precomputed table ([`ScanStats::Indexed`], see
+//! [`crate::index::ref_index::RefIndex`]).
+//!
 //! The loop is allocation-free per candidate: all buffers live in
-//! [`QueryContext`] and are reused across the scan; stream statistics are
-//! maintained incrementally ([`crate::norm::znorm::WindowStats`]).
+//! [`QueryContext`] and are reused across the scan.
 
+use crate::bounds::cascade::CascadePolicy;
 use crate::bounds::envelope::envelopes_into;
 use crate::bounds::lb_keogh::{cumulate_bound, lb_keogh_ec, lb_keogh_eq, reorder, sort_order};
 use crate::bounds::lb_kim::lb_kim_hierarchy;
 use crate::distances::DtwWorkspace;
+use crate::index::ref_index::BucketStats;
+use crate::index::topk::TopK;
 use crate::metrics::Counters;
 use crate::norm::znorm::{znorm, znorm_point, WindowStats};
 use crate::search::suite::Suite;
@@ -105,10 +114,23 @@ impl DataEnvelopes {
     }
 }
 
+/// Where a scan gets candidate window statistics from.
+#[derive(Debug, Clone, Copy)]
+pub enum ScanStats<'a> {
+    /// The seed behaviour: one streaming [`WindowStats`] recurrence,
+    /// started fresh at the scan's first position.
+    Streaming,
+    /// A precomputed per-position table shared read-only across queries
+    /// and shards ([`crate::index::ref_index::RefIndex::stats_for`]).
+    /// Positions index the *full* reference, so every shard sees stats
+    /// bit-identical to a full from-zero streaming scan.
+    Indexed(&'a BucketStats),
+}
+
 /// Scan candidate start positions `[start, end)` of `reference`, beginning
 /// from upper bound `bsf` (pass `+inf` for a fresh search). Returns the
 /// best match found *below* `bsf` (ties keep the earlier position), or
-/// `None` if nothing beat it. This is the shard worker's inner loop.
+/// `None` if nothing beat it.
 #[allow(clippy::too_many_arguments)]
 pub fn scan(
     reference: &[f64],
@@ -124,7 +146,8 @@ pub fn scan(
 }
 
 /// [`scan`] with an explicit cascade policy (the ablation entry point:
-/// any DTW core × any subset of the lower-bound cascade).
+/// any DTW core × any subset of the lower-bound cascade). A thin k = 1
+/// wrapper over [`scan_topk_policy`].
 #[allow(clippy::too_many_arguments)]
 pub fn scan_policy(
     reference: &[f64],
@@ -133,93 +156,161 @@ pub fn scan_policy(
     ctx: &mut QueryContext,
     denv: Option<&DataEnvelopes>,
     suite: Suite,
-    cascade: crate::bounds::cascade::CascadePolicy,
-    mut bsf: f64,
+    cascade: CascadePolicy,
+    bsf: f64,
     counters: &mut Counters,
 ) -> Option<Match> {
+    let mut topk = TopK::with_bound(1, bsf);
+    scan_topk_policy(
+        reference,
+        start,
+        end,
+        ctx,
+        denv,
+        ScanStats::Streaming,
+        suite,
+        cascade,
+        &mut topk,
+        counters,
+    );
+    topk.into_sorted().into_iter().next()
+}
+
+/// Scan `[start, end)` collecting the top-k matches into `topk` (whose
+/// current k-th best / external bound is the early-abandon threshold).
+/// This is the shard worker's inner loop; everything scalar-best-so-far
+/// in the seed is the `k = 1` case of this function.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_topk_policy(
+    reference: &[f64],
+    start: usize,
+    end: usize,
+    ctx: &mut QueryContext,
+    denv: Option<&DataEnvelopes>,
+    stats: ScanStats<'_>,
+    suite: Suite,
+    cascade: CascadePolicy,
+    topk: &mut TopK,
+    counters: &mut Counters,
+) {
     let n = ctx.len();
     assert!(n > 0, "empty query");
     assert!(reference.len() >= n, "reference shorter than query");
     let end = end.min(reference.len() - n + 1);
     if start >= end {
-        return None;
+        return;
     }
     debug_assert!(
         !cascade.needs_data_envelopes() || denv.is_some(),
         "suite {:?} needs data envelopes",
         suite
     );
-    let mut best: Option<Match> = None;
-    let mut stats = WindowStats::new(&reference[start..], n);
-    loop {
-        let pos = start + stats.pos();
-        let window = stats.window();
-        let (mean, std) = stats.mean_std();
-        counters.candidates += 1;
-        'candidate: {
-            if cascade.kim {
-                let lb = lb_kim_hierarchy(&ctx.q, window, mean, std, bsf);
-                if lb > bsf {
-                    counters.lb_kim_prunes += 1;
-                    break 'candidate;
-                }
-            }
-            let mut lb1 = 0.0;
-            if cascade.keogh_eq {
-                lb1 = lb_keogh_eq(
-                    &ctx.order, &ctx.uo, &ctx.lo, window, mean, std, bsf, &mut ctx.cb1,
+    match stats {
+        ScanStats::Streaming => {
+            let mut ws = WindowStats::new(&reference[start..], n);
+            loop {
+                let pos = start + ws.pos();
+                let window = ws.window();
+                let (mean, std) = ws.mean_std();
+                eval_candidate(
+                    pos, window, mean, std, ctx, denv, suite, cascade, false, topk, counters,
                 );
-                if lb1 > bsf {
-                    counters.lb_keogh_eq_prunes += 1;
-                    break 'candidate;
+                if pos + 1 >= end || !ws.advance() {
+                    break;
                 }
-            }
-            let mut lb2 = 0.0;
-            let mut have2 = false;
-            if cascade.keogh_ec {
-                let denv = denv.expect("data envelopes required");
-                lb2 = lb_keogh_ec(
-                    &ctx.order,
-                    &ctx.qo,
-                    &denv.upper[pos..pos + n],
-                    &denv.lower[pos..pos + n],
-                    mean,
-                    std,
-                    bsf,
-                    &mut ctx.cb2,
-                );
-                have2 = true;
-                if lb2 > bsf {
-                    counters.lb_keogh_ec_prunes += 1;
-                    break 'candidate;
-                }
-            }
-            // cumulative tail from the tighter of the two Keogh bounds
-            let cb = if cascade.tighten && (cascade.keogh_eq || have2) {
-                let src = if have2 && lb2 > lb1 { &ctx.cb2 } else { &ctx.cb1 };
-                cumulate_bound(src, &mut ctx.cb_cum);
-                Some(ctx.cb_cum.as_slice())
-            } else {
-                None
-            };
-            // z-normalise the candidate and run the suite's DTW core
-            ctx.zbuf.clear();
-            ctx.zbuf.extend(window.iter().map(|&x| znorm_point(x, mean, std)));
-            counters.dtw_calls += 1;
-            let d = suite.dtw(&ctx.q, &ctx.zbuf, ctx.w, bsf, cb, &mut ctx.ws);
-            if d.is_infinite() {
-                counters.dtw_abandons += 1;
-            } else if d < bsf {
-                bsf = d;
-                best = Some(Match { pos, dist: d });
-                counters.ub_updates += 1;
             }
         }
-        if pos + 1 >= end || !stats.advance() {
-            break;
+        ScanStats::Indexed(table) => {
+            debug_assert_eq!(table.qlen(), n, "stats bucket / query length mismatch");
+            for pos in start..end {
+                let window = &reference[pos..pos + n];
+                let (mean, std) = table.mean_std(pos);
+                eval_candidate(
+                    pos, window, mean, std, ctx, denv, suite, cascade, true, topk, counters,
+                );
+            }
         }
     }
-    best
+}
+
+/// One candidate through cascade + DTW core + collector. `indexed` marks
+/// stats/envelopes as coming from the shared reference index, so its
+/// pruning power is attributed separately in the counters.
+#[allow(clippy::too_many_arguments)]
+fn eval_candidate(
+    pos: usize,
+    window: &[f64],
+    mean: f64,
+    std: f64,
+    ctx: &mut QueryContext,
+    denv: Option<&DataEnvelopes>,
+    suite: Suite,
+    cascade: CascadePolicy,
+    indexed: bool,
+    topk: &mut TopK,
+    counters: &mut Counters,
+) {
+    let n = ctx.len();
+    counters.candidates += 1;
+    // constant for the whole candidate, exactly like the scalar loop's bsf
+    let bsf = topk.threshold();
+    if cascade.kim {
+        let lb = lb_kim_hierarchy(&ctx.q, window, mean, std, bsf);
+        if lb > bsf {
+            counters.lb_kim_prunes += 1;
+            return;
+        }
+    }
+    let mut lb1 = 0.0;
+    if cascade.keogh_eq {
+        lb1 = lb_keogh_eq(&ctx.order, &ctx.uo, &ctx.lo, window, mean, std, bsf, &mut ctx.cb1);
+        if lb1 > bsf {
+            counters.lb_keogh_eq_prunes += 1;
+            return;
+        }
+    }
+    let mut lb2 = 0.0;
+    let mut have2 = false;
+    if cascade.keogh_ec {
+        let denv = denv.expect("data envelopes required");
+        lb2 = lb_keogh_ec(
+            &ctx.order,
+            &ctx.qo,
+            &denv.upper[pos..pos + n],
+            &denv.lower[pos..pos + n],
+            mean,
+            std,
+            bsf,
+            &mut ctx.cb2,
+        );
+        have2 = true;
+        if lb2 > bsf {
+            counters.lb_keogh_ec_prunes += 1;
+            if indexed {
+                counters.index_ec_prunes += 1;
+            }
+            return;
+        }
+    }
+    // cumulative tail from the tighter of the two Keogh bounds
+    let cb = if cascade.tighten && (cascade.keogh_eq || have2) {
+        let src = if have2 && lb2 > lb1 { &ctx.cb2 } else { &ctx.cb1 };
+        cumulate_bound(src, &mut ctx.cb_cum);
+        Some(ctx.cb_cum.as_slice())
+    } else {
+        None
+    };
+    // z-normalise the candidate and run the suite's DTW core
+    ctx.zbuf.clear();
+    ctx.zbuf.extend(window.iter().map(|&x| znorm_point(x, mean, std)));
+    counters.dtw_calls += 1;
+    let d = suite.dtw(&ctx.q, &ctx.zbuf, ctx.w, bsf, cb, &mut ctx.ws);
+    if d.is_infinite() {
+        counters.dtw_abandons += 1;
+    } else if topk.offer(Match { pos, dist: d }) {
+        counters.topk_updates += 1;
+        counters.ub_updates += 1;
+    }
 }
 
 /// Full-stream similarity search: the paper's §5 task. Locates the closest
@@ -248,6 +339,39 @@ pub fn search_subsequence(
         counters,
     )
     .expect("fresh search always finds a best match")
+}
+
+/// Top-k variant of [`search_subsequence`]: the k closest candidate
+/// windows in ascending `(dist, pos)` order (fewer if the reference has
+/// fewer than k candidate positions). `k = 1` reproduces
+/// [`search_subsequence`] exactly.
+pub fn search_subsequence_topk(
+    reference: &[f64],
+    query_raw: &[f64],
+    w: usize,
+    k: usize,
+    suite: Suite,
+    counters: &mut Counters,
+) -> Vec<Match> {
+    let mut ctx = QueryContext::new(query_raw, w);
+    let denv = suite
+        .cascade()
+        .needs_data_envelopes()
+        .then(|| DataEnvelopes::new(reference, w));
+    let mut topk = TopK::new(k);
+    scan_topk_policy(
+        reference,
+        0,
+        reference.len() - ctx.len() + 1,
+        &mut ctx,
+        denv.as_ref(),
+        ScanStats::Streaming,
+        suite,
+        suite.cascade(),
+        &mut topk,
+        counters,
+    );
+    topk.into_sorted()
 }
 
 #[cfg(test)]
@@ -360,6 +484,96 @@ mod tests {
         };
         assert_eq!(best.pos, full.pos);
         assert!((best.dist - full.dist).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topk_k1_equals_best_so_far_search() {
+        let (r, q) = small_workload();
+        let w = window_cells(q.len(), 0.2);
+        for suite in Suite::ALL {
+            let mut c1 = Counters::new();
+            let want = search_subsequence(&r, &q, w, suite, &mut c1);
+            let mut c2 = Counters::new();
+            let got = search_subsequence_topk(&r, &q, w, 1, suite, &mut c2);
+            assert_eq!(got, vec![want], "{}", suite.name());
+            assert_eq!(c1.dtw_calls, c2.dtw_calls, "{}", suite.name());
+        }
+    }
+
+    #[test]
+    fn topk_is_sorted_prefix_of_brute_force_ranking() {
+        let (r, q) = small_workload();
+        let w = window_cells(q.len(), 0.1);
+        let k = 5;
+        let mut c = Counters::new();
+        let got = search_subsequence_topk(&r, &q, w, k, Suite::UcrMon, &mut c);
+        assert_eq!(got.len(), k);
+        // brute-force ranking by (dist, pos)
+        let qz = znorm(&q);
+        let mut ws = DtwWorkspace::default();
+        let mut all: Vec<Match> = (0..=(r.len() - q.len()))
+            .map(|pos| {
+                let z = znorm(&r[pos..pos + q.len()]);
+                Match { pos, dist: crate::distances::dtw::cdtw_ws(&qz, &z, w, &mut ws) }
+            })
+            .collect();
+        all.sort_by(|a, b| {
+            a.dist.partial_cmp(&b.dist).unwrap().then(a.pos.cmp(&b.pos))
+        });
+        for (i, (g, want)) in got.iter().zip(&all).enumerate() {
+            assert_eq!(g.pos, want.pos, "rank {i}");
+            assert!((g.dist - want.dist).abs() < 1e-9, "rank {i}");
+        }
+        assert!(c.topk_updates >= k as u64);
+    }
+
+    #[test]
+    fn indexed_stats_scan_matches_streaming_scan() {
+        let (r, q) = small_workload();
+        let w = window_cells(q.len(), 0.1);
+        let table = crate::index::ref_index::BucketStats::build(&r, q.len());
+        let denv = DataEnvelopes::new(&r, w);
+        let total = r.len() - q.len() + 1;
+        for suite in [Suite::UcrMon, Suite::UcrMonNoLb] {
+            let mut ctx = QueryContext::new(&q, w);
+            let mut topk = TopK::new(3);
+            let mut c = Counters::new();
+            scan_topk_policy(
+                &r,
+                0,
+                total,
+                &mut ctx,
+                Some(&denv),
+                ScanStats::Indexed(&table),
+                suite,
+                suite.cascade(),
+                &mut topk,
+                &mut c,
+            );
+            let mut ctx2 = QueryContext::new(&q, w);
+            let mut topk2 = TopK::new(3);
+            let mut c2 = Counters::new();
+            scan_topk_policy(
+                &r,
+                0,
+                total,
+                &mut ctx2,
+                Some(&denv),
+                ScanStats::Streaming,
+                suite,
+                suite.cascade(),
+                &mut topk2,
+                &mut c2,
+            );
+            // the table is built with the same recurrence the streaming
+            // scan uses, so the two paths are bit-identical from pos 0
+            assert_eq!(topk.into_sorted(), topk2.into_sorted(), "{}", suite.name());
+            assert_eq!(c.candidates, c2.candidates);
+            if suite.cascade().keogh_ec {
+                assert_eq!(c.index_ec_prunes, c.lb_keogh_ec_prunes);
+                assert_eq!(c2.index_ec_prunes, 0);
+            }
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@ use repro::coordinator::router::shard_ranges;
 use repro::coordinator::{QueryRequest, QueryResponse, Service, ServiceConfig};
 use repro::data::{extract_queries, Dataset};
 use repro::metrics::Counters;
-use repro::search::subsequence::{search_subsequence, window_cells};
+use repro::search::subsequence::{search_subsequence, window_cells, Match};
 use repro::search::suite::Suite;
 
 fn service(r: &[f64], shards: usize) -> Service {
@@ -22,7 +22,7 @@ fn service_equals_direct_search_for_all_scalar_suites() {
     let svc = service(&r, 3);
     for s in Suite::ALL {
         let resp = svc
-            .submit(&QueryRequest { id: 0, query: q.clone(), window_ratio: 0.2, suite: s })
+            .submit(&QueryRequest { id: 0, query: q.clone(), window_ratio: 0.2, suite: s, k: 1 })
             .unwrap();
         let mut c = Counters::new();
         let want = search_subsequence(&r, &q, window_cells(q.len(), 0.2), s, &mut c);
@@ -46,6 +46,7 @@ fn shard_count_does_not_change_results() {
                 query: q.clone(),
                 window_ratio: 0.1,
                 suite: Suite::UcrMon,
+                k: 1,
             })
             .unwrap();
         results.push((shards, resp.pos, resp.dist));
@@ -80,6 +81,7 @@ fn many_concurrent_clients_one_service() {
                     query: q,
                     window_ratio: 0.1,
                     suite: Suite::UcrMon,
+                    k: 1,
                 })
                 .unwrap(),
             )
@@ -109,6 +111,7 @@ fn protocol_survives_the_wire() {
         query: vec![1.5, -2.0, 0.0, 3.25],
         window_ratio: 0.35,
         suite: Suite::UcrMonNoLb,
+        k: 3,
     };
     let line = req.to_json();
     assert!(!line.contains('\n'), "line-delimited");
@@ -119,6 +122,11 @@ fn protocol_survives_the_wire() {
         id: 99,
         pos: 1234,
         dist: 0.5,
+        matches: vec![
+            Match { pos: 1234, dist: 0.5 },
+            Match { pos: 88, dist: 0.75 },
+            Match { pos: 9, dist: 1.5 },
+        ],
         latency_ms: 3.125,
         candidates: 1000,
         pruned: 900,
@@ -152,6 +160,45 @@ fn empty_and_oversized_queries_error_cleanly() {
         query: vec![0.0; 1000],
         window_ratio: 0.1,
         suite: Suite::UcrMon,
+        k: 1,
     };
     assert!(svc.submit(&req).is_err());
+}
+
+#[test]
+fn topk_over_service_is_ranked_and_consistent_across_shards() {
+    let r = Dataset::Soccer.generate(5000, 31);
+    let q = extract_queries(&r, 1, 128, 0.1, 32).remove(0);
+    let k = 7;
+    let mut baseline: Option<Vec<Match>> = None;
+    for shards in [1usize, 2, 6] {
+        let svc = service(&r, shards);
+        let resp = svc
+            .submit(&QueryRequest {
+                id: 0,
+                query: q.clone(),
+                window_ratio: 0.2,
+                suite: Suite::UcrMon,
+                k,
+            })
+            .unwrap();
+        assert_eq!(resp.matches.len(), k);
+        for pair in resp.matches.windows(2) {
+            assert!(
+                pair[0].dist < pair[1].dist
+                    || (pair[0].dist == pair[1].dist && pair[0].pos < pair[1].pos),
+                "unsorted: {:?}",
+                resp.matches
+            );
+        }
+        assert_eq!(resp.pos, resp.matches[0].pos);
+        if let Some(want) = baseline.as_deref() {
+            for (g, m) in resp.matches.iter().zip(want) {
+                assert_eq!(g.pos, m.pos, "shards={shards}");
+                assert!((g.dist - m.dist).abs() < 1e-9, "shards={shards}");
+            }
+        } else {
+            baseline = Some(resp.matches);
+        }
+    }
 }

@@ -1,0 +1,310 @@
+//! Index-subsystem invariants: the top-k collector generalises the scalar
+//! best-so-far *conservatively* — k = 1 is bit-identical to the seed loop,
+//! any k is a prefix of the brute-force ranking, and the batched engine
+//! reproduces the unbatched search.
+
+use repro::data::rng::Rng;
+use repro::data::{extract_queries, Dataset};
+use repro::distances::dtw::cdtw_ws;
+use repro::distances::DtwWorkspace;
+use repro::index::{Engine, EngineConfig, Query, TopK};
+use repro::metrics::Counters;
+use repro::norm::znorm::{znorm, znorm_point, WindowStats};
+use repro::search::nn1::{nn1_search, nn1_topk};
+use repro::search::subsequence::{
+    search_subsequence, search_subsequence_topk, window_cells, Match,
+};
+use repro::search::suite::Suite;
+use repro::util::proptest::run_prop;
+
+fn arb_dataset(rng: &mut Rng) -> Dataset {
+    Dataset::ALL[rng.below(6) as usize]
+}
+
+/// The seed's scalar best-so-far scan, replicated from public primitives
+/// (no lower bounds, so the whole loop is expressible outside the crate):
+/// stream window stats, z-normalise, DTW against the running bsf.
+fn scalar_best_so_far(reference: &[f64], query_raw: &[f64], w: usize) -> Match {
+    let q = znorm(query_raw);
+    let n = q.len();
+    let mut ws = DtwWorkspace::with_capacity(n);
+    let mut stats = WindowStats::new(reference, n);
+    let mut bsf = f64::INFINITY;
+    let mut best = Match { pos: 0, dist: f64::INFINITY };
+    let mut zbuf = Vec::with_capacity(n);
+    loop {
+        let pos = stats.pos();
+        let (mean, std) = stats.mean_std();
+        zbuf.clear();
+        zbuf.extend(stats.window().iter().map(|&x| znorm_point(x, mean, std)));
+        let d = Suite::UcrMonNoLb.dtw(&q, &zbuf, w, bsf, None, &mut ws);
+        if d.is_finite() && d < bsf {
+            bsf = d;
+            best = Match { pos, dist: d };
+        }
+        if !stats.advance() {
+            break;
+        }
+    }
+    best
+}
+
+#[test]
+fn prop_topk_k1_bit_identical_to_scalar_best_so_far() {
+    #[derive(Debug)]
+    struct Case {
+        dataset: Dataset,
+        seed: u64,
+    }
+    run_prop(
+        "topk k=1 == scalar bsf (bitwise)",
+        0xB1,
+        18,
+        |rng| Case { dataset: arb_dataset(rng), seed: rng.next_u64() },
+        |c| {
+            let r = c.dataset.generate(1200, c.seed);
+            let q = extract_queries(&r, 1, 64, 0.1, c.seed ^ 7).remove(0);
+            let w = 6;
+            let want = scalar_best_so_far(&r, &q, w);
+            let mut cnt = Counters::new();
+            let got = search_subsequence_topk(&r, &q, w, 1, Suite::UcrMonNoLb, &mut cnt);
+            // bit-identical: same position AND the exact same f64
+            if got != vec![want] {
+                return Err(format!("{got:?} vs {want:?} on {}", c.dataset.name()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_topk_k1_equals_search_subsequence_all_suites() {
+    #[derive(Debug)]
+    struct Case {
+        dataset: Dataset,
+        seed: u64,
+        suite: Suite,
+    }
+    run_prop(
+        "topk k=1 == search_subsequence",
+        0xB2,
+        12,
+        |rng| Case {
+            dataset: arb_dataset(rng),
+            seed: rng.next_u64(),
+            suite: Suite::ALL[rng.below(4) as usize],
+        },
+        |c| {
+            let r = c.dataset.generate(1500, c.seed);
+            let q = extract_queries(&r, 1, 64, 0.1, c.seed ^ 11).remove(0);
+            let w = 6;
+            let mut c1 = Counters::new();
+            let want = search_subsequence(&r, &q, w, c.suite, &mut c1);
+            let mut c2 = Counters::new();
+            let got = search_subsequence_topk(&r, &q, w, 1, c.suite, &mut c2);
+            if got != vec![want] {
+                return Err(format!("{got:?} vs {want:?} under {}", c.suite.name()));
+            }
+            if c1.dtw_calls != c2.dtw_calls || c1.candidates != c2.candidates {
+                return Err(format!("counter drift: {c1:?} vs {c2:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_topk_matches_brute_force_for_k_1_5_16() {
+    #[derive(Debug)]
+    struct Case {
+        dataset: Dataset,
+        seed: u64,
+    }
+    run_prop(
+        "topk == brute-force prefix",
+        0xB3,
+        8,
+        |rng| Case { dataset: arb_dataset(rng), seed: rng.next_u64() },
+        |c| {
+            let r = c.dataset.generate(900, c.seed);
+            let q = extract_queries(&r, 1, 48, 0.12, c.seed ^ 13).remove(0);
+            let w = 5;
+            // brute-force ranking of every candidate by (dist, pos)
+            let qz = znorm(&q);
+            let mut ws = DtwWorkspace::default();
+            let mut all: Vec<Match> = (0..=(r.len() - q.len()))
+                .map(|pos| {
+                    let z = znorm(&r[pos..pos + q.len()]);
+                    Match { pos, dist: cdtw_ws(&qz, &z, w, &mut ws) }
+                })
+                .collect();
+            all.sort_by(|a, b| {
+                a.dist.partial_cmp(&b.dist).expect("no NaN").then(a.pos.cmp(&b.pos))
+            });
+            for k in [1usize, 5, 16] {
+                let mut cnt = Counters::new();
+                let got = search_subsequence_topk(&r, &q, w, k, Suite::UcrMon, &mut cnt);
+                if got.len() != k {
+                    return Err(format!("k={k}: got {} results", got.len()));
+                }
+                for (rank, (g, want)) in got.iter().zip(&all).enumerate() {
+                    if g.pos != want.pos || (g.dist - want.dist).abs() > 1e-9 {
+                        return Err(format!(
+                            "k={k} rank={rank}: {g:?} vs {want:?} on {}",
+                            c.dataset.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_nn1_topk_k1_bit_identical_to_scalar_nn1() {
+    // independent scalar oracle: best-first by LB_Keogh, strict < updates
+    fn scalar_nn1(query: &[f64], cands: &[Vec<f64>], w: usize) -> (usize, f64) {
+        use repro::bounds::envelope::envelopes;
+        use repro::bounds::lb_keogh::{reorder, sort_order};
+        let (u, l) = envelopes(query, w);
+        let order = sort_order(query);
+        let uo = reorder(&u, &order);
+        let lo = reorder(&l, &order);
+        let mut idx: Vec<(usize, f64)> = cands
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let mut lb = 0.0;
+                for (kk, &j) in order.iter().enumerate() {
+                    let x = c[j];
+                    if x > uo[kk] {
+                        lb += (x - uo[kk]) * (x - uo[kk]);
+                    } else if x < lo[kk] {
+                        lb += (x - lo[kk]) * (x - lo[kk]);
+                    }
+                }
+                (i, lb)
+            })
+            .collect();
+        idx.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("no NaN"));
+        let mut ws = DtwWorkspace::with_capacity(query.len());
+        let mut best = (idx[0].0, f64::INFINITY);
+        for &(i, lb) in &idx {
+            if lb > best.1 {
+                continue;
+            }
+            let d = Suite::UcrMon.dtw(query, &cands[i], w, best.1, None, &mut ws);
+            if d.is_finite() && d < best.1 {
+                best = (i, d);
+            }
+        }
+        best
+    }
+
+    run_prop(
+        "nn1 topk k=1 == scalar nn1 (bitwise)",
+        0xB4,
+        15,
+        |rng| rng.next_u64(),
+        |seed| {
+            let mut rng = Rng::new(*seed);
+            let n = 48;
+            let q = znorm(&(0..n).map(|_| rng.normal()).collect::<Vec<_>>());
+            let cands: Vec<Vec<f64>> = (0..25)
+                .map(|_| znorm(&(0..n).map(|_| rng.normal()).collect::<Vec<_>>()))
+                .collect();
+            let w = 5;
+            let (wi, wd) = scalar_nn1(&q, &cands, w);
+            let mut cnt = Counters::new();
+            let got = nn1_search(&q, &cands, w, Suite::UcrMon, &mut cnt).expect("nonempty");
+            if got.index != wi || got.dist != wd {
+                return Err(format!("({}, {}) vs ({wi}, {wd})", got.index, got.dist));
+            }
+            let top = nn1_topk(&q, &cands, w, 1, Suite::UcrMon, &mut cnt);
+            if top.len() != 1 || top[0] != got {
+                return Err(format!("{top:?} vs {got:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Acceptance: `Engine::search_batch` with k = 1, batch = 1 reproduces
+/// `search_subsequence` exactly — position and distance — on every synth
+/// dataset. With one shard the indexed stats table makes the two paths
+/// bit-identical; with several shards the result is still exact in
+/// position and at f64 round-off in distance.
+#[test]
+fn engine_batch1_k1_reproduces_search_subsequence_on_all_datasets() {
+    for d in Dataset::ALL {
+        let r = d.generate(4000, 23);
+        let q = extract_queries(&r, 1, 128, 0.1, 29).remove(0);
+        let ratio = 0.1;
+        let w = window_cells(q.len(), ratio);
+        let mut c = Counters::new();
+        let want = search_subsequence(&r, &q, w, Suite::UcrMon, &mut c);
+
+        let single = Engine::new(r.clone(), &EngineConfig { shards: 1, ..Default::default() })
+            .unwrap();
+        let res = single
+            .search_batch(&[Query::new(q.clone(), ratio)], 1)
+            .unwrap()
+            .remove(0);
+        assert_eq!(res.matches.len(), 1, "{}", d.name());
+        assert_eq!(res.best().pos, want.pos, "{}", d.name());
+        assert_eq!(
+            res.best().dist.to_bits(),
+            want.dist.to_bits(),
+            "{}: single-shard indexed scan must be bit-identical",
+            d.name()
+        );
+        assert_eq!(res.counters.candidates, c.candidates, "{}", d.name());
+
+        let sharded = Engine::new(r.clone(), &EngineConfig { shards: 3, ..Default::default() })
+            .unwrap();
+        let res = sharded.search_batch(&[Query::new(q.clone(), ratio)], 1).unwrap().remove(0);
+        assert_eq!(res.best().pos, want.pos, "{} sharded", d.name());
+        assert!((res.best().dist - want.dist).abs() < 1e-9, "{} sharded", d.name());
+    }
+}
+
+#[test]
+fn engine_topk_contains_best_and_is_ranked() {
+    let r = Dataset::Pamap2.generate(5000, 41);
+    let qs: Vec<Query> = extract_queries(&r, 4, 128, 0.1, 43)
+        .into_iter()
+        .map(|q| Query::new(q, 0.2))
+        .collect();
+    let engine = Engine::new(r.clone(), &EngineConfig { shards: 2, ..Default::default() })
+        .unwrap();
+    let k = 16;
+    for (q, res) in qs.iter().zip(engine.search_batch(&qs, k).unwrap()) {
+        assert_eq!(res.matches.len(), k);
+        let mut c = Counters::new();
+        let want = search_subsequence(&r, &q.query, window_cells(q.query.len(), 0.2), Suite::UcrMon, &mut c);
+        assert_eq!(res.best().pos, want.pos);
+        for pair in res.matches.windows(2) {
+            assert!(
+                pair[0].dist < pair[1].dist
+                    || (pair[0].dist == pair[1].dist && pair[0].pos < pair[1].pos)
+            );
+        }
+    }
+}
+
+#[test]
+fn topk_collector_never_regresses_threshold() {
+    // the threshold is monotone non-increasing under offers — the property
+    // the whole cascade relies on for soundness
+    let mut rng = Rng::new(0xB5);
+    let mut t = TopK::new(8);
+    let mut last = t.threshold();
+    for pos in 0..500 {
+        t.offer(Match { pos, dist: rng.uniform() * 100.0 });
+        let now = t.threshold();
+        assert!(now <= last, "threshold rose: {last} -> {now}");
+        last = now;
+    }
+    assert_eq!(t.to_sorted().len(), 8);
+}
