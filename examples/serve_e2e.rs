@@ -14,6 +14,7 @@ use std::path::PathBuf;
 
 use repro::coordinator::{QueryRequest, Service, ServiceConfig};
 use repro::data::{extract_queries, Dataset};
+use repro::distances::metric::Metric;
 use repro::metrics::Timer;
 use repro::search::suite::Suite;
 use repro::util::cli::Args;
@@ -69,6 +70,7 @@ fn main() -> anyhow::Result<()> {
                 window_ratio: ratio,
                 suite,
                 k: 1,
+                metric: Metric::Cdtw,
             })?;
             latencies.push(resp.latency_ms);
             answers.push((resp.pos, resp.dist));

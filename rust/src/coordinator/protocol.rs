@@ -2,13 +2,16 @@
 //! responses (one object per line), so the service can be driven from a
 //! socket, a pipe, or in-process.
 //!
-//! Requests carry an optional `k` (top-k result count, default 1) and
-//! responses carry the ranked `matches` list; the scalar `pos`/`dist`
-//! fields always mirror the best match, so pre-top-k clients keep
-//! working unchanged.
+//! Requests carry an optional `k` (top-k result count, default 1) and an
+//! optional `metric` object (`{"name":"erp","gap":0.5}`; absent ⇒ cDTW,
+//! so every pre-metric request line parses and behaves exactly as
+//! before); responses carry the ranked `matches` list; the scalar
+//! `pos`/`dist` fields always mirror the best match, so pre-top-k clients
+//! keep working unchanged.
 
 use anyhow::{anyhow, Result};
 
+use crate::distances::metric::Metric;
 use crate::search::subsequence::Match;
 use crate::search::suite::Suite;
 use crate::util::json::{obj, Json};
@@ -24,6 +27,8 @@ pub struct QueryRequest {
     pub suite: Suite,
     /// how many ranked matches to return (>= 1)
     pub k: usize,
+    /// elastic metric to score candidates under (wire default: cDTW)
+    pub metric: Metric,
 }
 
 impl QueryRequest {
@@ -33,6 +38,7 @@ impl QueryRequest {
             ("window_ratio", Json::Num(self.window_ratio)),
             ("suite", Json::Str(self.suite.name().to_string())),
             ("k", Json::Num(self.k as f64)),
+            ("metric", self.metric.to_json()),
             ("query", Json::Arr(self.query.iter().map(|&v| Json::Num(v)).collect())),
         ])
         .to_string()
@@ -60,6 +66,12 @@ impl QueryRequest {
             None => 1,
         };
         anyhow::ensure!(k >= 1, "k must be >= 1");
+        // absent metric = cDTW: pre-metric request lines stay valid and
+        // behave bit-identically to the pre-metric service
+        let metric = match v.get("metric") {
+            Some(m) => Metric::from_json(m)?,
+            None => Metric::Cdtw,
+        };
         let query = v
             .get("query")
             .and_then(Json::as_arr)
@@ -68,7 +80,7 @@ impl QueryRequest {
             .map(|x| x.as_f64().ok_or_else(|| anyhow!("non-numeric query point")))
             .collect::<Result<Vec<_>>>()?;
         anyhow::ensure!(!query.is_empty(), "empty query");
-        Ok(Self { id, query, window_ratio, suite, k })
+        Ok(Self { id, query, window_ratio, suite, k, metric })
     }
 }
 
@@ -169,9 +181,33 @@ mod tests {
             window_ratio: 0.2,
             suite: Suite::UcrMon,
             k: 5,
+            metric: Metric::Cdtw,
         };
         let back = QueryRequest::from_json(&r.to_json()).unwrap();
         assert_eq!(back, r);
+    }
+
+    #[test]
+    fn request_round_trips_every_metric() {
+        for metric in [
+            Metric::Dtw,
+            Metric::Wdtw { g: 0.1 },
+            Metric::Erp { gap: 0.25 },
+            Metric::Msm { cost: 1.5 },
+            Metric::Twe { nu: 0.01, lambda: 0.5 },
+        ] {
+            let r = QueryRequest {
+                id: 3,
+                query: vec![0.5, 1.0],
+                window_ratio: 0.3,
+                suite: Suite::UcrMon,
+                k: 2,
+                metric,
+            };
+            let line = r.to_json();
+            assert!(line.contains(&format!("\"name\":\"{}\"", metric.name())), "{line}");
+            assert_eq!(QueryRequest::from_json(&line).unwrap(), r, "{}", metric.name());
+        }
     }
 
     #[test]
@@ -181,6 +217,25 @@ mod tests {
         )
         .unwrap();
         assert_eq!(r.k, 1);
+    }
+
+    #[test]
+    fn request_without_metric_defaults_to_cdtw() {
+        // the entire PR-1 wire format: no metric object anywhere
+        let r = QueryRequest::from_json(
+            r#"{"id":1,"window_ratio":0.1,"suite":"mon","k":2,"query":[1,2]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.metric, Metric::Cdtw);
+    }
+
+    #[test]
+    fn metric_defaults_fill_missing_parameters_on_the_wire() {
+        let r = QueryRequest::from_json(
+            r#"{"id":1,"window_ratio":0.1,"suite":"mon","metric":{"name":"twe"},"query":[1,2]}"#,
+        )
+        .unwrap();
+        assert!(matches!(r.metric, Metric::Twe { .. }));
     }
 
     #[test]
@@ -212,6 +267,15 @@ mod tests {
         assert!(QueryRequest::from_json(r#"{"id":1,"window_ratio":0.1,"suite":"mon","query":[]}"#).is_err());
         assert!(QueryRequest::from_json(
             r#"{"id":1,"window_ratio":0.1,"suite":"mon","k":0,"query":[1]}"#
+        )
+        .is_err());
+        // unknown / malformed metric objects are rejected, not defaulted
+        assert!(QueryRequest::from_json(
+            r#"{"id":1,"window_ratio":0.1,"suite":"mon","metric":{"name":"zzz"},"query":[1]}"#
+        )
+        .is_err());
+        assert!(QueryRequest::from_json(
+            r#"{"id":1,"window_ratio":0.1,"suite":"mon","metric":{"name":"msm","cost":-1},"query":[1]}"#
         )
         .is_err());
     }

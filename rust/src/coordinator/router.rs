@@ -9,6 +9,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::state::SharedUb;
 use crate::coordinator::worker::Job;
+use crate::distances::metric::Metric;
 use crate::index::ref_index::BucketStats;
 use crate::metrics::Counters;
 use crate::search::subsequence::{DataEnvelopes, Match, QueryContext};
@@ -30,10 +31,13 @@ pub fn shard_ranges(total: usize, shards: usize) -> Vec<(usize, usize)> {
 /// request cannot force proportional allocation) plus aggregated
 /// counters.
 ///
+/// `metric` picks the elastic distance every shard scores candidates
+/// under (`Metric::Cdtw` reproduces the pre-metric behaviour exactly);
 /// `denv` / `stats` are the reference-side artifacts: pass `Arc`s served
 /// by a shared [`crate::index::RefIndex`] to amortise them across
-/// queries, or `None` to fall back to per-query computation (envelopes)
-/// and streaming statistics — the seed behaviour.
+/// queries, or `None` to fall back to per-query computation (envelopes,
+/// built only when the metric's bounds can use them) and streaming
+/// statistics — the seed behaviour.
 ///
 /// Tie caveat: candidates whose distance *exactly* equals the k-th best
 /// another shard already published are dropped (strict-< acceptance,
@@ -47,6 +51,7 @@ pub fn route_query_topk(
     reference: &Arc<Vec<f64>>,
     query_raw: &[f64],
     w: usize,
+    metric: Metric,
     suite: Suite,
     k: usize,
     sync_every: usize,
@@ -57,6 +62,12 @@ pub fn route_query_topk(
     anyhow::ensure!(n > 0, "empty query");
     anyhow::ensure!(k >= 1, "k must be >= 1");
     anyhow::ensure!(reference.len() >= n, "reference shorter than query");
+    metric.validate()?;
+    // normalise the band here so the fallback envelopes below are always
+    // built for the window the shards actually scan with (idempotent for
+    // callers that already adjusted it — an unbanded metric with narrow-w
+    // envelopes would over-prune)
+    let w = metric.effective_window(n, w);
     if let Some(t) = &stats {
         anyhow::ensure!(t.qlen() == n, "stats bucket is for qlen {}, query has {n}", t.qlen());
     }
@@ -66,9 +77,8 @@ pub fn route_query_topk(
     let shared = SharedUb::new(f64::INFINITY);
     let denv = match denv {
         Some(d) => Some(d),
-        None => suite
-            .cascade()
-            .needs_data_envelopes()
+        None => metric
+            .wants_data_envelopes(suite)
             .then(|| Arc::new(DataEnvelopes::new(reference, w))),
     };
     let (reply_tx, reply_rx) = channel();
@@ -78,7 +88,7 @@ pub fn route_query_topk(
             reference: Arc::clone(reference),
             start,
             end,
-            ctx: QueryContext::new(query_raw, w),
+            ctx: QueryContext::with_metric(query_raw, w, metric),
             denv: denv.clone(),
             stats: stats.clone(),
             suite,
@@ -122,8 +132,18 @@ pub fn route_query(
     suite: Suite,
     sync_every: usize,
 ) -> Result<(Match, Counters)> {
-    let (mut matches, counters) =
-        route_query_topk(workers, reference, query_raw, w, suite, 1, sync_every, None, None)?;
+    let (mut matches, counters) = route_query_topk(
+        workers,
+        reference,
+        query_raw,
+        w,
+        Metric::Cdtw,
+        suite,
+        1,
+        sync_every,
+        None,
+        None,
+    )?;
     Ok((matches.remove(0), counters))
 }
 

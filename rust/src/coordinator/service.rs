@@ -26,6 +26,8 @@ use crate::coordinator::batcher;
 use crate::coordinator::protocol::{QueryRequest, QueryResponse};
 use crate::coordinator::router::route_query_topk;
 use crate::coordinator::worker::{worker_loop, Job, DEFAULT_SYNC_EVERY};
+#[cfg(feature = "xla")]
+use crate::distances::metric::Metric;
 use crate::index::ref_index::RefIndex;
 use crate::metrics::{Counters, Timer};
 #[cfg(feature = "xla")]
@@ -204,12 +206,20 @@ impl Service {
     /// workers, reference-side artifacts served by the shared index.
     pub fn submit(&self, req: &QueryRequest) -> Result<QueryResponse> {
         let timer = Timer::start();
-        let w = window_cells(req.query.len(), req.window_ratio);
+        let w = req
+            .metric
+            .effective_window(req.query.len(), window_cells(req.query.len(), req.window_ratio));
         let (matches, counters) = match req.suite {
             #[cfg(feature = "xla")]
             Suite::UcrMonXla => {
                 // the batched prefilter path keeps a single best-so-far
+                // and its LB_Keogh prefilter is DTW-specific
                 anyhow::ensure!(req.k == 1, "suite {} serves k = 1 only", req.suite.name());
+                anyhow::ensure!(
+                    matches!(req.metric, Metric::Cdtw),
+                    "suite {} serves the cdtw metric only",
+                    req.suite.name()
+                );
                 let (m, c) = self.submit_xla(req, w, false)?;
                 (vec![m], c)
             }
@@ -220,19 +230,21 @@ impl Service {
             ),
             _ => {
                 // empty / oversized queries and k = 0 error inside
-                // stats_for and route_query_topk respectively
+                // artifacts_for and route_query_topk respectively
                 let mut pre = Counters::new();
-                let stats = self.index.stats_for(req.query.len(), &mut pre)?;
-                let denv = req
-                    .suite
-                    .cascade()
-                    .needs_data_envelopes()
-                    .then(|| self.index.envelopes_for(w, &mut pre));
+                let (stats, denv) = self.index.artifacts_for(
+                    req.query.len(),
+                    w,
+                    req.metric,
+                    req.suite,
+                    &mut pre,
+                )?;
                 let (matches, mut counters) = route_query_topk(
                     &self.senders,
                     &self.reference,
                     &req.query,
                     w,
+                    req.metric,
                     req.suite,
                     req.k,
                     self.sync_every,
@@ -262,9 +274,15 @@ impl Service {
     }
 
     /// Ablation A3 entry: resolve a query entirely on the XLA side.
+    /// Like [`Service::submit`] with the XLA suite, this path is
+    /// cDTW-only — the batched kernels know nothing of other metrics.
     #[cfg(feature = "xla")]
     pub fn submit_xla_full(&self, req: &QueryRequest) -> Result<QueryResponse> {
         let timer = Timer::start();
+        anyhow::ensure!(
+            matches!(req.metric, Metric::Cdtw),
+            "XLA full resolution serves the cdtw metric only"
+        );
         let w = window_cells(req.query.len(), req.window_ratio);
         let (m, counters) = self.submit_xla(req, w, true)?;
         self.served.fetch_add(1, Ordering::Relaxed);
@@ -308,7 +326,10 @@ impl Drop for Service {
 mod tests {
     use super::*;
     use crate::data::Dataset;
-    use crate::search::subsequence::{search_subsequence, search_subsequence_topk};
+    use crate::distances::metric::Metric;
+    use crate::search::subsequence::{
+        search_subsequence, search_subsequence_topk, search_subsequence_topk_metric,
+    };
 
     #[test]
     fn service_matches_direct_search() {
@@ -322,6 +343,7 @@ mod tests {
             window_ratio: 0.1,
             suite: Suite::UcrMon,
             k: 1,
+            metric: Metric::Cdtw,
         };
         let resp = svc.submit(&req).unwrap();
         let mut c = Counters::new();
@@ -340,8 +362,14 @@ mod tests {
         let svc = Service::new(r.clone(), &ServiceConfig { shards: 4, ..Default::default() })
             .unwrap();
         let k = 5;
-        let req =
-            QueryRequest { id: 9, query: q.clone(), window_ratio: 0.2, suite: Suite::UcrMon, k };
+        let req = QueryRequest {
+            id: 9,
+            query: q.clone(),
+            window_ratio: 0.2,
+            suite: Suite::UcrMon,
+            k,
+            metric: Metric::Cdtw,
+        };
         let resp = svc.submit(&req).unwrap();
         let mut c = Counters::new();
         let want =
@@ -367,6 +395,7 @@ mod tests {
                 window_ratio: 0.1,
                 suite: Suite::UcrMon,
                 k: 2,
+                metric: Metric::Cdtw,
             };
             svc.submit(&req).unwrap();
         }
@@ -392,6 +421,7 @@ mod tests {
                     window_ratio: 0.2,
                     suite: Suite::UcrMon,
                     k: 1,
+                    metric: Metric::Cdtw,
                 };
                 svc.submit(&req).unwrap()
             }));
@@ -404,12 +434,53 @@ mod tests {
     }
 
     #[test]
+    fn every_metric_serves_and_matches_direct_search() {
+        let r = Dataset::Pamap2.generate(1500, 14);
+        let q = crate::data::extract_queries(&r, 1, 64, 0.1, 15).remove(0);
+        let svc =
+            Service::new(r.clone(), &ServiceConfig { shards: 2, ..Default::default() }).unwrap();
+        let k = 3;
+        for metric in Metric::all_default() {
+            let req = QueryRequest {
+                id: 0,
+                query: q.clone(),
+                window_ratio: 0.1,
+                suite: Suite::UcrMon,
+                k,
+                metric,
+            };
+            let resp = svc.submit(&req).unwrap();
+            let mut c = Counters::new();
+            let want = search_subsequence_topk_metric(
+                &r,
+                &q,
+                window_cells(q.len(), 0.1),
+                k,
+                metric,
+                Suite::UcrMon,
+                &mut c,
+            );
+            assert_eq!(resp.matches.len(), want.len(), "{}", metric.name());
+            for (g, m) in resp.matches.iter().zip(&want) {
+                assert_eq!(g.pos, m.pos, "{}", metric.name());
+                assert!((g.dist - m.dist).abs() < 1e-9, "{}", metric.name());
+            }
+        }
+    }
+
+    #[test]
     fn xla_without_artifacts_errors() {
         let r = Dataset::Ecg.generate(1000, 5);
         let svc = Service::new(r.clone(), &ServiceConfig::default()).unwrap();
         let q = crate::data::extract_queries(&r, 1, 128, 0.1, 6).remove(0);
-        let req =
-            QueryRequest { id: 1, query: q, window_ratio: 0.1, suite: Suite::UcrMonXla, k: 1 };
+        let req = QueryRequest {
+            id: 1,
+            query: q,
+            window_ratio: 0.1,
+            suite: Suite::UcrMonXla,
+            k: 1,
+            metric: Metric::Cdtw,
+        };
         assert!(svc.submit(&req).is_err());
         assert!(!svc.has_engine());
     }
@@ -432,6 +503,7 @@ mod tests {
             window_ratio: 0.1,
             suite: Suite::UcrMonXla,
             k: 1,
+            metric: Metric::Cdtw,
         };
         let err = svc.submit(&req).unwrap_err();
         assert!(err.to_string().contains("unavailable"), "{err}");

@@ -146,7 +146,10 @@ pub fn worker_loop(rx: Receiver<Job>, busy: Arc<AtomicU64>) {
 mod tests {
     use super::*;
     use crate::data::Dataset;
-    use crate::search::subsequence::{search_subsequence, search_subsequence_topk};
+    use crate::distances::metric::Metric;
+    use crate::search::subsequence::{
+        search_subsequence, search_subsequence_topk, search_subsequence_topk_metric,
+    };
 
     #[test]
     fn scan_shard_with_shared_ub_matches_plain_search() {
@@ -223,5 +226,55 @@ mod tests {
             assert_eq!(g.pos, m.pos);
             assert!((g.dist - m.dist).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn sharded_scan_is_metric_generic() {
+        // a bound-free metric through the shard workers: union of local
+        // top-k heaps equals the full single-threaded metric scan
+        let r = Dataset::FoG.generate(2000, 27);
+        let q = crate::data::extract_queries(&r, 1, 64, 0.1, 28).remove(0);
+        let w = 6;
+        let k = 4;
+        let metric = Metric::Twe { nu: 0.05, lambda: 1.0 };
+        let suite = Suite::UcrMon;
+        let mut cfull = Counters::new();
+        let want = search_subsequence_topk_metric(&r, &q, w, k, metric, suite, &mut cfull);
+        assert_eq!(want.len(), k);
+
+        let table = BucketStats::build(&r, q.len());
+        let shared = SharedUb::new(f64::INFINITY);
+        let total = r.len() - q.len() + 1;
+        let mut merged = TopK::new(k);
+        let mut counters = Counters::new();
+        for s in 0..3 {
+            let start = s * total / 3;
+            let end = (s + 1) * total / 3;
+            // no envelopes: the metric cannot use them
+            let mut ctx = QueryContext::with_metric(&q, w, metric);
+            let local = scan_shard_topk(
+                &r,
+                start,
+                end,
+                &mut ctx,
+                None,
+                Some(&table),
+                suite,
+                k,
+                &shared,
+                256,
+                &mut counters,
+            );
+            merged.merge(local);
+        }
+        let got = merged.into_sorted();
+        assert_eq!(got.len(), want.len());
+        for (g, m) in got.iter().zip(&want) {
+            assert_eq!(g.pos, m.pos);
+            assert!((g.dist - m.dist).abs() < 1e-9);
+        }
+        // all kernel work was tallied under the right metric
+        assert_eq!(counters.metric_calls[metric.index()], counters.dtw_calls);
+        assert_eq!(counters.lb_kim_prunes + counters.lb_keogh_eq_prunes, 0);
     }
 }

@@ -1,0 +1,371 @@
+//! The metric dispatch layer: one enum naming every elastic distance the
+//! search stack can score candidates under, with its parameters.
+//!
+//! The paper's §6 future-work claim — EAPruned transfers to any elastic
+//! measure sharing DTW's DP structure — lives in [`crate::distances::elastic`]
+//! as kernels. This module is what makes those kernels *servable*: the
+//! subsequence scan, NN1, the [`crate::index::Engine`] and the wire
+//! protocol all take a [`Metric`] and dispatch through [`Metric::eval`].
+//!
+//! Lower-bound applicability is explicit, not assumed: LB_Kim and the two
+//! LB_Keogh directions lower-bound (banded) DTW only. WDTW's weights can
+//! shrink any step below the unweighted cost, and ERP/MSM/TWE have
+//! different step costs altogether, so reusing the DTW cascade there would
+//! *over-prune* (bounds that are not lower bounds). [`Metric::uses_envelopes`]
+//! is the single source of truth the scan, the engine and the reference
+//! index consult; metrics outside the DTW family run the bound-free
+//! EAPruned scan, still threshold-driven by the top-k collector.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::distances::dtw::dtw_oracle;
+use crate::distances::elastic::erp::{eap_erp, erp_naive};
+use crate::distances::elastic::msm::{eap_msm, msm_naive};
+use crate::distances::elastic::twe::{eap_twe, twe_naive};
+use crate::distances::elastic::wdtw::{eap_wdtw, wdtw_naive};
+use crate::distances::DtwWorkspace;
+use crate::search::suite::Suite;
+use crate::util::json::{obj, Json};
+
+/// Default WDTW sigmoid steepness (the UEA convention).
+pub const DEFAULT_WDTW_G: f64 = 0.05;
+/// Default ERP gap value (0 on z-normalised data).
+pub const DEFAULT_ERP_GAP: f64 = 0.0;
+/// Default MSM split/merge cost.
+pub const DEFAULT_MSM_COST: f64 = 0.5;
+/// Default TWE stiffness.
+pub const DEFAULT_TWE_NU: f64 = 0.05;
+/// Default TWE deletion penalty.
+pub const DEFAULT_TWE_LAMBDA: f64 = 1.0;
+
+/// An elastic distance plus its parameters — everything a request needs to
+/// say to pick how candidates are scored.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Metric {
+    /// Sakoe-Chiba-banded DTW — the paper's metric and the wire default.
+    #[default]
+    Cdtw,
+    /// Unbanded DTW (the request's window ratio is ignored).
+    Dtw,
+    /// Weighted DTW; the sigmoid weights replace the hard band, so the
+    /// request's window ratio is ignored.
+    Wdtw { g: f64 },
+    /// Edit distance with Real Penalty, gap value `gap`.
+    Erp { gap: f64 },
+    /// Move-Split-Merge, split/merge cost `cost`.
+    Msm { cost: f64 },
+    /// Time Warp Edit distance, stiffness `nu` and deletion penalty
+    /// `lambda`.
+    Twe { nu: f64, lambda: f64 },
+}
+
+impl Metric {
+    /// Number of metric kinds — the width of the per-metric counter
+    /// arrays in [`crate::metrics::Counters`].
+    pub const COUNT: usize = 6;
+
+    /// Kind names indexed by [`Metric::index`].
+    pub const KIND_NAMES: [&'static str; Metric::COUNT] =
+        ["cdtw", "dtw", "wdtw", "erp", "msm", "twe"];
+
+    /// Wire name of this metric's kind (parameters travel as sibling
+    /// JSON fields, see [`Metric::to_json`]).
+    pub fn name(&self) -> &'static str {
+        Self::KIND_NAMES[self.index()]
+    }
+
+    /// Dense kind index, for the per-metric counter arrays.
+    pub fn index(&self) -> usize {
+        match self {
+            Metric::Cdtw => 0,
+            Metric::Dtw => 1,
+            Metric::Wdtw { .. } => 2,
+            Metric::Erp { .. } => 3,
+            Metric::Msm { .. } => 4,
+            Metric::Twe { .. } => 5,
+        }
+    }
+
+    /// Can LB_Kim / LB_Keogh prune for this metric? True only for the
+    /// banded/unbanded DTW pair; every other metric must run bound-free
+    /// (the envelope bounds are not lower bounds of WDTW/ERP/MSM/TWE).
+    pub fn uses_envelopes(&self) -> bool {
+        matches!(self, Metric::Cdtw | Metric::Dtw)
+    }
+
+    /// Will a scan under this metric and `suite` actually consume
+    /// reference-side data envelopes? The single predicate the direct
+    /// scan, the coordinator's fallback build and the shared index all
+    /// route through — keep them agreeing by construction.
+    pub fn wants_data_envelopes(&self, suite: Suite) -> bool {
+        self.uses_envelopes() && suite.cascade().needs_data_envelopes()
+    }
+
+    /// The warping window actually used for a query of `qlen` points when
+    /// the request asked for `w` cells: DTW and WDTW are unbanded by
+    /// convention (full window), everything else honours the request.
+    pub fn effective_window(&self, qlen: usize, w: usize) -> usize {
+        match self {
+            Metric::Dtw | Metric::Wdtw { .. } => qlen,
+            _ => w,
+        }
+    }
+
+    /// Evaluate the metric between `q` and `c` under upper bound `ub`:
+    /// the exact distance when it is `<= ub`, `+inf` once provably above.
+    ///
+    /// `suite` picks the DTW core for the DTW family (so the ablation
+    /// suites keep working through the dispatch layer); `cb` is the
+    /// cascade's cumulative-bound tail, meaningful for DTW cores only.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval(
+        &self,
+        q: &[f64],
+        c: &[f64],
+        w: usize,
+        ub: f64,
+        cb: Option<&[f64]>,
+        suite: Suite,
+        ws: &mut DtwWorkspace,
+    ) -> f64 {
+        match *self {
+            Metric::Cdtw => suite.dtw(q, c, w, ub, cb, ws),
+            Metric::Dtw => suite.dtw(q, c, q.len().max(c.len()), ub, cb, ws),
+            Metric::Wdtw { g } => eap_wdtw(q, c, g, q.len().max(c.len()), ub, ws),
+            Metric::Erp { gap } => eap_erp(q, c, gap, w, ub, ws),
+            Metric::Msm { cost } => eap_msm(q, c, cost, w, ub, ws),
+            Metric::Twe { nu, lambda } => eap_twe(q, c, nu, lambda, w, ub, ws),
+        }
+    }
+
+    /// Naive full-matrix oracle for this metric — the conformance-test
+    /// ground truth, never used on a hot path.
+    pub fn exact(&self, q: &[f64], c: &[f64], w: usize) -> f64 {
+        match *self {
+            Metric::Cdtw => dtw_oracle(q, c, Some(w)),
+            Metric::Dtw => dtw_oracle(q, c, None),
+            Metric::Wdtw { g } => wdtw_naive(q, c, g, q.len().max(c.len())),
+            Metric::Erp { gap } => erp_naive(q, c, gap, w),
+            Metric::Msm { cost } => msm_naive(q, c, cost, w),
+            Metric::Twe { nu, lambda } => twe_naive(q, c, nu, lambda, w),
+        }
+    }
+
+    /// Parameter sanity: finite, and non-negative where the measure
+    /// requires it (a negative MSM cost or TWE penalty breaks the
+    /// metric's triangle-free soundness; a negative WDTW steepness makes
+    /// the weights decreasing).
+    pub fn validate(&self) -> Result<()> {
+        let finite = |name: &str, v: f64| -> Result<()> {
+            anyhow::ensure!(v.is_finite(), "metric parameter {name:?} must be finite, got {v}");
+            Ok(())
+        };
+        let non_negative = |name: &str, v: f64| -> Result<()> {
+            finite(name, v)?;
+            anyhow::ensure!(v >= 0.0, "metric parameter {name:?} must be >= 0, got {v}");
+            Ok(())
+        };
+        match *self {
+            Metric::Cdtw | Metric::Dtw => Ok(()),
+            Metric::Wdtw { g } => non_negative("g", g),
+            Metric::Erp { gap } => finite("gap", gap),
+            Metric::Msm { cost } => non_negative("cost", cost),
+            Metric::Twe { nu, lambda } => {
+                non_negative("nu", nu)?;
+                non_negative("lambda", lambda)
+            }
+        }
+    }
+
+    /// The wire form: `{"name":"twe","nu":0.05,"lambda":1}` — kind name
+    /// plus the kind's parameters as sibling fields.
+    pub fn to_json(&self) -> Json {
+        let name = ("name", Json::Str(self.name().to_string()));
+        match *self {
+            Metric::Cdtw | Metric::Dtw => obj(vec![name]),
+            Metric::Wdtw { g } => obj(vec![name, ("g", Json::Num(g))]),
+            Metric::Erp { gap } => obj(vec![name, ("gap", Json::Num(gap))]),
+            Metric::Msm { cost } => obj(vec![name, ("cost", Json::Num(cost))]),
+            Metric::Twe { nu, lambda } => {
+                obj(vec![name, ("nu", Json::Num(nu)), ("lambda", Json::Num(lambda))])
+            }
+        }
+    }
+
+    /// Parse the wire form. Missing parameters take the documented
+    /// defaults; unknown kinds, unknown parameter keys (a misspelled
+    /// parameter must not silently fall back to a default) and malformed
+    /// parameters error.
+    pub fn from_json(v: &Json) -> Result<Metric> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("metric missing name"))?;
+        let num = |key: &str, default: f64| -> Result<f64> {
+            match v.get(key) {
+                Some(x) => {
+                    x.as_f64().ok_or_else(|| anyhow!("metric parameter {key:?} must be a number"))
+                }
+                None => Ok(default),
+            }
+        };
+        let (m, allowed): (Metric, &[&str]) = match name.to_ascii_lowercase().as_str() {
+            "cdtw" => (Metric::Cdtw, &["name"]),
+            "dtw" => (Metric::Dtw, &["name"]),
+            "wdtw" => (Metric::Wdtw { g: num("g", DEFAULT_WDTW_G)? }, &["name", "g"]),
+            "erp" => (Metric::Erp { gap: num("gap", DEFAULT_ERP_GAP)? }, &["name", "gap"]),
+            "msm" => (Metric::Msm { cost: num("cost", DEFAULT_MSM_COST)? }, &["name", "cost"]),
+            "twe" => (
+                Metric::Twe {
+                    nu: num("nu", DEFAULT_TWE_NU)?,
+                    lambda: num("lambda", DEFAULT_TWE_LAMBDA)?,
+                },
+                &["name", "nu", "lambda"],
+            ),
+            other => bail!("unknown metric {other:?}"),
+        };
+        if let Some(map) = v.as_obj() {
+            for key in map.keys() {
+                anyhow::ensure!(
+                    allowed.contains(&key.as_str()),
+                    "metric {:?} has no parameter {key:?} (expected one of {allowed:?})",
+                    m.name()
+                );
+            }
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Parse a bare kind name with default parameters (the CLI form).
+    pub fn from_name(s: &str) -> Option<Metric> {
+        Metric::from_json(&obj(vec![("name", Json::Str(s.to_string()))])).ok()
+    }
+
+    /// One default-parameterised instance of every kind — the conformance
+    /// and property suites iterate this so a new enum arm is one line away
+    /// from coverage.
+    pub fn all_default() -> [Metric; Metric::COUNT] {
+        [
+            Metric::Cdtw,
+            Metric::Dtw,
+            Metric::Wdtw { g: DEFAULT_WDTW_G },
+            Metric::Erp { gap: DEFAULT_ERP_GAP },
+            Metric::Msm { cost: DEFAULT_MSM_COST },
+            Metric::Twe { nu: DEFAULT_TWE_NU, lambda: DEFAULT_TWE_LAMBDA },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_indices_are_dense_and_round_trip() {
+        for (i, m) in Metric::all_default().iter().enumerate() {
+            assert_eq!(m.index(), i);
+            assert_eq!(m.name(), Metric::KIND_NAMES[i]);
+            assert_eq!(Metric::from_name(m.name()), Some(*m), "{}", m.name());
+        }
+        assert_eq!(Metric::from_name("zzz"), None);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_parameters() {
+        for m in [
+            Metric::Cdtw,
+            Metric::Dtw,
+            Metric::Wdtw { g: 0.125 },
+            Metric::Erp { gap: -0.5 },
+            Metric::Msm { cost: 2.0 },
+            Metric::Twe { nu: 0.001, lambda: 0.25 },
+        ] {
+            let back = Metric::from_json(&m.to_json()).unwrap();
+            assert_eq!(back, m, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn json_defaults_fill_missing_parameters() {
+        let m = Metric::from_json(&Json::parse(r#"{"name":"twe"}"#).unwrap()).unwrap();
+        assert_eq!(m, Metric::Twe { nu: DEFAULT_TWE_NU, lambda: DEFAULT_TWE_LAMBDA });
+        let m = Metric::from_json(&Json::parse(r#"{"name":"msm","cost":3}"#).unwrap()).unwrap();
+        assert_eq!(m, Metric::Msm { cost: 3.0 });
+    }
+
+    #[test]
+    fn json_rejects_bad_metrics() {
+        for line in [
+            r#"{"name":"nope"}"#,
+            r#"{}"#,
+            r#"{"name":"msm","cost":-1}"#,
+            r#"{"name":"wdtw","g":"x"}"#,
+            r#"{"name":"twe","nu":-0.1}"#,
+            // misspelled / misplaced parameter keys must not silently
+            // fall back to the defaults
+            r#"{"name":"wdtw","steepness":0.3}"#,
+            r#"{"name":"erp","cost":0.9}"#,
+            r#"{"name":"cdtw","g":0.1}"#,
+        ] {
+            assert!(Metric::from_json(&Json::parse(line).unwrap()).is_err(), "{line}");
+        }
+    }
+
+    #[test]
+    fn envelope_support_is_dtw_family_only() {
+        assert!(Metric::Cdtw.uses_envelopes());
+        assert!(Metric::Dtw.uses_envelopes());
+        for m in &Metric::all_default()[2..] {
+            assert!(!m.uses_envelopes(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn effective_window_unbands_dtw_and_wdtw() {
+        assert_eq!(Metric::Cdtw.effective_window(128, 12), 12);
+        assert_eq!(Metric::Dtw.effective_window(128, 12), 128);
+        assert_eq!(Metric::Wdtw { g: 0.05 }.effective_window(128, 12), 128);
+        assert_eq!(Metric::Erp { gap: 0.0 }.effective_window(128, 12), 12);
+    }
+
+    #[test]
+    fn eval_matches_exact_and_abandons_for_every_kind() {
+        let a = [3.0, 1.0, 4.0, 4.0, 1.0, 1.0];
+        let b = [1.0, 3.0, 2.0, 1.0, 2.0, 2.0];
+        let mut ws = DtwWorkspace::default();
+        for m in Metric::all_default() {
+            let want = m.exact(&a, &b, 3);
+            assert!(want.is_finite(), "{}", m.name());
+            let got = m.eval(&a, &b, 3, f64::INFINITY, None, Suite::UcrMon, &mut ws);
+            assert!((got - want).abs() < 1e-12, "{}: {got} vs {want}", m.name());
+            let tie = m.eval(&a, &b, 3, want, None, Suite::UcrMon, &mut ws);
+            assert!((tie - want).abs() < 1e-12, "{} tie", m.name());
+            if want > 0.0 {
+                let ub = want * (1.0 - 1e-9) - 1e-12;
+                let below = m.eval(&a, &b, 3, ub, None, Suite::UcrMon, &mut ws);
+                assert_eq!(below, f64::INFINITY, "{} abandon", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn cdtw_eval_is_the_suite_core_verbatim() {
+        // the dispatch arm must be bitwise the suite's DTW core — the
+        // bit-identity guarantee of every pre-metric code path
+        let a = [0.5, -1.25, 2.0, 0.0, 1.0, -0.75, 0.25, 1.5];
+        let b = [1.0, 0.25, -0.5, 1.75, -1.0, 0.5, 0.0, -0.25];
+        let mut ws1 = DtwWorkspace::default();
+        let mut ws2 = DtwWorkspace::default();
+        for suite in Suite::ALL {
+            for w in [1usize, 3, 8] {
+                for ub in [f64::INFINITY, 10.0, 1.0] {
+                    let got = Metric::Cdtw.eval(&a, &b, w, ub, None, suite, &mut ws1);
+                    let want = suite.dtw(&a, &b, w, ub, None, &mut ws2);
+                    assert_eq!(got.to_bits(), want.to_bits(), "{} w={w} ub={ub}", suite.name());
+                }
+            }
+        }
+    }
+}

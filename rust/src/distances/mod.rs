@@ -14,6 +14,7 @@
 //! | [`left_prune`] | Algorithm 2 (left pruning only) | stepping stone |
 //! | [`eap_dtw`] | **Algorithm 3 — EAPrunedDTW** | the contribution |
 //! | [`elastic`] | EAPruned skeleton on ERP/MSM/TWE/WDTW | future work §6 |
+//! | [`metric`] | [`metric::Metric`] dispatch over the whole zoo | serving layer |
 
 pub mod cost;
 pub mod dtw;
@@ -21,6 +22,7 @@ pub mod dtw_ea;
 pub mod eap_dtw;
 pub mod elastic;
 pub mod left_prune;
+pub mod metric;
 pub mod pruned_dtw;
 
 /// Workspace reused across distance calls to keep the hot path

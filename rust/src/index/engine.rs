@@ -16,22 +16,29 @@ use anyhow::Result;
 
 use crate::coordinator::router::route_query_topk;
 use crate::coordinator::worker::{worker_loop, Job, DEFAULT_SYNC_EVERY};
+use crate::distances::metric::Metric;
 use crate::index::ref_index::RefIndex;
 use crate::metrics::Counters;
 use crate::search::subsequence::{window_cells, Match};
 use crate::search::suite::Suite;
 
 /// One query of a batch: raw (un-normalised) points plus its warping
-/// window as a ratio of the query length, the paper's §5 convention.
+/// window as a ratio of the query length, the paper's §5 convention, and
+/// the elastic metric it is scored under (cDTW by default).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Query {
     pub query: Vec<f64>,
     pub window_ratio: f64,
+    pub metric: Metric,
 }
 
 impl Query {
     pub fn new(query: Vec<f64>, window_ratio: f64) -> Self {
-        Self { query, window_ratio }
+        Self::with_metric(query, window_ratio, Metric::Cdtw)
+    }
+
+    pub fn with_metric(query: Vec<f64>, window_ratio: f64, metric: Metric) -> Self {
+        Self { query, window_ratio, metric }
     }
 }
 
@@ -44,8 +51,9 @@ pub struct TopKResult {
 }
 
 impl TopKResult {
-    /// The single best match (always present: a fresh scan accepts its
-    /// first candidate).
+    /// The single best match. Panics if `matches` is empty — which only
+    /// happens when the query had zero candidate windows (longer than the
+    /// reference); any scan over at least one window accepts a match.
     pub fn best(&self) -> Match {
         self.matches[0]
     }
@@ -121,22 +129,30 @@ impl Engine {
     }
 
     /// Answer one top-k query through the shared index and worker pool.
+    ///
+    /// Degenerate shapes degrade to short results instead of errors: a
+    /// query longer than the reference has zero candidate windows and
+    /// returns an empty `matches` list; `k` beyond the candidate count
+    /// returns every window ranked.
     pub fn search_one(&self, q: &Query, k: usize) -> Result<TopKResult> {
         anyhow::ensure!(k >= 1, "k must be >= 1");
         anyhow::ensure!(!q.query.is_empty(), "empty query");
-        let w = window_cells(q.query.len(), q.window_ratio);
+        q.metric.validate()?;
+        if q.query.len() > self.index.reference_len() {
+            return Ok(TopKResult { matches: Vec::new(), counters: Counters::new() });
+        }
+        let w = q
+            .metric
+            .effective_window(q.query.len(), window_cells(q.query.len(), q.window_ratio));
         let mut pre = Counters::new();
-        let stats = self.index.stats_for(q.query.len(), &mut pre)?;
-        let denv = self
-            .suite
-            .cascade()
-            .needs_data_envelopes()
-            .then(|| self.index.envelopes_for(w, &mut pre));
+        let (stats, denv) =
+            self.index.artifacts_for(q.query.len(), w, q.metric, self.suite, &mut pre)?;
         let (matches, mut counters) = route_query_topk(
             &self.senders,
             self.index.reference(),
             &q.query,
             w,
+            q.metric,
             self.suite,
             k,
             self.sync_every,
@@ -217,7 +233,67 @@ mod tests {
     fn rejects_bad_inputs() {
         let engine = Engine::new(Dataset::Ecg.generate(500, 1), &EngineConfig::default()).unwrap();
         assert!(engine.search_one(&Query::new(vec![], 0.1), 1).is_err());
-        assert!(engine.search_one(&Query::new(vec![0.0; 1000], 0.1), 1).is_err());
         assert!(engine.search_one(&Query::new(vec![0.0; 64], 0.1), 0).is_err());
+        // invalid metric parameters are an error, not a NaN poisoning the
+        // worker pool's heaps
+        let bad = Metric::Twe { nu: f64::NAN, lambda: 1.0 };
+        assert!(engine.search_one(&Query::with_metric(vec![0.0; 64], 0.1, bad), 1).is_err());
+    }
+
+    #[test]
+    fn query_longer_than_reference_returns_empty_ranked_list() {
+        // zero candidate windows is a short answer, not an error or panic
+        let engine = Engine::new(Dataset::Ecg.generate(500, 1), &EngineConfig::default()).unwrap();
+        let res = engine.search_batch(&[Query::new(vec![0.0; 1000], 0.1)], 3).unwrap();
+        assert_eq!(res.len(), 1);
+        assert!(res[0].matches.is_empty());
+        assert_eq!(res[0].counters.candidates, 0);
+    }
+
+    #[test]
+    fn k_beyond_candidate_count_returns_all_windows_ranked() {
+        let r = Dataset::Ppg.generate(140, 2);
+        let engine = Engine::new(r.clone(), &EngineConfig::default()).unwrap();
+        let q = Query::new(r[5..133].to_vec(), 0.1);
+        let windows = r.len() - 128 + 1;
+        let res = engine.search_one(&q, 10_000).unwrap();
+        assert_eq!(res.matches.len(), windows);
+        for pair in res.matches.windows(2) {
+            assert!(
+                pair[0].dist < pair[1].dist
+                    || (pair[0].dist == pair[1].dist && pair[0].pos < pair[1].pos)
+            );
+        }
+    }
+
+    #[test]
+    fn metric_queries_route_through_engine_and_skip_envelopes() {
+        use crate::search::subsequence::search_subsequence_topk_metric;
+        let r = Dataset::Refit.generate(1500, 19);
+        let q = extract_queries(&r, 1, 64, 0.1, 20).remove(0);
+        let metric = Metric::Msm { cost: 0.5 };
+        let engine =
+            Engine::new(r.clone(), &EngineConfig { shards: 1, ..Default::default() }).unwrap();
+        let res = engine.search_one(&Query::with_metric(q.clone(), 0.1, metric), 4).unwrap();
+        let mut c = Counters::new();
+        let want = search_subsequence_topk_metric(
+            &r,
+            &q,
+            window_cells(q.len(), 0.1),
+            4,
+            metric,
+            Suite::UcrMon,
+            &mut c,
+        );
+        assert_eq!(res.matches.len(), want.len());
+        for (g, m) in res.matches.iter().zip(&want) {
+            assert_eq!(g.pos, m.pos);
+            assert!((g.dist - m.dist).abs() < 1e-9);
+        }
+        // per-metric tallies survived the shard fan-in...
+        assert_eq!(res.counters.metric_calls[metric.index()], res.counters.dtw_calls);
+        // ...and no envelope artifact was ever built for a non-DTW metric
+        let (_, misses) = engine.index().hit_counts();
+        assert_eq!(misses, 1, "stats bucket only, no envelopes");
     }
 }

@@ -28,9 +28,11 @@ use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
 
+use crate::distances::metric::Metric;
 use crate::metrics::Counters;
 use crate::norm::znorm::WindowStats;
 use crate::search::subsequence::DataEnvelopes;
+use crate::search::suite::Suite;
 
 /// Per-position (mean, std) of every window of one length over the
 /// reference — the z-norm statistics table for one query-length bucket.
@@ -158,6 +160,26 @@ impl RefIndex {
         Ok(out)
     }
 
+    /// The reference-side artifacts one query needs, metric-aware: the
+    /// window-stats bucket for its length always (every metric z-normalises
+    /// candidates), the raw-stream envelopes only when both the suite's
+    /// cascade *and* the query's metric can use them — so an ERP/MSM/TWE/
+    /// WDTW query never triggers (or pays for) a DTW envelope build.
+    pub fn artifacts_for(
+        &self,
+        qlen: usize,
+        w: usize,
+        metric: Metric,
+        suite: Suite,
+        counters: &mut Counters,
+    ) -> Result<(Arc<BucketStats>, Option<Arc<DataEnvelopes>>)> {
+        let stats = self.stats_for(qlen, counters)?;
+        let denv = metric
+            .wants_data_envelopes(suite)
+            .then(|| self.envelopes_for(w, counters));
+        Ok((stats, denv))
+    }
+
     /// The raw-stream envelopes for warping window `w` (cells), building
     /// them on first use.
     pub fn envelopes_for(&self, w: usize, counters: &mut Counters) -> Arc<DataEnvelopes> {
@@ -254,6 +276,26 @@ mod tests {
         // …while keys below the cap still hit
         idx.stats_for(2, &mut c).unwrap();
         assert_eq!(idx.hit_counts().0, hits_before + 1);
+    }
+
+    #[test]
+    fn artifacts_are_metric_aware() {
+        let r = Arc::new(Dataset::Ecg.generate(400, 8));
+        let idx = RefIndex::new(r);
+        let mut c = Counters::new();
+        // a non-DTW metric must not build envelopes
+        let (stats, denv) =
+            idx.artifacts_for(64, 6, Metric::Erp { gap: 0.0 }, Suite::UcrMon, &mut c).unwrap();
+        assert_eq!(stats.qlen(), 64);
+        assert!(denv.is_none());
+        assert_eq!(idx.hit_counts(), (0, 1), "stats bucket only");
+        // the DTW default builds (and caches) them
+        let (_, denv) = idx.artifacts_for(64, 6, Metric::Cdtw, Suite::UcrMon, &mut c).unwrap();
+        assert!(denv.is_some());
+        assert_eq!(idx.hit_counts(), (1, 2), "stats hit + envelope build");
+        // a bound-free suite skips envelopes even for cDTW
+        let (_, denv) = idx.artifacts_for(64, 6, Metric::Cdtw, Suite::UcrMonNoLb, &mut c).unwrap();
+        assert!(denv.is_none());
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //!   ([`index`]: per-stream window-stats buckets and shared envelopes,
 //!   a bounded top-k heap whose k-th best distance replaces the scalar
 //!   best-so-far, and `Engine::search_batch` amortising the index across
-//!   query batches), synthetic stand-ins for the paper's six datasets
+//!   query batches — all generic over an elastic [`distances::metric::Metric`]:
+//!   cDTW/DTW with the envelope cascade, WDTW/ERP/MSM/TWE through the
+//!   bound-free generalised EAPruned kernel), synthetic stand-ins for the
+//!   paper's six datasets
 //!   ([`data`]), and a serving layer ([`coordinator`]) that shards a
 //!   long reference across workers and batches candidates for the XLA
 //!   prefilter.
@@ -55,10 +58,11 @@ pub mod prelude {
     pub use crate::config::SearchConfig;
     pub use crate::data::Dataset;
     pub use crate::distances::eap_dtw::{eap_cdtw, eap_dtw};
+    pub use crate::distances::metric::Metric;
     pub use crate::index::{Engine, EngineConfig, Query, RefIndex, TopK, TopKResult};
     pub use crate::metrics::Counters;
     pub use crate::search::subsequence::{
-        search_subsequence, search_subsequence_topk, Match,
+        search_subsequence, search_subsequence_topk, search_subsequence_topk_metric, Match,
     };
     pub use crate::search::suite::Suite;
 }

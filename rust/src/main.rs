@@ -11,6 +11,7 @@ use repro::bench_support::report::{fig5_table, pruning_table, speedup_summary};
 use repro::config::Config;
 use repro::coordinator::{QueryRequest, Service, ServiceConfig};
 use repro::data::{extract_queries, Dataset};
+use repro::distances::metric::Metric;
 use repro::metrics::{Counters, Timer};
 #[cfg(feature = "xla")]
 use repro::runtime::XlaEngine;
@@ -30,7 +31,7 @@ COMMANDS
   serve       run the search service over synthetic queries and report
               latency/throughput
               --dataset <name> [--queries N] [--shards N] [--suite S]
-              [--k N] [--ref-len N] [--artifacts DIR]
+              [--k N] [--metric M] [--ref-len N] [--artifacts DIR]
   bench-suite run the paper's experiment grid and print Fig 5a/5b + tables
               [--axis length|window|all] [--ref-len N] [--datasets a,b]
               [--qlens 128,256] [--ratios 0.1,0.2] [--queries N]
@@ -41,7 +42,9 @@ COMMANDS
               [--artifacts DIR]
   help        this text
 
-Suites: ucr | usp | mon | nolb | xla     Datasets: FoG Soccer PAMAP2 ECG REFIT PPG";
+Suites: ucr | usp | mon | nolb | xla     Datasets: FoG Soccer PAMAP2 ECG REFIT PPG
+Metrics: cdtw (default) | dtw | wdtw | erp | msm | twe (default parameters;
+         per-request parameters travel in the protocol's metric object)";
 
 fn main() {
     let args = match Args::from_env() {
@@ -165,6 +168,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let ratio = args.f64_or("ratio", cfg.search.window_ratio)?;
     let k = args.usize_or("k", 1)?;
     let suite = parse_suite(args.get_or("suite", &cfg.search.suite))?;
+    let metric = match args.get("metric") {
+        Some(name) => Metric::from_name(name)
+            .ok_or_else(|| anyhow!("unknown metric {name:?} (try cdtw|dtw|wdtw|erp|msm|twe)"))?,
+        None => Metric::Cdtw,
+    };
     let artifacts = PathBuf::from(args.get_or("artifacts", &cfg.serve.artifacts_dir));
 
     let reference = load_reference(&dataset, ref_len, seed)?;
@@ -178,8 +186,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     )?;
     println!(
-        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}, top-{k}) over {shards} shards",
-        suite.name()
+        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}, metric {}, top-{k}) over {shards} shards",
+        suite.name(),
+        metric.name()
     );
     let mut latencies = Vec::new();
     let t = Timer::start();
@@ -190,6 +199,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             window_ratio: ratio,
             suite,
             k,
+            metric,
         })?;
         println!("{}", resp.to_json());
         latencies.push(resp.latency_ms);

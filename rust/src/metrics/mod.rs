@@ -5,6 +5,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::distances::metric::Metric;
+
 /// Per-search counters. Plain `u64`s mutated on the hot path (no atomics);
 /// the coordinator aggregates per-worker copies with [`Counters::merge`].
 #[derive(Debug, Default, Clone, PartialEq, Eq)]
@@ -36,11 +38,33 @@ pub struct Counters {
     /// envelopes (a subset of `lb_keogh_ec_prunes`): the pruning power
     /// attributable to the shared index rather than per-query work
     pub index_ec_prunes: u64,
+    /// distance-kernel calls per metric kind, indexed by
+    /// [`Metric::index`] (every entry also counts into `dtw_calls`)
+    pub metric_calls: [u64; Metric::COUNT],
+    /// early abandons per metric kind, same indexing (each also counts
+    /// into `dtw_abandons`) — together with `metric_calls` this is the
+    /// per-metric pruning-power tally the cross-metric benches compare
+    pub metric_abandons: [u64; Metric::COUNT],
 }
 
 impl Counters {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Record one distance-kernel invocation under `metric` (feeds both
+    /// the legacy `dtw_calls` aggregate and the per-metric tally).
+    #[inline]
+    pub fn record_metric_call(&mut self, metric: Metric) {
+        self.dtw_calls += 1;
+        self.metric_calls[metric.index()] += 1;
+    }
+
+    /// Record one early abandon under `metric`.
+    #[inline]
+    pub fn record_metric_abandon(&mut self, metric: Metric) {
+        self.dtw_abandons += 1;
+        self.metric_abandons[metric.index()] += 1;
     }
 
     /// Proportion of candidates each stage removed, as fractions of the
@@ -71,6 +95,31 @@ impl Counters {
         self.index_hits += o.index_hits;
         self.topk_updates += o.topk_updates;
         self.index_ec_prunes += o.index_ec_prunes;
+        for i in 0..Metric::COUNT {
+            self.metric_calls[i] += o.metric_calls[i];
+            self.metric_abandons[i] += o.metric_abandons[i];
+        }
+    }
+
+    /// One-line per-metric pruning-power report: kernel calls and the
+    /// abandon rate for every metric that was actually exercised.
+    pub fn metric_report(&self) -> String {
+        let parts: Vec<String> = Metric::KIND_NAMES
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| self.metric_calls[i] > 0)
+            .map(|(i, name)| {
+                let calls = self.metric_calls[i];
+                let ab = self.metric_abandons[i];
+                let rate = 100.0 * ab as f64 / calls as f64;
+                format!("{name}: {calls} calls, {ab} abandons ({rate:.1}%)")
+            })
+            .collect();
+        if parts.is_empty() {
+            "no distance kernel calls".to_string()
+        } else {
+            parts.join(" | ")
+        }
     }
 
     /// One-line report of the index subsystem's contribution: cache hits,
@@ -166,6 +215,27 @@ mod tests {
         assert!(r.contains("3 cache hits"), "{r}");
         assert!(r.contains("9 heap updates"), "{r}");
         assert!(r.contains("50.0% of EC"), "{r}");
+    }
+
+    #[test]
+    fn per_metric_tallies_feed_aggregates_and_merge() {
+        let mut a = Counters::new();
+        a.record_metric_call(Metric::Cdtw);
+        a.record_metric_call(Metric::Erp { gap: 0.0 });
+        a.record_metric_abandon(Metric::Erp { gap: 0.0 });
+        assert_eq!(a.dtw_calls, 2);
+        assert_eq!(a.dtw_abandons, 1);
+        assert_eq!(a.metric_calls[Metric::Cdtw.index()], 1);
+        assert_eq!(a.metric_calls[Metric::Erp { gap: 0.0 }.index()], 1);
+        assert_eq!(a.metric_abandons[Metric::Erp { gap: 0.0 }.index()], 1);
+        let mut b = Counters::new();
+        b.record_metric_call(Metric::Erp { gap: 0.5 });
+        b.merge(&a);
+        assert_eq!(b.metric_calls[Metric::Erp { gap: 0.0 }.index()], 2);
+        let r = b.metric_report();
+        assert!(r.contains("erp: 2 calls"), "{r}");
+        assert!(r.contains("cdtw: 1 calls"), "{r}");
+        assert_eq!(Counters::new().metric_report(), "no distance kernel calls");
     }
 
     #[test]

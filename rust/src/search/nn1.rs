@@ -10,6 +10,7 @@
 use crate::bounds::envelope::envelopes;
 use crate::bounds::lb_keogh::{reorder, sort_order};
 use crate::distances::cost::sqed;
+use crate::distances::metric::Metric;
 use crate::distances::DtwWorkspace;
 use crate::index::topk::TopK;
 use crate::metrics::Counters;
@@ -52,20 +53,44 @@ pub fn nn1_topk(
     suite: Suite,
     counters: &mut Counters,
 ) -> Vec<Nn1Result> {
+    nn1_topk_metric(query, candidates, w, k, Metric::Cdtw, suite, counters)
+}
+
+/// Metric-generic k-NN: like [`nn1_topk`] but under any elastic
+/// [`Metric`]. DTW-family metrics keep the LB_Keogh best-first visit
+/// order and pruning; metrics without a valid envelope bound visit the
+/// candidates in input order, bound-free, with the k-th best distance
+/// still driving EAPruned early abandoning.
+pub fn nn1_topk_metric(
+    query: &[f64],
+    candidates: &[Vec<f64>],
+    w: usize,
+    k: usize,
+    metric: Metric,
+    suite: Suite,
+    counters: &mut Counters,
+) -> Vec<Nn1Result> {
     if candidates.is_empty() || k == 0 {
         return Vec::new();
     }
-    let (u, l) = envelopes(query, w);
-    let order = sort_order(query);
-    let uo = reorder(&u, &order);
-    let lo = reorder(&l, &order);
-    // best-first: ascending lower bound
-    let mut idx: Vec<(usize, f64)> = candidates
-        .iter()
-        .enumerate()
-        .map(|(i, c)| (i, lb_keogh_plain(&uo, &lo, &order, c)))
-        .collect();
-    idx.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("no NaN bounds"));
+    let w = metric.effective_window(query.len(), w);
+    let idx: Vec<(usize, f64)> = if metric.uses_envelopes() {
+        let (u, l) = envelopes(query, w);
+        let order = sort_order(query);
+        let uo = reorder(&u, &order);
+        let lo = reorder(&l, &order);
+        // best-first: ascending lower bound
+        let mut idx: Vec<(usize, f64)> = candidates
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i, lb_keogh_plain(&uo, &lo, &order, c)))
+            .collect();
+        idx.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("no NaN bounds"));
+        idx
+    } else {
+        // no valid lower bound: input order, lb = 0 (never prunes)
+        (0..candidates.len()).map(|i| (i, 0.0)).collect()
+    };
 
     let mut ws = DtwWorkspace::with_capacity(query.len());
     let mut topk = TopK::new(k);
@@ -76,10 +101,10 @@ pub fn nn1_topk(
             counters.lb_keogh_eq_prunes += 1;
             continue;
         }
-        counters.dtw_calls += 1;
-        let d = suite.dtw(query, &candidates[i], w, ub, None, &mut ws);
+        counters.record_metric_call(metric);
+        let d = metric.eval(query, &candidates[i], w, ub, None, suite, &mut ws);
         if d.is_infinite() {
-            counters.dtw_abandons += 1;
+            counters.record_metric_abandon(metric);
         } else if topk.offer(Match { pos: i, dist: d }) {
             counters.topk_updates += 1;
             counters.ub_updates += 1;
@@ -191,6 +216,36 @@ mod tests {
         let mut c = Counters::new();
         assert!(nn1_search(&[1.0, 2.0], &[], 1, Suite::UcrMon, &mut c).is_none());
         assert!(nn1_topk(&[1.0, 2.0], &[], 1, 3, Suite::UcrMon, &mut c).is_empty());
+    }
+
+    #[test]
+    fn metric_topk_matches_brute_force_for_every_metric() {
+        let q = znorm(&mk_candidates(1, 48, 7)[0]);
+        let cands = mk_candidates(18, 48, 8);
+        let w = 5;
+        for metric in Metric::all_default() {
+            let weff = metric.effective_window(q.len(), w);
+            let mut want: Vec<(usize, f64)> = cands
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (i, metric.exact(&q, c, weff)))
+                .collect();
+            want.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            for k in [1usize, 4] {
+                let mut c = Counters::new();
+                let got = nn1_topk_metric(&q, &cands, w, k, metric, Suite::UcrMon, &mut c);
+                assert_eq!(got.len(), k, "{} k={k}", metric.name());
+                for (rank, r) in got.iter().enumerate() {
+                    assert_eq!(r.index, want[rank].0, "{} k={k} rank={rank}", metric.name());
+                    assert!(
+                        (r.dist - want[rank].1).abs() < 1e-9,
+                        "{} k={k} rank={rank}",
+                        metric.name()
+                    );
+                }
+                assert!(c.metric_calls[metric.index()] > 0, "{}", metric.name());
+            }
+        }
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! UCR-style subsequence similarity search (paper §5's workload): slide a
 //! z-normalised query over a long reference stream, z-normalising every
-//! candidate window on the fly, and collect the top-k matches under
-//! windowed DTW, pruning with the suite's cascade along the way.
+//! candidate window on the fly, and collect the top-k matches under an
+//! elastic [`Metric`] (windowed DTW by default), pruning with the suite's
+//! cascade along the way where the metric's bounds are valid — metrics
+//! outside the DTW family ([`Metric::uses_envelopes`] is false) run the
+//! bound-free EAPruned scan, still threshold-driven via [`TopK`].
 //!
 //! The early-abandon threshold is the k-th best distance of a
 //! [`TopK`] collector (`k = 1` reproduces the paper's scalar best-so-far
@@ -17,6 +20,7 @@ use crate::bounds::cascade::CascadePolicy;
 use crate::bounds::envelope::envelopes_into;
 use crate::bounds::lb_keogh::{cumulate_bound, lb_keogh_ec, lb_keogh_eq, reorder, sort_order};
 use crate::bounds::lb_kim::lb_kim_hierarchy;
+use crate::distances::metric::Metric;
 use crate::distances::DtwWorkspace;
 use crate::index::ref_index::BucketStats;
 use crate::index::topk::TopK;
@@ -60,19 +64,39 @@ pub struct QueryContext {
     cb_cum: Vec<f64>,
     zbuf: Vec<f64>,
     ws: DtwWorkspace,
+    /// elastic metric every candidate is scored under
+    pub metric: Metric,
 }
 
 impl QueryContext {
+    /// Context for the default metric (banded DTW) — every pre-metric
+    /// call site, bit-identical to the seed behaviour.
     pub fn new(query_raw: &[f64], w: usize) -> Self {
+        Self::with_metric(query_raw, w, Metric::Cdtw)
+    }
+
+    /// Context for an arbitrary metric. `w` is re-derived through
+    /// [`Metric::effective_window`] (DTW/WDTW are unbanded by
+    /// convention), and the envelopes are built for that window.
+    pub fn with_metric(query_raw: &[f64], w: usize, metric: Metric) -> Self {
         let q = znorm(query_raw);
         let n = q.len();
-        let order = sort_order(&q);
-        let mut u = Vec::new();
-        let mut l = Vec::new();
-        envelopes_into(&q, w, &mut u, &mut l);
-        let uo = reorder(&u, &order);
-        let lo = reorder(&l, &order);
-        let qo = reorder(&q, &order);
+        let w = metric.effective_window(n, w);
+        // envelopes, sort order and the reordered bounds only exist for
+        // metrics whose cascade can use them — a bound-free metric would
+        // pay the O(n log n) setup once per shard for nothing
+        let (order, qo, uo, lo) = if metric.uses_envelopes() {
+            let order = sort_order(&q);
+            let mut u = Vec::new();
+            let mut l = Vec::new();
+            envelopes_into(&q, w, &mut u, &mut l);
+            let uo = reorder(&u, &order);
+            let lo = reorder(&l, &order);
+            let qo = reorder(&q, &order);
+            (order, qo, uo, lo)
+        } else {
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new())
+        };
         Self {
             q,
             w,
@@ -85,6 +109,7 @@ impl QueryContext {
             cb_cum: vec![0.0; n + 1],
             zbuf: vec![0.0; n],
             ws: DtwWorkspace::with_capacity(n),
+            metric,
         }
     }
 
@@ -200,6 +225,10 @@ pub fn scan_topk_policy(
     if start >= end {
         return;
     }
+    // metrics outside the DTW family have no valid envelope bounds: the
+    // scan degrades to the bound-free EAPruned path, still threshold-driven
+    // through the top-k collector
+    let cascade = if ctx.metric.uses_envelopes() { cascade } else { CascadePolicy::none() };
     debug_assert!(
         !cascade.needs_data_envelopes() || denv.is_some(),
         "suite {:?} needs data envelopes",
@@ -300,13 +329,15 @@ fn eval_candidate(
     } else {
         None
     };
-    // z-normalise the candidate and run the suite's DTW core
+    // z-normalise the candidate and run the metric's kernel (the suite's
+    // DTW core for the DTW family, the generalised EAPruned elsewhere)
     ctx.zbuf.clear();
     ctx.zbuf.extend(window.iter().map(|&x| znorm_point(x, mean, std)));
-    counters.dtw_calls += 1;
-    let d = suite.dtw(&ctx.q, &ctx.zbuf, ctx.w, bsf, cb, &mut ctx.ws);
+    let metric = ctx.metric;
+    counters.record_metric_call(metric);
+    let d = metric.eval(&ctx.q, &ctx.zbuf, ctx.w, bsf, cb, suite, &mut ctx.ws);
     if d.is_infinite() {
-        counters.dtw_abandons += 1;
+        counters.record_metric_abandon(metric);
     } else if topk.offer(Match { pos, dist: d }) {
         counters.topk_updates += 1;
         counters.ub_updates += 1;
@@ -353,11 +384,37 @@ pub fn search_subsequence_topk(
     suite: Suite,
     counters: &mut Counters,
 ) -> Vec<Match> {
-    let mut ctx = QueryContext::new(query_raw, w);
-    let denv = suite
-        .cascade()
-        .needs_data_envelopes()
-        .then(|| DataEnvelopes::new(reference, w));
+    search_subsequence_topk_metric(reference, query_raw, w, k, Metric::Cdtw, suite, counters)
+}
+
+/// Metric-generic top-k subsequence search: the k closest candidate
+/// windows of `reference` to the z-normalised query under `metric`,
+/// ascending `(dist, pos)`.
+///
+/// DTW-family metrics keep the full z-norm + envelope cascade fast path;
+/// ERP/MSM/TWE/WDTW run the bound-free EAPruned scan, still
+/// threshold-driven through the [`TopK`] collector. Degenerate inputs
+/// degrade gracefully: a query longer than the reference (zero candidate
+/// windows) or `k = 0` returns an empty list, and `k` larger than the
+/// candidate count returns every window ranked. Metric parameters are
+/// assumed valid ([`Metric::validate`]) — the serving layer validates
+/// wire and engine input before reaching this loop.
+pub fn search_subsequence_topk_metric(
+    reference: &[f64],
+    query_raw: &[f64],
+    w: usize,
+    k: usize,
+    metric: Metric,
+    suite: Suite,
+    counters: &mut Counters,
+) -> Vec<Match> {
+    let mut ctx = QueryContext::with_metric(query_raw, w, metric);
+    if k == 0 || ctx.is_empty() || reference.len() < ctx.len() {
+        return Vec::new();
+    }
+    let denv = metric
+        .wants_data_envelopes(suite)
+        .then(|| DataEnvelopes::new(reference, ctx.w));
     let mut topk = TopK::new(k);
     scan_topk_policy(
         reference,
@@ -573,6 +630,64 @@ mod tests {
                 assert_eq!(c.index_ec_prunes, c.lb_keogh_ec_prunes);
                 assert_eq!(c2.index_ec_prunes, 0);
             }
+        }
+    }
+
+    #[test]
+    fn metric_scan_agrees_with_per_window_oracle() {
+        let r = Dataset::Soccer.generate(800, 33);
+        let q = crate::data::extract_queries(&r, 1, 48, 0.1, 34).remove(0);
+        let w = 5;
+        for metric in Metric::all_default() {
+            let mut c = Counters::new();
+            let got = search_subsequence_topk_metric(&r, &q, w, 1, metric, Suite::UcrMon, &mut c);
+            assert_eq!(got.len(), 1, "{}", metric.name());
+            // brute force with the metric's naive oracle
+            let qz = znorm(&q);
+            let weff = metric.effective_window(qz.len(), w);
+            let mut best = Match { pos: 0, dist: f64::INFINITY };
+            for pos in 0..=(r.len() - q.len()) {
+                let cz = znorm(&r[pos..pos + q.len()]);
+                let d = metric.exact(&qz, &cz, weff);
+                if d < best.dist {
+                    best = Match { pos, dist: d };
+                }
+            }
+            assert_eq!(got[0].pos, best.pos, "{}", metric.name());
+            assert!((got[0].dist - best.dist).abs() < 1e-9, "{}", metric.name());
+            // every candidate hit the kernel of the right metric
+            assert_eq!(c.metric_calls.iter().sum::<u64>(), c.dtw_calls, "{}", metric.name());
+            assert!(c.metric_calls[metric.index()] > 0, "{}", metric.name());
+            if !metric.uses_envelopes() {
+                // no envelope bound may fire for non-DTW metrics
+                assert_eq!(c.lb_kim_prunes + c.lb_keogh_eq_prunes + c.lb_keogh_ec_prunes, 0);
+                assert_eq!(c.dtw_calls, c.candidates, "{}", metric.name());
+            }
+        }
+    }
+
+    #[test]
+    fn metric_scan_handles_degenerate_inputs() {
+        let r = Dataset::Ecg.generate(64, 3);
+        let q: Vec<f64> = (0..128).map(|i| i as f64).collect();
+        let mut c = Counters::new();
+        // query longer than the reference: empty ranked list, no panic
+        let got = search_subsequence_topk_metric(
+            &r, &q, 4, 3, Metric::Msm { cost: 0.5 }, Suite::UcrMon, &mut c,
+        );
+        assert!(got.is_empty());
+        // k = 0: empty list
+        let got = search_subsequence_topk_metric(
+            &r[..32], &q[..8], 2, 0, Metric::Cdtw, Suite::UcrMon, &mut c,
+        );
+        assert!(got.is_empty());
+        // k larger than the candidate count: every window, ranked
+        let got = search_subsequence_topk_metric(
+            &r, &r[..60], 4, 100, Metric::Cdtw, Suite::UcrMon, &mut c,
+        );
+        assert_eq!(got.len(), 64 - 60 + 1);
+        for pair in got.windows(2) {
+            assert!(pair[0].dist <= pair[1].dist);
         }
     }
 

@@ -1,0 +1,135 @@
+//! Cross-metric conformance suite: for every [`Metric`] kind × all six
+//! synthetic datasets, the EAPruned kernel must
+//!
+//! 1. equal its naive full-matrix oracle at `ub = inf`,
+//! 2. stay exact at ties (`ub =` the exact distance — strict-above
+//!    abandoning preserves ties, paper §2.2), and
+//! 3. abandon (return the `+inf` sentinel) for any `ub` strictly below
+//!    the exact distance.
+//!
+//! The suite is table-driven over [`Metric::all_default`] plus extra
+//! parameterisations, so covering a new metric is one enum arm (and one
+//! grid row) away.
+
+use repro::data::Dataset;
+use repro::distances::metric::Metric;
+use repro::distances::DtwWorkspace;
+use repro::norm::znorm::znorm;
+use repro::search::suite::Suite;
+
+/// The conformance grid: every kind with default parameters, plus a
+/// second parameterisation of each parameterised kind so the parameter
+/// plumbing is exercised too.
+fn grid() -> Vec<Metric> {
+    let mut g = Metric::all_default().to_vec();
+    g.extend([
+        Metric::Wdtw { g: 0.2 },
+        Metric::Erp { gap: 0.5 },
+        Metric::Msm { cost: 1.0 },
+        Metric::Twe { nu: 0.001, lambda: 0.25 },
+    ]);
+    g
+}
+
+/// Two z-normalised same-length excerpts of one dataset, far enough apart
+/// to be genuinely different series.
+fn pair_from(ds: Dataset, seed: u64, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let r = ds.generate(3 * n + 64, seed);
+    (znorm(&r[7..7 + n]), znorm(&r[2 * n + 19..2 * n + 19 + n]))
+}
+
+#[test]
+fn every_metric_matches_oracle_ties_and_abandons_on_all_datasets() {
+    let mut ws = DtwWorkspace::default();
+    for metric in grid() {
+        for ds in Dataset::ALL {
+            for (n, w) in [(21usize, 5usize), (34, 9), (47, 47)] {
+                let (a, b) = pair_from(ds, 0xC0DE ^ ((n as u64) << 3), n);
+                let tag = format!("{} on {} n={n} w={w}", metric.name(), ds.name());
+
+                let want = metric.exact(&a, &b, w);
+                assert!(want.is_finite(), "oracle must be finite: {tag}");
+                assert!(want >= 0.0, "distances are non-negative: {tag}");
+
+                // 1. exact at ub = inf
+                let got = metric.eval(&a, &b, w, f64::INFINITY, None, Suite::UcrMon, &mut ws);
+                assert!(
+                    (got - want).abs() <= 1e-9 * want.max(1.0),
+                    "kernel vs oracle: {got} vs {want} ({tag})"
+                );
+
+                // 2. exact at the tie
+                let tie = metric.eval(&a, &b, w, want, None, Suite::UcrMon, &mut ws);
+                assert!(
+                    (tie - want).abs() <= 1e-9 * want.max(1.0),
+                    "tie broken: {tie} vs {want} ({tag})"
+                );
+
+                // 3. sentinel strictly below
+                if want > 0.0 {
+                    let below = want * (1.0 - 1e-9) - 1e-12;
+                    let ab = metric.eval(&a, &b, w, below, None, Suite::UcrMon, &mut ws);
+                    assert_eq!(ab, f64::INFINITY, "no abandon below the tie ({tag})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn identity_is_zero_for_every_metric_on_every_dataset() {
+    let mut ws = DtwWorkspace::default();
+    for metric in grid() {
+        for ds in Dataset::ALL {
+            let (a, _) = pair_from(ds, 99, 40);
+            let d = metric.eval(&a, &a, 40, f64::INFINITY, None, Suite::UcrMon, &mut ws);
+            // TWE pays stiffness on the diagonal matches of identical
+            // series only through the drift term, which is 0 at |i-j|=0;
+            // every metric's self-distance is exactly 0
+            assert_eq!(d, 0.0, "{} on {}", metric.name(), ds.name());
+        }
+    }
+}
+
+#[test]
+fn kernel_is_exact_through_every_dtw_core_suite() {
+    // the dispatch layer must hold for every ablation suite, not just
+    // UCR-MON: cDTW routes through the suite's own core
+    let mut ws = DtwWorkspace::default();
+    let (a, b) = pair_from(Dataset::Ecg, 7, 30);
+    let w = 6;
+    let want = Metric::Cdtw.exact(&a, &b, w);
+    for suite in Suite::ALL {
+        let got = Metric::Cdtw.eval(&a, &b, w, f64::INFINITY, None, suite, &mut ws);
+        assert!((got - want).abs() < 1e-9, "{}: {got} vs {want}", suite.name());
+    }
+}
+
+#[test]
+fn banded_elastic_metrics_respect_window_monotonicity() {
+    // widening the band can only lower (or keep) a banded metric's
+    // distance — the conformance analogue of cDTW's window monotonicity
+    let mut ws = DtwWorkspace::default();
+    let banded = [
+        Metric::Cdtw,
+        Metric::Erp { gap: 0.0 },
+        Metric::Msm { cost: 0.5 },
+        Metric::Twe { nu: 0.05, lambda: 1.0 },
+    ];
+    for metric in banded {
+        for ds in Dataset::ALL {
+            let (a, b) = pair_from(ds, 0xBEEF, 28);
+            let mut last = f64::INFINITY;
+            for w in [2usize, 7, 14, 28] {
+                let d = metric.eval(&a, &b, w, f64::INFINITY, None, Suite::UcrMon, &mut ws);
+                assert!(
+                    d <= last + 1e-9,
+                    "{} on {}: w={w} rose to {d} from {last}",
+                    metric.name(),
+                    ds.name()
+                );
+                last = d;
+            }
+        }
+    }
+}

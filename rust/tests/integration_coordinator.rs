@@ -7,6 +7,7 @@ use std::sync::Arc;
 use repro::coordinator::router::shard_ranges;
 use repro::coordinator::{QueryRequest, QueryResponse, Service, ServiceConfig};
 use repro::data::{extract_queries, Dataset};
+use repro::distances::metric::Metric;
 use repro::metrics::Counters;
 use repro::search::subsequence::{search_subsequence, window_cells, Match};
 use repro::search::suite::Suite;
@@ -22,7 +23,14 @@ fn service_equals_direct_search_for_all_scalar_suites() {
     let svc = service(&r, 3);
     for s in Suite::ALL {
         let resp = svc
-            .submit(&QueryRequest { id: 0, query: q.clone(), window_ratio: 0.2, suite: s, k: 1 })
+            .submit(&QueryRequest {
+                id: 0,
+                query: q.clone(),
+                window_ratio: 0.2,
+                suite: s,
+                k: 1,
+                metric: Metric::Cdtw,
+            })
             .unwrap();
         let mut c = Counters::new();
         let want = search_subsequence(&r, &q, window_cells(q.len(), 0.2), s, &mut c);
@@ -47,6 +55,7 @@ fn shard_count_does_not_change_results() {
                 window_ratio: 0.1,
                 suite: Suite::UcrMon,
                 k: 1,
+                metric: Metric::Cdtw,
             })
             .unwrap();
         results.push((shards, resp.pos, resp.dist));
@@ -82,6 +91,7 @@ fn many_concurrent_clients_one_service() {
                     window_ratio: 0.1,
                     suite: Suite::UcrMon,
                     k: 1,
+                    metric: Metric::Cdtw,
                 })
                 .unwrap(),
             )
@@ -112,6 +122,7 @@ fn protocol_survives_the_wire() {
         window_ratio: 0.35,
         suite: Suite::UcrMonNoLb,
         k: 3,
+        metric: Metric::Erp { gap: 0.25 },
     };
     let line = req.to_json();
     assert!(!line.contains('\n'), "line-delimited");
@@ -133,6 +144,44 @@ fn protocol_survives_the_wire() {
         dtw_calls: 100,
     };
     assert_eq!(QueryResponse::from_json(&resp.to_json()).unwrap(), resp);
+}
+
+/// Acceptance: a wire request with no `metric` field — the entire PR-1
+/// request format — parses to cDTW and returns results bit-identical to
+/// the pre-metric service (single shard + indexed stats makes the scan
+/// deterministic down to the f64 bits; `search_subsequence_topk` is the
+/// PR-1 behaviour, itself bit-locked to the seed's scalar loop by
+/// `integration_index`).
+#[test]
+fn request_without_metric_is_bit_identical_to_pr1_cdtw() {
+    let r = Dataset::Ecg.generate(2500, 61);
+    let q = extract_queries(&r, 1, 96, 0.1, 62).remove(0);
+    let qjson: Vec<String> = q.iter().map(|v| format!("{v}")).collect();
+    let legacy_line = format!(
+        r#"{{"id":4,"window_ratio":0.2,"suite":"mon","k":3,"query":[{}]}}"#,
+        qjson.join(",")
+    );
+    let req = QueryRequest::from_json(&legacy_line).unwrap();
+    assert_eq!(req.metric, Metric::Cdtw, "absent metric must parse as cDTW");
+
+    let svc = service(&r, 1);
+    let resp = svc.submit(&req).unwrap();
+    let mut c = Counters::new();
+    let want = repro::search::subsequence::search_subsequence_topk(
+        &r,
+        &req.query,
+        window_cells(req.query.len(), 0.2),
+        3,
+        Suite::UcrMon,
+        &mut c,
+    );
+    assert_eq!(resp.matches.len(), want.len());
+    for (g, m) in resp.matches.iter().zip(&want) {
+        assert_eq!(g.pos, m.pos);
+        assert_eq!(g.dist.to_bits(), m.dist.to_bits(), "distance must be bit-identical");
+    }
+    assert_eq!(resp.candidates, c.candidates);
+    assert_eq!(resp.dtw_calls, c.dtw_calls);
 }
 
 #[test]
@@ -161,6 +210,7 @@ fn empty_and_oversized_queries_error_cleanly() {
         window_ratio: 0.1,
         suite: Suite::UcrMon,
         k: 1,
+        metric: Metric::Cdtw,
     };
     assert!(svc.submit(&req).is_err());
 }
@@ -180,6 +230,7 @@ fn topk_over_service_is_ranked_and_consistent_across_shards() {
                 window_ratio: 0.2,
                 suite: Suite::UcrMon,
                 k,
+                metric: Metric::Cdtw,
             })
             .unwrap();
         assert_eq!(resp.matches.len(), k);

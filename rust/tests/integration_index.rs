@@ -6,13 +6,15 @@
 use repro::data::rng::Rng;
 use repro::data::{extract_queries, Dataset};
 use repro::distances::dtw::cdtw_ws;
+use repro::distances::metric::Metric;
 use repro::distances::DtwWorkspace;
 use repro::index::{Engine, EngineConfig, Query, TopK};
 use repro::metrics::Counters;
 use repro::norm::znorm::{znorm, znorm_point, WindowStats};
-use repro::search::nn1::{nn1_search, nn1_topk};
+use repro::search::nn1::{nn1_search, nn1_topk, nn1_topk_metric};
 use repro::search::subsequence::{
-    search_subsequence, search_subsequence_topk, window_cells, Match,
+    search_subsequence, search_subsequence_topk, search_subsequence_topk_metric, window_cells,
+    Match,
 };
 use repro::search::suite::Suite;
 use repro::util::proptest::run_prop;
@@ -291,6 +293,72 @@ fn engine_topk_contains_best_and_is_ranked() {
             );
         }
     }
+}
+
+/// Edge cases the serving layer must absorb without panicking or
+/// hanging: k beyond the candidate count (short ranked list), a query
+/// longer than the reference (empty list), and both at once — across the
+/// direct scan, the engine, and every metric.
+#[test]
+fn degenerate_shapes_return_short_or_empty_ranked_lists() {
+    let r = Dataset::Soccer.generate(150, 9);
+    let engine = Engine::new(r.clone(), &EngineConfig { shards: 3, ..Default::default() }).unwrap();
+
+    // k far beyond the candidate count: every window, ranked, no hang
+    let q = extract_queries(&r, 1, 128, 0.1, 10).remove(0);
+    let windows = r.len() - q.len() + 1;
+    for metric in [Metric::Cdtw, Metric::Erp { gap: 0.0 }] {
+        let res = engine.search_one(&Query::with_metric(q.clone(), 0.1, metric), 500).unwrap();
+        assert_eq!(res.matches.len(), windows, "{}", metric.name());
+        for pair in res.matches.windows(2) {
+            assert!(
+                pair[0].dist < pair[1].dist
+                    || (pair[0].dist == pair[1].dist && pair[0].pos < pair[1].pos),
+                "{}",
+                metric.name()
+            );
+        }
+        let mut c = Counters::new();
+        let direct = search_subsequence_topk_metric(
+            &r,
+            &q,
+            window_cells(q.len(), 0.1),
+            500,
+            metric,
+            Suite::UcrMon,
+            &mut c,
+        );
+        assert_eq!(direct.len(), windows, "{}", metric.name());
+    }
+
+    // query longer than the reference: empty, not an error
+    let long: Vec<f64> = (0..300).map(|i| (i as f64 * 0.1).sin()).collect();
+    let res = engine.search_batch(&[Query::new(long.clone(), 0.1)], 4).unwrap();
+    assert!(res[0].matches.is_empty());
+    let mut c = Counters::new();
+    assert!(search_subsequence_topk_metric(
+        &r,
+        &long,
+        12,
+        4,
+        Metric::Twe { nu: 0.05, lambda: 1.0 },
+        Suite::UcrMon,
+        &mut c
+    )
+    .is_empty());
+
+    // nn1 with k beyond the candidate count: all candidates ranked
+    let cands: Vec<Vec<f64>> = (0..5).map(|i| znorm(&r[i * 20..i * 20 + 40])).collect();
+    let got = nn1_topk_metric(
+        &znorm(&r[3..43]),
+        &cands,
+        4,
+        99,
+        Metric::Msm { cost: 0.5 },
+        Suite::UcrMon,
+        &mut c,
+    );
+    assert_eq!(got.len(), 5);
 }
 
 #[test]

@@ -10,11 +10,14 @@ use repro::data::{extract_queries, Dataset};
 use repro::distances::dtw::{cdtw, dtw_oracle};
 use repro::distances::dtw_ea::dtw_ea;
 use repro::distances::eap_dtw::eap_cdtw;
+use repro::distances::metric::Metric;
 use repro::distances::pruned_dtw::pruned_cdtw;
 use repro::distances::DtwWorkspace;
 use repro::metrics::Counters;
 use repro::norm::znorm::{stats, znorm, znorm_point, WindowStats};
-use repro::search::subsequence::{scan, search_subsequence, DataEnvelopes, QueryContext};
+use repro::search::subsequence::{
+    scan, search_subsequence, search_subsequence_topk_metric, DataEnvelopes, Match, QueryContext,
+};
 use repro::search::suite::Suite;
 use repro::util::proptest::{arb_series, arb_window, run_prop};
 
@@ -284,6 +287,176 @@ fn prop_sharded_scan_equals_full_scan() {
             let got = best.ok_or("no match")?;
             if got.pos != want.pos || (got.dist - want.dist).abs() > 1e-9 {
                 return Err(format!("{got:?} vs {want:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_topk_any_metric_equals_bruteforce_ranking() {
+    // top-k search under any metric == brute-force sort of per-window
+    // exact (naive-oracle) distances, for k in {1, 5, 16}
+    #[derive(Debug)]
+    struct Case {
+        seed: u64,
+        metric: Metric,
+        dataset: Dataset,
+    }
+    run_prop(
+        "metric topk == brute prefix",
+        0xAA,
+        10,
+        |rng| Case {
+            seed: rng.next_u64(),
+            metric: Metric::all_default()[rng.below(Metric::COUNT as u64) as usize],
+            dataset: Dataset::ALL[rng.below(6) as usize],
+        },
+        |c| {
+            let r = c.dataset.generate(420, c.seed);
+            let q = extract_queries(&r, 1, 32, 0.12, c.seed ^ 3).remove(0);
+            let w = 4;
+            let qz = znorm(&q);
+            let weff = c.metric.effective_window(qz.len(), w);
+            let exact_at = |pos: usize| {
+                let cz = znorm(&r[pos..pos + q.len()]);
+                c.metric.exact(&qz, &cz, weff)
+            };
+            let mut all: Vec<(usize, f64)> =
+                (0..=(r.len() - q.len())).map(|pos| (pos, exact_at(pos))).collect();
+            all.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("no NaN").then(a.0.cmp(&b.0)));
+            for k in [1usize, 5, 16] {
+                let mut cnt = Counters::new();
+                let got =
+                    search_subsequence_topk_metric(&r, &q, w, k, c.metric, Suite::UcrMon, &mut cnt);
+                if got.len() != k {
+                    return Err(format!("{} k={k}: got {}", c.metric.name(), got.len()));
+                }
+                for (rank, (g, want)) in got.iter().zip(&all).enumerate() {
+                    if (g.dist - want.1).abs() > 1e-9 {
+                        return Err(format!(
+                            "{} on {} k={k} rank={rank}: dist {} vs {}",
+                            c.metric.name(),
+                            c.dataset.name(),
+                            g.dist,
+                            want.1
+                        ));
+                    }
+                    // position must match, except across an exact fp tie,
+                    // where any candidate at the tied distance is valid
+                    if g.pos != want.0 && (exact_at(g.pos) - want.1).abs() > 1e-9 {
+                        return Err(format!(
+                            "{} on {} k={k} rank={rank}: pos {} vs {}",
+                            c.metric.name(),
+                            c.dataset.name(),
+                            g.pos,
+                            want.0
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cdtw_dispatch_k1_bit_identical_to_scalar_cascade_loop() {
+    // the pre-refactor scalar path, replicated from public primitives:
+    // full UCR cascade + cb tightening + suite DTW core + strict-< bsf.
+    // The metric dispatch layer with Metric::Cdtw must reproduce it down
+    // to the f64 bits.
+    fn scalar_cascade_search(reference: &[f64], query_raw: &[f64], w: usize) -> Match {
+        let q = znorm(query_raw);
+        let n = q.len();
+        let order = sort_order(&q);
+        let (u, l) = envelopes(&q, w);
+        let uo = reorder(&u, &order);
+        let lo = reorder(&l, &order);
+        let qo = reorder(&q, &order);
+        let (du, dl) = envelopes(reference, w);
+        let mut cb1 = vec![0.0; n];
+        let mut cb2 = vec![0.0; n];
+        let mut cbc = vec![0.0; n + 1];
+        let mut zbuf: Vec<f64> = Vec::with_capacity(n);
+        let mut ws = DtwWorkspace::with_capacity(n);
+        let mut stats = WindowStats::new(reference, n);
+        let mut best = Match { pos: 0, dist: f64::INFINITY };
+        loop {
+            let pos = stats.pos();
+            let window = stats.window();
+            let (mean, std) = stats.mean_std();
+            let bsf = best.dist;
+            // one candidate through the full cascade; `None` = pruned
+            let d = (|| {
+                if lb_kim_hierarchy(&q, window, mean, std, bsf) > bsf {
+                    return None;
+                }
+                let lb1 = lb_keogh_eq(&order, &uo, &lo, window, mean, std, bsf, &mut cb1);
+                if lb1 > bsf {
+                    return None;
+                }
+                let lb2 = lb_keogh_ec(
+                    &order,
+                    &qo,
+                    &du[pos..pos + n],
+                    &dl[pos..pos + n],
+                    mean,
+                    std,
+                    bsf,
+                    &mut cb2,
+                );
+                if lb2 > bsf {
+                    return None;
+                }
+                let src = if lb2 > lb1 { &cb2 } else { &cb1 };
+                cumulate_bound(src, &mut cbc);
+                zbuf.clear();
+                zbuf.extend(window.iter().map(|&x| znorm_point(x, mean, std)));
+                Some(Suite::UcrMon.dtw(&q, &zbuf, w, bsf, Some(&cbc), &mut ws))
+            })();
+            if let Some(d) = d {
+                if d.is_finite() && d < bsf {
+                    best = Match { pos, dist: d };
+                }
+            }
+            if !stats.advance() {
+                break;
+            }
+        }
+        best
+    }
+
+    #[derive(Debug)]
+    struct Case {
+        seed: u64,
+        dataset: Dataset,
+    }
+    run_prop(
+        "cdtw dispatch k=1 == scalar cascade (bitwise)",
+        0xAB,
+        10,
+        |rng| Case { seed: rng.next_u64(), dataset: Dataset::ALL[rng.below(6) as usize] },
+        |c| {
+            let r = c.dataset.generate(1200, c.seed);
+            let q = extract_queries(&r, 1, 64, 0.1, c.seed ^ 17).remove(0);
+            let w = 6;
+            let want = scalar_cascade_search(&r, &q, w);
+            let mut cnt = Counters::new();
+            let got =
+                search_subsequence_topk_metric(&r, &q, w, 1, Metric::Cdtw, Suite::UcrMon, &mut cnt);
+            if got.len() != 1 {
+                return Err(format!("got {} results", got.len()));
+            }
+            if got[0].pos != want.pos || got[0].dist.to_bits() != want.dist.to_bits() {
+                return Err(format!(
+                    "{got:?} vs {want:?} on {} (bitwise)",
+                    c.dataset.name()
+                ));
+            }
+            // the whole scan was tallied as cDTW kernel work
+            if cnt.metric_calls[Metric::Cdtw.index()] != cnt.dtw_calls {
+                return Err(format!("per-metric tally drift: {cnt:?}"));
             }
             Ok(())
         },
