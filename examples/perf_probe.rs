@@ -1,29 +1,98 @@
-// Minimal reproducer for the staged-vs-generic anomaly.
+//! Perf probes. Two families:
+//!
+//! * `staged | generic | plain` — the original minimal reproducer for the
+//!   staged-vs-generic kernel anomaly (time one DTW core over a fixed
+//!   candidate set).
+//! * `strips` (default) — the scan front-end A/B: run the same top-k
+//!   subsequence search through the legacy scalar loop and the
+//!   strip-mined pipeline on every synthetic dataset, verify the results
+//!   are bitwise identical, and print the scalar-vs-strip DTW-call
+//!   reduction the batched bounds + LB-ordered evaluation deliver.
+use repro::data::{extract_queries, Dataset};
+use repro::distances::dtw::cdtw_ws;
 use repro::distances::eap_dtw::eap_cdtw;
 use repro::distances::elastic::core::{eap_elastic, DtwAsElastic};
-use repro::distances::dtw::cdtw_ws;
+use repro::distances::metric::Metric;
 use repro::distances::DtwWorkspace;
+use repro::metrics::Counters;
 use repro::norm::znorm::znorm;
-use repro::data::{extract_queries, Dataset};
+use repro::search::subsequence::{
+    search_subsequence_topk_metric_mode, window_cells, ScanMode,
+};
+use repro::search::suite::Suite;
 
-fn main() {
+fn kernel_probe(mode: &str) {
     let n = 512; let w = n/5;
     let r = Dataset::Ecg.generate(50 * n + 4000, 11);
     let q = znorm(&extract_queries(&r, 1, n, 0.1, 5).remove(0));
     let cands: Vec<Vec<f64>> = (0..30).map(|i| znorm(&r[i*n..i*n+n])).collect();
     let mut ws = DtwWorkspace::default();
-    let mode = std::env::args().nth(1).unwrap_or_default();
     let reps = 2000;
     let t = std::time::Instant::now();
     let mut acc = 0.0;
-    match mode.as_str() {
+    match mode {
         "staged" => for _ in 0..reps { for c in &cands {
             acc += std::hint::black_box(eap_cdtw(&q, c, w, f64::INFINITY, None, &mut ws)); } },
         "generic" => for _ in 0..reps { for c in &cands {
             acc += std::hint::black_box(eap_elastic(&DtwAsElastic{li:&q, co:c}, w, f64::INFINITY, &mut ws)); } },
         "plain" => for _ in 0..reps { for c in &cands {
             acc += std::hint::black_box(cdtw_ws(&q, c, w, &mut ws)); } },
-        _ => panic!("mode: staged|generic|plain"),
+        _ => unreachable!(),
     }
     println!("{mode}: {:?} acc={acc}", t.elapsed());
+}
+
+fn strip_probe() {
+    let (ref_len, qlen, ratio, k) = (20_000usize, 256usize, 0.1, 5usize);
+    let w = window_cells(qlen, ratio);
+    let suite = Suite::UcrMon;
+    println!("scan front-end A/B (qlen {qlen}, w {w}, k {k}, suite {}):", suite.name());
+    println!(
+        "{:<8} {:>9} {:>9} {:>9} {:>7} | {:>10} {:>10}",
+        "dataset", "dtw_scal", "dtw_strip", "saved", "cut%", "scalar", "strip"
+    );
+    let (mut tot_scalar, mut tot_strip) = (0u64, 0u64);
+    for d in Dataset::ALL {
+        let r = d.generate(ref_len, 11);
+        let q = extract_queries(&r, 1, qlen, 0.1, 5).remove(0);
+        let mut run = |mode: ScanMode| {
+            let mut c = Counters::new();
+            let t = std::time::Instant::now();
+            let m = search_subsequence_topk_metric_mode(
+                &r, &q, w, k, Metric::Cdtw, suite, mode, &mut c,
+            );
+            (m, c, t.elapsed())
+        };
+        let (ms, cs, ts) = run(ScanMode::Scalar);
+        let (mt, ct, tt) = run(ScanMode::Strip);
+        assert_eq!(ms, mt, "{}: modes diverged", d.name());
+        tot_scalar += cs.dtw_calls;
+        tot_strip += ct.dtw_calls;
+        let cut = 100.0 * (cs.dtw_calls as f64 - ct.dtw_calls as f64)
+            / cs.dtw_calls.max(1) as f64;
+        println!(
+            "{:<8} {:>9} {:>9} {:>9} {:>6.1}% | {:>10.2?} {:>10.2?}",
+            d.name(),
+            cs.dtw_calls,
+            ct.dtw_calls,
+            ct.lb_order_saved_dtw_calls,
+            cut,
+            ts,
+            tt
+        );
+        if d == Dataset::Ppg {
+            println!("  {}", ct.strip_report());
+        }
+    }
+    let cut = 100.0 * (tot_scalar as f64 - tot_strip as f64) / tot_scalar.max(1) as f64;
+    println!("total DTW calls: scalar {tot_scalar} vs strip {tot_strip} — reduction {cut:.1}%");
+}
+
+fn main() {
+    let mode = std::env::args().nth(1).unwrap_or_else(|| "strips".to_string());
+    match mode.as_str() {
+        "staged" | "generic" | "plain" => kernel_probe(&mode),
+        "strips" => strip_probe(),
+        _ => panic!("mode: strips|staged|generic|plain"),
+    }
 }

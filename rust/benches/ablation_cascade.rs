@@ -5,11 +5,13 @@
 //! *dispensable*.
 
 use repro::bench_support::harness::{bench, fmt_secs};
+use repro::bench_support::report::BenchJson;
 use repro::bounds::cascade::CascadePolicy;
 use repro::data::{extract_queries, Dataset};
 use repro::metrics::Counters;
 use repro::search::subsequence::{scan_policy, window_cells, DataEnvelopes, QueryContext};
 use repro::search::suite::Suite;
+use repro::util::json::Json;
 
 fn main() {
     let ref_len = std::env::var("REPRO_REF_LEN")
@@ -26,6 +28,7 @@ fn main() {
         ("full", CascadePolicy::full()),
         ("full, no tighten", CascadePolicy { tighten: false, ..CascadePolicy::full() }),
     ];
+    let mut json = BenchJson::new("ablation_cascade");
     println!("ablation A3: cascade subsets with the EAPrunedDTW core (ref_len={ref_len}, qlen={qlen}, w={w})");
     println!(
         "{:<8} {:<17} {:>10} {:>8} {:>9}",
@@ -70,7 +73,16 @@ fn main() {
                 100.0 * counters.dtw_calls as f64 / counters.candidates.max(1) as f64,
                 100.0 * counters.dtw_abandons as f64 / counters.dtw_calls.max(1) as f64,
             );
+            json.push(vec![
+                ("suite", Json::Str(name.to_string())),
+                ("dataset", Json::Str(d.name().to_string())),
+                ("qlen", Json::Num(qlen as f64)),
+                ("ratio", Json::Num(ratio)),
+                ("ns_per_op", Json::Num(stats.median * 1e9)),
+                ("counters", BenchJson::counters_json(&counters)),
+            ]);
         }
     }
     println!("\n(paper §5: 'none' stays within ~1.5x of 'full' — bounds help, but are dispensable)");
+    json.write_and_announce();
 }

@@ -9,17 +9,20 @@
 //! vs EAPrunedDTW (collision EA, staged updates).
 
 use repro::bench_support::harness::{bench, fmt_secs};
+use repro::bench_support::report::BenchJson;
 use repro::data::{extract_queries, Dataset};
 use repro::distances::dtw::cdtw;
 use repro::distances::eap_dtw::eap_cdtw_counted;
 use repro::distances::pruned_dtw::pruned_cdtw_counted;
 use repro::distances::DtwWorkspace;
 use repro::norm::znorm::znorm;
+use repro::util::json::Json;
 
 fn main() {
     let n = 512;
     let w = n / 5;
     let per_dataset = 40;
+    let mut json = BenchJson::new("ablation_collision");
     println!("ablation A1: PrunedDTW (row-min EA) vs EAPrunedDTW (collision EA), n={n} w={w}");
     println!(
         "{:<8} {:>6} | {:>10} {:>12} | {:>10} {:>12} | {:>7} {:>7}",
@@ -62,7 +65,20 @@ fn main() {
                 t_usp.median / t_eap.median,
                 usp_cells as f64 / eap_cells.max(1) as f64,
             );
+            for (core, stats, cells) in
+                [("pruned", &t_usp, usp_cells), ("eap", &t_eap, eap_cells)]
+            {
+                json.push(vec![
+                    ("suite", Json::Str(core.to_string())),
+                    ("dataset", Json::Str(d.name().to_string())),
+                    ("qlen", Json::Num(n as f64)),
+                    ("ub", Json::Str(label.to_string())),
+                    ("ns_per_op", Json::Num(stats.median * 1e9)),
+                    ("dp_cells", Json::Num(cells as f64)),
+                ]);
+            }
         }
     }
     println!("\n(expect c-ratio > 1: the collision abandon cuts rows the row-min check keeps)");
+    json.write_and_announce();
 }

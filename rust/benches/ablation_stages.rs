@@ -6,14 +6,17 @@
 //! paper's "saving considerable computation" claim isolated.
 
 use repro::bench_support::harness::{bench, fmt_secs};
+use repro::bench_support::report::BenchJson;
 use repro::data::{extract_queries, Dataset};
 use repro::distances::dtw::cdtw;
 use repro::distances::eap_dtw::eap_cdtw;
 use repro::distances::elastic::core::{eap_elastic, DtwAsElastic};
 use repro::distances::DtwWorkspace;
 use repro::norm::znorm::znorm;
+use repro::util::json::Json;
 
 fn main() {
+    let mut json = BenchJson::new("ablation_stages");
     println!("ablation A2: staged EAPrunedDTW vs generic-skeleton EAP (3-way min)");
     println!(
         "{:<8} {:>5} {:>6} | {:>10} {:>10} {:>8}",
@@ -64,8 +67,18 @@ fn main() {
                     fmt_secs(t_generic.median),
                     t_generic.median / t_staged.median
                 );
+                for (core, stats) in [("staged", &t_staged), ("generic", &t_generic)] {
+                    json.push(vec![
+                        ("suite", Json::Str(core.to_string())),
+                        ("dataset", Json::Str(d.name().to_string())),
+                        ("qlen", Json::Num(n as f64)),
+                        ("ub", Json::Str(label.to_string())),
+                        ("ns_per_op", Json::Num(stats.median * 1e9)),
+                    ]);
+                }
             }
         }
     }
     println!("\n(speedup > 1 = the stage decomposition itself, not the pruning, paying off)");
+    json.write_and_announce();
 }

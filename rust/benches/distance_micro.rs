@@ -4,6 +4,7 @@
 //! probe (EXPERIMENTS.md §Perf).
 
 use repro::bench_support::harness::{bench, fmt_secs};
+use repro::bench_support::report::BenchJson;
 use repro::data::{extract_queries, Dataset};
 use repro::distances::dtw::{cdtw_ws, cdtw};
 use repro::distances::dtw_ea::dtw_ea;
@@ -11,8 +12,10 @@ use repro::distances::eap_dtw::eap_cdtw;
 use repro::distances::pruned_dtw::pruned_cdtw;
 use repro::distances::DtwWorkspace;
 use repro::norm::znorm::znorm;
+use repro::util::json::Json;
 
 fn main() {
+    let mut json = BenchJson::new("distance_micro");
     println!("distance micro (median of reps, per call):");
     println!(
         "{:>5} {:>5} {:>5} | {:>10} {:>10} {:>10} {:>10}",
@@ -43,8 +46,21 @@ fn main() {
                     fmt_secs(t_pr.median),
                     fmt_secs(t_eap.median),
                 );
+                for (core, stats) in
+                    [("dtw", &t_dtw), ("dtw_ea", &t_ea), ("pruned", &t_pr), ("eap", &t_eap)]
+                {
+                    json.push(vec![
+                        ("suite", Json::Str(core.to_string())),
+                        ("dataset", Json::Str("PAMAP2".to_string())),
+                        ("qlen", Json::Num(n as f64)),
+                        ("w", Json::Num(w as f64)),
+                        ("ub", Json::Str(label.to_string())),
+                        ("ns_per_op", Json::Num(stats.median * 1e9)),
+                    ]);
+                }
             }
         }
     }
     println!("\n(ub=inf rows expose pure overhead vs plain dtw; 0.5d rows expose abandon speed)");
+    json.write_and_announce();
 }

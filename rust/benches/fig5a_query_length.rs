@@ -8,7 +8,7 @@
 
 use repro::bench_support::grid::{experiments, run_experiment, Workload};
 use repro::bench_support::grid_from_env;
-use repro::bench_support::report::fig5_table;
+use repro::bench_support::report::{fig5_table, BenchJson};
 use repro::search::suite::Suite;
 
 fn main() {
@@ -42,4 +42,9 @@ fn main() {
     };
     let (ucr, mon) = (total(Suite::Ucr), total(Suite::UcrMon));
     println!("totals: UCR {ucr:.2}s vs UCR-MON {mon:.2}s — speedup {:.2}x", ucr / mon);
+    let mut json = BenchJson::new("fig5a_query_length");
+    for r in &results {
+        json.push_result(r);
+    }
+    json.write_and_announce();
 }

@@ -5,7 +5,7 @@
 
 use repro::bench_support::grid::{experiments, run_experiment, Workload};
 use repro::bench_support::grid_from_env;
-use repro::bench_support::report::fig5_table;
+use repro::bench_support::report::{fig5_table, BenchJson};
 use repro::search::suite::Suite;
 
 fn main() {
@@ -47,4 +47,9 @@ fn main() {
         println!("  {:<13} {:.2}x", s.name(), mx / mn);
     }
     println!("(paper: MON suites markedly flatter than UCR/USP)");
+    let mut json = BenchJson::new("fig5b_window_ratio");
+    for r in &results {
+        json.push_result(r);
+    }
+    json.write_and_announce();
 }

@@ -10,11 +10,13 @@
 
 use repro::bench_support::grid_from_env;
 use repro::bench_support::harness::{bench, fmt_secs};
+use repro::bench_support::report::BenchJson;
 use repro::data::extract_queries;
 use repro::index::{Engine, EngineConfig, Query};
 use repro::metrics::Counters;
 use repro::search::subsequence::{search_subsequence, window_cells};
 use repro::search::suite::Suite;
+use repro::util::json::Json;
 
 const QLEN: usize = 128;
 const RATIO: f64 = 0.1;
@@ -23,6 +25,7 @@ const BATCHES: [usize; 3] = [1, 8, 64];
 fn main() {
     let (grid, datasets) = grid_from_env(20_000);
     let suite = Suite::UcrMon;
+    let mut json = BenchJson::new("index_amortization");
     println!(
         "index amortization (qlen {QLEN}, ratio {RATIO}, suite {}, ref_len {}):",
         suite.name(),
@@ -73,6 +76,16 @@ fn main() {
                 fmt_secs(ix_q),
                 un_q / ix_q
             );
+            for (path, per_q) in [("unindexed", un_q), ("indexed", ix_q)] {
+                json.push(vec![
+                    ("suite", Json::Str(path.to_string())),
+                    ("dataset", Json::Str(d.name().to_string())),
+                    ("qlen", Json::Num(QLEN as f64)),
+                    ("ratio", Json::Num(RATIO)),
+                    ("batch", Json::Num(batch as f64)),
+                    ("ns_per_op", Json::Num(per_q * 1e9)),
+                ]);
+            }
         }
         let falling = indexed_per_q.windows(2).all(|p| p[1] <= p[0] * 1.10);
         println!(
@@ -80,4 +93,5 @@ fn main() {
             if falling { "falls (amortized)" } else { "did NOT fall — investigate" }
         );
     }
+    json.write_and_announce();
 }

@@ -5,7 +5,7 @@
 
 use repro::bench_support::grid::{experiments, run_experiment, Workload};
 use repro::bench_support::grid_from_env;
-use repro::bench_support::report::pruning_table;
+use repro::bench_support::report::{pruning_table, BenchJson};
 use repro::search::suite::Suite;
 
 fn main() {
@@ -29,4 +29,9 @@ fn main() {
     println!("== Fig 5 inset: cascade pruning proportions ==");
     println!("{}", pruning_table(&results));
     println!("(UCR-MON-nolb rows must show dtw% = 100 — no lower bounds at all)");
+    let mut json = BenchJson::new("lb_pruning");
+    for r in &results {
+        json.push_result(r);
+    }
+    json.write_and_announce();
 }

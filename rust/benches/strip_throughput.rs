@@ -1,0 +1,138 @@
+//! Strip-mined scan throughput: the scalar per-candidate loop vs the
+//! strip pipeline (batched SoA bounds + LB-ordered survivors +
+//! single-pass z-normalisation), A/B'd through the same entry point on
+//! all six synthetic datasets. Verifies on every run that both modes
+//! return bitwise-identical top-k results, reports wall time and the
+//! full-DTW-call reduction LB-ordering buys, and emits
+//! `BENCH_strip_throughput.json` for cross-PR tracking.
+//!
+//! Scaling knobs (env): `REPRO_REF_LEN` (default 20000), `REPRO_QUERIES`,
+//! `REPRO_DATASETS`, `REPRO_QLENS`, `REPRO_RATIOS`.
+
+use repro::bench_support::grid_from_env;
+use repro::bench_support::harness::{bench, fmt_secs};
+use repro::bench_support::report::BenchJson;
+use repro::data::extract_queries;
+use repro::distances::metric::Metric;
+use repro::metrics::Counters;
+use repro::search::subsequence::{
+    search_subsequence_topk_metric_mode, window_cells, ScanMode,
+};
+use repro::search::suite::Suite;
+use repro::util::json::Json;
+
+fn main() {
+    let (mut grid, datasets) = grid_from_env(20_000);
+    if std::env::var("REPRO_QLENS").is_err() {
+        grid.query_lengths = vec![128, 256];
+    }
+    if std::env::var("REPRO_RATIOS").is_err() {
+        grid.window_ratios = vec![0.1];
+    }
+    let suite = Suite::UcrMon;
+    let k = 5;
+    let metric = Metric::Cdtw;
+    println!(
+        "strip throughput (suite {}, k={k}, ref_len {}, {} queries/cell): scalar vs strip scan",
+        suite.name(),
+        grid.ref_len,
+        grid.queries
+    );
+    println!(
+        "{:<8} {:>2} {:>5} {:>4} | {:>10} {:>10} {:>8} | {:>9} {:>9} {:>7} {:>7}",
+        "dataset", "q", "qlen", "w%", "scalar", "strip", "speedup", "dtw_scal", "dtw_strip", "saved", "batch%"
+    );
+    let mut json = BenchJson::new("strip_throughput");
+    let (mut total_scalar_dtw, mut total_strip_dtw) = (0u64, 0u64);
+    for &d in &datasets {
+        let reference = d.generate(grid.ref_len, grid.seed);
+        for &qlen in &grid.query_lengths {
+            let queries =
+                extract_queries(&reference, grid.queries, qlen, grid.query_noise, grid.seed ^ 5);
+            for (qi, q) in queries.iter().enumerate() {
+                for &ratio in &grid.window_ratios {
+                    let w = window_cells(qlen, ratio);
+                    let mut run = |mode: ScanMode| {
+                        let mut counters = Counters::new();
+                        let mut matches = Vec::new();
+                        let stats = bench(0, 3, || {
+                            counters = Counters::new();
+                            matches = search_subsequence_topk_metric_mode(
+                                &reference, q, w, k, metric, suite, mode, &mut counters,
+                            );
+                        });
+                        (stats, counters, matches)
+                    };
+                    let (ts, cs, ms) = run(ScanMode::Scalar);
+                    let (tt, ct, mt) = run(ScanMode::Strip);
+                    // exactness gate: the bench is meaningless if the
+                    // modes ever diverge
+                    assert_eq!(ms.len(), mt.len(), "{} q{qi} qlen={qlen}", d.name());
+                    for (a, b) in ms.iter().zip(&mt) {
+                        assert_eq!(a.pos, b.pos, "{} q{qi} qlen={qlen}", d.name());
+                        assert_eq!(
+                            a.dist.to_bits(),
+                            b.dist.to_bits(),
+                            "{} q{qi} qlen={qlen}",
+                            d.name()
+                        );
+                    }
+                    total_scalar_dtw += cs.dtw_calls;
+                    total_strip_dtw += ct.dtw_calls;
+                    let lb_total =
+                        ct.lb_kim_prunes + ct.lb_keogh_eq_prunes + ct.lb_keogh_ec_prunes;
+                    let batch_pct = if lb_total > 0 {
+                        100.0 * ct.batch_lb_prunes as f64 / lb_total as f64
+                    } else {
+                        0.0
+                    };
+                    println!(
+                        "{:<8} {:>2} {:>5} {:>4} | {:>10} {:>10} {:>7.2}x | {:>9} {:>9} {:>7} {:>6.1}%",
+                        d.name(),
+                        qi,
+                        qlen,
+                        (ratio * 100.0).round() as usize,
+                        fmt_secs(ts.median),
+                        fmt_secs(tt.median),
+                        ts.median / tt.median,
+                        cs.dtw_calls,
+                        ct.dtw_calls,
+                        ct.lb_order_saved_dtw_calls,
+                        batch_pct,
+                    );
+                    for (mode, stats, c) in [("scalar", &ts, &cs), ("strip", &tt, &ct)] {
+                        json.push(vec![
+                            ("suite", Json::Str(suite.name().to_string())),
+                            ("scan_mode", Json::Str(mode.to_string())),
+                            ("dataset", Json::Str(d.name().to_string())),
+                            ("query_idx", Json::Num(qi as f64)),
+                            ("qlen", Json::Num(qlen as f64)),
+                            ("ratio", Json::Num(ratio)),
+                            ("k", Json::Num(k as f64)),
+                            ("seconds", Json::Num(stats.median)),
+                            ("ns_per_op", Json::Num(stats.median * 1e9)),
+                            ("counters", BenchJson::counters_json(c)),
+                        ]);
+                    }
+                }
+            }
+        }
+    }
+    let reduction = if total_scalar_dtw > 0 {
+        100.0 * (total_scalar_dtw.saturating_sub(total_strip_dtw)) as f64
+            / total_scalar_dtw as f64
+    } else {
+        0.0
+    };
+    println!(
+        "\ntotals: scalar {} vs strip {} full-DTW calls — LB-ordering cut {reduction:.1}%",
+        total_scalar_dtw, total_strip_dtw
+    );
+    if total_strip_dtw > total_scalar_dtw {
+        eprintln!(
+            "WARNING: strip mode reached DTW more often than scalar — LB-ordering \
+             lost to threshold staleness on this grid"
+        );
+    }
+    json.write_and_announce();
+}

@@ -5,7 +5,7 @@
 
 use repro::bench_support::grid::{experiments, run_experiment, Workload};
 use repro::bench_support::grid_from_env;
-use repro::bench_support::report::speedup_summary;
+use repro::bench_support::report::{speedup_summary, BenchJson};
 use repro::search::suite::Suite;
 
 fn main() {
@@ -32,4 +32,9 @@ fn main() {
     }
     println!("== §5 totals & speedups (paper: MON 8.78x vs UCR, 2.04x vs USP; nolb 6.44x/1.49x) ==");
     println!("{}", speedup_summary(&results));
+    let mut json = BenchJson::new("table_speedups");
+    for r in &results {
+        json.push_result(r);
+    }
+    json.write_and_announce();
 }

@@ -8,12 +8,14 @@
 use std::path::Path;
 
 use repro::bench_support::harness::{bench, fmt_secs};
+use repro::bench_support::report::BenchJson;
 use repro::bounds::envelope::envelopes;
 use repro::bounds::lb_keogh::{lb_keogh_eq, reorder, sort_order};
 use repro::data::{extract_queries, Dataset};
 use repro::metrics::Timer;
 use repro::norm::znorm::{stats, znorm};
 use repro::runtime::XlaEngine;
+use repro::util::json::Json;
 
 fn main() {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -24,6 +26,7 @@ fn main() {
     let mut engine = XlaEngine::open(&dir).unwrap();
     let b = engine.batch();
     let lengths = engine.manifest().lengths.clone();
+    let mut json = BenchJson::new("xla_runtime");
     println!("xla runtime micro (batch={b}):");
     println!(
         "{:>5} | {:>10} {:>12} {:>12} | {:>12} {:>14}",
@@ -73,6 +76,21 @@ fn main() {
             fmt_secs(scalar.median),
             scalar.median / pf.median,
         );
+        for (stage, secs) in [
+            ("compile", compile),
+            ("prefilter", pf.median),
+            ("dtw", dtw.median),
+            ("scalar_lb", scalar.median),
+        ] {
+            json.push(vec![
+                ("suite", Json::Str(stage.to_string())),
+                ("dataset", Json::Str("ECG".to_string())),
+                ("qlen", Json::Num(n as f64)),
+                ("batch", Json::Num(b as f64)),
+                ("ns_per_op", Json::Num(secs * 1e9)),
+            ]);
+        }
     }
     println!("\n(prefilter throughput is the UcrMonXla admission rate; dtw is the A3 full-resolve cost)");
+    json.write_and_announce();
 }

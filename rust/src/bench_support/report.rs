@@ -3,10 +3,15 @@
 //! reads side-by-side with the paper.
 
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
 
 use crate::bench_support::grid::RunResult;
 use crate::data::Dataset;
+use crate::metrics::Counters;
 use crate::search::suite::Suite;
+use crate::util::json::{obj, Json};
 
 /// Fixed-width table printer.
 pub struct Table {
@@ -49,6 +54,99 @@ impl Table {
             out.push('\n');
         }
         out
+    }
+}
+
+/// Machine-readable bench results: every bench target collects its runs
+/// into one of these and writes `BENCH_<name>.json` next to where it ran
+/// (override the directory with `REPRO_BENCH_DIR`), so the perf
+/// trajectory is tracked across PRs instead of scrolling away with the
+/// terminal. One JSON object per file: suite name, unix timestamp, and a
+/// `runs` array whose rows carry whatever fields the bench pushes —
+/// [`BenchJson::push_result`] standardises the grid-shaped ones
+/// (suite, dataset, ns/op, DP cells, prune counters).
+#[derive(Debug, Clone)]
+pub struct BenchJson {
+    name: String,
+    runs: Vec<Json>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), runs: Vec::new() }
+    }
+
+    /// Push one run row with arbitrary fields.
+    pub fn push(&mut self, fields: Vec<(&str, Json)>) {
+        self.runs.push(obj(fields));
+    }
+
+    /// Push one grid experiment result in the standard shape.
+    pub fn push_result(&mut self, r: &RunResult) {
+        self.push(vec![
+            ("suite", Json::Str(r.suite.name().to_string())),
+            ("dataset", Json::Str(r.exp.dataset.name().to_string())),
+            ("qlen", Json::Num(r.exp.qlen as f64)),
+            ("ratio", Json::Num(r.exp.ratio)),
+            ("seconds", Json::Num(r.seconds)),
+            ("ns_per_op", Json::Num(r.seconds * 1e9)),
+            ("counters", Self::counters_json(&r.counters)),
+        ]);
+    }
+
+    /// The counters fields every consumer of the JSON can rely on.
+    pub fn counters_json(c: &Counters) -> Json {
+        obj(vec![
+            ("candidates", Json::Num(c.candidates as f64)),
+            ("lb_kim_prunes", Json::Num(c.lb_kim_prunes as f64)),
+            ("lb_keogh_eq_prunes", Json::Num(c.lb_keogh_eq_prunes as f64)),
+            ("lb_keogh_ec_prunes", Json::Num(c.lb_keogh_ec_prunes as f64)),
+            ("dtw_calls", Json::Num(c.dtw_calls as f64)),
+            ("dtw_abandons", Json::Num(c.dtw_abandons as f64)),
+            ("dp_cells", Json::Num(c.dp_cells as f64)),
+            ("strip_batches", Json::Num(c.strip_batches as f64)),
+            ("batch_lb_prunes", Json::Num(c.batch_lb_prunes as f64)),
+            (
+                "lb_order_saved_dtw_calls",
+                Json::Num(c.lb_order_saved_dtw_calls as f64),
+            ),
+        ])
+    }
+
+    /// The full document (testable without touching the filesystem).
+    pub fn to_json(&self) -> Json {
+        let created = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("created_unix", Json::Num(created as f64)),
+            ("runs", Json::Arr(self.runs.clone())),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` into `REPRO_BENCH_DIR` (default: the
+    /// current directory) and return the path.
+    pub fn write(&self) -> Result<PathBuf> {
+        let dir = std::env::var("REPRO_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_to(Path::new(&dir))
+    }
+
+    /// Write `BENCH_<name>.json` into an explicit directory.
+    pub fn write_to(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string() + "\n")?;
+        Ok(path)
+    }
+
+    /// Write and report where, tolerating a read-only filesystem (benches
+    /// must keep printing their tables even if the artifact can't land).
+    pub fn write_and_announce(&self) {
+        match self.write() {
+            Ok(p) => eprintln!("bench json: {}", p.display()),
+            Err(e) => eprintln!("bench json NOT written: {e:#}"),
+        }
     }
 }
 
@@ -238,6 +336,46 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new(vec!["a"]);
         t.row(vec!["1", "2"]);
+    }
+
+    #[test]
+    fn bench_json_document_has_standard_fields() {
+        let results = small_results();
+        let mut bj = BenchJson::new("unit_test");
+        for r in &results {
+            bj.push_result(r);
+        }
+        bj.push(vec![("custom", Json::Num(1.0))]);
+        let doc = bj.to_json();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("unit_test"));
+        assert!(doc.get("created_unix").and_then(Json::as_f64).unwrap() > 0.0);
+        let runs = doc.get("runs").and_then(Json::as_arr).unwrap();
+        assert_eq!(runs.len(), results.len() + 1);
+        let first = &runs[0];
+        assert_eq!(first.get("dataset").and_then(Json::as_str), Some("ECG"));
+        assert!(first.get("ns_per_op").and_then(Json::as_f64).unwrap() > 0.0);
+        let counters = first.get("counters").unwrap();
+        for key in ["candidates", "dtw_calls", "strip_batches", "lb_order_saved_dtw_calls"] {
+            assert!(counters.get(key).is_some(), "missing {key}");
+        }
+        // the document is valid JSON end to end
+        assert!(Json::parse(&doc.to_string()).is_ok());
+    }
+
+    #[test]
+    fn bench_json_writes_to_the_chosen_dir() {
+        // write_to takes the directory explicitly — mutating the
+        // process-global env in a parallel test harness would race
+        let dir = std::env::temp_dir().join(format!("repro_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut bj = BenchJson::new("write_test");
+        bj.push(vec![("seconds", Json::Num(0.25))]);
+        let path = bj.write_to(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap(), "BENCH_write_test.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("write_test"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Batched (strip/SoA) lower bounds for the strip-mined scan pipeline.
+//!
+//! The scalar scan interleaves bound math and control flow per candidate;
+//! the strip scan instead runs each cheap bound over a whole strip of
+//! candidates at once, reading structure-of-arrays scratch lanes
+//! ([`StripScratch`]) so the inner loops are branch-light and
+//! stable-rustc autovectorizes them (`chunks_exact(4)` + scalar
+//! remainder — no `std::simd`, no nightly, no new dependencies).
+//!
+//! Exactness contract: every value produced here is a valid lower bound
+//! of the candidate's (banded) DTW distance, and every *prune decision*
+//! taken against a threshold is identical to the one the scalar cascade
+//! would take at the same threshold:
+//!
+//! * [`batch_lb_kim_into`] runs the scalar
+//!   [`crate::bounds::lb_kim::lb_kim_hierarchy`] to completion (ub = ∞)
+//!   per lane, so the lane value is the **full** hierarchy bound by
+//!   construction. The cascade's scalar call may exit early with a
+//!   *partial* bound; since every stage only adds non-negative terms,
+//!   `partial > ub ⟺ full > ub`, so the prune decision is unchanged
+//!   (only the reported magnitude can differ).
+//! * [`lb_keogh_eq_unordered`] is LB_Keogh EQ summed in **natural
+//!   position order** (four independent accumulators) instead of the
+//!   scalar pass's sorted order. The same non-negative terms are summed,
+//!   so it bounds the same quantity; the sorted-order pass (which also
+//!   produces the `cb` tightening tail) still runs per *survivor*, so
+//!   the distance math that reaches the kernel stays IEEE-identical to
+//!   the scalar scan.
+
+use crate::bounds::lb_kim::lb_kim_hierarchy;
+use crate::distances::cost::sqed;
+use crate::norm::znorm::znorm_point;
+
+/// Default strip length B: long enough to amortise per-strip setup and
+/// fill the SoA lanes, short enough that the strip-entry threshold stays
+/// close to the freshest one (the survivors re-check a fresh threshold
+/// anyway).
+pub const DEFAULT_STRIP: usize = 64;
+
+/// Structure-of-arrays scratch for one strip of candidate windows. Owned
+/// by the query context and reused across strips, so the strip scan stays
+/// allocation-free after the first strip.
+#[derive(Debug, Clone, Default)]
+pub struct StripScratch {
+    /// per-lane window mean (from `WindowStats` / `BucketStats`)
+    pub mean: Vec<f64>,
+    /// per-lane window std
+    pub std: Vec<f64>,
+    /// per-lane best lower bound seen so far (max over computed stages)
+    pub lb: Vec<f64>,
+    /// lanes still in play after the batch bounds
+    pub alive: Vec<bool>,
+    /// survivor lane indices, sorted ascending by `(lb, lane)`
+    pub order: Vec<u32>,
+}
+
+impl StripScratch {
+    /// Size every lane for a strip of `len` candidates and reset state.
+    pub fn reset(&mut self, len: usize) {
+        self.mean.clear();
+        self.mean.resize(len, 0.0);
+        self.std.clear();
+        self.std.resize(len, 0.0);
+        self.lb.clear();
+        self.lb.resize(len, 0.0);
+        self.alive.clear();
+        self.alive.resize(len, true);
+        self.order.clear();
+    }
+
+    /// Lanes still alive.
+    pub fn survivors(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Fill `order` with the alive lanes, ascending `(lb, lane)` — the
+    /// evaluation order that tightens the top-k threshold fastest. Ties
+    /// (and any NaN a caller let through) resolve by lane index, so the
+    /// order is total and deterministic.
+    pub fn order_survivors(&mut self) {
+        let alive = &self.alive;
+        let lb = &self.lb;
+        self.order.clear();
+        self.order.extend((0..lb.len() as u32).filter(|&i| alive[i as usize]));
+        self.order.sort_by(|&a, &b| lb[a as usize].total_cmp(&lb[b as usize]).then(a.cmp(&b)));
+    }
+}
+
+/// Batched LB_KimFL over a strip: for each lane `i`, the full hierarchy
+/// bound of `q` vs the raw window starting at `strip_start + i`, using the
+/// lane's `(mean, std)` for on-the-fly z-normalisation. Writes into
+/// `out[..len]`. Stage arithmetic and ordering match the scalar
+/// [`crate::bounds::lb_kim::lb_kim_hierarchy`] run to completion.
+pub fn batch_lb_kim_into(
+    q: &[f64],
+    reference: &[f64],
+    strip_start: usize,
+    len: usize,
+    mean: &[f64],
+    std: &[f64],
+    out: &mut [f64],
+) {
+    let n = q.len();
+    debug_assert!(len <= mean.len() && len <= std.len() && len <= out.len());
+    debug_assert!(strip_start + len + n <= reference.len() + 1);
+    if n == 0 {
+        out[..len].fill(0.0);
+        return;
+    }
+    // Each lane reads its six endpoint points directly — the strip's
+    // windows overlap by n - 1 positions, so consecutive lanes touch
+    // adjacent memory and the whole strip's endpoint reads stay in cache.
+    // ub = inf runs the scalar hierarchy to completion, so the lane value
+    // is the scalar full bound by construction, not by re-implementation.
+    for i in 0..len {
+        let c = &reference[strip_start + i..strip_start + i + n];
+        out[i] = lb_kim_hierarchy(q, c, mean[i], std[i], f64::INFINITY);
+    }
+}
+
+/// LB_Keogh EQ summed in natural position order with four independent
+/// accumulators — the batch-stage filter of the strip scan. `u`/`l` are
+/// the query envelopes in **natural** (unsorted) order; `c` is the raw
+/// candidate window with stats `(mean, std)`. No early abandon and no
+/// per-position contributions: this is the cheap whole-window pass, the
+/// sorted `cb`-producing pass still runs on survivors.
+pub fn lb_keogh_eq_unordered(u: &[f64], l: &[f64], c: &[f64], mean: f64, std: f64) -> f64 {
+    let n = c.len();
+    debug_assert_eq!(u.len(), n);
+    debug_assert_eq!(l.len(), n);
+    let mut acc = [0.0f64; 4];
+    let mut iu = u.chunks_exact(4);
+    let mut il = l.chunks_exact(4);
+    for cc in c.chunks_exact(4) {
+        let uu = iu.next().expect("envelope length");
+        let ll = il.next().expect("envelope length");
+        for k in 0..4 {
+            let x = znorm_point(cc[k], mean, std);
+            let d = if x > uu[k] {
+                sqed(x, uu[k])
+            } else if x < ll[k] {
+                sqed(x, ll[k])
+            } else {
+                0.0
+            };
+            acc[k] += d;
+        }
+    }
+    let mut lb = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    let rem = n - n % 4;
+    for j in rem..n {
+        let x = znorm_point(c[j], mean, std);
+        if x > u[j] {
+            lb += sqed(x, u[j]);
+        } else if x < l[j] {
+            lb += sqed(x, l[j]);
+        }
+    }
+    lb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::envelope::envelopes;
+    use crate::bounds::lb_keogh::{lb_keogh_eq, reorder, sort_order};
+    use crate::bounds::lb_kim::lb_kim_hierarchy;
+    use crate::distances::dtw::dtw_oracle;
+    use crate::norm::znorm::{stats, znorm};
+
+    fn xorshift(seed: u64) -> impl FnMut() -> f64 {
+        let mut x = seed;
+        move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 4.0 - 2.0
+        }
+    }
+
+    #[test]
+    fn batch_kim_matches_scalar_full_hierarchy() {
+        for n in [2usize, 3, 4, 5, 8, 32] {
+            let mut rnd = xorshift(7 + n as u64);
+            let q = znorm(&(0..n).map(|_| rnd()).collect::<Vec<_>>());
+            let reference: Vec<f64> = (0..n + 40).map(|_| rnd() * 3.0 + 1.0).collect();
+            let len = reference.len() - n + 1;
+            let (mut mean, mut std) = (vec![0.0; len], vec![0.0; len]);
+            for (pos, (m, s)) in mean.iter_mut().zip(std.iter_mut()).enumerate() {
+                let (bm, bs) = stats(&reference[pos..pos + n]);
+                (*m, *s) = (bm, bs);
+            }
+            let mut out = vec![0.0; len];
+            batch_lb_kim_into(&q, &reference, 0, len, &mean, &std, &mut out);
+            for pos in 0..len {
+                let c = &reference[pos..pos + n];
+                // scalar full hierarchy (ub = inf: no early exit)
+                let want = lb_kim_hierarchy(&q, c, mean[pos], std[pos], f64::INFINITY);
+                assert_eq!(out[pos].to_bits(), want.to_bits(), "n={n} pos={pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_kim_prune_decision_matches_staged_scalar() {
+        // even when the scalar exits early (partial bound), `> ub`
+        // decisions agree because stages only add non-negative terms
+        let mut rnd = xorshift(99);
+        let n = 16;
+        let q = znorm(&(0..n).map(|_| rnd()).collect::<Vec<_>>());
+        let reference: Vec<f64> = (0..n + 30).map(|_| rnd() * 5.0).collect();
+        let len = reference.len() - n + 1;
+        let (mut mean, mut std) = (vec![0.0; len], vec![0.0; len]);
+        for pos in 0..len {
+            let (bm, bs) = stats(&reference[pos..pos + n]);
+            (mean[pos], std[pos]) = (bm, bs);
+        }
+        let mut out = vec![0.0; len];
+        batch_lb_kim_into(&q, &reference, 0, len, &mean, &std, &mut out);
+        for ub in [0.01, 0.5, 2.0, 10.0] {
+            for pos in 0..len {
+                let c = &reference[pos..pos + n];
+                let staged = lb_kim_hierarchy(&q, c, mean[pos], std[pos], ub);
+                assert_eq!(out[pos] > ub, staged > ub, "ub={ub} pos={pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn unordered_keogh_is_a_lower_bound_and_matches_sorted_sum() {
+        for seed in 1..=6u64 {
+            let mut rnd = xorshift(seed);
+            for n in [5usize, 8, 31, 32, 64] {
+                let q = znorm(&(0..n).map(|_| rnd()).collect::<Vec<_>>());
+                let c: Vec<f64> = (0..n).map(|_| rnd() * 2.0 - 0.5).collect();
+                let (mean, std) = stats(&c);
+                let (u, l) = envelopes(&q, (n / 4).max(1));
+                let lb = lb_keogh_eq_unordered(&u, &l, &c, mean, std);
+                // same terms as the sorted scalar pass, different
+                // summation order: equal within fp tolerance
+                let order = sort_order(&q);
+                let uo = reorder(&u, &order);
+                let lo = reorder(&l, &order);
+                let mut cb = vec![0.0; n];
+                let sorted = lb_keogh_eq(&order, &uo, &lo, &c, mean, std, f64::INFINITY, &mut cb);
+                assert!((lb - sorted).abs() < 1e-9, "seed={seed} n={n}: {lb} vs {sorted}");
+                // and a valid bound on the windowed DTW
+                let zc: Vec<f64> = c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+                let d = dtw_oracle(&q, &zc, Some((n / 4).max(1)));
+                assert!(lb <= d + 1e-9, "seed={seed} n={n}: {lb} > {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_orders_survivors_by_bound_then_lane() {
+        let mut s = StripScratch::default();
+        s.reset(5);
+        s.lb.copy_from_slice(&[3.0, 1.0, 2.0, 1.0, 0.5]);
+        s.alive[2] = false;
+        s.order_survivors();
+        assert_eq!(s.order, vec![4, 1, 3, 0]);
+        assert_eq!(s.survivors(), 4);
+        // reset clears state
+        s.reset(3);
+        assert_eq!(s.lb, vec![0.0; 3]);
+        assert!(s.alive.iter().all(|&a| a));
+        assert!(s.order.is_empty());
+    }
+}

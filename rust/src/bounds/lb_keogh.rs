@@ -71,6 +71,46 @@ pub fn lb_keogh_eq(
     lb
 }
 
+/// [`lb_keogh_eq`] over an **already z-normalised** candidate `zc` — the
+/// strip scan's per-survivor pass, which fills the z-norm buffer once and
+/// feeds both this bound and the distance kernel from it. Reading
+/// `zc[i]` is IEEE-identical to the on-the-fly `znorm_point(c[i], ..)`
+/// of the scalar pass, so the bound value and the `cb` contributions are
+/// bit-equal to [`lb_keogh_eq`] on the raw window.
+pub fn lb_keogh_eq_pre(
+    order: &[usize],
+    uo: &[f64],
+    lo: &[f64],
+    zc: &[f64],
+    ub: f64,
+    cb: &mut [f64],
+) -> f64 {
+    let n = order.len();
+    debug_assert_eq!(zc.len(), n);
+    debug_assert_eq!(cb.len(), n);
+    let mut lb = 0.0;
+    for k in 0..n {
+        let i = order[k];
+        let x = zc[i];
+        let d = if x > uo[k] {
+            sqed(x, uo[k])
+        } else if x < lo[k] {
+            sqed(x, lo[k])
+        } else {
+            0.0
+        };
+        cb[i] = d;
+        lb += d;
+        if lb > ub {
+            for &i2 in &order[k + 1..] {
+                cb[i2] = 0.0;
+            }
+            return lb;
+        }
+    }
+    lb
+}
+
 /// LB_Keogh EC: query points vs the z-normalised *data* envelopes.
 /// `u`/`l` are the raw-stream envelopes for this window (slices of the
 /// precomputed reference envelopes), `qo` the query reordered by `order`.
@@ -198,6 +238,32 @@ mod tests {
                 let lb = lb_keogh_ec(&order, &qo, &u, &l, mean, std, f64::INFINITY, &mut cb);
                 let d = dtw_oracle(&q, &zc, Some(w));
                 assert!(lb <= d + 1e-9, "seed={seed} w={w}: {lb} > {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn pre_normalised_pass_is_bit_identical_to_raw_pass() {
+        for seed in 1..=4u64 {
+            let mut rnd = xorshift(seed + 40);
+            let n = 24;
+            let q = znorm(&(0..n).map(|_| rnd()).collect::<Vec<_>>());
+            let c: Vec<f64> = (0..n).map(|_| rnd() * 2.5 + 0.75).collect();
+            let (mean, std) = stats(&c);
+            let zc: Vec<f64> = c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+            let (u, l) = envelopes(&q, 3);
+            let order = sort_order(&q);
+            let uo = reorder(&u, &order);
+            let lo = reorder(&l, &order);
+            for ub in [f64::INFINITY, 1.0, 1e-3] {
+                let mut cb1 = vec![0.0; n];
+                let mut cb2 = vec![0.0; n];
+                let a = lb_keogh_eq(&order, &uo, &lo, &c, mean, std, ub, &mut cb1);
+                let b = lb_keogh_eq_pre(&order, &uo, &lo, &zc, ub, &mut cb2);
+                assert_eq!(a.to_bits(), b.to_bits(), "seed={seed} ub={ub}");
+                for (x, y) in cb1.iter().zip(&cb2) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "seed={seed} ub={ub}");
+                }
             }
         }
     }

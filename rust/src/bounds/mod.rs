@@ -8,6 +8,7 @@
 //! showing EAPrunedDTW makes the cascade *dispensable* is a headline
 //! result.
 
+pub mod batch;
 pub mod cascade;
 pub mod envelope;
 pub mod lb_keogh;

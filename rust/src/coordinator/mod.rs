@@ -28,5 +28,5 @@ pub mod service;
 pub mod state;
 pub mod worker;
 
-pub use protocol::{QueryRequest, QueryResponse};
+pub use protocol::{ErrorResponse, QueryRequest, QueryResponse};
 pub use service::{Service, ServiceConfig};

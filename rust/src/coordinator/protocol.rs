@@ -54,6 +54,12 @@ impl QueryRequest {
             .get("window_ratio")
             .and_then(Json::as_f64)
             .ok_or_else(|| anyhow!("request missing window_ratio"))?;
+        // oversized exponents parse to ±inf; a non-finite or negative
+        // ratio has no meaning and must not reach the window math
+        anyhow::ensure!(
+            window_ratio.is_finite() && window_ratio >= 0.0,
+            "window_ratio must be finite and >= 0, got {window_ratio}"
+        );
         let suite_name = v
             .get("suite")
             .and_then(Json::as_str)
@@ -80,7 +86,53 @@ impl QueryRequest {
             .map(|x| x.as_f64().ok_or_else(|| anyhow!("non-numeric query point")))
             .collect::<Result<Vec<_>>>()?;
         anyhow::ensure!(!query.is_empty(), "empty query");
+        // JSON has no NaN literal but oversized exponents ("1e999") parse
+        // to ±inf — reject them here so a malformed request line can
+        // never reach (and panic) a shard worker
+        crate::search::subsequence::validate_series("query", &query)?;
         Ok(Self { id, query, window_ratio, suite, k, metric })
+    }
+}
+
+/// The wire form of a request that failed — validation or execution:
+/// `{"id":N,"error":"..."}`. The serve loop answers the failing line with
+/// this and keeps serving instead of tearing the whole session down.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ErrorResponse {
+    pub id: u64,
+    pub error: String,
+}
+
+impl ErrorResponse {
+    pub fn new(id: u64, err: &anyhow::Error) -> Self {
+        Self { id, error: format!("{err:#}") }
+    }
+
+    pub fn to_json(&self) -> String {
+        obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("error", Json::Str(self.error.clone())),
+        ])
+        .to_string()
+    }
+
+    pub fn from_json(line: &str) -> Result<Self> {
+        let v = Json::parse(line)?;
+        let id = v
+            .get("id")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("error response missing id"))? as u64;
+        let error = v
+            .get("error")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("error response missing error"))?
+            .to_string();
+        Ok(Self { id, error })
+    }
+
+    /// Does this line carry an error response (vs a result)?
+    pub fn is_error_line(line: &str) -> bool {
+        Json::parse(line).is_ok_and(|v| v.get("error").is_some())
     }
 }
 
@@ -258,6 +310,33 @@ mod tests {
         let line = r#"{"id":1,"pos":42,"dist":3.5,"latency_ms":1,"candidates":10,"pruned":9,"dtw_calls":1}"#;
         let r = QueryResponse::from_json(line).unwrap();
         assert_eq!(r.matches, vec![Match { pos: 42, dist: 3.5 }]);
+    }
+
+    #[test]
+    fn error_response_round_trips_and_is_distinguishable() {
+        let e = ErrorResponse::new(9, &anyhow::anyhow!("query contains a non-finite value"));
+        let line = e.to_json();
+        assert_eq!(ErrorResponse::from_json(&line).unwrap(), e);
+        assert!(ErrorResponse::is_error_line(&line));
+        let ok = QueryResponse {
+            id: 1,
+            pos: 0,
+            dist: 1.0,
+            matches: vec![Match { pos: 0, dist: 1.0 }],
+            latency_ms: 0.5,
+            candidates: 1,
+            pruned: 0,
+            dtw_calls: 1,
+        };
+        assert!(!ErrorResponse::is_error_line(&ok.to_json()));
+    }
+
+    #[test]
+    fn rejects_non_finite_query_points_on_the_wire() {
+        // "1e999" is valid JSON but parses to +inf — must not be admitted
+        let line = r#"{"id":1,"window_ratio":0.1,"suite":"mon","query":[1,1e999,2]}"#;
+        let err = QueryRequest::from_json(line).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
     }
 
     #[test]

@@ -12,7 +12,9 @@ use crate::coordinator::worker::Job;
 use crate::distances::metric::Metric;
 use crate::index::ref_index::BucketStats;
 use crate::metrics::Counters;
-use crate::search::subsequence::{DataEnvelopes, Match, QueryContext};
+use crate::search::subsequence::{
+    validate_series, DataEnvelopes, Match, QueryContext, ScanMode,
+};
 use crate::search::suite::Suite;
 
 /// Balanced shard ranges over `total` candidate positions.
@@ -33,6 +35,12 @@ pub fn shard_ranges(total: usize, shards: usize) -> Vec<(usize, usize)> {
 ///
 /// `metric` picks the elastic distance every shard scores candidates
 /// under (`Metric::Cdtw` reproduces the pre-metric behaviour exactly);
+/// `mode` picks the scan front-end every shard runs ([`ScanMode::Strip`]
+/// is the serving default). With a shared `stats` table the two modes
+/// return bitwise-identical matches; on the per-shard *streaming*
+/// fallback the modes restart the stats recurrence at different block
+/// boundaries, so — exactly like sharded-vs-full streaming scans always
+/// did — results agree to fp tolerance, not bit for bit;
 /// `denv` / `stats` are the reference-side artifacts: pass `Arc`s served
 /// by a shared [`crate::index::RefIndex`] to amortise them across
 /// queries, or `None` to fall back to per-query computation (envelopes,
@@ -53,6 +61,7 @@ pub fn route_query_topk(
     w: usize,
     metric: Metric,
     suite: Suite,
+    mode: ScanMode,
     k: usize,
     sync_every: usize,
     denv: Option<Arc<DataEnvelopes>>,
@@ -62,6 +71,9 @@ pub fn route_query_topk(
     anyhow::ensure!(n > 0, "empty query");
     anyhow::ensure!(k >= 1, "k must be >= 1");
     anyhow::ensure!(reference.len() >= n, "reference shorter than query");
+    // a NaN/inf query would panic the sort-order build inside a shard
+    // worker and poison the top-k heaps; reject it at admission instead
+    validate_series("query", query_raw)?;
     metric.validate()?;
     // normalise the band here so the fallback envelopes below are always
     // built for the window the shards actually scan with (idempotent for
@@ -92,6 +104,7 @@ pub fn route_query_topk(
             denv: denv.clone(),
             stats: stats.clone(),
             suite,
+            scan_mode: mode,
             k,
             shared: Arc::clone(&shared),
             sync_every,
@@ -139,6 +152,7 @@ pub fn route_query(
         w,
         Metric::Cdtw,
         suite,
+        ScanMode::Scalar,
         1,
         sync_every,
         None,

@@ -34,7 +34,7 @@ use crate::metrics::{Counters, Timer};
 use crate::runtime::XlaEngine;
 #[cfg(feature = "xla")]
 use crate::search::subsequence::Match;
-use crate::search::subsequence::window_cells;
+use crate::search::subsequence::{validate_series, window_cells, ScanMode};
 use crate::search::suite::Suite;
 
 /// Service construction knobs (see also [`crate::config::ServeConfig`]).
@@ -43,6 +43,10 @@ pub struct ServiceConfig {
     pub shards: usize,
     /// positions between shared-threshold syncs in the workers
     pub sync_every: usize,
+    /// scan front-end the shard workers run; the strip-mined pipeline by
+    /// default, the legacy scalar loop for A/B comparison (both return
+    /// bitwise-identical matches)
+    pub scan_mode: ScanMode,
     /// artifacts directory; `None` disables the XLA suite. Ignored when
     /// the crate is built without the `xla` feature.
     pub artifacts_dir: Option<std::path::PathBuf>,
@@ -50,7 +54,12 @@ pub struct ServiceConfig {
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { shards: 2, sync_every: DEFAULT_SYNC_EVERY, artifacts_dir: None }
+        Self {
+            shards: 2,
+            sync_every: DEFAULT_SYNC_EVERY,
+            scan_mode: ScanMode::default(),
+            artifacts_dir: None,
+        }
     }
 }
 
@@ -105,6 +114,7 @@ pub struct Service {
     #[cfg(feature = "xla")]
     engine_handle: Option<JoinHandle<()>>,
     sync_every: usize,
+    scan_mode: ScanMode,
     busy: Arc<AtomicU64>,
     served: AtomicU64,
 }
@@ -114,6 +124,9 @@ impl Service {
     /// and the `xla` feature is on) over `reference`.
     pub fn new(reference: Vec<f64>, cfg: &ServiceConfig) -> Result<Self> {
         anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
+        // a NaN/inf point in the reference would poison every scan's
+        // bounds and heaps; reject it once at construction
+        validate_series("reference", &reference)?;
         let reference = Arc::new(reference);
         let index = Arc::new(RefIndex::new(Arc::clone(&reference)));
         let busy = Arc::new(AtomicU64::new(0));
@@ -152,6 +165,7 @@ impl Service {
             #[cfg(feature = "xla")]
             engine_handle,
             sync_every: cfg.sync_every,
+            scan_mode: cfg.scan_mode,
             busy,
             served: AtomicU64::new(0),
         })
@@ -206,6 +220,10 @@ impl Service {
     /// workers, reference-side artifacts served by the shared index.
     pub fn submit(&self, req: &QueryRequest) -> Result<QueryResponse> {
         let timer = Timer::start();
+        // in-process callers can bypass the wire parser's validation, and
+        // the XLA branch below never reaches the router's check — reject
+        // malformed floats for every branch here
+        validate_series("query", &req.query)?;
         let w = req
             .metric
             .effective_window(req.query.len(), window_cells(req.query.len(), req.window_ratio));
@@ -246,6 +264,7 @@ impl Service {
                     w,
                     req.metric,
                     req.suite,
+                    self.scan_mode,
                     req.k,
                     self.sync_every,
                     denv,
@@ -279,6 +298,7 @@ impl Service {
     #[cfg(feature = "xla")]
     pub fn submit_xla_full(&self, req: &QueryRequest) -> Result<QueryResponse> {
         let timer = Timer::start();
+        validate_series("query", &req.query)?;
         anyhow::ensure!(
             matches!(req.metric, Metric::Cdtw),
             "XLA full resolution serves the cdtw metric only"
@@ -301,6 +321,11 @@ impl Service {
     /// Workers currently scanning (for backpressure/introspection).
     pub fn busy_workers(&self) -> u64 {
         self.busy.load(Ordering::Relaxed)
+    }
+
+    /// The scan front-end this service's shard workers run.
+    pub fn scan_mode(&self) -> ScanMode {
+        self.scan_mode
     }
 }
 
@@ -466,6 +491,73 @@ mod tests {
                 assert!((g.dist - m.dist).abs() < 1e-9, "{}", metric.name());
             }
         }
+    }
+
+    #[test]
+    fn scalar_and_strip_services_agree_bitwise() {
+        let r = Dataset::FoG.generate(2400, 21);
+        let q = crate::data::extract_queries(&r, 1, 128, 0.1, 22).remove(0);
+        let req = QueryRequest {
+            id: 4,
+            query: q,
+            window_ratio: 0.1,
+            suite: Suite::UcrMon,
+            k: 6,
+            metric: Metric::Cdtw,
+        };
+        let scalar_svc = Service::new(
+            r.clone(),
+            &ServiceConfig { shards: 3, scan_mode: ScanMode::Scalar, ..Default::default() },
+        )
+        .unwrap();
+        let strip_svc = Service::new(
+            r,
+            &ServiceConfig { shards: 3, scan_mode: ScanMode::Strip, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(strip_svc.scan_mode(), ScanMode::Strip);
+        let a = scalar_svc.submit(&req).unwrap();
+        let b = strip_svc.submit(&req).unwrap();
+        assert_eq!(a.matches.len(), b.matches.len());
+        for (x, y) in a.matches.iter().zip(&b.matches) {
+            assert_eq!(x.pos, y.pos);
+            assert_eq!(x.dist.to_bits(), y.dist.to_bits());
+        }
+    }
+
+    #[test]
+    fn non_finite_inputs_error_instead_of_panicking_workers() {
+        // NaN reference: rejected at construction
+        let mut r = Dataset::Ecg.generate(600, 9);
+        r[17] = f64::NAN;
+        assert!(Service::new(r, &ServiceConfig::default()).is_err());
+        // NaN / inf query: a graceful error from submit, and the service
+        // keeps serving afterwards
+        let r = Dataset::Ecg.generate(600, 9);
+        let svc = Service::new(r.clone(), &ServiceConfig::default()).unwrap();
+        for bad in [f64::NAN, f64::INFINITY] {
+            let mut q = crate::data::extract_queries(&r, 1, 64, 0.1, 10).remove(0);
+            q[3] = bad;
+            let req = QueryRequest {
+                id: 1,
+                query: q,
+                window_ratio: 0.1,
+                suite: Suite::UcrMon,
+                k: 1,
+                metric: Metric::Cdtw,
+            };
+            let err = svc.submit(&req).unwrap_err();
+            assert!(err.to_string().contains("non-finite"), "{err}");
+        }
+        let good = QueryRequest {
+            id: 2,
+            query: crate::data::extract_queries(&r, 1, 64, 0.1, 10).remove(0),
+            window_ratio: 0.1,
+            suite: Suite::UcrMon,
+            k: 1,
+            metric: Metric::Cdtw,
+        };
+        assert!(svc.submit(&good).is_ok());
     }
 
     #[test]

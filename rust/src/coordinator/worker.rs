@@ -12,17 +12,18 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
+use crate::bounds::batch::DEFAULT_STRIP;
 use crate::coordinator::state::SharedUb;
 use crate::index::ref_index::BucketStats;
 use crate::index::topk::TopK;
 use crate::metrics::Counters;
 use crate::search::subsequence::{
-    scan_topk_policy, DataEnvelopes, Match, QueryContext, ScanStats,
+    scan_topk_policy_mode, DataEnvelopes, Match, QueryContext, ScanMode, ScanStats,
 };
 use crate::search::suite::Suite;
 
 /// How many candidate positions a worker scans between synchronisations
-/// with the shared threshold.
+/// with the shared threshold (scalar mode; strip mode syncs per strip).
 pub const DEFAULT_SYNC_EVERY: usize = 1024;
 
 /// Scan shard `[start, end)` in blocks, collecting the local top-k and
@@ -31,6 +32,17 @@ pub const DEFAULT_SYNC_EVERY: usize = 1024;
 /// since the union already holds k results at or below it), and adopts
 /// whatever tighter value other shards published — the serving analogue
 /// of the paper's upper-bound tightening, generalised to k results.
+///
+/// In [`ScanMode::Strip`] the sync block *is* the strip: every strip
+/// adopts the freshest cross-shard threshold for its batch bounds and
+/// publishes its tightened k-th best as soon as its survivors are scored,
+/// so LB-ordered tightening propagates across shards at strip granularity.
+/// Note that without a `stats` table the streaming recurrence restarts at
+/// every block boundary (64 positions here vs `sync_every` in scalar
+/// mode), so the streaming fallback's window statistics — and therefore
+/// distances — match the scalar shard's only to fp tolerance; pass the
+/// shared [`BucketStats`] (the engine/service path always does) for
+/// mode-independent, bit-identical results.
 #[allow(clippy::too_many_arguments)]
 pub fn scan_shard_topk(
     reference: &[f64],
@@ -40,6 +52,7 @@ pub fn scan_shard_topk(
     denv: Option<&DataEnvelopes>,
     stats: Option<&BucketStats>,
     suite: Suite,
+    mode: ScanMode,
     k: usize,
     shared: &SharedUb,
     sync_every: usize,
@@ -47,16 +60,20 @@ pub fn scan_shard_topk(
 ) -> TopK {
     let n = ctx.len();
     let end = end.min(reference.len().saturating_sub(n) + 1);
+    let block = match mode {
+        ScanMode::Scalar => sync_every.max(1),
+        ScanMode::Strip => DEFAULT_STRIP.min(sync_every.max(1)),
+    };
     let mut topk = TopK::new(k);
     let mut block_start = start;
     while block_start < end {
-        let block_end = (block_start + sync_every.max(1)).min(end);
+        let block_end = (block_start + block).min(end);
         topk.set_bound(shared.get());
         let src = match stats {
             Some(table) => ScanStats::Indexed(table),
             None => ScanStats::Streaming,
         };
-        scan_topk_policy(
+        scan_topk_policy_mode(
             reference,
             block_start,
             block_end,
@@ -65,6 +82,7 @@ pub fn scan_shard_topk(
             src,
             suite,
             suite.cascade(),
+            mode,
             &mut topk,
             counters,
         );
@@ -91,7 +109,18 @@ pub fn scan_shard(
     counters: &mut Counters,
 ) -> Option<Match> {
     scan_shard_topk(
-        reference, start, end, ctx, denv, None, suite, 1, shared, sync_every, counters,
+        reference,
+        start,
+        end,
+        ctx,
+        denv,
+        None,
+        suite,
+        ScanMode::Scalar,
+        1,
+        shared,
+        sync_every,
+        counters,
     )
     .into_sorted()
     .into_iter()
@@ -110,6 +139,8 @@ pub struct Job {
     /// precomputed window stats from the shared index (`None` = stream)
     pub stats: Option<Arc<BucketStats>>,
     pub suite: Suite,
+    /// scan front-end this shard runs (strip-mined or the legacy scalar)
+    pub scan_mode: ScanMode,
     /// how many results the query wants
     pub k: usize,
     pub shared: Arc<SharedUb>,
@@ -131,6 +162,7 @@ pub fn worker_loop(rx: Receiver<Job>, busy: Arc<AtomicU64>) {
             job.denv.as_deref(),
             job.stats.as_deref(),
             job.suite,
+            job.scan_mode,
             job.k,
             &job.shared,
             job.sync_every,
@@ -213,6 +245,7 @@ mod tests {
                 Some(&denv),
                 Some(&table),
                 suite,
+                ScanMode::Scalar,
                 k,
                 &shared,
                 512,
@@ -226,6 +259,54 @@ mod tests {
             assert_eq!(g.pos, m.pos);
             assert!((g.dist - m.dist).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn strip_mode_shards_match_full_scalar_topk() {
+        // shards scanning strip-wise (publishing the threshold per strip)
+        // return the same union as the full scalar scan, bitwise
+        let r = Dataset::Ppg.generate(2600, 31);
+        let q = crate::data::extract_queries(&r, 1, 96, 0.1, 32).remove(0);
+        let w = 9;
+        let k = 5;
+        let suite = Suite::UcrMon;
+        let mut cfull = Counters::new();
+        let want = search_subsequence_topk(&r, &q, w, k, suite, &mut cfull);
+
+        let table = BucketStats::build(&r, q.len());
+        let shared = SharedUb::new(f64::INFINITY);
+        let denv = DataEnvelopes::new(&r, w);
+        let total = r.len() - q.len() + 1;
+        let mut merged = TopK::new(k);
+        let mut counters = Counters::new();
+        for s in 0..3 {
+            let start = s * total / 3;
+            let end = (s + 1) * total / 3;
+            let mut ctx = QueryContext::new(&q, w);
+            let local = scan_shard_topk(
+                &r,
+                start,
+                end,
+                &mut ctx,
+                Some(&denv),
+                Some(&table),
+                suite,
+                ScanMode::Strip,
+                k,
+                &shared,
+                512,
+                &mut counters,
+            );
+            merged.merge(local);
+        }
+        let got = merged.into_sorted();
+        assert_eq!(got.len(), want.len());
+        for (g, m) in got.iter().zip(&want) {
+            assert_eq!(g.pos, m.pos);
+            assert_eq!(g.dist.to_bits(), m.dist.to_bits());
+        }
+        assert!(counters.strip_batches > 0);
+        assert_eq!(counters.candidates, total as u64);
     }
 
     #[test]
@@ -260,6 +341,7 @@ mod tests {
                 None,
                 Some(&table),
                 suite,
+                ScanMode::Strip,
                 k,
                 &shared,
                 256,

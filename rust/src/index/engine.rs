@@ -19,7 +19,7 @@ use crate::coordinator::worker::{worker_loop, Job, DEFAULT_SYNC_EVERY};
 use crate::distances::metric::Metric;
 use crate::index::ref_index::RefIndex;
 use crate::metrics::Counters;
-use crate::search::subsequence::{window_cells, Match};
+use crate::search::subsequence::{validate_series, window_cells, Match, ScanMode};
 use crate::search::suite::Suite;
 
 /// One query of a batch: raw (un-normalised) points plus its warping
@@ -68,11 +68,20 @@ pub struct EngineConfig {
     pub sync_every: usize,
     /// DTW core + cascade policy every query runs under
     pub suite: Suite,
+    /// scan front-end the shard workers run (strip-mined by default; the
+    /// legacy scalar loop stays callable for A/B — both return bitwise
+    /// identical matches)
+    pub scan_mode: ScanMode,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { shards: 2, sync_every: DEFAULT_SYNC_EVERY, suite: Suite::UcrMon }
+        Self {
+            shards: 2,
+            sync_every: DEFAULT_SYNC_EVERY,
+            suite: Suite::UcrMon,
+            scan_mode: ScanMode::default(),
+        }
     }
 }
 
@@ -81,6 +90,7 @@ pub struct Engine {
     index: Arc<RefIndex>,
     suite: Suite,
     sync_every: usize,
+    scan_mode: ScanMode,
     senders: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
     busy: Arc<AtomicU64>,
@@ -97,6 +107,9 @@ impl Engine {
     pub fn over_index(index: Arc<RefIndex>, cfg: &EngineConfig) -> Result<Self> {
         anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
         anyhow::ensure!(index.reference_len() > 0, "empty reference");
+        // a NaN/inf point in the reference would poison every scan's
+        // bounds and heaps; reject it once, before any worker spawns
+        validate_series("reference", index.reference())?;
         let busy = Arc::new(AtomicU64::new(0));
         let mut senders = Vec::new();
         let mut handles = Vec::new();
@@ -114,6 +127,7 @@ impl Engine {
             index,
             suite: cfg.suite,
             sync_every: cfg.sync_every,
+            scan_mode: cfg.scan_mode,
             senders,
             handles,
             busy,
@@ -137,6 +151,7 @@ impl Engine {
     pub fn search_one(&self, q: &Query, k: usize) -> Result<TopKResult> {
         anyhow::ensure!(k >= 1, "k must be >= 1");
         anyhow::ensure!(!q.query.is_empty(), "empty query");
+        validate_series("query", &q.query)?;
         q.metric.validate()?;
         if q.query.len() > self.index.reference_len() {
             return Ok(TopKResult { matches: Vec::new(), counters: Counters::new() });
@@ -154,6 +169,7 @@ impl Engine {
             w,
             q.metric,
             self.suite,
+            self.scan_mode,
             k,
             self.sync_every,
             denv,
@@ -172,6 +188,11 @@ impl Engine {
     /// Workers currently scanning.
     pub fn busy_workers(&self) -> u64 {
         self.busy.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// The scan front-end this engine's shard workers run.
+    pub fn scan_mode(&self) -> ScanMode {
+        self.scan_mode
     }
 }
 
@@ -238,6 +259,42 @@ mod tests {
         // worker pool's heaps
         let bad = Metric::Twe { nu: f64::NAN, lambda: 1.0 };
         assert!(engine.search_one(&Query::with_metric(vec![0.0; 64], 0.1, bad), 1).is_err());
+        // a NaN / inf query point is a graceful error, not a shard panic
+        let mut q = vec![0.5; 64];
+        q[10] = f64::NAN;
+        assert!(engine.search_one(&Query::new(q.clone(), 0.1), 1).is_err());
+        q[10] = f64::INFINITY;
+        assert!(engine.search_one(&Query::new(q, 0.1), 1).is_err());
+        // …and a NaN reference is rejected at construction
+        let mut r = Dataset::Ecg.generate(300, 2);
+        r[5] = f64::NAN;
+        assert!(Engine::new(r, &EngineConfig::default()).is_err());
+    }
+
+    #[test]
+    fn scalar_and_strip_engines_agree_bitwise() {
+        let r = Dataset::Pamap2.generate(2200, 41);
+        let q = Query::new(extract_queries(&r, 1, 128, 0.1, 42).remove(0), 0.1);
+        let scalar = Engine::new(
+            r.clone(),
+            &EngineConfig { shards: 2, scan_mode: ScanMode::Scalar, ..Default::default() },
+        )
+        .unwrap();
+        let strip = Engine::new(
+            r,
+            &EngineConfig { shards: 2, scan_mode: ScanMode::Strip, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(strip.scan_mode(), ScanMode::Strip);
+        let a = scalar.search_one(&q, 7).unwrap();
+        let b = strip.search_one(&q, 7).unwrap();
+        assert_eq!(a.matches.len(), b.matches.len());
+        for (x, y) in a.matches.iter().zip(&b.matches) {
+            assert_eq!(x.pos, y.pos);
+            assert_eq!(x.dist.to_bits(), y.dist.to_bits());
+        }
+        assert!(b.counters.strip_batches > 0);
+        assert_eq!(a.counters.strip_batches, 0);
     }
 
     #[test]

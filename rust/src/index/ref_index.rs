@@ -79,6 +79,15 @@ impl BucketStats {
     pub fn mean_std(&self, pos: usize) -> (f64, f64) {
         (self.mean[pos], self.std[pos])
     }
+
+    /// SoA view of `len` consecutive positions starting at `pos` — the
+    /// strip-mined scan copies these lanes into its scratch buffers in
+    /// one pass instead of making `len` scalar [`BucketStats::mean_std`]
+    /// calls.
+    #[inline]
+    pub fn strip(&self, pos: usize, len: usize) -> (&[f64], &[f64]) {
+        (&self.mean[pos..pos + len], &self.std[pos..pos + len])
+    }
 }
 
 /// Shared, read-only reference-side index: one per reference stream,
@@ -229,6 +238,14 @@ mod tests {
             let (tm, ts) = t.mean_std(pos);
             assert!((tm - bm).abs() < 1e-8);
             assert!((ts - bs).abs() < 1e-8);
+        }
+        // strip views are windows into the same lanes
+        let (ms, ss) = t.strip(40, 64);
+        assert_eq!(ms.len(), 64);
+        for i in 0..64 {
+            let (m, s) = t.mean_std(40 + i);
+            assert_eq!(ms[i].to_bits(), m.to_bits());
+            assert_eq!(ss[i].to_bits(), s.to_bits());
         }
     }
 

@@ -124,16 +124,46 @@ impl TopK {
     /// Offer a match; accepted iff it *strictly* beats the current
     /// threshold (the scalar `d < bsf` rule — which also rejects NaN, as
     /// the seed's `d < bsf` comparison did; a NaN inside the heap would
-    /// poison its ordering). Returns whether it was kept.
+    /// poison its ordering), or iff it ties the k-th best distance
+    /// exactly at a *smaller position*. Returns whether it was kept.
+    ///
+    /// The tie arm makes the collector's final contents independent of
+    /// offer order: the result is always the k lexicographically smallest
+    /// `(dist, pos)` pairs offered. In an ascending-position scan the arm
+    /// can never fire (a later candidate's position exceeds every heap
+    /// entry's), so every seed k = 1 / ascending-scan path keeps its
+    /// bit-identical behaviour — but out-of-order visitors (NN1's
+    /// best-first order, the strip scan's LB-ordered survivors) now
+    /// resolve distance ties exactly like the position-ordered scan.
+    ///
+    /// Order-independence is per collector: a tie with the *external*
+    /// bound (another shard's published k-th best) is still rejected,
+    /// exactly as the seed did, so cross-shard exact-tie resolution keeps
+    /// the router's documented timing caveat
+    /// (see [`crate::coordinator::router::route_query_topk`]).
     pub fn offer(&mut self, m: Match) -> bool {
-        if m.dist.is_nan() || m.dist >= self.threshold() {
+        if m.dist.is_nan() {
             return false;
         }
-        if self.is_full() {
-            self.heap.pop();
+        if m.dist < self.threshold() {
+            if self.is_full() {
+                self.heap.pop();
+            }
+            self.heap.push(Worst(m));
+            return true;
         }
-        self.heap.push(Worst(m));
-        true
+        // exact tie with the k-th best at a smaller position (still
+        // strictly below the external bound: results at or above the
+        // bound are someone else's)
+        if self.is_full() && m.dist < self.bound {
+            let worst = self.heap.peek().expect("full heap").0;
+            if m.dist == worst.dist && m.pos < worst.pos {
+                self.heap.pop();
+                self.heap.push(Worst(m));
+                return true;
+            }
+        }
+        false
     }
 
     /// Fold another collector's results in, re-ranking by `(dist, pos)` so
@@ -231,6 +261,46 @@ mod tests {
         assert_eq!(ab.to_sorted(), ba.to_sorted());
         // 1.0@10, then 2.0@5 — the 3.0 tie pair is cut entirely
         assert_eq!(ab.into_sorted(), vec![m(10, 1.0), m(5, 2.0)]);
+    }
+
+    #[test]
+    fn tie_at_kth_swaps_in_the_smaller_position() {
+        let mut t = TopK::new(2);
+        assert!(t.offer(m(5, 1.0)));
+        assert!(t.offer(m(8, 3.0)));
+        // equal distance, larger position: rejected (ascending-scan rule)
+        assert!(!t.offer(m(9, 3.0)));
+        // equal distance, smaller position: replaces the k-th entry, so
+        // the outcome matches what an ascending-position scan would hold
+        assert!(t.offer(m(2, 3.0)));
+        assert_eq!(t.into_sorted(), vec![m(5, 1.0), m(2, 3.0)]);
+    }
+
+    #[test]
+    fn final_set_is_offer_order_independent() {
+        let offers = [m(7, 2.0), m(3, 2.0), m(9, 1.0), m(1, 2.0), m(4, 5.0)];
+        let mut fwd = TopK::new(2);
+        for o in offers {
+            fwd.offer(o);
+        }
+        let mut rev = TopK::new(2);
+        for o in offers.iter().rev() {
+            rev.offer(*o);
+        }
+        // k smallest by (dist, pos) either way
+        assert_eq!(fwd.into_sorted(), vec![m(9, 1.0), m(1, 2.0)]);
+        assert_eq!(rev.into_sorted(), vec![m(9, 1.0), m(1, 2.0)]);
+    }
+
+    #[test]
+    fn tie_never_crosses_the_external_bound() {
+        let mut t = TopK::with_bound(1, 3.0);
+        assert!(!t.offer(m(5, 3.0)));
+        assert!(t.offer(m(5, 2.0)));
+        t.set_bound(2.0);
+        // d == kth == bound: at the bound, not below it — rejected
+        assert!(!t.offer(m(1, 2.0)));
+        assert_eq!(t.into_sorted(), vec![m(5, 2.0)]);
     }
 
     #[test]

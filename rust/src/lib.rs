@@ -62,7 +62,8 @@ pub mod prelude {
     pub use crate::index::{Engine, EngineConfig, Query, RefIndex, TopK, TopKResult};
     pub use crate::metrics::Counters;
     pub use crate::search::subsequence::{
-        search_subsequence, search_subsequence_topk, search_subsequence_topk_metric, Match,
+        search_subsequence, search_subsequence_topk, search_subsequence_topk_metric,
+        search_subsequence_topk_metric_mode, Match, ScanMode,
     };
     pub use crate::search::suite::Suite;
 }

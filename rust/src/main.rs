@@ -9,13 +9,13 @@ use anyhow::{anyhow, bail, Result};
 use repro::bench_support::grid::{experiments, run_experiment, Workload};
 use repro::bench_support::report::{fig5_table, pruning_table, speedup_summary};
 use repro::config::Config;
-use repro::coordinator::{QueryRequest, Service, ServiceConfig};
+use repro::coordinator::{ErrorResponse, QueryRequest, Service, ServiceConfig};
 use repro::data::{extract_queries, Dataset};
 use repro::distances::metric::Metric;
 use repro::metrics::{Counters, Timer};
 #[cfg(feature = "xla")]
 use repro::runtime::XlaEngine;
-use repro::search::subsequence::{search_subsequence, window_cells};
+use repro::search::subsequence::{search_subsequence, window_cells, ScanMode};
 use repro::search::suite::Suite;
 use repro::util::cli::Args;
 
@@ -31,7 +31,8 @@ COMMANDS
   serve       run the search service over synthetic queries and report
               latency/throughput
               --dataset <name> [--queries N] [--shards N] [--suite S]
-              [--k N] [--metric M] [--ref-len N] [--artifacts DIR]
+              [--k N] [--metric M] [--scan-mode strip|scalar]
+              [--ref-len N] [--artifacts DIR]
   bench-suite run the paper's experiment grid and print Fig 5a/5b + tables
               [--axis length|window|all] [--ref-len N] [--datasets a,b]
               [--qlens 128,256] [--ratios 0.1,0.2] [--queries N]
@@ -44,7 +45,9 @@ COMMANDS
 
 Suites: ucr | usp | mon | nolb | xla     Datasets: FoG Soccer PAMAP2 ECG REFIT PPG
 Metrics: cdtw (default) | dtw | wdtw | erp | msm | twe (default parameters;
-         per-request parameters travel in the protocol's metric object)";
+         per-request parameters travel in the protocol's metric object)
+Scan modes: strip (default; batched bounds + LB-ordered DTW) | scalar
+         (the legacy per-candidate loop — same results, A/B baseline)";
 
 fn main() {
     let args = match Args::from_env() {
@@ -173,6 +176,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("unknown metric {name:?} (try cdtw|dtw|wdtw|erp|msm|twe)"))?,
         None => Metric::Cdtw,
     };
+    let scan_mode = match args.get("scan-mode") {
+        Some(name) => ScanMode::from_name(name)
+            .ok_or_else(|| anyhow!("unknown scan mode {name:?} (strip|scalar)"))?,
+        None => ScanMode::default(),
+    };
     let artifacts = PathBuf::from(args.get_or("artifacts", &cfg.serve.artifacts_dir));
 
     let reference = load_reference(&dataset, ref_len, seed)?;
@@ -181,30 +189,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
         reference,
         &ServiceConfig {
             shards,
+            scan_mode,
             artifacts_dir: artifacts.join("manifest.json").exists().then_some(artifacts),
             ..Default::default()
         },
     )?;
     println!(
-        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}, metric {}, top-{k}) over {shards} shards",
+        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}, metric {}, top-{k}, {} scan) over {shards} shards",
         suite.name(),
-        metric.name()
+        metric.name(),
+        scan_mode.name()
     );
     let mut latencies = Vec::new();
     let t = Timer::start();
     for (i, q) in queries.into_iter().enumerate() {
-        let resp = svc.submit(&QueryRequest {
-            id: i as u64,
-            query: q,
-            window_ratio: ratio,
-            suite,
-            k,
-            metric,
-        })?;
-        println!("{}", resp.to_json());
-        latencies.push(resp.latency_ms);
+        let req = QueryRequest { id: i as u64, query: q, window_ratio: ratio, suite, k, metric };
+        // a failing request answers with the protocol's error line and the
+        // service keeps serving — one bad query must not end the session
+        match svc.submit(&req) {
+            Ok(resp) => {
+                println!("{}", resp.to_json());
+                latencies.push(resp.latency_ms);
+            }
+            Err(e) => println!("{}", ErrorResponse::new(req.id, &e).to_json()),
+        }
     }
     let wall = t.elapsed_secs();
+    if latencies.is_empty() {
+        bail!("no query served successfully");
+    }
     latencies.sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
     let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
     println!(

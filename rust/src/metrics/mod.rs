@@ -38,6 +38,17 @@ pub struct Counters {
     /// envelopes (a subset of `lb_keogh_ec_prunes`): the pruning power
     /// attributable to the shared index rather than per-query work
     pub index_ec_prunes: u64,
+    /// strips processed by the strip-mined scan (0 on the scalar path)
+    pub strip_batches: u64,
+    /// candidates pruned by the *batched* SoA bound stages (LB_Kim +
+    /// unordered LB_Keogh over whole strips) — a subset of the per-bound
+    /// prune counters above, attributing them to the batch front-end
+    pub batch_lb_prunes: u64,
+    /// full-DTW calls avoided by LB-ordered survivor evaluation: the
+    /// survivor passed the batch bounds at the strip-entry threshold but
+    /// was pruned against the threshold tightened *within* the strip by
+    /// earlier (lower-bound-ordered) evaluations
+    pub lb_order_saved_dtw_calls: u64,
     /// distance-kernel calls per metric kind, indexed by
     /// [`Metric::index`] (every entry also counts into `dtw_calls`)
     pub metric_calls: [u64; Metric::COUNT],
@@ -95,6 +106,9 @@ impl Counters {
         self.index_hits += o.index_hits;
         self.topk_updates += o.topk_updates;
         self.index_ec_prunes += o.index_ec_prunes;
+        self.strip_batches += o.strip_batches;
+        self.batch_lb_prunes += o.batch_lb_prunes;
+        self.lb_order_saved_dtw_calls += o.lb_order_saved_dtw_calls;
         for i in 0..Metric::COUNT {
             self.metric_calls[i] += o.metric_calls[i];
             self.metric_abandons[i] += o.metric_abandons[i];
@@ -132,8 +146,31 @@ impl Counters {
             0.0
         };
         format!(
-            "index: {} cache hits | top-k: {} heap updates | EC prunes via shared envelopes: {} ({ec_share:.1}% of EC)",
-            self.index_hits, self.topk_updates, self.index_ec_prunes
+            "index: {} cache hits | top-k: {} heap updates | EC prunes via shared envelopes: {} ({ec_share:.1}% of EC) | strips: {} batches, {} batch-LB prunes, {} DTW calls saved by LB order",
+            self.index_hits,
+            self.topk_updates,
+            self.index_ec_prunes,
+            self.strip_batches,
+            self.batch_lb_prunes,
+            self.lb_order_saved_dtw_calls
+        )
+    }
+
+    /// One-line report of the strip-mined scan front-end: how much of the
+    /// pruning the batched bounds delivered and what LB-ordering saved.
+    pub fn strip_report(&self) -> String {
+        if self.strip_batches == 0 {
+            return "strip scan not used (scalar path)".to_string();
+        }
+        let lb_total = self.lb_kim_prunes + self.lb_keogh_eq_prunes + self.lb_keogh_ec_prunes;
+        let batch_share = if lb_total > 0 {
+            100.0 * self.batch_lb_prunes as f64 / lb_total as f64
+        } else {
+            0.0
+        };
+        format!(
+            "strips: {} batches | batch-LB prunes: {} ({batch_share:.1}% of all LB prunes) | DTW calls saved by LB order: {}",
+            self.strip_batches, self.batch_lb_prunes, self.lb_order_saved_dtw_calls
         )
     }
 }
@@ -200,6 +237,31 @@ mod tests {
         assert_eq!(a.index_hits, 4);
         assert_eq!(a.topk_updates, 3);
         assert_eq!(a.index_ec_prunes, 6);
+    }
+
+    #[test]
+    fn strip_counters_merge_and_report() {
+        let mut a = Counters { strip_batches: 2, batch_lb_prunes: 5, ..Default::default() };
+        let b = Counters {
+            strip_batches: 3,
+            batch_lb_prunes: 7,
+            lb_order_saved_dtw_calls: 4,
+            lb_kim_prunes: 10,
+            lb_keogh_eq_prunes: 14,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.strip_batches, 5);
+        assert_eq!(a.batch_lb_prunes, 12);
+        assert_eq!(a.lb_order_saved_dtw_calls, 4);
+        let r = a.strip_report();
+        assert!(r.contains("5 batches"), "{r}");
+        assert!(r.contains("batch-LB prunes: 12"), "{r}");
+        assert!(r.contains("saved by LB order: 4"), "{r}");
+        assert!(r.contains("50.0% of all LB prunes"), "{r}");
+        assert_eq!(Counters::new().strip_report(), "strip scan not used (scalar path)");
+        // the index report mentions the strip counters too
+        assert!(a.index_report().contains("5 batches"), "{}", a.index_report());
     }
 
     #[test]

@@ -16,9 +16,16 @@
 //! The loop is allocation-free per candidate: all buffers live in
 //! [`QueryContext`] and are reused across the scan.
 
+use anyhow::Result;
+
+use crate::bounds::batch::{
+    batch_lb_kim_into, lb_keogh_eq_unordered, StripScratch, DEFAULT_STRIP,
+};
 use crate::bounds::cascade::CascadePolicy;
 use crate::bounds::envelope::envelopes_into;
-use crate::bounds::lb_keogh::{cumulate_bound, lb_keogh_ec, lb_keogh_eq, reorder, sort_order};
+use crate::bounds::lb_keogh::{
+    cumulate_bound, lb_keogh_ec, lb_keogh_eq, lb_keogh_eq_pre, reorder, sort_order,
+};
 use crate::bounds::lb_kim::lb_kim_hierarchy;
 use crate::distances::metric::Metric;
 use crate::distances::DtwWorkspace;
@@ -37,9 +44,48 @@ pub struct Match {
     pub dist: f64,
 }
 
-/// Convert the paper's window *ratio* (0.1–0.5 in the grid) to cells.
+/// Convert the paper's window *ratio* (0.1–0.5 in the grid) to cells,
+/// capped at `qlen`: a band wider than the query is equivalent to the
+/// unbanded case, and the cap keeps a hostile ratio (`1e999` parses as
+/// +inf on the wire) from exploding the envelope build. The float→int
+/// cast saturates, so NaN maps to 0 and +inf to the cap.
 pub fn window_cells(qlen: usize, ratio: f64) -> usize {
-    (ratio * qlen as f64).floor() as usize
+    ((ratio * qlen as f64).floor() as usize).min(qlen)
+}
+
+/// How the scan front-end walks the candidate space.
+///
+/// Both modes return **bitwise-identical top-k results** (same positions,
+/// same distances — pinned by `tests/conformance_strip.rs`); they differ
+/// only in throughput and in which counter a prune is attributed to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScanMode {
+    /// The seed's per-candidate loop: cascade + kernel one candidate at a
+    /// time, ascending position. The A/B baseline.
+    Scalar,
+    /// Strip-mined pipeline (the default serving path): candidates are
+    /// processed in strips of [`DEFAULT_STRIP`], the cheap bounds run
+    /// batched over SoA scratch lanes, and the survivors are evaluated in
+    /// ascending-lower-bound order with a single-pass z-normalisation.
+    #[default]
+    Strip,
+}
+
+impl ScanMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScanMode::Scalar => "scalar",
+            ScanMode::Strip => "strip",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ScanMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" | "legacy" => Some(ScanMode::Scalar),
+            "strip" => Some(ScanMode::Strip),
+            _ => None,
+        }
+    }
 }
 
 /// Everything derived from one (query, window) pair, reusable across scans
@@ -58,12 +104,18 @@ pub struct QueryContext {
     /// query envelopes reordered by `order`
     uo: Vec<f64>,
     lo: Vec<f64>,
+    /// query envelopes in natural order — the strip scan's unordered
+    /// chunked LB_Keogh pass reads these
+    u: Vec<f64>,
+    l: Vec<f64>,
     // work buffers
     cb1: Vec<f64>,
     cb2: Vec<f64>,
     cb_cum: Vec<f64>,
     zbuf: Vec<f64>,
     ws: DtwWorkspace,
+    /// SoA scratch lanes for the strip-mined scan (empty until first use)
+    strip: StripScratch,
     /// elastic metric every candidate is scored under
     pub metric: Metric,
 }
@@ -78,6 +130,10 @@ impl QueryContext {
     /// Context for an arbitrary metric. `w` is re-derived through
     /// [`Metric::effective_window`] (DTW/WDTW are unbanded by
     /// convention), and the envelopes are built for that window.
+    ///
+    /// Panics on a query containing NaN (the sort-order build has no
+    /// total order to offer it); serving layers validate first via
+    /// [`QueryContext::try_with_metric`].
     pub fn with_metric(query_raw: &[f64], w: usize, metric: Metric) -> Self {
         let q = znorm(query_raw);
         let n = q.len();
@@ -85,7 +141,7 @@ impl QueryContext {
         // envelopes, sort order and the reordered bounds only exist for
         // metrics whose cascade can use them — a bound-free metric would
         // pay the O(n log n) setup once per shard for nothing
-        let (order, qo, uo, lo) = if metric.uses_envelopes() {
+        let (order, qo, uo, lo, u, l) = if metric.uses_envelopes() {
             let order = sort_order(&q);
             let mut u = Vec::new();
             let mut l = Vec::new();
@@ -93,9 +149,9 @@ impl QueryContext {
             let uo = reorder(&u, &order);
             let lo = reorder(&l, &order);
             let qo = reorder(&q, &order);
-            (order, qo, uo, lo)
+            (order, qo, uo, lo, u, l)
         } else {
-            (Vec::new(), Vec::new(), Vec::new(), Vec::new())
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new())
         };
         Self {
             q,
@@ -104,13 +160,25 @@ impl QueryContext {
             qo,
             uo,
             lo,
+            u,
+            l,
             cb1: vec![0.0; n],
             cb2: vec![0.0; n],
             cb_cum: vec![0.0; n + 1],
             zbuf: vec![0.0; n],
             ws: DtwWorkspace::with_capacity(n),
+            strip: StripScratch::default(),
             metric,
         }
+    }
+
+    /// Validating constructor: the graceful API boundary for
+    /// client-controlled queries. A query containing NaN or ±inf — which
+    /// would z-normalise to garbage and panic the sort-order build deep
+    /// inside a shard worker — is rejected here with an error instead.
+    pub fn try_with_metric(query_raw: &[f64], w: usize, metric: Metric) -> Result<Self> {
+        validate_series("query", query_raw)?;
+        Ok(Self::with_metric(query_raw, w, metric))
     }
 
     pub fn len(&self) -> usize {
@@ -119,6 +187,17 @@ impl QueryContext {
     pub fn is_empty(&self) -> bool {
         self.q.is_empty()
     }
+}
+
+/// Reject series containing NaN/±inf with a positioned error — the shared
+/// validation every serving boundary (engine, service, wire protocol)
+/// routes through, so malformed floats never reach the scan's sort-order
+/// build or poison a shard worker's heap.
+pub fn validate_series(what: &str, s: &[f64]) -> Result<()> {
+    if let Some(i) = s.iter().position(|v| !v.is_finite()) {
+        anyhow::bail!("{what} contains a non-finite value at index {i} ({})", s[i]);
+    }
+    Ok(())
 }
 
 /// Envelopes of the *raw* reference stream for one window size — computed
@@ -136,6 +215,13 @@ impl DataEnvelopes {
         let mut lower = Vec::new();
         envelopes_into(reference, w, &mut upper, &mut lower);
         Self { upper, lower }
+    }
+
+    /// The (upper, lower) envelope strip for one candidate window of `n`
+    /// points starting at `pos`.
+    #[inline]
+    pub fn strip(&self, pos: usize, n: usize) -> (&[f64], &[f64]) {
+        (&self.upper[pos..pos + n], &self.lower[pos..pos + n])
     }
 }
 
@@ -262,6 +348,243 @@ pub fn scan_topk_policy(
     }
 }
 
+/// [`scan_topk_policy`] with an explicit [`ScanMode`]: `Scalar` is the
+/// seed's per-candidate loop verbatim, `Strip` the strip-mined pipeline.
+/// Both return bitwise-identical top-k contents.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_topk_policy_mode(
+    reference: &[f64],
+    start: usize,
+    end: usize,
+    ctx: &mut QueryContext,
+    denv: Option<&DataEnvelopes>,
+    stats: ScanStats<'_>,
+    suite: Suite,
+    cascade: CascadePolicy,
+    mode: ScanMode,
+    topk: &mut TopK,
+    counters: &mut Counters,
+) {
+    match mode {
+        ScanMode::Scalar => scan_topk_policy(
+            reference, start, end, ctx, denv, stats, suite, cascade, topk, counters,
+        ),
+        ScanMode::Strip => scan_topk_strips(
+            reference, start, end, ctx, denv, stats, suite, cascade, topk, counters,
+        ),
+    }
+}
+
+/// The strip-mined scan: candidate positions `[start, end)` in strips of
+/// [`DEFAULT_STRIP`].
+///
+/// Per strip: (1) the window statistics of every lane are pulled into SoA
+/// scratch in one pass (a [`BucketStats::strip`] view, or the streaming
+/// recurrence advanced across the strip — both bit-compatible with the
+/// scalar scan); (2) batched LB_Kim and the unordered chunked LB_Keogh EQ
+/// pass filter the whole strip against the strip-entry threshold;
+/// (3) survivors are evaluated in **ascending-lower-bound order**, so the
+/// early winners tighten the top-k threshold before their strip-mates are
+/// scored — measurably cutting full-DTW calls — with a fresh threshold
+/// and a single-pass z-normalisation feeding both the sorted
+/// `cb`-producing LB_Keogh pass and the distance kernel.
+#[allow(clippy::too_many_arguments)]
+fn scan_topk_strips(
+    reference: &[f64],
+    start: usize,
+    end: usize,
+    ctx: &mut QueryContext,
+    denv: Option<&DataEnvelopes>,
+    stats: ScanStats<'_>,
+    suite: Suite,
+    cascade: CascadePolicy,
+    topk: &mut TopK,
+    counters: &mut Counters,
+) {
+    let n = ctx.len();
+    assert!(n > 0, "empty query");
+    assert!(reference.len() >= n, "reference shorter than query");
+    let end = end.min(reference.len() - n + 1);
+    if start >= end {
+        return;
+    }
+    let cascade = if ctx.metric.uses_envelopes() { cascade } else { CascadePolicy::none() };
+    debug_assert!(
+        !cascade.needs_data_envelopes() || denv.is_some(),
+        "suite {:?} needs data envelopes",
+        suite
+    );
+    let indexed = matches!(stats, ScanStats::Indexed(_));
+    // one streaming recurrence shared by every strip of this scan — the
+    // same state a scalar streaming scan would carry
+    let mut ws = match stats {
+        ScanStats::Streaming => Some(WindowStats::new(&reference[start..], n)),
+        ScanStats::Indexed(table) => {
+            debug_assert_eq!(table.qlen(), n, "stats bucket / query length mismatch");
+            None
+        }
+    };
+    let mut scratch = std::mem::take(&mut ctx.strip);
+    let mut strip_start = start;
+    while strip_start < end {
+        let len = (end - strip_start).min(DEFAULT_STRIP);
+        scratch.reset(len);
+        match (&mut ws, stats) {
+            (Some(ws), _) => {
+                for i in 0..len {
+                    debug_assert_eq!(start + ws.pos(), strip_start + i);
+                    let (m, s) = ws.mean_std();
+                    scratch.mean[i] = m;
+                    scratch.std[i] = s;
+                    if strip_start + i + 1 < end {
+                        ws.advance();
+                    }
+                }
+            }
+            (None, ScanStats::Indexed(table)) => {
+                let (mean, std) = table.strip(strip_start, len);
+                scratch.mean.copy_from_slice(mean);
+                scratch.std.copy_from_slice(std);
+            }
+            (None, ScanStats::Streaming) => unreachable!("streaming scan carries its recurrence"),
+        }
+        counters.strip_batches += 1;
+        counters.candidates += len as u64;
+        // constant for the batch stages, like the scalar loop's bsf is
+        // constant for one candidate
+        let bsf_strip = topk.threshold();
+        if cascade.kim {
+            batch_lb_kim_into(
+                &ctx.q,
+                reference,
+                strip_start,
+                len,
+                &scratch.mean,
+                &scratch.std,
+                &mut scratch.lb,
+            );
+            for i in 0..len {
+                if scratch.lb[i] > bsf_strip {
+                    scratch.alive[i] = false;
+                    counters.lb_kim_prunes += 1;
+                    counters.batch_lb_prunes += 1;
+                }
+            }
+        }
+        if cascade.keogh_eq {
+            for i in 0..len {
+                if !scratch.alive[i] {
+                    continue;
+                }
+                let pos = strip_start + i;
+                let lb = lb_keogh_eq_unordered(
+                    &ctx.u,
+                    &ctx.l,
+                    &reference[pos..pos + n],
+                    scratch.mean[i],
+                    scratch.std[i],
+                );
+                if lb > scratch.lb[i] {
+                    scratch.lb[i] = lb;
+                }
+                // the unordered sum adds the scalar pass's exact terms in
+                // a different order, so it can sit ~n·ε relative above the
+                // sorted value; discount it by far more than that bound
+                // before pruning, so this batch stage can never prune a
+                // candidate the scalar cascade would keep (survivors are
+                // re-checked with the exact sorted pass anyway)
+                if lb * (1.0 - 1e-9) > bsf_strip {
+                    scratch.alive[i] = false;
+                    counters.lb_keogh_eq_prunes += 1;
+                    counters.batch_lb_prunes += 1;
+                }
+            }
+        }
+        scratch.order_survivors();
+        for &i in &scratch.order {
+            let i = i as usize;
+            let pos = strip_start + i;
+            eval_survivor(
+                pos,
+                &reference[pos..pos + n],
+                scratch.mean[i],
+                scratch.std[i],
+                bsf_strip,
+                ctx,
+                denv,
+                suite,
+                cascade,
+                indexed,
+                topk,
+                counters,
+            );
+        }
+        strip_start += len;
+    }
+    ctx.strip = scratch;
+}
+
+/// One batch-bound survivor through the per-candidate tail of the strip
+/// pipeline: fresh threshold, single-pass z-normalisation shared by the
+/// sorted (`cb`-producing) LB_Keogh pass and the kernel, then LB_Keogh EC
+/// and the metric's kernel exactly as the scalar loop runs them. All
+/// distance math is IEEE-identical to [`eval_candidate`]'s; `bsf_strip`
+/// (the strip-entry threshold) only attributes prunes that the
+/// within-strip LB-ordered tightening made possible.
+#[allow(clippy::too_many_arguments)]
+fn eval_survivor(
+    pos: usize,
+    window: &[f64],
+    mean: f64,
+    std: f64,
+    bsf_strip: f64,
+    ctx: &mut QueryContext,
+    denv: Option<&DataEnvelopes>,
+    suite: Suite,
+    cascade: CascadePolicy,
+    indexed: bool,
+    topk: &mut TopK,
+    counters: &mut Counters,
+) {
+    let n = ctx.len();
+    let bsf = topk.threshold();
+    // single-pass z-normalisation: the scalar path normalises the window
+    // inside LB_Keogh EQ and then *again* into zbuf for the kernel; here
+    // zbuf is filled once and both consumers read it
+    ctx.zbuf.clear();
+    ctx.zbuf.extend(window.iter().map(|&x| znorm_point(x, mean, std)));
+    let mut lb1 = 0.0;
+    if cascade.keogh_eq {
+        lb1 = lb_keogh_eq_pre(&ctx.order, &ctx.uo, &ctx.lo, &ctx.zbuf, bsf, &mut ctx.cb1);
+        if lb1 > bsf {
+            counters.lb_keogh_eq_prunes += 1;
+            if lb1 <= bsf_strip {
+                counters.lb_order_saved_dtw_calls += 1;
+            }
+            return;
+        }
+    }
+    let mut lb2 = 0.0;
+    let mut have2 = false;
+    if cascade.keogh_ec {
+        let denv = denv.expect("data envelopes required");
+        let (u, l) = denv.strip(pos, n);
+        lb2 = lb_keogh_ec(&ctx.order, &ctx.qo, u, l, mean, std, bsf, &mut ctx.cb2);
+        have2 = true;
+        if lb2 > bsf {
+            counters.lb_keogh_ec_prunes += 1;
+            if indexed {
+                counters.index_ec_prunes += 1;
+            }
+            if lb2 <= bsf_strip {
+                counters.lb_order_saved_dtw_calls += 1;
+            }
+            return;
+        }
+    }
+    score_candidate(pos, lb1, lb2, have2, bsf, ctx, suite, cascade, topk, counters);
+}
+
 /// One candidate through cascade + DTW core + collector. `indexed` marks
 /// stats/envelopes as coming from the shared reference index, so its
 /// pruning power is attributed separately in the counters.
@@ -321,6 +644,33 @@ fn eval_candidate(
             return;
         }
     }
+    // z-normalise the candidate for the kernel (the cb selection below
+    // never touches zbuf, so filling it first is order-equivalent)
+    ctx.zbuf.clear();
+    ctx.zbuf.extend(window.iter().map(|&x| znorm_point(x, mean, std)));
+    score_candidate(pos, lb1, lb2, have2, bsf, ctx, suite, cascade, topk, counters);
+}
+
+/// Shared final stage of both scan front-ends: pick the tighter Keogh
+/// contribution array, cumulate it into the DTW tightening tail, run the
+/// metric's kernel (the suite's DTW core for the DTW family, the
+/// generalised EAPruned elsewhere) on the already z-normalised window in
+/// `ctx.zbuf`, and offer the result. [`eval_candidate`] and
+/// [`eval_survivor`] both end here with identical inputs — one body, so
+/// the two paths cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+fn score_candidate(
+    pos: usize,
+    lb1: f64,
+    lb2: f64,
+    have2: bool,
+    bsf: f64,
+    ctx: &mut QueryContext,
+    suite: Suite,
+    cascade: CascadePolicy,
+    topk: &mut TopK,
+    counters: &mut Counters,
+) {
     // cumulative tail from the tighter of the two Keogh bounds
     let cb = if cascade.tighten && (cascade.keogh_eq || have2) {
         let src = if have2 && lb2 > lb1 { &ctx.cb2 } else { &ctx.cb1 };
@@ -329,10 +679,6 @@ fn eval_candidate(
     } else {
         None
     };
-    // z-normalise the candidate and run the metric's kernel (the suite's
-    // DTW core for the DTW family, the generalised EAPruned elsewhere)
-    ctx.zbuf.clear();
-    ctx.zbuf.extend(window.iter().map(|&x| znorm_point(x, mean, std)));
     let metric = ctx.metric;
     counters.record_metric_call(metric);
     let d = metric.eval(&ctx.q, &ctx.zbuf, ctx.w, bsf, cb, suite, &mut ctx.ws);
@@ -408,6 +754,33 @@ pub fn search_subsequence_topk_metric(
     suite: Suite,
     counters: &mut Counters,
 ) -> Vec<Match> {
+    search_subsequence_topk_metric_mode(
+        reference,
+        query_raw,
+        w,
+        k,
+        metric,
+        suite,
+        ScanMode::Scalar,
+        counters,
+    )
+}
+
+/// [`search_subsequence_topk_metric`] with an explicit [`ScanMode`] —
+/// the A/B entry point `benches/strip_throughput.rs` and the conformance
+/// suite drive. The two modes return bitwise-identical results; `Strip`
+/// reaches fewer full-DTW calls via batch bounds + LB-ordered evaluation.
+#[allow(clippy::too_many_arguments)]
+pub fn search_subsequence_topk_metric_mode(
+    reference: &[f64],
+    query_raw: &[f64],
+    w: usize,
+    k: usize,
+    metric: Metric,
+    suite: Suite,
+    mode: ScanMode,
+    counters: &mut Counters,
+) -> Vec<Match> {
     let mut ctx = QueryContext::with_metric(query_raw, w, metric);
     if k == 0 || ctx.is_empty() || reference.len() < ctx.len() {
         return Vec::new();
@@ -416,7 +789,7 @@ pub fn search_subsequence_topk_metric(
         .wants_data_envelopes(suite)
         .then(|| DataEnvelopes::new(reference, ctx.w));
     let mut topk = TopK::new(k);
-    scan_topk_policy(
+    scan_topk_policy_mode(
         reference,
         0,
         reference.len() - ctx.len() + 1,
@@ -425,6 +798,7 @@ pub fn search_subsequence_topk_metric(
         ScanStats::Streaming,
         suite,
         suite.cascade(),
+        mode,
         &mut topk,
         counters,
     );
@@ -689,6 +1063,139 @@ mod tests {
         for pair in got.windows(2) {
             assert!(pair[0].dist <= pair[1].dist);
         }
+    }
+
+    #[test]
+    fn strip_scan_is_bitwise_identical_to_scalar_scan() {
+        let (r, q) = small_workload();
+        for suite in Suite::ALL {
+            for w_ratio in [0.1, 0.3] {
+                let w = window_cells(q.len(), w_ratio);
+                for k in [1usize, 5] {
+                    let mut cs = Counters::new();
+                    let scalar = search_subsequence_topk_metric_mode(
+                        &r, &q, w, k, Metric::Cdtw, suite, ScanMode::Scalar, &mut cs,
+                    );
+                    let mut ct = Counters::new();
+                    let strip = search_subsequence_topk_metric_mode(
+                        &r, &q, w, k, Metric::Cdtw, suite, ScanMode::Strip, &mut ct,
+                    );
+                    assert_eq!(scalar.len(), strip.len(), "{} k={k}", suite.name());
+                    for (a, b) in scalar.iter().zip(&strip) {
+                        assert_eq!(a.pos, b.pos, "{} k={k}", suite.name());
+                        assert_eq!(a.dist.to_bits(), b.dist.to_bits(), "{} k={k}", suite.name());
+                    }
+                    // both looked at every candidate; the strip path did
+                    // so in batches
+                    assert_eq!(cs.candidates, ct.candidates, "{}", suite.name());
+                    assert!(ct.strip_batches > 0, "{}", suite.name());
+                    assert_eq!(cs.strip_batches, 0, "{}", suite.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strip_scan_with_indexed_stats_matches_streaming_strips() {
+        let (r, q) = small_workload();
+        let w = window_cells(q.len(), 0.2);
+        let table = crate::index::ref_index::BucketStats::build(&r, q.len());
+        let denv = DataEnvelopes::new(&r, w);
+        let total = r.len() - q.len() + 1;
+        let mut run = |stats: ScanStats<'_>| {
+            let mut ctx = QueryContext::new(&q, w);
+            let mut topk = TopK::new(4);
+            let mut c = Counters::new();
+            scan_topk_policy_mode(
+                &r,
+                0,
+                total,
+                &mut ctx,
+                Some(&denv),
+                stats,
+                Suite::UcrMon,
+                Suite::UcrMon.cascade(),
+                ScanMode::Strip,
+                &mut topk,
+                &mut c,
+            );
+            (topk.into_sorted(), c)
+        };
+        let (streamed, cs) = run(ScanStats::Streaming);
+        let (indexed, ci) = run(ScanStats::Indexed(&table));
+        assert_eq!(streamed, indexed);
+        assert_eq!(cs.candidates, ci.candidates);
+        assert_eq!(cs.strip_batches, ci.strip_batches);
+        if ci.lb_keogh_ec_prunes > 0 {
+            assert_eq!(ci.index_ec_prunes, ci.lb_keogh_ec_prunes);
+        }
+        assert_eq!(cs.index_ec_prunes, 0);
+    }
+
+    #[test]
+    fn strip_scan_cuts_dtw_calls_via_lb_ordering() {
+        // the throughput claim in miniature: same results, fewer kernel
+        // launches thanks to within-strip LB-ordered threshold tightening
+        let (r, q) = small_workload();
+        let w = window_cells(q.len(), 0.1);
+        let mut cs = Counters::new();
+        let scalar = search_subsequence_topk_metric_mode(
+            &r, &q, w, 5, Metric::Cdtw, Suite::UcrMon, ScanMode::Scalar, &mut cs,
+        );
+        let mut ct = Counters::new();
+        let strip = search_subsequence_topk_metric_mode(
+            &r, &q, w, 5, Metric::Cdtw, Suite::UcrMon, ScanMode::Strip, &mut ct,
+        );
+        assert_eq!(scalar, strip);
+        // LB-ordering is a heuristic win, not a theorem: allow a hair of
+        // slack so the assertion pins the trend without being brittle
+        assert!(
+            ct.dtw_calls <= cs.dtw_calls + cs.candidates / 100,
+            "strip {} vs scalar {} DTW calls",
+            ct.dtw_calls,
+            cs.dtw_calls
+        );
+        assert!(ct.batch_lb_prunes > 0, "{ct:?}");
+    }
+
+    #[test]
+    fn strip_scan_handles_bound_free_metrics_and_short_strips() {
+        // a non-envelope metric runs the strip loop bound-free, and a
+        // candidate space smaller than one strip still works
+        let r = Dataset::Soccer.generate(220, 3);
+        let q = crate::data::extract_queries(&r, 1, 64, 0.1, 4).remove(0);
+        let metric = Metric::Msm { cost: 0.5 };
+        for k in [1usize, 3] {
+            let mut cs = Counters::new();
+            let scalar = search_subsequence_topk_metric_mode(
+                &r, &q, 5, k, metric, Suite::UcrMon, ScanMode::Scalar, &mut cs,
+            );
+            let mut ct = Counters::new();
+            let strip = search_subsequence_topk_metric_mode(
+                &r, &q, 5, k, metric, Suite::UcrMon, ScanMode::Strip, &mut ct,
+            );
+            assert_eq!(scalar.len(), strip.len());
+            for (a, b) in scalar.iter().zip(&strip) {
+                assert_eq!(a.pos, b.pos);
+                assert_eq!(a.dist.to_bits(), b.dist.to_bits());
+            }
+            // bound-free: every candidate reaches the kernel in both modes
+            assert_eq!(ct.dtw_calls, ct.candidates);
+            assert_eq!(ct.batch_lb_prunes, 0);
+        }
+    }
+
+    #[test]
+    fn try_with_metric_rejects_non_finite_queries() {
+        assert!(QueryContext::try_with_metric(&[1.0, f64::NAN, 2.0], 2, Metric::Cdtw).is_err());
+        assert!(
+            QueryContext::try_with_metric(&[1.0, f64::INFINITY], 1, Metric::Cdtw).is_err()
+        );
+        let ctx = QueryContext::try_with_metric(&[1.0, 2.0, 3.0], 1, Metric::Cdtw).unwrap();
+        assert_eq!(ctx.len(), 3);
+        assert!(validate_series("query", &[0.0, 1.0]).is_ok());
+        let err = validate_series("query", &[0.0, f64::NEG_INFINITY]).unwrap_err();
+        assert!(err.to_string().contains("index 1"), "{err}");
     }
 
     #[test]

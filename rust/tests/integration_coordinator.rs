@@ -9,7 +9,7 @@ use repro::coordinator::{QueryRequest, QueryResponse, Service, ServiceConfig};
 use repro::data::{extract_queries, Dataset};
 use repro::distances::metric::Metric;
 use repro::metrics::Counters;
-use repro::search::subsequence::{search_subsequence, window_cells, Match};
+use repro::search::subsequence::{search_subsequence, window_cells, Match, ScanMode};
 use repro::search::suite::Suite;
 
 fn service(r: &[f64], shards: usize) -> Service {
@@ -164,7 +164,14 @@ fn request_without_metric_is_bit_identical_to_pr1_cdtw() {
     let req = QueryRequest::from_json(&legacy_line).unwrap();
     assert_eq!(req.metric, Metric::Cdtw, "absent metric must parse as cDTW");
 
-    let svc = service(&r, 1);
+    // the PR-1 service only had the scalar front-end: pin it so the
+    // dtw_calls tally below compares like with like (result *contents*
+    // are mode-independent, prune/call attribution is not)
+    let svc = Service::new(
+        r.to_vec(),
+        &ServiceConfig { shards: 1, scan_mode: ScanMode::Scalar, ..Default::default() },
+    )
+    .unwrap();
     let resp = svc.submit(&req).unwrap();
     let mut c = Counters::new();
     let want = repro::search::subsequence::search_subsequence_topk(
