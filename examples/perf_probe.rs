@@ -8,7 +8,12 @@
 //!   strip-mined pipeline on every synthetic dataset, verify the results
 //!   are bitwise identical, and print the scalar-vs-strip DTW-call
 //!   reduction the batched bounds + LB-ordered evaluation deliver.
+//! * `cohort` — the batch front-end A/B: the same batch of same-shape
+//!   queries through `Engine::search_batch_sequential` (query-major) and
+//!   `Engine::search_batch` (cohort strip-major), printing the per-query
+//!   DTW-call and strip-stat-load reduction as the batch grows.
 use repro::data::{extract_queries, Dataset};
+use repro::index::{Engine, EngineConfig, Query, TopKResult};
 use repro::distances::dtw::cdtw_ws;
 use repro::distances::eap_dtw::eap_cdtw;
 use repro::distances::elastic::core::{eap_elastic, DtwAsElastic};
@@ -88,11 +93,65 @@ fn strip_probe() {
     println!("total DTW calls: scalar {tot_scalar} vs strip {tot_strip} — reduction {cut:.1}%");
 }
 
+fn cohort_probe() {
+    let (ref_len, qlen, ratio, k) = (20_000usize, 128usize, 0.1, 5usize);
+    let r = Dataset::Ecg.generate(ref_len, 11);
+    let queries: Vec<Query> = extract_queries(&r, 64, qlen, 0.1, 5)
+        .into_iter()
+        .map(|q| Query::new(q, ratio))
+        .collect();
+    let engine = Engine::new(r, &EngineConfig { shards: 2, ..Default::default() }).unwrap();
+    let merged = |rs: &[TopKResult]| {
+        let mut c = Counters::new();
+        for r in rs {
+            c.merge(&r.counters);
+        }
+        c
+    };
+    println!("batch front-end A/B (ECG, qlen {qlen}, k {k}): per-query cost vs batch size");
+    println!(
+        "{:>5} | {:>9} {:>9} {:>6} | {:>10} {:>10} {:>6} | {:>7}",
+        "batch", "dtw/q seq", "dtw/q coh", "cut%", "stats/q seq", "stats/q coh", "cut%", "retired"
+    );
+    for b in [1usize, 4, 16, 64] {
+        let batch = &queries[..b];
+        let seq = engine.search_batch_sequential(batch, k).unwrap();
+        let coh = engine.search_batch(batch, k).unwrap();
+        for (a, c) in seq.iter().zip(&coh) {
+            assert_eq!(a.matches.len(), c.matches.len(), "modes diverged");
+            for (x, y) in a.matches.iter().zip(&c.matches) {
+                assert!(x.pos == y.pos && x.dist.to_bits() == y.dist.to_bits(), "modes diverged");
+            }
+        }
+        let (cs, cc) = (merged(&seq), merged(&coh));
+        // stat-lane loads: sequential pulls every candidate's (mean, std)
+        // once per query; the cohort pulls each strip once for everyone
+        let (seq_loads, coh_loads) = (cs.candidates, cc.candidates - cc.strip_stat_loads_saved);
+        let pct = |old: f64, new: f64| 100.0 * (old - new) / old.max(1e-12);
+        let bq = b as f64;
+        println!(
+            "{:>5} | {:>9.0} {:>9.0} {:>5.1}% | {:>10.0} {:>10.0} {:>5.1}% | {:>7}",
+            b,
+            cs.dtw_calls as f64 / bq,
+            cc.dtw_calls as f64 / bq,
+            pct(cs.dtw_calls as f64, cc.dtw_calls as f64),
+            seq_loads as f64 / bq,
+            coh_loads as f64 / bq,
+            pct(seq_loads as f64 / bq, coh_loads as f64 / bq),
+            cc.cohort_retired_queries,
+        );
+        if b == 64 {
+            println!("  {}", cc.cohort_report());
+        }
+    }
+}
+
 fn main() {
     let mode = std::env::args().nth(1).unwrap_or_else(|| "strips".to_string());
     match mode.as_str() {
         "staged" | "generic" | "plain" => kernel_probe(&mode),
         "strips" => strip_probe(),
-        _ => panic!("mode: strips|staged|generic|plain"),
+        "cohort" => cohort_probe(),
+        _ => panic!("mode: strips|cohort|staged|generic|plain"),
     }
 }

@@ -1,0 +1,137 @@
+//! Cohort-batched serving throughput: `Engine::search_batch` in
+//! sequential (query-major) vs cohort (strip-major) mode as the batch
+//! grows — batch ∈ {1, 4, 16, 64}. Verifies on every run that the two
+//! modes return bitwise-identical results, reports queries/sec and the
+//! **reference bytes streamed per query** (the stat-lane traffic the
+//! cohort scan exists to amortise: 16 bytes of `(mean, std)` per
+//! candidate position, computed exactly from the counters as
+//! `candidates − strip_stat_loads_saved`), asserts that bytes/query
+//! strictly decreases as the batch grows, and emits
+//! `BENCH_cohort_throughput.json` for cross-PR tracking.
+//!
+//! Scaling knobs (env): `REPRO_REF_LEN` (default 20000), `REPRO_DATASETS`
+//! (default ECG,PPG), `REPRO_QLENS` (first entry; default 128).
+
+use repro::bench_support::grid_from_env;
+use repro::bench_support::harness::{bench, fmt_secs};
+use repro::bench_support::report::BenchJson;
+use repro::data::extract_queries;
+use repro::index::{Engine, EngineConfig, Query, TopKResult};
+use repro::metrics::Counters;
+use repro::util::json::Json;
+
+/// Bytes of stat-lane traffic per candidate position: mean + std, f64.
+const STAT_LANE_BYTES: f64 = 16.0;
+
+fn merged(results: &[TopKResult]) -> Counters {
+    let mut c = Counters::new();
+    for r in results {
+        c.merge(&r.counters);
+    }
+    c
+}
+
+fn main() {
+    let (grid, mut datasets) = grid_from_env(20_000);
+    if std::env::var("REPRO_DATASETS").is_err() {
+        datasets.truncate(2); // default: a quick two-dataset A/B
+    }
+    let qlen = *grid.query_lengths.first().unwrap_or(&128);
+    let (ratio, k) = (0.1, 5usize);
+    let batches = [1usize, 4, 16, 64];
+    println!(
+        "cohort throughput (qlen {qlen}, ratio {ratio}, k={k}, ref_len {}): sequential vs cohort batch serving",
+        grid.ref_len
+    );
+    println!(
+        "{:<8} {:>5} | {:>10} {:>10} {:>8} | {:>10} {:>10} | {:>9} {:>9} {:>8}",
+        "dataset", "batch", "seq", "cohort", "speedup", "seq q/s", "coh q/s", "B/q seq", "B/q coh", "retired"
+    );
+    let mut json = BenchJson::new("cohort_throughput");
+    for &d in &datasets {
+        let reference = d.generate(grid.ref_len, grid.seed);
+        let queries: Vec<Query> = extract_queries(
+            &reference,
+            *batches.last().unwrap(),
+            qlen,
+            grid.query_noise,
+            grid.seed ^ 7,
+        )
+        .into_iter()
+        .map(|q| Query::new(q, ratio))
+        .collect();
+        let engine =
+            Engine::new(reference, &EngineConfig { shards: 2, ..Default::default() }).unwrap();
+        let mut last_cohort_bytes_per_query = f64::INFINITY;
+        for &b in &batches {
+            let batch = &queries[..b];
+            let mut run = |cohort: bool| {
+                let mut results = Vec::new();
+                let stats = bench(0, 3, || {
+                    results = if cohort {
+                        engine.search_batch(batch, k).unwrap()
+                    } else {
+                        engine.search_batch_sequential(batch, k).unwrap()
+                    };
+                });
+                (stats, results)
+            };
+            let (ts, rs) = run(false);
+            let (tc, rc) = run(true);
+            // exactness gate: the bench is meaningless if the modes diverge
+            for (i, (a, c)) in rs.iter().zip(&rc).enumerate() {
+                assert_eq!(a.matches.len(), c.matches.len(), "{} b={b} q{i}", d.name());
+                for (x, y) in a.matches.iter().zip(&c.matches) {
+                    assert_eq!(x.pos, y.pos, "{} b={b} q{i}", d.name());
+                    assert_eq!(x.dist.to_bits(), y.dist.to_bits(), "{} b={b} q{i}", d.name());
+                }
+            }
+            let (cs, cc) = (merged(&rs), merged(&rc));
+            // stat-lane traffic: sequential loads every candidate's
+            // (mean, std) per query; the cohort loads each strip once
+            let seq_bytes_per_query = cs.candidates as f64 * STAT_LANE_BYTES / b as f64;
+            let cohort_loads = cc.candidates - cc.strip_stat_loads_saved;
+            let cohort_bytes_per_query = cohort_loads as f64 * STAT_LANE_BYTES / b as f64;
+            assert!(
+                cohort_bytes_per_query < last_cohort_bytes_per_query,
+                "{} b={b}: reference bytes/query must strictly decrease as the batch grows \
+                 ({cohort_bytes_per_query} vs {last_cohort_bytes_per_query})",
+                d.name()
+            );
+            last_cohort_bytes_per_query = cohort_bytes_per_query;
+            let (seq_qps, coh_qps) = (b as f64 / ts.median, b as f64 / tc.median);
+            println!(
+                "{:<8} {:>5} | {:>10} {:>10} {:>7.2}x | {:>10.1} {:>10.1} | {:>9.0} {:>9.0} {:>8}",
+                d.name(),
+                b,
+                fmt_secs(ts.median),
+                fmt_secs(tc.median),
+                ts.median / tc.median,
+                seq_qps,
+                coh_qps,
+                seq_bytes_per_query,
+                cohort_bytes_per_query,
+                cc.cohort_retired_queries,
+            );
+            for (mode, stats, c, bytes, qps) in [
+                ("sequential", &ts, &cs, seq_bytes_per_query, seq_qps),
+                ("cohort", &tc, &cc, cohort_bytes_per_query, coh_qps),
+            ] {
+                json.push(vec![
+                    ("dataset", Json::Str(d.name().to_string())),
+                    ("batch_mode", Json::Str(mode.to_string())),
+                    ("batch", Json::Num(b as f64)),
+                    ("qlen", Json::Num(qlen as f64)),
+                    ("ratio", Json::Num(ratio)),
+                    ("k", Json::Num(k as f64)),
+                    ("seconds", Json::Num(stats.median)),
+                    ("queries_per_sec", Json::Num(qps)),
+                    ("ref_bytes_per_query", Json::Num(bytes)),
+                    ("counters", BenchJson::counters_json(c)),
+                ]);
+            }
+        }
+        println!("  {}", merged(&engine.search_batch(&queries, k).unwrap()).cohort_report());
+    }
+    json.write_and_announce();
+}

@@ -110,6 +110,15 @@ impl BenchJson {
                 "lb_order_saved_dtw_calls",
                 Json::Num(c.lb_order_saved_dtw_calls as f64),
             ),
+            ("cohort_strips", Json::Num(c.cohort_strips as f64)),
+            (
+                "cohort_retired_queries",
+                Json::Num(c.cohort_retired_queries as f64),
+            ),
+            (
+                "strip_stat_loads_saved",
+                Json::Num(c.strip_stat_loads_saved as f64),
+            ),
         ])
     }
 

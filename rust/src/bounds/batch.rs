@@ -78,11 +78,85 @@ impl StripScratch {
     /// (and any NaN a caller let through) resolve by lane index, so the
     /// order is total and deterministic.
     pub fn order_survivors(&mut self) {
-        let alive = &self.alive;
-        let lb = &self.lb;
+        fill_survivor_order(&self.lb, &self.alive, &mut self.order);
+    }
+}
+
+/// The shared survivor-ordering rule of every strip front-end: alive lanes
+/// ascending by `(lower bound, lane index)` — total and deterministic even
+/// on ties (or NaN, via `total_cmp`).
+fn fill_survivor_order(lb: &[f64], alive: &[bool], order: &mut Vec<u32>) {
+    order.clear();
+    order.extend((0..lb.len() as u32).filter(|&i| alive[i as usize]));
+    order.sort_by(|&a, &b| lb[a as usize].total_cmp(&lb[b as usize]).then(a.cmp(&b)));
+}
+
+/// One query's private lanes of a cohort strip: its lower bounds, alive
+/// flags and survivor order over the strip's candidate positions. The
+/// window statistics live once in the parent [`CohortScratch`] — that
+/// sharing is the point of the cohort scan.
+#[derive(Debug, Clone, Default)]
+pub struct QueryLanes {
+    /// best lower bound seen so far for each strip position
+    pub lb: Vec<f64>,
+    /// positions still in play for this query
+    pub alive: Vec<bool>,
+    /// survivor positions, ascending `(lb, lane)`
+    pub order: Vec<u32>,
+}
+
+impl QueryLanes {
+    /// Size the lanes for a strip of `len` positions and reset state.
+    pub fn reset(&mut self, len: usize) {
+        self.lb.clear();
+        self.lb.resize(len, 0.0);
+        self.alive.clear();
+        self.alive.resize(len, true);
         self.order.clear();
-        self.order.extend((0..lb.len() as u32).filter(|&i| alive[i as usize]));
-        self.order.sort_by(|&a, &b| lb[a as usize].total_cmp(&lb[b as usize]).then(a.cmp(&b)));
+    }
+
+    /// Fill `order` with this query's alive lanes, ascending `(lb, lane)`
+    /// — the same rule [`StripScratch::order_survivors`] applies.
+    pub fn order_survivors(&mut self) {
+        fill_survivor_order(&self.lb, &self.alive, &mut self.order);
+    }
+}
+
+/// Structure-of-arrays scratch for one strip of a **query-cohort** scan:
+/// the single-query [`StripScratch`] grown a query axis. The per-position
+/// window statistics (`mean`, `std`) are loaded **once per strip** and
+/// shared by every member; each member keeps private [`QueryLanes`]
+/// (bounds, alive flags, survivor order) because each filters against its
+/// own top-k threshold. Owned by the shard worker and reused across
+/// strips, cohorts and queries, so the steady state is allocation-free.
+#[derive(Debug, Clone, Default)]
+pub struct CohortScratch {
+    /// per-position window mean, shared by all members
+    pub mean: Vec<f64>,
+    /// per-position window std, shared by all members
+    pub std: Vec<f64>,
+    /// one lane set per cohort member (index-aligned with the members)
+    pub lanes: Vec<QueryLanes>,
+}
+
+impl CohortScratch {
+    /// Ensure one lane set per cohort member. Per-member lanes are reset
+    /// lazily by the scan ([`QueryLanes::reset`]) so retired members cost
+    /// nothing per strip.
+    pub fn ensure_members(&mut self, nq: usize) {
+        if self.lanes.len() < nq {
+            self.lanes.resize_with(nq, QueryLanes::default);
+        }
+    }
+
+    /// Load a strip's shared stat lanes in one pass (no intermediate
+    /// zero fill — this is the load the whole cohort shares).
+    pub fn load_stats(&mut self, mean: &[f64], std: &[f64]) {
+        debug_assert_eq!(mean.len(), std.len());
+        self.mean.clear();
+        self.mean.extend_from_slice(mean);
+        self.std.clear();
+        self.std.extend_from_slice(std);
     }
 }
 
@@ -250,6 +324,35 @@ mod tests {
                 assert!(lb <= d + 1e-9, "seed={seed} n={n}: {lb} > {d}");
             }
         }
+    }
+
+    #[test]
+    fn cohort_scratch_shares_stats_and_keeps_lanes_private() {
+        let mut s = CohortScratch::default();
+        s.ensure_members(3);
+        s.load_stats(&[1.0, 2.0, 3.0, 4.0], &[0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(s.mean, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.lanes.len(), 3);
+        for lane in &mut s.lanes {
+            lane.reset(4);
+        }
+        s.lanes[0].lb.copy_from_slice(&[2.0, 1.0, 3.0, 0.0]);
+        s.lanes[1].alive[2] = false;
+        s.lanes[0].order_survivors();
+        s.lanes[1].order_survivors();
+        assert_eq!(s.lanes[0].order, vec![3, 1, 0, 2]);
+        // member 1's dead lane is private — member 0 still orders all four
+        assert_eq!(s.lanes[1].order, vec![0, 1, 3]);
+        // a shorter strip re-loads the shared lanes wholesale and lane
+        // resets are per member (a retired member's stale lanes are fine)
+        s.load_stats(&[9.0, 8.0], &[0.9, 0.8]);
+        assert_eq!(s.std, vec![0.9, 0.8]);
+        s.lanes[0].reset(2);
+        assert_eq!(s.lanes[0].lb, vec![0.0; 2]);
+        assert!(s.lanes[0].alive.iter().all(|&a| a));
+        // growing never shrinks the lane table
+        s.ensure_members(2);
+        assert_eq!(s.lanes.len(), 3);
     }
 
     #[test]

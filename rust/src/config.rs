@@ -74,6 +74,9 @@ pub struct ServeConfig {
     pub artifacts_dir: String,
     /// bounded queue depth between router and workers
     pub queue_depth: usize,
+    /// in-flight queries the serve loop coalesces into one cohort-batched
+    /// submit (1 = serve each query solo)
+    pub batch_window: usize,
 }
 
 impl Default for ServeConfig {
@@ -83,6 +86,7 @@ impl Default for ServeConfig {
             batch: 64,
             artifacts_dir: "artifacts".into(),
             queue_depth: 64,
+            batch_window: 1,
         }
     }
 }
@@ -125,6 +129,7 @@ impl Config {
             ("serve", "batch") => self.serve.batch = v.usize()?,
             ("serve", "artifacts_dir") => self.serve.artifacts_dir = v.string()?,
             ("serve", "queue_depth") => self.serve.queue_depth = v.usize()?,
+            ("serve", "batch_window") => self.serve.batch_window = v.usize()?,
             _ => bail!("unknown config key"),
         }
         Ok(())
@@ -288,6 +293,9 @@ mod tests {
         assert_eq!(c.serve.shards, 4);
         // untouched keys keep defaults
         assert_eq!(c.serve.batch, 64);
+        assert_eq!(c.serve.batch_window, 1);
+        let c2 = Config::from_str("[serve]\nbatch_window = 16\n").unwrap();
+        assert_eq!(c2.serve.batch_window, 16);
     }
 
     #[test]

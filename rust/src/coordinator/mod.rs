@@ -14,7 +14,10 @@
 //! * [`state`] — the shared threshold (the serving analogue of the
 //!   paper's upper-bound tightening: every shard's k-th-best improvement
 //!   immediately tightens every other shard's abandon threshold)
-//! * [`worker`] — shard scan workers, each collecting a local top-k
+//! * [`worker`] — shard scan workers, each collecting a local top-k;
+//!   a worker serves single-query shards and whole query *cohorts*
+//!   (one strip pass over its shard answering a batch of same-shape
+//!   queries, each with a private threshold)
 //! * [`batcher`] — panels of candidates through the AOT XLA prefilter
 //! * [`router`] — per-query fan-out/fan-in with deterministic
 //!   `(dist, pos)` merge of the shards' result heaps

@@ -152,6 +152,10 @@ pub struct QueryResponse {
     pub candidates: u64,
     pub pruned: u64,
     pub dtw_calls: u64,
+    /// how many queries shared the scan that served this response
+    /// (cohort-batched serving); 1 = served solo. Absent on the wire for
+    /// pre-cohort responses, which parse as 1.
+    pub cohort: usize,
 }
 
 impl QueryResponse {
@@ -178,6 +182,7 @@ impl QueryResponse {
             ("candidates", Json::Num(self.candidates as f64)),
             ("pruned", Json::Num(self.pruned as f64)),
             ("dtw_calls", Json::Num(self.dtw_calls as f64)),
+            ("cohort", Json::Num(self.cohort as f64)),
         ])
         .to_string()
     }
@@ -217,6 +222,8 @@ impl QueryResponse {
             candidates: num("candidates")? as u64,
             pruned: num("pruned")? as u64,
             dtw_calls: num("dtw_calls")? as u64,
+            // pre-cohort responses have no field: they were served solo
+            cohort: v.get("cohort").and_then(Json::as_usize).unwrap_or(1),
         })
     }
 }
@@ -301,6 +308,7 @@ mod tests {
             candidates: 100,
             pruned: 90,
             dtw_calls: 10,
+            cohort: 4,
         };
         assert_eq!(QueryResponse::from_json(&r.to_json()).unwrap(), r);
     }
@@ -310,6 +318,8 @@ mod tests {
         let line = r#"{"id":1,"pos":42,"dist":3.5,"latency_ms":1,"candidates":10,"pruned":9,"dtw_calls":1}"#;
         let r = QueryResponse::from_json(line).unwrap();
         assert_eq!(r.matches, vec![Match { pos: 42, dist: 3.5 }]);
+        // pre-cohort lines carry no cohort field: served solo
+        assert_eq!(r.cohort, 1);
     }
 
     #[test]
@@ -327,6 +337,7 @@ mod tests {
             candidates: 1,
             pruned: 0,
             dtw_calls: 1,
+            cohort: 1,
         };
         assert!(!ErrorResponse::is_error_line(&ok.to_json()));
     }

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::state::SharedUb;
-use crate::coordinator::worker::Job;
+use crate::coordinator::worker::{CohortJob, Job, WorkItem};
 use crate::distances::metric::Metric;
 use crate::index::ref_index::BucketStats;
 use crate::metrics::Counters;
@@ -55,7 +55,7 @@ pub fn shard_ranges(total: usize, shards: usize) -> Vec<(usize, usize)> {
 /// deterministic.
 #[allow(clippy::too_many_arguments)]
 pub fn route_query_topk(
-    workers: &[Sender<Job>],
+    workers: &[Sender<WorkItem>],
     reference: &Arc<Vec<f64>>,
     query_raw: &[f64],
     w: usize,
@@ -111,7 +111,7 @@ pub fn route_query_topk(
             reply: reply_tx.clone(),
         };
         workers[i % workers.len()]
-            .send(job)
+            .send(WorkItem::Single(job))
             .map_err(|_| anyhow!("worker pool shut down"))?;
         dispatched += 1;
     }
@@ -136,9 +136,108 @@ pub fn route_query_topk(
     Ok((all, counters))
 }
 
+/// Fan one whole **query cohort** out over the worker channels: every
+/// shard runs one strip-major pass serving all `queries` at once
+/// ([`crate::search::cohort::scan_cohort_topk`]), loading each strip's
+/// window-stat lanes once for the cohort instead of once per query.
+/// Blocks until every shard reports; returns, **in cohort order**, each
+/// query's k best matches over the union of shards (ascending
+/// `(dist, pos)`, k clamped to the candidate count) with its per-query
+/// counters.
+///
+/// Queries must share a length (the caller groups by shape); `w` and
+/// `metric` apply to every member. Per-query thresholds are private — one
+/// [`SharedUb`] per member — so each member's result is **bitwise
+/// identical** to what a [`route_query_topk`] fan-out of that query alone
+/// would return (pinned by `tests/conformance_cohort.rs`), including the
+/// same cross-shard exact-tie caveat documented there.
+#[allow(clippy::too_many_arguments)]
+pub fn route_cohort_topk(
+    workers: &[Sender<WorkItem>],
+    reference: &Arc<Vec<f64>>,
+    queries: &[&[f64]],
+    w: usize,
+    metric: Metric,
+    suite: Suite,
+    k: usize,
+    sync_every: usize,
+    denv: Option<Arc<DataEnvelopes>>,
+    stats: Arc<BucketStats>,
+) -> Result<Vec<(Vec<Match>, Counters)>> {
+    anyhow::ensure!(!queries.is_empty(), "empty cohort");
+    anyhow::ensure!(k >= 1, "k must be >= 1");
+    let n = queries[0].len();
+    anyhow::ensure!(n > 0, "empty query");
+    anyhow::ensure!(
+        queries.iter().all(|q| q.len() == n),
+        "cohort members must share a query length"
+    );
+    anyhow::ensure!(reference.len() >= n, "reference shorter than query");
+    for q in queries {
+        validate_series("query", q)?;
+    }
+    metric.validate()?;
+    let w = metric.effective_window(n, w);
+    anyhow::ensure!(stats.qlen() == n, "stats bucket is for qlen {}, cohort has {n}", stats.qlen());
+    let total = reference.len() - n + 1;
+    let k = k.min(total);
+    let ranges = shard_ranges(total, workers.len());
+    // one private threshold per member: cohort batching shares reference
+    // streaming, never abandon state
+    let shareds: Vec<Arc<SharedUb>> =
+        queries.iter().map(|_| SharedUb::new(f64::INFINITY)).collect();
+    let (reply_tx, reply_rx) = channel();
+    let mut dispatched = 0usize;
+    for (i, &(start, end)) in ranges.iter().enumerate() {
+        let job = CohortJob {
+            reference: Arc::clone(reference),
+            start,
+            end,
+            members: queries
+                .iter()
+                .zip(&shareds)
+                .map(|(q, s)| (QueryContext::with_metric_pooled(q, w, metric), Arc::clone(s)))
+                .collect(),
+            denv: denv.clone(),
+            stats: Arc::clone(&stats),
+            suite,
+            k,
+            sync_every,
+            reply: reply_tx.clone(),
+        };
+        workers[i % workers.len()]
+            .send(WorkItem::Cohort(job))
+            .map_err(|_| anyhow!("worker pool shut down"))?;
+        dispatched += 1;
+    }
+    drop(reply_tx);
+    let mut per_query: Vec<(Vec<Match>, Counters)> =
+        queries.iter().map(|_| (Vec::new(), Counters::new())).collect();
+    for _ in 0..dispatched {
+        let shard = reply_rx.recv().map_err(|_| anyhow!("worker died mid-cohort"))?;
+        anyhow::ensure!(shard.len() == queries.len(), "cohort shard reply size mismatch");
+        for ((matches, counters), (m, c)) in per_query.iter_mut().zip(shard) {
+            matches.extend(m);
+            counters.merge(&c);
+        }
+    }
+    for (matches, _) in per_query.iter_mut() {
+        // shards cover disjoint ranges: no duplicates; rank and cut
+        matches.sort_by(|a, b| {
+            a.dist
+                .partial_cmp(&b.dist)
+                .expect("no NaN distances")
+                .then(a.pos.cmp(&b.pos))
+        });
+        matches.truncate(k);
+        anyhow::ensure!(!matches.is_empty(), "no match found");
+    }
+    Ok(per_query)
+}
+
 /// The scalar (`k = 1`) fan-out the seed exposed: best match + counters.
 pub fn route_query(
-    workers: &[Sender<Job>],
+    workers: &[Sender<WorkItem>],
     reference: &Arc<Vec<f64>>,
     query_raw: &[f64],
     w: usize,

@@ -17,24 +17,19 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use anyhow::Result;
-#[cfg(feature = "xla")]
-use anyhow::anyhow;
+use anyhow::{anyhow, Result};
 
 #[cfg(feature = "xla")]
 use crate::coordinator::batcher;
 use crate::coordinator::protocol::{QueryRequest, QueryResponse};
-use crate::coordinator::router::route_query_topk;
-use crate::coordinator::worker::{worker_loop, Job, DEFAULT_SYNC_EVERY};
-#[cfg(feature = "xla")]
+use crate::coordinator::router::{route_cohort_topk, route_query_topk};
+use crate::coordinator::worker::{worker_loop, WorkItem, DEFAULT_SYNC_EVERY};
 use crate::distances::metric::Metric;
 use crate::index::ref_index::RefIndex;
 use crate::metrics::{Counters, Timer};
 #[cfg(feature = "xla")]
 use crate::runtime::XlaEngine;
-#[cfg(feature = "xla")]
-use crate::search::subsequence::Match;
-use crate::search::subsequence::{validate_series, window_cells, ScanMode};
+use crate::search::subsequence::{validate_series, window_cells, Match, ScanMode};
 use crate::search::suite::Suite;
 
 /// Service construction knobs (see also [`crate::config::ServeConfig`]).
@@ -47,6 +42,11 @@ pub struct ServiceConfig {
     /// default, the legacy scalar loop for A/B comparison (both return
     /// bitwise-identical matches)
     pub scan_mode: ScanMode,
+    /// how many in-flight wire queries the serve loop coalesces into one
+    /// [`Service::submit_batch`] call (`repro serve --batch-window`);
+    /// same-shape queries inside the window form cohorts that share one
+    /// strip pass over the reference. 1 = serve each query solo.
+    pub batch_window: usize,
     /// artifacts directory; `None` disables the XLA suite. Ignored when
     /// the crate is built without the `xla` feature.
     pub artifacts_dir: Option<std::path::PathBuf>,
@@ -58,6 +58,7 @@ impl Default for ServiceConfig {
             shards: 2,
             sync_every: DEFAULT_SYNC_EVERY,
             scan_mode: ScanMode::default(),
+            batch_window: 1,
             artifacts_dir: None,
         }
     }
@@ -107,7 +108,7 @@ fn engine_loop(
 pub struct Service {
     reference: Arc<Vec<f64>>,
     index: Arc<RefIndex>,
-    senders: Vec<Sender<Job>>,
+    senders: Vec<Sender<WorkItem>>,
     handles: Vec<JoinHandle<()>>,
     #[cfg(feature = "xla")]
     engine_tx: Option<Sender<EngineJob>>,
@@ -115,6 +116,7 @@ pub struct Service {
     engine_handle: Option<JoinHandle<()>>,
     sync_every: usize,
     scan_mode: ScanMode,
+    batch_window: usize,
     busy: Arc<AtomicU64>,
     served: AtomicU64,
 }
@@ -133,7 +135,7 @@ impl Service {
         let mut senders = Vec::new();
         let mut handles = Vec::new();
         for i in 0..cfg.shards {
-            let (tx, rx) = channel::<Job>();
+            let (tx, rx) = channel::<WorkItem>();
             let busy = Arc::clone(&busy);
             handles.push(
                 std::thread::Builder::new()
@@ -166,6 +168,7 @@ impl Service {
             engine_handle,
             sync_every: cfg.sync_every,
             scan_mode: cfg.scan_mode,
+            batch_window: cfg.batch_window.max(1),
             busy,
             served: AtomicU64::new(0),
         })
@@ -275,21 +278,33 @@ impl Service {
             }
         };
         self.served.fetch_add(1, Ordering::Relaxed);
+        Ok(Self::make_response(req.id, matches, &counters, timer.elapsed_secs() * 1e3, 1))
+    }
+
+    /// Assemble the wire response for one answered query.
+    fn make_response(
+        id: u64,
+        matches: Vec<Match>,
+        counters: &Counters,
+        latency_ms: f64,
+        cohort: usize,
+    ) -> QueryResponse {
         let pruned = counters.lb_kim_prunes
             + counters.lb_keogh_eq_prunes
             + counters.lb_keogh_ec_prunes
             + counters.xla_prunes;
         let best = matches[0];
-        Ok(QueryResponse {
-            id: req.id,
+        QueryResponse {
+            id,
             pos: best.pos,
             dist: best.dist,
             matches,
-            latency_ms: timer.elapsed_secs() * 1e3,
+            latency_ms,
             candidates: counters.candidates,
             pruned,
             dtw_calls: counters.dtw_calls,
-        })
+            cohort,
+        }
     }
 
     /// Ablation A3 entry: resolve a query entirely on the XLA side.
@@ -315,7 +330,121 @@ impl Service {
             candidates: counters.candidates,
             pruned: counters.xla_prunes,
             dtw_calls: counters.dtw_calls,
+            cohort: 1,
         })
+    }
+
+    /// Serve a window of requests together, cohort-batching where shapes
+    /// allow: requests that share *(query length, effective window,
+    /// metric, suite, k)* — and can run on the strip pipeline — form
+    /// cohorts served by **one strip pass** over the reference each
+    /// ([`route_cohort_topk`]); everything else falls back to
+    /// [`Service::submit`]. One answer per request, index-for-index with
+    /// the input, each bitwise-identical to what a solo `submit` of that
+    /// request would return. A request that fails (validation or
+    /// execution) yields its own `Err` without affecting its neighbours.
+    ///
+    /// Cohort-served responses report the cohort's wall-clock time as
+    /// their latency (they were answered by the same scan) and carry the
+    /// cohort size in [`QueryResponse::cohort`].
+    pub fn submit_batch(&self, reqs: &[QueryRequest]) -> Vec<Result<QueryResponse>> {
+        let mut out: Vec<Option<Result<QueryResponse>>> = reqs.iter().map(|_| None).collect();
+        // cohort key: (qlen, effective window, metric, suite, k)
+        type Key = (usize, usize, Metric, Suite, usize);
+        let mut cohorts: Vec<(Key, Vec<usize>)> = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            let eligible = self.scan_mode == ScanMode::Strip
+                && req.suite != Suite::UcrMonXla
+                && req.k >= 1
+                && !req.query.is_empty()
+                && req.query.len() <= self.reference.len()
+                && validate_series("query", &req.query).is_ok()
+                && req.metric.validate().is_ok();
+            if !eligible {
+                // solo serving reproduces every existing error/edge path
+                out[i] = Some(self.submit(req));
+                continue;
+            }
+            let n = req.query.len();
+            let w = req.metric.effective_window(n, window_cells(n, req.window_ratio));
+            let key: Key = (n, w, req.metric, req.suite, req.k);
+            match cohorts.iter_mut().find(|(k2, _)| *k2 == key) {
+                Some((_, idxs)) => idxs.push(i),
+                None => cohorts.push((key, vec![i])),
+            }
+        }
+        for ((n, w, metric, suite, k), idxs) in cohorts {
+            if idxs.len() == 1 {
+                let qi = idxs[0];
+                out[qi] = Some(self.submit(&reqs[qi]));
+                continue;
+            }
+            match self.submit_cohort(reqs, n, w, metric, suite, k, &idxs) {
+                Ok(responses) => {
+                    for (&qi, resp) in idxs.iter().zip(responses) {
+                        out[qi] = Some(Ok(resp));
+                    }
+                }
+                // a cohort-level failure (e.g. worker pool gone) fails
+                // every member — there is no partial answer to salvage
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for &qi in &idxs {
+                        out[qi] = Some(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+        out.into_iter().map(|r| r.expect("every request answered")).collect()
+    }
+
+    /// One cohort through the shared strip pass: per-member index
+    /// accounting (first lookup builds, the rest hit), one
+    /// [`route_cohort_topk`] fan-out, one response per member.
+    #[allow(clippy::too_many_arguments)]
+    fn submit_cohort(
+        &self,
+        reqs: &[QueryRequest],
+        n: usize,
+        w: usize,
+        metric: Metric,
+        suite: Suite,
+        k: usize,
+        idxs: &[usize],
+    ) -> Result<Vec<QueryResponse>> {
+        let timer = Timer::start();
+        let mut pres = Vec::with_capacity(idxs.len());
+        let mut artifacts = None;
+        for _ in idxs {
+            let mut pre = Counters::new();
+            artifacts = Some(self.index.artifacts_for(n, w, metric, suite, &mut pre)?);
+            pres.push(pre);
+        }
+        let (stats, denv) = artifacts.expect("cohort has members");
+        let queries: Vec<&[f64]> = idxs.iter().map(|&qi| reqs[qi].query.as_slice()).collect();
+        let per_query = route_cohort_topk(
+            &self.senders,
+            &self.reference,
+            &queries,
+            w,
+            metric,
+            suite,
+            k,
+            self.sync_every,
+            denv,
+            stats,
+        )?;
+        let latency_ms = timer.elapsed_secs() * 1e3;
+        self.served.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+        Ok(idxs
+            .iter()
+            .zip(per_query)
+            .zip(pres)
+            .map(|((&qi, (matches, mut counters)), pre)| {
+                counters.merge(&pre);
+                Self::make_response(reqs[qi].id, matches, &counters, latency_ms, idxs.len())
+            })
+            .collect())
     }
 
     /// Workers currently scanning (for backpressure/introspection).
@@ -326,6 +455,12 @@ impl Service {
     /// The scan front-end this service's shard workers run.
     pub fn scan_mode(&self) -> ScanMode {
         self.scan_mode
+    }
+
+    /// How many in-flight queries the serve loop coalesces per
+    /// [`Service::submit_batch`] call.
+    pub fn batch_window(&self) -> usize {
+        self.batch_window
     }
 }
 
@@ -523,6 +658,82 @@ mod tests {
             assert_eq!(x.pos, y.pos);
             assert_eq!(x.dist.to_bits(), y.dist.to_bits());
         }
+    }
+
+    #[test]
+    fn submit_batch_cohorts_match_solo_submits_bitwise() {
+        let r = Dataset::Ecg.generate(2200, 33);
+        let qs = crate::data::extract_queries(&r, 4, 128, 0.1, 34);
+        let svc =
+            Service::new(r, &ServiceConfig { shards: 2, batch_window: 8, ..Default::default() })
+                .unwrap();
+        assert_eq!(svc.batch_window(), 8);
+        let reqs: Vec<QueryRequest> = qs
+            .into_iter()
+            .enumerate()
+            .map(|(i, q)| QueryRequest {
+                id: i as u64,
+                query: q,
+                window_ratio: 0.1,
+                suite: Suite::UcrMon,
+                k: 3,
+                metric: Metric::Cdtw,
+            })
+            .collect();
+        let batch = svc.submit_batch(&reqs);
+        assert_eq!(batch.len(), reqs.len());
+        for (req, got) in reqs.iter().zip(&batch) {
+            let got = got.as_ref().unwrap();
+            assert_eq!(got.id, req.id, "index-for-index alignment");
+            assert_eq!(got.cohort, reqs.len(), "all four share one cohort");
+            let want = svc.submit(req).unwrap();
+            assert_eq!(got.matches.len(), want.matches.len());
+            for (x, y) in got.matches.iter().zip(&want.matches) {
+                assert_eq!(x.pos, y.pos);
+                assert_eq!(x.dist.to_bits(), y.dist.to_bits());
+            }
+        }
+        // 4 cohort answers + 4 solo re-checks
+        assert_eq!(svc.queries_served(), 8);
+    }
+
+    #[test]
+    fn submit_batch_mixes_cohorts_solos_and_errors() {
+        let r = Dataset::Ppg.generate(1500, 41);
+        let svc = Service::new(r.clone(), &ServiceConfig::default()).unwrap();
+        let qs = crate::data::extract_queries(&r, 2, 96, 0.1, 42);
+        let mk = |id: u64, query: Vec<f64>, k: usize| QueryRequest {
+            id,
+            query,
+            window_ratio: 0.1,
+            suite: Suite::UcrMon,
+            k,
+            metric: Metric::Cdtw,
+        };
+        let mut bad = qs[0].clone();
+        bad[5] = f64::NAN;
+        let reqs = vec![
+            mk(0, qs[0].clone(), 2),                    // cohort A
+            mk(1, bad, 2),                              // invalid: solo error
+            mk(2, qs[1].clone(), 2),                    // cohort A
+            mk(3, qs[0][..64].to_vec(), 2),             // different length: solo
+        ];
+        let got = svc.submit_batch(&reqs);
+        assert_eq!(got.len(), 4);
+        let a = got[0].as_ref().unwrap();
+        let c = got[2].as_ref().unwrap();
+        assert_eq!(a.cohort, 2);
+        assert_eq!(c.cohort, 2);
+        assert_eq!(a.id, 0);
+        assert_eq!(c.id, 2);
+        let err = got[1].as_ref().unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        let solo = got[3].as_ref().unwrap();
+        assert_eq!(solo.cohort, 1);
+        // the bad request did not poison its neighbours: spot-check one
+        let want = svc.submit(&reqs[2]).unwrap();
+        assert_eq!(c.pos, want.pos);
+        assert_eq!(c.dist.to_bits(), want.dist.to_bits());
     }
 
     #[test]

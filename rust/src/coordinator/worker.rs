@@ -12,11 +12,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
-use crate::bounds::batch::DEFAULT_STRIP;
+use crate::bounds::batch::{CohortScratch, DEFAULT_STRIP};
 use crate::coordinator::state::SharedUb;
 use crate::index::ref_index::BucketStats;
 use crate::index::topk::TopK;
 use crate::metrics::Counters;
+use crate::search::cohort::{scan_cohort_topk, CohortMember, CohortPool};
 use crate::search::subsequence::{
     scan_topk_policy_mode, DataEnvelopes, Match, QueryContext, ScanMode, ScanStats,
 };
@@ -127,6 +128,42 @@ pub fn scan_shard(
     .next()
 }
 
+/// A unit of work dispatched to a worker thread: one shard of one query,
+/// or one shard of a whole query cohort.
+pub enum WorkItem {
+    Single(Job),
+    Cohort(CohortJob),
+}
+
+/// One shard of a **query-cohort** scan: the worker runs one strip-major
+/// pass over `[start, end)` serving every member at once
+/// ([`crate::search::cohort::scan_cohort_topk`]); each member carries its
+/// own private cross-shard threshold, so per-query semantics are exactly
+/// those of a [`Job`]-per-query fan-out.
+pub struct CohortJob {
+    pub reference: Arc<Vec<f64>>,
+    pub start: usize,
+    pub end: usize,
+    /// one (fresh context, cross-shard threshold) pair per cohort member,
+    /// in cohort order — contexts are built pooled
+    /// ([`QueryContext::with_metric_pooled`]): the worker's shared
+    /// [`CohortPool`] provides the kernel buffers
+    pub members: Vec<(QueryContext, Arc<SharedUb>)>,
+    /// reference envelopes served by the shared index (cohorts always
+    /// run over an indexed reference)
+    pub denv: Option<Arc<DataEnvelopes>>,
+    /// precomputed window stats — mandatory: the shared strip loads are
+    /// the point of the cohort scan
+    pub stats: Arc<BucketStats>,
+    pub suite: Suite,
+    /// how many results each member wants
+    pub k: usize,
+    pub sync_every: usize,
+    /// per-member (local top-k ascending, per-member counters), in the
+    /// same order as `members`
+    pub reply: Sender<Vec<(Vec<Match>, Counters)>>,
+}
+
 /// A unit of shard work dispatched to a worker thread.
 pub struct Job {
     pub reference: Arc<Vec<f64>>,
@@ -149,27 +186,60 @@ pub struct Job {
     pub reply: Sender<(Vec<Match>, Counters)>,
 }
 
-/// Worker loop: run jobs until the channel closes.
-pub fn worker_loop(rx: Receiver<Job>, busy: Arc<AtomicU64>) {
-    while let Ok(mut job) = rx.recv() {
+/// Worker loop: run jobs until the channel closes. The worker owns one
+/// [`CohortPool`] (kernel workspace + z-buffer) and one [`CohortScratch`]
+/// (shared stat lanes + per-query bound lanes), reused across every cohort
+/// — and every query of every cohort — it ever serves, so the steady
+/// state allocates nothing per query.
+pub fn worker_loop(rx: Receiver<WorkItem>, busy: Arc<AtomicU64>) {
+    let mut pool = CohortPool::default();
+    let mut scratch = CohortScratch::default();
+    while let Ok(item) = rx.recv() {
         busy.fetch_add(1, Ordering::Relaxed);
-        let mut counters = Counters::new();
-        let topk = scan_shard_topk(
-            &job.reference,
-            job.start,
-            job.end,
-            &mut job.ctx,
-            job.denv.as_deref(),
-            job.stats.as_deref(),
-            job.suite,
-            job.scan_mode,
-            job.k,
-            &job.shared,
-            job.sync_every,
-            &mut counters,
-        );
-        // receiver may have given up (service shutdown): ignore send errors
-        let _ = job.reply.send((topk.into_sorted(), counters));
+        match item {
+            WorkItem::Single(mut job) => {
+                let mut counters = Counters::new();
+                let topk = scan_shard_topk(
+                    &job.reference,
+                    job.start,
+                    job.end,
+                    &mut job.ctx,
+                    job.denv.as_deref(),
+                    job.stats.as_deref(),
+                    job.suite,
+                    job.scan_mode,
+                    job.k,
+                    &job.shared,
+                    job.sync_every,
+                    &mut counters,
+                );
+                // receiver may have given up (service shutdown): ignore
+                // send errors
+                let _ = job.reply.send((topk.into_sorted(), counters));
+            }
+            WorkItem::Cohort(job) => {
+                let mut members: Vec<CohortMember> = job
+                    .members
+                    .into_iter()
+                    .map(|(ctx, shared)| CohortMember::with_shared(ctx, job.k, shared))
+                    .collect();
+                scan_cohort_topk(
+                    &job.reference,
+                    job.start,
+                    job.end,
+                    &mut members,
+                    &job.stats,
+                    job.denv.as_deref(),
+                    job.suite,
+                    job.sync_every,
+                    &mut scratch,
+                    &mut pool,
+                );
+                let _ = job.reply.send(
+                    members.into_iter().map(|m| (m.topk.into_sorted(), m.counters)).collect(),
+                );
+            }
+        }
         busy.fetch_sub(1, Ordering::Relaxed);
     }
 }

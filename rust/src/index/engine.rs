@@ -6,6 +6,14 @@
 //! envelope arrays; every later query (and every later batch) reuses them
 //! for free. `benches/index_amortization.rs` measures the per-query cost
 //! falling as the batch grows.
+//!
+//! Batches amortise the *streaming* too: in the default
+//! [`BatchMode::Cohort`], same-shape queries share one strip-major pass
+//! over the reference (`search::cohort`), so a batch of Q queries streams
+//! the reference's stat lanes once instead of Q times —
+//! `benches/cohort_throughput.rs` measures reference bytes per query
+//! falling as the batch grows, with results pinned bitwise-identical to
+//! sequential serving by `tests/conformance_cohort.rs`.
 
 use std::sync::atomic::AtomicU64;
 use std::sync::mpsc::{channel, Sender};
@@ -14,8 +22,8 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-use crate::coordinator::router::route_query_topk;
-use crate::coordinator::worker::{worker_loop, Job, DEFAULT_SYNC_EVERY};
+use crate::coordinator::router::{route_cohort_topk, route_query_topk};
+use crate::coordinator::worker::{worker_loop, WorkItem, DEFAULT_SYNC_EVERY};
 use crate::distances::metric::Metric;
 use crate::index::ref_index::RefIndex;
 use crate::metrics::Counters;
@@ -59,6 +67,22 @@ impl TopKResult {
     }
 }
 
+/// How [`Engine::search_batch`] walks a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchMode {
+    /// Query-major: each query is an independent [`Engine::search_one`]
+    /// fan-out, streaming the reference once per query. The A/B baseline.
+    Sequential,
+    /// Strip-major (the default): same-shape queries form *cohorts* and
+    /// each cohort runs one shared strip pass over the reference — each
+    /// strip's window-stat lanes are loaded once for the whole cohort.
+    /// Results are bitwise-identical to `Sequential`
+    /// (`tests/conformance_cohort.rs`). Requires [`ScanMode::Strip`]
+    /// workers; a scalar-mode engine falls back to `Sequential`.
+    #[default]
+    Cohort,
+}
+
 /// Engine construction knobs.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -72,6 +96,10 @@ pub struct EngineConfig {
     /// legacy scalar loop stays callable for A/B — both return bitwise
     /// identical matches)
     pub scan_mode: ScanMode,
+    /// batch front-end: cohort (strip-major, shared reference streaming)
+    /// by default, sequential as the A/B baseline — both return bitwise
+    /// identical results
+    pub batch: BatchMode,
 }
 
 impl Default for EngineConfig {
@@ -81,6 +109,7 @@ impl Default for EngineConfig {
             sync_every: DEFAULT_SYNC_EVERY,
             suite: Suite::UcrMon,
             scan_mode: ScanMode::default(),
+            batch: BatchMode::default(),
         }
     }
 }
@@ -91,7 +120,8 @@ pub struct Engine {
     suite: Suite,
     sync_every: usize,
     scan_mode: ScanMode,
-    senders: Vec<Sender<Job>>,
+    batch: BatchMode,
+    senders: Vec<Sender<WorkItem>>,
     handles: Vec<JoinHandle<()>>,
     busy: Arc<AtomicU64>,
 }
@@ -114,7 +144,7 @@ impl Engine {
         let mut senders = Vec::new();
         let mut handles = Vec::new();
         for i in 0..cfg.shards {
-            let (tx, rx) = channel::<Job>();
+            let (tx, rx) = channel::<WorkItem>();
             let busy = Arc::clone(&busy);
             handles.push(
                 std::thread::Builder::new()
@@ -128,6 +158,7 @@ impl Engine {
             suite: cfg.suite,
             sync_every: cfg.sync_every,
             scan_mode: cfg.scan_mode,
+            batch: cfg.batch,
             senders,
             handles,
             busy,
@@ -180,9 +211,108 @@ impl Engine {
     }
 
     /// Answer a batch of top-k queries, reusing the index across the
-    /// whole batch. Results are in query order.
+    /// whole batch.
+    ///
+    /// **Result-ordering contract:** the returned vector aligns
+    /// index-for-index with `queries` — `results[i]` always answers
+    /// `queries[i]` — even though [`BatchMode::Cohort`] groups same-shape
+    /// queries into cohorts and evaluates them out of input order
+    /// (property-tested on mixed-length batches in
+    /// `tests/conformance_cohort.rs`). Results are also bitwise-identical
+    /// to `queries.len()` independent [`Engine::search_one`] calls in
+    /// either batch mode.
     pub fn search_batch(&self, queries: &[Query], k: usize) -> Result<Vec<TopKResult>> {
+        match (self.batch, self.scan_mode) {
+            // the cohort scan is strip-major by construction: a
+            // scalar-mode engine serves batches sequentially
+            (BatchMode::Sequential, _) | (_, ScanMode::Scalar) => {
+                self.search_batch_sequential(queries, k)
+            }
+            (BatchMode::Cohort, ScanMode::Strip) => self.search_batch_cohort(queries, k),
+        }
+    }
+
+    /// The query-major A/B baseline: every query an independent
+    /// [`Engine::search_one`] fan-out, streaming the reference once per
+    /// query. Same results (bitwise) and the same index-for-index
+    /// ordering contract as [`Engine::search_batch`].
+    pub fn search_batch_sequential(&self, queries: &[Query], k: usize) -> Result<Vec<TopKResult>> {
         queries.iter().map(|q| self.search_one(q, k)).collect()
+    }
+
+    /// Strip-major batch serving: group `queries` into cohorts of equal
+    /// (length, window, metric), run each cohort as one shared strip pass
+    /// over the reference, and scatter the per-query results back to
+    /// input order. Singleton cohorts take the [`Engine::search_one`]
+    /// path verbatim.
+    fn search_batch_cohort(&self, queries: &[Query], k: usize) -> Result<Vec<TopKResult>> {
+        anyhow::ensure!(k >= 1, "k must be >= 1");
+        // admission-check the whole batch up front so a malformed late
+        // query cannot leave earlier cohorts half-served
+        for q in queries {
+            anyhow::ensure!(!q.query.is_empty(), "empty query");
+            validate_series("query", &q.query)?;
+            q.metric.validate()?;
+        }
+        let mut results: Vec<Option<TopKResult>> = queries.iter().map(|_| None).collect();
+        // cohort key: (query length, effective window, metric) — suite and
+        // scan mode are engine-wide. Batches are small: linear grouping.
+        let mut cohorts: Vec<(usize, usize, Metric, Vec<usize>)> = Vec::new();
+        for (qi, q) in queries.iter().enumerate() {
+            if q.query.len() > self.index.reference_len() {
+                // zero candidate windows: the search_one degenerate answer
+                results[qi] =
+                    Some(TopKResult { matches: Vec::new(), counters: Counters::new() });
+                continue;
+            }
+            let n = q.query.len();
+            let w = q.metric.effective_window(n, window_cells(n, q.window_ratio));
+            match cohorts
+                .iter_mut()
+                .find(|(cn, cw, cm, _)| *cn == n && *cw == w && *cm == q.metric)
+            {
+                Some((_, _, _, idxs)) => idxs.push(qi),
+                None => cohorts.push((n, w, q.metric, vec![qi])),
+            }
+        }
+        for (n, w, metric, idxs) in cohorts {
+            if idxs.len() == 1 {
+                let qi = idxs[0];
+                results[qi] = Some(self.search_one(&queries[qi], k)?);
+                continue;
+            }
+            // per-query index accounting, exactly as sequential serving:
+            // the first member's lookup builds, the rest hit the cache
+            let mut pres = Vec::with_capacity(idxs.len());
+            let mut artifacts = None;
+            for _ in &idxs {
+                let mut pre = Counters::new();
+                artifacts = Some(self.index.artifacts_for(n, w, metric, self.suite, &mut pre)?);
+                pres.push(pre);
+            }
+            let (stats, denv) = artifacts.expect("cohort has members");
+            let qrefs: Vec<&[f64]> =
+                idxs.iter().map(|&qi| queries[qi].query.as_slice()).collect();
+            let per_query = route_cohort_topk(
+                &self.senders,
+                self.index.reference(),
+                &qrefs,
+                w,
+                metric,
+                self.suite,
+                k,
+                self.sync_every,
+                denv,
+                stats,
+            )?;
+            for ((&qi, (matches, mut counters)), pre) in
+                idxs.iter().zip(per_query).zip(pres)
+            {
+                counters.merge(&pre);
+                results[qi] = Some(TopKResult { matches, counters });
+            }
+        }
+        Ok(results.into_iter().map(|r| r.expect("every query answered")).collect())
     }
 
     /// Workers currently scanning.
@@ -193,6 +323,11 @@ impl Engine {
     /// The scan front-end this engine's shard workers run.
     pub fn scan_mode(&self) -> ScanMode {
         self.scan_mode
+    }
+
+    /// The batch front-end [`Engine::search_batch`] uses.
+    pub fn batch_mode(&self) -> BatchMode {
+        self.batch
     }
 }
 
@@ -234,6 +369,66 @@ mod tests {
         let (hits, misses) = engine.index().hit_counts();
         assert_eq!(misses, 2, "one stats bucket + one envelope build");
         assert_eq!(hits, 4, "two later queries x two artifacts");
+    }
+
+    #[test]
+    fn cohort_batch_is_bitwise_identical_to_sequential_batch() {
+        let r = Dataset::Ecg.generate(2600, 12);
+        let qs: Vec<Query> = extract_queries(&r, 5, 128, 0.1, 13)
+            .into_iter()
+            .map(|q| Query::new(q, 0.1))
+            .collect();
+        let engine = Engine::new(r, &EngineConfig { shards: 3, ..Default::default() }).unwrap();
+        assert_eq!(engine.batch_mode(), BatchMode::Cohort);
+        let cohort = engine.search_batch(&qs, 4).unwrap();
+        let seq = engine.search_batch_sequential(&qs, 4).unwrap();
+        assert_eq!(cohort.len(), seq.len());
+        let mut tot = Counters::new();
+        for (a, b) in cohort.iter().zip(&seq) {
+            assert_eq!(a.matches.len(), b.matches.len());
+            for (x, y) in a.matches.iter().zip(&b.matches) {
+                assert_eq!(x.pos, y.pos);
+                assert_eq!(x.dist.to_bits(), y.dist.to_bits());
+            }
+            // per-member work equals the sequential scan's (no retirement
+            // on noisy queries) — only *where the stats came from* differs
+            assert_eq!(a.counters.candidates, b.counters.candidates);
+            tot.merge(&a.counters);
+        }
+        // shared-strip accounting balances exactly: loads performed +
+        // loads saved = the loads a sequential batch makes
+        assert!(tot.cohort_strips > 0);
+        assert!(tot.strip_stat_loads_saved > 0);
+        assert_eq!(
+            tot.strip_stat_loads_saved * qs.len() as u64,
+            tot.candidates * (qs.len() as u64 - 1)
+        );
+        assert_eq!(tot.cohort_retired_queries, 0);
+    }
+
+    #[test]
+    fn scalar_engine_serves_batches_sequentially() {
+        // a scalar-mode engine has no strip pipeline to share: batches
+        // fall back to the sequential path and still answer correctly
+        let r = Dataset::Ppg.generate(1400, 7);
+        let qs: Vec<Query> = extract_queries(&r, 3, 96, 0.1, 8)
+            .into_iter()
+            .map(|q| Query::new(q, 0.1))
+            .collect();
+        let engine = Engine::new(
+            r,
+            &EngineConfig { scan_mode: ScanMode::Scalar, ..Default::default() },
+        )
+        .unwrap();
+        let results = engine.search_batch(&qs, 2).unwrap();
+        for (q, res) in qs.iter().zip(&results) {
+            assert_eq!(res.counters.cohort_strips, 0, "no cohort scan ran");
+            let want = engine.search_one(q, 2).unwrap();
+            for (x, y) in res.matches.iter().zip(&want.matches) {
+                assert_eq!(x.pos, y.pos);
+                assert_eq!(x.dist.to_bits(), y.dist.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -22,6 +22,6 @@ pub mod engine;
 pub mod ref_index;
 pub mod topk;
 
-pub use engine::{Engine, EngineConfig, Query, TopKResult};
+pub use engine::{BatchMode, Engine, EngineConfig, Query, TopKResult};
 pub use ref_index::{BucketStats, RefIndex};
 pub use topk::TopK;

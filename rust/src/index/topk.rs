@@ -114,6 +114,18 @@ impl TopK {
         }
     }
 
+    /// Can this collector never accept another result from candidates at
+    /// *later positions* than everything already held? Distances are
+    /// non-negative and acceptance is strict (`<` the threshold), so once
+    /// the threshold reaches 0 nothing can enter via the improvement arm;
+    /// the tie arm additionally needs a *smaller* position than a held
+    /// entry, which a forward scan can no longer produce. The cohort scan
+    /// checks this at strip boundaries to retire a query mid-scan.
+    #[inline]
+    pub fn exhausted(&self) -> bool {
+        self.threshold() <= 0.0
+    }
+
     /// Lower the external bound (monotone: a looser value is ignored).
     pub fn set_bound(&mut self, bound: f64) {
         if bound < self.bound {
@@ -301,6 +313,20 @@ mod tests {
         // d == kth == bound: at the bound, not below it — rejected
         assert!(!t.offer(m(1, 2.0)));
         assert_eq!(t.into_sorted(), vec![m(5, 2.0)]);
+    }
+
+    #[test]
+    fn exhausted_once_threshold_reaches_zero() {
+        let mut t = TopK::new(2);
+        assert!(!t.exhausted());
+        t.offer(m(3, 0.0));
+        assert!(!t.exhausted(), "one slot still free");
+        t.offer(m(7, 0.0));
+        assert!(t.exhausted(), "k-th best is 0: nothing later can enter");
+        // a zero external bound exhausts even an empty collector
+        let mut e = TopK::with_bound(4, 0.0);
+        assert!(e.exhausted());
+        assert!(!e.offer(m(0, 0.0)));
     }
 
     #[test]

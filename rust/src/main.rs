@@ -32,7 +32,7 @@ COMMANDS
               latency/throughput
               --dataset <name> [--queries N] [--shards N] [--suite S]
               [--k N] [--metric M] [--scan-mode strip|scalar]
-              [--ref-len N] [--artifacts DIR]
+              [--batch-window N] [--ref-len N] [--artifacts DIR]
   bench-suite run the paper's experiment grid and print Fig 5a/5b + tables
               [--axis length|window|all] [--ref-len N] [--datasets a,b]
               [--qlens 128,256] [--ratios 0.1,0.2] [--queries N]
@@ -47,7 +47,10 @@ Suites: ucr | usp | mon | nolb | xla     Datasets: FoG Soccer PAMAP2 ECG REFIT P
 Metrics: cdtw (default) | dtw | wdtw | erp | msm | twe (default parameters;
          per-request parameters travel in the protocol's metric object)
 Scan modes: strip (default; batched bounds + LB-ordered DTW) | scalar
-         (the legacy per-candidate loop — same results, A/B baseline)";
+         (the legacy per-candidate loop — same results, A/B baseline)
+Batching: --batch-window N coalesces N in-flight queries; same-shape
+         queries form cohorts served by one shared strip pass over the
+         reference (same results as solo serving, bitwise)";
 
 fn main() {
     let args = match Args::from_env() {
@@ -181,6 +184,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("unknown scan mode {name:?} (strip|scalar)"))?,
         None => ScanMode::default(),
     };
+    let batch_window = args.usize_or("batch-window", cfg.serve.batch_window)?.max(1);
     let artifacts = PathBuf::from(args.get_or("artifacts", &cfg.serve.artifacts_dir));
 
     let reference = load_reference(&dataset, ref_len, seed)?;
@@ -190,28 +194,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &ServiceConfig {
             shards,
             scan_mode,
+            batch_window,
             artifacts_dir: artifacts.join("manifest.json").exists().then_some(artifacts),
             ..Default::default()
         },
     )?;
     println!(
-        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}, metric {}, top-{k}, {} scan) over {shards} shards",
+        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}, metric {}, top-{k}, {} scan, batch window {}) over {shards} shards",
         suite.name(),
         metric.name(),
-        scan_mode.name()
+        scan_mode.name(),
+        svc.batch_window(),
     );
     let mut latencies = Vec::new();
     let t = Timer::start();
-    for (i, q) in queries.into_iter().enumerate() {
-        let req = QueryRequest { id: i as u64, query: q, window_ratio: ratio, suite, k, metric };
+    let reqs: Vec<QueryRequest> = queries
+        .into_iter()
+        .enumerate()
+        .map(|(i, q)| QueryRequest { id: i as u64, query: q, window_ratio: ratio, suite, k, metric })
+        .collect();
+    // coalesce up to batch_window in-flight queries per submit: same-shape
+    // queries inside a window share one strip pass over the reference
+    for window in reqs.chunks(svc.batch_window()) {
         // a failing request answers with the protocol's error line and the
         // service keeps serving — one bad query must not end the session
-        match svc.submit(&req) {
-            Ok(resp) => {
-                println!("{}", resp.to_json());
-                latencies.push(resp.latency_ms);
+        for (req, result) in window.iter().zip(svc.submit_batch(window)) {
+            match result {
+                Ok(resp) => {
+                    println!("{}", resp.to_json());
+                    latencies.push(resp.latency_ms);
+                }
+                Err(e) => println!("{}", ErrorResponse::new(req.id, &e).to_json()),
             }
-            Err(e) => println!("{}", ErrorResponse::new(req.id, &e).to_json()),
         }
     }
     let wall = t.elapsed_secs();

@@ -49,6 +49,20 @@ pub struct Counters {
     /// was pruned against the threshold tightened *within* the strip by
     /// earlier (lower-bound-ordered) evaluations
     pub lb_order_saved_dtw_calls: u64,
+    /// strips processed by a query-cohort scan — counted once per strip
+    /// per shard (attributed to the first live member), so the total over
+    /// a batch is the number of shared stat-strip loads actually performed
+    pub cohort_strips: u64,
+    /// per-shard query retirements in a cohort scan: the query's k-th
+    /// best distance reached 0, so no later candidate can be accepted and
+    /// its lanes drop out of the shard's remaining strips (a query
+    /// retiring in every shard counts once per shard)
+    pub cohort_retired_queries: u64,
+    /// per-position window-stat loads a cohort scan avoided because the
+    /// strip's shared (mean, std) lanes were loaded once for the whole
+    /// cohort instead of once per query — `strip_len × (live members − 1)`
+    /// per strip, attributed to the members that were served for free
+    pub strip_stat_loads_saved: u64,
     /// distance-kernel calls per metric kind, indexed by
     /// [`Metric::index`] (every entry also counts into `dtw_calls`)
     pub metric_calls: [u64; Metric::COUNT],
@@ -109,6 +123,9 @@ impl Counters {
         self.strip_batches += o.strip_batches;
         self.batch_lb_prunes += o.batch_lb_prunes;
         self.lb_order_saved_dtw_calls += o.lb_order_saved_dtw_calls;
+        self.cohort_strips += o.cohort_strips;
+        self.cohort_retired_queries += o.cohort_retired_queries;
+        self.strip_stat_loads_saved += o.strip_stat_loads_saved;
         for i in 0..Metric::COUNT {
             self.metric_calls[i] += o.metric_calls[i];
             self.metric_abandons[i] += o.metric_abandons[i];
@@ -171,6 +188,31 @@ impl Counters {
         format!(
             "strips: {} batches | batch-LB prunes: {} ({batch_share:.1}% of all LB prunes) | DTW calls saved by LB order: {}",
             self.strip_batches, self.batch_lb_prunes, self.lb_order_saved_dtw_calls
+        )
+    }
+
+    /// One-line report of the query-cohort batch scan: how much
+    /// reference-side streaming the cohort amortised across its members.
+    /// The stat-lane share is `loads saved / lane reads the cohort's
+    /// members made` — the fraction of the cohort's own stat-lane reads
+    /// served from the shared strip instead of loaded per query. With no
+    /// retirement this equals the saving vs a sequential batch; a retired
+    /// member stops reading entirely (an even bigger saving, but one with
+    /// no per-read denominator to report against).
+    pub fn cohort_report(&self) -> String {
+        if self.cohort_strips == 0 {
+            return "cohort scan not used (queries served solo)".to_string();
+        }
+        // the cohort performed (candidates − saved) of its members'
+        // `candidates` lane reads itself; the rest came from sharing
+        let share = if self.candidates > 0 {
+            100.0 * self.strip_stat_loads_saved as f64 / self.candidates as f64
+        } else {
+            0.0
+        };
+        format!(
+            "cohort: {} shared strips | stat-lane loads saved: {} ({share:.1}% of lane reads) | per-shard query retirements: {}",
+            self.cohort_strips, self.strip_stat_loads_saved, self.cohort_retired_queries
         )
     }
 }
@@ -262,6 +304,36 @@ mod tests {
         assert_eq!(Counters::new().strip_report(), "strip scan not used (scalar path)");
         // the index report mentions the strip counters too
         assert!(a.index_report().contains("5 batches"), "{}", a.index_report());
+    }
+
+    #[test]
+    fn cohort_counters_merge_and_report() {
+        let mut a = Counters {
+            cohort_strips: 4,
+            strip_stat_loads_saved: 100,
+            candidates: 400,
+            ..Default::default()
+        };
+        let b = Counters {
+            cohort_strips: 1,
+            cohort_retired_queries: 2,
+            strip_stat_loads_saved: 50,
+            candidates: 200,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.cohort_strips, 5);
+        assert_eq!(a.cohort_retired_queries, 2);
+        assert_eq!(a.strip_stat_loads_saved, 150);
+        let r = a.cohort_report();
+        assert!(r.contains("5 shared strips"), "{r}");
+        assert!(r.contains("loads saved: 150"), "{r}");
+        assert!(r.contains("25.0% of lane reads"), "{r}");
+        assert!(r.contains("retirements: 2"), "{r}");
+        assert_eq!(
+            Counters::new().cohort_report(),
+            "cohort scan not used (queries served solo)"
+        );
     }
 
     #[test]

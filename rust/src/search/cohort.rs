@@ -1,0 +1,424 @@
+//! Query-cohort scan: one strip-major pass over the reference serving a
+//! whole batch of same-shape queries.
+//!
+//! [`crate::index::engine::Engine::search_batch`] used to be query-major —
+//! Q queries streamed the reference (window-stat lanes, envelope views,
+//! raw samples) Q separate times through cache. This module inverts the
+//! loop: queries that share a *(query length, warping window, metric)*
+//! shape form a **cohort**, and the cohort runs ONE strip pass in which
+//! every 64-position strip loads its `(mean, std)` lanes **once**
+//! ([`crate::bounds::batch::CohortScratch`]) and then each member filters
+//! the strip against its own private top-k threshold, evaluating its
+//! survivors in the established ascending-(lower bound, position) order.
+//!
+//! Exactness contract: a cohort scan is **bitwise-identical**, per query,
+//! to Q independent `search_one` calls (pinned by
+//! `tests/conformance_cohort.rs`). Per-query thresholds are private, every
+//! per-candidate decision reuses the single-query strip pipeline's code
+//! ([`crate::search::subsequence`]'s batched bounds + `eval_survivor`),
+//! and [`crate::index::topk::TopK`]'s lexicographic tie rule makes the
+//! final set independent of evaluation order — so sharing the strip walk
+//! is a pure memory-bandwidth optimisation, never a semantic one.
+//!
+//! Two additional amortisations ride the inverted loop:
+//!
+//! * **Retirement** — a member whose k-th best distance reaches 0 can
+//!   never accept a later candidate ([`TopK::exhausted`]), so it drops
+//!   out of every remaining strip and late strips shrink. Exact-match
+//!   heavy workloads stop paying for queries that are already answered.
+//! * **Workspace pooling** ([`CohortPool`]) — one kernel workspace + one
+//!   z-normalisation buffer per shard worker serve every member of every
+//!   cohort, instead of each query context allocating its own; a debug
+//!   assertion pins that capacity is reused, not regrown, within a
+//!   cohort.
+
+use std::sync::Arc;
+
+use crate::bounds::batch::{batch_lb_kim_into, lb_keogh_eq_unordered, CohortScratch, DEFAULT_STRIP};
+use crate::bounds::cascade::CascadePolicy;
+use crate::coordinator::state::SharedUb;
+use crate::distances::DtwWorkspace;
+use crate::index::ref_index::BucketStats;
+use crate::index::topk::TopK;
+use crate::metrics::Counters;
+use crate::search::subsequence::{eval_survivor, DataEnvelopes, QueryContext};
+use crate::search::suite::Suite;
+
+/// One query's state through a cohort scan: its context, its private
+/// top-k collector, an optional cross-shard threshold, its counters and
+/// the retirement flag.
+#[derive(Debug)]
+pub struct CohortMember {
+    pub ctx: QueryContext,
+    pub topk: TopK,
+    /// this query's cross-shard threshold (`None` for single-shard scans)
+    pub shared: Option<Arc<SharedUb>>,
+    pub counters: Counters,
+    /// set once the member can never accept another candidate — later
+    /// strips skip it entirely
+    pub retired: bool,
+}
+
+impl CohortMember {
+    /// Member for a single-shard (no cross-shard threshold) cohort scan.
+    pub fn new(ctx: QueryContext, k: usize) -> Self {
+        Self { ctx, topk: TopK::new(k), shared: None, counters: Counters::new(), retired: false }
+    }
+
+    /// Member whose threshold syncs with `shared` at every strip, exactly
+    /// as [`crate::coordinator::worker::scan_shard_topk`] syncs per block.
+    pub fn with_shared(ctx: QueryContext, k: usize, shared: Arc<SharedUb>) -> Self {
+        Self {
+            ctx,
+            topk: TopK::new(k),
+            shared: Some(shared),
+            counters: Counters::new(),
+            retired: false,
+        }
+    }
+}
+
+/// One kernel workspace + one z-normalisation buffer, owned by a shard
+/// worker and swapped into each member's context while its survivors are
+/// scored. All members of a cohort share a query length, so after
+/// [`CohortPool::warm`] the buffers never regrow within a cohort (debug
+/// asserted by the scan).
+#[derive(Debug, Default)]
+pub struct CohortPool {
+    ws: DtwWorkspace,
+    zbuf: Vec<f64>,
+}
+
+impl CohortPool {
+    /// Ensure capacity for queries of `n` points, so the scan's hot path
+    /// never reallocates.
+    pub fn warm(&mut self, n: usize) {
+        if self.zbuf.capacity() < n {
+            self.zbuf.reserve(n - self.zbuf.len());
+        }
+        // the DP lines hold n + 1 cells
+        if self.ws.prev.capacity() < n + 1 {
+            self.ws.prev.reserve(n + 1 - self.ws.prev.len());
+        }
+        if self.ws.curr.capacity() < n + 1 {
+            self.ws.curr.reserve(n + 1 - self.ws.curr.len());
+        }
+    }
+
+    /// Capacity fingerprint for the regrowth debug assertion.
+    fn caps(&self) -> (usize, usize, usize) {
+        (self.zbuf.capacity(), self.ws.prev.capacity(), self.ws.curr.capacity())
+    }
+
+    /// Swap the pool's buffers with `ctx`'s (called in pairs around a
+    /// member's survivor evaluation).
+    fn swap_into(&mut self, ctx: &mut QueryContext) {
+        ctx.swap_kernel_buffers(&mut self.ws, &mut self.zbuf);
+    }
+}
+
+/// Scan candidate positions `[start, end)` strip-major for a whole cohort:
+/// each strip loads its window-stat lanes once from the shared `stats`
+/// table and every live member filters + scores it against its own
+/// threshold. Members must share query length, window and metric (the
+/// definition of a cohort); their results land in `members[i].topk` /
+/// `members[i].counters`.
+///
+/// Threshold discipline mirrors the single-query sharded scan exactly:
+/// per strip, a member adopts the freshest cross-shard bound before its
+/// batch bounds run, and publishes its k-th best as soon as its survivors
+/// are scored — the strip is the sync block, as in
+/// [`crate::coordinator::worker::scan_shard_topk`]'s strip mode
+/// (`sync_every` caps the strip length the same way).
+#[allow(clippy::too_many_arguments)]
+pub fn scan_cohort_topk(
+    reference: &[f64],
+    start: usize,
+    end: usize,
+    members: &mut [CohortMember],
+    stats: &BucketStats,
+    denv: Option<&DataEnvelopes>,
+    suite: Suite,
+    sync_every: usize,
+    scratch: &mut CohortScratch,
+    pool: &mut CohortPool,
+) {
+    if members.is_empty() {
+        return;
+    }
+    let n = members[0].ctx.len();
+    let w = members[0].ctx.w;
+    let metric = members[0].ctx.metric;
+    assert!(n > 0, "empty query");
+    assert!(reference.len() >= n, "reference shorter than query");
+    assert!(
+        members.iter().all(|m| m.ctx.len() == n && m.ctx.w == w && m.ctx.metric == metric),
+        "cohort members must share (query length, window, metric)"
+    );
+    debug_assert_eq!(stats.qlen(), n, "stats bucket / cohort length mismatch");
+    let end = end.min(reference.len() - n + 1);
+    if start >= end {
+        return;
+    }
+    let cascade = if metric.uses_envelopes() { suite.cascade() } else { CascadePolicy::none() };
+    debug_assert!(
+        !cascade.needs_data_envelopes() || denv.is_some(),
+        "suite {suite:?} needs data envelopes"
+    );
+    pool.warm(n);
+    let warm_caps = pool.caps();
+    scratch.ensure_members(members.len());
+    // same block length as the single-query strip shard scan, so per-query
+    // strip boundaries (and thus threshold sync points) are identical
+    let strip_len = DEFAULT_STRIP.min(sync_every.max(1));
+    let mut strip_start = start;
+    while strip_start < end {
+        if members.iter().all(|m| m.retired) {
+            break;
+        }
+        let len = (end - strip_start).min(strip_len);
+        // the strip's shared stat lanes: loaded once, read by every member
+        let (ms, ss) = stats.strip(strip_start, len);
+        scratch.load_stats(ms, ss);
+        let CohortScratch { mean, std, lanes } = &mut *scratch;
+        let mut first_live = true;
+        for (mi, m) in members.iter_mut().enumerate() {
+            if m.retired {
+                continue;
+            }
+            if first_live {
+                // the member that "paid" for the shared load
+                m.counters.cohort_strips += 1;
+                first_live = false;
+            } else {
+                // served from the cohort's shared lanes for free
+                m.counters.strip_stat_loads_saved += len as u64;
+            }
+            if let Some(shared) = &m.shared {
+                m.topk.set_bound(shared.get());
+            }
+            m.counters.strip_batches += 1;
+            m.counters.candidates += len as u64;
+            // lanes reset per live member only: retired members cost
+            // nothing per strip
+            let lane = &mut lanes[mi];
+            lane.reset(len);
+            // constant for the batch stages, like the single-query strip
+            let bsf_strip = m.topk.threshold();
+            if cascade.kim {
+                batch_lb_kim_into(&m.ctx.q, reference, strip_start, len, mean, std, &mut lane.lb);
+                for i in 0..len {
+                    if lane.lb[i] > bsf_strip {
+                        lane.alive[i] = false;
+                        m.counters.lb_kim_prunes += 1;
+                        m.counters.batch_lb_prunes += 1;
+                    }
+                }
+            }
+            if cascade.keogh_eq {
+                let (u, l) = m.ctx.envelopes_natural();
+                for i in 0..len {
+                    if !lane.alive[i] {
+                        continue;
+                    }
+                    let pos = strip_start + i;
+                    let lb = lb_keogh_eq_unordered(
+                        u,
+                        l,
+                        &reference[pos..pos + n],
+                        mean[i],
+                        std[i],
+                    );
+                    if lb > lane.lb[i] {
+                        lane.lb[i] = lb;
+                    }
+                    // same summation-order discount as the single-query
+                    // strip scan: never prune what the sorted pass keeps
+                    if lb * (1.0 - 1e-9) > bsf_strip {
+                        lane.alive[i] = false;
+                        m.counters.lb_keogh_eq_prunes += 1;
+                        m.counters.batch_lb_prunes += 1;
+                    }
+                }
+            }
+            lane.order_survivors();
+            pool.swap_into(&mut m.ctx);
+            for &i in &lane.order {
+                let i = i as usize;
+                let pos = strip_start + i;
+                eval_survivor(
+                    pos,
+                    &reference[pos..pos + n],
+                    mean[i],
+                    std[i],
+                    bsf_strip,
+                    &mut m.ctx,
+                    denv,
+                    suite,
+                    cascade,
+                    true,
+                    &mut m.topk,
+                    &mut m.counters,
+                );
+            }
+            pool.swap_into(&mut m.ctx);
+            debug_assert_eq!(
+                pool.caps(),
+                warm_caps,
+                "cohort pool must reuse capacity within a cohort, not regrow"
+            );
+            if let Some(shared) = &m.shared {
+                if let Some(kth) = m.topk.kth_dist() {
+                    shared.tighten(kth);
+                }
+            }
+            if m.topk.exhausted() {
+                m.retired = true;
+                m.counters.cohort_retired_queries += 1;
+            }
+        }
+        strip_start += len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{extract_queries, Dataset};
+    use crate::distances::metric::Metric;
+    use crate::search::subsequence::{
+        search_subsequence_topk_metric_mode, window_cells, ScanMode,
+    };
+
+    fn run_cohort(
+        r: &[f64],
+        queries: &[Vec<f64>],
+        w: usize,
+        k: usize,
+        metric: Metric,
+        suite: Suite,
+    ) -> Vec<CohortMember> {
+        let n = queries[0].len();
+        let stats = BucketStats::build(r, n);
+        let weff = metric.effective_window(n, w);
+        let denv = metric
+            .wants_data_envelopes(suite)
+            .then(|| DataEnvelopes::new(r, weff));
+        let mut members: Vec<CohortMember> = queries
+            .iter()
+            .map(|q| CohortMember::new(QueryContext::with_metric_pooled(q, w, metric), k))
+            .collect();
+        let mut scratch = CohortScratch::default();
+        let mut pool = CohortPool::default();
+        scan_cohort_topk(
+            r,
+            0,
+            r.len() - n + 1,
+            &mut members,
+            &stats,
+            denv.as_ref(),
+            suite,
+            1024,
+            &mut scratch,
+            &mut pool,
+        );
+        members
+    }
+
+    #[test]
+    fn cohort_matches_independent_strip_scans_bitwise() {
+        let r = Dataset::Ecg.generate(1200, 3);
+        let queries = extract_queries(&r, 4, 96, 0.1, 9);
+        let w = window_cells(96, 0.1);
+        for metric in [Metric::Cdtw, Metric::Msm { cost: 0.5 }] {
+            let members = run_cohort(&r, &queries, w, 3, metric, Suite::UcrMon);
+            for (q, m) in queries.iter().zip(members) {
+                let mut c = Counters::new();
+                let want = search_subsequence_topk_metric_mode(
+                    &r, q, w, 3, metric, Suite::UcrMon, ScanMode::Strip, &mut c,
+                );
+                let got = m.topk.into_sorted();
+                assert_eq!(got.len(), want.len(), "{}", metric.name());
+                for (g, x) in got.iter().zip(&want) {
+                    assert_eq!(g.pos, x.pos, "{}", metric.name());
+                    assert_eq!(g.dist.to_bits(), x.dist.to_bits(), "{}", metric.name());
+                }
+                // the cohort member examined the whole candidate space
+                assert_eq!(m.counters.candidates, c.candidates, "{}", metric.name());
+            }
+        }
+    }
+
+    #[test]
+    fn stat_load_accounting_balances() {
+        // with no retirement: loads performed + loads saved = loads a
+        // sequential batch would make, exactly
+        let r = Dataset::Ppg.generate(900, 5);
+        let queries = extract_queries(&r, 3, 64, 0.1, 6);
+        let members = run_cohort(&r, &queries, 6, 2, Metric::Cdtw, Suite::UcrMon);
+        let mut total = Counters::new();
+        for m in &members {
+            assert!(!m.retired);
+            total.merge(&m.counters);
+        }
+        let total_candidates = (r.len() - 64 + 1) as u64 * queries.len() as u64;
+        assert_eq!(total.candidates, total_candidates);
+        assert!(total.cohort_strips > 0);
+        assert!(total.strip_stat_loads_saved > 0);
+        // Q members, one load per strip: saved = candidates × (Q−1)/Q
+        assert_eq!(
+            total.strip_stat_loads_saved * queries.len() as u64,
+            total.candidates * (queries.len() as u64 - 1)
+        );
+    }
+
+    #[test]
+    fn exact_match_query_retires_mid_scan() {
+        let r = Dataset::FoG.generate(2000, 8);
+        // member 0 is an exact window copy planted early: its k = 1 best
+        // is 0, so it retires after the strip that finds it
+        let exact = r[64..64 + 96].to_vec();
+        let noisy = extract_queries(&r, 1, 96, 0.1, 4).remove(0);
+        let queries = vec![exact.clone(), noisy.clone()];
+        let members = run_cohort(&r, &queries, 9, 1, Metric::Cdtw, Suite::UcrMon);
+        assert!(members[0].retired);
+        assert_eq!(members[0].counters.cohort_retired_queries, 1);
+        assert!(
+            members[0].counters.candidates < (r.len() - 96 + 1) as u64,
+            "retired member must skip late strips"
+        );
+        assert!(!members[1].retired);
+        // ...and the retired member's answer is still exactly right
+        let mut c = Counters::new();
+        let want = search_subsequence_topk_metric_mode(
+            &r, &exact, 9, 1, Metric::Cdtw, Suite::UcrMon, ScanMode::Strip, &mut c,
+        );
+        let got = members[0].topk.to_sorted();
+        assert_eq!(got[0].pos, want[0].pos);
+        assert_eq!(got[0].dist.to_bits(), want[0].dist.to_bits());
+        assert_eq!(got[0].dist, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "share (query length, window, metric)")]
+    fn mixed_shape_cohort_is_rejected() {
+        let r = Dataset::Ecg.generate(400, 1);
+        let stats = BucketStats::build(&r, 32);
+        let mut members = vec![
+            CohortMember::new(QueryContext::new(&r[0..32], 3), 1),
+            CohortMember::new(QueryContext::new(&r[0..48], 3), 1),
+        ];
+        scan_cohort_topk(
+            &r,
+            0,
+            10,
+            &mut members,
+            &stats,
+            None,
+            Suite::UcrMonNoLb,
+            1024,
+            &mut CohortScratch::default(),
+            &mut CohortPool::default(),
+        );
+    }
+}

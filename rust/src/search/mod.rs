@@ -1,7 +1,10 @@
 //! The similarity-search engine (system S10): the UCR-style subsequence
 //! search loop, the four suite variants of the paper's evaluation (plus our
-//! XLA-prefilter variant), and whole-series NN1 search.
+//! XLA-prefilter variant), whole-series NN1 search, and the query-cohort
+//! batch scan ([`cohort`]) that serves many same-shape queries from one
+//! strip pass over the reference.
 
+pub mod cohort;
 pub mod nn1;
 pub mod subsequence;
 pub mod suite;

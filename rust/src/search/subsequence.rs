@@ -135,6 +135,21 @@ impl QueryContext {
     /// total order to offer it); serving layers validate first via
     /// [`QueryContext::try_with_metric`].
     pub fn with_metric(query_raw: &[f64], w: usize, metric: Metric) -> Self {
+        Self::build(query_raw, w, metric, false)
+    }
+
+    /// Context for a **cohort** member: identical to
+    /// [`QueryContext::with_metric`] except that the kernel workspace and
+    /// the z-normalisation buffer start *empty* — the cohort scan swaps a
+    /// per-shard-worker pool in before scoring survivors
+    /// ([`crate::search::cohort::CohortPool`]), so allocating them here
+    /// per query per shard would be pure waste. Safe to use outside a
+    /// cohort too: the buffers grow on first kernel use.
+    pub fn with_metric_pooled(query_raw: &[f64], w: usize, metric: Metric) -> Self {
+        Self::build(query_raw, w, metric, true)
+    }
+
+    fn build(query_raw: &[f64], w: usize, metric: Metric, pooled: bool) -> Self {
         let q = znorm(query_raw);
         let n = q.len();
         let w = metric.effective_window(n, w);
@@ -165,11 +180,28 @@ impl QueryContext {
             cb1: vec![0.0; n],
             cb2: vec![0.0; n],
             cb_cum: vec![0.0; n + 1],
-            zbuf: vec![0.0; n],
-            ws: DtwWorkspace::with_capacity(n),
+            zbuf: if pooled { Vec::new() } else { vec![0.0; n] },
+            ws: if pooled { DtwWorkspace::default() } else { DtwWorkspace::with_capacity(n) },
             strip: StripScratch::default(),
             metric,
         }
+    }
+
+    /// Swap the kernel workspace and z-buffer with a caller-owned pool —
+    /// the cohort scan's per-shard-worker buffer reuse. Called in pairs
+    /// (swap in, score survivors, swap out), so ownership always returns
+    /// to the pool and capacity is amortised across every member of every
+    /// cohort the worker serves.
+    pub(crate) fn swap_kernel_buffers(&mut self, ws: &mut DtwWorkspace, zbuf: &mut Vec<f64>) {
+        std::mem::swap(&mut self.ws, ws);
+        std::mem::swap(&mut self.zbuf, zbuf);
+    }
+
+    /// The query envelopes in natural (unsorted) order — what the batched
+    /// unordered LB_Keogh EQ pass consumes. Empty for metrics without
+    /// envelope bounds.
+    pub(crate) fn envelopes_natural(&self) -> (&[f64], &[f64]) {
+        (&self.u, &self.l)
     }
 
     /// Validating constructor: the graceful API boundary for
@@ -532,7 +564,7 @@ fn scan_topk_strips(
 /// (the strip-entry threshold) only attributes prunes that the
 /// within-strip LB-ordered tightening made possible.
 #[allow(clippy::too_many_arguments)]
-fn eval_survivor(
+pub(crate) fn eval_survivor(
     pos: usize,
     window: &[f64],
     mean: f64,

@@ -1,0 +1,240 @@
+//! Cohort-scan conformance suite: a cohort-batched
+//! [`Engine::search_batch`] must return, for every query, results
+//! **bitwise-identical** (same positions, same distance bits) to an
+//! independent [`Engine::search_one`] call — across all six synthetic
+//! datasets, all six metric kinds, k ∈ {1, 5, 16} and batch sizes
+//! {1, 3, 17} — because sharing the reference's strip walk between
+//! queries is a memory-bandwidth optimisation, never a semantic one.
+//! Per-query thresholds are private; only counter attribution (who paid
+//! for a strip's stat load) and retirement (skipping strips a query can
+//! provably never win) may differ.
+//!
+//! Also pins the `search_batch` result-ordering contract: results align
+//! index-for-index with the input slice even when cohort grouping
+//! reorders evaluation (mixed-length / mixed-metric batches, including a
+//! batch that splits into three cohorts, and a property test).
+
+use repro::data::{extract_queries, Dataset};
+use repro::distances::metric::Metric;
+use repro::index::{BatchMode, Engine, EngineConfig, Query, TopKResult};
+use repro::util::proptest::{arb_series, run_prop};
+
+fn assert_bitwise(got: &TopKResult, want: &TopKResult, tag: &str) {
+    assert_eq!(got.matches.len(), want.matches.len(), "result count: {tag}");
+    for (rank, (x, y)) in got.matches.iter().zip(&want.matches).enumerate() {
+        assert_eq!(x.pos, y.pos, "pos at rank {rank}: {tag}");
+        assert_eq!(
+            x.dist.to_bits(),
+            y.dist.to_bits(),
+            "dist bits at rank {rank}: {x:?} vs {y:?}: {tag}"
+        );
+    }
+}
+
+#[test]
+fn cohort_batches_are_bitwise_identical_to_search_one_everywhere() {
+    for ds in Dataset::ALL {
+        let r = ds.generate(420, 0xC0 ^ ds as u64);
+        let engine =
+            Engine::new(r.clone(), &EngineConfig { shards: 2, ..Default::default() }).unwrap();
+        assert_eq!(engine.batch_mode(), BatchMode::Cohort);
+        let pool = extract_queries(&r, 17, 32, 0.1, 5 + ds as u64);
+        for metric in Metric::all_default() {
+            for k in [1usize, 5, 16] {
+                for b in [1usize, 3, 17] {
+                    let tag = format!("{} {} k={k} b={b}", ds.name(), metric.name());
+                    let qs: Vec<Query> = pool[..b]
+                        .iter()
+                        .map(|q| Query::with_metric(q.clone(), 0.1, metric))
+                        .collect();
+                    let got = engine.search_batch(&qs, k).unwrap();
+                    assert_eq!(got.len(), b, "{tag}");
+                    let mut saved = 0u64;
+                    for (q, g) in qs.iter().zip(&got) {
+                        let want = engine.search_one(q, k).unwrap();
+                        assert_bitwise(g, &want, &tag);
+                        saved += g.counters.strip_stat_loads_saved;
+                    }
+                    if b > 1 {
+                        assert!(saved > 0, "{tag}: cohort must share stat-lane loads");
+                    } else {
+                        assert_eq!(saved, 0, "{tag}: a singleton takes the solo path");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_batch_splits_into_three_cohorts_and_aligns_index_for_index() {
+    let r = Dataset::Refit.generate(800, 7);
+    let engine = Engine::new(r.clone(), &EngineConfig::default()).unwrap();
+    let a = extract_queries(&r, 2, 48, 0.1, 11); // cohort 1: qlen 48, cDTW
+    let b = extract_queries(&r, 2, 64, 0.1, 12); // cohort 2: qlen 64, cDTW
+    let c = extract_queries(&r, 2, 48, 0.1, 13); // cohort 3: qlen 48, MSM
+    let msm = Metric::Msm { cost: 0.5 };
+    // interleaved on purpose: grouping must reorder evaluation but the
+    // results must still land index-for-index
+    let qs = vec![
+        Query::new(a[0].clone(), 0.1),
+        Query::new(b[0].clone(), 0.1),
+        Query::with_metric(c[0].clone(), 0.1, msm),
+        Query::new(a[1].clone(), 0.1),
+        Query::new(b[1].clone(), 0.1),
+        Query::with_metric(c[1].clone(), 0.1, msm),
+    ];
+    let got = engine.search_batch(&qs, 5).unwrap();
+    assert_eq!(got.len(), qs.len());
+    for (i, (q, g)) in qs.iter().zip(&got).enumerate() {
+        let want = engine.search_one(q, 5).unwrap();
+        assert_bitwise(g, &want, &format!("mixed batch index {i}"));
+    }
+    // every query was cohort-served (three cohorts of two): each cohort
+    // performed one shared stat load per strip and saved the other
+    let total_saved: u64 = got.iter().map(|g| g.counters.strip_stat_loads_saved).sum();
+    let total_strips: u64 = got.iter().map(|g| g.counters.cohort_strips).sum();
+    assert!(total_saved > 0);
+    assert!(total_strips > 0);
+    let total_candidates: u64 = got.iter().map(|g| g.counters.candidates).sum();
+    // cohorts of two, no retirement: exactly half the stat loads saved
+    assert_eq!(total_saved * 2, total_candidates);
+}
+
+#[test]
+fn planted_exact_ties_resolve_identically_in_cohort_and_solo() {
+    // integer-valued reference with an exact duplicate window (same
+    // construction as conformance_strip): two candidates share distance
+    // bits exactly, and the tie-heavy query retires mid-scan at k <= 2
+    let qlen = 32;
+    let mut x = 13u64;
+    let mut r: Vec<f64> = (0..600)
+        .map(|_| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x % 17) as f64 - 8.0
+        })
+        .collect();
+    let dup: Vec<f64> = r[100..100 + qlen].to_vec();
+    r[400..400 + qlen].copy_from_slice(&dup);
+    let q: Vec<f64> = r[100..100 + qlen].to_vec();
+    let other = extract_queries(&r, 1, qlen, 0.1, 3).remove(0);
+    // one shard: exact-tie resolution is deterministic for both paths
+    // (the router's cross-shard tie caveat applies to both identically)
+    let engine =
+        Engine::new(r.clone(), &EngineConfig { shards: 1, ..Default::default() }).unwrap();
+    for k in [1usize, 2, 3] {
+        let qs = vec![
+            Query::new(q.clone(), 0.2),
+            Query::new(other.clone(), 0.2),
+            Query::new(q.clone(), 0.2),
+        ];
+        let got = engine.search_batch(&qs, k).unwrap();
+        for (i, (qq, g)) in qs.iter().zip(&got).enumerate() {
+            let want = engine.search_one(qq, k).unwrap();
+            assert_bitwise(g, &want, &format!("planted tie k={k} index {i}"));
+        }
+        if k <= 2 {
+            // the exact-copy queries hit a 0 threshold and retired early
+            let retired: u64 = got.iter().map(|g| g.counters.cohort_retired_queries).sum();
+            assert!(retired >= 1, "k={k}: exact-match queries must retire");
+        }
+    }
+    // sanity: the two planted copies really do tie at distance 0
+    let top2 = engine.search_one(&Query::new(q, 0.2), 2).unwrap();
+    assert_eq!(top2.matches[0].pos, 100);
+    assert_eq!(top2.matches[1].pos, 400);
+    assert_eq!(top2.matches[0].dist.to_bits(), top2.matches[1].dist.to_bits());
+}
+
+#[test]
+fn exact_match_retirement_is_a_pure_win_across_shards() {
+    let r = Dataset::FoG.generate(3000, 9);
+    let exact: Vec<f64> = r[120..120 + 128].to_vec();
+    let noisy = extract_queries(&r, 1, 128, 0.1, 10).remove(0);
+    let engine =
+        Engine::new(r.clone(), &EngineConfig { shards: 3, ..Default::default() }).unwrap();
+    let qs = vec![Query::new(exact, 0.1), Query::new(noisy, 0.1)];
+    let got = engine.search_batch(&qs, 1).unwrap();
+    for (q, g) in qs.iter().zip(&got) {
+        let want = engine.search_one(q, 1).unwrap();
+        assert_bitwise(g, &want, "retirement batch");
+    }
+    assert_eq!(got[0].matches[0].pos, 120);
+    assert_eq!(got[0].matches[0].dist, 0.0);
+    assert!(got[0].counters.cohort_retired_queries >= 1);
+    // the shard holding the exact match provably skipped its tail strips
+    assert!(
+        got[0].counters.candidates < (r.len() - 128 + 1) as u64,
+        "retired member must not examine every candidate"
+    );
+    // its partner kept scanning everything
+    assert_eq!(got[1].counters.candidates, (r.len() - 128 + 1) as u64);
+}
+
+#[test]
+fn prop_mixed_length_batches_align_index_for_index() {
+    #[derive(Debug)]
+    struct Case {
+        r: Vec<f64>,
+        qs: Vec<(Vec<f64>, f64, Metric)>,
+        k: usize,
+        shards: usize,
+    }
+    run_prop(
+        "cohort batch == sequential search_one",
+        0xC0408,
+        10,
+        |rng| {
+            let r = arb_series(rng, 300, 450);
+            let nq = 3 + rng.below(5) as usize;
+            let qs = (0..nq)
+                .map(|_| {
+                    let qlen = [16usize, 24, 32][rng.below(3) as usize];
+                    let start = rng.below((r.len() - qlen) as u64) as usize;
+                    let mut q: Vec<f64> = r[start..start + qlen].to_vec();
+                    for v in q.iter_mut() {
+                        *v += 0.05 * rng.normal();
+                    }
+                    let ratio = [0.1, 0.3][rng.below(2) as usize];
+                    let metric = Metric::all_default()[rng.below(Metric::COUNT as u64) as usize];
+                    (q, ratio, metric)
+                })
+                .collect();
+            Case { r, qs, k: 1 + rng.below(6) as usize, shards: 1 + rng.below(3) as usize }
+        },
+        |case| {
+            let engine = Engine::new(
+                case.r.clone(),
+                &EngineConfig { shards: case.shards, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            let queries: Vec<Query> = case
+                .qs
+                .iter()
+                .map(|(q, ratio, m)| Query::with_metric(q.clone(), *ratio, *m))
+                .collect();
+            let got = engine.search_batch(&queries, case.k).map_err(|e| e.to_string())?;
+            if got.len() != queries.len() {
+                return Err(format!("{} results for {} queries", got.len(), queries.len()));
+            }
+            for (i, (q, g)) in queries.iter().zip(&got).enumerate() {
+                let want = engine.search_one(q, case.k).map_err(|e| e.to_string())?;
+                if g.matches.len() != want.matches.len() {
+                    return Err(format!(
+                        "index {i}: {} vs {} matches",
+                        g.matches.len(),
+                        want.matches.len()
+                    ));
+                }
+                for (x, y) in g.matches.iter().zip(&want.matches) {
+                    if x.pos != y.pos || x.dist.to_bits() != y.dist.to_bits() {
+                        return Err(format!("index {i} diverged: {x:?} vs {y:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

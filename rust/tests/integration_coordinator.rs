@@ -142,6 +142,7 @@ fn protocol_survives_the_wire() {
         candidates: 1000,
         pruned: 900,
         dtw_calls: 100,
+        cohort: 1,
     };
     assert_eq!(QueryResponse::from_json(&resp.to_json()).unwrap(), resp);
 }
