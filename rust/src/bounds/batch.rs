@@ -122,19 +122,52 @@ impl QueryLanes {
     }
 }
 
+/// Per-position **z-normalised LB_Kim endpoint lanes** for one cohort
+/// strip: the up-to-six candidate points the LB_KimFL hierarchy touches
+/// (`x0..x2` from the window front, `y0..y2` from the back), normalised
+/// with the position's shared `(mean, std)`. The normalised values are
+/// query-independent, so one fill serves every member of the cohort —
+/// the raw-sample analogue of the shared stat lanes.
+#[derive(Debug, Clone, Default)]
+pub struct KimLanes {
+    pub x0: Vec<f64>,
+    pub x1: Vec<f64>,
+    pub x2: Vec<f64>,
+    pub y0: Vec<f64>,
+    pub y1: Vec<f64>,
+    pub y2: Vec<f64>,
+}
+
+/// Candidate points the scalar LB_Kim hierarchy reads (and z-normalises)
+/// per window of `n` points when run to completion: the front/back
+/// endpoints, then one more pair per hierarchy level the length admits.
+/// This is the per-lane unit of the `strip_sample_loads_saved` invariant.
+pub fn kim_loads_per_lane(n: usize) -> u64 {
+    match n {
+        0 => 0,
+        1 | 2 => 2,
+        3 | 4 => 4,
+        _ => 6,
+    }
+}
+
 /// Structure-of-arrays scratch for one strip of a **query-cohort** scan:
 /// the single-query [`StripScratch`] grown a query axis. The per-position
-/// window statistics (`mean`, `std`) are loaded **once per strip** and
-/// shared by every member; each member keeps private [`QueryLanes`]
-/// (bounds, alive flags, survivor order) because each filters against its
-/// own top-k threshold. Owned by the shard worker and reused across
-/// strips, cohorts and queries, so the steady state is allocation-free.
+/// window statistics (`mean`, `std`) and the LB_Kim endpoint lanes
+/// ([`KimLanes`]) are loaded **once per strip** and shared by every
+/// member; each member keeps private [`QueryLanes`] (bounds, alive flags,
+/// survivor order) because each filters against its own top-k threshold.
+/// Owned by the shard worker and reused across strips, cohorts and
+/// queries, so the steady state is allocation-free.
 #[derive(Debug, Clone, Default)]
 pub struct CohortScratch {
     /// per-position window mean, shared by all members
     pub mean: Vec<f64>,
     /// per-position window std, shared by all members
     pub std: Vec<f64>,
+    /// per-position z-normalised LB_Kim endpoints, shared by all members
+    /// (filled only when the cascade's LB_Kim stage runs)
+    pub kim: KimLanes,
     /// one lane set per cohort member (index-aligned with the members)
     pub lanes: Vec<QueryLanes>,
 }
@@ -157,6 +190,41 @@ impl CohortScratch {
         self.mean.extend_from_slice(mean);
         self.std.clear();
         self.std.extend_from_slice(std);
+    }
+
+    /// Load a strip's shared LB_Kim endpoint lanes: for each of the `len`
+    /// windows of `n` points starting at `strip_start`, read the
+    /// hierarchy's endpoint samples once and z-normalise them with the
+    /// already-loaded `(mean, std)` lanes. The values are bit-identical to
+    /// what each member's own [`batch_lb_kim_into`] pass would compute, so
+    /// sharing them is a pure memory-traffic optimisation.
+    pub fn load_kim(&mut self, reference: &[f64], strip_start: usize, len: usize, n: usize) {
+        debug_assert!(len <= self.mean.len() && len <= self.std.len());
+        debug_assert!(strip_start + len + n <= reference.len() + 1);
+        let kim = &mut self.kim;
+        kim.x0.clear();
+        kim.y0.clear();
+        kim.x1.clear();
+        kim.y1.clear();
+        kim.x2.clear();
+        kim.y2.clear();
+        if n == 0 {
+            return;
+        }
+        for i in 0..len {
+            let base = strip_start + i;
+            let (m, s) = (self.mean[i], self.std[i]);
+            kim.x0.push(znorm_point(reference[base], m, s));
+            kim.y0.push(znorm_point(reference[base + n - 1], m, s));
+            if n >= 3 {
+                kim.x1.push(znorm_point(reference[base + 1], m, s));
+                kim.y1.push(znorm_point(reference[base + n - 2], m, s));
+            }
+            if n >= 5 {
+                kim.x2.push(znorm_point(reference[base + 2], m, s));
+                kim.y2.push(znorm_point(reference[base + n - 3], m, s));
+            }
+        }
     }
 }
 
@@ -189,6 +257,43 @@ pub fn batch_lb_kim_into(
     for i in 0..len {
         let c = &reference[strip_start + i..strip_start + i + n];
         out[i] = lb_kim_hierarchy(q, c, mean[i], std[i], f64::INFINITY);
+    }
+}
+
+/// Batched LB_KimFL over a strip from **pre-normalised endpoint lanes**
+/// ([`KimLanes`], loaded once per cohort strip): composes the SAME stage
+/// min-chains as the scalar hierarchy
+/// ([`crate::bounds::lb_kim::stages`] — one copy of the arithmetic, so
+/// the two paths cannot drift), with the candidate-side z-normalisation
+/// factored out because it is query-independent. Bit-identical to
+/// [`batch_lb_kim_into`] (pinned by a unit test below); only the
+/// raw-sample reads are shared.
+pub fn batch_lb_kim_pre(q: &[f64], kim: &KimLanes, len: usize, out: &mut [f64]) {
+    use crate::bounds::lb_kim::stages;
+    let n = q.len();
+    debug_assert!(len <= out.len());
+    if n == 0 {
+        out[..len].fill(0.0);
+        return;
+    }
+    debug_assert!(len <= kim.x0.len() && len <= kim.y0.len());
+    for i in 0..len {
+        let (x0, y0) = (kim.x0[i], kim.y0[i]);
+        let mut lb = stages::ends1(q, x0, y0);
+        if n < 3 {
+            out[i] = lb;
+            continue;
+        }
+        let (x1, y1) = (kim.x1[i], kim.y1[i]);
+        lb += stages::front2(q, x0, x1);
+        lb += stages::back2(q, y0, y1);
+        if n < 5 {
+            out[i] = lb;
+            continue;
+        }
+        let (x2, y2) = (kim.x2[i], kim.y2[i]);
+        lb += stages::front3(q, x0, x1, x2);
+        out[i] = lb + stages::back3(q, y0, y1, y2);
     }
 }
 
@@ -324,6 +429,47 @@ mod tests {
                 assert!(lb <= d + 1e-9, "seed={seed} n={n}: {lb} > {d}");
             }
         }
+    }
+
+    #[test]
+    fn pre_normalised_kim_lanes_match_per_member_batch_bitwise() {
+        // the shared endpoint lanes must reproduce every member's own
+        // batched LB_Kim pass bit for bit, across every length regime of
+        // the hierarchy (1-point, 2-point, 3-point stages)
+        for n in [1usize, 2, 3, 4, 5, 8, 32] {
+            let mut rnd = xorshift(11 + n as u64);
+            let q = if n == 1 {
+                vec![0.7]
+            } else {
+                znorm(&(0..n).map(|_| rnd()).collect::<Vec<_>>())
+            };
+            let reference: Vec<f64> = (0..n + 50).map(|_| rnd() * 3.0 + 0.5).collect();
+            let strip_start = 3usize;
+            let len = 40;
+            let (mut mean, mut std) = (vec![0.0; len], vec![0.0; len]);
+            for i in 0..len {
+                let (bm, bs) = stats(&reference[strip_start + i..strip_start + i + n]);
+                (mean[i], std[i]) = (bm, bs);
+            }
+            let mut scratch = CohortScratch::default();
+            scratch.load_stats(&mean, &std);
+            scratch.load_kim(&reference, strip_start, len, n);
+            let mut pre = vec![0.0; len];
+            batch_lb_kim_pre(&q, &scratch.kim, len, &mut pre);
+            let mut want = vec![0.0; len];
+            batch_lb_kim_into(&q, &reference, strip_start, len, &mean, &std, &mut want);
+            for i in 0..len {
+                assert_eq!(pre[i].to_bits(), want[i].to_bits(), "n={n} lane={i}");
+            }
+        }
+        // the invariant's per-lane unit tracks the hierarchy stages
+        assert_eq!(kim_loads_per_lane(0), 0);
+        assert_eq!(kim_loads_per_lane(1), 2);
+        assert_eq!(kim_loads_per_lane(2), 2);
+        assert_eq!(kim_loads_per_lane(3), 4);
+        assert_eq!(kim_loads_per_lane(4), 4);
+        assert_eq!(kim_loads_per_lane(5), 6);
+        assert_eq!(kim_loads_per_lane(128), 6);
     }
 
     #[test]

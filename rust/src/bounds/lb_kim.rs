@@ -10,8 +10,53 @@
 //! are z-normalised on the fly, so the whole cascade touches at most six
 //! candidate points when it prunes.
 
-use crate::distances::cost::sqed;
 use crate::norm::znorm::znorm_point;
+
+/// The hierarchy's per-stage min-chains over already-normalised endpoint
+/// values — ONE copy of the alignment arithmetic, composed by both the
+/// lazy early-exiting scalar ([`lb_kim_hierarchy`]) and the
+/// pre-normalised batch path ([`crate::bounds::batch::batch_lb_kim_pre`]),
+/// so the two cannot drift apart.
+pub(crate) mod stages {
+    use crate::distances::cost::sqed;
+
+    /// 1 point at front and back (always exactly aligned).
+    #[inline(always)]
+    pub fn ends1(q: &[f64], x0: f64, y0: f64) -> f64 {
+        let n = q.len();
+        sqed(x0, q[0]) + sqed(y0, q[n - 1])
+    }
+    /// 2 points at front.
+    #[inline(always)]
+    pub fn front2(q: &[f64], x0: f64, x1: f64) -> f64 {
+        sqed(x1, q[0]).min(sqed(x0, q[1])).min(sqed(x1, q[1]))
+    }
+    /// 2 points at back.
+    #[inline(always)]
+    pub fn back2(q: &[f64], y0: f64, y1: f64) -> f64 {
+        let n = q.len();
+        sqed(y1, q[n - 1]).min(sqed(y0, q[n - 2])).min(sqed(y1, q[n - 2]))
+    }
+    /// 3 points at front.
+    #[inline(always)]
+    pub fn front3(q: &[f64], x0: f64, x1: f64, x2: f64) -> f64 {
+        sqed(x0, q[2])
+            .min(sqed(x1, q[2]))
+            .min(sqed(x2, q[2]))
+            .min(sqed(x2, q[1]))
+            .min(sqed(x2, q[0]))
+    }
+    /// 3 points at back.
+    #[inline(always)]
+    pub fn back3(q: &[f64], y0: f64, y1: f64, y2: f64) -> f64 {
+        let n = q.len();
+        sqed(y0, q[n - 3])
+            .min(sqed(y1, q[n - 3]))
+            .min(sqed(y2, q[n - 3]))
+            .min(sqed(y2, q[n - 2]))
+            .min(sqed(y2, q[n - 1]))
+    }
+}
 
 /// LB_KimFL hierarchy of `q` (z-normalised) vs the raw window `c` with
 /// normalisation (mean, std). Returns a lower bound on `DTW_w(q, znorm(c))`
@@ -24,46 +69,29 @@ pub fn lb_kim_hierarchy(q: &[f64], c: &[f64], mean: f64, std: f64, ub: f64) -> f
         return 0.0;
     }
     let z = |i: usize| znorm_point(c[i], mean, std);
-    // 1 point at front and back (always exactly aligned)
     let x0 = z(0);
     let y0 = z(n - 1);
-    let mut lb = sqed(x0, q[0]) + sqed(y0, q[n - 1]);
+    let mut lb = stages::ends1(q, x0, y0);
     if lb > ub || n < 3 {
         return lb;
     }
-    // 2 points at front
     let x1 = z(1);
-    let d = sqed(x1, q[0]).min(sqed(x0, q[1])).min(sqed(x1, q[1]));
-    lb += d;
+    lb += stages::front2(q, x0, x1);
     if lb > ub {
         return lb;
     }
-    // 2 points at back
     let y1 = z(n - 2);
-    let d = sqed(y1, q[n - 1]).min(sqed(y0, q[n - 2])).min(sqed(y1, q[n - 2]));
-    lb += d;
+    lb += stages::back2(q, y0, y1);
     if lb > ub || n < 5 {
         return lb;
     }
-    // 3 points at front
     let x2 = z(2);
-    let d = sqed(x0, q[2])
-        .min(sqed(x1, q[2]))
-        .min(sqed(x2, q[2]))
-        .min(sqed(x2, q[1]))
-        .min(sqed(x2, q[0]));
-    lb += d;
+    lb += stages::front3(q, x0, x1, x2);
     if lb > ub {
         return lb;
     }
-    // 3 points at back
     let y2 = z(n - 3);
-    let d = sqed(y0, q[n - 3])
-        .min(sqed(y1, q[n - 3]))
-        .min(sqed(y2, q[n - 3]))
-        .min(sqed(y2, q[n - 2]))
-        .min(sqed(y2, q[n - 1]));
-    lb + d
+    lb + stages::back3(q, y0, y1, y2)
 }
 
 #[cfg(test)]

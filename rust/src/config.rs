@@ -77,6 +77,9 @@ pub struct ServeConfig {
     /// in-flight queries the serve loop coalesces into one cohort-batched
     /// submit (1 = serve each query solo)
     pub batch_window: usize,
+    /// milliseconds a partial batch window may wait before it is flushed
+    /// anyway (0 = no deadline: wait for the window to fill)
+    pub batch_deadline_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -87,6 +90,7 @@ impl Default for ServeConfig {
             artifacts_dir: "artifacts".into(),
             queue_depth: 64,
             batch_window: 1,
+            batch_deadline_ms: 0,
         }
     }
 }
@@ -130,6 +134,7 @@ impl Config {
             ("serve", "artifacts_dir") => self.serve.artifacts_dir = v.string()?,
             ("serve", "queue_depth") => self.serve.queue_depth = v.usize()?,
             ("serve", "batch_window") => self.serve.batch_window = v.usize()?,
+            ("serve", "batch_deadline_ms") => self.serve.batch_deadline_ms = v.usize()? as u64,
             _ => bail!("unknown config key"),
         }
         Ok(())
@@ -294,8 +299,10 @@ mod tests {
         // untouched keys keep defaults
         assert_eq!(c.serve.batch, 64);
         assert_eq!(c.serve.batch_window, 1);
-        let c2 = Config::from_str("[serve]\nbatch_window = 16\n").unwrap();
+        assert_eq!(c.serve.batch_deadline_ms, 0);
+        let c2 = Config::from_str("[serve]\nbatch_window = 16\nbatch_deadline_ms = 25\n").unwrap();
         assert_eq!(c2.serve.batch_window, 16);
+        assert_eq!(c2.serve.batch_deadline_ms, 25);
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Batch-window coalescing for the serve loop: gather in-flight requests
+//! into one [`crate::coordinator::Service::submit_batch`] call, flushing
+//! when the window fills **or** a deadline expires — so a lone query never
+//! waits indefinitely for `batch_window - 1` neighbours that may not come.
+//!
+//! The coalescer is deliberately clock-injected (`Instant` parameters, no
+//! internal `now()` calls): the serve loop passes real arrival times, the
+//! tests pass synthetic ones, and both exercise the same flush logic.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::protocol::QueryRequest;
+
+/// Gathers requests into batches of at most `window`, flushing a partial
+/// batch once `deadline` has elapsed since its **first** request arrived
+/// (`None` = count-only coalescing, the pre-deadline behaviour).
+#[derive(Debug)]
+pub struct BatchCoalescer {
+    window: usize,
+    deadline: Option<Duration>,
+    pending: Vec<QueryRequest>,
+    /// arrival time of the oldest pending request
+    opened_at: Option<Instant>,
+}
+
+impl BatchCoalescer {
+    pub fn new(window: usize, deadline: Option<Duration>) -> Self {
+        Self { window: window.max(1), deadline, pending: Vec::new(), opened_at: None }
+    }
+
+    /// Requests currently waiting for a flush.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Has the partial window been waiting longer than the deadline?
+    /// Always false with no pending requests or no deadline configured.
+    pub fn due(&self, now: Instant) -> bool {
+        match (self.deadline, self.opened_at) {
+            (Some(d), Some(t0)) => now.duration_since(t0) >= d,
+            _ => false,
+        }
+    }
+
+    /// Accept one request that arrived at `now`. Returns a batch to serve
+    /// when the window filled or the deadline expired — the batch may be
+    /// smaller than the window (deadline flush), down to a single query.
+    pub fn push(&mut self, req: QueryRequest, now: Instant) -> Option<Vec<QueryRequest>> {
+        if self.pending.is_empty() {
+            self.opened_at = Some(now);
+        }
+        self.pending.push(req);
+        if self.pending.len() >= self.window || self.due(now) {
+            return self.flush();
+        }
+        None
+    }
+
+    /// Flush the partial window if its deadline has expired — the serve
+    /// loop's idle tick, so a waiting query is answered even when no new
+    /// request arrives to trigger [`BatchCoalescer::push`].
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<QueryRequest>> {
+        if self.due(now) {
+            self.flush()
+        } else {
+            None
+        }
+    }
+
+    /// Unconditionally flush whatever is pending (end of input / shutdown).
+    pub fn flush(&mut self) -> Option<Vec<QueryRequest>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        self.opened_at = None;
+        Some(std::mem::take(&mut self.pending))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::metric::Metric;
+    use crate::search::suite::Suite;
+
+    fn req(id: u64) -> QueryRequest {
+        QueryRequest {
+            id,
+            query: vec![0.0, 1.0, 2.0],
+            window_ratio: 0.1,
+            suite: Suite::UcrMon,
+            k: 1,
+            metric: Metric::Cdtw,
+        }
+    }
+
+    #[test]
+    fn full_window_flushes_immediately() {
+        let mut c = BatchCoalescer::new(2, Some(Duration::from_secs(3600)));
+        let t0 = Instant::now();
+        assert!(c.push(req(0), t0).is_none());
+        let batch = c.push(req(1), t0).expect("window full");
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_window() {
+        let mut c = BatchCoalescer::new(8, Some(Duration::from_millis(5)));
+        let t0 = Instant::now();
+        assert!(c.push(req(7), t0).is_none());
+        assert!(!c.due(t0));
+        assert!(c.poll(t0 + Duration::from_millis(4)).is_none());
+        let batch = c.poll(t0 + Duration::from_millis(5)).expect("deadline flush");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 7);
+        // the deadline clock restarts with the next first arrival
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(c.push(req(8), t1).is_none());
+        assert!(!c.due(t1 + Duration::from_millis(4)));
+        assert!(c.due(t1 + Duration::from_millis(6)));
+    }
+
+    #[test]
+    fn late_push_triggers_deadline_flush_inline() {
+        let mut c = BatchCoalescer::new(8, Some(Duration::from_millis(5)));
+        let t0 = Instant::now();
+        assert!(c.push(req(0), t0).is_none());
+        // the next arrival lands after the deadline: it joins the batch
+        // and flushes it, rather than waiting for a poll
+        let batch = c.push(req(1), t0 + Duration::from_millis(9)).expect("due on push");
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn no_deadline_means_count_only() {
+        let mut c = BatchCoalescer::new(3, None);
+        let t0 = Instant::now();
+        assert!(c.push(req(0), t0).is_none());
+        assert!(c.poll(t0 + Duration::from_secs(100)).is_none());
+        assert!(!c.due(t0 + Duration::from_secs(100)));
+        // the terminal flush still drains the tail
+        let batch = c.flush().expect("tail");
+        assert_eq!(batch.len(), 1);
+        assert!(c.flush().is_none());
+    }
+
+    #[test]
+    fn zero_deadline_serves_every_query_solo() {
+        let mut c = BatchCoalescer::new(8, Some(Duration::ZERO));
+        let t0 = Instant::now();
+        let batch = c.push(req(0), t0).expect("immediate flush");
+        assert_eq!(batch.len(), 1);
+    }
+}

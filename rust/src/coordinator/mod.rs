@@ -21,15 +21,19 @@
 //! * [`batcher`] — panels of candidates through the AOT XLA prefilter
 //! * [`router`] — per-query fan-out/fan-in with deterministic
 //!   `(dist, pos)` merge of the shards' result heaps
+//! * [`coalescer`] — batch-window gathering for the serve loop, with
+//!   count-based *and* deadline-based flushing (`--batch-deadline-ms`)
 //! * [`service`] — lifecycle: spawn, submit, drain, shutdown
 
 #[cfg(feature = "xla")]
 pub mod batcher;
+pub mod coalescer;
 pub mod protocol;
 pub mod router;
 pub mod service;
 pub mod state;
 pub mod worker;
 
+pub use coalescer::BatchCoalescer;
 pub use protocol::{ErrorResponse, QueryRequest, QueryResponse};
 pub use service::{Service, ServiceConfig};

@@ -47,6 +47,13 @@ pub struct ServiceConfig {
     /// same-shape queries inside the window form cohorts that share one
     /// strip pass over the reference. 1 = serve each query solo.
     pub batch_window: usize,
+    /// milliseconds a partial batch window may wait for more in-flight
+    /// queries before the serve loop flushes it anyway
+    /// (`repro serve --batch-deadline-ms`; 0 = no deadline, wait for the
+    /// window to fill — the pre-deadline behaviour). Consumed by the
+    /// serve loop's [`crate::coordinator::BatchCoalescer`]; the service
+    /// itself serves whatever batch it is handed.
+    pub batch_deadline_ms: u64,
     /// artifacts directory; `None` disables the XLA suite. Ignored when
     /// the crate is built without the `xla` feature.
     pub artifacts_dir: Option<std::path::PathBuf>,
@@ -59,6 +66,7 @@ impl Default for ServiceConfig {
             sync_every: DEFAULT_SYNC_EVERY,
             scan_mode: ScanMode::default(),
             batch_window: 1,
+            batch_deadline_ms: 0,
             artifacts_dir: None,
         }
     }
@@ -117,6 +125,7 @@ pub struct Service {
     sync_every: usize,
     scan_mode: ScanMode,
     batch_window: usize,
+    batch_deadline_ms: u64,
     busy: Arc<AtomicU64>,
     served: AtomicU64,
 }
@@ -169,6 +178,7 @@ impl Service {
             sync_every: cfg.sync_every,
             scan_mode: cfg.scan_mode,
             batch_window: cfg.batch_window.max(1),
+            batch_deadline_ms: cfg.batch_deadline_ms,
             busy,
             served: AtomicU64::new(0),
         })
@@ -462,6 +472,13 @@ impl Service {
     pub fn batch_window(&self) -> usize {
         self.batch_window
     }
+
+    /// How long a partial batch window may wait before the serve loop
+    /// flushes it (`None` = wait for the window to fill).
+    pub fn batch_deadline(&self) -> Option<std::time::Duration> {
+        (self.batch_deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(self.batch_deadline_ms))
+    }
 }
 
 impl Drop for Service {
@@ -695,6 +712,52 @@ mod tests {
         }
         // 4 cohort answers + 4 solo re-checks
         assert_eq!(svc.queries_served(), 8);
+    }
+
+    #[test]
+    fn deadline_flush_serves_a_single_query_batch_identically_to_solo() {
+        use crate::coordinator::coalescer::BatchCoalescer;
+        use std::time::{Duration, Instant};
+
+        // a service configured with a wide batch window and a deadline:
+        // one lone in-flight query must not wait for seven neighbours —
+        // the coalescer flushes a 1-query batch at the deadline, and the
+        // answer is bitwise what a solo submit returns
+        let r = Dataset::Soccer.generate(1400, 51);
+        let q = crate::data::extract_queries(&r, 1, 96, 0.1, 52).remove(0);
+        let svc = Service::new(
+            r,
+            &ServiceConfig { batch_window: 8, batch_deadline_ms: 5, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(svc.batch_deadline(), Some(Duration::from_millis(5)));
+        let req = QueryRequest {
+            id: 77,
+            query: q,
+            window_ratio: 0.1,
+            suite: Suite::UcrMon,
+            k: 3,
+            metric: Metric::Cdtw,
+        };
+        let mut co = BatchCoalescer::new(svc.batch_window(), svc.batch_deadline());
+        let t0 = Instant::now();
+        assert!(co.push(req.clone(), t0).is_none(), "window of 8 must not fill");
+        // no further arrivals: the deadline, not the window, flushes
+        let batch = co.poll(t0 + Duration::from_millis(6)).expect("deadline flush");
+        assert_eq!(batch.len(), 1, "partial window flushed as a 1-query batch");
+        let got = svc.submit_batch(&batch).remove(0).unwrap();
+        let want = svc.submit(&req).unwrap();
+        assert_eq!(got.id, 77);
+        assert_eq!(got.cohort, 1);
+        assert_eq!(got.matches.len(), want.matches.len());
+        for (x, y) in got.matches.iter().zip(&want.matches) {
+            assert_eq!(x.pos, y.pos);
+            assert_eq!(x.dist.to_bits(), y.dist.to_bits());
+        }
+        // a zero deadline means "no deadline" (count-only coalescing)
+        let svc0 =
+            Service::new(Dataset::Soccer.generate(300, 1), &ServiceConfig::default()).unwrap();
+        assert_eq!(svc0.batch_deadline(), None);
     }
 
     #[test]

@@ -1,8 +1,5 @@
-//! Point-wise cost functions.
-//!
-//! The paper (and the UCR suite) use the squared Euclidean distance between
-//! points; the elastic extensions in [`super::elastic`] reuse these for
-//! their gap/match costs.
+//! Point-wise cost functions: the paper (and the UCR suite) use squared
+//! Euclidean; the elastic cost models reuse these for gap/match costs.
 
 /// Squared Euclidean distance between two points — the default DTW cost.
 #[inline(always)]

@@ -11,40 +11,16 @@ pub fn dtw(a: &[f64], b: &[f64]) -> f64 {
 }
 
 /// [`dtw`] with a caller-provided workspace (allocation-free hot path).
+/// Algorithm 1 is the `w >= len` case of the banded scan — same cell
+/// formula, same sentinels — so this is [`cdtw_ws`] with a full-width
+/// band, bitwise (one loop body to maintain instead of two).
 pub fn dtw_ws(a: &[f64], b: &[f64], ws: &mut DtwWorkspace) -> f64 {
-    if a.is_empty() || b.is_empty() {
-        return if a.len() == b.len() { 0.0 } else { f64::INFINITY };
-    }
-    let (li, co) = lines_cols(a, b);
-    ws.reset(co.len());
-    // Horizontal border: curr holds line 0, swapped into prev on entry
-    // (Algorithm 1 lines 4–7).
-    ws.curr[0] = 0.0;
-    for i in 0..li.len() {
-        std::mem::swap(&mut ws.prev, &mut ws.curr);
-        ws.curr[0] = f64::INFINITY;
-        let v = li[i];
-        // `left` carries curr[j-1] in a register, and the prev-row min is
-        // taken *before* the loop-carried value enters the chain: the
-        // critical path per cell is min+add instead of min+min+add.
-        // (IEEE-exact: addition is rounding-monotone, so the reassociation
-        // cannot change the result.)
-        let mut left = f64::INFINITY;
-        for j in 1..=co.len() {
-            let c = sqed(v, co[j - 1]);
-            let bp = ws.prev[j].min(ws.prev[j - 1]);
-            let d = c + left.min(bp);
-            ws.curr[j] = d;
-            left = d;
-        }
-    }
-    ws.curr[co.len()]
+    cdtw_ws(a, b, a.len().max(b.len()), ws)
 }
 
-/// Sakoe-Chiba-banded DTW (cDTW): warping paths may deviate at most `w`
-/// cells from the diagonal. `w >= max(len)` degenerates to [`dtw`]; if the
-/// length difference exceeds `w` no warping path exists and the distance
-/// is `+inf`.
+/// Sakoe-Chiba-banded DTW (cDTW): warping paths deviate at most `w` cells
+/// from the diagonal; `w >= max(len)` degenerates to [`dtw`], a length
+/// difference beyond `w` has no admissible path (`+inf`).
 pub fn cdtw(a: &[f64], b: &[f64], w: usize) -> f64 {
     let mut ws = DtwWorkspace::default();
     cdtw_ws(a, b, w, &mut ws)
@@ -87,9 +63,8 @@ pub fn cdtw_ws(a: &[f64], b: &[f64], w: usize, ws: &mut DtwWorkspace) -> f64 {
     ws.curr[m]
 }
 
-/// Full-matrix DP — the slow, obviously-correct oracle used by tests.
-/// Returns the whole (n+1)×(m+1) matrix so tests can also check individual
-/// cells against the paper's worked examples (Figs. 2–4).
+/// Full-matrix DP oracle; returns the whole (n+1)×(m+1) matrix so tests
+/// can check individual cells against the paper's worked examples.
 pub fn dtw_matrix(a: &[f64], b: &[f64], w: Option<usize>) -> Vec<Vec<f64>> {
     let (n, m) = (a.len(), b.len());
     let w = w.unwrap_or(n.max(m));

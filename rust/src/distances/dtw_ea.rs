@@ -1,13 +1,9 @@
-//! Early-abandoned DTW, UCR-suite style (paper §2.2 and [14]).
-//!
-//! Computes banded DTW keeping the minimum of each line; abandons (returns
-//! `+inf`) as soon as that minimum *strictly* exceeds the upper bound — the
-//! strictness keeps ties (paper §2.2). Optionally tightens the bound per
-//! line with the cumulative lower-bound tail `cb` computed from LB_Keogh
-//! (the UCR suite trick: any path through line `i` must still pay at least
-//! `cb[min(i + w + 1, m)]` in the future).
-//!
-//! This is the DTW used by our `Suite::Ucr` baseline.
+//! Early-abandoned DTW, UCR-suite style (paper §2.2 and [14]): banded DTW
+//! keeping each line's minimum, abandoning once it *strictly* exceeds the
+//! upper bound (strictness keeps ties), with optional per-line tightening
+//! from the cumulative LB_Keogh tail `cb`. The `Suite::Ucr` comparator
+//! core — a distinct algorithm, deliberately NOT folded into the unified
+//! EAPruned kernel.
 
 use super::DtwWorkspace;
 use crate::distances::cost::sqed;

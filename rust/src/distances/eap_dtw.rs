@@ -1,239 +1,73 @@
 //! **EAPrunedDTW** — Algorithm 3 of the paper, the system's core
-//! contribution.
-//!
-//! The DP scan is decomposed into four per-line stages:
-//!
-//! 1. **Left border extension** — while the line still starts at
-//!    `next_start`, cells whose value exceeds the threshold are *discard
-//!    points*: the left border moves right, permanently (`next_start += 1`).
-//!    Cells here have no viable left neighbour, so only two dependencies.
-//! 2. **Interior** — ordinary three-way-min DTW cells, up to the previous
-//!    line's *pruning point*.
-//! 3. **The pruning-point column** — where the left and right borders can
-//!    *collide*. If the cell sits right after a discard point it depends on
-//!    its diagonal only, and a value above the threshold proves every
-//!    remaining alignment exceeds `ub` → **early abandon** (paper Fig. 4b,
-//!    blue cell). This collision test is what lets EAPrunedDTW abandon
-//!    earlier than PrunedDTW's row-minimum check.
-//! 4. **Right of the pruning point** — cells here can only depend on their
-//!    left neighbour (everything above is `> ub`), so the line is cut as
-//!    soon as one exceeds the threshold, creating the new pruning point.
-//!
-//! Stages 1 and 4 update cells from one or two previous values instead of
-//! the three-way min — the paper's second headline saving.
-//!
-//! This implementation extends Algorithm 3 with the two features the
-//! UCR-MON suite needs (paper §5): a Sakoe-Chiba band `w`, folded into the
-//! borders (band-left merges into `next_start`, band-right caps the line),
-//! and per-line upper-bound tightening from the cumulative LB_Keogh tail
-//! `cb` (any path through line `i` still pays `cb[min(i+w+1, m)]` in the
-//! future, so the effective line threshold is `ub - cb[...]`).
+//! contribution: thin wrappers over the unified band kernel instantiated
+//! with the uniform squared-Euclidean cost model ([`kernel::DtwCost`]).
+//! The DTW-specialised kernel copy that lived here is retired — the
+//! `UNIFORM` const makes [`kernel::eap_kernel`] const-fold the same
+//! 1-/2-dependency stage updates, bitwise- and cost-equivalent to the old
+//! code (pinned by the property tests in `kernel.rs` against a verbatim
+//! copy). The wrappers keep Algorithm 3's two production extensions
+//! (§5): the Sakoe-Chiba band `w` and per-line threshold tightening from
+//! the cumulative LB_Keogh tail `cb`.
 
-use super::{lines_cols, DtwWorkspace};
-use crate::distances::cost::sqed;
+use super::kernel::{eap_kernel, eap_kernel_counted, DtwCost, KernelEval};
+use super::{lines_cols, KernelWorkspace};
 
 /// Unwindowed EAPrunedDTW — the paper's Algorithm 3 exactly: exact DTW when
 /// the distance is `<= ub`, `+inf` once it can prove it strictly exceeds it.
 pub fn eap_dtw(a: &[f64], b: &[f64], ub: f64) -> f64 {
-    let mut ws = DtwWorkspace::default();
-    eap_dtw_ws(a, b, ub, &mut ws)
-}
-
-/// [`eap_dtw`] with a caller-provided workspace.
-pub fn eap_dtw_ws(a: &[f64], b: &[f64], ub: f64, ws: &mut DtwWorkspace) -> f64 {
-    let w = a.len().max(b.len());
-    let mut cells = 0u64;
-    eap_impl::<false>(a, b, w, ub, None, ws, &mut cells)
+    eap_cdtw(a, b, a.len().max(b.len()), ub, None, &mut KernelWorkspace::default())
 }
 
 /// Windowed EAPrunedDTW with optional cumulative-bound tightening — the
-/// production distance of the UCR-MON suites.
-///
-/// * `w` — Sakoe-Chiba band (cells). Series whose length difference
-///   exceeds `w` have no admissible path → `+inf`.
-/// * `cb` — cumulative LB_Keogh tail over the *column* series positions
-///   (`cb.len() == min_len + 1`, `cb[min_len] == 0`, non-increasing).
+/// production distance of the UCR-MON suites. `w` is the Sakoe-Chiba band
+/// (length differences beyond it have no admissible path → `+inf`); `cb`
+/// the cumulative LB_Keogh tail over the *column* positions.
 pub fn eap_cdtw(
     a: &[f64],
     b: &[f64],
     w: usize,
     ub: f64,
     cb: Option<&[f64]>,
-    ws: &mut DtwWorkspace,
+    ws: &mut KernelWorkspace,
 ) -> f64 {
-    let mut cells = 0u64;
-    eap_impl::<false>(a, b, w, ub, cb, ws, &mut cells)
+    eap_cdtw_eval(a, b, w, ub, cb, ws).dist
 }
 
-/// [`eap_cdtw`] that also reports how many DP cells were actually computed
-/// — the instrumentation behind the pruning-effectiveness ablations (A1/A2).
-/// Monomorphised separately so the production path pays nothing for it.
+/// [`eap_cdtw`] returning the full [`KernelEval`] outcome — distance plus
+/// whether an `+inf` was a threshold-driven early abandon. The serving
+/// layers route through this for exact abandon attribution.
+pub(crate) fn eap_cdtw_eval(
+    a: &[f64],
+    b: &[f64],
+    w: usize,
+    ub: f64,
+    cb: Option<&[f64]>,
+    ws: &mut KernelWorkspace,
+) -> KernelEval {
+    let (li, co) = lines_cols(a, b);
+    eap_kernel(&DtwCost { li, co }, w, ub, cb, ws)
+}
+
+/// [`eap_cdtw`] that also reports how many DP cells were actually
+/// computed (the A1/A2 ablation instrumentation).
 pub fn eap_cdtw_counted(
     a: &[f64],
     b: &[f64],
     w: usize,
     ub: f64,
     cb: Option<&[f64]>,
-    ws: &mut DtwWorkspace,
+    ws: &mut KernelWorkspace,
 ) -> (f64, u64) {
-    let mut cells = 0u64;
-    let d = eap_impl::<true>(a, b, w, ub, cb, ws, &mut cells);
-    (d, cells)
-}
-
-#[inline(always)]
-fn eap_impl<const COUNT: bool>(
-    a: &[f64],
-    b: &[f64],
-    w: usize,
-    ub: f64,
-    cb: Option<&[f64]>,
-    ws: &mut DtwWorkspace,
-    cells: &mut u64,
-) -> f64 {
-    if a.is_empty() || b.is_empty() {
-        return if a.len() == b.len() { 0.0 } else { f64::INFINITY };
-    }
     let (li, co) = lines_cols(a, b);
-    let n = li.len();
-    let m = co.len();
-    if n - m > w {
-        return f64::INFINITY;
-    }
-    if let Some(cb) = cb {
-        debug_assert_eq!(cb.len(), m + 1);
-        debug_assert!(cb[m] == 0.0);
-    }
-    ws.reset(m);
-    ws.curr[0] = 0.0;
-
-    let mut next_start = 1usize; // first non-discarded column (left border)
-    let mut ppp = 1usize; // previous line's pruning point
-    let mut pp = 0usize; // pruning point being built on the current line
-
-    for i in 1..=n {
-        std::mem::swap(&mut ws.prev, &mut ws.curr);
-        let v = li[i - 1];
-        let band_lo = i.saturating_sub(w).max(1);
-        let band_hi = i.checked_add(w).map_or(m, |x| x.min(m));
-        // Band-left is an INF border: folding it into next_start is safe
-        // because both only ever move right.
-        if band_lo > next_start {
-            next_start = band_lo;
-        }
-        // Per-line threshold: ub minus the future cost any path through
-        // this line must still pay (0 without cb).
-        let th = match cb {
-            Some(cb) => {
-                let idx = i
-                    .checked_add(w)
-                    .and_then(|x| x.checked_add(1))
-                    .map_or(m, |x| x.min(m));
-                ub - cb[idx]
-            }
-            None => ub,
-        };
-        let prev = &mut ws.prev;
-        let curr = &mut ws.curr;
-        let mut j = next_start;
-        curr[j - 1] = f64::INFINITY; // left-border sentinel; next line's diagonal
-        // `left` carries curr[j-1] in a register across all four stages so
-        // the loop-carried FP chain is min+add, not a memory round-trip
-        // plus min+min+add (see dtw.rs; IEEE-exact reassociation).
-        let mut left = f64::INFINITY;
-
-        // Stage 1: discard points — no left dependency.
-        while j == next_start && j < ppp {
-            let d = sqed(v, co[j - 1]) + prev[j].min(prev[j - 1]);
-            curr[j] = d;
-            left = d;
-            if COUNT {
-                *cells += 1;
-            }
-            if d <= th {
-                pp = j + 1;
-            } else {
-                next_start += 1;
-            }
-            j += 1;
-        }
-        // Stage 2: interior — classic three-way min.
-        while j < ppp {
-            let bp = prev[j].min(prev[j - 1]);
-            let d = sqed(v, co[j - 1]) + left.min(bp);
-            curr[j] = d;
-            left = d;
-            if COUNT {
-                *cells += 1;
-            }
-            if d <= th {
-                pp = j + 1;
-            }
-            j += 1;
-        }
-        // Stage 3: the previous pruning point's column.
-        if j <= band_hi {
-            let c = sqed(v, co[j - 1]);
-            if j == next_start {
-                // Right after a discard point: diagonal dependency only.
-                // A value above the threshold collides the borders →
-                // nothing viable remains anywhere: early abandon.
-                let d = c + prev[j - 1];
-                curr[j] = d;
-                left = d;
-                if COUNT {
-                    *cells += 1;
-                }
-                if d <= th {
-                    pp = j + 1;
-                } else {
-                    return f64::INFINITY;
-                }
-            } else {
-                let d = c + left.min(prev[j - 1]);
-                curr[j] = d;
-                left = d;
-                if COUNT {
-                    *cells += 1;
-                }
-                if d <= th {
-                    pp = j + 1;
-                }
-            }
-            j += 1;
-        } else if j == next_start {
-            // The discard points swallowed the whole (banded) line:
-            // same abandon as Algorithm 2.
-            return f64::INFINITY;
-        }
-        // Stage 4: right of the pruning point — left dependency only;
-        // the first value above the threshold prunes the rest of the line.
-        while j == pp && j <= band_hi {
-            let d = sqed(v, co[j - 1]) + left;
-            curr[j] = d;
-            left = d;
-            if COUNT {
-                *cells += 1;
-            }
-            if d <= th {
-                pp = j + 1;
-            }
-            j += 1;
-        }
-        ppp = pp;
-    }
-    // Exact only if the last line's pruning point cleared the last column.
-    if ppp > m {
-        ws.curr[m]
-    } else {
-        f64::INFINITY
-    }
+    let (e, cells) = eap_kernel_counted(&DtwCost { li, co }, w, ub, cb, ws);
+    (e.dist, cells)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::distances::dtw::{cdtw, dtw, dtw_oracle};
+    use crate::distances::DtwWorkspace;
 
     const S: [f64; 6] = [3.0, 1.0, 4.0, 4.0, 1.0, 1.0];
     const T: [f64; 6] = [1.0, 3.0, 2.0, 1.0, 2.0, 2.0];

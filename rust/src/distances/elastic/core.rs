@@ -1,222 +1,40 @@
-//! Generalised EAPruned skeleton: Algorithm 3 lifted over an arbitrary
-//! elastic cost structure.
-//!
-//! Differences from the DTW-specialised [`crate::distances::eap_dtw`]:
-//!
-//! * Moves carry distinct costs (`diag`/`top`/`left` into cell `(i,j)`).
-//! * Borders may be **finite** (ERP's row 0 / column 0 accumulate gap
-//!   penalties). Finite borders interact with pruning: a discard point may
-//!   only extend the left border if everything to its left — including the
-//!   border column — exceeds the threshold, so stage 1 gates
-//!   `next_start += 1` on `curr[j-1] > ub` (the sentinel `+inf` for
-//!   DTW-like models, the live border value for ERP). Likewise the initial
-//!   pruning point is the first row-0 border cell above `ub` rather than 1.
-//! * Border functions MUST be non-decreasing (all move costs are `>= 0`),
-//!   which every model here satisfies; `debug_assert`ed in the scan.
-//!
-//! Stage 1 keeps the three-way min (the left dependency may be a live
-//! border) — the extensions trade a little of the paper's stage-1 saving
-//! for generality; stages 3 and 4 keep the 1-/2-dependency updates.
+//! Compatibility surface of the generalised EAPruned skeleton, now a thin
+//! veneer over the unified band kernel: the retired generic skeleton
+//! survives only as a bitwise test oracle in `kernel.rs`, its trait is
+//! today's [`CostModel`] (re-exported under the historical name
+//! [`ElasticModel`]), and [`eap_elastic`] / [`naive_elastic`] are the old
+//! entry points delegating to the kernel.
 
-use crate::distances::DtwWorkspace;
+use crate::distances::kernel::{eap_kernel, CostModel};
+use crate::distances::KernelWorkspace;
 
-/// An elastic distance's cost structure. Indices are 1-based (DP
-/// convention); implementations read their series with `[i-1]`.
-pub trait ElasticModel {
-    /// Number of points in the "lines" series.
-    fn n_lines(&self) -> usize;
-    /// Number of points in the "columns" series.
-    fn n_cols(&self) -> usize;
-    /// Cost of the diagonal (match) move into `(i, j)`.
-    fn diag(&self, i: usize, j: usize) -> f64;
-    /// Cost of the vertical move into `(i, j)` (consume line point `i`).
-    fn top(&self, i: usize, j: usize) -> f64;
-    /// Cost of the horizontal move into `(i, j)` (consume column point `j`).
-    fn left(&self, i: usize, j: usize) -> f64;
-    /// Border row `D(0, j)`, `j >= 1`; non-decreasing in `j`.
-    fn border_row(&self, _j: usize) -> f64 {
-        f64::INFINITY
-    }
-    /// Border column `D(i, 0)`, `i >= 1`; non-decreasing in `i`.
-    fn border_col(&self, _i: usize) -> f64 {
-        f64::INFINITY
-    }
-}
+pub use crate::distances::kernel::naive_kernel as naive_elastic;
+pub use crate::distances::kernel::CostModel as ElasticModel;
 
-/// EAPruned evaluation of an [`ElasticModel`] under a Sakoe-Chiba band `w`:
-/// exact distance when it is `<= ub`, `+inf` once provably above.
-pub fn eap_elastic<M: ElasticModel>(
+/// EAPruned evaluation of a [`CostModel`]: the historical distance-only
+/// entry point; callers that want exact abandon attribution use
+/// [`eap_kernel`] directly.
+pub fn eap_elastic<M: CostModel>(
     model: &M,
     w: usize,
     ub: f64,
-    ws: &mut DtwWorkspace,
+    ws: &mut KernelWorkspace,
 ) -> f64 {
-    let n = model.n_lines();
-    let m = model.n_cols();
-    if n == 0 || m == 0 {
-        return if n == m { 0.0 } else { f64::INFINITY };
-    }
-    if n.abs_diff(m) > w {
-        return f64::INFINITY;
-    }
-    ws.reset(m);
-    // Row 0: the border row. The initial pruning point is the first border
-    // cell strictly above ub (everything after it stays above — borders are
-    // non-decreasing).
-    ws.curr[0] = 0.0;
-    // Row-0 cells beyond the band (j > w) are unreachable (+inf), so the
-    // initial pruning point is the first border cell above ub, else one
-    // past the last in-band border cell.
-    let row0_end = m.min(w);
-    let mut ppp = row0_end + 1;
-    let mut prev_border = 0.0f64;
-    for j in 1..=row0_end {
-        let b = model.border_row(j);
-        debug_assert!(b >= prev_border, "border_row must be non-decreasing");
-        prev_border = b;
-        ws.curr[j] = b;
-        if b > ub {
-            ppp = j;
-            break;
-        }
-    }
-
-    let mut next_start = 1usize;
-    let mut pp = 0usize;
-
-    for i in 1..=n {
-        std::mem::swap(&mut ws.prev, &mut ws.curr);
-        let band_lo = i.saturating_sub(w).max(1);
-        let band_hi = i.checked_add(w).map_or(m, |x| x.min(m));
-        if band_lo > next_start {
-            next_start = band_lo;
-        }
-        let prev = &mut ws.prev;
-        let curr = &mut ws.curr;
-        let mut j = next_start;
-        // Left sentinel: the live border for column 0, +inf otherwise.
-        // `left` register-carries curr[j-1] across the stages (see
-        // eap_dtw.rs — keeps the loop-carried FP chain short).
-        let mut left = if j == 1 { model.border_col(i) } else { f64::INFINITY };
-        curr[j - 1] = left;
-
-        // Stage 1: discard-point region. Three-way min (the left value may
-        // be a finite border); next_start may advance only while the left
-        // value is itself above the threshold (continuity over borders).
-        while j == next_start && j < ppp {
-            let left_v = left;
-            let d = (prev[j] + model.top(i, j))
-                .min(prev[j - 1] + model.diag(i, j))
-                .min(left_v + model.left(i, j));
-            curr[j] = d;
-            left = d;
-            if d <= ub {
-                pp = j + 1;
-            } else if left_v > ub {
-                next_start += 1;
-            }
-            j += 1;
-        }
-        // Stage 2: interior.
-        while j < ppp {
-            let bp = (prev[j] + model.top(i, j)).min(prev[j - 1] + model.diag(i, j));
-            let d = bp.min(left + model.left(i, j));
-            curr[j] = d;
-            left = d;
-            if d <= ub {
-                pp = j + 1;
-            }
-            j += 1;
-        }
-        // Stage 3: the previous pruning point's column (top dep excluded —
-        // cells (i-1, j' >= ppp) are all above ub).
-        if j <= band_hi {
-            let left_v = left;
-            let d = (prev[j - 1] + model.diag(i, j)).min(left_v + model.left(i, j));
-            curr[j] = d;
-            left = d;
-            if d <= ub {
-                pp = j + 1;
-            } else if j == next_start && left_v > ub {
-                // Border collision: everything left of this cell — including
-                // a possibly-finite border column — exceeds ub, and so does
-                // this cell: nothing viable remains. (A live ERP border
-                // `<= ub` blocks the abandon: paths may still re-enter.)
-                return f64::INFINITY;
-            }
-            j += 1;
-        } else if j == next_start {
-            // Discard points swallowed the line. Sound even with finite
-            // borders: stage 1 only advances next_start over cells whose
-            // left value is above ub.
-            return f64::INFINITY;
-        }
-        // Stage 4: right of the pruning point (left dep only).
-        while j == pp && j <= band_hi {
-            let d = left + model.left(i, j);
-            curr[j] = d;
-            left = d;
-            if d <= ub {
-                pp = j + 1;
-            }
-            j += 1;
-        }
-        ppp = pp;
-    }
-    if ppp > m {
-        ws.curr[m]
-    } else {
-        f64::INFINITY
-    }
+    eap_kernel(model, w, ub, None, ws).dist
 }
 
-/// Naive full-matrix evaluation of an [`ElasticModel`] — the oracle.
-pub fn naive_elastic<M: ElasticModel>(model: &M, w: usize) -> f64 {
-    let n = model.n_lines();
-    let m = model.n_cols();
-    if n == 0 || m == 0 {
-        return if n == m { 0.0 } else { f64::INFINITY };
-    }
-    let mut d = vec![vec![f64::INFINITY; m + 1]; n + 1];
-    d[0][0] = 0.0;
-    for j in 1..=m.min(w) {
-        d[0][j] = model.border_row(j);
-    }
-    for i in 1..=n.min(w) {
-        d[i][0] = model.border_col(i);
-    }
-    for i in 1..=n {
-        for j in 1..=m {
-            if i.abs_diff(j) > w {
-                continue;
-            }
-            let mut best = f64::INFINITY;
-            if d[i - 1][j].is_finite() {
-                best = best.min(d[i - 1][j] + model.top(i, j));
-            }
-            if d[i - 1][j - 1].is_finite() {
-                best = best.min(d[i - 1][j - 1] + model.diag(i, j));
-            }
-            if d[i][j - 1].is_finite() {
-                best = best.min(d[i][j - 1] + model.left(i, j));
-            }
-            d[i][j] = best;
-        }
-    }
-    d[n][m]
-}
-
-/// DTW expressed as an [`ElasticModel`] — the sanity anchor for the
-/// skeleton, and the A2 ablation comparator: running DTW through the
-/// generic skeleton keeps EAP's borders/pruning/collision logic but gives
-/// up the specialised 1-/2-dependency stage updates, isolating what the
-/// paper's stage decomposition itself is worth.
+/// DTW expressed as a **non-uniform** [`CostModel`] — the A2 ablation
+/// comparator: running DTW through the generalised stage bodies keeps
+/// EAP's borders/pruning/collision logic but gives up the specialised
+/// 1-/2-dependency updates the `UNIFORM` const enables, isolating what
+/// the paper's stage decomposition itself is worth
+/// (`benches/ablation_stages.rs`).
 pub struct DtwAsElastic<'a> {
     pub li: &'a [f64],
     pub co: &'a [f64],
 }
 
-impl ElasticModel for DtwAsElastic<'_> {
+impl CostModel for DtwAsElastic<'_> {
     fn n_lines(&self) -> usize {
         self.li.len()
     }
@@ -238,6 +56,7 @@ impl ElasticModel for DtwAsElastic<'_> {
 mod tests {
     use super::*;
     use crate::distances::dtw::cdtw;
+    use crate::distances::DtwWorkspace;
 
     type DtwModel<'a> = DtwAsElastic<'a>;
 

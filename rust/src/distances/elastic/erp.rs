@@ -1,11 +1,11 @@
-//! ERP — Edit distance with Real Penalty (Chen & Ng, 2004) under the
-//! EAPruned skeleton. Gaps are matched against a constant gap value `g`
-//! (conventionally 0 on z-normalised data); unlike DTW its borders are
-//! *finite*: `D(i,0)` / `D(0,j)` accumulate gap penalties, which is exactly
-//! the case the generalised skeleton's gated pruning handles.
+//! ERP — Edit distance with Real Penalty (Chen & Ng, 2004) as a
+//! [`CostModel`] instantiation of the unified kernel. Unlike DTW its
+//! borders are *finite* (`D(i,0)` / `D(0,j)` accumulate gap penalties) —
+//! exactly the case the kernel's gated non-`UNIFORM` pruning handles.
 
-use super::core::{eap_elastic, naive_elastic, ElasticModel};
+use super::core::{eap_elastic, naive_elastic};
 use crate::distances::cost::sqed;
+use crate::distances::kernel::CostModel;
 use crate::distances::DtwWorkspace;
 
 /// ERP cost structure over two series with gap value `g`.
@@ -34,7 +34,7 @@ impl<'a> Erp<'a> {
     }
 }
 
-impl ElasticModel for Erp<'_> {
+impl CostModel for Erp<'_> {
     fn n_lines(&self) -> usize {
         self.li.len()
     }

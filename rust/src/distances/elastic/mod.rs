@@ -1,11 +1,9 @@
 //! The paper's future-work claim, §6: *"many elastic measures share the
-//! same structure as DTW, only differing in their cost function"* — so the
-//! EAPruned early-abandon/pruning scheme should transfer to them.
-//!
-//! [`core`] generalises Algorithm 3 over an [`core::ElasticModel`]: per-move
-//! costs (diagonal/match, top/delete, left/insert) plus finite or infinite
-//! border rows/columns (ERP's gap borders are finite!). The concrete
-//! models:
+//! same structure as DTW, only differing in their cost function"*. Each
+//! measure here is a [`crate::distances::kernel::CostModel`] — per-move
+//! costs plus finite or infinite borders (ERP's gap borders are finite!)
+//! — evaluated by the ONE unified band kernel; [`core`] keeps the
+//! historical `eap_elastic`/`ElasticModel` names as re-exports.
 //!
 //! * [`erp`] — Edit distance with Real Penalty (gap value `g`)
 //! * [`msm`] — Move-Split-Merge (split/merge cost `c`)

@@ -1,10 +1,12 @@
-//! MSM — Move-Split-Merge (Stefan, Athitsos & Das, 2013) under the EAPruned
-//! skeleton. Point moves cost their absolute difference; splits/merges cost
-//! a constant `c` plus a penalty when the moved point does not lie between
-//! its neighbours. Borders are infinite (paths start at the `(1,1)` match).
+//! MSM — Move-Split-Merge (Stefan, Athitsos & Das, 2013) as a
+//! [`CostModel`] instantiation of the unified kernel: moves cost the
+//! absolute difference, splits/merges a constant `c` plus an
+//! out-of-between penalty. Infinite borders, distinct step costs
+//! (non-`UNIFORM`).
 
-use super::core::{eap_elastic, naive_elastic, ElasticModel};
+use super::core::{eap_elastic, naive_elastic};
 use crate::distances::cost::absd;
+use crate::distances::kernel::CostModel;
 use crate::distances::DtwWorkspace;
 
 #[inline(always)]
@@ -30,7 +32,7 @@ impl<'a> Msm<'a> {
     }
 }
 
-impl ElasticModel for Msm<'_> {
+impl CostModel for Msm<'_> {
     fn n_lines(&self) -> usize {
         self.li.len()
     }

@@ -1,11 +1,11 @@
-//! TWE — Time Warp Edit distance (Marteau, 2009 — reference [9] of the
-//! paper, the motivating example for measures *without* cheap lower
-//! bounds) under the EAPruned skeleton. Stiffness `nu` penalises timestamp
-//! drift; `lambda` penalises delete operations. Borders are infinite with
-//! the conventional 0-padding of both series.
+//! TWE — Time Warp Edit distance (Marteau, 2009 — the paper's motivating
+//! example of a measure *without* cheap lower bounds) as a [`CostModel`]
+//! instantiation of the unified kernel. Stiffness `nu` penalises
+//! timestamp drift, `lambda` deletes; infinite borders, 0-padded series.
 
-use super::core::{eap_elastic, naive_elastic, ElasticModel};
+use super::core::{eap_elastic, naive_elastic};
 use crate::distances::cost::sqed;
+use crate::distances::kernel::CostModel;
 use crate::distances::DtwWorkspace;
 
 /// TWE cost structure with stiffness `nu` and deletion penalty `lambda`.
@@ -39,7 +39,7 @@ impl<'a> Twe<'a> {
     }
 }
 
-impl ElasticModel for Twe<'_> {
+impl CostModel for Twe<'_> {
     fn n_lines(&self) -> usize {
         self.li.len()
     }

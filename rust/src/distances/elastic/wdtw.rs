@@ -1,11 +1,13 @@
-//! WDTW — Weighted DTW (Jeong, Jeong & Omitaomu, 2011) under the EAPruned
-//! skeleton. Every move pays the point cost scaled by a sigmoid weight of
-//! the phase difference `|i-j|` — a soft alternative to the hard
-//! Sakoe-Chiba band. Borders are infinite, all three moves share the cost,
-//! so this is the closest cousin of plain DTW in the extension set.
+//! WDTW — Weighted DTW (Jeong, Jeong & Omitaomu, 2011) as a [`CostModel`]
+//! instantiation of the unified kernel: every move pays the point cost
+//! scaled by a sigmoid weight of `|i-j|` (a soft band). Kept
+//! non-`UNIFORM` — it has always run on the generalised stage bodies, and
+//! staying there preserves bit-for-bit compatibility with its retired
+//! kernel (the conformance suites' contract).
 
-use super::core::{eap_elastic, naive_elastic, ElasticModel};
+use super::core::{eap_elastic, naive_elastic};
 use crate::distances::cost::sqed;
+use crate::distances::kernel::CostModel;
 use crate::distances::DtwWorkspace;
 
 /// Maximum weight (the UEA/tsml convention).
@@ -34,7 +36,7 @@ impl<'a> Wdtw<'a> {
     }
 }
 
-impl ElasticModel for Wdtw<'_> {
+impl CostModel for Wdtw<'_> {
     fn n_lines(&self) -> usize {
         self.li.len()
     }

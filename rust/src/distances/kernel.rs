@@ -1,0 +1,739 @@
+//! **The unified EAPruned band kernel** — Algorithm 3 of the paper as ONE
+//! generic pruned-band recurrence over an inlineable [`CostModel`]. Every
+//! EAPruned evaluation in the crate — cDTW/DTW ([`super::eap_dtw`]),
+//! WDTW/ERP/MSM/TWE ([`super::elastic`]) — is a zero-cost instantiation
+//! of [`eap_kernel`]: one copy of the band bookkeeping
+//! (`next_start`/`pp`/`ppp`), one abandon condition, one place to
+//! optimise. [`CostModel::UNIFORM`] marks the DTW family and const-folds
+//! the paper's specialised 1-/2-dependency stage updates; non-uniform
+//! models (possibly finite borders, distinct step costs) keep the
+//! generalised bodies — `benches/ablation_stages.rs` measures exactly
+//! that toggle. Returned distances `<= ub` are exact; `+inf` with
+//! [`KernelEval::abandoned`] set means proven strictly above `ub`
+//! (strict `>` preserves ties, paper §2.2). The stage walk, band
+//! invariants and abandon conditions are documented in
+//! `distances/README.md`; bitwise identity with the retired specialised
+//! kernels is pinned by the property tests below.
+
+use super::KernelWorkspace;
+use crate::distances::cost::sqed;
+
+/// An elastic distance's cost structure over two series. Indices are
+/// 1-based (DP convention); implementations read their series with
+/// `[i - 1]`. All step costs must be `>= 0` and the border functions
+/// non-decreasing (debug-asserted) — that monotonicity is what makes
+/// discard points permanent and the collision abandon sound.
+pub trait CostModel {
+    /// All three step costs identical and both borders infinite — the DTW
+    /// family. Enables the specialised 1-/2-dependency stage updates via
+    /// const propagation, and is required for `cb` threshold tightening
+    /// (the cascade's bounds lower-bound DTW only).
+    const UNIFORM: bool = false;
+    fn n_lines(&self) -> usize;
+    fn n_cols(&self) -> usize;
+    /// Cost of the diagonal (match) move into `(i, j)`.
+    fn diag(&self, i: usize, j: usize) -> f64;
+    /// Cost of the vertical move into `(i, j)` (consume line point `i`).
+    fn top(&self, i: usize, j: usize) -> f64;
+    /// Cost of the horizontal move into `(i, j)` (consume column point `j`).
+    fn left(&self, i: usize, j: usize) -> f64;
+    /// Border row `D(0, j)`, `j >= 1`; non-decreasing in `j`.
+    fn border_row(&self, _j: usize) -> f64 {
+        f64::INFINITY
+    }
+    /// Border column `D(i, 0)`, `i >= 1`; non-decreasing in `i`.
+    fn border_col(&self, _i: usize) -> f64 {
+        f64::INFINITY
+    }
+}
+
+/// Outcome of one kernel evaluation: the distance plus whether an `+inf`
+/// was a *threshold-driven early abandon* — as opposed to an infeasible
+/// band or a length-mismatched empty input. This is what makes the
+/// per-metric abandon counters exact instead of inferred from
+/// `is_infinite()` at the dispatch site.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelEval {
+    pub dist: f64,
+    pub abandoned: bool,
+}
+
+impl KernelEval {
+    fn done(dist: f64) -> Self {
+        Self { dist, abandoned: false }
+    }
+    fn abandon() -> Self {
+        Self { dist: f64::INFINITY, abandoned: true }
+    }
+    fn infeasible() -> Self {
+        Self { dist: f64::INFINITY, abandoned: false }
+    }
+}
+
+/// EAPruned evaluation of a [`CostModel`] under Sakoe-Chiba band `w` and
+/// upper bound `ub`. `cb`, valid for [`CostModel::UNIFORM`] models only,
+/// is the cumulative lower-bound tail over column positions
+/// (`cb.len() == n_cols + 1`, `cb[n_cols] == 0`, non-increasing): any
+/// path through line `i` still pays `cb[min(i+w+1, m)]` in the future.
+#[inline]
+pub fn eap_kernel<C: CostModel>(
+    model: &C,
+    w: usize,
+    ub: f64,
+    cb: Option<&[f64]>,
+    ws: &mut KernelWorkspace,
+) -> KernelEval {
+    let mut cells = 0u64;
+    eap_core::<C, false>(model, w, ub, cb, ws, &mut cells)
+}
+
+/// [`eap_kernel`] that also reports how many DP cells were computed (the
+/// A1/A2 ablation instrumentation); monomorphised separately so the
+/// production path pays nothing for it.
+pub fn eap_kernel_counted<C: CostModel>(
+    model: &C,
+    w: usize,
+    ub: f64,
+    cb: Option<&[f64]>,
+    ws: &mut KernelWorkspace,
+) -> (KernelEval, u64) {
+    let mut cells = 0u64;
+    let e = eap_core::<C, true>(model, w, ub, cb, ws, &mut cells);
+    (e, cells)
+}
+
+#[inline(always)]
+fn eap_core<C: CostModel, const COUNT: bool>(
+    model: &C,
+    w: usize,
+    ub: f64,
+    cb: Option<&[f64]>,
+    ws: &mut KernelWorkspace,
+    cells: &mut u64,
+) -> KernelEval {
+    let n = model.n_lines();
+    let m = model.n_cols();
+    if n == 0 || m == 0 {
+        return if n == m { KernelEval::done(0.0) } else { KernelEval::infeasible() };
+    }
+    if n.abs_diff(m) > w {
+        return KernelEval::infeasible();
+    }
+    debug_assert!(cb.is_none() || C::UNIFORM, "cb tightening needs a uniform-cost model");
+    if let Some(cb) = cb {
+        debug_assert_eq!(cb.len(), m + 1);
+        debug_assert!(cb[m] == 0.0);
+    }
+    ws.reset(m);
+    ws.curr[0] = 0.0;
+
+    // Row 0. Uniform models have the classic +inf border row (initial
+    // pruning point right after the origin); finite border rows (ERP) are
+    // materialised up to the band edge, the initial pruning point landing
+    // on the first border cell strictly above ub (borders non-decreasing).
+    let mut ppp = 1usize;
+    if !C::UNIFORM {
+        let row0_end = m.min(w);
+        ppp = row0_end + 1;
+        let mut prev_border = 0.0f64;
+        for j in 1..=row0_end {
+            let b = model.border_row(j);
+            debug_assert!(b >= prev_border, "border_row must be non-decreasing");
+            prev_border = b;
+            ws.curr[j] = b;
+            if b > ub {
+                ppp = j;
+                break;
+            }
+        }
+    }
+
+    let mut next_start = 1usize; // first non-discarded column (left border)
+    let mut pp = 0usize; // pruning point being built on the current line
+
+    for i in 1..=n {
+        std::mem::swap(&mut ws.prev, &mut ws.curr);
+        let band_lo = i.saturating_sub(w).max(1);
+        let band_hi = i.checked_add(w).map_or(m, |x| x.min(m));
+        // band-left folds into next_start: both only ever move right
+        if band_lo > next_start {
+            next_start = band_lo;
+        }
+        // Line threshold: ub minus the future cost any path still pays.
+        // cb is a DTW lower bound, so it is const-folded away for
+        // non-UNIFORM models — tightening ERP/MSM/TWE/WDTW with it would
+        // over-prune (the debug_assert above catches the misuse, this
+        // makes it harmless in release builds too).
+        let th = match cb {
+            Some(cb) if C::UNIFORM => {
+                let idx = i
+                    .checked_add(w)
+                    .and_then(|x| x.checked_add(1))
+                    .map_or(m, |x| x.min(m));
+                ub - cb[idx]
+            }
+            _ => ub,
+        };
+        let prev = &mut ws.prev;
+        let curr = &mut ws.curr;
+        let mut j = next_start;
+        // Left sentinel (the live border for column 0, +inf otherwise);
+        // `left` register-carries curr[j-1] across all four stages (see
+        // dtw.rs — IEEE-exact reassociation).
+        let mut left = if j == 1 { model.border_col(i) } else { f64::INFINITY };
+        curr[j - 1] = left;
+
+        // Stage 1: the discard-point region. Uniform models have no
+        // viable left neighbour here (two-dependency update, every
+        // above-threshold cell advances the border); a possibly-live
+        // finite border keeps the 3-way min and gates the advance.
+        while j == next_start && j < ppp {
+            let left_v = left;
+            let d = if C::UNIFORM {
+                model.diag(i, j) + prev[j].min(prev[j - 1])
+            } else {
+                (prev[j] + model.top(i, j))
+                    .min(prev[j - 1] + model.diag(i, j))
+                    .min(left_v + model.left(i, j))
+            };
+            curr[j] = d;
+            left = d;
+            if COUNT {
+                *cells += 1;
+            }
+            if d <= th {
+                pp = j + 1;
+            } else if C::UNIFORM || left_v > th {
+                next_start += 1;
+            }
+            j += 1;
+        }
+        // Stage 2: interior — the classic three-way min.
+        while j < ppp {
+            let d = if C::UNIFORM {
+                let bp = prev[j].min(prev[j - 1]);
+                model.diag(i, j) + left.min(bp)
+            } else {
+                (prev[j] + model.top(i, j))
+                    .min(prev[j - 1] + model.diag(i, j))
+                    .min(left + model.left(i, j))
+            };
+            curr[j] = d;
+            left = d;
+            if COUNT {
+                *cells += 1;
+            }
+            if d <= th {
+                pp = j + 1;
+            }
+            j += 1;
+        }
+        // Stage 3: the previous pruning point's column (top dependency
+        // excluded — prev cells at/right of ppp are above the threshold).
+        // The borders can collide here: everything left above the
+        // threshold too → nothing viable remains, abandon (Fig. 4b).
+        if j <= band_hi {
+            let left_v = left;
+            let d = if C::UNIFORM {
+                if j == next_start {
+                    model.diag(i, j) + prev[j - 1]
+                } else {
+                    model.diag(i, j) + left_v.min(prev[j - 1])
+                }
+            } else {
+                (prev[j - 1] + model.diag(i, j)).min(left_v + model.left(i, j))
+            };
+            curr[j] = d;
+            left = d;
+            if COUNT {
+                *cells += 1;
+            }
+            if d <= th {
+                pp = j + 1;
+            } else if j == next_start && (C::UNIFORM || left_v > th) {
+                return KernelEval::abandon();
+            }
+            j += 1;
+        } else if j == next_start {
+            // Discard points swallowed the whole banded line (Algorithm
+            // 2's abandon); sound with finite borders because stage 1
+            // gates the advance on the left value.
+            return KernelEval::abandon();
+        }
+        // Stage 4: right of the pruning point — left dependency only;
+        // the first above-threshold value prunes the rest of the line.
+        while j == pp && j <= band_hi {
+            let d = left + model.left(i, j);
+            curr[j] = d;
+            left = d;
+            if COUNT {
+                *cells += 1;
+            }
+            if d <= th {
+                pp = j + 1;
+            }
+            j += 1;
+        }
+        ppp = pp;
+    }
+    // Exact only if the last line's pruning point cleared the last column.
+    if ppp > m {
+        KernelEval::done(ws.curr[m])
+    } else {
+        KernelEval::abandon()
+    }
+}
+
+/// DTW's cost structure — squared-Euclidean cost on every move, infinite
+/// borders: the `UNIFORM` instantiation behind [`super::eap_dtw`].
+pub struct DtwCost<'a> {
+    pub li: &'a [f64],
+    pub co: &'a [f64],
+}
+
+impl CostModel for DtwCost<'_> {
+    const UNIFORM: bool = true;
+    #[inline(always)]
+    fn n_lines(&self) -> usize {
+        self.li.len()
+    }
+    #[inline(always)]
+    fn n_cols(&self) -> usize {
+        self.co.len()
+    }
+    #[inline(always)]
+    fn diag(&self, i: usize, j: usize) -> f64 {
+        sqed(self.li[i - 1], self.co[j - 1])
+    }
+    #[inline(always)]
+    fn top(&self, i: usize, j: usize) -> f64 {
+        self.diag(i, j)
+    }
+    #[inline(always)]
+    fn left(&self, i: usize, j: usize) -> f64 {
+        self.diag(i, j)
+    }
+}
+
+/// Naive full-matrix evaluation of a [`CostModel`] — the slow,
+/// obviously-correct oracle behind every conformance suite.
+pub fn naive_kernel<C: CostModel>(model: &C, w: usize) -> f64 {
+    let n = model.n_lines();
+    let m = model.n_cols();
+    if n == 0 || m == 0 {
+        return if n == m { 0.0 } else { f64::INFINITY };
+    }
+    let mut d = vec![vec![f64::INFINITY; m + 1]; n + 1];
+    d[0][0] = 0.0;
+    for j in 1..=m.min(w) {
+        d[0][j] = model.border_row(j);
+    }
+    for i in 1..=n.min(w) {
+        d[i][0] = model.border_col(i);
+    }
+    for i in 1..=n {
+        for j in 1..=m {
+            if i.abs_diff(j) > w {
+                continue;
+            }
+            let mut best = f64::INFINITY;
+            if d[i - 1][j].is_finite() {
+                best = best.min(d[i - 1][j] + model.top(i, j));
+            }
+            if d[i - 1][j - 1].is_finite() {
+                best = best.min(d[i - 1][j - 1] + model.diag(i, j));
+            }
+            if d[i][j - 1].is_finite() {
+                best = best.min(d[i][j - 1] + model.left(i, j));
+            }
+            d[i][j] = best;
+        }
+    }
+    d[n][m]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::dtw::cdtw;
+    use crate::distances::eap_dtw::{eap_cdtw, eap_dtw};
+    use crate::distances::elastic::erp::Erp;
+    use crate::distances::elastic::msm::Msm;
+    use crate::distances::elastic::twe::Twe;
+    use crate::distances::elastic::wdtw::Wdtw;
+    use crate::distances::{lines_cols, DtwWorkspace};
+
+    /// The **retired specialised kernels**, kept verbatim as bitwise
+    /// oracles: the pre-unification DTW-specialised `eap_impl` of
+    /// `eap_dtw.rs` and the generic `eap_elastic` of `elastic/core.rs`.
+    /// The property tests below pin the unified kernel against them bit
+    /// for bit; they exist nowhere else anymore.
+    mod retired {
+        use super::super::CostModel;
+        use crate::distances::cost::sqed;
+        use crate::distances::{lines_cols, DtwWorkspace};
+
+        /// Pre-unification `eap_dtw.rs::eap_impl` (COUNT stripped).
+        pub fn eap_impl(
+            a: &[f64],
+            b: &[f64],
+            w: usize,
+            ub: f64,
+            cb: Option<&[f64]>,
+            ws: &mut DtwWorkspace,
+        ) -> f64 {
+            if a.is_empty() || b.is_empty() {
+                return if a.len() == b.len() { 0.0 } else { f64::INFINITY };
+            }
+            let (li, co) = lines_cols(a, b);
+            let n = li.len();
+            let m = co.len();
+            if n - m > w {
+                return f64::INFINITY;
+            }
+            ws.reset(m);
+            ws.curr[0] = 0.0;
+            let mut next_start = 1usize;
+            let mut ppp = 1usize;
+            let mut pp = 0usize;
+            for i in 1..=n {
+                std::mem::swap(&mut ws.prev, &mut ws.curr);
+                let v = li[i - 1];
+                let band_lo = i.saturating_sub(w).max(1);
+                let band_hi = i.checked_add(w).map_or(m, |x| x.min(m));
+                if band_lo > next_start {
+                    next_start = band_lo;
+                }
+                let th = match cb {
+                    Some(cb) => {
+                        let idx = i
+                            .checked_add(w)
+                            .and_then(|x| x.checked_add(1))
+                            .map_or(m, |x| x.min(m));
+                        ub - cb[idx]
+                    }
+                    None => ub,
+                };
+                let prev = &mut ws.prev;
+                let curr = &mut ws.curr;
+                let mut j = next_start;
+                curr[j - 1] = f64::INFINITY;
+                let mut left = f64::INFINITY;
+                while j == next_start && j < ppp {
+                    let d = sqed(v, co[j - 1]) + prev[j].min(prev[j - 1]);
+                    curr[j] = d;
+                    left = d;
+                    if d <= th {
+                        pp = j + 1;
+                    } else {
+                        next_start += 1;
+                    }
+                    j += 1;
+                }
+                while j < ppp {
+                    let bp = prev[j].min(prev[j - 1]);
+                    let d = sqed(v, co[j - 1]) + left.min(bp);
+                    curr[j] = d;
+                    left = d;
+                    if d <= th {
+                        pp = j + 1;
+                    }
+                    j += 1;
+                }
+                if j <= band_hi {
+                    let c = sqed(v, co[j - 1]);
+                    if j == next_start {
+                        let d = c + prev[j - 1];
+                        curr[j] = d;
+                        left = d;
+                        if d <= th {
+                            pp = j + 1;
+                        } else {
+                            return f64::INFINITY;
+                        }
+                    } else {
+                        let d = c + left.min(prev[j - 1]);
+                        curr[j] = d;
+                        left = d;
+                        if d <= th {
+                            pp = j + 1;
+                        }
+                    }
+                    j += 1;
+                } else if j == next_start {
+                    return f64::INFINITY;
+                }
+                while j == pp && j <= band_hi {
+                    let d = sqed(v, co[j - 1]) + left;
+                    curr[j] = d;
+                    left = d;
+                    if d <= th {
+                        pp = j + 1;
+                    }
+                    j += 1;
+                }
+                ppp = pp;
+            }
+            if ppp > m {
+                ws.curr[m]
+            } else {
+                f64::INFINITY
+            }
+        }
+
+        /// Pre-unification `elastic/core.rs::eap_elastic`.
+        pub fn eap_elastic<M: CostModel>(
+            model: &M,
+            w: usize,
+            ub: f64,
+            ws: &mut DtwWorkspace,
+        ) -> f64 {
+            let n = model.n_lines();
+            let m = model.n_cols();
+            if n == 0 || m == 0 {
+                return if n == m { 0.0 } else { f64::INFINITY };
+            }
+            if n.abs_diff(m) > w {
+                return f64::INFINITY;
+            }
+            ws.reset(m);
+            ws.curr[0] = 0.0;
+            let row0_end = m.min(w);
+            let mut ppp = row0_end + 1;
+            for j in 1..=row0_end {
+                let b = model.border_row(j);
+                ws.curr[j] = b;
+                if b > ub {
+                    ppp = j;
+                    break;
+                }
+            }
+            let mut next_start = 1usize;
+            let mut pp = 0usize;
+            for i in 1..=n {
+                std::mem::swap(&mut ws.prev, &mut ws.curr);
+                let band_lo = i.saturating_sub(w).max(1);
+                let band_hi = i.checked_add(w).map_or(m, |x| x.min(m));
+                if band_lo > next_start {
+                    next_start = band_lo;
+                }
+                let prev = &mut ws.prev;
+                let curr = &mut ws.curr;
+                let mut j = next_start;
+                let mut left = if j == 1 { model.border_col(i) } else { f64::INFINITY };
+                curr[j - 1] = left;
+                while j == next_start && j < ppp {
+                    let left_v = left;
+                    let d = (prev[j] + model.top(i, j))
+                        .min(prev[j - 1] + model.diag(i, j))
+                        .min(left_v + model.left(i, j));
+                    curr[j] = d;
+                    left = d;
+                    if d <= ub {
+                        pp = j + 1;
+                    } else if left_v > ub {
+                        next_start += 1;
+                    }
+                    j += 1;
+                }
+                while j < ppp {
+                    let bp =
+                        (prev[j] + model.top(i, j)).min(prev[j - 1] + model.diag(i, j));
+                    let d = bp.min(left + model.left(i, j));
+                    curr[j] = d;
+                    left = d;
+                    if d <= ub {
+                        pp = j + 1;
+                    }
+                    j += 1;
+                }
+                if j <= band_hi {
+                    let left_v = left;
+                    let d = (prev[j - 1] + model.diag(i, j)).min(left_v + model.left(i, j));
+                    curr[j] = d;
+                    left = d;
+                    if d <= ub {
+                        pp = j + 1;
+                    } else if j == next_start && left_v > ub {
+                        return f64::INFINITY;
+                    }
+                    j += 1;
+                } else if j == next_start {
+                    return f64::INFINITY;
+                }
+                while j == pp && j <= band_hi {
+                    let d = left + model.left(i, j);
+                    curr[j] = d;
+                    left = d;
+                    if d <= ub {
+                        pp = j + 1;
+                    }
+                    j += 1;
+                }
+                ppp = pp;
+            }
+            if ppp > m {
+                ws.curr[m]
+            } else {
+                f64::INFINITY
+            }
+        }
+    }
+
+    fn xorshift(seed: u64) -> impl FnMut() -> f64 {
+        let mut x = seed;
+        move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 2.0 - 1.0
+        }
+    }
+
+    /// ub grid of the pinning property: exact DTW at +inf, the tie, and a
+    /// 0 bound that must abandon everywhere (identity pairs excluded by
+    /// random data).
+    fn ub_grid(exact: f64) -> [f64; 3] {
+        [f64::INFINITY, exact, 0.0]
+    }
+
+    #[track_caller]
+    fn assert_bits(got: f64, want: f64, tag: &str) {
+        assert_eq!(got.to_bits(), want.to_bits(), "{tag}: {got} vs {want}");
+    }
+
+    /// The satellite property test: the unified kernel is **bitwise**
+    /// identical to the retired specialised kernels over random series,
+    /// all six metrics, ub ∈ {inf, tight, 0}.
+    #[test]
+    fn unified_kernel_bitwise_matches_retired_kernels_for_all_six_metrics() {
+        let mut ws = DtwWorkspace::default();
+        let mut ws2 = DtwWorkspace::default();
+        for seed in 1..=4u64 {
+            let mut rnd = xorshift(0x5EED ^ (seed << 8));
+            for n in [5usize, 13, 29] {
+                let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+                let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+                for w in [1usize, 3, n / 2, n] {
+                    let tag = |m: &str, ub: f64| format!("{m} seed={seed} n={n} w={w} ub={ub}");
+                    // cdtw (uniform flow, via the public wrapper)
+                    let exact = retired::eap_impl(&a, &b, w, f64::INFINITY, None, &mut ws2);
+                    for ub in ub_grid(exact) {
+                        let got = eap_cdtw(&a, &b, w, ub, None, &mut ws);
+                        let want = retired::eap_impl(&a, &b, w, ub, None, &mut ws2);
+                        assert_bits(got, want, &tag("cdtw", ub));
+                    }
+                    // cdtw with a valid (all-zero) cb tail
+                    let cb = vec![0.0; n + 1];
+                    let got = eap_cdtw(&a, &b, w, exact, Some(&cb), &mut ws);
+                    let want = retired::eap_impl(&a, &b, w, exact, Some(&cb), &mut ws2);
+                    assert_bits(got, want, &tag("cdtw+cb", exact));
+                    // dtw (unwindowed uniform flow)
+                    let exact = retired::eap_impl(&a, &b, n, f64::INFINITY, None, &mut ws2);
+                    for ub in ub_grid(exact) {
+                        let got = eap_dtw(&a, &b, ub);
+                        let want = retired::eap_impl(&a, &b, n, ub, None, &mut ws2);
+                        assert_bits(got, want, &tag("dtw", ub));
+                    }
+                    // the four non-uniform cost models
+                    let wdtw = Wdtw::new(&a, &b, 0.05);
+                    let erp = Erp::new(&a, &b, 0.25);
+                    let msm = Msm::new(&a, &b, 0.5);
+                    let twe = Twe::new(&a, &b, 0.05, 1.0);
+                    macro_rules! pin {
+                        ($name:literal, $model:expr, $w:expr) => {
+                            let exact =
+                                retired::eap_elastic(&$model, $w, f64::INFINITY, &mut ws2);
+                            for ub in ub_grid(exact) {
+                                let got = eap_kernel(&$model, $w, ub, None, &mut ws).dist;
+                                let want = retired::eap_elastic(&$model, $w, ub, &mut ws2);
+                                assert_bits(got, want, &tag($name, ub));
+                            }
+                        };
+                    }
+                    pin!("wdtw", wdtw, n); // WDTW is conventionally unwindowed
+                    pin!("erp", erp, w);
+                    pin!("msm", msm, w);
+                    pin!("twe", twe, w);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_flow_matches_cdtw_oracle_and_reports_abandons() {
+        let mut ws = DtwWorkspace::default();
+        let mut rnd = xorshift(0xABCD);
+        for n in [6usize, 17] {
+            let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            for w in [2usize, n] {
+                let (li, co) = lines_cols(&a, &b);
+                let model = DtwCost { li, co };
+                let want = cdtw(&a, &b, w);
+                let e = eap_kernel(&model, w, f64::INFINITY, None, &mut ws);
+                assert!((e.dist - want).abs() < 1e-12, "n={n} w={w}");
+                assert!(!e.abandoned);
+                let tie = eap_kernel(&model, w, want, None, &mut ws);
+                assert_eq!(tie.dist.to_bits(), want.to_bits());
+                assert!(!tie.abandoned);
+                if want > 0.0 {
+                    let below = eap_kernel(&model, w, want * 0.5, None, &mut ws);
+                    assert_eq!(below.dist, f64::INFINITY);
+                    assert!(below.abandoned, "threshold-driven inf must be an abandon");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_band_and_empty_inputs_are_not_abandons() {
+        let mut ws = DtwWorkspace::default();
+        let a = [0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [0.0, 2.0, 4.0];
+        let (li, co) = lines_cols(&a, &b);
+        let e = eap_kernel(&DtwCost { li, co }, 2, f64::INFINITY, None, &mut ws);
+        assert_eq!(e.dist, f64::INFINITY);
+        assert!(!e.abandoned, "|7-3| > w=2 is infeasible, not abandoned");
+        let e = eap_kernel(&DtwCost { li: &[], co: &[] }, 1, 1.0, None, &mut ws);
+        assert_eq!(e.dist, 0.0);
+        assert!(!e.abandoned);
+        let e = eap_kernel(&DtwCost { li: &a, co: &[] }, 7, 1.0, None, &mut ws);
+        assert_eq!(e.dist, f64::INFINITY);
+        assert!(!e.abandoned);
+    }
+
+    #[test]
+    fn counted_cells_shrink_with_a_tight_bound() {
+        let mut ws = DtwWorkspace::default();
+        let s = [3.0, 1.0, 4.0, 4.0, 1.0, 1.0];
+        let t = [1.0, 3.0, 2.0, 1.0, 2.0, 2.0];
+        let model = DtwCost { li: &s, co: &t };
+        let (loose, c_loose) = eap_kernel_counted(&model, 6, f64::INFINITY, None, &mut ws);
+        let (tight, c_tight) = eap_kernel_counted(&model, 6, 9.0, None, &mut ws);
+        assert_eq!(loose.dist, 9.0);
+        assert_eq!(tight.dist, 9.0);
+        assert_eq!(c_loose, 36);
+        assert!(c_tight < c_loose);
+    }
+
+    #[test]
+    fn naive_kernel_agrees_with_eap_for_every_model_shape() {
+        let mut ws = DtwWorkspace::default();
+        let mut rnd = xorshift(77);
+        let n = 15;
+        let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+        for w in [3usize, n] {
+            let erp = Erp::new(&a, &b, 0.0);
+            let want = naive_kernel(&erp, w);
+            let got = eap_kernel(&erp, w, f64::INFINITY, None, &mut ws).dist;
+            assert!((got - want).abs() < 1e-12, "erp w={w}");
+            let (li, co) = lines_cols(&a, &b);
+            let dtw = DtwCost { li, co };
+            let want = naive_kernel(&dtw, w);
+            let got = eap_kernel(&dtw, w, f64::INFINITY, None, &mut ws).dist;
+            assert!((got - want).abs() < 1e-12, "dtw w={w}");
+        }
+    }
+}

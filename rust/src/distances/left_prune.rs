@@ -1,12 +1,7 @@
-//! Algorithm 2 of the paper: pruning and early abandoning **from the left**
-//! only — the pedagogical stepping stone between plain DTW and the full
-//! EAPrunedDTW (Algorithm 3).
-//!
-//! As a line is scanned, a contiguous run of cells `> ub` starting at the
-//! left border forms *discard points*; by monotonicity everything below
-//! them stays `> ub`, so the next line starts after the last discard point
-//! (`next_start`). When the discard points swallow a whole line the left
-//! border has crossed the matrix and we early abandon (paper Fig. 3b).
+//! Algorithm 2 of the paper: pruning and early abandoning **from the
+//! left** only — the pedagogical stepping stone to Algorithm 3. Discard
+//! points (`> ub` runs at the left border) advance `next_start`; a fully
+//! swallowed line abandons (paper Fig. 3b).
 
 use super::{lines_cols, DtwWorkspace};
 use crate::distances::cost::sqed;

@@ -1,28 +1,21 @@
 //! The metric dispatch layer: one enum naming every elastic distance the
-//! search stack can score candidates under, with its parameters.
-//!
-//! The paper's §6 future-work claim — EAPruned transfers to any elastic
-//! measure sharing DTW's DP structure — lives in [`crate::distances::elastic`]
-//! as kernels. This module is what makes those kernels *servable*: the
+//! search stack can score candidates under, with its parameters. The
 //! subsequence scan, NN1, the [`crate::index::Engine`] and the wire
-//! protocol all take a [`Metric`] and dispatch through [`Metric::eval`].
-//!
-//! Lower-bound applicability is explicit, not assumed: LB_Kim and the two
-//! LB_Keogh directions lower-bound (banded) DTW only. WDTW's weights can
-//! shrink any step below the unweighted cost, and ERP/MSM/TWE have
-//! different step costs altogether, so reusing the DTW cascade there would
-//! *over-prune* (bounds that are not lower bounds). [`Metric::uses_envelopes`]
-//! is the single source of truth the scan, the engine and the reference
-//! index consult; metrics outside the DTW family run the bound-free
-//! EAPruned scan, still threshold-driven by the top-k collector.
+//! protocol all dispatch through [`Metric::eval`] into the unified band
+//! kernel. Lower-bound applicability is explicit, not assumed: LB_Kim /
+//! LB_Keogh lower-bound (banded) DTW only, and reusing the DTW cascade
+//! for WDTW/ERP/MSM/TWE would *over-prune* — [`Metric::uses_envelopes`]
+//! is the single source of truth; metrics outside the DTW family run the
+//! bound-free scan, still threshold-driven by the top-k collector.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::distances::dtw::dtw_oracle;
-use crate::distances::elastic::erp::{eap_erp, erp_naive};
-use crate::distances::elastic::msm::{eap_msm, msm_naive};
-use crate::distances::elastic::twe::{eap_twe, twe_naive};
-use crate::distances::elastic::wdtw::{eap_wdtw, wdtw_naive};
+use crate::distances::elastic::erp::{erp_naive, Erp};
+use crate::distances::elastic::msm::{msm_naive, Msm};
+use crate::distances::elastic::twe::{twe_naive, Twe};
+use crate::distances::elastic::wdtw::{wdtw_naive, Wdtw};
+use crate::distances::kernel::{eap_kernel, KernelEval};
 use crate::distances::DtwWorkspace;
 use crate::search::suite::Suite;
 use crate::util::json::{obj, Json};
@@ -101,9 +94,8 @@ impl Metric {
         self.uses_envelopes() && suite.cascade().needs_data_envelopes()
     }
 
-    /// The warping window actually used for a query of `qlen` points when
-    /// the request asked for `w` cells: DTW and WDTW are unbanded by
-    /// convention (full window), everything else honours the request.
+    /// The warping window actually used for a query of `qlen` points:
+    /// DTW and WDTW are unbanded by convention, the rest honour `w`.
     pub fn effective_window(&self, qlen: usize, w: usize) -> usize {
         match self {
             Metric::Dtw | Metric::Wdtw { .. } => qlen,
@@ -113,9 +105,7 @@ impl Metric {
 
     /// Evaluate the metric between `q` and `c` under upper bound `ub`:
     /// the exact distance when it is `<= ub`, `+inf` once provably above.
-    ///
-    /// `suite` picks the DTW core for the DTW family (so the ablation
-    /// suites keep working through the dispatch layer); `cb` is the
+    /// `suite` picks the DTW core for the DTW family; `cb` is the
     /// cascade's cumulative-bound tail, meaningful for DTW cores only.
     #[inline]
     #[allow(clippy::too_many_arguments)]
@@ -129,13 +119,37 @@ impl Metric {
         suite: Suite,
         ws: &mut DtwWorkspace,
     ) -> f64 {
+        self.eval_outcome(q, c, w, ub, cb, suite, ws).dist
+    }
+
+    /// [`Metric::eval`] with the full [`KernelEval`] outcome. Every
+    /// metric runs through the ONE unified band kernel — the DTW family
+    /// via [`Suite::dtw_eval`], the rest as direct cost-model
+    /// instantiations — so the per-metric abandon attribution comes from
+    /// the core itself, not from `is_infinite()` at the dispatch site.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_outcome(
+        &self,
+        q: &[f64],
+        c: &[f64],
+        w: usize,
+        ub: f64,
+        cb: Option<&[f64]>,
+        suite: Suite,
+        ws: &mut DtwWorkspace,
+    ) -> KernelEval {
         match *self {
-            Metric::Cdtw => suite.dtw(q, c, w, ub, cb, ws),
-            Metric::Dtw => suite.dtw(q, c, q.len().max(c.len()), ub, cb, ws),
-            Metric::Wdtw { g } => eap_wdtw(q, c, g, q.len().max(c.len()), ub, ws),
-            Metric::Erp { gap } => eap_erp(q, c, gap, w, ub, ws),
-            Metric::Msm { cost } => eap_msm(q, c, cost, w, ub, ws),
-            Metric::Twe { nu, lambda } => eap_twe(q, c, nu, lambda, w, ub, ws),
+            Metric::Cdtw => suite.dtw_eval(q, c, w, ub, cb, ws),
+            Metric::Dtw => suite.dtw_eval(q, c, q.len().max(c.len()), ub, cb, ws),
+            Metric::Wdtw { g } => {
+                eap_kernel(&Wdtw::new(q, c, g), q.len().max(c.len()), ub, None, ws)
+            }
+            Metric::Erp { gap } => eap_kernel(&Erp::new(q, c, gap), w, ub, None, ws),
+            Metric::Msm { cost } => eap_kernel(&Msm::new(q, c, cost), w, ub, None, ws),
+            Metric::Twe { nu, lambda } => {
+                eap_kernel(&Twe::new(q, c, nu, lambda), w, ub, None, ws)
+            }
         }
     }
 
@@ -243,9 +257,8 @@ impl Metric {
         Metric::from_json(&obj(vec![("name", Json::Str(s.to_string()))])).ok()
     }
 
-    /// One default-parameterised instance of every kind — the conformance
-    /// and property suites iterate this so a new enum arm is one line away
-    /// from coverage.
+    /// One default-parameterised instance of every kind — what the
+    /// conformance and property suites iterate.
     pub fn all_default() -> [Metric; Metric::COUNT] {
         [
             Metric::Cdtw,

@@ -1,19 +1,20 @@
-//! The distance zoo: every DTW variant the paper builds on, compares
-//! against, or contributes (DESIGN.md §2, systems S1–S6).
-//!
-//! All functions use `f64` and the squared-Euclidean point cost (the UCR
-//! suite convention). Every early-abandoning variant takes an upper bound
-//! `ub` and returns `f64::INFINITY` when it can prove the true distance
-//! *strictly* exceeds `ub` (strictness preserves ties — paper §2.2).
+//! The distance zoo (DESIGN.md §2, systems S1–S6). Every early-abandoning
+//! variant takes an upper bound `ub` and returns `f64::INFINITY` when the
+//! true distance *strictly* exceeds it (strictness preserves ties, §2.2).
+//! Every EAPruned evaluation — cDTW/DTW, WDTW, ERP, MSM, TWE — runs
+//! through the ONE band core in [`kernel`] (`eap_kernel` over a
+//! [`kernel::CostModel`]); the per-metric modules are zero-cost cost-model
+//! instantiations, not kernel copies (see `distances/README.md`).
 //!
 //! | module | algorithm | role |
 //! |--------|-----------|------|
+//! | [`kernel`] | **the unified EAPruned band core** | every EAP evaluation |
 //! | [`dtw`] | Algorithm 1 (+ Sakoe-Chiba band) | baseline & oracle |
-//! | [`dtw_ea`] | UCR row-min early abandon (+ cb tightening) | UCR suite |
-//! | [`pruned_dtw`] | PrunedDTW as in UCR-USP [19,20] | prior art |
+//! | [`dtw_ea`] | UCR row-min early abandon (+ cb tightening) | UCR comparator |
+//! | [`pruned_dtw`] | PrunedDTW as in UCR-USP [19,20] | prior-art comparator |
 //! | [`left_prune`] | Algorithm 2 (left pruning only) | stepping stone |
-//! | [`eap_dtw`] | **Algorithm 3 — EAPrunedDTW** | the contribution |
-//! | [`elastic`] | EAPruned skeleton on ERP/MSM/TWE/WDTW | future work §6 |
+//! | [`eap_dtw`] | Algorithm 3 wrappers over [`kernel`] | the contribution |
+//! | [`elastic`] | ERP/MSM/TWE/WDTW cost models over [`kernel`] | §6 extensions |
 //! | [`metric`] | [`metric::Metric`] dispatch over the whole zoo | serving layer |
 
 pub mod cost;
@@ -21,37 +22,58 @@ pub mod dtw;
 pub mod dtw_ea;
 pub mod eap_dtw;
 pub mod elastic;
+pub mod kernel;
 pub mod left_prune;
 pub mod metric;
 pub mod pruned_dtw;
 
 /// Workspace reused across distance calls to keep the hot path
-/// allocation-free: two DP lines of `len + 1` cells.
+/// allocation-free: two DP lines of `len + 1` cells. One type serves
+/// every kernel in the zoo, so pools
+/// ([`crate::search::cohort::CohortPool`]) size it once per cohort and
+/// swap it into any evaluation.
 #[derive(Debug, Default, Clone)]
-pub struct DtwWorkspace {
+pub struct KernelWorkspace {
     pub(crate) prev: Vec<f64>,
     pub(crate) curr: Vec<f64>,
+    /// times [`KernelWorkspace::reset`] grew a line beyond capacity —
+    /// pooled workspaces must never regrow after warm-up
+    /// ([`crate::metrics::Counters::kernel_workspace_regrows`]).
+    regrows: u64,
 }
 
-impl DtwWorkspace {
+/// Historical name of [`KernelWorkspace`], kept so every pre-unification
+/// call site (examples, benches, tests, downstream users) still compiles.
+pub type DtwWorkspace = KernelWorkspace;
+
+impl KernelWorkspace {
     /// Workspace able to handle series up to `cap` points.
     pub fn with_capacity(cap: usize) -> Self {
-        Self { prev: Vec::with_capacity(cap + 1), curr: Vec::with_capacity(cap + 1) }
+        Self { prev: Vec::with_capacity(cap + 1), curr: Vec::with_capacity(cap + 1), regrows: 0 }
     }
 
     /// (Re)initialise both lines to `len + 1` cells of `+inf`.
     #[inline]
     pub(crate) fn reset(&mut self, len: usize) {
+        if self.prev.capacity() < len + 1 || self.curr.capacity() < len + 1 {
+            self.regrows += 1;
+        }
         self.prev.clear();
         self.prev.resize(len + 1, f64::INFINITY);
         self.curr.clear();
         self.curr.resize(len + 1, f64::INFINITY);
     }
+
+    /// How often a reset had to allocate; a pooled workspace warmed to the
+    /// cohort's query length must keep this constant across the cohort.
+    #[inline]
+    pub(crate) fn regrows(&self) -> u64 {
+        self.regrows
+    }
 }
 
-/// Order two series as (lines, columns) = (longest, shortest): the DP lines
-/// match the shortest series so the O(n)-space buffers are minimal
-/// (paper Algorithm 1, lines 1–2). DTW is symmetric so this is free.
+/// Order two series as (lines, columns) = (longest, shortest) so the
+/// O(n)-space buffers are minimal (Algorithm 1; DTW is symmetric).
 #[inline]
 pub(crate) fn lines_cols<'a>(a: &'a [f64], b: &'a [f64]) -> (&'a [f64], &'a [f64]) {
     if a.len() >= b.len() {

@@ -1,13 +1,9 @@
-//! PrunedDTW — the prior-art comparator, as fitted to similarity search by
-//! the UCR-USP suite (Silva & Batista [19]; Silva et al. [20], paper §2.3).
-//!
-//! Prunes from the left (`sc`, contiguous run of above-threshold cells from
-//! the row start) and from the right (`ec`, last below-threshold cell + 1 of
-//! the previous row), and early abandons on the **row minimum** — *not* on
-//! border collision, and with the classic three-way min in every cell. Those
-//! two differences are exactly what EAPrunedDTW improves on (paper §4), so
-//! this implementation keeps them faithfully, including the INF back-fill
-//! after a right-prune break that the ec bookkeeping requires.
+//! PrunedDTW — the prior-art comparator of the UCR-USP suite (Silva &
+//! Batista [19]; [20], paper §2.3): left (`sc`) / right (`ec`) pruning
+//! with a **row-minimum** abandon and the classic three-way min in every
+//! cell — exactly the two things EAPrunedDTW improves on (§4), so this
+//! implementation keeps them faithfully (INF back-fill included) and is
+//! deliberately NOT folded into the unified kernel.
 
 use super::DtwWorkspace;
 use crate::distances::cost::sqed;

@@ -54,6 +54,10 @@ pub struct TopK {
     /// external cutoff: results at or above it can never be accepted
     bound: f64,
     heap: BinaryHeap<Worst>,
+    /// cached "threshold reached 0" flag, maintained at every mutation so
+    /// the cohort scan's per-strip retirement check is a plain bool read
+    /// instead of a heap peek per strip per member
+    exhausted: bool,
 }
 
 impl TopK {
@@ -69,7 +73,23 @@ impl TopK {
     /// pre-allocate).
     pub fn with_bound(k: usize, bound: f64) -> Self {
         assert!(k >= 1, "top-k needs k >= 1");
-        Self { k, bound, heap: BinaryHeap::with_capacity(k.min(1024) + 1) }
+        Self {
+            k,
+            bound,
+            heap: BinaryHeap::with_capacity(k.min(1024) + 1),
+            exhausted: bound <= 0.0,
+        }
+    }
+
+    /// Re-derive the cached exhaustion flag; called after every mutation
+    /// that can tighten the threshold (acceptance, bound update, merge).
+    /// Monotone: once true it stays true, because the threshold never
+    /// loosens.
+    #[inline]
+    fn refresh_exhausted(&mut self) {
+        if !self.exhausted {
+            self.exhausted = self.threshold() <= 0.0;
+        }
     }
 
     pub fn k(&self) -> usize {
@@ -120,16 +140,20 @@ impl TopK {
     /// the threshold reaches 0 nothing can enter via the improvement arm;
     /// the tie arm additionally needs a *smaller* position than a held
     /// entry, which a forward scan can no longer produce. The cohort scan
-    /// checks this at strip boundaries to retire a query mid-scan.
+    /// checks this at strip boundaries to retire a query mid-scan; the
+    /// answer is cached on the collector (`k`-th == 0 is a one-way state),
+    /// so the check costs a bool read, not a heap re-scan per strip.
     #[inline]
     pub fn exhausted(&self) -> bool {
-        self.threshold() <= 0.0
+        debug_assert_eq!(self.exhausted, self.threshold() <= 0.0, "stale exhausted cache");
+        self.exhausted
     }
 
     /// Lower the external bound (monotone: a looser value is ignored).
     pub fn set_bound(&mut self, bound: f64) {
         if bound < self.bound {
             self.bound = bound;
+            self.refresh_exhausted();
         }
     }
 
@@ -162,6 +186,7 @@ impl TopK {
                 self.heap.pop();
             }
             self.heap.push(Worst(m));
+            self.refresh_exhausted();
             return true;
         }
         // exact tie with the k-th best at a smaller position (still
@@ -172,6 +197,10 @@ impl TopK {
             if m.dist == worst.dist && m.pos < worst.pos {
                 self.heap.pop();
                 self.heap.push(Worst(m));
+                // the k-th distance is unchanged (same dist, new pos), so
+                // the exhaustion state cannot have flipped — refresh is
+                // still cheap and keeps the invariant local
+                self.refresh_exhausted();
                 return true;
             }
         }
@@ -187,6 +216,7 @@ impl TopK {
         all.sort();
         all.truncate(self.k);
         self.heap.extend(all);
+        self.refresh_exhausted();
     }
 
     /// Results in ascending `(dist, pos)` order, consuming the collector.

@@ -5,8 +5,10 @@
 //!
 //! The crate is the Layer-3 Rust coordinator of a three-layer stack:
 //!
-//! * **Layer 3 (this crate)** — the scalar distance zoo ([`distances`],
-//!   including the paper's [`distances::eap_dtw`]), the UCR-style
+//! * **Layer 3 (this crate)** — the scalar distance zoo ([`distances`]:
+//!   one unified EAPruned band kernel, [`distances::kernel`], serving the
+//!   paper's [`distances::eap_dtw`] and every elastic extension as
+//!   cost-model instantiations), the UCR-style
 //!   lower-bound cascade ([`bounds`]), the subsequence search engine
 //!   ([`search`]), the reference-side index + top-k multi-query engine
 //!   ([`index`]: per-stream window-stats buckets and shared envelopes,

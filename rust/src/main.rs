@@ -32,7 +32,8 @@ COMMANDS
               latency/throughput
               --dataset <name> [--queries N] [--shards N] [--suite S]
               [--k N] [--metric M] [--scan-mode strip|scalar]
-              [--batch-window N] [--ref-len N] [--artifacts DIR]
+              [--batch-window N] [--batch-deadline-ms N]
+              [--ref-len N] [--artifacts DIR]
   bench-suite run the paper's experiment grid and print Fig 5a/5b + tables
               [--axis length|window|all] [--ref-len N] [--datasets a,b]
               [--qlens 128,256] [--ratios 0.1,0.2] [--queries N]
@@ -50,7 +51,10 @@ Scan modes: strip (default; batched bounds + LB-ordered DTW) | scalar
          (the legacy per-candidate loop — same results, A/B baseline)
 Batching: --batch-window N coalesces N in-flight queries; same-shape
          queries form cohorts served by one shared strip pass over the
-         reference (same results as solo serving, bitwise)";
+         reference (same results as solo serving, bitwise).
+         --batch-deadline-ms N flushes a partial window once its oldest
+         query has waited N ms, instead of holding it for the window to
+         fill (0 = wait for the window, the default)";
 
 fn main() {
     let args = match Args::from_env() {
@@ -185,6 +189,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => ScanMode::default(),
     };
     let batch_window = args.usize_or("batch-window", cfg.serve.batch_window)?.max(1);
+    let batch_deadline_ms = args.u64_or("batch-deadline-ms", cfg.serve.batch_deadline_ms)?;
     let artifacts = PathBuf::from(args.get_or("artifacts", &cfg.serve.artifacts_dir));
 
     let reference = load_reference(&dataset, ref_len, seed)?;
@@ -195,16 +200,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
             shards,
             scan_mode,
             batch_window,
+            batch_deadline_ms,
             artifacts_dir: artifacts.join("manifest.json").exists().then_some(artifacts),
             ..Default::default()
         },
     )?;
     println!(
-        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}, metric {}, top-{k}, {} scan, batch window {}) over {shards} shards",
+        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}, metric {}, top-{k}, {} scan, batch window {}, deadline {}) over {shards} shards",
         suite.name(),
         metric.name(),
         scan_mode.name(),
         svc.batch_window(),
+        match svc.batch_deadline() {
+            Some(d) => format!("{}ms", d.as_millis()),
+            None => "none".into(),
+        },
     );
     let mut latencies = Vec::new();
     let t = Timer::start();
@@ -213,12 +223,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .enumerate()
         .map(|(i, q)| QueryRequest { id: i as u64, query: q, window_ratio: ratio, suite, k, metric })
         .collect();
-    // coalesce up to batch_window in-flight queries per submit: same-shape
-    // queries inside a window share one strip pass over the reference
-    for window in reqs.chunks(svc.batch_window()) {
-        // a failing request answers with the protocol's error line and the
-        // service keeps serving — one bad query must not end the session
-        for (req, result) in window.iter().zip(svc.submit_batch(window)) {
+    // a failing request answers with the protocol's error line and the
+    // service keeps serving — one bad query must not end the session
+    let mut serve_batch = |batch: &[QueryRequest]| {
+        for (req, result) in batch.iter().zip(svc.submit_batch(batch)) {
             match result {
                 Ok(resp) => {
                     println!("{}", resp.to_json());
@@ -227,6 +235,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 Err(e) => println!("{}", ErrorResponse::new(req.id, &e).to_json()),
             }
         }
+    };
+    // coalesce up to batch_window in-flight queries per submit (same-shape
+    // queries inside a window share one strip pass over the reference); a
+    // deadline flushes a partial window once its oldest query has waited
+    // long enough, so a sparse arrival stream is never stalled
+    let mut coalescer = repro::coordinator::BatchCoalescer::new(
+        svc.batch_window(),
+        svc.batch_deadline(),
+    );
+    for req in reqs {
+        if let Some(batch) = coalescer.push(req, std::time::Instant::now()) {
+            serve_batch(&batch);
+        }
+        if let Some(batch) = coalescer.poll(std::time::Instant::now()) {
+            serve_batch(&batch);
+        }
+    }
+    if let Some(batch) = coalescer.flush() {
+        serve_batch(&batch);
     }
     let wall = t.elapsed_secs();
     if latencies.is_empty() {

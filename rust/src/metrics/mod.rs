@@ -63,6 +63,18 @@ pub struct Counters {
     /// cohort instead of once per query — `strip_len × (live members − 1)`
     /// per strip, attributed to the members that were served for free
     pub strip_stat_loads_saved: u64,
+    /// raw-sample reads a cohort scan avoided because the strip's
+    /// z-normalised LB_Kim endpoint lanes were loaded once for the whole
+    /// cohort instead of per member — `endpoint reads per lane × strip_len
+    /// × (live members − 1)` per strip, same invariant shape as
+    /// `strip_stat_loads_saved` (loads performed + saved = sequential
+    /// loads absent retirement)
+    pub strip_sample_loads_saved: u64,
+    /// kernel-workspace regrowth events observed by a cohort scan's
+    /// shared pool: a warmed pool must reuse its capacity for every
+    /// member of every strip, so this is asserted 0 within a cohort in
+    /// debug builds — nonzero in release means the pool warm-up is wrong
+    pub kernel_workspace_regrows: u64,
     /// distance-kernel calls per metric kind, indexed by
     /// [`Metric::index`] (every entry also counts into `dtw_calls`)
     pub metric_calls: [u64; Metric::COUNT],
@@ -126,6 +138,8 @@ impl Counters {
         self.cohort_strips += o.cohort_strips;
         self.cohort_retired_queries += o.cohort_retired_queries;
         self.strip_stat_loads_saved += o.strip_stat_loads_saved;
+        self.strip_sample_loads_saved += o.strip_sample_loads_saved;
+        self.kernel_workspace_regrows += o.kernel_workspace_regrows;
         for i in 0..Metric::COUNT {
             self.metric_calls[i] += o.metric_calls[i];
             self.metric_abandons[i] += o.metric_abandons[i];
@@ -211,8 +225,12 @@ impl Counters {
             0.0
         };
         format!(
-            "cohort: {} shared strips | stat-lane loads saved: {} ({share:.1}% of lane reads) | per-shard query retirements: {}",
-            self.cohort_strips, self.strip_stat_loads_saved, self.cohort_retired_queries
+            "cohort: {} shared strips | stat-lane loads saved: {} ({share:.1}% of lane reads) | raw-sample loads saved: {} | per-shard query retirements: {} | workspace regrows: {}",
+            self.cohort_strips,
+            self.strip_stat_loads_saved,
+            self.strip_sample_loads_saved,
+            self.cohort_retired_queries,
+            self.kernel_workspace_regrows
         )
     }
 }
@@ -311,6 +329,7 @@ mod tests {
         let mut a = Counters {
             cohort_strips: 4,
             strip_stat_loads_saved: 100,
+            strip_sample_loads_saved: 30,
             candidates: 400,
             ..Default::default()
         };
@@ -318,6 +337,8 @@ mod tests {
             cohort_strips: 1,
             cohort_retired_queries: 2,
             strip_stat_loads_saved: 50,
+            strip_sample_loads_saved: 12,
+            kernel_workspace_regrows: 1,
             candidates: 200,
             ..Default::default()
         };
@@ -325,11 +346,15 @@ mod tests {
         assert_eq!(a.cohort_strips, 5);
         assert_eq!(a.cohort_retired_queries, 2);
         assert_eq!(a.strip_stat_loads_saved, 150);
+        assert_eq!(a.strip_sample_loads_saved, 42);
+        assert_eq!(a.kernel_workspace_regrows, 1);
         let r = a.cohort_report();
         assert!(r.contains("5 shared strips"), "{r}");
-        assert!(r.contains("loads saved: 150"), "{r}");
+        assert!(r.contains("stat-lane loads saved: 150"), "{r}");
         assert!(r.contains("25.0% of lane reads"), "{r}");
+        assert!(r.contains("raw-sample loads saved: 42"), "{r}");
         assert!(r.contains("retirements: 2"), "{r}");
+        assert!(r.contains("workspace regrows: 1"), "{r}");
         assert_eq!(
             Counters::new().cohort_report(),
             "cohort scan not used (queries served solo)"

@@ -20,8 +20,14 @@
 //! final set independent of evaluation order — so sharing the strip walk
 //! is a pure memory-bandwidth optimisation, never a semantic one.
 //!
-//! Two additional amortisations ride the inverted loop:
+//! Three additional amortisations ride the inverted loop:
 //!
+//! * **Shared LB_Kim endpoint lanes** — the up-to-six raw samples the
+//!   LB_Kim hierarchy reads per window z-normalise with the *shared*
+//!   `(mean, std)`, so they are query-independent: one
+//!   [`crate::bounds::batch::KimLanes`] fill per strip serves every
+//!   member's batched bound bit-identically
+//!   (`strip_sample_loads_saved`).
 //! * **Retirement** — a member whose k-th best distance reaches 0 can
 //!   never accept a later candidate ([`TopK::exhausted`]), so it drops
 //!   out of every remaining strip and late strips shrink. Exact-match
@@ -34,10 +40,12 @@
 
 use std::sync::Arc;
 
-use crate::bounds::batch::{batch_lb_kim_into, lb_keogh_eq_unordered, CohortScratch, DEFAULT_STRIP};
+use crate::bounds::batch::{
+    batch_lb_kim_pre, kim_loads_per_lane, lb_keogh_eq_unordered, CohortScratch, DEFAULT_STRIP,
+};
 use crate::bounds::cascade::CascadePolicy;
 use crate::coordinator::state::SharedUb;
-use crate::distances::DtwWorkspace;
+use crate::distances::KernelWorkspace;
 use crate::index::ref_index::BucketStats;
 use crate::index::topk::TopK;
 use crate::metrics::Counters;
@@ -85,7 +93,7 @@ impl CohortMember {
 /// asserted by the scan).
 #[derive(Debug, Default)]
 pub struct CohortPool {
-    ws: DtwWorkspace,
+    ws: KernelWorkspace,
     zbuf: Vec<f64>,
 }
 
@@ -108,6 +116,12 @@ impl CohortPool {
     /// Capacity fingerprint for the regrowth debug assertion.
     fn caps(&self) -> (usize, usize, usize) {
         (self.zbuf.capacity(), self.ws.prev.capacity(), self.ws.curr.capacity())
+    }
+
+    /// The pooled workspace's own regrowth tally (see
+    /// [`crate::metrics::Counters::kernel_workspace_regrows`]).
+    fn regrows(&self) -> u64 {
+        self.ws.regrows()
     }
 
     /// Swap the pool's buffers with `ctx`'s (called in pairs around a
@@ -167,7 +181,11 @@ pub fn scan_cohort_topk(
     );
     pool.warm(n);
     let warm_caps = pool.caps();
+    let mut regrows_seen = pool.regrows();
     scratch.ensure_members(members.len());
+    // raw-sample reads one member's full LB_Kim hierarchy makes per lane —
+    // the unit of the shared-endpoint-lane saving below
+    let kim_loads = kim_loads_per_lane(n);
     // same block length as the single-query strip shard scan, so per-query
     // strip boundaries (and thus threshold sync points) are identical
     let strip_len = DEFAULT_STRIP.min(sync_every.max(1));
@@ -180,7 +198,13 @@ pub fn scan_cohort_topk(
         // the strip's shared stat lanes: loaded once, read by every member
         let (ms, ss) = stats.strip(strip_start, len);
         scratch.load_stats(ms, ss);
-        let CohortScratch { mean, std, lanes } = &mut *scratch;
+        if cascade.kim {
+            // ...and the strip's z-normalised LB_Kim endpoint lanes: the
+            // normalised values are query-independent, so one read of the
+            // raw samples serves every member's batched LB_Kim pass
+            scratch.load_kim(reference, strip_start, len, n);
+        }
+        let CohortScratch { mean, std, kim, lanes } = &mut *scratch;
         let mut first_live = true;
         for (mi, m) in members.iter_mut().enumerate() {
             if m.retired {
@@ -193,6 +217,9 @@ pub fn scan_cohort_topk(
             } else {
                 // served from the cohort's shared lanes for free
                 m.counters.strip_stat_loads_saved += len as u64;
+                if cascade.kim {
+                    m.counters.strip_sample_loads_saved += kim_loads * len as u64;
+                }
             }
             if let Some(shared) = &m.shared {
                 m.topk.set_bound(shared.get());
@@ -206,7 +233,7 @@ pub fn scan_cohort_topk(
             // constant for the batch stages, like the single-query strip
             let bsf_strip = m.topk.threshold();
             if cascade.kim {
-                batch_lb_kim_into(&m.ctx.q, reference, strip_start, len, mean, std, &mut lane.lb);
+                batch_lb_kim_pre(&m.ctx.q, kim, len, &mut lane.lb);
                 for i in 0..len {
                     if lane.lb[i] > bsf_strip {
                         lane.alive[i] = false;
@@ -267,6 +294,16 @@ pub fn scan_cohort_topk(
                 warm_caps,
                 "cohort pool must reuse capacity within a cohort, not regrow"
             );
+            // the workspace itself also tracks regrowth: zero within a
+            // cohort in debug builds, and surfaced as a counter so a
+            // warm-up regression is visible in release telemetry too
+            let regrows_now = pool.regrows();
+            m.counters.kernel_workspace_regrows += regrows_now - regrows_seen;
+            debug_assert_eq!(
+                regrows_now, regrows_seen,
+                "kernel workspace must not regrow within a cohort"
+            );
+            regrows_seen = regrows_now;
             if let Some(shared) = &m.shared {
                 if let Some(kth) = m.topk.kth_dist() {
                     shared.tighten(kth);
@@ -370,6 +407,31 @@ mod tests {
             total.strip_stat_loads_saved * queries.len() as u64,
             total.candidates * (queries.len() as u64 - 1)
         );
+        // the same invariant extended to LB_Kim's raw-sample reads: the
+        // shared endpoint lanes save 6 normalised reads per lane for each
+        // member beyond the first (qlen 64 ⇒ the full hierarchy)
+        assert_eq!(
+            total.strip_sample_loads_saved,
+            total.strip_stat_loads_saved * 6,
+            "sample saving is 6 endpoint reads per shared stat-lane read"
+        );
+        // and the pooled kernel workspace never regrew inside the cohort
+        assert_eq!(total.kernel_workspace_regrows, 0);
+    }
+
+    #[test]
+    fn bound_free_metric_shares_no_sample_loads() {
+        // a metric without envelope bounds never runs LB_Kim, so the
+        // sample-load counter must stay zero (the invariant is gated on
+        // the cascade, not on cohort membership)
+        let r = Dataset::Ppg.generate(700, 15);
+        let queries = extract_queries(&r, 2, 48, 0.1, 16);
+        let members = run_cohort(&r, &queries, 5, 2, Metric::Msm { cost: 0.5 }, Suite::UcrMon);
+        for m in &members {
+            assert_eq!(m.counters.strip_sample_loads_saved, 0);
+            assert_eq!(m.counters.lb_kim_prunes, 0);
+            assert_eq!(m.counters.kernel_workspace_regrows, 0);
+        }
     }
 
     #[test]

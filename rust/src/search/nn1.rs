@@ -102,10 +102,13 @@ pub fn nn1_topk_metric(
             continue;
         }
         counters.record_metric_call(metric);
-        let d = metric.eval(query, &candidates[i], w, ub, None, suite, &mut ws);
-        if d.is_infinite() {
+        // exact abandon attribution from the unified kernel: a candidate
+        // whose length difference exceeds the band (infeasible, +inf but
+        // not abandoned) no longer inflates the abandon tally
+        let out = metric.eval_outcome(query, &candidates[i], w, ub, None, suite, &mut ws);
+        if out.abandoned {
             counters.record_metric_abandon(metric);
-        } else if topk.offer(Match { pos: i, dist: d }) {
+        } else if out.dist.is_finite() && topk.offer(Match { pos: i, dist: out.dist }) {
             counters.topk_updates += 1;
             counters.ub_updates += 1;
         }

@@ -28,7 +28,7 @@ use crate::bounds::lb_keogh::{
 };
 use crate::bounds::lb_kim::lb_kim_hierarchy;
 use crate::distances::metric::Metric;
-use crate::distances::DtwWorkspace;
+use crate::distances::KernelWorkspace;
 use crate::index::ref_index::BucketStats;
 use crate::index::topk::TopK;
 use crate::metrics::Counters;
@@ -113,7 +113,10 @@ pub struct QueryContext {
     cb2: Vec<f64>,
     cb_cum: Vec<f64>,
     zbuf: Vec<f64>,
-    ws: DtwWorkspace,
+    /// the one kernel workspace every metric's evaluation runs on — for
+    /// cohort members it starts empty and a per-shard-worker pool is
+    /// swapped in ([`QueryContext::swap_kernel_buffers`])
+    ws: KernelWorkspace,
     /// SoA scratch lanes for the strip-mined scan (empty until first use)
     strip: StripScratch,
     /// elastic metric every candidate is scored under
@@ -181,7 +184,7 @@ impl QueryContext {
             cb2: vec![0.0; n],
             cb_cum: vec![0.0; n + 1],
             zbuf: if pooled { Vec::new() } else { vec![0.0; n] },
-            ws: if pooled { DtwWorkspace::default() } else { DtwWorkspace::with_capacity(n) },
+            ws: if pooled { KernelWorkspace::default() } else { KernelWorkspace::with_capacity(n) },
             strip: StripScratch::default(),
             metric,
         }
@@ -192,7 +195,7 @@ impl QueryContext {
     /// (swap in, score survivors, swap out), so ownership always returns
     /// to the pool and capacity is amortised across every member of every
     /// cohort the worker serves.
-    pub(crate) fn swap_kernel_buffers(&mut self, ws: &mut DtwWorkspace, zbuf: &mut Vec<f64>) {
+    pub(crate) fn swap_kernel_buffers(&mut self, ws: &mut KernelWorkspace, zbuf: &mut Vec<f64>) {
         std::mem::swap(&mut self.ws, ws);
         std::mem::swap(&mut self.zbuf, zbuf);
     }
@@ -713,10 +716,14 @@ fn score_candidate(
     };
     let metric = ctx.metric;
     counters.record_metric_call(metric);
-    let d = metric.eval(&ctx.q, &ctx.zbuf, ctx.w, bsf, cb, suite, &mut ctx.ws);
-    if d.is_infinite() {
+    // the unified kernel reports abandons itself, so the per-metric
+    // attribution is exact rather than inferred from an infinite return
+    // (an infeasible band — impossible here, windows match the query
+    // length — would not be an abandon)
+    let out = metric.eval_outcome(&ctx.q, &ctx.zbuf, ctx.w, bsf, cb, suite, &mut ctx.ws);
+    if out.abandoned {
         counters.record_metric_abandon(metric);
-    } else if topk.offer(Match { pos, dist: d }) {
+    } else if out.dist.is_finite() && topk.offer(Match { pos, dist: out.dist }) {
         counters.topk_updates += 1;
         counters.ub_updates += 1;
     }
@@ -841,6 +848,7 @@ pub fn search_subsequence_topk_metric_mode(
 mod tests {
     use super::*;
     use crate::data::Dataset;
+    use crate::distances::DtwWorkspace;
 
     /// Brute force oracle: exact banded DTW at every position.
     fn brute(reference: &[f64], query_raw: &[f64], w: usize) -> Match {

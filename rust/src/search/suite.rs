@@ -4,7 +4,10 @@
 //! in the DTW core and cascade policy.
 
 use crate::bounds::cascade::CascadePolicy;
-use crate::distances::{dtw_ea::dtw_ea, eap_dtw::eap_cdtw, pruned_dtw::pruned_cdtw, DtwWorkspace};
+use crate::distances::kernel::KernelEval;
+use crate::distances::{
+    dtw_ea::dtw_ea, eap_dtw::eap_cdtw_eval, pruned_dtw::pruned_cdtw, DtwWorkspace,
+};
 
 /// A suite = a DTW core + a cascade policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -68,11 +71,38 @@ impl Suite {
         cb: Option<&[f64]>,
         ws: &mut DtwWorkspace,
     ) -> f64 {
+        self.dtw_eval(q, c, w, ub, cb, ws).dist
+    }
+
+    /// [`Suite::dtw`] with the full [`KernelEval`] outcome. The UCR-MON
+    /// family runs the unified band kernel, which reports abandons
+    /// itself; the UCR / UCR-USP comparator cores predate the outcome
+    /// plumbing, so their `+inf` is classified here — an abandon exactly
+    /// when the band was feasible (an infeasible band's `+inf` is a
+    /// structural answer, not a threshold decision).
+    #[inline]
+    pub fn dtw_eval(
+        &self,
+        q: &[f64],
+        c: &[f64],
+        w: usize,
+        ub: f64,
+        cb: Option<&[f64]>,
+        ws: &mut DtwWorkspace,
+    ) -> KernelEval {
         match self {
-            Suite::Ucr => dtw_ea(q, c, w, ub, cb, ws),
-            Suite::UcrUsp => pruned_cdtw(q, c, w, ub, cb, ws),
+            Suite::Ucr => {
+                let d = dtw_ea(q, c, w, ub, cb, ws);
+                let feasible = q.len().abs_diff(c.len()) <= w;
+                KernelEval { dist: d, abandoned: d.is_infinite() && feasible }
+            }
+            Suite::UcrUsp => {
+                let d = pruned_cdtw(q, c, w, ub, cb, ws);
+                let feasible = q.len().abs_diff(c.len()) <= w;
+                KernelEval { dist: d, abandoned: d.is_infinite() && feasible }
+            }
             Suite::UcrMon | Suite::UcrMonNoLb | Suite::UcrMonXla => {
-                eap_cdtw(q, c, w, ub, cb, ws)
+                eap_cdtw_eval(q, c, w, ub, cb, ws)
             }
         }
     }
