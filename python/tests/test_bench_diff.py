@@ -1,0 +1,107 @@
+# Tooling: tools/bench_diff.py audits BENCH_*.json / metrics-snapshot
+# documents against the counter-conservation identities (the same ones
+# rust/tests/prop_invariants.rs property-tests in-process) and diffs two
+# artifacts. Stdlib-only — no jax needed.
+import copy
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+TOOL = REPO / "tools" / "bench_diff.py"
+BASELINE = REPO / "tools" / "baseline" / "BENCH_strip_throughput.json"
+
+
+def run_tool(*paths):
+    return subprocess.run(
+        [sys.executable, str(TOOL)] + [str(p) for p in paths],
+        capture_output=True,
+        text=True,
+    )
+
+
+def test_baseline_fixture_passes_the_audit():
+    res = run_tool(BASELINE)
+    assert res.returncode == 0, res.stderr
+    assert "invariants hold" in res.stdout
+
+
+def test_two_file_mode_prints_deltas_and_passes():
+    res = run_tool(BASELINE, BASELINE)
+    assert res.returncode == 0, res.stderr
+    assert "deltas" in res.stdout
+    assert "matched 2/2 runs" in res.stdout
+
+
+def _corrupt(doc, tweak):
+    bad = copy.deepcopy(doc)
+    tweak(bad)
+    return bad
+
+
+def test_violations_fail_with_exit_1(tmp_path):
+    doc = json.loads(BASELINE.read_text())
+
+    def broken_conservation(d):
+        d["runs"][0]["counters"]["dtw_calls"] += 1
+
+    def broken_outcomes(d):
+        d["stats"]["counters"]["dtw_abandons"] += 7
+
+    def broken_metric_sums(d):
+        d["stats"]["counters"]["metric_calls_msm"] = 5
+
+    def rebuilds_nonzero(d):
+        d["runs"][1]["counters"]["cost_model_rebuilds"] = 2
+
+    for name, tweak in [
+        ("conservation", broken_conservation),
+        ("outcomes", broken_outcomes),
+        ("metric_sums", broken_metric_sums),
+        ("rebuilds", rebuilds_nonzero),
+    ]:
+        p = tmp_path / f"{name}.json"
+        p.write_text(json.dumps(_corrupt(doc, tweak)))
+        res = run_tool(p)
+        assert res.returncode == 1, f"{name}: {res.stdout}{res.stderr}"
+        assert "INVARIANT VIOLATION" in res.stderr, name
+
+
+def test_bare_snapshot_documents_are_audited(tmp_path):
+    doc = json.loads(BASELINE.read_text())
+    snap = doc["stats"]
+    good = tmp_path / "snap.json"
+    good.write_text(json.dumps(snap))
+    assert run_tool(good).returncode == 0
+
+    bad_doc = copy.deepcopy(snap)
+    bad_doc["counters"]["candidates"] += 3
+    bad = tmp_path / "snap_bad.json"
+    bad.write_text(json.dumps(bad_doc))
+    res = run_tool(bad)
+    assert res.returncode == 1
+    assert "candidates" in res.stderr
+
+
+def test_missing_counters_are_skipped_not_failed(tmp_path):
+    # a pre-observability artifact lacks dtw_completions / xla_prunes:
+    # the identities that need them are skipped, nothing fails
+    legacy = {
+        "bench": "old",
+        "runs": [
+            {
+                "qlen": 128,
+                "counters": {"candidates": 10, "dtw_calls": 4, "dtw_abandons": 3},
+            }
+        ],
+    }
+    p = tmp_path / "legacy.json"
+    p.write_text(json.dumps(legacy))
+    res = run_tool(p)
+    assert res.returncode == 0, res.stderr
+
+
+def test_unreadable_file_is_a_usage_error(tmp_path):
+    res = run_tool(tmp_path / "nope.json")
+    assert res.returncode == 2

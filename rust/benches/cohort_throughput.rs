@@ -18,6 +18,7 @@ use repro::bench_support::report::BenchJson;
 use repro::data::extract_queries;
 use repro::index::{Engine, EngineConfig, Query, TopKResult};
 use repro::metrics::Counters;
+use repro::obs::MetricsSnapshot;
 use repro::util::json::Json;
 
 /// Bytes of stat-lane traffic per candidate position: mean + std, f64.
@@ -48,6 +49,7 @@ fn main() {
         "dataset", "batch", "seq", "cohort", "speedup", "seq q/s", "coh q/s", "B/q seq", "B/q coh", "retired"
     );
     let mut json = BenchJson::new("cohort_throughput");
+    let mut total = Counters::new();
     for &d in &datasets {
         let reference = d.generate(grid.ref_len, grid.seed);
         let queries: Vec<Query> = extract_queries(
@@ -87,6 +89,8 @@ fn main() {
                 }
             }
             let (cs, cc) = (merged(&rs), merged(&rc));
+            total.merge(&cs);
+            total.merge(&cc);
             // stat-lane traffic: sequential loads every candidate's
             // (mean, std) per query; the cohort loads each strip once
             let seq_bytes_per_query = cs.candidates as f64 * STAT_LANE_BYTES / b as f64;
@@ -133,5 +137,8 @@ fn main() {
         }
         println!("  {}", merged(&engine.search_batch(&queries, k).unwrap()).cohort_report());
     }
+    // embed the whole-run counter totals as a pinned-schema snapshot so
+    // tools/bench_diff.py can audit the conservation identities offline
+    json.set_stats(&MetricsSnapshot::from_counters(&total));
     json.write_and_announce();
 }

@@ -15,6 +15,7 @@ use repro::bench_support::report::BenchJson;
 use repro::data::extract_queries;
 use repro::distances::metric::Metric;
 use repro::metrics::Counters;
+use repro::obs::MetricsSnapshot;
 use repro::search::subsequence::{
     search_subsequence_topk_metric_mode, window_cells, ScanMode,
 };
@@ -43,6 +44,7 @@ fn main() {
         "dataset", "q", "qlen", "w%", "scalar", "strip", "speedup", "dtw_scal", "dtw_strip", "saved", "batch%"
     );
     let mut json = BenchJson::new("strip_throughput");
+    let mut total = Counters::new();
     let (mut total_scalar_dtw, mut total_strip_dtw) = (0u64, 0u64);
     for &d in &datasets {
         let reference = d.generate(grid.ref_len, grid.seed);
@@ -79,6 +81,8 @@ fn main() {
                     }
                     total_scalar_dtw += cs.dtw_calls;
                     total_strip_dtw += ct.dtw_calls;
+                    total.merge(&cs);
+                    total.merge(&ct);
                     let lb_total =
                         ct.lb_kim_prunes + ct.lb_keogh_eq_prunes + ct.lb_keogh_ec_prunes;
                     let batch_pct = if lb_total > 0 {
@@ -134,5 +138,8 @@ fn main() {
              lost to threshold staleness on this grid"
         );
     }
+    // embed the whole-run counter totals as a pinned-schema snapshot so
+    // tools/bench_diff.py can audit the conservation identities offline
+    json.set_stats(&MetricsSnapshot::from_counters(&total));
     json.write_and_announce();
 }

@@ -10,6 +10,7 @@ use anyhow::Result;
 use crate::bench_support::grid::RunResult;
 use crate::data::Dataset;
 use crate::metrics::Counters;
+use crate::obs::MetricsSnapshot;
 use crate::search::suite::Suite;
 use crate::util::json::{obj, Json};
 
@@ -69,11 +70,21 @@ impl Table {
 pub struct BenchJson {
     name: String,
     runs: Vec<Json>,
+    stats: Option<Json>,
 }
 
 impl BenchJson {
     pub fn new(name: &str) -> Self {
-        Self { name: name.to_string(), runs: Vec::new() }
+        Self { name: name.to_string(), runs: Vec::new(), stats: None }
+    }
+
+    /// Embed a pipeline metrics snapshot (pinned schema
+    /// `repro.metrics.v1`) under a top-level `stats` key, so each
+    /// `BENCH_*.json` carries the full observability document for the
+    /// run — `tools/bench_diff.py` checks the counter-conservation
+    /// identities on it when comparing two artifacts.
+    pub fn set_stats(&mut self, snapshot: &MetricsSnapshot) {
+        self.stats = Some(snapshot.to_json());
     }
 
     /// Push one run row with arbitrary fields.
@@ -101,8 +112,11 @@ impl BenchJson {
             ("lb_kim_prunes", Json::Num(c.lb_kim_prunes as f64)),
             ("lb_keogh_eq_prunes", Json::Num(c.lb_keogh_eq_prunes as f64)),
             ("lb_keogh_ec_prunes", Json::Num(c.lb_keogh_ec_prunes as f64)),
+            ("xla_prunes", Json::Num(c.xla_prunes as f64)),
             ("dtw_calls", Json::Num(c.dtw_calls as f64)),
             ("dtw_abandons", Json::Num(c.dtw_abandons as f64)),
+            ("dtw_completions", Json::Num(c.dtw_completions as f64)),
+            ("cost_model_rebuilds", Json::Num(c.cost_model_rebuilds as f64)),
             ("dp_cells", Json::Num(c.dp_cells as f64)),
             ("strip_batches", Json::Num(c.strip_batches as f64)),
             ("batch_lb_prunes", Json::Num(c.batch_lb_prunes as f64)),
@@ -128,11 +142,15 @@ impl BenchJson {
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_secs())
             .unwrap_or(0);
-        obj(vec![
+        let mut fields = vec![
             ("bench", Json::Str(self.name.clone())),
             ("created_unix", Json::Num(created as f64)),
             ("runs", Json::Arr(self.runs.clone())),
-        ])
+        ];
+        if let Some(stats) = &self.stats {
+            fields.push(("stats", stats.clone()));
+        }
+        obj(fields)
     }
 
     /// Write `BENCH_<name>.json` into `REPRO_BENCH_DIR` (default: the
@@ -364,11 +382,43 @@ mod tests {
         assert_eq!(first.get("dataset").and_then(Json::as_str), Some("ECG"));
         assert!(first.get("ns_per_op").and_then(Json::as_f64).unwrap() > 0.0);
         let counters = first.get("counters").unwrap();
-        for key in ["candidates", "dtw_calls", "strip_batches", "lb_order_saved_dtw_calls"] {
+        for key in [
+            "candidates",
+            "dtw_calls",
+            "dtw_completions",
+            "cost_model_rebuilds",
+            "xla_prunes",
+            "strip_batches",
+            "lb_order_saved_dtw_calls",
+        ] {
             assert!(counters.get(key).is_some(), "missing {key}");
         }
+        // no stats were attached: the key stays absent entirely
+        assert!(doc.get("stats").is_none());
         // the document is valid JSON end to end
         assert!(Json::parse(&doc.to_string()).is_ok());
+    }
+
+    #[test]
+    fn bench_json_embeds_a_pinned_schema_snapshot() {
+        let results = small_results();
+        let mut total = Counters::new();
+        for r in &results {
+            total.merge(&r.counters);
+        }
+        let mut bj = BenchJson::new("stats_test");
+        bj.push_result(&results[0]);
+        bj.set_stats(&MetricsSnapshot::from_counters(&total));
+        let doc = bj.to_json();
+        let stats = doc.get("stats").expect("stats embedded");
+        assert_eq!(
+            stats.get("schema").and_then(Json::as_str),
+            Some(crate::obs::SCHEMA)
+        );
+        // the embedded document round-trips through the snapshot parser
+        let back = MetricsSnapshot::from_json(stats).unwrap();
+        assert_eq!(back.counters.candidates, total.candidates);
+        assert_eq!(back.counters.dtw_calls, total.dtw_calls);
     }
 
     #[test]

@@ -14,11 +14,16 @@ use crate::coordinator::protocol::QueryRequest;
 /// Gathers requests into batches of at most `window`, flushing a partial
 /// batch once `deadline` has elapsed since its **first** request arrived
 /// (`None` = count-only coalescing, the pre-deadline behaviour).
+///
+/// Each flushed batch member carries its own arrival `Instant`, so the
+/// service can account the queue wait per request
+/// (`Service::submit_batch_timed` → `QueryResponse::queue_ms` and the
+/// `queue_wait` stage histogram).
 #[derive(Debug)]
 pub struct BatchCoalescer {
     window: usize,
     deadline: Option<Duration>,
-    pending: Vec<QueryRequest>,
+    pending: Vec<(QueryRequest, Instant)>,
     /// arrival time of the oldest pending request
     opened_at: Option<Instant>,
 }
@@ -45,11 +50,11 @@ impl BatchCoalescer {
     /// Accept one request that arrived at `now`. Returns a batch to serve
     /// when the window filled or the deadline expired — the batch may be
     /// smaller than the window (deadline flush), down to a single query.
-    pub fn push(&mut self, req: QueryRequest, now: Instant) -> Option<Vec<QueryRequest>> {
+    pub fn push(&mut self, req: QueryRequest, now: Instant) -> Option<Vec<(QueryRequest, Instant)>> {
         if self.pending.is_empty() {
             self.opened_at = Some(now);
         }
-        self.pending.push(req);
+        self.pending.push((req, now));
         if self.pending.len() >= self.window || self.due(now) {
             return self.flush();
         }
@@ -59,7 +64,7 @@ impl BatchCoalescer {
     /// Flush the partial window if its deadline has expired — the serve
     /// loop's idle tick, so a waiting query is answered even when no new
     /// request arrives to trigger [`BatchCoalescer::push`].
-    pub fn poll(&mut self, now: Instant) -> Option<Vec<QueryRequest>> {
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<(QueryRequest, Instant)>> {
         if self.due(now) {
             self.flush()
         } else {
@@ -68,7 +73,7 @@ impl BatchCoalescer {
     }
 
     /// Unconditionally flush whatever is pending (end of input / shutdown).
-    pub fn flush(&mut self) -> Option<Vec<QueryRequest>> {
+    pub fn flush(&mut self) -> Option<Vec<(QueryRequest, Instant)>> {
         if self.pending.is_empty() {
             return None;
         }
@@ -99,8 +104,12 @@ mod tests {
         let mut c = BatchCoalescer::new(2, Some(Duration::from_secs(3600)));
         let t0 = Instant::now();
         assert!(c.push(req(0), t0).is_none());
-        let batch = c.push(req(1), t0).expect("window full");
-        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let t1 = t0 + Duration::from_millis(2);
+        let batch = c.push(req(1), t1).expect("window full");
+        assert_eq!(batch.iter().map(|(r, _)| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        // each member keeps its own arrival time for queue accounting
+        assert_eq!(batch[0].1, t0);
+        assert_eq!(batch[1].1, t1);
         assert_eq!(c.pending(), 0);
     }
 
@@ -113,7 +122,8 @@ mod tests {
         assert!(c.poll(t0 + Duration::from_millis(4)).is_none());
         let batch = c.poll(t0 + Duration::from_millis(5)).expect("deadline flush");
         assert_eq!(batch.len(), 1);
-        assert_eq!(batch[0].id, 7);
+        assert_eq!(batch[0].0.id, 7);
+        assert_eq!(batch[0].1, t0, "arrival time survives the deadline flush");
         // the deadline clock restarts with the next first arrival
         let t1 = t0 + Duration::from_millis(100);
         assert!(c.push(req(8), t1).is_none());

@@ -94,6 +94,13 @@ impl QueryRequest {
     }
 }
 
+/// Is this line the live-stats command (`{"cmd":"stats"}`)? The serve
+/// loop answers it with the registry's pinned-schema snapshot
+/// (`Service::stats_json`) without touching the query pipeline.
+pub fn is_stats_line(line: &str) -> bool {
+    Json::parse(line).is_ok_and(|v| v.get("cmd").and_then(Json::as_str) == Some("stats"))
+}
+
 /// The wire form of a request that failed — validation or execution:
 /// `{"id":N,"error":"..."}`. The serve loop answers the failing line with
 /// this and keeps serving instead of tearing the whole session down.
@@ -148,6 +155,11 @@ pub struct QueryResponse {
     pub matches: Vec<Match>,
     /// wall-clock service latency in milliseconds
     pub latency_ms: f64,
+    /// milliseconds the request waited in the serve loop's batch
+    /// coalescer before service began. `None` (absent on the wire) for
+    /// solo submits and pre-observability servers — so every old
+    /// response line still parses, and old clients ignore the new field.
+    pub queue_ms: Option<f64>,
     /// candidates examined / pruned / DTW calls (aggregated over shards)
     pub candidates: u64,
     pub pruned: u64,
@@ -160,7 +172,7 @@ pub struct QueryResponse {
 
 impl QueryResponse {
     pub fn to_json(&self) -> String {
-        obj(vec![
+        let mut fields = vec![
             ("id", Json::Num(self.id as f64)),
             ("pos", Json::Num(self.pos as f64)),
             ("dist", Json::Num(self.dist)),
@@ -183,8 +195,13 @@ impl QueryResponse {
             ("pruned", Json::Num(self.pruned as f64)),
             ("dtw_calls", Json::Num(self.dtw_calls as f64)),
             ("cohort", Json::Num(self.cohort as f64)),
-        ])
-        .to_string()
+        ];
+        // emitted only when measured: solo responses stay byte-identical
+        // to the pre-observability wire format
+        if let Some(q) = self.queue_ms {
+            fields.push(("queue_ms", Json::Num(q)));
+        }
+        obj(fields).to_string()
     }
 
     pub fn from_json(line: &str) -> Result<Self> {
@@ -219,6 +236,8 @@ impl QueryResponse {
             dist,
             matches,
             latency_ms: num("latency_ms")?,
+            // absent on solo / pre-observability lines: parses as None
+            queue_ms: v.get("queue_ms").and_then(Json::as_f64),
             candidates: num("candidates")? as u64,
             pruned: num("pruned")? as u64,
             dtw_calls: num("dtw_calls")? as u64,
@@ -305,12 +324,18 @@ mod tests {
             dist: 3.5,
             matches: vec![Match { pos: 42, dist: 3.5 }, Match { pos: 7, dist: 4.25 }],
             latency_ms: 12.25,
+            queue_ms: None,
             candidates: 100,
             pruned: 90,
             dtw_calls: 10,
             cohort: 4,
         };
         assert_eq!(QueryResponse::from_json(&r.to_json()).unwrap(), r);
+        // a solo response (no queue wait) never mentions the field
+        assert!(!r.to_json().contains("queue_ms"));
+        // …and a coalesced one round-trips it
+        let q = QueryResponse { queue_ms: Some(1.5), ..r };
+        assert_eq!(QueryResponse::from_json(&q.to_json()).unwrap().queue_ms, Some(1.5));
     }
 
     #[test]
@@ -320,6 +345,16 @@ mod tests {
         assert_eq!(r.matches, vec![Match { pos: 42, dist: 3.5 }]);
         // pre-cohort lines carry no cohort field: served solo
         assert_eq!(r.cohort, 1);
+        // …and no queue_ms field: never coalesced
+        assert_eq!(r.queue_ms, None);
+    }
+
+    #[test]
+    fn stats_command_line_is_recognised() {
+        assert!(is_stats_line(r#"{"cmd":"stats"}"#));
+        assert!(!is_stats_line(r#"{"cmd":"quit"}"#));
+        assert!(!is_stats_line(r#"{"id":1,"window_ratio":0.1,"suite":"mon","query":[1]}"#));
+        assert!(!is_stats_line("not json"));
     }
 
     #[test]
@@ -334,6 +369,7 @@ mod tests {
             dist: 1.0,
             matches: vec![Match { pos: 0, dist: 1.0 }],
             latency_ms: 0.5,
+            queue_ms: None,
             candidates: 1,
             pruned: 0,
             dtw_calls: 1,

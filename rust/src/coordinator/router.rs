@@ -12,6 +12,7 @@ use crate::coordinator::worker::{CohortJob, Job, WorkItem};
 use crate::distances::metric::Metric;
 use crate::index::ref_index::BucketStats;
 use crate::metrics::Counters;
+use crate::obs::{ScanObs, Stage};
 use crate::search::subsequence::{
     validate_series, DataEnvelopes, Match, QueryContext, ScanMode,
 };
@@ -67,6 +68,30 @@ pub fn route_query_topk(
     denv: Option<Arc<DataEnvelopes>>,
     stats: Option<Arc<BucketStats>>,
 ) -> Result<(Vec<Match>, Counters)> {
+    route_query_topk_obs(
+        workers, reference, query_raw, w, metric, suite, mode, k, sync_every, denv, stats,
+        ScanObs::OFF,
+    )
+}
+
+/// [`route_query_topk`] with an observability handle: the fan-in phase
+/// (collecting and merging per-shard results) is timed into `obs`'s
+/// [`Stage::FanIn`] histogram. The service passes its registry cell here.
+#[allow(clippy::too_many_arguments)]
+pub fn route_query_topk_obs(
+    workers: &[Sender<WorkItem>],
+    reference: &Arc<Vec<f64>>,
+    query_raw: &[f64],
+    w: usize,
+    metric: Metric,
+    suite: Suite,
+    mode: ScanMode,
+    k: usize,
+    sync_every: usize,
+    denv: Option<Arc<DataEnvelopes>>,
+    stats: Option<Arc<BucketStats>>,
+    obs: ScanObs<'_>,
+) -> Result<(Vec<Match>, Counters)> {
     let n = query_raw.len();
     anyhow::ensure!(n > 0, "empty query");
     anyhow::ensure!(k >= 1, "k must be >= 1");
@@ -116,6 +141,10 @@ pub fn route_query_topk(
         dispatched += 1;
     }
     drop(reply_tx);
+    // fan-in: wall time from the first recv wait to the merged, ranked
+    // result — this measures collection + merge, which includes waiting
+    // for the slowest shard
+    let t0 = obs.now();
     let mut all: Vec<Match> = Vec::new();
     let mut counters = Counters::new();
     for _ in 0..dispatched {
@@ -132,6 +161,7 @@ pub fn route_query_topk(
             .then(a.pos.cmp(&b.pos))
     });
     all.truncate(k);
+    obs.stage_since(Stage::FanIn, t0);
     anyhow::ensure!(!all.is_empty(), "no match found");
     Ok((all, counters))
 }
@@ -163,6 +193,27 @@ pub fn route_cohort_topk(
     sync_every: usize,
     denv: Option<Arc<DataEnvelopes>>,
     stats: Arc<BucketStats>,
+) -> Result<Vec<(Vec<Match>, Counters)>> {
+    route_cohort_topk_obs(
+        workers, reference, queries, w, metric, suite, k, sync_every, denv, stats, ScanObs::OFF,
+    )
+}
+
+/// [`route_cohort_topk`] with an observability handle — fan-in timing,
+/// exactly as [`route_query_topk_obs`].
+#[allow(clippy::too_many_arguments)]
+pub fn route_cohort_topk_obs(
+    workers: &[Sender<WorkItem>],
+    reference: &Arc<Vec<f64>>,
+    queries: &[&[f64]],
+    w: usize,
+    metric: Metric,
+    suite: Suite,
+    k: usize,
+    sync_every: usize,
+    denv: Option<Arc<DataEnvelopes>>,
+    stats: Arc<BucketStats>,
+    obs: ScanObs<'_>,
 ) -> Result<Vec<(Vec<Match>, Counters)>> {
     anyhow::ensure!(!queries.is_empty(), "empty cohort");
     anyhow::ensure!(k >= 1, "k must be >= 1");
@@ -211,6 +262,7 @@ pub fn route_cohort_topk(
         dispatched += 1;
     }
     drop(reply_tx);
+    let t0 = obs.now();
     let mut per_query: Vec<(Vec<Match>, Counters)> =
         queries.iter().map(|_| (Vec::new(), Counters::new())).collect();
     for _ in 0..dispatched {
@@ -232,6 +284,7 @@ pub fn route_cohort_topk(
         matches.truncate(k);
         anyhow::ensure!(!matches.is_empty(), "no match found");
     }
+    obs.stage_since(Stage::FanIn, t0);
     Ok(per_query)
 }
 

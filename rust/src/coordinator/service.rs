@@ -21,12 +21,13 @@ use anyhow::{anyhow, Result};
 
 #[cfg(feature = "xla")]
 use crate::coordinator::batcher;
-use crate::coordinator::protocol::{QueryRequest, QueryResponse};
-use crate::coordinator::router::{route_cohort_topk, route_query_topk};
+use crate::coordinator::protocol::{is_stats_line, ErrorResponse, QueryRequest, QueryResponse};
+use crate::coordinator::router::{route_cohort_topk_obs, route_query_topk_obs};
 use crate::coordinator::worker::{worker_loop, WorkItem, DEFAULT_SYNC_EVERY};
 use crate::distances::metric::Metric;
 use crate::index::ref_index::RefIndex;
 use crate::metrics::{Counters, Timer};
+use crate::obs::{DistKind, Gauge, MetricsRegistry, MetricsSnapshot, ScanObs, Stage};
 #[cfg(feature = "xla")]
 use crate::runtime::XlaEngine;
 use crate::search::subsequence::{validate_series, window_cells, Match, ScanMode};
@@ -128,6 +129,9 @@ pub struct Service {
     batch_deadline_ms: u64,
     busy: Arc<AtomicU64>,
     served: AtomicU64,
+    /// sharded metrics registry: one cell per worker (handed out at spawn
+    /// time), one for the service thread; merged by [`Service::metrics`]
+    registry: MetricsRegistry,
 }
 
 impl Service {
@@ -141,15 +145,17 @@ impl Service {
         let reference = Arc::new(reference);
         let index = Arc::new(RefIndex::new(Arc::clone(&reference)));
         let busy = Arc::new(AtomicU64::new(0));
+        let registry = MetricsRegistry::new(cfg.shards);
         let mut senders = Vec::new();
         let mut handles = Vec::new();
         for i in 0..cfg.shards {
             let (tx, rx) = channel::<WorkItem>();
             let busy = Arc::clone(&busy);
+            let cell = registry.worker_cell(i);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("shard-{i}"))
-                    .spawn(move || worker_loop(rx, busy))?,
+                    .spawn(move || worker_loop(rx, busy, Some(cell)))?,
             );
             senders.push(tx);
         }
@@ -181,6 +187,7 @@ impl Service {
             batch_deadline_ms: cfg.batch_deadline_ms,
             busy,
             served: AtomicU64::new(0),
+            registry,
         })
     }
 
@@ -270,7 +277,12 @@ impl Service {
                     req.suite,
                     &mut pre,
                 )?;
-                let (matches, mut counters) = route_query_topk(
+                // scan counters enter the registry through the worker
+                // cells; the service cell takes only the index-side
+                // accounting and the fan-in stage time
+                let cell = self.registry.service_cell();
+                cell.flush_counters(&pre);
+                let (matches, mut counters) = route_query_topk_obs(
                     &self.senders,
                     &self.reference,
                     &req.query,
@@ -282,8 +294,10 @@ impl Service {
                     self.sync_every,
                     denv,
                     Some(stats),
+                    ScanObs(Some(cell)),
                 )?;
                 counters.merge(&pre);
+                cell.record_dist(DistKind::TopkTighten, counters.topk_updates);
                 (matches, counters)
             }
         };
@@ -310,6 +324,7 @@ impl Service {
             dist: best.dist,
             matches,
             latency_ms,
+            queue_ms: None,
             candidates: counters.candidates,
             pruned,
             dtw_calls: counters.dtw_calls,
@@ -337,6 +352,7 @@ impl Service {
             dist: m.dist,
             matches: vec![m],
             latency_ms: timer.elapsed_secs() * 1e3,
+            queue_ms: None,
             candidates: counters.candidates,
             pruned: counters.xla_prunes,
             dtw_calls: counters.dtw_calls,
@@ -358,10 +374,13 @@ impl Service {
     /// their latency (they were answered by the same scan) and carry the
     /// cohort size in [`QueryResponse::cohort`].
     pub fn submit_batch(&self, reqs: &[QueryRequest]) -> Vec<Result<QueryResponse>> {
+        let obs = ScanObs(Some(self.registry.service_cell()));
+        let form_timer = obs.stage_timer(Stage::CohortForm);
         let mut out: Vec<Option<Result<QueryResponse>>> = reqs.iter().map(|_| None).collect();
         // cohort key: (qlen, effective window, metric, suite, k)
         type Key = (usize, usize, Metric, Suite, usize);
         let mut cohorts: Vec<(Key, Vec<usize>)> = Vec::new();
+        let mut solos: Vec<usize> = Vec::new();
         for (i, req) in reqs.iter().enumerate() {
             let eligible = self.scan_mode == ScanMode::Strip
                 && req.suite != Suite::UcrMonXla
@@ -372,7 +391,7 @@ impl Service {
                 && req.metric.validate().is_ok();
             if !eligible {
                 // solo serving reproduces every existing error/edge path
-                out[i] = Some(self.submit(req));
+                solos.push(i);
                 continue;
             }
             let n = req.query.len();
@@ -383,7 +402,13 @@ impl Service {
                 None => cohorts.push((key, vec![i])),
             }
         }
+        // the timer covers only the grouping decision, not the serving
+        form_timer.stop();
+        for i in solos {
+            out[i] = Some(self.submit(&reqs[i]));
+        }
         for ((n, w, metric, suite, k), idxs) in cohorts {
+            obs.record_dist(DistKind::CohortSize, idxs.len() as u64);
             if idxs.len() == 1 {
                 let qi = idxs[0];
                 out[qi] = Some(self.submit(&reqs[qi]));
@@ -408,6 +433,37 @@ impl Service {
         out.into_iter().map(|r| r.expect("every request answered")).collect()
     }
 
+    /// [`Service::submit_batch`] for a coalesced window whose members
+    /// carry their enqueue times: the wait between coalescer arrival and
+    /// this call is recorded under the `queue_wait` stage and reported as
+    /// [`QueryResponse::queue_ms`] on each successful response. Results
+    /// are otherwise bitwise-identical to `submit_batch` — queue
+    /// accounting happens strictly before serving begins.
+    pub fn submit_batch_timed(
+        &self,
+        reqs: &[(QueryRequest, std::time::Instant)],
+    ) -> Vec<Result<QueryResponse>> {
+        let start = std::time::Instant::now();
+        let cell = self.registry.service_cell();
+        let queue_ms: Vec<f64> = reqs
+            .iter()
+            .map(|(_, enqueued)| {
+                // saturates to zero if the caller's clock reads ahead
+                let waited = start.duration_since(*enqueued);
+                cell.record_stage_ns(Stage::QueueWait, waited.as_nanos() as u64);
+                waited.as_secs_f64() * 1e3
+            })
+            .collect();
+        let plain: Vec<QueryRequest> = reqs.iter().map(|(r, _)| r.clone()).collect();
+        let mut out = self.submit_batch(&plain);
+        for (resp, waited_ms) in out.iter_mut().zip(queue_ms) {
+            if let Ok(resp) = resp {
+                resp.queue_ms = Some(waited_ms);
+            }
+        }
+        out
+    }
+
     /// One cohort through the shared strip pass: per-member index
     /// accounting (first lookup builds, the rest hit), one
     /// [`route_cohort_topk`] fan-out, one response per member.
@@ -423,16 +479,18 @@ impl Service {
         idxs: &[usize],
     ) -> Result<Vec<QueryResponse>> {
         let timer = Timer::start();
+        let cell = self.registry.service_cell();
         let mut pres = Vec::with_capacity(idxs.len());
         let mut artifacts = None;
         for _ in idxs {
             let mut pre = Counters::new();
             artifacts = Some(self.index.artifacts_for(n, w, metric, suite, &mut pre)?);
+            cell.flush_counters(&pre);
             pres.push(pre);
         }
         let (stats, denv) = artifacts.expect("cohort has members");
         let queries: Vec<&[f64]> = idxs.iter().map(|&qi| reqs[qi].query.as_slice()).collect();
-        let per_query = route_cohort_topk(
+        let per_query = route_cohort_topk_obs(
             &self.senders,
             &self.reference,
             &queries,
@@ -443,6 +501,7 @@ impl Service {
             self.sync_every,
             denv,
             stats,
+            ScanObs(Some(cell)),
         )?;
         let latency_ms = timer.elapsed_secs() * 1e3;
         self.served.fetch_add(idxs.len() as u64, Ordering::Relaxed);
@@ -452,6 +511,7 @@ impl Service {
             .zip(pres)
             .map(|((&qi, (matches, mut counters)), pre)| {
                 counters.merge(&pre);
+                cell.record_dist(DistKind::TopkTighten, counters.topk_updates);
                 Self::make_response(reqs[qi].id, matches, &counters, latency_ms, idxs.len())
             })
             .collect())
@@ -478,6 +538,46 @@ impl Service {
     pub fn batch_deadline(&self) -> Option<std::time::Duration> {
         (self.batch_deadline_ms > 0)
             .then(|| std::time::Duration::from_millis(self.batch_deadline_ms))
+    }
+
+    /// Point-in-time metrics: stamp the service-level gauges, then merge
+    /// every registry cell into one [`MetricsSnapshot`].
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let cell = self.registry.service_cell();
+        cell.set_gauge(Gauge::BusyWorkers, self.busy_workers());
+        cell.set_gauge(Gauge::QueriesServed, self.queries_served());
+        self.registry.snapshot()
+    }
+
+    /// The live-stats answer (`{"cmd":"stats"}` on the wire, or
+    /// `--stats-every` emission): one compact pinned-schema JSON line.
+    pub fn stats_json(&self) -> String {
+        self.metrics().to_json_string()
+    }
+
+    /// Serve-loop hook: requests currently waiting in the batch
+    /// coalescer (the service cannot see the coalescer itself).
+    pub fn set_coalescer_pending(&self, n: u64) {
+        self.registry.service_cell().set_gauge(Gauge::CoalescerPending, n);
+    }
+
+    /// Answer one wire line: `{"cmd":"stats"}` with the live registry's
+    /// pinned-schema snapshot, anything else as a query request (solo —
+    /// a coalescing front-end should parse and batch instead). Always
+    /// returns exactly one response line; failures answer with the
+    /// protocol's error line rather than tearing the session down.
+    pub fn handle_line(&self, line: &str) -> String {
+        if is_stats_line(line) {
+            return self.stats_json();
+        }
+        match QueryRequest::from_json(line) {
+            Ok(req) => match self.submit(&req) {
+                Ok(resp) => resp.to_json(),
+                Err(e) => ErrorResponse::new(req.id, &e).to_json(),
+            },
+            // the line never parsed: there is no request id to echo
+            Err(e) => ErrorResponse::new(0, &e).to_json(),
+        }
     }
 }
 
@@ -712,6 +812,15 @@ mod tests {
         }
         // 4 cohort answers + 4 solo re-checks
         assert_eq!(svc.queries_served(), 8);
+        // cohort formation and size were observed by the registry
+        let snap = svc.metrics();
+        assert!(snap.stages[Stage::CohortForm.index()].count() >= 1);
+        assert_eq!(snap.dists[DistKind::CohortSize.index()].max, 4);
+        assert!(snap.dists[DistKind::StripSurvivors.index()].count() > 0);
+        // the cohort scan's own bound passes and kernel evals were timed
+        assert!(snap.stages[Stage::BoundKim.index()].count() > 0);
+        assert!(snap.stages[Stage::BoundKeoghEq.index()].count() > 0);
+        assert!(snap.stages[Stage::KernelEval.index()].count() > 0);
     }
 
     #[test]
@@ -745,7 +854,7 @@ mod tests {
         // no further arrivals: the deadline, not the window, flushes
         let batch = co.poll(t0 + Duration::from_millis(6)).expect("deadline flush");
         assert_eq!(batch.len(), 1, "partial window flushed as a 1-query batch");
-        let got = svc.submit_batch(&batch).remove(0).unwrap();
+        let got = svc.submit_batch_timed(&batch).remove(0).unwrap();
         let want = svc.submit(&req).unwrap();
         assert_eq!(got.id, 77);
         assert_eq!(got.cohort, 1);
@@ -754,10 +863,88 @@ mod tests {
             assert_eq!(x.pos, y.pos);
             assert_eq!(x.dist.to_bits(), y.dist.to_bits());
         }
+        // the coalesced response reports its queue wait; the solo one
+        // never mentions it
+        assert!(got.queue_ms.is_some(), "coalesced response carries queue_ms");
+        assert!(got.queue_ms.unwrap() >= 0.0);
+        assert_eq!(want.queue_ms, None);
+        // …and the wait landed in the queue_wait stage histogram
+        let snap = svc.metrics();
+        assert!(snap.stages[Stage::QueueWait.index()].count() >= 1);
         // a zero deadline means "no deadline" (count-only coalescing)
         let svc0 =
             Service::new(Dataset::Soccer.generate(300, 1), &ServiceConfig::default()).unwrap();
         assert_eq!(svc0.batch_deadline(), None);
+    }
+
+    #[test]
+    fn registry_observes_serving_without_changing_results() {
+        let r = Dataset::Ecg.generate(2000, 71);
+        let qs = crate::data::extract_queries(&r, 3, 128, 0.1, 72);
+        for mode in [ScanMode::Scalar, ScanMode::Strip] {
+            let svc = Service::new(
+                r.clone(),
+                &ServiceConfig { shards: 2, scan_mode: mode, ..Default::default() },
+            )
+            .unwrap();
+            for (i, q) in qs.iter().enumerate() {
+                let req = QueryRequest {
+                    id: i as u64,
+                    query: q.clone(),
+                    window_ratio: 0.1,
+                    suite: Suite::UcrMon,
+                    k: 3,
+                    metric: Metric::Cdtw,
+                };
+                let resp = svc.submit(&req).unwrap();
+                // the registry is always attached — results must still be
+                // bitwise what the bare library search returns
+                let mut c = Counters::new();
+                let want = search_subsequence_topk(
+                    &r,
+                    q,
+                    window_cells(q.len(), 0.1),
+                    3,
+                    Suite::UcrMon,
+                    &mut c,
+                );
+                for (g, m) in resp.matches.iter().zip(&want) {
+                    assert_eq!(g.pos, m.pos, "{mode:?}");
+                    assert_eq!(g.dist.to_bits(), m.dist.to_bits(), "{mode:?}");
+                }
+            }
+            let snap = svc.metrics();
+            // scan counters flowed through the worker cells exactly once
+            assert!(snap.counters.candidates > 0, "{mode:?}");
+            assert_eq!(
+                snap.counters.dtw_calls,
+                snap.counters.dtw_abandons + snap.counters.dtw_completions,
+                "{mode:?}"
+            );
+            // stage latencies landed for the bound cascade, the kernel,
+            // and the router fan-in
+            for s in [Stage::BoundKim, Stage::BoundKeoghEq, Stage::KernelEval, Stage::FanIn] {
+                assert!(snap.stages[s.index()].count() > 0, "{mode:?} {}", s.name());
+            }
+            if mode == ScanMode::Strip {
+                assert!(snap.dists[DistKind::StripSurvivors.index()].count() > 0);
+            }
+            // one top-k tightening observation per query served
+            assert_eq!(snap.dists[DistKind::TopkTighten.index()].count(), 3, "{mode:?}");
+            assert_eq!(snap.gauges[Gauge::QueriesServed.index()], 3, "{mode:?}");
+            // the stats line speaks the pinned schema and round-trips
+            let line = svc.stats_json();
+            let back = MetricsSnapshot::from_json(
+                &crate::util::json::Json::parse(&line).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back.counters.candidates, snap.counters.candidates, "{mode:?}");
+            assert_eq!(
+                back.stages[Stage::KernelEval.index()].count(),
+                snap.stages[Stage::KernelEval.index()].count(),
+                "{mode:?}"
+            );
+        }
     }
 
     #[test]
@@ -797,6 +984,40 @@ mod tests {
         let want = svc.submit(&reqs[2]).unwrap();
         assert_eq!(c.pos, want.pos);
         assert_eq!(c.dist.to_bits(), want.dist.to_bits());
+    }
+
+    #[test]
+    fn handle_line_serves_queries_and_answers_stats_from_the_live_registry() {
+        use crate::util::json::Json;
+        let r = Dataset::Ecg.generate(1200, 81);
+        let q = crate::data::extract_queries(&r, 1, 96, 0.1, 82).remove(0);
+        let svc = Service::new(r, &ServiceConfig::default()).unwrap();
+        // a fresh service answers stats with an all-zero snapshot
+        let before =
+            MetricsSnapshot::from_json(&Json::parse(&svc.handle_line(r#"{"cmd":"stats"}"#)).unwrap())
+                .unwrap();
+        assert_eq!(before.counters.candidates, 0);
+        // serve one query over the wire
+        let req = QueryRequest {
+            id: 5,
+            query: q,
+            window_ratio: 0.1,
+            suite: Suite::UcrMon,
+            k: 2,
+            metric: Metric::Cdtw,
+        };
+        let resp = QueryResponse::from_json(&svc.handle_line(&req.to_json())).unwrap();
+        assert_eq!(resp.id, 5);
+        assert_eq!(resp.matches.len(), 2);
+        // …and the stats line now reflects it
+        let after =
+            MetricsSnapshot::from_json(&Json::parse(&svc.handle_line(r#"{"cmd":"stats"}"#)).unwrap())
+                .unwrap();
+        assert_eq!(after.counters.candidates, resp.candidates);
+        assert_eq!(after.gauges[Gauge::QueriesServed.index()], 1);
+        // junk lines answer with the protocol's error line, not a panic
+        let err = svc.handle_line("not json at all");
+        assert!(crate::coordinator::protocol::ErrorResponse::is_error_line(&err), "{err}");
     }
 
     #[test]

@@ -17,9 +17,10 @@ use crate::coordinator::state::SharedUb;
 use crate::index::ref_index::BucketStats;
 use crate::index::topk::TopK;
 use crate::metrics::Counters;
-use crate::search::cohort::{scan_cohort_topk, CohortMember, CohortPool};
+use crate::obs::{ObsCell, ScanObs};
+use crate::search::cohort::{scan_cohort_topk_obs, CohortMember, CohortPool};
 use crate::search::subsequence::{
-    scan_topk_policy_mode, DataEnvelopes, Match, QueryContext, ScanMode, ScanStats,
+    scan_topk_policy_mode_obs, DataEnvelopes, Match, QueryContext, ScanMode, ScanStats,
 };
 use crate::search::suite::Suite;
 
@@ -59,6 +60,42 @@ pub fn scan_shard_topk(
     sync_every: usize,
     counters: &mut Counters,
 ) -> TopK {
+    scan_shard_topk_obs(
+        reference,
+        start,
+        end,
+        ctx,
+        denv,
+        stats,
+        suite,
+        mode,
+        k,
+        shared,
+        sync_every,
+        counters,
+        ScanObs::OFF,
+    )
+}
+
+/// [`scan_shard_topk`] with an observability handle — the worker-loop
+/// entry, so scan-stage latencies land in the worker's registry cell.
+/// Attaching a cell changes no result bit.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_shard_topk_obs(
+    reference: &[f64],
+    start: usize,
+    end: usize,
+    ctx: &mut QueryContext,
+    denv: Option<&DataEnvelopes>,
+    stats: Option<&BucketStats>,
+    suite: Suite,
+    mode: ScanMode,
+    k: usize,
+    shared: &SharedUb,
+    sync_every: usize,
+    counters: &mut Counters,
+    obs: ScanObs<'_>,
+) -> TopK {
     let n = ctx.len();
     let end = end.min(reference.len().saturating_sub(n) + 1);
     let block = match mode {
@@ -74,7 +111,7 @@ pub fn scan_shard_topk(
             Some(table) => ScanStats::Indexed(table),
             None => ScanStats::Streaming,
         };
-        scan_topk_policy_mode(
+        scan_topk_policy_mode_obs(
             reference,
             block_start,
             block_end,
@@ -86,6 +123,7 @@ pub fn scan_shard_topk(
             mode,
             &mut topk,
             counters,
+            obs,
         );
         if let Some(kth) = topk.kth_dist() {
             shared.tighten(kth);
@@ -191,15 +229,22 @@ pub struct Job {
 /// (shared stat lanes + per-query bound lanes), reused across every cohort
 /// — and every query of every cohort — it ever serves, so the steady
 /// state allocates nothing per query.
-pub fn worker_loop(rx: Receiver<WorkItem>, busy: Arc<AtomicU64>) {
+///
+/// `cell` is the worker's shard of the service's
+/// [`crate::obs::MetricsRegistry`] (or `None` outside a registry-backed
+/// service): the scan records stage latencies through it, and the finished
+/// per-job [`Counters`] delta is flushed into it once per job — the single
+/// point where scan counters enter the registry.
+pub fn worker_loop(rx: Receiver<WorkItem>, busy: Arc<AtomicU64>, cell: Option<Arc<ObsCell>>) {
     let mut pool = CohortPool::default();
     let mut scratch = CohortScratch::default();
+    let obs = ScanObs(cell.as_deref());
     while let Ok(item) = rx.recv() {
         busy.fetch_add(1, Ordering::Relaxed);
         match item {
             WorkItem::Single(mut job) => {
                 let mut counters = Counters::new();
-                let topk = scan_shard_topk(
+                let topk = scan_shard_topk_obs(
                     &job.reference,
                     job.start,
                     job.end,
@@ -212,7 +257,11 @@ pub fn worker_loop(rx: Receiver<WorkItem>, busy: Arc<AtomicU64>) {
                     &job.shared,
                     job.sync_every,
                     &mut counters,
+                    obs,
                 );
+                if let Some(cell) = &cell {
+                    cell.flush_counters(&counters);
+                }
                 // receiver may have given up (service shutdown): ignore
                 // send errors
                 let _ = job.reply.send((topk.into_sorted(), counters));
@@ -223,7 +272,7 @@ pub fn worker_loop(rx: Receiver<WorkItem>, busy: Arc<AtomicU64>) {
                     .into_iter()
                     .map(|(ctx, shared)| CohortMember::with_shared(ctx, job.k, shared))
                     .collect();
-                scan_cohort_topk(
+                scan_cohort_topk_obs(
                     &job.reference,
                     job.start,
                     job.end,
@@ -234,7 +283,13 @@ pub fn worker_loop(rx: Receiver<WorkItem>, busy: Arc<AtomicU64>) {
                     job.sync_every,
                     &mut scratch,
                     &mut pool,
+                    obs,
                 );
+                if let Some(cell) = &cell {
+                    for m in &members {
+                        cell.flush_counters(&m.counters);
+                    }
+                }
                 let _ = job.reply.send(
                     members.into_iter().map(|m| (m.topk.into_sorted(), m.counters)).collect(),
                 );

@@ -1,0 +1,146 @@
+//! Per-query cost-model table cache (PR 5 follow-up): WDTW's sigmoid
+//! weight table and ERP's query-side gap prefix sums depend only on the
+//! query (and the metric's parameters), yet the owned cost models rebuild
+//! — and reallocate — them for **every candidate**. A scan holds one
+//! [`CostModelCache`] in its `QueryContext`, prepares it once, and scores
+//! candidates through [`crate::distances::metric::Metric::eval_outcome_cached`]:
+//! bitwise identical to the owned path (both route through the same table
+//! builders) with zero per-candidate allocation. Eval-time rebuilds —
+//! which should never happen within one query — are counted and surfaced
+//! as [`crate::metrics::Counters::cost_model_rebuilds`], asserted zero in
+//! the cohort conformance tests.
+
+use crate::distances::elastic::erp::erp_acc_into;
+use crate::distances::elastic::wdtw::wdtw_weights_into;
+use crate::distances::metric::Metric;
+
+/// Cached query-side tables for the parameterised cost models. The cache
+/// belongs to exactly one query context: the ERP column table holds
+/// prefix sums of the *values* of the query it was prepared with, so
+/// reusing a cache across different queries of the same length without
+/// re-preparing would be wrong — `QueryContext::build` prepares it, and
+/// the eval path only ever passes that context's query back in.
+#[derive(Debug, Default, Clone)]
+pub struct CostModelCache {
+    /// `(len, g.to_bits())` the weight table was built for.
+    wdtw_key: Option<(usize, u64)>,
+    wdtw_weights: Vec<f64>,
+    /// `(qlen, gap.to_bits())` the column table was built for.
+    erp_key: Option<(usize, u64)>,
+    erp_col_acc: Vec<f64>,
+    /// Candidate-side prefix sums, rebuilt in place per candidate (the
+    /// values change with every candidate; only the allocation is hoisted).
+    erp_row_acc: Vec<f64>,
+    rebuilds: u64,
+}
+
+impl CostModelCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build the query-side tables for scoring candidates of `q`'s length
+    /// under `metric`. A no-op for metrics without query-side tables.
+    pub fn prepare(&mut self, metric: Metric, q: &[f64]) {
+        match metric {
+            Metric::Wdtw { g } => {
+                // Subsequence candidates share the query's length, so the
+                // weight table for `q.len()` serves every evaluation.
+                wdtw_weights_into(q.len(), g, &mut self.wdtw_weights);
+                self.wdtw_key = Some((q.len(), g.to_bits()));
+            }
+            Metric::Erp { gap } => {
+                erp_acc_into(q, gap, &mut self.erp_col_acc);
+                self.erp_key = Some((q.len(), gap.to_bits()));
+                self.erp_row_acc.clear();
+                self.erp_row_acc.reserve(q.len() + 1);
+            }
+            _ => {}
+        }
+    }
+
+    /// The WDTW weight table for `(len, g)`, rebuilding (and counting a
+    /// rebuild) on a key miss — e.g. an NN1 candidate longer than the
+    /// query.
+    #[inline]
+    pub(crate) fn wdtw_weights(&mut self, len: usize, g: f64) -> &[f64] {
+        if self.wdtw_key != Some((len, g.to_bits())) {
+            if self.wdtw_key.is_some() {
+                self.rebuilds += 1;
+            }
+            wdtw_weights_into(len, g, &mut self.wdtw_weights);
+            self.wdtw_key = Some((len, g.to_bits()));
+        }
+        &self.wdtw_weights
+    }
+
+    /// The ERP border tables for query `q` and candidate `c`: the column
+    /// table from the cache (rebuilt, counted, on a key miss), the row
+    /// table recomputed into the reused buffer. Returns `(col, row)`.
+    #[inline]
+    pub(crate) fn erp_accs(&mut self, q: &[f64], c: &[f64], gap: f64) -> (&[f64], &[f64]) {
+        if self.erp_key != Some((q.len(), gap.to_bits())) {
+            if self.erp_key.is_some() {
+                self.rebuilds += 1;
+            }
+            erp_acc_into(q, gap, &mut self.erp_col_acc);
+            self.erp_key = Some((q.len(), gap.to_bits()));
+        }
+        erp_acc_into(c, gap, &mut self.erp_row_acc);
+        (&self.erp_col_acc, &self.erp_row_acc)
+    }
+
+    /// Drain the eval-time rebuild count (see
+    /// [`crate::metrics::Counters::cost_model_rebuilds`]).
+    #[inline]
+    pub fn take_rebuilds(&mut self) -> u64 {
+        std::mem::take(&mut self.rebuilds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepare_then_hit_counts_no_rebuilds() {
+        let q = [0.5, -0.25, 1.0, 0.0];
+        let mut cache = CostModelCache::new();
+        cache.prepare(Metric::Wdtw { g: 0.05 }, &q);
+        for _ in 0..3 {
+            let w = cache.wdtw_weights(q.len(), 0.05);
+            assert_eq!(w.len(), q.len() + 1);
+        }
+        assert_eq!(cache.take_rebuilds(), 0);
+        // a different length is a miss and counts
+        cache.wdtw_weights(q.len() + 2, 0.05);
+        assert_eq!(cache.take_rebuilds(), 1);
+    }
+
+    #[test]
+    fn erp_column_table_caches_and_row_table_rebuilds_in_place() {
+        let q = [1.0, 2.0, 3.0];
+        let c1 = [0.0, 1.0, 0.5];
+        let c2 = [2.0, -1.0, 0.25];
+        let mut cache = CostModelCache::new();
+        cache.prepare(Metric::Erp { gap: 0.0 }, &q);
+        let (col_a, row_a) = cache.erp_accs(&q, &c1, 0.0);
+        assert_eq!(col_a.len(), q.len() + 1);
+        let row_a = row_a.to_vec();
+        let (_, row_b) = cache.erp_accs(&q, &c2, 0.0);
+        assert_ne!(row_a, row_b.to_vec());
+        assert_eq!(cache.take_rebuilds(), 0);
+        // changing the gap invalidates the column table
+        cache.erp_accs(&q, &c1, 0.5);
+        assert_eq!(cache.take_rebuilds(), 1);
+    }
+
+    #[test]
+    fn unprepared_cache_builds_without_counting_a_rebuild() {
+        let q = [1.0, 0.0];
+        let mut cache = CostModelCache::new();
+        cache.wdtw_weights(q.len(), 0.1);
+        cache.erp_accs(&q, &q, 0.0);
+        assert_eq!(cache.take_rebuilds(), 0);
+    }
+}

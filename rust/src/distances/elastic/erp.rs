@@ -8,6 +8,21 @@ use crate::distances::cost::sqed;
 use crate::distances::kernel::CostModel;
 use crate::distances::DtwWorkspace;
 
+/// Fill `out` with the gap-penalty prefix sums for `s` under gap value
+/// `g`: `out[j] = sum_{k<j} (s[k]-g)^2`, `out[0] = 0`. These are ERP's
+/// finite borders; [`Erp::new`] routes through here so the cached and
+/// owned forms accumulate in the same order (bitwise identity).
+pub fn erp_acc_into(s: &[f64], g: f64, out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(s.len() + 1);
+    out.push(0.0);
+    let mut a = 0.0;
+    for &x in s {
+        a += sqed(x, g);
+        out.push(a);
+    }
+}
+
 /// ERP cost structure over two series with gap value `g`.
 pub struct Erp<'a> {
     li: &'a [f64],
@@ -20,21 +35,65 @@ pub struct Erp<'a> {
 
 impl<'a> Erp<'a> {
     pub fn new(li: &'a [f64], co: &'a [f64], g: f64) -> Self {
-        let acc = |s: &[f64]| {
-            let mut v = Vec::with_capacity(s.len() + 1);
-            v.push(0.0);
-            let mut a = 0.0;
-            for &x in s {
-                a += sqed(x, g);
-                v.push(a);
-            }
-            v
-        };
-        Self { li, co, g, row_acc: acc(co), col_acc: acc(li) }
+        let mut row_acc = Vec::new();
+        let mut col_acc = Vec::new();
+        erp_acc_into(co, g, &mut row_acc);
+        erp_acc_into(li, g, &mut col_acc);
+        Self { li, co, g, row_acc, col_acc }
     }
 }
 
 impl CostModel for Erp<'_> {
+    fn n_lines(&self) -> usize {
+        self.li.len()
+    }
+    fn n_cols(&self) -> usize {
+        self.co.len()
+    }
+    fn diag(&self, i: usize, j: usize) -> f64 {
+        sqed(self.li[i - 1], self.co[j - 1])
+    }
+    fn top(&self, i: usize, _j: usize) -> f64 {
+        sqed(self.li[i - 1], self.g)
+    }
+    fn left(&self, _i: usize, j: usize) -> f64 {
+        sqed(self.co[j - 1], self.g)
+    }
+    fn border_row(&self, j: usize) -> f64 {
+        self.row_acc[j]
+    }
+    fn border_col(&self, i: usize) -> f64 {
+        self.col_acc[i]
+    }
+}
+
+/// [`Erp`] over caller-owned prefix-sum tables (built with
+/// [`erp_acc_into`]): the allocation-free form the per-query cost cache
+/// evaluates candidates through — `col_acc` (the query-side border) is
+/// built once per query, `row_acc` (candidate-side) into a reused buffer.
+pub struct ErpRef<'a> {
+    li: &'a [f64],
+    co: &'a [f64],
+    g: f64,
+    row_acc: &'a [f64],
+    col_acc: &'a [f64],
+}
+
+impl<'a> ErpRef<'a> {
+    pub fn new(
+        li: &'a [f64],
+        co: &'a [f64],
+        g: f64,
+        row_acc: &'a [f64],
+        col_acc: &'a [f64],
+    ) -> Self {
+        debug_assert_eq!(row_acc.len(), co.len() + 1);
+        debug_assert_eq!(col_acc.len(), li.len() + 1);
+        Self { li, co, g, row_acc, col_acc }
+    }
+}
+
+impl CostModel for ErpRef<'_> {
     fn n_lines(&self) -> usize {
         self.li.len()
     }
@@ -115,6 +174,48 @@ mod tests {
                             f64::INFINITY,
                             "abandon n={n} g={g} w={w}"
                         );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn borrowed_acc_tables_are_bitwise_the_owned_form() {
+        let mut x = 404u64;
+        let mut rnd = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 2.0 - 1.0
+        };
+        let mut ws = DtwWorkspace::default();
+        let mut ws2 = DtwWorkspace::default();
+        let (mut row, mut col) = (Vec::new(), Vec::new());
+        for n in [6usize, 17] {
+            let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            for g in [0.0, 0.5] {
+                erp_acc_into(&b, g, &mut row);
+                erp_acc_into(&a, g, &mut col);
+                for w in [2usize, n] {
+                    for ub in [f64::INFINITY, 0.5, 0.0] {
+                        let want = crate::distances::kernel::eap_kernel(
+                            &Erp::new(&a, &b, g),
+                            w,
+                            ub,
+                            None,
+                            &mut ws2,
+                        );
+                        let got = crate::distances::kernel::eap_kernel(
+                            &ErpRef::new(&a, &b, g, &row, &col),
+                            w,
+                            ub,
+                            None,
+                            &mut ws,
+                        );
+                        assert_eq!(got.dist.to_bits(), want.dist.to_bits(), "n={n} g={g} w={w}");
+                        assert_eq!(got.abandoned, want.abandoned, "n={n} g={g} w={w}");
                     }
                 }
             }

@@ -13,6 +13,24 @@ use crate::distances::DtwWorkspace;
 /// Maximum weight (the UEA/tsml convention).
 const WMAX: f64 = 1.0;
 
+/// Fill `out` with the WDTW sigmoid weight table for series length `len`:
+/// `out[d] = WMAX / (1 + exp(-g * (d - len/2)))` for `d in 0..=len`. The
+/// table depends on `(len, g)` only, so callers scoring many candidates
+/// of one length build it once (see `distances::cache`); [`Wdtw::new`]
+/// routes through here so the cached and owned forms are bitwise
+/// identical by construction.
+pub fn wdtw_weights_into(len: usize, g: f64, out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(len + 1);
+    let mid = len as f64 / 2.0;
+    out.extend((0..=len).map(|d| WMAX / (1.0 + (-g * (d as f64 - mid)).exp())));
+}
+
+#[inline(always)]
+fn wdtw_cost(li: &[f64], co: &[f64], weights: &[f64], i: usize, j: usize) -> f64 {
+    weights[i.abs_diff(j)] * sqed(li[i - 1], co[j - 1])
+}
+
 /// WDTW cost structure; `g` is the sigmoid steepness (commonly 0.05).
 pub struct Wdtw<'a> {
     li: &'a [f64],
@@ -23,16 +41,9 @@ pub struct Wdtw<'a> {
 
 impl<'a> Wdtw<'a> {
     pub fn new(li: &'a [f64], co: &'a [f64], g: f64) -> Self {
-        let len = li.len().max(co.len());
-        let mid = len as f64 / 2.0;
-        let weights = (0..=len)
-            .map(|d| WMAX / (1.0 + (-g * (d as f64 - mid)).exp()))
-            .collect();
+        let mut weights = Vec::new();
+        wdtw_weights_into(li.len().max(co.len()), g, &mut weights);
         Self { li, co, weights }
-    }
-    #[inline(always)]
-    fn cost(&self, i: usize, j: usize) -> f64 {
-        self.weights[i.abs_diff(j)] * sqed(self.li[i - 1], self.co[j - 1])
     }
 }
 
@@ -44,13 +55,48 @@ impl CostModel for Wdtw<'_> {
         self.co.len()
     }
     fn diag(&self, i: usize, j: usize) -> f64 {
-        self.cost(i, j)
+        wdtw_cost(self.li, self.co, &self.weights, i, j)
     }
     fn top(&self, i: usize, j: usize) -> f64 {
-        self.cost(i, j)
+        wdtw_cost(self.li, self.co, &self.weights, i, j)
     }
     fn left(&self, i: usize, j: usize) -> f64 {
-        self.cost(i, j)
+        wdtw_cost(self.li, self.co, &self.weights, i, j)
+    }
+}
+
+/// [`Wdtw`] over a caller-owned weight table (built with
+/// [`wdtw_weights_into`]): the allocation-free form the per-query cost
+/// cache evaluates candidates through. `weights.len()` must be at least
+/// `max(li.len(), co.len()) + 1`.
+pub struct WdtwRef<'a> {
+    li: &'a [f64],
+    co: &'a [f64],
+    weights: &'a [f64],
+}
+
+impl<'a> WdtwRef<'a> {
+    pub fn new(li: &'a [f64], co: &'a [f64], weights: &'a [f64]) -> Self {
+        debug_assert!(weights.len() > li.len().max(co.len()));
+        Self { li, co, weights }
+    }
+}
+
+impl CostModel for WdtwRef<'_> {
+    fn n_lines(&self) -> usize {
+        self.li.len()
+    }
+    fn n_cols(&self) -> usize {
+        self.co.len()
+    }
+    fn diag(&self, i: usize, j: usize) -> f64 {
+        wdtw_cost(self.li, self.co, self.weights, i, j)
+    }
+    fn top(&self, i: usize, j: usize) -> f64 {
+        wdtw_cost(self.li, self.co, self.weights, i, j)
+    }
+    fn left(&self, i: usize, j: usize) -> f64 {
+        wdtw_cost(self.li, self.co, self.weights, i, j)
     }
 }
 
@@ -112,6 +158,45 @@ mod tests {
                             f64::INFINITY
                         );
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn borrowed_weight_table_is_bitwise_the_owned_form() {
+        let mut x = 99u64;
+        let mut rnd = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 2.0 - 1.0
+        };
+        let mut ws = DtwWorkspace::default();
+        let mut ws2 = DtwWorkspace::default();
+        let mut weights = Vec::new();
+        for n in [7usize, 19] {
+            let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            for g in [0.05, 0.3] {
+                wdtw_weights_into(n, g, &mut weights);
+                for ub in [f64::INFINITY, 1.0, 0.0] {
+                    let want = crate::distances::kernel::eap_kernel(
+                        &Wdtw::new(&a, &b, g),
+                        n,
+                        ub,
+                        None,
+                        &mut ws2,
+                    );
+                    let got = crate::distances::kernel::eap_kernel(
+                        &WdtwRef::new(&a, &b, &weights),
+                        n,
+                        ub,
+                        None,
+                        &mut ws,
+                    );
+                    assert_eq!(got.dist.to_bits(), want.dist.to_bits(), "n={n} g={g} ub={ub}");
+                    assert_eq!(got.abandoned, want.abandoned, "n={n} g={g} ub={ub}");
                 }
             }
         }

@@ -10,11 +10,12 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::distances::cache::CostModelCache;
 use crate::distances::dtw::dtw_oracle;
-use crate::distances::elastic::erp::{erp_naive, Erp};
+use crate::distances::elastic::erp::{erp_naive, Erp, ErpRef};
 use crate::distances::elastic::msm::{msm_naive, Msm};
 use crate::distances::elastic::twe::{twe_naive, Twe};
-use crate::distances::elastic::wdtw::{wdtw_naive, Wdtw};
+use crate::distances::elastic::wdtw::{wdtw_naive, Wdtw, WdtwRef};
 use crate::distances::kernel::{eap_kernel, KernelEval};
 use crate::distances::DtwWorkspace;
 use crate::search::suite::Suite;
@@ -150,6 +151,40 @@ impl Metric {
             Metric::Twe { nu, lambda } => {
                 eap_kernel(&Twe::new(q, c, nu, lambda), w, ub, None, ws)
             }
+        }
+    }
+
+    /// [`Metric::eval_outcome`] through a per-query [`CostModelCache`]:
+    /// WDTW scores against the cached weight table and ERP against the
+    /// cached query-side border table (candidate-side prefix sums go into
+    /// the cache's reused buffer) — no per-candidate allocation. Bitwise
+    /// identical to the uncached path: both forms build their tables with
+    /// the same helpers and run the same unified kernel. Metrics without
+    /// query-side tables delegate unchanged.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_outcome_cached(
+        &self,
+        q: &[f64],
+        c: &[f64],
+        w: usize,
+        ub: f64,
+        cb: Option<&[f64]>,
+        suite: Suite,
+        ws: &mut DtwWorkspace,
+        cache: &mut CostModelCache,
+    ) -> KernelEval {
+        match *self {
+            Metric::Wdtw { g } => {
+                let len = q.len().max(c.len());
+                let weights = cache.wdtw_weights(len, g);
+                eap_kernel(&WdtwRef::new(q, c, weights), len, ub, None, ws)
+            }
+            Metric::Erp { gap } => {
+                let (col, row) = cache.erp_accs(q, c, gap);
+                eap_kernel(&ErpRef::new(q, c, gap, row, col), w, ub, None, ws)
+            }
+            _ => self.eval_outcome(q, c, w, ub, cb, suite, ws),
         }
     }
 
@@ -360,6 +395,38 @@ mod tests {
                 let below = m.eval(&a, &b, 3, ub, None, Suite::UcrMon, &mut ws);
                 assert_eq!(below, f64::INFINITY, "{} abandon", m.name());
             }
+        }
+    }
+
+    #[test]
+    fn cached_eval_is_bitwise_the_uncached_eval_for_every_kind() {
+        let a = [0.5, -1.25, 2.0, 0.0, 1.0, -0.75, 0.25, 1.5];
+        let b = [1.0, 0.25, -0.5, 1.75, -1.0, 0.5, 0.0, -0.25];
+        let c = [0.0, 0.5, 1.0, -1.5, 0.75, -0.25, 2.0, 1.25];
+        let mut ws1 = DtwWorkspace::default();
+        let mut ws2 = DtwWorkspace::default();
+        for m in Metric::all_default() {
+            let mut cache = CostModelCache::new();
+            cache.prepare(m, &a);
+            // several candidates through one cache — the production shape
+            for cand in [&b[..], &c[..], &b[..]] {
+                for w in [3usize, 8] {
+                    for ub in [f64::INFINITY, 2.0, 0.0] {
+                        let want = m.eval_outcome(&a, cand, w, ub, None, Suite::UcrMon, &mut ws2);
+                        let got = m.eval_outcome_cached(
+                            &a, cand, w, ub, None, Suite::UcrMon, &mut ws1, &mut cache,
+                        );
+                        assert_eq!(
+                            got.dist.to_bits(),
+                            want.dist.to_bits(),
+                            "{} w={w} ub={ub}",
+                            m.name()
+                        );
+                        assert_eq!(got.abandoned, want.abandoned, "{} w={w} ub={ub}", m.name());
+                    }
+                }
+            }
+            assert_eq!(cache.take_rebuilds(), 0, "{}: same-length candidates must hit", m.name());
         }
     }
 

@@ -17,6 +17,7 @@
 //! | [`elastic`] | ERP/MSM/TWE/WDTW cost models over [`kernel`] | §6 extensions |
 //! | [`metric`] | [`metric::Metric`] dispatch over the whole zoo | serving layer |
 
+pub mod cache;
 pub mod cost;
 pub mod dtw;
 pub mod dtw_ea;

@@ -49,6 +49,7 @@ pub mod distances;
 pub mod index;
 pub mod metrics;
 pub mod norm;
+pub mod obs;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod search;
@@ -63,6 +64,7 @@ pub mod prelude {
     pub use crate::distances::metric::Metric;
     pub use crate::index::{Engine, EngineConfig, Query, RefIndex, TopK, TopKResult};
     pub use crate::metrics::Counters;
+    pub use crate::obs::{MetricsRegistry, MetricsSnapshot};
     pub use crate::search::subsequence::{
         search_subsequence, search_subsequence_topk, search_subsequence_topk_metric,
         search_subsequence_topk_metric_mode, Match, ScanMode,

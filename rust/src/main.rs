@@ -33,7 +33,7 @@ COMMANDS
               --dataset <name> [--queries N] [--shards N] [--suite S]
               [--k N] [--metric M] [--scan-mode strip|scalar]
               [--batch-window N] [--batch-deadline-ms N]
-              [--ref-len N] [--artifacts DIR]
+              [--stats-every N] [--ref-len N] [--artifacts DIR]
   bench-suite run the paper's experiment grid and print Fig 5a/5b + tables
               [--axis length|window|all] [--ref-len N] [--datasets a,b]
               [--qlens 128,256] [--ratios 0.1,0.2] [--queries N]
@@ -54,7 +54,12 @@ Batching: --batch-window N coalesces N in-flight queries; same-shape
          reference (same results as solo serving, bitwise).
          --batch-deadline-ms N flushes a partial window once its oldest
          query has waited N ms, instead of holding it for the window to
-         fill (0 = wait for the window, the default)";
+         fill (0 = wait for the window, the default)
+Stats:   --stats-every N emits the live registry's metrics snapshot
+         (pinned schema repro.metrics.v1, one JSON line on stderr) after
+         every N responses, and once more at end of input (0 = off, the
+         default). Wire front-ends answer {\"cmd\":\"stats\"} lines from
+         the same registry (Service::handle_line)";
 
 fn main() {
     let args = match Args::from_env() {
@@ -190,6 +195,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let batch_window = args.usize_or("batch-window", cfg.serve.batch_window)?.max(1);
     let batch_deadline_ms = args.u64_or("batch-deadline-ms", cfg.serve.batch_deadline_ms)?;
+    let stats_every = args.usize_or("stats-every", 0)?;
     let artifacts = PathBuf::from(args.get_or("artifacts", &cfg.serve.artifacts_dir));
 
     let reference = load_reference(&dataset, ref_len, seed)?;
@@ -225,14 +231,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .collect();
     // a failing request answers with the protocol's error line and the
     // service keeps serving — one bad query must not end the session
-    let mut serve_batch = |batch: &[QueryRequest]| {
-        for (req, result) in batch.iter().zip(svc.submit_batch(batch)) {
+    let mut since_stats = 0usize;
+    let mut serve_batch = |batch: &[(QueryRequest, std::time::Instant)]| {
+        for ((req, _), result) in batch.iter().zip(svc.submit_batch_timed(batch)) {
             match result {
                 Ok(resp) => {
                     println!("{}", resp.to_json());
                     latencies.push(resp.latency_ms);
                 }
                 Err(e) => println!("{}", ErrorResponse::new(req.id, &e).to_json()),
+            }
+            since_stats += 1;
+            if stats_every > 0 && since_stats >= stats_every {
+                eprintln!("{}", svc.stats_json());
+                since_stats = 0;
             }
         }
     };
@@ -251,9 +263,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if let Some(batch) = coalescer.poll(std::time::Instant::now()) {
             serve_batch(&batch);
         }
+        svc.set_coalescer_pending(coalescer.pending() as u64);
     }
     if let Some(batch) = coalescer.flush() {
         serve_batch(&batch);
+    }
+    svc.set_coalescer_pending(0);
+    if stats_every > 0 {
+        eprintln!("{}", svc.stats_json());
     }
     let wall = t.elapsed_secs();
     if latencies.is_empty() {

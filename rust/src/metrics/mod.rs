@@ -25,6 +25,10 @@ pub struct Counters {
     pub dtw_calls: u64,
     /// DTW calls that early abandoned
     pub dtw_abandons: u64,
+    /// DTW calls that ran to completion — an exact distance or a proven
+    /// infeasible band, i.e. everything that did not early abandon, so
+    /// `dtw_calls == dtw_abandons + dtw_completions` always
+    pub dtw_completions: u64,
     /// best-so-far improvements
     pub ub_updates: u64,
     /// DP cells computed (only filled by counted distance variants)
@@ -75,6 +79,12 @@ pub struct Counters {
     /// member of every strip, so this is asserted 0 within a cohort in
     /// debug builds — nonzero in release means the pool warm-up is wrong
     pub kernel_workspace_regrows: u64,
+    /// eval-time rebuilds of cached cost-model tables (WDTW weights, ERP
+    /// query-side prefix sums): a `QueryContext` prepares its
+    /// [`crate::distances::cache::CostModelCache`] once per query, so any
+    /// rebuild during candidate scoring means the hoisting regressed —
+    /// asserted zero-per-query in the cohort conformance tests
+    pub cost_model_rebuilds: u64,
     /// distance-kernel calls per metric kind, indexed by
     /// [`Metric::index`] (every entry also counts into `dtw_calls`)
     pub metric_calls: [u64; Metric::COUNT],
@@ -104,6 +114,137 @@ impl Counters {
         self.metric_abandons[metric.index()] += 1;
     }
 
+    /// Record the outcome of a kernel invocation already counted by
+    /// [`Counters::record_metric_call`]: an early abandon or a completed
+    /// evaluation — keeping `dtw_calls == dtw_abandons + dtw_completions`
+    /// an invariant rather than a convention.
+    #[inline]
+    pub fn record_metric_outcome(&mut self, metric: Metric, abandoned: bool) {
+        if abandoned {
+            self.record_metric_abandon(metric);
+        } else {
+            self.dtw_completions += 1;
+        }
+    }
+
+    /// Scalar counter fields, in declaration order — the fixed prefix of
+    /// the slot mapping below.
+    pub const SCALAR_SLOTS: usize = 22;
+
+    /// Total number of slots in the canonical flat form: every scalar
+    /// field plus the per-metric call/abandon tallies.
+    pub const SLOT_COUNT: usize = Self::SCALAR_SLOTS + 2 * Metric::COUNT;
+
+    /// Canonical slot names, index-aligned with [`Counters::slots`] /
+    /// [`Counters::from_slots`]. This is the ONE field list the
+    /// observability registry's atomic cells, the snapshot JSON schema and
+    /// the bench reports all share — adding a counter means adding it
+    /// here, to the two mapping functions, and to [`Counters::merge`].
+    pub const SLOT_NAMES: [&'static str; Self::SLOT_COUNT] = [
+        "candidates",
+        "lb_kim_prunes",
+        "lb_keogh_eq_prunes",
+        "lb_keogh_ec_prunes",
+        "xla_prunes",
+        "dtw_calls",
+        "dtw_abandons",
+        "dtw_completions",
+        "ub_updates",
+        "dp_cells",
+        "index_hits",
+        "topk_updates",
+        "index_ec_prunes",
+        "strip_batches",
+        "batch_lb_prunes",
+        "lb_order_saved_dtw_calls",
+        "cohort_strips",
+        "cohort_retired_queries",
+        "strip_stat_loads_saved",
+        "strip_sample_loads_saved",
+        "kernel_workspace_regrows",
+        "cost_model_rebuilds",
+        "metric_calls_cdtw",
+        "metric_calls_dtw",
+        "metric_calls_wdtw",
+        "metric_calls_erp",
+        "metric_calls_msm",
+        "metric_calls_twe",
+        "metric_abandons_cdtw",
+        "metric_abandons_dtw",
+        "metric_abandons_wdtw",
+        "metric_abandons_erp",
+        "metric_abandons_msm",
+        "metric_abandons_twe",
+    ];
+
+    /// Flatten into the canonical slot array (same order as
+    /// [`Counters::SLOT_NAMES`]).
+    pub fn slots(&self) -> [u64; Self::SLOT_COUNT] {
+        let mut s = [0u64; Self::SLOT_COUNT];
+        s[0] = self.candidates;
+        s[1] = self.lb_kim_prunes;
+        s[2] = self.lb_keogh_eq_prunes;
+        s[3] = self.lb_keogh_ec_prunes;
+        s[4] = self.xla_prunes;
+        s[5] = self.dtw_calls;
+        s[6] = self.dtw_abandons;
+        s[7] = self.dtw_completions;
+        s[8] = self.ub_updates;
+        s[9] = self.dp_cells;
+        s[10] = self.index_hits;
+        s[11] = self.topk_updates;
+        s[12] = self.index_ec_prunes;
+        s[13] = self.strip_batches;
+        s[14] = self.batch_lb_prunes;
+        s[15] = self.lb_order_saved_dtw_calls;
+        s[16] = self.cohort_strips;
+        s[17] = self.cohort_retired_queries;
+        s[18] = self.strip_stat_loads_saved;
+        s[19] = self.strip_sample_loads_saved;
+        s[20] = self.kernel_workspace_regrows;
+        s[21] = self.cost_model_rebuilds;
+        for i in 0..Metric::COUNT {
+            s[Self::SCALAR_SLOTS + i] = self.metric_calls[i];
+            s[Self::SCALAR_SLOTS + Metric::COUNT + i] = self.metric_abandons[i];
+        }
+        s
+    }
+
+    /// Rebuild from the canonical slot array — the exact inverse of
+    /// [`Counters::slots`].
+    pub fn from_slots(s: &[u64; Self::SLOT_COUNT]) -> Self {
+        let mut c = Counters {
+            candidates: s[0],
+            lb_kim_prunes: s[1],
+            lb_keogh_eq_prunes: s[2],
+            lb_keogh_ec_prunes: s[3],
+            xla_prunes: s[4],
+            dtw_calls: s[5],
+            dtw_abandons: s[6],
+            dtw_completions: s[7],
+            ub_updates: s[8],
+            dp_cells: s[9],
+            index_hits: s[10],
+            topk_updates: s[11],
+            index_ec_prunes: s[12],
+            strip_batches: s[13],
+            batch_lb_prunes: s[14],
+            lb_order_saved_dtw_calls: s[15],
+            cohort_strips: s[16],
+            cohort_retired_queries: s[17],
+            strip_stat_loads_saved: s[18],
+            strip_sample_loads_saved: s[19],
+            kernel_workspace_regrows: s[20],
+            cost_model_rebuilds: s[21],
+            ..Default::default()
+        };
+        for i in 0..Metric::COUNT {
+            c.metric_calls[i] = s[Self::SCALAR_SLOTS + i];
+            c.metric_abandons[i] = s[Self::SCALAR_SLOTS + Metric::COUNT + i];
+        }
+        c
+    }
+
     /// Proportion of candidates each stage removed, as fractions of the
     /// total: (kim, keogh_eq, keogh_ec, xla, dtw_reached) — the Fig. 5
     /// inset row.
@@ -127,6 +268,7 @@ impl Counters {
         self.xla_prunes += o.xla_prunes;
         self.dtw_calls += o.dtw_calls;
         self.dtw_abandons += o.dtw_abandons;
+        self.dtw_completions += o.dtw_completions;
         self.ub_updates += o.ub_updates;
         self.dp_cells += o.dp_cells;
         self.index_hits += o.index_hits;
@@ -140,6 +282,7 @@ impl Counters {
         self.strip_stat_loads_saved += o.strip_stat_loads_saved;
         self.strip_sample_loads_saved += o.strip_sample_loads_saved;
         self.kernel_workspace_regrows += o.kernel_workspace_regrows;
+        self.cost_model_rebuilds += o.cost_model_rebuilds;
         for i in 0..Metric::COUNT {
             self.metric_calls[i] += o.metric_calls[i];
             self.metric_abandons[i] += o.metric_abandons[i];
@@ -395,6 +538,82 @@ mod tests {
         assert!(r.contains("erp: 2 calls"), "{r}");
         assert!(r.contains("cdtw: 1 calls"), "{r}");
         assert_eq!(Counters::new().metric_report(), "no distance kernel calls");
+    }
+
+    #[test]
+    fn slot_mapping_round_trips_and_covers_every_field() {
+        let mut c = Counters::new();
+        // give every slot a distinct value so a swapped index can't pass
+        let mut v = 1u64;
+        c.candidates = v;
+        for f in [
+            &mut c.lb_kim_prunes,
+            &mut c.lb_keogh_eq_prunes,
+            &mut c.lb_keogh_ec_prunes,
+            &mut c.xla_prunes,
+            &mut c.dtw_calls,
+            &mut c.dtw_abandons,
+            &mut c.dtw_completions,
+            &mut c.ub_updates,
+            &mut c.dp_cells,
+            &mut c.index_hits,
+            &mut c.topk_updates,
+            &mut c.index_ec_prunes,
+            &mut c.strip_batches,
+            &mut c.batch_lb_prunes,
+            &mut c.lb_order_saved_dtw_calls,
+            &mut c.cohort_strips,
+            &mut c.cohort_retired_queries,
+            &mut c.strip_stat_loads_saved,
+            &mut c.strip_sample_loads_saved,
+            &mut c.kernel_workspace_regrows,
+            &mut c.cost_model_rebuilds,
+        ] {
+            v += 1;
+            *f = v;
+        }
+        for i in 0..Metric::COUNT {
+            v += 1;
+            c.metric_calls[i] = v;
+        }
+        for i in 0..Metric::COUNT {
+            v += 1;
+            c.metric_abandons[i] = v;
+        }
+        let s = c.slots();
+        // all distinct → nothing collapsed, nothing dropped
+        assert_eq!(s.len(), Counters::SLOT_COUNT);
+        let mut sorted = s.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), Counters::SLOT_COUNT);
+        assert_eq!(Counters::from_slots(&s), c);
+        // names are index-aligned and the per-metric suffixes match the
+        // metric kind names
+        assert_eq!(Counters::SLOT_NAMES.len(), Counters::SLOT_COUNT);
+        for (i, name) in Metric::KIND_NAMES.iter().enumerate() {
+            assert_eq!(
+                Counters::SLOT_NAMES[Counters::SCALAR_SLOTS + i],
+                format!("metric_calls_{name}")
+            );
+            assert_eq!(
+                Counters::SLOT_NAMES[Counters::SCALAR_SLOTS + Metric::COUNT + i],
+                format!("metric_abandons_{name}")
+            );
+        }
+    }
+
+    #[test]
+    fn outcome_recording_keeps_calls_equal_abandons_plus_completions() {
+        let mut c = Counters::new();
+        for abandoned in [true, false, false, true, false] {
+            c.record_metric_call(Metric::Cdtw);
+            c.record_metric_outcome(Metric::Cdtw, abandoned);
+        }
+        assert_eq!(c.dtw_calls, 5);
+        assert_eq!(c.dtw_abandons, 2);
+        assert_eq!(c.dtw_completions, 3);
+        assert_eq!(c.dtw_calls, c.dtw_abandons + c.dtw_completions);
     }
 
     #[test]

@@ -1,0 +1,233 @@
+//! Fixed-bucket log₂ histograms: 64 buckets covering the whole `u64`
+//! range, so recording is two shifts and three relaxed atomic adds — O(1),
+//! allocation-free, and mergeable *exactly* (bucket-wise addition loses
+//! nothing, unlike quantile sketches). Bucket 0 holds the value 0; bucket
+//! `b >= 1` holds `[2^(b-1), 2^b)`, with the last bucket absorbing the
+//! tail. Quantiles are therefore bucket-resolution approximations (within
+//! 2× of the true value); `max` is exact.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: one per leading-zero count of a `u64`, plus zero.
+pub const BUCKETS: usize = 64;
+
+/// Bucket index for a value: 0 for 0, else `64 - leading_zeros`, capped.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of the values bucket `b` can hold (the
+/// representative a quantile query reports).
+#[inline]
+pub fn bucket_ceil(b: usize) -> u64 {
+    match b {
+        0 => 0,
+        _ if b >= BUCKETS - 1 => u64::MAX,
+        _ => (1u64 << b) - 1,
+    }
+}
+
+/// The shared-cell histogram: plain relaxed atomics, written concurrently
+/// by whoever owns the cell, drained with [`AtomicHist::snapshot`].
+/// Recording never locks, never allocates, and never reads the clock
+/// itself — callers hand it finished measurements.
+#[derive(Debug)]
+pub struct AtomicHist {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicHist {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl AtomicHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation. O(1): one bucket add, one sum add, one
+    /// max.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Materialise the current contents as a plain [`Histogram`].
+    pub fn snapshot(&self) -> Histogram {
+        let mut h = Histogram::default();
+        for (b, slot) in self.buckets.iter().enumerate() {
+            h.buckets[b] = slot.load(Ordering::Relaxed);
+        }
+        h.sum = self.sum.load(Ordering::Relaxed);
+        h.max = self.max.load(Ordering::Relaxed);
+        h
+    }
+}
+
+/// The owned/merged form: what snapshots carry and the JSON plane
+/// serialises. Merging is exact — bucket-wise addition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    pub buckets: [u64; BUCKETS],
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self { buckets: [0; BUCKETS], sum: 0, max: 0 }
+    }
+}
+
+impl Histogram {
+    /// Record into the owned form (single-threaded accumulation paths).
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_of(v)] += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.iter().all(|&b| b == 0)
+    }
+
+    /// Exact merge: per-bucket addition, sum addition, max of maxes.
+    pub fn merge(&mut self, o: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&o.buckets) {
+            *a += b;
+        }
+        self.sum += o.sum;
+        self.max = self.max.max(o.max);
+    }
+
+    /// Bucket-resolution quantile: the inclusive upper bound of the
+    /// bucket containing the `q`-th observation, clamped to the exact
+    /// observed `max` (so `quantile(1.0) == max`). Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return bucket_ceil(b).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        // every bucket's ceiling lands back in that bucket
+        for b in 0..BUCKETS - 1 {
+            assert_eq!(bucket_of(bucket_ceil(b)), b, "b={b}");
+        }
+    }
+
+    #[test]
+    fn record_count_sum_max() {
+        let mut h = Histogram::default();
+        for v in [0u64, 1, 5, 5, 900, 17] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum, 928);
+        assert_eq!(h.max, 900);
+        assert!(!h.is_empty());
+        assert!(Histogram::default().is_empty());
+    }
+
+    #[test]
+    fn merge_is_exact() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        let mut whole = Histogram::default();
+        for v in [3u64, 8, 1000, 0] {
+            a.record(v);
+            whole.record(v);
+        }
+        for v in [7u64, 2_000_000, 9] {
+            b.record(v);
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+    }
+
+    #[test]
+    fn quantiles_are_bucket_resolution_and_max_is_exact() {
+        let mut h = Histogram::default();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        assert_eq!(h.max, 100);
+        assert_eq!(h.quantile(1.0), 100);
+        // p50 of 1..=100 is 50, whose bucket [32,64) reports ceil 63
+        assert_eq!(h.p50(), 63);
+        assert_eq!(h.p99(), 100); // capped at the exact max
+        assert_eq!(Histogram::default().p50(), 0);
+        // a single observation is its own every-quantile
+        let mut one = Histogram::default();
+        one.record(42);
+        assert_eq!(one.p50(), 42.min(bucket_ceil(bucket_of(42))));
+        assert_eq!(one.quantile(0.01), one.quantile(0.99));
+    }
+
+    #[test]
+    fn atomic_hist_snapshot_matches_plain_recording() {
+        let ah = AtomicHist::new();
+        let mut h = Histogram::default();
+        for v in [0u64, 1, 2, 3, 100, 65_536, 123_456_789] {
+            ah.record(v);
+            h.record(v);
+        }
+        assert_eq!(ah.snapshot(), h);
+    }
+}

@@ -1,0 +1,445 @@
+//! Pipeline-wide observability (see `obs/README.md`): a lock-free sharded
+//! [`MetricsRegistry`] the serving pipeline records into, and a snapshot
+//! plane ([`MetricsSnapshot`]) that merges it into one pinned-schema JSON
+//! document.
+//!
+//! Design rules, carried from the bitwise-identity contract of PRs 3–5:
+//!
+//! * **The hot path is untouched.** Scan internals keep mutating their
+//!   plain per-job [`Counters`] exactly as before; each worker *flushes*
+//!   the finished delta into its own [`ObsCell`] once per job (relaxed
+//!   `fetch_add` per named slot — no locks, no allocation, no contention:
+//!   one writer per cell).
+//! * **Observation never steers computation.** Nothing in this module is
+//!   read back by the scan; enabling the registry cannot change a single
+//!   result bit. Stage timers read the clock only when a cell is attached
+//!   ([`ScanObs::now`] is `None` when observability is off), so bare
+//!   library calls don't even pay for `Instant::now()`.
+//! * **One field list.** Counter slots are named by
+//!   [`Counters::SLOT_NAMES`] — the same canonical mapping the snapshot
+//!   JSON and the bench reports use.
+
+pub mod hist;
+pub mod snapshot;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::metrics::Counters;
+
+pub use hist::{AtomicHist, Histogram, BUCKETS};
+pub use snapshot::{MetricsSnapshot, SCHEMA};
+
+/// Pipeline phases with a latency histogram (unit: nanoseconds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Time a request spent queued in the batch coalescer before
+    /// `submit_batch` saw it.
+    QueueWait,
+    /// Grouping a batch into same-shape cohorts.
+    CohortForm,
+    /// The batched LB_Kim bound pass over a strip (or the per-candidate
+    /// LB_Kim hierarchy on the scalar path).
+    BoundKim,
+    /// The LB_Keogh query-envelope pass over a strip's survivors (or the
+    /// per-candidate bound on the scalar path).
+    BoundKeoghEq,
+    /// The per-survivor LB_Keogh data-envelope bound.
+    BoundKeoghEc,
+    /// One kernel evaluation of a cascade survivor.
+    KernelEval,
+    /// Collecting and merging per-shard results in the router.
+    FanIn,
+}
+
+impl Stage {
+    pub const COUNT: usize = 7;
+    /// Snapshot-schema names, index-aligned with [`Stage::index`].
+    pub const NAMES: [&'static str; Self::COUNT] = [
+        "queue_wait",
+        "cohort_form",
+        "bound_kim",
+        "bound_keogh_eq",
+        "bound_keogh_ec",
+        "kernel_eval",
+        "fan_in",
+    ];
+    pub const ALL: [Stage; Self::COUNT] = [
+        Stage::QueueWait,
+        Stage::CohortForm,
+        Stage::BoundKim,
+        Stage::BoundKeoghEq,
+        Stage::BoundKeoghEc,
+        Stage::KernelEval,
+        Stage::FanIn,
+    ];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Stage::QueueWait => 0,
+            Stage::CohortForm => 1,
+            Stage::BoundKim => 2,
+            Stage::BoundKeoghEq => 3,
+            Stage::BoundKeoghEc => 4,
+            Stage::KernelEval => 5,
+            Stage::FanIn => 6,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        Self::NAMES[self.index()]
+    }
+}
+
+/// Value distributions (unitless counts) the pipeline records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistKind {
+    /// Members per cohort formed by `submit_batch`.
+    CohortSize,
+    /// Cascade survivors per strip reaching LB-ordered evaluation.
+    StripSurvivors,
+    /// Top-k threshold tightenings per query (how fast the bound closed).
+    TopkTighten,
+}
+
+impl DistKind {
+    pub const COUNT: usize = 3;
+    pub const NAMES: [&'static str; Self::COUNT] =
+        ["cohort_size", "strip_survivors", "topk_tighten"];
+    pub const ALL: [DistKind; Self::COUNT] =
+        [DistKind::CohortSize, DistKind::StripSurvivors, DistKind::TopkTighten];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            DistKind::CohortSize => 0,
+            DistKind::StripSurvivors => 1,
+            DistKind::TopkTighten => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        Self::NAMES[self.index()]
+    }
+}
+
+/// Point-in-time gauges (set, not accumulated).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Workers executing a job right now.
+    BusyWorkers,
+    /// Queries served since the service started.
+    QueriesServed,
+    /// Requests currently waiting in the batch coalescer.
+    CoalescerPending,
+}
+
+impl Gauge {
+    pub const COUNT: usize = 3;
+    pub const NAMES: [&'static str; Self::COUNT] =
+        ["busy_workers", "queries_served", "coalescer_pending"];
+    pub const ALL: [Gauge; Self::COUNT] =
+        [Gauge::BusyWorkers, Gauge::QueriesServed, Gauge::CoalescerPending];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Gauge::BusyWorkers => 0,
+            Gauge::QueriesServed => 1,
+            Gauge::CoalescerPending => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        Self::NAMES[self.index()]
+    }
+}
+
+/// One shard's slice of the registry: a flat `AtomicU64` slot per named
+/// counter (index-aligned with [`Counters::SLOT_NAMES`]), the gauge
+/// slots, and one atomic histogram per stage and per distribution. In
+/// steady state exactly one thread writes a cell (its worker, or the
+/// service thread for the service cell), so the relaxed atomics are
+/// uncontended; snapshots may read concurrently at any time.
+#[derive(Debug)]
+pub struct ObsCell {
+    counters: [AtomicU64; Counters::SLOT_COUNT],
+    gauges: [AtomicU64; Gauge::COUNT],
+    stages: [AtomicHist; Stage::COUNT],
+    dists: [AtomicHist; DistKind::COUNT],
+}
+
+impl Default for ObsCell {
+    fn default() -> Self {
+        Self {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            gauges: std::array::from_fn(|_| AtomicU64::new(0)),
+            stages: std::array::from_fn(|_| AtomicHist::new()),
+            dists: std::array::from_fn(|_| AtomicHist::new()),
+        }
+    }
+}
+
+impl ObsCell {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold a finished per-job [`Counters`] delta into the cell — the
+    /// single point where scan counters enter the registry. O(slots),
+    /// called once per job, skipping zero slots.
+    pub fn flush_counters(&self, c: &Counters) {
+        for (slot, v) in self.counters.iter().zip(c.slots()) {
+            if v > 0 {
+                slot.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Bump one named counter slot directly (service-side events that
+    /// don't flow through a scan's `Counters`).
+    #[inline]
+    pub fn add_counter(&self, slot: usize, v: u64) {
+        self.counters[slot].fetch_add(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn set_gauge(&self, g: Gauge, v: u64) {
+        self.gauges[g.index()].store(v, Ordering::Relaxed);
+    }
+
+    /// Record a stage latency in nanoseconds.
+    #[inline]
+    pub fn record_stage_ns(&self, s: Stage, ns: u64) {
+        self.stages[s.index()].record(ns);
+    }
+
+    /// Record a distribution observation.
+    #[inline]
+    pub fn record_dist(&self, d: DistKind, v: u64) {
+        self.dists[d.index()].record(v);
+    }
+
+    /// Merge the cell's current contents into a snapshot under
+    /// construction.
+    pub fn drain_into(&self, snap: &mut MetricsSnapshot) {
+        let mut slots = [0u64; Counters::SLOT_COUNT];
+        for (out, slot) in slots.iter_mut().zip(&self.counters) {
+            *out = slot.load(Ordering::Relaxed);
+        }
+        snap.counters.merge(&Counters::from_slots(&slots));
+        for (out, g) in snap.gauges.iter_mut().zip(&self.gauges) {
+            // gauges are owned by exactly one cell; merging takes the max
+            // so unset cells (0) never mask the owner's value
+            *out = (*out).max(g.load(Ordering::Relaxed));
+        }
+        for (out, h) in snap.stages.iter_mut().zip(&self.stages) {
+            out.merge(&h.snapshot());
+        }
+        for (out, h) in snap.dists.iter_mut().zip(&self.dists) {
+            out.merge(&h.snapshot());
+        }
+    }
+}
+
+/// The sharded registry: one [`ObsCell`] per worker shard plus one for
+/// the service thread (queue wait, cohort formation, fan-in, gauges).
+/// Snapshots merge every cell; recording never crosses cells.
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    workers: Vec<Arc<ObsCell>>,
+    service: Arc<ObsCell>,
+}
+
+impl MetricsRegistry {
+    pub fn new(shards: usize) -> Self {
+        Self {
+            workers: (0..shards).map(|_| Arc::new(ObsCell::new())).collect(),
+            service: Arc::new(ObsCell::new()),
+        }
+    }
+
+    /// The cell handed to worker `i` at spawn time.
+    pub fn worker_cell(&self, i: usize) -> Arc<ObsCell> {
+        Arc::clone(&self.workers[i])
+    }
+
+    /// The service thread's own cell.
+    pub fn service_cell(&self) -> &ObsCell {
+        &self.service
+    }
+
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Merge every cell into one point-in-time [`MetricsSnapshot`].
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot::default();
+        for cell in &self.workers {
+            cell.drain_into(&mut snap);
+        }
+        self.service.drain_into(&mut snap);
+        snap
+    }
+}
+
+/// The observability handle threaded through scan internals: either a
+/// cell to record into or — the default for bare library calls, benches
+/// and oracles — nothing at all, in which case every method is a no-op
+/// and no clock is ever read.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScanObs<'a>(pub Option<&'a ObsCell>);
+
+impl ScanObs<'_> {
+    /// Observability disabled: records nothing, reads no clocks.
+    pub const OFF: ScanObs<'static> = ScanObs(None);
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// A timestamp — only taken when a cell is attached, so disabled
+    /// scans skip the clock read entirely.
+    #[inline]
+    pub fn now(&self) -> Option<Instant> {
+        self.0.map(|_| Instant::now())
+    }
+
+    /// Record the elapsed time since a [`ScanObs::now`] timestamp under
+    /// `stage`. No-op if either side is off.
+    #[inline]
+    pub fn stage_since(&self, stage: Stage, t0: Option<Instant>) {
+        if let (Some(cell), Some(t0)) = (self.0, t0) {
+            cell.record_stage_ns(stage, t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    #[inline]
+    pub fn record_dist(&self, d: DistKind, v: u64) {
+        if let Some(cell) = self.0 {
+            cell.record_dist(d, v);
+        }
+    }
+
+    /// Scoped stage timer: records on drop (or [`StageTimer::stop`]).
+    #[inline]
+    pub fn stage_timer(&self, stage: Stage) -> StageTimer<'_> {
+        StageTimer { live: self.0.map(|cell| (cell, stage, Instant::now())) }
+    }
+}
+
+/// A scoped timer over one pipeline [`Stage`]: started via
+/// [`ScanObs::stage_timer`], records the elapsed nanoseconds into the
+/// cell's stage histogram when dropped. Inert (no clock reads) when
+/// observability is off.
+#[derive(Debug)]
+pub struct StageTimer<'a> {
+    live: Option<(&'a ObsCell, Stage, Instant)>,
+}
+
+impl StageTimer<'_> {
+    /// Stop and record now (drop does the same; this names the intent).
+    pub fn stop(self) {}
+}
+
+impl Drop for StageTimer<'_> {
+    fn drop(&mut self) {
+        if let Some((cell, stage, t0)) = self.live.take() {
+            cell.record_stage_ns(stage, t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enum_names_are_dense_and_index_aligned() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert_eq!(s.name(), Stage::NAMES[i]);
+        }
+        for (i, d) in DistKind::ALL.iter().enumerate() {
+            assert_eq!(d.index(), i);
+            assert_eq!(d.name(), DistKind::NAMES[i]);
+        }
+        for (i, g) in Gauge::ALL.iter().enumerate() {
+            assert_eq!(g.index(), i);
+            assert_eq!(g.name(), Gauge::NAMES[i]);
+        }
+    }
+
+    #[test]
+    fn flush_counters_lands_in_named_slots() {
+        let cell = ObsCell::new();
+        let mut c = Counters::new();
+        c.candidates = 10;
+        c.dtw_calls = 3;
+        c.cost_model_rebuilds = 1;
+        cell.flush_counters(&c);
+        cell.flush_counters(&c);
+        let mut snap = MetricsSnapshot::default();
+        cell.drain_into(&mut snap);
+        assert_eq!(snap.counters.candidates, 20);
+        assert_eq!(snap.counters.dtw_calls, 6);
+        assert_eq!(snap.counters.cost_model_rebuilds, 2);
+        assert_eq!(snap.counters.lb_kim_prunes, 0);
+    }
+
+    #[test]
+    fn registry_snapshot_merges_worker_and_service_cells() {
+        let reg = MetricsRegistry::new(2);
+        let mut a = Counters::new();
+        a.candidates = 5;
+        a.dtw_calls = 2;
+        reg.worker_cell(0).flush_counters(&a);
+        let mut b = Counters::new();
+        b.candidates = 7;
+        b.dtw_abandons = 1;
+        reg.worker_cell(1).flush_counters(&b);
+        reg.service_cell().set_gauge(Gauge::QueriesServed, 4);
+        reg.service_cell().record_stage_ns(Stage::QueueWait, 1_000);
+        reg.service_cell().record_dist(DistKind::CohortSize, 3);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters.candidates, 12);
+        assert_eq!(snap.counters.dtw_calls, 2);
+        assert_eq!(snap.counters.dtw_abandons, 1);
+        assert_eq!(snap.gauges[Gauge::QueriesServed.index()], 4);
+        assert_eq!(snap.stages[Stage::QueueWait.index()].count(), 1);
+        assert_eq!(snap.dists[DistKind::CohortSize.index()].max, 3);
+    }
+
+    #[test]
+    fn disabled_scan_obs_is_inert() {
+        let obs = ScanObs::OFF;
+        assert!(!obs.enabled());
+        assert!(obs.now().is_none());
+        obs.stage_since(Stage::KernelEval, None);
+        obs.record_dist(DistKind::StripSurvivors, 9);
+        obs.stage_timer(Stage::BoundKim).stop();
+        // nothing to assert against — the point is it cannot panic or
+        // touch any cell; enabled ScanObs is covered below
+    }
+
+    #[test]
+    fn stage_timer_and_stage_since_record() {
+        let cell = ObsCell::new();
+        let obs = ScanObs(Some(&cell));
+        assert!(obs.enabled());
+        let t = obs.stage_timer(Stage::KernelEval);
+        std::hint::black_box((0..100).sum::<u64>());
+        t.stop();
+        let t0 = obs.now();
+        assert!(t0.is_some());
+        obs.stage_since(Stage::BoundKim, t0);
+        let mut snap = MetricsSnapshot::default();
+        cell.drain_into(&mut snap);
+        assert_eq!(snap.stages[Stage::KernelEval.index()].count(), 1);
+        assert_eq!(snap.stages[Stage::BoundKim.index()].count(), 1);
+    }
+}

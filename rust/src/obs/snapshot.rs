@@ -1,0 +1,267 @@
+//! The snapshot/export plane: one point-in-time, merge-of-all-cells view
+//! of the registry with a **pinned JSON schema** (`repro.metrics.v1`).
+//! The same document is returned by `Service::stats_json`, emitted
+//! periodically by `repro serve --stats-every N`, served to the
+//! `{"cmd":"stats"}` wire request, and embedded in `BENCH_*.json` — one
+//! schema, four consumers. `tools/bench_diff.py` checks counter
+//! invariants over it in CI.
+//!
+//! Values are carried as JSON numbers (f64): exact for counts below
+//! 2^53, which bounds every realistic run by orders of magnitude.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::metrics::Counters;
+use crate::obs::hist::Histogram;
+use crate::obs::{DistKind, Gauge, Stage};
+use crate::util::json::{obj, Json};
+
+/// The pinned schema identifier. Bump only with a documented migration
+/// in `obs/README.md`.
+pub const SCHEMA: &str = "repro.metrics.v1";
+
+/// A merged point-in-time view of every registry cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: Counters,
+    pub gauges: [u64; Gauge::COUNT],
+    pub stages: [Histogram; Stage::COUNT],
+    pub dists: [Histogram; DistKind::COUNT],
+}
+
+impl Default for MetricsSnapshot {
+    fn default() -> Self {
+        Self {
+            counters: Counters::new(),
+            gauges: [0; Gauge::COUNT],
+            stages: std::array::from_fn(|_| Histogram::default()),
+            dists: std::array::from_fn(|_| Histogram::default()),
+        }
+    }
+}
+
+fn hist_to_json(h: &Histogram) -> Json {
+    let buckets: Vec<Json> = h
+        .buckets
+        .iter()
+        .enumerate()
+        .filter(|&(_, &n)| n > 0)
+        .map(|(b, &n)| Json::Arr(vec![Json::Num(b as f64), Json::Num(n as f64)]))
+        .collect();
+    obj(vec![
+        ("count", Json::Num(h.count() as f64)),
+        ("sum", Json::Num(h.sum as f64)),
+        ("max", Json::Num(h.max as f64)),
+        ("p50", Json::Num(h.p50() as f64)),
+        ("p95", Json::Num(h.p95() as f64)),
+        ("p99", Json::Num(h.p99() as f64)),
+        ("buckets", Json::Arr(buckets)),
+    ])
+}
+
+fn hist_from_json(v: &Json) -> Result<Histogram> {
+    let mut h = Histogram::default();
+    let buckets = v
+        .get("buckets")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("histogram missing buckets"))?;
+    for pair in buckets {
+        let pair = pair.as_arr().ok_or_else(|| anyhow!("histogram bucket must be [index, count]"))?;
+        ensure!(pair.len() == 2, "histogram bucket must be [index, count]");
+        let b = pair[0].as_usize().ok_or_else(|| anyhow!("bad bucket index"))?;
+        ensure!(b < h.buckets.len(), "bucket index {b} out of range");
+        h.buckets[b] = pair[1].as_f64().ok_or_else(|| anyhow!("bad bucket count"))? as u64;
+    }
+    h.sum = v.get("sum").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    h.max = v.get("max").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+    Ok(h)
+}
+
+impl MetricsSnapshot {
+    /// A snapshot carrying only counters (empty histograms and gauges) —
+    /// what bench harnesses without a live registry embed so their
+    /// `BENCH_*.json` documents still speak the pinned schema.
+    pub fn from_counters(c: &Counters) -> Self {
+        Self { counters: c.clone(), ..Default::default() }
+    }
+
+    /// Exact merge of another snapshot (counter addition, bucket-wise
+    /// histogram addition, gauge max).
+    pub fn merge(&mut self, o: &MetricsSnapshot) {
+        self.counters.merge(&o.counters);
+        for (a, b) in self.gauges.iter_mut().zip(&o.gauges) {
+            *a = (*a).max(*b);
+        }
+        for (a, b) in self.stages.iter_mut().zip(&o.stages) {
+            a.merge(b);
+        }
+        for (a, b) in self.dists.iter_mut().zip(&o.dists) {
+            a.merge(b);
+        }
+    }
+
+    /// The pinned-schema document. Stage latencies are nanoseconds.
+    pub fn to_json(&self) -> Json {
+        let slots = self.counters.slots();
+        let counters: Vec<(&str, Json)> = Counters::SLOT_NAMES
+            .iter()
+            .zip(slots)
+            .map(|(&name, v)| (name, Json::Num(v as f64)))
+            .collect();
+        let gauges: Vec<(&str, Json)> = Gauge::ALL
+            .iter()
+            .map(|g| (g.name(), Json::Num(self.gauges[g.index()] as f64)))
+            .collect();
+        let stages: Vec<(&str, Json)> = Stage::ALL
+            .iter()
+            .map(|s| (s.name(), hist_to_json(&self.stages[s.index()])))
+            .collect();
+        let dists: Vec<(&str, Json)> = DistKind::ALL
+            .iter()
+            .map(|d| (d.name(), hist_to_json(&self.dists[d.index()])))
+            .collect();
+        obj(vec![
+            ("schema", Json::Str(SCHEMA.to_string())),
+            ("stage_unit", Json::Str("ns".to_string())),
+            ("counters", obj(counters)),
+            ("gauges", obj(gauges)),
+            ("stages", obj(stages)),
+            ("dists", obj(dists)),
+        ])
+    }
+
+    /// One-line wire form of [`MetricsSnapshot::to_json`].
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a pinned-schema document. The schema id must match; counter
+    /// names absent from the document read as 0 (so a `v1` reader
+    /// tolerates counters added later under the same schema).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let schema = v
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("metrics snapshot missing schema"))?;
+        ensure!(schema == SCHEMA, "unsupported metrics schema {schema:?} (want {SCHEMA:?})");
+        let mut snap = MetricsSnapshot::default();
+        if let Some(counters) = v.get("counters") {
+            let mut slots = [0u64; Counters::SLOT_COUNT];
+            for (slot, &name) in slots.iter_mut().zip(Counters::SLOT_NAMES.iter()) {
+                *slot = counters.get(name).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            }
+            snap.counters = Counters::from_slots(&slots);
+        }
+        if let Some(gauges) = v.get("gauges") {
+            for g in Gauge::ALL {
+                snap.gauges[g.index()] =
+                    gauges.get(g.name()).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            }
+        }
+        if let Some(stages) = v.get("stages") {
+            for s in Stage::ALL {
+                if let Some(h) = stages.get(s.name()) {
+                    snap.stages[s.index()] = hist_from_json(h)?;
+                }
+            }
+        }
+        if let Some(dists) = v.get("dists") {
+            for d in DistKind::ALL {
+                if let Some(h) = dists.get(d.name()) {
+                    snap.dists[d.index()] = hist_from_json(h)?;
+                }
+            }
+        }
+        Ok(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy_snapshot() -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot::default();
+        snap.counters.candidates = 1000;
+        snap.counters.lb_kim_prunes = 400;
+        snap.counters.lb_keogh_eq_prunes = 300;
+        snap.counters.lb_keogh_ec_prunes = 100;
+        snap.counters.dtw_calls = 200;
+        snap.counters.dtw_abandons = 120;
+        snap.counters.dtw_completions = 80;
+        snap.counters.metric_calls[0] = 200;
+        snap.gauges[Gauge::QueriesServed.index()] = 17;
+        for s in Stage::ALL {
+            for v in [800u64, 12_000, 250_000, 1] {
+                snap.stages[s.index()].record(v);
+            }
+        }
+        for d in DistKind::ALL {
+            snap.dists[d.index()].record(4);
+            snap.dists[d.index()].record(64);
+        }
+        snap
+    }
+
+    #[test]
+    fn pinned_schema_round_trips() {
+        let snap = busy_snapshot();
+        let j = snap.to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        // wire round trip: print → parse → rebuild
+        let line = snap.to_json_string();
+        let back = MetricsSnapshot::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn schema_document_names_every_counter_stage_and_dist() {
+        let j = busy_snapshot().to_json();
+        let counters = j.get("counters").and_then(Json::as_obj).unwrap();
+        for name in Counters::SLOT_NAMES {
+            assert!(counters.contains_key(name), "missing counter {name}");
+        }
+        let stages = j.get("stages").and_then(Json::as_obj).unwrap();
+        for name in Stage::NAMES {
+            let h = &stages[name];
+            assert!(h.get("p50").is_some(), "stage {name} missing p50");
+            assert!(h.get("p95").is_some(), "stage {name} missing p95");
+            assert!(h.get("p99").is_some(), "stage {name} missing p99");
+            assert!(h.get("max").is_some(), "stage {name} missing max");
+        }
+        let dists = j.get("dists").and_then(Json::as_obj).unwrap();
+        for name in DistKind::NAMES {
+            assert!(dists.contains_key(name), "missing dist {name}");
+        }
+        assert_eq!(j.get("stage_unit").and_then(Json::as_str), Some("ns"));
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        assert!(MetricsSnapshot::from_json(&Json::parse("{}").unwrap()).is_err());
+        let wrong = r#"{"schema":"repro.metrics.v0"}"#;
+        assert!(MetricsSnapshot::from_json(&Json::parse(wrong).unwrap()).is_err());
+    }
+
+    #[test]
+    fn from_counters_embeds_counters_only() {
+        let mut c = Counters::new();
+        c.candidates = 9;
+        let snap = MetricsSnapshot::from_counters(&c);
+        assert_eq!(snap.counters.candidates, 9);
+        assert!(snap.stages.iter().all(Histogram::is_empty));
+        let back =
+            MetricsSnapshot::from_json(&Json::parse(&snap.to_json_string()).unwrap()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn merge_adds_counters_and_histograms() {
+        let mut a = busy_snapshot();
+        let b = busy_snapshot();
+        a.merge(&b);
+        assert_eq!(a.counters.candidates, 2000);
+        assert_eq!(a.stages[Stage::KernelEval.index()].count(), 8);
+        assert_eq!(a.gauges[Gauge::QueriesServed.index()], 17);
+    }
+}

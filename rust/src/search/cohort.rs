@@ -49,6 +49,7 @@ use crate::distances::KernelWorkspace;
 use crate::index::ref_index::BucketStats;
 use crate::index::topk::TopK;
 use crate::metrics::Counters;
+use crate::obs::{DistKind, ScanObs, Stage};
 use crate::search::subsequence::{eval_survivor, DataEnvelopes, QueryContext};
 use crate::search::suite::Suite;
 
@@ -157,6 +158,39 @@ pub fn scan_cohort_topk(
     scratch: &mut CohortScratch,
     pool: &mut CohortPool,
 ) {
+    scan_cohort_topk_obs(
+        reference,
+        start,
+        end,
+        members,
+        stats,
+        denv,
+        suite,
+        sync_every,
+        scratch,
+        pool,
+        ScanObs::OFF,
+    );
+}
+
+/// [`scan_cohort_topk`] with an observability handle — what a shard
+/// worker serving a cohort job calls so bound-stage latencies and the
+/// per-strip survivor distribution land in its registry cell. Recording
+/// is write-only: results stay bitwise identical with a cell attached.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_cohort_topk_obs(
+    reference: &[f64],
+    start: usize,
+    end: usize,
+    members: &mut [CohortMember],
+    stats: &BucketStats,
+    denv: Option<&DataEnvelopes>,
+    suite: Suite,
+    sync_every: usize,
+    scratch: &mut CohortScratch,
+    pool: &mut CohortPool,
+    obs: ScanObs<'_>,
+) {
     if members.is_empty() {
         return;
     }
@@ -233,6 +267,7 @@ pub fn scan_cohort_topk(
             // constant for the batch stages, like the single-query strip
             let bsf_strip = m.topk.threshold();
             if cascade.kim {
+                let t0 = obs.now();
                 batch_lb_kim_pre(&m.ctx.q, kim, len, &mut lane.lb);
                 for i in 0..len {
                     if lane.lb[i] > bsf_strip {
@@ -241,8 +276,10 @@ pub fn scan_cohort_topk(
                         m.counters.batch_lb_prunes += 1;
                     }
                 }
+                obs.stage_since(Stage::BoundKim, t0);
             }
             if cascade.keogh_eq {
+                let t0 = obs.now();
                 let (u, l) = m.ctx.envelopes_natural();
                 for i in 0..len {
                     if !lane.alive[i] {
@@ -267,8 +304,10 @@ pub fn scan_cohort_topk(
                         m.counters.batch_lb_prunes += 1;
                     }
                 }
+                obs.stage_since(Stage::BoundKeoghEq, t0);
             }
             lane.order_survivors();
+            obs.record_dist(DistKind::StripSurvivors, lane.order.len() as u64);
             pool.swap_into(&mut m.ctx);
             for &i in &lane.order {
                 let i = i as usize;
@@ -286,6 +325,7 @@ pub fn scan_cohort_topk(
                     true,
                     &mut m.topk,
                     &mut m.counters,
+                    obs,
                 );
             }
             pool.swap_into(&mut m.ctx);
@@ -367,7 +407,14 @@ mod tests {
         let r = Dataset::Ecg.generate(1200, 3);
         let queries = extract_queries(&r, 4, 96, 0.1, 9);
         let w = window_cells(96, 0.1);
-        for metric in [Metric::Cdtw, Metric::Msm { cost: 0.5 }] {
+        for metric in [
+            Metric::Cdtw,
+            Metric::Msm { cost: 0.5 },
+            // the two metrics with per-query cost-model tables: the cohort
+            // path must serve them rebuild-free too (PR 5 follow-up)
+            Metric::Wdtw { g: 0.05 },
+            Metric::Erp { gap: 0.5 },
+        ] {
             let members = run_cohort(&r, &queries, w, 3, metric, Suite::UcrMon);
             for (q, m) in queries.iter().zip(members) {
                 let mut c = Counters::new();
@@ -382,6 +429,16 @@ mod tests {
                 }
                 // the cohort member examined the whole candidate space
                 assert_eq!(m.counters.candidates, c.candidates, "{}", metric.name());
+                // per-query cost-model tables are built once at context
+                // build — never per candidate, in either path
+                assert_eq!(m.counters.cost_model_rebuilds, 0, "{}", metric.name());
+                assert_eq!(c.cost_model_rebuilds, 0, "{}", metric.name());
+                assert_eq!(
+                    m.counters.dtw_calls,
+                    m.counters.dtw_abandons + m.counters.dtw_completions,
+                    "{}",
+                    metric.name()
+                );
             }
         }
     }
@@ -415,8 +472,10 @@ mod tests {
             total.strip_stat_loads_saved * 6,
             "sample saving is 6 endpoint reads per shared stat-lane read"
         );
-        // and the pooled kernel workspace never regrew inside the cohort
+        // and the pooled kernel workspace never regrew inside the cohort,
+        // nor did any member rebuild its cost-model tables
         assert_eq!(total.kernel_workspace_regrows, 0);
+        assert_eq!(total.cost_model_rebuilds, 0);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use crate::bounds::envelope::envelopes;
 use crate::bounds::lb_keogh::{reorder, sort_order};
+use crate::distances::cache::CostModelCache;
 use crate::distances::cost::sqed;
 use crate::distances::metric::Metric;
 use crate::distances::DtwWorkspace;
@@ -93,6 +94,11 @@ pub fn nn1_topk_metric(
     };
 
     let mut ws = DtwWorkspace::with_capacity(query.len());
+    // per-query cost-model tables (WDTW weights, ERP accumulators) built
+    // once here instead of per candidate; equal-length candidates then
+    // never miss the cache
+    let mut cache = CostModelCache::new();
+    cache.prepare(metric, query);
     let mut topk = TopK::new(k);
     for &(i, lb) in &idx {
         counters.candidates += 1;
@@ -105,10 +111,11 @@ pub fn nn1_topk_metric(
         // exact abandon attribution from the unified kernel: a candidate
         // whose length difference exceeds the band (infeasible, +inf but
         // not abandoned) no longer inflates the abandon tally
-        let out = metric.eval_outcome(query, &candidates[i], w, ub, None, suite, &mut ws);
-        if out.abandoned {
-            counters.record_metric_abandon(metric);
-        } else if out.dist.is_finite() && topk.offer(Match { pos: i, dist: out.dist }) {
+        let out =
+            metric.eval_outcome_cached(query, &candidates[i], w, ub, None, suite, &mut ws, &mut cache);
+        counters.cost_model_rebuilds += cache.take_rebuilds();
+        counters.record_metric_outcome(metric, out.abandoned);
+        if !out.abandoned && out.dist.is_finite() && topk.offer(Match { pos: i, dist: out.dist }) {
             counters.topk_updates += 1;
             counters.ub_updates += 1;
         }
@@ -247,6 +254,15 @@ mod tests {
                     );
                 }
                 assert!(c.metric_calls[metric.index()] > 0, "{}", metric.name());
+                // equal-length whole-series search: the prepared tables
+                // serve every candidate without a rebuild
+                assert_eq!(c.cost_model_rebuilds, 0, "{}", metric.name());
+                assert_eq!(
+                    c.dtw_calls,
+                    c.dtw_abandons + c.dtw_completions,
+                    "{}",
+                    metric.name()
+                );
             }
         }
     }

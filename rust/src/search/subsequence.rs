@@ -27,12 +27,14 @@ use crate::bounds::lb_keogh::{
     cumulate_bound, lb_keogh_ec, lb_keogh_eq, lb_keogh_eq_pre, reorder, sort_order,
 };
 use crate::bounds::lb_kim::lb_kim_hierarchy;
+use crate::distances::cache::CostModelCache;
 use crate::distances::metric::Metric;
 use crate::distances::KernelWorkspace;
 use crate::index::ref_index::BucketStats;
 use crate::index::topk::TopK;
 use crate::metrics::Counters;
 use crate::norm::znorm::{znorm, znorm_point, WindowStats};
+use crate::obs::{DistKind, ScanObs, Stage};
 use crate::search::suite::Suite;
 
 /// A located subsequence match.
@@ -119,6 +121,10 @@ pub struct QueryContext {
     ws: KernelWorkspace,
     /// SoA scratch lanes for the strip-mined scan (empty until first use)
     strip: StripScratch,
+    /// per-query cost-model tables (WDTW weights, ERP accumulators),
+    /// prepared once at build time so per-candidate kernel dispatch
+    /// borrows instead of reallocating
+    cost_cache: CostModelCache,
     /// elastic metric every candidate is scored under
     pub metric: Metric,
 }
@@ -171,6 +177,11 @@ impl QueryContext {
         } else {
             (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new())
         };
+        // build the metric's per-query tables up front: every candidate
+        // evaluation then borrows them, and `cost_model_rebuilds` stays 0
+        // for the whole scan
+        let mut cost_cache = CostModelCache::new();
+        cost_cache.prepare(metric, &q);
         Self {
             q,
             w,
@@ -186,6 +197,7 @@ impl QueryContext {
             zbuf: if pooled { Vec::new() } else { vec![0.0; n] },
             ws: if pooled { KernelWorkspace::default() } else { KernelWorkspace::with_capacity(n) },
             strip: StripScratch::default(),
+            cost_cache,
             metric,
         }
     }
@@ -339,6 +351,38 @@ pub fn scan_topk_policy(
     topk: &mut TopK,
     counters: &mut Counters,
 ) {
+    scan_topk_scalar(
+        reference,
+        start,
+        end,
+        ctx,
+        denv,
+        stats,
+        suite,
+        cascade,
+        topk,
+        counters,
+        ScanObs::OFF,
+    );
+}
+
+/// [`scan_topk_policy`] with an observability handle — the scalar scan
+/// body. Recording is write-only: an attached [`ScanObs`] cell changes no
+/// result bit, and the `OFF` handle reads no clocks.
+#[allow(clippy::too_many_arguments)]
+fn scan_topk_scalar(
+    reference: &[f64],
+    start: usize,
+    end: usize,
+    ctx: &mut QueryContext,
+    denv: Option<&DataEnvelopes>,
+    stats: ScanStats<'_>,
+    suite: Suite,
+    cascade: CascadePolicy,
+    topk: &mut TopK,
+    counters: &mut Counters,
+    obs: ScanObs<'_>,
+) {
     let n = ctx.len();
     assert!(n > 0, "empty query");
     assert!(reference.len() >= n, "reference shorter than query");
@@ -363,7 +407,7 @@ pub fn scan_topk_policy(
                 let window = ws.window();
                 let (mean, std) = ws.mean_std();
                 eval_candidate(
-                    pos, window, mean, std, ctx, denv, suite, cascade, false, topk, counters,
+                    pos, window, mean, std, ctx, denv, suite, cascade, false, topk, counters, obs,
                 );
                 if pos + 1 >= end || !ws.advance() {
                     break;
@@ -376,7 +420,7 @@ pub fn scan_topk_policy(
                 let window = &reference[pos..pos + n];
                 let (mean, std) = table.mean_std(pos);
                 eval_candidate(
-                    pos, window, mean, std, ctx, denv, suite, cascade, true, topk, counters,
+                    pos, window, mean, std, ctx, denv, suite, cascade, true, topk, counters, obs,
                 );
             }
         }
@@ -400,12 +444,47 @@ pub fn scan_topk_policy_mode(
     topk: &mut TopK,
     counters: &mut Counters,
 ) {
+    scan_topk_policy_mode_obs(
+        reference,
+        start,
+        end,
+        ctx,
+        denv,
+        stats,
+        suite,
+        cascade,
+        mode,
+        topk,
+        counters,
+        ScanObs::OFF,
+    );
+}
+
+/// [`scan_topk_policy_mode`] with an observability handle — what shard
+/// workers call so stage latencies land in their registry cell. An
+/// attached cell is write-only (results stay bitwise identical to
+/// [`ScanObs::OFF`], pinned by `obs_attached_scan_is_bitwise_identical`).
+#[allow(clippy::too_many_arguments)]
+pub fn scan_topk_policy_mode_obs(
+    reference: &[f64],
+    start: usize,
+    end: usize,
+    ctx: &mut QueryContext,
+    denv: Option<&DataEnvelopes>,
+    stats: ScanStats<'_>,
+    suite: Suite,
+    cascade: CascadePolicy,
+    mode: ScanMode,
+    topk: &mut TopK,
+    counters: &mut Counters,
+    obs: ScanObs<'_>,
+) {
     match mode {
-        ScanMode::Scalar => scan_topk_policy(
-            reference, start, end, ctx, denv, stats, suite, cascade, topk, counters,
+        ScanMode::Scalar => scan_topk_scalar(
+            reference, start, end, ctx, denv, stats, suite, cascade, topk, counters, obs,
         ),
         ScanMode::Strip => scan_topk_strips(
-            reference, start, end, ctx, denv, stats, suite, cascade, topk, counters,
+            reference, start, end, ctx, denv, stats, suite, cascade, topk, counters, obs,
         ),
     }
 }
@@ -435,6 +514,7 @@ fn scan_topk_strips(
     cascade: CascadePolicy,
     topk: &mut TopK,
     counters: &mut Counters,
+    obs: ScanObs<'_>,
 ) {
     let n = ctx.len();
     assert!(n > 0, "empty query");
@@ -489,6 +569,7 @@ fn scan_topk_strips(
         // constant for one candidate
         let bsf_strip = topk.threshold();
         if cascade.kim {
+            let t0 = obs.now();
             batch_lb_kim_into(
                 &ctx.q,
                 reference,
@@ -505,8 +586,10 @@ fn scan_topk_strips(
                     counters.batch_lb_prunes += 1;
                 }
             }
+            obs.stage_since(Stage::BoundKim, t0);
         }
         if cascade.keogh_eq {
+            let t0 = obs.now();
             for i in 0..len {
                 if !scratch.alive[i] {
                     continue;
@@ -534,8 +617,10 @@ fn scan_topk_strips(
                     counters.batch_lb_prunes += 1;
                 }
             }
+            obs.stage_since(Stage::BoundKeoghEq, t0);
         }
         scratch.order_survivors();
+        obs.record_dist(DistKind::StripSurvivors, scratch.order.len() as u64);
         for &i in &scratch.order {
             let i = i as usize;
             let pos = strip_start + i;
@@ -552,6 +637,7 @@ fn scan_topk_strips(
                 indexed,
                 topk,
                 counters,
+                obs,
             );
         }
         strip_start += len;
@@ -580,6 +666,7 @@ pub(crate) fn eval_survivor(
     indexed: bool,
     topk: &mut TopK,
     counters: &mut Counters,
+    obs: ScanObs<'_>,
 ) {
     let n = ctx.len();
     let bsf = topk.threshold();
@@ -590,7 +677,9 @@ pub(crate) fn eval_survivor(
     ctx.zbuf.extend(window.iter().map(|&x| znorm_point(x, mean, std)));
     let mut lb1 = 0.0;
     if cascade.keogh_eq {
+        let t0 = obs.now();
         lb1 = lb_keogh_eq_pre(&ctx.order, &ctx.uo, &ctx.lo, &ctx.zbuf, bsf, &mut ctx.cb1);
+        obs.stage_since(Stage::BoundKeoghEq, t0);
         if lb1 > bsf {
             counters.lb_keogh_eq_prunes += 1;
             if lb1 <= bsf_strip {
@@ -604,7 +693,9 @@ pub(crate) fn eval_survivor(
     if cascade.keogh_ec {
         let denv = denv.expect("data envelopes required");
         let (u, l) = denv.strip(pos, n);
+        let t0 = obs.now();
         lb2 = lb_keogh_ec(&ctx.order, &ctx.qo, u, l, mean, std, bsf, &mut ctx.cb2);
+        obs.stage_since(Stage::BoundKeoghEc, t0);
         have2 = true;
         if lb2 > bsf {
             counters.lb_keogh_ec_prunes += 1;
@@ -617,7 +708,7 @@ pub(crate) fn eval_survivor(
             return;
         }
     }
-    score_candidate(pos, lb1, lb2, have2, bsf, ctx, suite, cascade, topk, counters);
+    score_candidate(pos, lb1, lb2, have2, bsf, ctx, suite, cascade, topk, counters, obs);
 }
 
 /// One candidate through cascade + DTW core + collector. `indexed` marks
@@ -636,13 +727,16 @@ fn eval_candidate(
     indexed: bool,
     topk: &mut TopK,
     counters: &mut Counters,
+    obs: ScanObs<'_>,
 ) {
     let n = ctx.len();
     counters.candidates += 1;
     // constant for the whole candidate, exactly like the scalar loop's bsf
     let bsf = topk.threshold();
     if cascade.kim {
+        let t0 = obs.now();
         let lb = lb_kim_hierarchy(&ctx.q, window, mean, std, bsf);
+        obs.stage_since(Stage::BoundKim, t0);
         if lb > bsf {
             counters.lb_kim_prunes += 1;
             return;
@@ -650,7 +744,9 @@ fn eval_candidate(
     }
     let mut lb1 = 0.0;
     if cascade.keogh_eq {
+        let t0 = obs.now();
         lb1 = lb_keogh_eq(&ctx.order, &ctx.uo, &ctx.lo, window, mean, std, bsf, &mut ctx.cb1);
+        obs.stage_since(Stage::BoundKeoghEq, t0);
         if lb1 > bsf {
             counters.lb_keogh_eq_prunes += 1;
             return;
@@ -660,6 +756,7 @@ fn eval_candidate(
     let mut have2 = false;
     if cascade.keogh_ec {
         let denv = denv.expect("data envelopes required");
+        let t0 = obs.now();
         lb2 = lb_keogh_ec(
             &ctx.order,
             &ctx.qo,
@@ -670,6 +767,7 @@ fn eval_candidate(
             bsf,
             &mut ctx.cb2,
         );
+        obs.stage_since(Stage::BoundKeoghEc, t0);
         have2 = true;
         if lb2 > bsf {
             counters.lb_keogh_ec_prunes += 1;
@@ -683,7 +781,7 @@ fn eval_candidate(
     // never touches zbuf, so filling it first is order-equivalent)
     ctx.zbuf.clear();
     ctx.zbuf.extend(window.iter().map(|&x| znorm_point(x, mean, std)));
-    score_candidate(pos, lb1, lb2, have2, bsf, ctx, suite, cascade, topk, counters);
+    score_candidate(pos, lb1, lb2, have2, bsf, ctx, suite, cascade, topk, counters, obs);
 }
 
 /// Shared final stage of both scan front-ends: pick the tighter Keogh
@@ -705,6 +803,7 @@ fn score_candidate(
     cascade: CascadePolicy,
     topk: &mut TopK,
     counters: &mut Counters,
+    obs: ScanObs<'_>,
 ) {
     // cumulative tail from the tighter of the two Keogh bounds
     let cb = if cascade.tighten && (cascade.keogh_eq || have2) {
@@ -720,10 +819,21 @@ fn score_candidate(
     // attribution is exact rather than inferred from an infinite return
     // (an infeasible band — impossible here, windows match the query
     // length — would not be an abandon)
-    let out = metric.eval_outcome(&ctx.q, &ctx.zbuf, ctx.w, bsf, cb, suite, &mut ctx.ws);
-    if out.abandoned {
-        counters.record_metric_abandon(metric);
-    } else if out.dist.is_finite() && topk.offer(Match { pos, dist: out.dist }) {
+    let t0 = obs.now();
+    let out = metric.eval_outcome_cached(
+        &ctx.q,
+        &ctx.zbuf,
+        ctx.w,
+        bsf,
+        cb,
+        suite,
+        &mut ctx.ws,
+        &mut ctx.cost_cache,
+    );
+    obs.stage_since(Stage::KernelEval, t0);
+    counters.cost_model_rebuilds += ctx.cost_cache.take_rebuilds();
+    counters.record_metric_outcome(metric, out.abandoned);
+    if !out.abandoned && out.dist.is_finite() && topk.offer(Match { pos, dist: out.dist }) {
         counters.topk_updates += 1;
         counters.ub_updates += 1;
     }
@@ -1222,6 +1332,78 @@ mod tests {
             // bound-free: every candidate reaches the kernel in both modes
             assert_eq!(ct.dtw_calls, ct.candidates);
             assert_eq!(ct.batch_lb_prunes, 0);
+        }
+    }
+
+    #[test]
+    fn obs_attached_scan_is_bitwise_identical() {
+        use crate::obs::{MetricsSnapshot, ObsCell};
+        let (r, q) = small_workload();
+        let w = window_cells(q.len(), 0.1);
+        let total = r.len() - q.len() + 1;
+        let denv = DataEnvelopes::new(&r, w);
+        for mode in [ScanMode::Scalar, ScanMode::Strip] {
+            let cell = ObsCell::new();
+            let mut run = |obs: ScanObs<'_>| {
+                let mut ctx = QueryContext::new(&q, w);
+                let mut topk = TopK::new(3);
+                let mut c = Counters::new();
+                scan_topk_policy_mode_obs(
+                    &r,
+                    0,
+                    total,
+                    &mut ctx,
+                    Some(&denv),
+                    ScanStats::Streaming,
+                    Suite::UcrMon,
+                    Suite::UcrMon.cascade(),
+                    mode,
+                    &mut topk,
+                    &mut c,
+                    obs,
+                );
+                (topk.into_sorted(), c)
+            };
+            let (plain, cp) = run(ScanObs::OFF);
+            let (observed, co) = run(ScanObs(Some(&cell)));
+            assert_eq!(plain.len(), observed.len(), "{mode:?}");
+            for (a, b) in plain.iter().zip(&observed) {
+                assert_eq!(a.pos, b.pos, "{mode:?}");
+                assert_eq!(a.dist.to_bits(), b.dist.to_bits(), "{mode:?}");
+            }
+            assert_eq!(cp.slots(), co.slots(), "{mode:?}");
+            // the attached cell actually saw the stage latencies
+            let mut snap = MetricsSnapshot::default();
+            cell.drain_into(&mut snap);
+            assert!(snap.stages[Stage::BoundKim.index()].count() > 0, "{mode:?}");
+            assert!(snap.stages[Stage::KernelEval.index()].count() > 0, "{mode:?}");
+            if mode == ScanMode::Strip {
+                assert!(snap.dists[DistKind::StripSurvivors.index()].count() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_cost_cache_never_rebuilds_during_a_scan() {
+        let r = Dataset::Soccer.generate(600, 9);
+        let q = crate::data::extract_queries(&r, 1, 48, 0.1, 10).remove(0);
+        for metric in Metric::all_default() {
+            for mode in [ScanMode::Scalar, ScanMode::Strip] {
+                let mut c = Counters::new();
+                let got = search_subsequence_topk_metric_mode(
+                    &r, &q, 5, 2, metric, Suite::UcrMon, mode, &mut c,
+                );
+                assert!(!got.is_empty(), "{}", metric.name());
+                // PR 5 follow-up pinned: the per-query tables are built
+                // once at context build, never per candidate
+                assert_eq!(c.cost_model_rebuilds, 0, "{} {mode:?}", metric.name());
+                assert_eq!(
+                    c.dtw_calls,
+                    c.dtw_abandons + c.dtw_completions,
+                    "{} {mode:?}",
+                    metric.name()
+                );
+            }
         }
     }
 

@@ -139,6 +139,7 @@ fn protocol_survives_the_wire() {
             Match { pos: 9, dist: 1.5 },
         ],
         latency_ms: 3.125,
+        queue_ms: None,
         candidates: 1000,
         pruned: 900,
         dtw_calls: 100,

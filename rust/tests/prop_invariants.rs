@@ -13,10 +13,13 @@ use repro::distances::eap_dtw::eap_cdtw;
 use repro::distances::metric::Metric;
 use repro::distances::pruned_dtw::pruned_cdtw;
 use repro::distances::DtwWorkspace;
+use repro::index::ref_index::BucketStats;
 use repro::metrics::Counters;
 use repro::norm::znorm::{stats, znorm, znorm_point, WindowStats};
+use repro::search::cohort::{scan_cohort_topk, CohortMember, CohortPool, CohortScratch};
 use repro::search::subsequence::{
-    scan, search_subsequence, search_subsequence_topk_metric, DataEnvelopes, Match, QueryContext,
+    scan, search_subsequence, search_subsequence_topk_metric,
+    search_subsequence_topk_metric_mode, DataEnvelopes, Match, QueryContext, ScanMode,
 };
 use repro::search::suite::Suite;
 use repro::util::proptest::{arb_series, arb_window, run_prop};
@@ -457,6 +460,118 @@ fn prop_cdtw_dispatch_k1_bit_identical_to_scalar_cascade_loop() {
             // the whole scan was tallied as cDTW kernel work
             if cnt.metric_calls[Metric::Cdtw.index()] != cnt.dtw_calls {
                 return Err(format!("per-metric tally drift: {cnt:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_counter_conservation_every_mode_and_metric() {
+    // the observability plane's accounting invariants: every candidate is
+    // accounted for exactly once (pruned at one cascade stage or handed
+    // to the kernel), every kernel call either abandoned or completed,
+    // and the per-metric tallies sum to the aggregates — across both scan
+    // front-ends, the cohort path, random suites and all six metrics.
+    // tools/bench_diff.py enforces the same identities on exported
+    // snapshots; this test is why it may.
+    fn check(c: &Counters, what: &str) -> Result<(), String> {
+        let pruned =
+            c.lb_kim_prunes + c.lb_keogh_eq_prunes + c.lb_keogh_ec_prunes + c.xla_prunes;
+        if c.candidates != pruned + c.dtw_calls {
+            return Err(format!(
+                "{what}: candidates {} != prunes {pruned} + dtw_calls {}",
+                c.candidates, c.dtw_calls
+            ));
+        }
+        if c.dtw_calls != c.dtw_abandons + c.dtw_completions {
+            return Err(format!(
+                "{what}: dtw_calls {} != abandons {} + completions {}",
+                c.dtw_calls, c.dtw_abandons, c.dtw_completions
+            ));
+        }
+        let mcalls: u64 = c.metric_calls.iter().sum();
+        let mabandons: u64 = c.metric_abandons.iter().sum();
+        if mcalls != c.dtw_calls || mabandons != c.dtw_abandons {
+            return Err(format!(
+                "{what}: per-metric tallies drift: {mcalls}/{mabandons} vs {}/{}",
+                c.dtw_calls, c.dtw_abandons
+            ));
+        }
+        if c.cost_model_rebuilds != 0 {
+            return Err(format!("{what}: {} cost-model rebuilds", c.cost_model_rebuilds));
+        }
+        Ok(())
+    }
+
+    #[derive(Debug)]
+    struct Case {
+        seed: u64,
+        metric: Metric,
+        dataset: Dataset,
+        mode: ScanMode,
+        suite: Suite,
+    }
+    run_prop(
+        "counter conservation",
+        0xAC,
+        18,
+        |rng| Case {
+            seed: rng.next_u64(),
+            metric: Metric::all_default()[rng.below(Metric::COUNT as u64) as usize],
+            dataset: Dataset::ALL[rng.below(6) as usize],
+            mode: if rng.below(2) == 0 { ScanMode::Scalar } else { ScanMode::Strip },
+            suite: Suite::ALL[rng.below(4) as usize],
+        },
+        |c| {
+            let r = c.dataset.generate(900, c.seed);
+            let qlen = 64;
+            let w = 6;
+            let q = extract_queries(&r, 1, qlen, 0.1, c.seed ^ 11).remove(0);
+            let mut cnt = Counters::new();
+            let got = search_subsequence_topk_metric_mode(
+                &r, &q, w, 3, c.metric, c.suite, c.mode, &mut cnt,
+            );
+            if got.is_empty() {
+                return Err("no matches".into());
+            }
+            check(
+                &cnt,
+                &format!("{:?}/{}/{}", c.mode, c.metric.name(), c.suite.name()),
+            )?;
+            // the cohort path preserves the same conservation per member
+            let queries = extract_queries(&r, 3, qlen, 0.1, c.seed ^ 13);
+            let stats = BucketStats::build(&r, qlen);
+            let weff = c.metric.effective_window(qlen, w);
+            let denv = c
+                .metric
+                .wants_data_envelopes(c.suite)
+                .then(|| DataEnvelopes::new(&r, weff));
+            let mut members: Vec<CohortMember> = queries
+                .iter()
+                .map(|q| {
+                    CohortMember::new(QueryContext::with_metric_pooled(q, w, c.metric), 3)
+                })
+                .collect();
+            let mut scratch = CohortScratch::default();
+            let mut pool = CohortPool::default();
+            scan_cohort_topk(
+                &r,
+                0,
+                r.len() - qlen + 1,
+                &mut members,
+                &stats,
+                denv.as_ref(),
+                c.suite,
+                1024,
+                &mut scratch,
+                &mut pool,
+            );
+            for (i, m) in members.iter().enumerate() {
+                check(
+                    &m.counters,
+                    &format!("cohort[{i}]/{}/{}", c.metric.name(), c.suite.name()),
+                )?;
             }
             Ok(())
         },

@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_*.json artifacts (or audit one) and fail on
+counter-invariant violations.
+
+Accepts the documents `bench_support::report::BenchJson` writes — a
+top-level ``runs`` array whose rows carry a ``counters`` object, plus an
+optional embedded metrics snapshot (pinned schema ``repro.metrics.v1``)
+under ``stats`` — and also bare snapshot documents, as emitted by
+``repro serve --stats-every N`` or the ``{"cmd":"stats"}`` wire request.
+
+Checked identities (the same ones ``rust/tests/prop_invariants.rs``
+property-tests in-process; see ``rust/src/obs/README.md``):
+
+    candidates == lb_kim_prunes + lb_keogh_eq_prunes
+                  + lb_keogh_ec_prunes + xla_prunes + dtw_calls
+    dtw_calls  == dtw_abandons + dtw_completions
+    dtw_calls  == sum(metric_calls_*)
+    dtw_abandons == sum(metric_abandons_*)
+    cost_model_rebuilds == 0
+
+A counter absent from a document reads as unknown, and any identity
+that needs it is skipped (older artifacts predate some counters);
+present-but-inconsistent counters are hard failures.
+
+Usage:
+    bench_diff.py CURRENT.json                audit one artifact
+    bench_diff.py BASELINE.json CURRENT.json  audit both + print deltas
+
+Exit codes: 0 all invariants hold, 1 violation, 2 usage/parse error.
+"""
+
+import json
+import sys
+
+CASCADE_STAGES = (
+    "lb_kim_prunes",
+    "lb_keogh_eq_prunes",
+    "lb_keogh_ec_prunes",
+    "xla_prunes",
+)
+# run-identity fields are everything except the measurements
+MEASUREMENTS = {
+    "seconds",
+    "ns_per_op",
+    "queries_per_sec",
+    "ref_bytes_per_query",
+    "counters",
+}
+
+
+def _get(counters, *names):
+    """Values for names, or None if any is absent from the document."""
+    vals = []
+    for n in names:
+        v = counters.get(n)
+        if v is None:
+            return None
+        vals.append(int(v))
+    return vals
+
+
+def check_counters(counters, where, problems):
+    """Append a problem string per violated identity."""
+    got = _get(counters, "candidates", "dtw_calls", *CASCADE_STAGES)
+    if got is not None:
+        cand, dtw = got[0], got[1]
+        pruned = sum(got[2:])
+        if cand != pruned + dtw:
+            problems.append(
+                f"{where}: candidates {cand} != stage prunes {pruned}"
+                f" + dtw_calls {dtw}"
+            )
+    got = _get(counters, "dtw_calls", "dtw_abandons", "dtw_completions")
+    if got is not None and got[0] != got[1] + got[2]:
+        problems.append(
+            f"{where}: dtw_calls {got[0]} != abandons {got[1]}"
+            f" + completions {got[2]}"
+        )
+    for prefix, total_name in (
+        ("metric_calls_", "dtw_calls"),
+        ("metric_abandons_", "dtw_abandons"),
+    ):
+        per_metric = {k: int(v) for k, v in counters.items() if k.startswith(prefix)}
+        total = counters.get(total_name)
+        if per_metric and total is not None and sum(per_metric.values()) != int(total):
+            problems.append(
+                f"{where}: sum({prefix}*) {sum(per_metric.values())}"
+                f" != {total_name} {int(total)}"
+            )
+    rebuilds = counters.get("cost_model_rebuilds")
+    if rebuilds is not None and int(rebuilds) != 0:
+        problems.append(f"{where}: cost_model_rebuilds {int(rebuilds)} != 0")
+
+
+def audit(doc, label, problems):
+    """Check every counters object a document carries."""
+    if doc.get("schema") == "repro.metrics.v1":
+        check_counters(doc.get("counters", {}), f"{label} snapshot", problems)
+        return
+    for i, run in enumerate(doc.get("runs", [])):
+        counters = run.get("counters")
+        if counters:
+            check_counters(counters, f"{label} runs[{i}]", problems)
+    stats = doc.get("stats")
+    if stats:
+        if stats.get("schema") != "repro.metrics.v1":
+            problems.append(
+                f"{label} stats: unsupported schema {stats.get('schema')!r}"
+            )
+        else:
+            check_counters(stats.get("counters", {}), f"{label} stats", problems)
+
+
+def run_key(run):
+    return tuple(sorted((k, v) for k, v in run.items() if k not in MEASUREMENTS))
+
+
+def print_deltas(base, curr):
+    """Timing + dtw_calls deltas for runs present in both documents."""
+    base_runs = {run_key(r): r for r in base.get("runs", [])}
+    matched = 0
+    for run in curr.get("runs", []):
+        b = base_runs.get(run_key(run))
+        if b is None:
+            continue
+        matched += 1
+        ident = " ".join(
+            f"{k}={v}" for k, v in sorted(run.items()) if k not in MEASUREMENTS
+        )
+        parts = []
+        if "ns_per_op" in run and "ns_per_op" in b and b["ns_per_op"]:
+            ratio = run["ns_per_op"] / b["ns_per_op"]
+            parts.append(f"time x{ratio:.3f}")
+        bc, cc = b.get("counters", {}), run.get("counters", {})
+        for key in ("dtw_calls", "dtw_abandons", "candidates"):
+            if key in bc and key in cc and int(cc[key]) != int(bc[key]):
+                parts.append(f"{key} {int(bc[key])} -> {int(cc[key])}")
+        print(f"  {ident}: {', '.join(parts) if parts else 'unchanged'}")
+    total = len(curr.get("runs", []))
+    print(f"  matched {matched}/{total} runs against the baseline")
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_diff: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def main(argv):
+    if len(argv) not in (2, 3):
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    docs = [(p, load(p)) for p in argv[1:]]
+    problems = []
+    for path, doc in docs:
+        audit(doc, path, problems)
+    if len(docs) == 2:
+        print(f"deltas {docs[0][0]} -> {docs[1][0]}:")
+        print_deltas(docs[0][1], docs[1][1])
+    for p in problems:
+        print(f"INVARIANT VIOLATION: {p}", file=sys.stderr)
+    if problems:
+        return 1
+    names = ", ".join(p for p, _ in docs)
+    print(f"counter invariants hold: {names}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
