@@ -55,11 +55,19 @@ def test_violations_fail_with_exit_1(tmp_path):
     def rebuilds_nonzero(d):
         d["runs"][1]["counters"]["cost_model_rebuilds"] = 2
 
+    def improved_breaks_conservation(d):
+        # lb_improved_prunes is part of the stage-prune sum: inflating it
+        # alone must break candidates == prunes + dtw_calls
+        d["runs"][0]["counters"]["lb_improved_prunes"] = (
+            d["runs"][0]["counters"].get("lb_improved_prunes", 0) + 5
+        )
+
     for name, tweak in [
         ("conservation", broken_conservation),
         ("outcomes", broken_outcomes),
         ("metric_sums", broken_metric_sums),
         ("rebuilds", rebuilds_nonzero),
+        ("improved_conservation", improved_breaks_conservation),
     ]:
         p = tmp_path / f"{name}.json"
         p.write_text(json.dumps(_corrupt(doc, tweak)))
@@ -100,6 +108,38 @@ def test_missing_counters_are_skipped_not_failed(tmp_path):
     p.write_text(json.dumps(legacy))
     res = run_tool(p)
     assert res.returncode == 0, res.stderr
+
+
+def test_absent_improved_counter_reads_as_zero(tmp_path):
+    # an artifact from before the LB_Improved stage has the original four
+    # stage counters but no lb_improved_prunes: the conservation identity
+    # still runs, with the missing stage read as 0
+    doc = {
+        "bench": "pre_improved",
+        "runs": [
+            {
+                "qlen": 64,
+                "counters": {
+                    "candidates": 10,
+                    "lb_kim_prunes": 3,
+                    "lb_keogh_eq_prunes": 2,
+                    "lb_keogh_ec_prunes": 1,
+                    "xla_prunes": 0,
+                    "dtw_calls": 4,
+                },
+            }
+        ],
+    }
+    p = tmp_path / "pre_improved.json"
+    p.write_text(json.dumps(doc))
+    assert run_tool(p).returncode == 0
+
+    # ...and a violation hidden behind the default is still caught
+    doc["runs"][0]["counters"]["dtw_calls"] = 3
+    p.write_text(json.dumps(doc))
+    res = run_tool(p)
+    assert res.returncode == 1
+    assert "INVARIANT VIOLATION" in res.stderr
 
 
 def test_unreadable_file_is_a_usage_error(tmp_path):

@@ -1,8 +1,8 @@
 //! Ablation A3 — the cascade itself: UCR-MON with every subset of the
-//! lower-bound cascade (none / kim / +keoghEQ / +keoghEC = full) and with
-//! upper-bound tightening on/off. Quantifies the paper's headline §5
-//! finding: with EAPrunedDTW, lower bounds still help but are
-//! *dispensable*.
+//! lower-bound cascade (none / kim / +keoghEQ / +keoghEC / +improved =
+//! full) and with upper-bound tightening on/off. Quantifies the paper's
+//! headline §5 finding: with EAPrunedDTW, lower bounds still help but
+//! are *dispensable*.
 
 use repro::bench_support::harness::{bench, fmt_secs};
 use repro::bench_support::report::BenchJson;
@@ -21,11 +21,15 @@ fn main() {
     let qlen = 256;
     let ratio = 0.2;
     let w = window_cells(qlen, ratio);
-    let policies: [(&str, CascadePolicy); 5] = [
+    let policies: [(&str, CascadePolicy); 6] = [
         ("none (nolb)", CascadePolicy::none()),
-        ("kim only", CascadePolicy { kim: true, keogh_eq: false, keogh_ec: false, tighten: false }),
-        ("kim+EQ", CascadePolicy { kim: true, keogh_eq: true, keogh_ec: false, tighten: true }),
+        ("kim only", CascadePolicy { kim: true, ..CascadePolicy::none() }),
+        (
+            "kim+EQ",
+            CascadePolicy { kim: true, keogh_eq: true, tighten: true, ..CascadePolicy::none() },
+        ),
         ("full", CascadePolicy::full()),
+        ("full, no improved", CascadePolicy { improved: false, ..CascadePolicy::full() }),
         ("full, no tighten", CascadePolicy { tighten: false, ..CascadePolicy::full() }),
     ];
     let mut json = BenchJson::new("ablation_cascade");

@@ -112,6 +112,7 @@ impl BenchJson {
             ("lb_kim_prunes", Json::Num(c.lb_kim_prunes as f64)),
             ("lb_keogh_eq_prunes", Json::Num(c.lb_keogh_eq_prunes as f64)),
             ("lb_keogh_ec_prunes", Json::Num(c.lb_keogh_ec_prunes as f64)),
+            ("lb_improved_prunes", Json::Num(c.lb_improved_prunes as f64)),
             ("xla_prunes", Json::Num(c.xla_prunes as f64)),
             ("dtw_calls", Json::Num(c.dtw_calls as f64)),
             ("dtw_abandons", Json::Num(c.dtw_abandons as f64)),
@@ -294,7 +295,9 @@ pub fn speedup_summary(results: &[RunResult]) -> String {
 
 /// The Fig-5 inset: per-dataset cascade pruning proportions.
 pub fn pruning_table(results: &[RunResult]) -> String {
-    let mut t = Table::new(vec!["dataset", "suite", "kim%", "keoghEQ%", "keoghEC%", "dtw%", "abandon%"]);
+    let mut t = Table::new(vec![
+        "dataset", "suite", "kim%", "keoghEQ%", "keoghEC%", "keoghIMP%", "dtw%", "abandon%",
+    ]);
     let mut acc: BTreeMap<(Dataset, Suite), crate::metrics::Counters> = BTreeMap::new();
     for r in results {
         acc.entry((r.exp.dataset, r.suite))
@@ -302,7 +305,7 @@ pub fn pruning_table(results: &[RunResult]) -> String {
             .merge(&r.counters);
     }
     for ((d, s), c) in &acc {
-        let (kim, eq, ec, _xla, dtw) = c.prune_fractions();
+        let (kim, eq, ec, imp, _xla, dtw) = c.prune_fractions();
         let ab = if c.dtw_calls > 0 {
             c.dtw_abandons as f64 / c.dtw_calls as f64
         } else {
@@ -314,6 +317,7 @@ pub fn pruning_table(results: &[RunResult]) -> String {
             format!("{:.1}", kim * 100.0),
             format!("{:.1}", eq * 100.0),
             format!("{:.1}", ec * 100.0),
+            format!("{:.1}", imp * 100.0),
             format!("{:.1}", dtw * 100.0),
             format!("{:.1}", ab * 100.0),
         ]);

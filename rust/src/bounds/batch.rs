@@ -26,6 +26,13 @@
 //!   produces the `cb` tightening tail) still runs per *survivor*, so
 //!   the distance math that reaches the kernel stays IEEE-identical to
 //!   the scalar scan.
+//! * [`lb_keogh_ec_unordered`] is the same construction for the EC
+//!   direction (query points vs the z-normalised data envelopes) — the
+//!   first pass of the strip scan's batched LB_Improved stage. Because
+//!   the unordered sums can sit ~n·ε relative away from the sorted
+//!   scalar values, every batch prune against a threshold applies an ε
+//!   discount first (see the strip scan), keeping prune decisions a
+//!   strict subset of the scalar cascade's.
 
 use crate::bounds::lb_kim::lb_kim_hierarchy;
 use crate::distances::cost::sqed;
@@ -338,6 +345,57 @@ pub fn lb_keogh_eq_unordered(u: &[f64], l: &[f64], c: &[f64], mean: f64, std: f6
     lb
 }
 
+/// LB_Keogh EC summed in natural position order with four independent
+/// accumulators — the first pass of the batched LB_Improved stage. `u`/`l`
+/// are the **raw** data-stream envelope slices for this window,
+/// z-normalised on the fly with the lane's `(mean, std)`; `q` is the
+/// z-normalised query in natural order. Per-position penalty values are
+/// IEEE-identical to the scalar [`crate::bounds::lb_keogh::lb_keogh_ec`]
+/// pass (same `znorm_point`/`sqed` ops, same lazy lower-boundary
+/// evaluation); only the summation order differs.
+pub fn lb_keogh_ec_unordered(q: &[f64], u: &[f64], l: &[f64], mean: f64, std: f64) -> f64 {
+    let n = q.len();
+    debug_assert_eq!(u.len(), n);
+    debug_assert_eq!(l.len(), n);
+    let mut acc = [0.0f64; 4];
+    let mut iu = u.chunks_exact(4);
+    let mut il = l.chunks_exact(4);
+    for qq in q.chunks_exact(4) {
+        let uu = iu.next().expect("envelope length");
+        let ll = il.next().expect("envelope length");
+        for k in 0..4 {
+            let x = qq[k];
+            let uz = znorm_point(uu[k], mean, std);
+            let d = if x > uz {
+                sqed(x, uz)
+            } else {
+                let lz = znorm_point(ll[k], mean, std);
+                if x < lz {
+                    sqed(x, lz)
+                } else {
+                    0.0
+                }
+            };
+            acc[k] += d;
+        }
+    }
+    let mut lb = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    let rem = n - n % 4;
+    for j in rem..n {
+        let x = q[j];
+        let uz = znorm_point(u[j], mean, std);
+        if x > uz {
+            lb += sqed(x, uz);
+        } else {
+            let lz = znorm_point(l[j], mean, std);
+            if x < lz {
+                lb += sqed(x, lz);
+            }
+        }
+    }
+    lb
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -426,6 +484,31 @@ mod tests {
                 // and a valid bound on the windowed DTW
                 let zc: Vec<f64> = c.iter().map(|&x| znorm_point(x, mean, std)).collect();
                 let d = dtw_oracle(&q, &zc, Some((n / 4).max(1)));
+                assert!(lb <= d + 1e-9, "seed={seed} n={n}: {lb} > {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn unordered_ec_is_a_lower_bound_and_matches_sorted_sum() {
+        use crate::bounds::lb_keogh::lb_keogh_ec;
+        for seed in 1..=6u64 {
+            let mut rnd = xorshift(seed + 60);
+            for n in [5usize, 8, 31, 32, 64] {
+                let q = znorm(&(0..n).map(|_| rnd()).collect::<Vec<_>>());
+                let c: Vec<f64> = (0..n).map(|_| rnd() * 3.0 + 1.5).collect();
+                let (mean, std) = stats(&c);
+                let w = (n / 4).max(1);
+                // envelopes of the RAW data, z-normalised inside the bound
+                let (u, l) = envelopes(&c, w);
+                let lb = lb_keogh_ec_unordered(&q, &u, &l, mean, std);
+                let order = sort_order(&q);
+                let qo = reorder(&q, &order);
+                let mut cb = vec![0.0; n];
+                let sorted = lb_keogh_ec(&order, &qo, &u, &l, mean, std, f64::INFINITY, &mut cb);
+                assert!((lb - sorted).abs() < 1e-9, "seed={seed} n={n}: {lb} vs {sorted}");
+                let zc: Vec<f64> = c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+                let d = dtw_oracle(&q, &zc, Some(w));
                 assert!(lb <= d + 1e-9, "seed={seed} n={n}: {lb} > {d}");
             }
         }

@@ -12,6 +12,8 @@ pub struct CascadePolicy {
     pub keogh_eq: bool,
     /// LB_Keogh on the data envelope
     pub keogh_ec: bool,
+    /// LB_Improved second pass (Lemire's two-pass bound) on survivors
+    pub improved: bool,
     /// pass the cumulative LB tail into the DTW core
     pub tighten: bool,
 }
@@ -19,13 +21,13 @@ pub struct CascadePolicy {
 impl CascadePolicy {
     /// The full UCR cascade (UCR, UCR-USP, UCR-MON).
     pub const fn full() -> Self {
-        Self { kim: true, keogh_eq: true, keogh_ec: true, tighten: true }
+        Self { kim: true, keogh_eq: true, keogh_ec: true, improved: true, tighten: true }
     }
 
     /// No lower bounds at all (UCR-MON-nolb): every candidate reaches DTW,
     /// and nothing is available for tightening.
     pub const fn none() -> Self {
-        Self { kim: false, keogh_eq: false, keogh_ec: false, tighten: false }
+        Self { kim: false, keogh_eq: false, keogh_ec: false, improved: false, tighten: false }
     }
 
     /// Does any envelope-based bound run (i.e. do we need envelopes)?
@@ -33,10 +35,10 @@ impl CascadePolicy {
         self.keogh_eq
     }
     pub fn needs_data_envelopes(&self) -> bool {
-        self.keogh_ec
+        self.keogh_ec || self.improved
     }
     pub fn any(&self) -> bool {
-        self.kim || self.keogh_eq || self.keogh_ec
+        self.kim || self.keogh_eq || self.keogh_ec || self.improved
     }
 }
 
@@ -47,8 +49,17 @@ mod tests {
     #[test]
     fn presets() {
         let f = CascadePolicy::full();
-        assert!(f.kim && f.keogh_eq && f.keogh_ec && f.tighten && f.any());
+        assert!(f.kim && f.keogh_eq && f.keogh_ec && f.improved && f.tighten && f.any());
         let n = CascadePolicy::none();
-        assert!(!n.kim && !n.keogh_eq && !n.keogh_ec && !n.tighten && !n.any());
+        assert!(!n.kim && !n.keogh_eq && !n.keogh_ec && !n.improved && !n.tighten && !n.any());
+    }
+
+    #[test]
+    fn improved_alone_needs_data_envelopes() {
+        // the second pass projects the query onto the *candidate's*
+        // envelope, so it depends on the data-stream envelopes even when
+        // the EC stage itself is off
+        let p = CascadePolicy { improved: true, ..CascadePolicy::none() };
+        assert!(p.needs_data_envelopes() && p.any() && !p.needs_query_envelopes());
     }
 }

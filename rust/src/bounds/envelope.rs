@@ -7,6 +7,22 @@
 /// `lower` (resized to `s.len()`). Lemire 2009, "Faster retrieval with a
 /// two-pass dynamic-time-warping lower bound".
 pub fn envelopes_into(s: &[f64], w: usize, upper: &mut Vec<f64>, lower: &mut Vec<f64>) {
+    let mut maxq = std::collections::VecDeque::new();
+    let mut minq = std::collections::VecDeque::new();
+    envelopes_into_with(s, w, upper, lower, &mut maxq, &mut minq);
+}
+
+/// [`envelopes_into`] with caller-owned deque scratch, so per-candidate
+/// hot paths (LB_Improved's second pass) stay allocation-free. Bitwise
+/// identical to [`envelopes_into`]; the deques are cleared on entry.
+pub fn envelopes_into_with(
+    s: &[f64],
+    w: usize,
+    upper: &mut Vec<f64>,
+    lower: &mut Vec<f64>,
+    maxq: &mut std::collections::VecDeque<usize>,
+    minq: &mut std::collections::VecDeque<usize>,
+) {
     let n = s.len();
     upper.clear();
     upper.resize(n, 0.0);
@@ -16,8 +32,8 @@ pub fn envelopes_into(s: &[f64], w: usize, upper: &mut Vec<f64>, lower: &mut Vec
         return;
     }
     // Monotonic deques of indices: front is the current max (resp. min).
-    let mut maxq: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
-    let mut minq: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+    maxq.clear();
+    minq.clear();
     for i in 0..n + w {
         if i < n {
             while maxq.back().is_some_and(|&b| s[b] <= s[i]) {
@@ -130,5 +146,68 @@ mod tests {
     fn empty_series() {
         let (u, l) = envelopes(&[], 3);
         assert!(u.is_empty() && l.is_empty());
+    }
+
+    #[test]
+    fn scratch_reuse_is_bitwise_identical() {
+        let mut rnd = xorshift(11);
+        let mut u2 = Vec::new();
+        let mut l2 = Vec::new();
+        let mut maxq = std::collections::VecDeque::new();
+        let mut minq = std::collections::VecDeque::new();
+        // reuse the same buffers across calls of varying size/window so
+        // stale deque state would be caught
+        for n in [1usize, 5, 33, 64, 7] {
+            let s: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            for w in [0usize, 1, n / 2, n + 3] {
+                let (u, l) = envelopes(&s, w);
+                envelopes_into_with(&s, w, &mut u2, &mut l2, &mut maxq, &mut minq);
+                assert_eq!(u, u2, "upper n={n} w={w}");
+                assert_eq!(l, l2, "lower n={n} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_point_series_every_window() {
+        for w in [0usize, 1, 2, 100] {
+            let (u, l) = envelopes(&[2.5], w);
+            assert_eq!(u, vec![2.5], "w={w}");
+            assert_eq!(l, vec![2.5], "w={w}");
+        }
+    }
+
+    #[test]
+    fn window_at_least_len_is_global_min_max() {
+        let mut rnd = xorshift(12);
+        let s: Vec<f64> = (0..23).map(|_| rnd()).collect();
+        let gmax = s.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let gmin = s.iter().copied().fold(f64::INFINITY, f64::min);
+        for w in [s.len() - 1, s.len(), s.len() + 1, 10 * s.len()] {
+            let (u, l) = envelopes(&s, w);
+            assert!(u.iter().all(|&x| x == gmax), "w={w}");
+            assert!(l.iter().all(|&x| x == gmin), "w={w}");
+        }
+    }
+
+    /// Clamp `x` into `[lo, hi]` — the LB_Improved projection step.
+    fn project(x: f64, lo: f64, hi: f64) -> f64 {
+        x.min(hi).max(lo)
+    }
+
+    #[test]
+    fn projection_onto_own_envelope_is_identity() {
+        // L[i] <= s[i] <= U[i], so projecting a series onto its own
+        // envelope must return the series unchanged — the degenerate case
+        // of LB_Improved's second pass (h == c when q == c).
+        let mut rnd = xorshift(13);
+        for n in [1usize, 2, 17, 60] {
+            let s: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            for w in [0usize, 1, n / 2, n] {
+                let (u, l) = envelopes(&s, w);
+                let h: Vec<f64> = (0..n).map(|i| project(s[i], l[i], u[i])).collect();
+                assert_eq!(h, s, "n={n} w={w}");
+            }
+        }
     }
 }

@@ -1,0 +1,334 @@
+//! LB_Improved — Lemire's two-pass lower bound (arxiv 0807.1734, refined
+//! in 0811.3301). After a first LB_Keogh pass, project the outside series
+//! onto the envelope it was compared against (`h[i] = clamp(x[i], L[i],
+//! U[i])`), build the envelope of the projection `h`, and run a second
+//! Keogh pass with roles swapped. The two passes *add*: for every warping
+//! path pair `(i, j)` with `|i - j| <= w`,
+//!
+//! ```text
+//! (x_i - y_j)^2 >= (x_i - h_i)^2 + (h_i - y_j)^2
+//! ```
+//!
+//! because `h_i` is the envelope boundary nearest `x_i` and `y_j` lies
+//! inside the envelope — so `h_i` sits between `x_i` and `y_j`. The first
+//! term sums to LB_Keogh; the second is at least the penalty of `y_j`
+//! against the window-`w` envelope of `h` (since `h_i` is inside that
+//! envelope at `j`). Hence `LB_Keogh + tail <= DTW_w`, and the tail alone
+//! is admissible too.
+//!
+//! The tail's penalties are indexed by the *other* series' positions, not
+//! the query rows the kernel abandons on, so they deliberately do **not**
+//! feed the `cb` threshold-tightening tail (doing so would be unsound —
+//! see `bounds/README.md`).
+
+use std::collections::VecDeque;
+
+use crate::bounds::envelope::envelopes_into_with;
+use crate::distances::cost::sqed;
+use crate::norm::znorm::znorm_point;
+
+/// Reusable scratch for the second pass: the projection `h`, its
+/// envelopes, and the monotonic deques that build them. Lives in
+/// `QueryContext` so the per-candidate hot path stays allocation-free.
+#[derive(Debug, Clone, Default)]
+pub struct ImprovedScratch {
+    h: Vec<f64>,
+    uh: Vec<f64>,
+    lh: Vec<f64>,
+    maxq: VecDeque<usize>,
+    minq: VecDeque<usize>,
+}
+
+impl ImprovedScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Envelope `h` (already filled) and sum the second-pass penalties of
+    /// the pre-normalised series `other` against it, in natural order,
+    /// abandoning once the partial sum exceeds `budget` (a partial sum is
+    /// still a valid under-estimate, so callers may use it freely).
+    fn finish(&mut self, other: &[f64], w: usize, budget: f64) -> f64 {
+        envelopes_into_with(&self.h, w, &mut self.uh, &mut self.lh, &mut self.maxq, &mut self.minq);
+        let mut tail = 0.0;
+        for (j, &x) in other.iter().enumerate() {
+            let d = if x > self.uh[j] {
+                sqed(x, self.uh[j])
+            } else if x < self.lh[j] {
+                sqed(x, self.lh[j])
+            } else {
+                0.0
+            };
+            tail += d;
+            if tail > budget {
+                return tail;
+            }
+        }
+        tail
+    }
+
+    /// [`ImprovedScratch::finish`] over a **raw** series, z-normalised on
+    /// the fly with `(mean, std)`. `znorm_point` per element is
+    /// IEEE-identical to reading a pre-normalised buffer, so this returns
+    /// the same bits as `finish` on the normalised copy.
+    fn finish_raw(&mut self, other: &[f64], mean: f64, std: f64, w: usize, budget: f64) -> f64 {
+        envelopes_into_with(&self.h, w, &mut self.uh, &mut self.lh, &mut self.maxq, &mut self.minq);
+        let mut tail = 0.0;
+        for (j, &raw) in other.iter().enumerate() {
+            let x = znorm_point(raw, mean, std);
+            let d = if x > self.uh[j] {
+                sqed(x, self.uh[j])
+            } else if x < self.lh[j] {
+                sqed(x, self.lh[j])
+            } else {
+                0.0
+            };
+            tail += d;
+            if tail > budget {
+                return tail;
+            }
+        }
+        tail
+    }
+
+    /// Fill `h` = projection of the z-normalised query onto the
+    /// candidate's envelope (raw data-stream envelopes `du`/`dl`,
+    /// z-normalised on the fly with the window's stats — same lazy
+    /// lower-boundary evaluation as `lb_keogh_ec`).
+    fn project_ec(&mut self, q: &[f64], du: &[f64], dl: &[f64], mean: f64, std: f64) {
+        debug_assert_eq!(du.len(), q.len());
+        debug_assert_eq!(dl.len(), q.len());
+        self.h.clear();
+        self.h.extend(q.iter().zip(du.iter().zip(dl)).map(|(&x, (&ur, &lr))| {
+            let uz = znorm_point(ur, mean, std);
+            if x > uz {
+                uz
+            } else {
+                let lz = znorm_point(lr, mean, std);
+                if x < lz {
+                    lz
+                } else {
+                    x
+                }
+            }
+        }));
+    }
+}
+
+/// EC-side LB_Improved tail over a **pre-normalised** candidate `zc`:
+/// project `q` onto the candidate's (z-normalised) envelope and sum the
+/// second-pass penalties of `zc` against the projection's envelope.
+/// Returns only the tail — the caller adds it onto its first-pass EC sum
+/// (`lb_ec + tail <= DTW_w(q, zc)`; the tail alone is admissible when the
+/// EC stage is disabled). `budget` early-abandons the tail sum.
+#[allow(clippy::too_many_arguments)]
+pub fn lb_improved_tail_ec(
+    scratch: &mut ImprovedScratch,
+    q: &[f64],
+    du: &[f64],
+    dl: &[f64],
+    mean: f64,
+    std: f64,
+    zc: &[f64],
+    w: usize,
+    budget: f64,
+) -> f64 {
+    debug_assert_eq!(zc.len(), q.len());
+    scratch.project_ec(q, du, dl, mean, std);
+    scratch.finish(zc, w, budget)
+}
+
+/// [`lb_improved_tail_ec`] over the **raw** candidate window — the batch
+/// lanes call this before any z-norm buffer exists. Bit-identical to the
+/// pre-normalised variant on the same window.
+#[allow(clippy::too_many_arguments)]
+pub fn lb_improved_tail_ec_raw(
+    scratch: &mut ImprovedScratch,
+    q: &[f64],
+    du: &[f64],
+    dl: &[f64],
+    mean: f64,
+    std: f64,
+    c: &[f64],
+    w: usize,
+    budget: f64,
+) -> f64 {
+    debug_assert_eq!(c.len(), q.len());
+    scratch.project_ec(q, du, dl, mean, std);
+    scratch.finish_raw(c, mean, std, w, budget)
+}
+
+/// EQ-side LB_Improved tail (NN1's direction, both series already
+/// normalised): project the candidate `c` onto the query's envelopes
+/// `u`/`l` (natural order) and sum the penalties of `q` against the
+/// projection's envelope.
+pub fn lb_improved_tail_eq(
+    scratch: &mut ImprovedScratch,
+    c: &[f64],
+    u: &[f64],
+    l: &[f64],
+    q: &[f64],
+    w: usize,
+    budget: f64,
+) -> f64 {
+    debug_assert_eq!(u.len(), c.len());
+    debug_assert_eq!(l.len(), c.len());
+    debug_assert_eq!(q.len(), c.len());
+    scratch.h.clear();
+    scratch.h.extend(
+        c.iter()
+            .zip(u.iter().zip(l))
+            .map(|(&x, (&ui, &li))| if x > ui { ui } else if x < li { li } else { x }),
+    );
+    scratch.finish(q, w, budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::envelope::envelopes;
+    use crate::bounds::lb_keogh::{lb_keogh_ec, reorder, sort_order};
+    use crate::distances::dtw::dtw_oracle;
+    use crate::norm::znorm::znorm;
+
+    fn xorshift(seed: u64) -> impl FnMut() -> f64 {
+        let mut x = seed;
+        move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 4.0 - 2.0
+        }
+    }
+
+    fn stats(c: &[f64]) -> (f64, f64) {
+        let n = c.len() as f64;
+        let mean = c.iter().sum::<f64>() / n;
+        let std = (c.iter().map(|x| x * x).sum::<f64>() / n - mean * mean).max(0.0).sqrt();
+        (mean, std)
+    }
+
+    #[test]
+    fn ec_plus_tail_is_lower_bound_on_windowed_dtw() {
+        let mut scratch = ImprovedScratch::new();
+        for seed in 1..=6u64 {
+            let mut rnd = xorshift(seed + 500);
+            let n = 32;
+            let q = znorm(&(0..n).map(|_| rnd()).collect::<Vec<_>>());
+            let c: Vec<f64> = (0..n).map(|_| rnd() * 2.0 + 1.0).collect();
+            let (mean, std) = stats(&c);
+            let zc: Vec<f64> = c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+            for w in [0usize, 1, 4, 10] {
+                let (du, dl) = envelopes(&c, w);
+                let order = sort_order(&q);
+                let qo = reorder(&q, &order);
+                let mut cb = vec![0.0; n];
+                let ec = lb_keogh_ec(&order, &qo, &du, &dl, mean, std, f64::INFINITY, &mut cb);
+                let tail = lb_improved_tail_ec(
+                    &mut scratch,
+                    &q,
+                    &du,
+                    &dl,
+                    mean,
+                    std,
+                    &zc,
+                    w,
+                    f64::INFINITY,
+                );
+                assert!(tail >= 0.0);
+                let d = dtw_oracle(&q, &zc, Some(w));
+                assert!(ec + tail <= d + 1e-9, "seed={seed} w={w}: {} > {d}", ec + tail);
+            }
+        }
+    }
+
+    #[test]
+    fn raw_variant_is_bit_identical_to_pre_normalised() {
+        let mut s1 = ImprovedScratch::new();
+        let mut s2 = ImprovedScratch::new();
+        for seed in 1..=4u64 {
+            let mut rnd = xorshift(seed + 900);
+            let n = 24;
+            let q = znorm(&(0..n).map(|_| rnd()).collect::<Vec<_>>());
+            let c: Vec<f64> = (0..n).map(|_| rnd() * 3.0 - 1.0).collect();
+            let (mean, std) = stats(&c);
+            let zc: Vec<f64> = c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+            let (du, dl) = envelopes(&c, 3);
+            for budget in [f64::INFINITY, 1.0, 1e-4] {
+                let a = lb_improved_tail_ec(&mut s1, &q, &du, &dl, mean, std, &zc, 3, budget);
+                let b = lb_improved_tail_ec_raw(&mut s2, &q, &du, &dl, mean, std, &c, 3, budget);
+                assert_eq!(a.to_bits(), b.to_bits(), "seed={seed} budget={budget}");
+            }
+        }
+    }
+
+    #[test]
+    fn eq_tail_is_lower_bound_for_whole_series() {
+        let mut scratch = ImprovedScratch::new();
+        for seed in 1..=5u64 {
+            let mut rnd = xorshift(seed + 77);
+            let n = 28;
+            let q = znorm(&(0..n).map(|_| rnd()).collect::<Vec<_>>());
+            let c = znorm(&(0..n).map(|_| rnd()).collect::<Vec<_>>());
+            for w in [1usize, 5, 9] {
+                let (u, l) = envelopes(&q, w);
+                // first pass: candidate points vs the query envelope
+                let mut first = 0.0;
+                for i in 0..n {
+                    let x = c[i];
+                    first += if x > u[i] {
+                        sqed(x, u[i])
+                    } else if x < l[i] {
+                        sqed(x, l[i])
+                    } else {
+                        0.0
+                    };
+                }
+                let tail = lb_improved_tail_eq(&mut scratch, &c, &u, &l, &q, w, f64::INFINITY);
+                let d = dtw_oracle(&q, &c, Some(w));
+                assert!(first + tail <= d + 1e-9, "seed={seed} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn identical_series_give_zero_tail() {
+        // q projected onto its own envelope is q itself, so the second
+        // pass compares q against env(q): zero everywhere
+        let mut scratch = ImprovedScratch::new();
+        let mut rnd = xorshift(321);
+        let q = znorm(&(0..20).map(|_| rnd()).collect::<Vec<_>>());
+        let (u, l) = envelopes(&q, 3);
+        let tail = lb_improved_tail_eq(&mut scratch, &q, &u, &l, &q, 3, f64::INFINITY);
+        assert_eq!(tail, 0.0);
+    }
+
+    #[test]
+    fn flat_window_yields_zero_tail() {
+        // std below STD_EPS: every point normalises to 0, the projection
+        // collapses to the zero series and the tail must be 0, not NaN
+        let mut scratch = ImprovedScratch::new();
+        let q = vec![0.5, -0.5, 0.25, -0.25];
+        let c = vec![7.0; 4];
+        let (du, dl) = envelopes(&c, 1);
+        let tail =
+            lb_improved_tail_ec_raw(&mut scratch, &q, &du, &dl, 7.0, 0.0, &c, 1, f64::INFINITY);
+        assert_eq!(tail, 0.0);
+    }
+
+    #[test]
+    fn abandon_returns_partial_overshoot() {
+        let mut scratch = ImprovedScratch::new();
+        let q = vec![0.0; 16];
+        let c: Vec<f64> = (0..16).map(|i| if i % 2 == 0 { 3.0 } else { -3.0 }).collect();
+        let (mean, std) = stats(&c);
+        let (du, dl) = envelopes(&c, 2);
+        let zc: Vec<f64> = c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+        let full =
+            lb_improved_tail_ec(&mut scratch, &q, &du, &dl, mean, std, &zc, 2, f64::INFINITY);
+        assert!(full > 1.0);
+        let part = lb_improved_tail_ec(&mut scratch, &q, &du, &dl, mean, std, &zc, 2, 1.0);
+        assert!(part > 1.0, "abandon must still certify the budget overshoot");
+        assert!(part <= full);
+    }
+}

@@ -2,14 +2,17 @@
 //!
 //! The UCR suite skips most DTW calls entirely with a cascade of ever more
 //! expensive, ever tighter lower bounds: LB_KimFL (O(1)) → LB_Keogh on the
-//! query envelope (O(n), abandonable) → LB_Keogh on the data envelope.
+//! query envelope (O(n), abandonable) → LB_Keogh on the data envelope →
+//! LB_Improved's second pass (Lemire's two-pass bound) on what survives.
 //! Only survivors reach the DTW core — which is why the paper reports the
 //! per-dataset proportion each stage prunes (Fig. 5's insets) and why
 //! showing EAPrunedDTW makes the cascade *dispensable* is a headline
-//! result.
+//! result. See `README.md` in this directory for the cascade order and
+//! each stage's admissibility argument.
 
 pub mod batch;
 pub mod cascade;
 pub mod envelope;
+pub mod lb_improved;
 pub mod lb_keogh;
 pub mod lb_kim;

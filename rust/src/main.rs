@@ -156,14 +156,15 @@ fn cmd_search(args: &Args) -> Result<()> {
     };
     let secs = t.elapsed_secs();
     println!("best match: pos={} dist={:.6} in {:.3}s", m.pos, m.dist, secs);
-    let (kim, eq, ec, xla, dtw) = counters.prune_fractions();
+    let (kim, eq, ec, imp, xla, dtw) = counters.prune_fractions();
     println!(
-        "candidates={} | pruned: kim {:.1}% keoghEQ {:.1}% keoghEC {:.1}% xla {:.1}% | \
-         dtw reached {:.1}% ({} calls, {} abandoned)",
+        "candidates={} | pruned: kim {:.1}% keoghEQ {:.1}% keoghEC {:.1}% keoghIMP {:.1}% \
+         xla {:.1}% | dtw reached {:.1}% ({} calls, {} abandoned)",
         counters.candidates,
         kim * 100.0,
         eq * 100.0,
         ec * 100.0,
+        imp * 100.0,
         xla * 100.0,
         dtw * 100.0,
         counters.dtw_calls,
@@ -347,7 +348,7 @@ fn cmd_bench_suite(args: &Args) -> Result<()> {
                     exp.ratio,
                     s.name(),
                     r.seconds,
-                    r.counters.prune_fractions().4 * 100.0
+                    r.counters.prune_fractions().5 * 100.0
                 );
                 results.push(r);
             }

@@ -19,6 +19,10 @@ pub struct Counters {
     pub lb_keogh_eq_prunes: u64,
     /// pruned by LB_Keogh (data envelope)
     pub lb_keogh_ec_prunes: u64,
+    /// pruned by LB_Improved's second pass (Lemire's two-pass bound): the
+    /// candidate survived LB_Keogh but the first-pass sum plus the
+    /// role-swapped second pass exceeded the threshold
+    pub lb_improved_prunes: u64,
     /// pruned by the batched XLA prefilter
     pub xla_prunes: u64,
     /// DTW core invocations (cascade survivors)
@@ -129,7 +133,7 @@ impl Counters {
 
     /// Scalar counter fields, in declaration order — the fixed prefix of
     /// the slot mapping below.
-    pub const SCALAR_SLOTS: usize = 22;
+    pub const SCALAR_SLOTS: usize = 23;
 
     /// Total number of slots in the canonical flat form: every scalar
     /// field plus the per-metric call/abandon tallies.
@@ -145,6 +149,7 @@ impl Counters {
         "lb_kim_prunes",
         "lb_keogh_eq_prunes",
         "lb_keogh_ec_prunes",
+        "lb_improved_prunes",
         "xla_prunes",
         "dtw_calls",
         "dtw_abandons",
@@ -185,24 +190,25 @@ impl Counters {
         s[1] = self.lb_kim_prunes;
         s[2] = self.lb_keogh_eq_prunes;
         s[3] = self.lb_keogh_ec_prunes;
-        s[4] = self.xla_prunes;
-        s[5] = self.dtw_calls;
-        s[6] = self.dtw_abandons;
-        s[7] = self.dtw_completions;
-        s[8] = self.ub_updates;
-        s[9] = self.dp_cells;
-        s[10] = self.index_hits;
-        s[11] = self.topk_updates;
-        s[12] = self.index_ec_prunes;
-        s[13] = self.strip_batches;
-        s[14] = self.batch_lb_prunes;
-        s[15] = self.lb_order_saved_dtw_calls;
-        s[16] = self.cohort_strips;
-        s[17] = self.cohort_retired_queries;
-        s[18] = self.strip_stat_loads_saved;
-        s[19] = self.strip_sample_loads_saved;
-        s[20] = self.kernel_workspace_regrows;
-        s[21] = self.cost_model_rebuilds;
+        s[4] = self.lb_improved_prunes;
+        s[5] = self.xla_prunes;
+        s[6] = self.dtw_calls;
+        s[7] = self.dtw_abandons;
+        s[8] = self.dtw_completions;
+        s[9] = self.ub_updates;
+        s[10] = self.dp_cells;
+        s[11] = self.index_hits;
+        s[12] = self.topk_updates;
+        s[13] = self.index_ec_prunes;
+        s[14] = self.strip_batches;
+        s[15] = self.batch_lb_prunes;
+        s[16] = self.lb_order_saved_dtw_calls;
+        s[17] = self.cohort_strips;
+        s[18] = self.cohort_retired_queries;
+        s[19] = self.strip_stat_loads_saved;
+        s[20] = self.strip_sample_loads_saved;
+        s[21] = self.kernel_workspace_regrows;
+        s[22] = self.cost_model_rebuilds;
         for i in 0..Metric::COUNT {
             s[Self::SCALAR_SLOTS + i] = self.metric_calls[i];
             s[Self::SCALAR_SLOTS + Metric::COUNT + i] = self.metric_abandons[i];
@@ -218,24 +224,25 @@ impl Counters {
             lb_kim_prunes: s[1],
             lb_keogh_eq_prunes: s[2],
             lb_keogh_ec_prunes: s[3],
-            xla_prunes: s[4],
-            dtw_calls: s[5],
-            dtw_abandons: s[6],
-            dtw_completions: s[7],
-            ub_updates: s[8],
-            dp_cells: s[9],
-            index_hits: s[10],
-            topk_updates: s[11],
-            index_ec_prunes: s[12],
-            strip_batches: s[13],
-            batch_lb_prunes: s[14],
-            lb_order_saved_dtw_calls: s[15],
-            cohort_strips: s[16],
-            cohort_retired_queries: s[17],
-            strip_stat_loads_saved: s[18],
-            strip_sample_loads_saved: s[19],
-            kernel_workspace_regrows: s[20],
-            cost_model_rebuilds: s[21],
+            lb_improved_prunes: s[4],
+            xla_prunes: s[5],
+            dtw_calls: s[6],
+            dtw_abandons: s[7],
+            dtw_completions: s[8],
+            ub_updates: s[9],
+            dp_cells: s[10],
+            index_hits: s[11],
+            topk_updates: s[12],
+            index_ec_prunes: s[13],
+            strip_batches: s[14],
+            batch_lb_prunes: s[15],
+            lb_order_saved_dtw_calls: s[16],
+            cohort_strips: s[17],
+            cohort_retired_queries: s[18],
+            strip_stat_loads_saved: s[19],
+            strip_sample_loads_saved: s[20],
+            kernel_workspace_regrows: s[21],
+            cost_model_rebuilds: s[22],
             ..Default::default()
         };
         for i in 0..Metric::COUNT {
@@ -246,14 +253,15 @@ impl Counters {
     }
 
     /// Proportion of candidates each stage removed, as fractions of the
-    /// total: (kim, keogh_eq, keogh_ec, xla, dtw_reached) — the Fig. 5
-    /// inset row.
-    pub fn prune_fractions(&self) -> (f64, f64, f64, f64, f64) {
+    /// total: (kim, keogh_eq, keogh_ec, improved, xla, dtw_reached) — the
+    /// Fig. 5 inset row.
+    pub fn prune_fractions(&self) -> (f64, f64, f64, f64, f64, f64) {
         let t = self.candidates.max(1) as f64;
         (
             self.lb_kim_prunes as f64 / t,
             self.lb_keogh_eq_prunes as f64 / t,
             self.lb_keogh_ec_prunes as f64 / t,
+            self.lb_improved_prunes as f64 / t,
             self.xla_prunes as f64 / t,
             self.dtw_calls as f64 / t,
         )
@@ -265,6 +273,7 @@ impl Counters {
         self.lb_kim_prunes += o.lb_kim_prunes;
         self.lb_keogh_eq_prunes += o.lb_keogh_eq_prunes;
         self.lb_keogh_ec_prunes += o.lb_keogh_ec_prunes;
+        self.lb_improved_prunes += o.lb_improved_prunes;
         self.xla_prunes += o.xla_prunes;
         self.dtw_calls += o.dtw_calls;
         self.dtw_abandons += o.dtw_abandons;
@@ -336,7 +345,10 @@ impl Counters {
         if self.strip_batches == 0 {
             return "strip scan not used (scalar path)".to_string();
         }
-        let lb_total = self.lb_kim_prunes + self.lb_keogh_eq_prunes + self.lb_keogh_ec_prunes;
+        let lb_total = self.lb_kim_prunes
+            + self.lb_keogh_eq_prunes
+            + self.lb_keogh_ec_prunes
+            + self.lb_improved_prunes;
         let batch_share = if lb_total > 0 {
             100.0 * self.batch_lb_prunes as f64 / lb_total as f64
         } else {
@@ -411,14 +423,16 @@ mod tests {
         let c = Counters {
             candidates: 100,
             lb_kim_prunes: 50,
-            lb_keogh_eq_prunes: 30,
+            lb_keogh_eq_prunes: 25,
             lb_keogh_ec_prunes: 10,
+            lb_improved_prunes: 5,
             xla_prunes: 0,
             dtw_calls: 10,
             ..Default::default()
         };
-        let (a, b, d, x, e) = c.prune_fractions();
-        assert!((a + b + d + x + e - 1.0).abs() < 1e-12);
+        let (a, b, d, im, x, e) = c.prune_fractions();
+        assert!((im - 0.05).abs() < 1e-12);
+        assert!((a + b + d + im + x + e - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -550,6 +564,7 @@ mod tests {
             &mut c.lb_kim_prunes,
             &mut c.lb_keogh_eq_prunes,
             &mut c.lb_keogh_ec_prunes,
+            &mut c.lb_improved_prunes,
             &mut c.xla_prunes,
             &mut c.dtw_calls,
             &mut c.dtw_abandons,

@@ -47,6 +47,9 @@ pub enum Stage {
     BoundKeoghEq,
     /// The per-survivor LB_Keogh data-envelope bound.
     BoundKeoghEc,
+    /// LB_Improved's role-swapped second pass over LB_Keogh survivors
+    /// (per-candidate on the scalar path, per-lane on a strip).
+    BoundImproved,
     /// One kernel evaluation of a cascade survivor.
     KernelEval,
     /// Collecting and merging per-shard results in the router.
@@ -54,7 +57,7 @@ pub enum Stage {
 }
 
 impl Stage {
-    pub const COUNT: usize = 7;
+    pub const COUNT: usize = 8;
     /// Snapshot-schema names, index-aligned with [`Stage::index`].
     pub const NAMES: [&'static str; Self::COUNT] = [
         "queue_wait",
@@ -62,6 +65,7 @@ impl Stage {
         "bound_kim",
         "bound_keogh_eq",
         "bound_keogh_ec",
+        "bound_improved",
         "kernel_eval",
         "fan_in",
     ];
@@ -71,6 +75,7 @@ impl Stage {
         Stage::BoundKim,
         Stage::BoundKeoghEq,
         Stage::BoundKeoghEc,
+        Stage::BoundImproved,
         Stage::KernelEval,
         Stage::FanIn,
     ];
@@ -83,8 +88,9 @@ impl Stage {
             Stage::BoundKim => 2,
             Stage::BoundKeoghEq => 3,
             Stage::BoundKeoghEc => 4,
-            Stage::KernelEval => 5,
-            Stage::FanIn => 6,
+            Stage::BoundImproved => 5,
+            Stage::KernelEval => 6,
+            Stage::FanIn => 7,
         }
     }
 

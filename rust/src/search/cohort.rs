@@ -41,7 +41,8 @@
 use std::sync::Arc;
 
 use crate::bounds::batch::{
-    batch_lb_kim_pre, kim_loads_per_lane, lb_keogh_eq_unordered, CohortScratch, DEFAULT_STRIP,
+    batch_lb_kim_pre, kim_loads_per_lane, lb_keogh_ec_unordered, lb_keogh_eq_unordered,
+    CohortScratch, DEFAULT_STRIP,
 };
 use crate::bounds::cascade::CascadePolicy;
 use crate::coordinator::state::SharedUb;
@@ -305,6 +306,50 @@ pub fn scan_cohort_topk_obs(
                     }
                 }
                 obs.stage_since(Stage::BoundKeoghEq, t0);
+            }
+            if cascade.improved {
+                let denv = denv.expect("data envelopes required");
+                let t0 = obs.now();
+                for i in 0..len {
+                    if !lane.alive[i] {
+                        continue;
+                    }
+                    let pos = strip_start + i;
+                    let (du, dl) = denv.strip(pos, n);
+                    // same structure as the single-query strip scan: an
+                    // unordered EC first pass (attributed to the EC stage),
+                    // then the projection tail on top of it
+                    let mut base = 0.0;
+                    if cascade.keogh_ec {
+                        let ec = lb_keogh_ec_unordered(&m.ctx.q, du, dl, mean[i], std[i]);
+                        if ec * (1.0 - 1e-9) > bsf_strip {
+                            lane.alive[i] = false;
+                            m.counters.lb_keogh_ec_prunes += 1;
+                            m.counters.batch_lb_prunes += 1;
+                            continue;
+                        }
+                        base = ec;
+                    }
+                    let tail = m.ctx.improved_tail_raw(
+                        du,
+                        dl,
+                        mean[i],
+                        std[i],
+                        &reference[pos..pos + n],
+                        bsf_strip - base,
+                    );
+                    let lb = base + tail;
+                    if lb * (1.0 - 1e-9) > bsf_strip {
+                        lane.alive[i] = false;
+                        m.counters.lb_improved_prunes += 1;
+                        m.counters.batch_lb_prunes += 1;
+                        continue;
+                    }
+                    if lb > lane.lb[i] {
+                        lane.lb[i] = lb;
+                    }
+                }
+                obs.stage_since(Stage::BoundImproved, t0);
             }
             lane.order_survivors();
             obs.record_dist(DistKind::StripSurvivors, lane.order.len() as u64);

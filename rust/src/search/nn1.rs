@@ -8,6 +8,7 @@
 //! immediately. NN1 is the `k = 1` case.
 
 use crate::bounds::envelope::envelopes;
+use crate::bounds::lb_improved::{lb_improved_tail_eq, ImprovedScratch};
 use crate::bounds::lb_keogh::{reorder, sort_order};
 use crate::distances::cache::CostModelCache;
 use crate::distances::cost::sqed;
@@ -75,11 +76,13 @@ pub fn nn1_topk_metric(
         return Vec::new();
     }
     let w = metric.effective_window(query.len(), w);
-    let idx: Vec<(usize, f64)> = if metric.uses_envelopes() {
-        let (u, l) = envelopes(query, w);
+    // natural-order query envelopes outlive the ordering pass: the
+    // LB_Improved second pass projects each surviving candidate onto them
+    let env = metric.uses_envelopes().then(|| envelopes(query, w));
+    let idx: Vec<(usize, f64)> = if let Some((u, l)) = &env {
         let order = sort_order(query);
-        let uo = reorder(&u, &order);
-        let lo = reorder(&l, &order);
+        let uo = reorder(u, &order);
+        let lo = reorder(l, &order);
         // best-first: ascending lower bound
         let mut idx: Vec<(usize, f64)> = candidates
             .iter()
@@ -100,12 +103,26 @@ pub fn nn1_topk_metric(
     let mut cache = CostModelCache::new();
     cache.prepare(metric, query);
     let mut topk = TopK::new(k);
+    let improved = env.is_some() && suite.cascade().improved;
+    let mut iscratch = ImprovedScratch::new();
     for &(i, lb) in &idx {
         counters.candidates += 1;
         let ub = topk.threshold();
         if lb > ub {
             counters.lb_keogh_eq_prunes += 1;
             continue;
+        }
+        if improved {
+            // Lemire's second pass: project the candidate onto the query
+            // envelope and charge the projection's own Keogh penalty on
+            // top of the first pass (admissible; can prune where plain
+            // LB_Keogh is loose)
+            let (u, l) = env.as_ref().expect("envelopes built");
+            let tail = lb_improved_tail_eq(&mut iscratch, &candidates[i], u, l, query, w, ub - lb);
+            if lb + tail > ub {
+                counters.lb_improved_prunes += 1;
+                continue;
+            }
         }
         counters.record_metric_call(metric);
         // exact abandon attribution from the unified kernel: a candidate
@@ -205,6 +222,26 @@ mod tests {
             c.lb_keogh_eq_prunes + c.dtw_abandons > 50,
             "expected heavy pruning: {c:?}"
         );
+    }
+
+    #[test]
+    fn improved_stage_conserves_counters_and_results() {
+        let q = znorm(&mk_candidates(1, 96, 11)[0]);
+        let cands = mk_candidates(60, 96, 12);
+        let mut c = Counters::new();
+        let got = nn1_topk(&q, &cands, 9, 2, Suite::UcrMon, &mut c);
+        // every candidate is accounted to exactly one fate
+        assert_eq!(c.candidates, c.lb_keogh_eq_prunes + c.lb_improved_prunes + c.dtw_calls);
+        // and the pruned search agrees with the bound-free suite (same
+        // DTW core, no lower bounds) on the answer set
+        let mut c2 = Counters::new();
+        let want = nn1_topk(&q, &cands, 9, 2, Suite::UcrMonNoLb, &mut c2);
+        assert_eq!(c2.lb_improved_prunes, 0);
+        assert_eq!(got.len(), want.len());
+        for (g, x) in got.iter().zip(&want) {
+            assert_eq!(g.index, x.index);
+            assert_eq!(g.dist.to_bits(), x.dist.to_bits());
+        }
     }
 
     #[test]

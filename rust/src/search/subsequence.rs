@@ -19,10 +19,11 @@
 use anyhow::Result;
 
 use crate::bounds::batch::{
-    batch_lb_kim_into, lb_keogh_eq_unordered, StripScratch, DEFAULT_STRIP,
+    batch_lb_kim_into, lb_keogh_ec_unordered, lb_keogh_eq_unordered, StripScratch, DEFAULT_STRIP,
 };
 use crate::bounds::cascade::CascadePolicy;
 use crate::bounds::envelope::envelopes_into;
+use crate::bounds::lb_improved::{lb_improved_tail_ec, lb_improved_tail_ec_raw, ImprovedScratch};
 use crate::bounds::lb_keogh::{
     cumulate_bound, lb_keogh_ec, lb_keogh_eq, lb_keogh_eq_pre, reorder, sort_order,
 };
@@ -121,6 +122,10 @@ pub struct QueryContext {
     ws: KernelWorkspace,
     /// SoA scratch lanes for the strip-mined scan (empty until first use)
     strip: StripScratch,
+    /// projection + envelope scratch for LB_Improved's second pass (the
+    /// per-candidate hot path builds one envelope per survivor, so the
+    /// buffers and deques must persist across candidates)
+    improved: ImprovedScratch,
     /// per-query cost-model tables (WDTW weights, ERP accumulators),
     /// prepared once at build time so per-candidate kernel dispatch
     /// borrows instead of reallocating
@@ -197,6 +202,7 @@ impl QueryContext {
             zbuf: if pooled { Vec::new() } else { vec![0.0; n] },
             ws: if pooled { KernelWorkspace::default() } else { KernelWorkspace::with_capacity(n) },
             strip: StripScratch::default(),
+            improved: ImprovedScratch::new(),
             cost_cache,
             metric,
         }
@@ -217,6 +223,33 @@ impl QueryContext {
     /// envelope bounds.
     pub(crate) fn envelopes_natural(&self) -> (&[f64], &[f64]) {
         (&self.u, &self.l)
+    }
+
+    /// LB_Improved second-pass tail for one raw candidate window — what
+    /// the batched strip/cohort improved stages call. Routes to
+    /// [`lb_improved_tail_ec_raw`] with the context's persistent
+    /// projection/envelope scratch; returns a partial (still admissible)
+    /// sum as soon as the tail alone exceeds `budget`.
+    pub(crate) fn improved_tail_raw(
+        &mut self,
+        du: &[f64],
+        dl: &[f64],
+        mean: f64,
+        std: f64,
+        window: &[f64],
+        budget: f64,
+    ) -> f64 {
+        lb_improved_tail_ec_raw(
+            &mut self.improved,
+            &self.q,
+            du,
+            dl,
+            mean,
+            std,
+            window,
+            self.w,
+            budget,
+        )
     }
 
     /// Validating constructor: the graceful API boundary for
@@ -495,8 +528,10 @@ pub fn scan_topk_policy_mode_obs(
 /// Per strip: (1) the window statistics of every lane are pulled into SoA
 /// scratch in one pass (a [`BucketStats::strip`] view, or the streaming
 /// recurrence advanced across the strip — both bit-compatible with the
-/// scalar scan); (2) batched LB_Kim and the unordered chunked LB_Keogh EQ
-/// pass filter the whole strip against the strip-entry threshold;
+/// scalar scan); (2) batched LB_Kim, the unordered chunked LB_Keogh EQ
+/// pass, and the batched LB_Improved stage (unordered EC first pass plus
+/// the role-swapped second pass over the shared data envelopes) filter the
+/// whole strip against the strip-entry threshold;
 /// (3) survivors are evaluated in **ascending-lower-bound order**, so the
 /// early winners tighten the top-k threshold before their strip-mates are
 /// scored — measurably cutting full-DTW calls — with a fresh threshold
@@ -619,6 +654,58 @@ fn scan_topk_strips(
             }
             obs.stage_since(Stage::BoundKeoghEq, t0);
         }
+        if cascade.improved {
+            // batched LB_Improved: an unordered EC first pass over the
+            // shared data envelopes, then the role-swapped second pass —
+            // so strips prune what survives EQ without waiting for the
+            // per-survivor sorted passes. Same ε discount as the EQ stage
+            // (the unordered sums add the scalar passes' exact terms in a
+            // different order), so no candidate the scalar cascade keeps
+            // can be dropped; survivors are re-checked exactly anyway.
+            let denv = denv.expect("data envelopes required");
+            let t0 = obs.now();
+            for i in 0..len {
+                if !scratch.alive[i] {
+                    continue;
+                }
+                let pos = strip_start + i;
+                let (du, dl) = denv.strip(pos, n);
+                let mut base = 0.0;
+                if cascade.keogh_ec {
+                    let ec =
+                        lb_keogh_ec_unordered(&ctx.q, du, dl, scratch.mean[i], scratch.std[i]);
+                    if ec * (1.0 - 1e-9) > bsf_strip {
+                        scratch.alive[i] = false;
+                        counters.lb_keogh_ec_prunes += 1;
+                        counters.batch_lb_prunes += 1;
+                        continue;
+                    }
+                    base = ec;
+                }
+                let tail = lb_improved_tail_ec_raw(
+                    &mut ctx.improved,
+                    &ctx.q,
+                    du,
+                    dl,
+                    scratch.mean[i],
+                    scratch.std[i],
+                    &reference[pos..pos + n],
+                    ctx.w,
+                    bsf_strip - base,
+                );
+                let lb = base + tail;
+                if lb * (1.0 - 1e-9) > bsf_strip {
+                    scratch.alive[i] = false;
+                    counters.lb_improved_prunes += 1;
+                    counters.batch_lb_prunes += 1;
+                    continue;
+                }
+                if lb > scratch.lb[i] {
+                    scratch.lb[i] = lb;
+                }
+            }
+            obs.stage_since(Stage::BoundImproved, t0);
+        }
         scratch.order_survivors();
         obs.record_dist(DistKind::StripSurvivors, scratch.order.len() as u64);
         for &i in &scratch.order {
@@ -708,6 +795,33 @@ pub(crate) fn eval_survivor(
             return;
         }
     }
+    if cascade.improved {
+        // same second pass as the scalar loop, reading the already-filled
+        // z-norm buffer instead of re-normalising the raw window — the
+        // per-point values are IEEE-identical either way
+        let denv = denv.expect("data envelopes required");
+        let (du, dl) = denv.strip(pos, n);
+        let t0 = obs.now();
+        let tail = lb_improved_tail_ec(
+            &mut ctx.improved,
+            &ctx.q,
+            du,
+            dl,
+            mean,
+            std,
+            &ctx.zbuf,
+            ctx.w,
+            bsf - lb2,
+        );
+        obs.stage_since(Stage::BoundImproved, t0);
+        if lb2 + tail > bsf {
+            counters.lb_improved_prunes += 1;
+            if lb2 + tail <= bsf_strip {
+                counters.lb_order_saved_dtw_calls += 1;
+            }
+            return;
+        }
+    }
     score_candidate(pos, lb1, lb2, have2, bsf, ctx, suite, cascade, topk, counters, obs);
 }
 
@@ -774,6 +888,32 @@ fn eval_candidate(
             if indexed {
                 counters.index_ec_prunes += 1;
             }
+            return;
+        }
+    }
+    if cascade.improved {
+        // LB_Improved's second pass: project q onto the candidate's
+        // envelope and run a role-swapped Keogh pass, adding onto the
+        // first-pass EC sum (0 if the EC stage is off — the tail alone is
+        // admissible too). The tail's contributions are *not* fed into the
+        // cb tightening arrays: they are indexed by candidate positions,
+        // not the query rows the kernel abandons on.
+        let denv = denv.expect("data envelopes required");
+        let t0 = obs.now();
+        let tail = lb_improved_tail_ec_raw(
+            &mut ctx.improved,
+            &ctx.q,
+            &denv.upper[pos..pos + n],
+            &denv.lower[pos..pos + n],
+            mean,
+            std,
+            window,
+            ctx.w,
+            bsf - lb2,
+        );
+        obs.stage_since(Stage::BoundImproved, t0);
+        if lb2 + tail > bsf {
+            counters.lb_improved_prunes += 1;
             return;
         }
     }
@@ -1184,7 +1324,13 @@ mod tests {
             assert!(c.metric_calls[metric.index()] > 0, "{}", metric.name());
             if !metric.uses_envelopes() {
                 // no envelope bound may fire for non-DTW metrics
-                assert_eq!(c.lb_kim_prunes + c.lb_keogh_eq_prunes + c.lb_keogh_ec_prunes, 0);
+                assert_eq!(
+                    c.lb_kim_prunes
+                        + c.lb_keogh_eq_prunes
+                        + c.lb_keogh_ec_prunes
+                        + c.lb_improved_prunes,
+                    0
+                );
                 assert_eq!(c.dtw_calls, c.candidates, "{}", metric.name());
             }
         }
@@ -1306,6 +1452,47 @@ mod tests {
             cs.dtw_calls
         );
         assert!(ct.batch_lb_prunes > 0, "{ct:?}");
+    }
+
+    #[test]
+    fn improved_stage_toggle_preserves_results_bitwise() {
+        // the acceptance pin in miniature: LB_Improved on (the default)
+        // returns results bit-identical to the pre-improved cascade, in
+        // both scan modes, and only ever removes kernel work
+        let (r, q) = small_workload();
+        let w = window_cells(q.len(), 0.2);
+        let denv = DataEnvelopes::new(&r, w);
+        let total = r.len() - q.len() + 1;
+        for mode in [ScanMode::Scalar, ScanMode::Strip] {
+            let mut run = |cascade: CascadePolicy| {
+                let mut ctx = QueryContext::new(&q, w);
+                let mut topk = TopK::new(4);
+                let mut c = Counters::new();
+                scan_topk_policy_mode(
+                    &r,
+                    0,
+                    total,
+                    &mut ctx,
+                    Some(&denv),
+                    ScanStats::Streaming,
+                    Suite::UcrMon,
+                    cascade,
+                    mode,
+                    &mut topk,
+                    &mut c,
+                );
+                (topk.into_sorted(), c)
+            };
+            let (on, con) = run(CascadePolicy::full());
+            let (off, coff) = run(CascadePolicy { improved: false, ..CascadePolicy::full() });
+            assert_eq!(on.len(), off.len(), "{mode:?}");
+            for (a, b) in on.iter().zip(&off) {
+                assert_eq!(a.pos, b.pos, "{mode:?}");
+                assert_eq!(a.dist.to_bits(), b.dist.to_bits(), "{mode:?}");
+            }
+            assert!(con.dtw_calls <= coff.dtw_calls, "{mode:?}: {con:?} vs {coff:?}");
+            assert_eq!(coff.lb_improved_prunes, 0, "{mode:?}");
+        }
     }
 
     #[test]

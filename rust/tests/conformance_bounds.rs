@@ -1,0 +1,298 @@
+//! Bounds conformance suite: every lower-bound stage the cascade can run
+//! — LB_KimFL, LB_Keogh EQ/EC (sorted and unordered/batched), and
+//! LB_Improved's second pass — is pinned **admissible** (never above the
+//! exact windowed DTW) over random series, lengths and windows, including
+//! the degenerate windows `w = 0`, `w >= len` and `len = 1`. The batched
+//! SoA stages are pinned against their scalar counterparts, and two
+//! planted adversaries pin the whole point of the two-pass bound: a pair
+//! where LB_Keogh is loose but LB_Improved prunes, and a pair where no
+//! stage may prune.
+
+use repro::bounds::batch::{lb_keogh_ec_unordered, lb_keogh_eq_unordered};
+use repro::bounds::envelope::envelopes;
+use repro::bounds::lb_improved::{
+    lb_improved_tail_ec, lb_improved_tail_ec_raw, lb_improved_tail_eq, ImprovedScratch,
+};
+use repro::bounds::lb_keogh::{lb_keogh_ec, lb_keogh_eq, reorder, sort_order};
+use repro::bounds::lb_kim::lb_kim_hierarchy;
+use repro::data::rng::Rng;
+use repro::distances::cost::sqed;
+use repro::distances::dtw::dtw_oracle;
+use repro::metrics::Counters;
+use repro::norm::znorm::{stats, znorm, znorm_point};
+use repro::search::nn1::nn1_topk;
+use repro::search::suite::Suite;
+use repro::util::proptest::{arb_window, run_prop};
+
+/// A z-normalised query against a raw candidate window, with a window
+/// that deliberately hits the degenerate cases (`0`, `>= len`) often.
+#[derive(Debug)]
+struct Case {
+    q: Vec<f64>,
+    c: Vec<f64>,
+    w: usize,
+}
+
+fn arb_case(rng: &mut Rng) -> Case {
+    let n = 1 + rng.below(48) as usize;
+    let q = znorm(&(0..n).map(|_| rng.normal()).collect::<Vec<_>>());
+    let c: Vec<f64> = (0..n).map(|_| rng.normal() * 2.5 + 0.75).collect();
+    let w = match rng.below(5) {
+        0 => 0,
+        1 => n + rng.below(4) as usize,
+        _ => arb_window(rng, n),
+    };
+    Case { q, c, w }
+}
+
+/// All scalar stage values for one case, plus the exact windowed DTW.
+struct Stages {
+    dtw: f64,
+    kim: f64,
+    eq: f64,
+    ec: f64,
+    tail: f64,
+}
+
+fn stage_values(t: &Case) -> Stages {
+    let n = t.q.len();
+    let (mean, std) = stats(&t.c);
+    let zc: Vec<f64> = t.c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+    let dtw = dtw_oracle(&t.q, &zc, Some(t.w));
+    let kim = lb_kim_hierarchy(&t.q, &t.c, mean, std, f64::INFINITY);
+    let (u, l) = envelopes(&t.q, t.w);
+    let (du, dl) = envelopes(&t.c, t.w);
+    let order = sort_order(&t.q);
+    let uo = reorder(&u, &order);
+    let lo = reorder(&l, &order);
+    let qo = reorder(&t.q, &order);
+    let mut cb = vec![0.0; n];
+    let eq = lb_keogh_eq(&order, &uo, &lo, &t.c, mean, std, f64::INFINITY, &mut cb);
+    let ec = lb_keogh_ec(&order, &qo, &du, &dl, mean, std, f64::INFINITY, &mut cb);
+    let mut s = ImprovedScratch::new();
+    let tail = lb_improved_tail_ec(&mut s, &t.q, &du, &dl, mean, std, &zc, t.w, f64::INFINITY);
+    Stages { dtw, kim, eq, ec, tail }
+}
+
+#[test]
+fn prop_every_cascade_stage_is_admissible() {
+    run_prop("every stage <= dtw", 0xB001, 140, arb_case, |t| {
+        let s = stage_values(t);
+        let eps = 1e-6;
+        // LB_Kim's front/back 2- and 3-point stages charge the path's
+        // 2nd/3rd cells from each end; those cell sets are pairwise
+        // disjoint only from length 6 (at n = 3 or 5 a diagonal path's
+        // middle cell is claimed by both ends), so the hierarchy is
+        // asserted at the lengths where it is provably a bound
+        let kim = if t.q.len() >= 6 { s.kim } else { 0.0 };
+        for (name, lb) in [
+            ("kim", kim),
+            ("keogh_eq", s.eq),
+            ("keogh_ec", s.ec),
+            ("improved_tail", s.tail),
+            ("keogh_ec + improved_tail", s.ec + s.tail),
+        ] {
+            if lb > s.dtw + eps {
+                return Err(format!("{name}: {lb} > dtw {} (n={} w={})", s.dtw, t.q.len(), t.w));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq_side_two_pass_sum_is_admissible() {
+    // the NN1 direction: both series pre-normalised, candidate projected
+    // onto the *query* envelope
+    run_prop("eq + eq_tail <= dtw", 0xB002, 120, arb_case, |t| {
+        let (mean, std) = stats(&t.c);
+        let zc: Vec<f64> = t.c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+        let (u, l) = envelopes(&t.q, t.w);
+        let mut first = 0.0;
+        for (i, &x) in zc.iter().enumerate() {
+            first += if x > u[i] {
+                sqed(x, u[i])
+            } else if x < l[i] {
+                sqed(x, l[i])
+            } else {
+                0.0
+            };
+        }
+        let mut s = ImprovedScratch::new();
+        let tail = lb_improved_tail_eq(&mut s, &zc, &u, &l, &t.q, t.w, f64::INFINITY);
+        let d = dtw_oracle(&t.q, &zc, Some(t.w));
+        if first + tail > d + 1e-6 {
+            return Err(format!("{} + {tail} > dtw {d} (w={})", first, t.w));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cascade_ordering_is_monotone() {
+    // the provable orderings: every stage's tail is non-negative, so the
+    // two-pass sum dominates its own first pass, and the cascade's
+    // running max over enabled stages can only grow as stages are added
+    run_prop("cascade max monotone", 0xB003, 120, arb_case, |t| {
+        let s = stage_values(t);
+        if s.tail < 0.0 {
+            return Err(format!("negative tail {}", s.tail));
+        }
+        if s.ec + s.tail < s.ec {
+            return Err("two-pass sum below its first pass".into());
+        }
+        let m1 = s.kim;
+        let m2 = m1.max(s.eq);
+        let m3 = m2.max(s.ec);
+        let m4 = m3.max(s.ec + s.tail);
+        if !(m1 <= m2 && m2 <= m3 && m3 <= m4) {
+            return Err(format!("cascade max not monotone: {m1} {m2} {m3} {m4}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_stages_agree_with_scalar_and_never_overprune() {
+    run_prop("batch == scalar", 0xB004, 120, arb_case, |t| {
+        let (mean, std) = stats(&t.c);
+        let zc: Vec<f64> = t.c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+        let s = stage_values(t);
+        let (u, l) = envelopes(&t.q, t.w);
+        let (du, dl) = envelopes(&t.c, t.w);
+        // the unordered sums add the same non-negative terms in natural
+        // order: equal up to summation-order rounding
+        let equ = lb_keogh_eq_unordered(&u, &l, &t.c, mean, std);
+        let ecu = lb_keogh_ec_unordered(&t.q, &du, &dl, mean, std);
+        if (equ - s.eq).abs() > 1e-9 * (1.0 + s.eq) {
+            return Err(format!("eq unordered {equ} vs sorted {}", s.eq));
+        }
+        if (ecu - s.ec).abs() > 1e-9 * (1.0 + s.ec) {
+            return Err(format!("ec unordered {ecu} vs sorted {}", s.ec));
+        }
+        // the batch stages prune at `lb * (1 - 1e-9) > threshold`: that
+        // discounted decision must imply the scalar sum also exceeds the
+        // threshold, for thresholds tight against the bound
+        for f in [0.25, 0.5, 0.9, 0.999_999, 1.0] {
+            let th = s.eq * f;
+            if equ * (1.0 - 1e-9) > th && s.eq <= th {
+                return Err(format!("eq batch overprunes at {th}"));
+            }
+            let th = s.ec * f;
+            if ecu * (1.0 - 1e-9) > th && s.ec <= th {
+                return Err(format!("ec batch overprunes at {th}"));
+            }
+        }
+        // the raw-window tail (batch lanes) is bit-identical to the
+        // pre-normalised tail (scalar survivor path)
+        let mut s1 = ImprovedScratch::new();
+        let mut s2 = ImprovedScratch::new();
+        for budget in [f64::INFINITY, s.dtw * 0.5, 1e-6] {
+            let a = lb_improved_tail_ec(&mut s1, &t.q, &du, &dl, mean, std, &zc, t.w, budget);
+            let b = lb_improved_tail_ec_raw(&mut s2, &t.q, &du, &dl, mean, std, &t.c, t.w, budget);
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("tail raw {b} != pre-normalised {a} @ {budget}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn degenerate_windows_stay_admissible() {
+    // len = 1 and w = 0 / w >= len, deterministically
+    for (q, c) in [
+        (vec![0.0], vec![4.2]),
+        (vec![-1.0, 1.0], vec![3.0, 5.0]),
+        (vec![0.5, -1.2, 0.7], vec![2.0, 2.0, 2.0]),
+    ] {
+        let q = znorm(&q);
+        let (mean, std) = stats(&c);
+        let zc: Vec<f64> = c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+        for w in [0usize, 1, q.len(), q.len() + 5] {
+            let t = Case { q: q.clone(), c: c.clone(), w };
+            let s = stage_values(&t);
+            for lb in [s.kim, s.eq, s.ec, s.ec + s.tail] {
+                assert!(lb <= s.dtw + 1e-9, "n={} w={w}: {lb} > {}", q.len(), s.dtw);
+            }
+        }
+    }
+}
+
+#[test]
+fn planted_adversary_improved_prunes_where_keogh_ec_cannot() {
+    // flat query inside a wildly oscillating candidate's envelope: the
+    // first EC pass sees nothing, the projection tail sees everything
+    let n = 16;
+    let w = 2;
+    let q = vec![0.0; n];
+    let c: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 3.0 } else { -3.0 }).collect();
+    let (mean, std) = stats(&c);
+    assert!(mean.abs() < 1e-12 && (std - 3.0).abs() < 1e-12);
+    let zc: Vec<f64> = c.iter().map(|&x| znorm_point(x, mean, std)).collect();
+    let (du, dl) = envelopes(&c, w);
+    let order = sort_order(&q);
+    let qo = reorder(&q, &order);
+    let mut cb = vec![0.0; n];
+    let ec = lb_keogh_ec(&order, &qo, &du, &dl, mean, std, f64::INFINITY, &mut cb);
+    assert_eq!(ec, 0.0, "the flat query sits inside the candidate envelope");
+    let mut s = ImprovedScratch::new();
+    let tail = lb_improved_tail_ec(&mut s, &q, &du, &dl, mean, std, &zc, w, f64::INFINITY);
+    let d = dtw_oracle(&q, &zc, Some(w));
+    assert_eq!(tail, n as f64, "second pass charges every oscillation");
+    assert_eq!(d, n as f64, "…and here it is exactly tight");
+    let bsf = n as f64 / 2.0;
+    assert!(ec <= bsf, "LB_Keogh EC alone must NOT prune this pair");
+    assert!(ec + tail > bsf, "LB_Improved must prune it");
+}
+
+#[test]
+fn planted_adversary_improved_prunes_where_keogh_eq_cannot() {
+    // the EQ/NN1 direction, end-to-end: a flat candidate inside an
+    // oscillating query's envelope survives LB_Keogh with bound 0, and
+    // only the second pass stops it from reaching the kernel
+    let n = 16;
+    let w = 2;
+    // alternating ±1: mean 0, std 1 — already z-normalised
+    let q: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let flat = vec![0.0; n];
+    let (u, l) = envelopes(&q, w);
+    // first pass is exactly 0: the flat candidate sits inside the envelope
+    for (i, &x) in flat.iter().enumerate() {
+        assert!(l[i] <= x && x <= u[i], "flat candidate escapes the envelope at {i}");
+    }
+    let mut s = ImprovedScratch::new();
+    let tail = lb_improved_tail_eq(&mut s, &flat, &u, &l, &q, w, f64::INFINITY);
+    let d = dtw_oracle(&q, &flat, Some(w));
+    assert_eq!(tail, n as f64);
+    assert_eq!(d, n as f64);
+    // end-to-end: an exact copy answers the query first (k-th best hits
+    // 0), then the flat adversary is pruned by the improved stage alone
+    let cands = vec![q.clone(), flat];
+    let mut cnt = Counters::new();
+    let got = nn1_topk(&q, &cands, w, 1, Suite::UcrMon, &mut cnt);
+    assert_eq!(got[0].index, 0);
+    assert_eq!(got[0].dist, 0.0);
+    assert_eq!(cnt.lb_improved_prunes, 1, "{cnt:?}");
+    assert_eq!(cnt.lb_keogh_eq_prunes, 0, "{cnt:?}");
+    assert_eq!(cnt.dtw_calls, 1, "{cnt:?}");
+}
+
+#[test]
+fn planted_pair_where_no_stage_may_prune() {
+    // identical series: DTW is exactly 0, so every admissible bound is
+    // exactly 0 and nothing may prune at any positive threshold
+    let n = 16;
+    let w = 2;
+    let q: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let t = Case { q: q.clone(), c: q.clone(), w };
+    let s = stage_values(&t);
+    assert_eq!(s.dtw, 0.0);
+    assert_eq!(s.kim, 0.0);
+    assert_eq!(s.eq, 0.0);
+    assert_eq!(s.ec, 0.0);
+    assert_eq!(s.tail, 0.0);
+    let mut is = ImprovedScratch::new();
+    let (u, l) = envelopes(&q, w);
+    assert_eq!(lb_improved_tail_eq(&mut is, &q, &u, &l, &q, w, f64::INFINITY), 0.0);
+}

@@ -64,6 +64,7 @@ fn strip_topk_is_bitwise_identical_on_every_dataset_metric_and_k() {
                 let accounted = ct.lb_kim_prunes
                     + ct.lb_keogh_eq_prunes
                     + ct.lb_keogh_ec_prunes
+                    + ct.lb_improved_prunes
                     + ct.dtw_calls;
                 assert_eq!(accounted, ct.candidates, "{tag}: {ct:?}");
             }

@@ -476,8 +476,11 @@ fn prop_counter_conservation_every_mode_and_metric() {
     // tools/bench_diff.py enforces the same identities on exported
     // snapshots; this test is why it may.
     fn check(c: &Counters, what: &str) -> Result<(), String> {
-        let pruned =
-            c.lb_kim_prunes + c.lb_keogh_eq_prunes + c.lb_keogh_ec_prunes + c.xla_prunes;
+        let pruned = c.lb_kim_prunes
+            + c.lb_keogh_eq_prunes
+            + c.lb_keogh_ec_prunes
+            + c.lb_improved_prunes
+            + c.xla_prunes;
         if c.candidates != pruned + c.dtw_calls {
             return Err(format!(
                 "{what}: candidates {} != prunes {pruned} + dtw_calls {}",

@@ -12,7 +12,8 @@ Checked identities (the same ones ``rust/tests/prop_invariants.rs``
 property-tests in-process; see ``rust/src/obs/README.md``):
 
     candidates == lb_kim_prunes + lb_keogh_eq_prunes
-                  + lb_keogh_ec_prunes + xla_prunes + dtw_calls
+                  + lb_keogh_ec_prunes + lb_improved_prunes
+                  + xla_prunes + dtw_calls
     dtw_calls  == dtw_abandons + dtw_completions
     dtw_calls  == sum(metric_calls_*)
     dtw_abandons == sum(metric_abandons_*)
@@ -38,6 +39,10 @@ CASCADE_STAGES = (
     "lb_keogh_ec_prunes",
     "xla_prunes",
 )
+# stages added to the cascade after the original four: absent in older
+# artifacts, where they read as 0 (those runs could not have pruned
+# there) rather than as unknown
+OPTIONAL_CASCADE_STAGES = ("lb_improved_prunes",)
 # run-identity fields are everything except the measurements
 MEASUREMENTS = {
     "seconds",
@@ -65,6 +70,7 @@ def check_counters(counters, where, problems):
     if got is not None:
         cand, dtw = got[0], got[1]
         pruned = sum(got[2:])
+        pruned += sum(int(counters.get(n, 0)) for n in OPTIONAL_CASCADE_STAGES)
         if cand != pruned + dtw:
             problems.append(
                 f"{where}: candidates {cand} != stage prunes {pruned}"
