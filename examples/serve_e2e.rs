@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
                 suite,
                 k: 1,
                 metric: Metric::Cdtw,
+                deadline_ms: None,
             })?;
             latencies.push(resp.latency_ms);
             answers.push((resp.pos, resp.dist));

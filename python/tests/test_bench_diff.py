@@ -142,6 +142,61 @@ def test_absent_improved_counter_reads_as_zero(tmp_path):
     assert "INVARIANT VIOLATION" in res.stderr
 
 
+def test_absent_robustness_counters_read_as_zero(tmp_path):
+    # a pre-robustness snapshot carries none of worker_panics /
+    # worker_respawns / shed_queries / deadline_timeouts: the audit
+    # passes (absent reads as 0, not unknown)
+    doc = json.loads(BASELINE.read_text())
+    snap = copy.deepcopy(doc["stats"])
+    for name in (
+        "worker_panics",
+        "worker_respawns",
+        "shed_queries",
+        "deadline_timeouts",
+    ):
+        snap["counters"].pop(name, None)
+    p = tmp_path / "pre_robustness.json"
+    p.write_text(json.dumps(snap))
+    res = run_tool(p)
+    assert res.returncode == 0, res.stderr
+
+
+def test_present_robustness_counters_are_validated_and_diffed(tmp_path):
+    doc = json.loads(BASELINE.read_text())
+    snap = copy.deepcopy(doc["stats"])
+    snap["counters"]["shed_queries"] = 3
+    snap["counters"]["deadline_timeouts"] = 1
+    curr = tmp_path / "faulty_run.json"
+    curr.write_text(json.dumps(snap))
+    # well-formed counts pass the audit
+    assert run_tool(curr).returncode == 0
+
+    # a negative count is a hard failure
+    bad = copy.deepcopy(snap)
+    bad["counters"]["worker_panics"] = -2
+    badp = tmp_path / "negative.json"
+    badp.write_text(json.dumps(bad))
+    res = run_tool(badp)
+    assert res.returncode == 1
+    assert "worker_panics" in res.stderr
+
+
+def test_robustness_deltas_print_against_a_counterless_baseline(tmp_path):
+    # baseline runs predate the robustness counters entirely; the current
+    # artifact sheds twice — the delta reads the absent side as 0
+    doc = json.loads(BASELINE.read_text())
+    curr_doc = copy.deepcopy(doc)
+    for run in curr_doc["runs"]:
+        run["counters"]["shed_queries"] = 2
+    base = tmp_path / "base.json"
+    curr = tmp_path / "curr.json"
+    base.write_text(json.dumps(doc))
+    curr.write_text(json.dumps(curr_doc))
+    res = run_tool(base, curr)
+    assert res.returncode == 0, res.stderr
+    assert "shed_queries 0 -> 2" in res.stdout
+
+
 def test_unreadable_file_is_a_usage_error(tmp_path):
     res = run_tool(tmp_path / "nope.json")
     assert res.returncode == 2

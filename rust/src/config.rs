@@ -80,6 +80,12 @@ pub struct ServeConfig {
     /// milliseconds a partial batch window may wait before it is flushed
     /// anyway (0 = no deadline: wait for the window to fill)
     pub batch_deadline_ms: u64,
+    /// admitted-but-unanswered queries tolerated before new arrivals are
+    /// shed with an `overloaded` error (0 = unbounded)
+    pub max_pending: usize,
+    /// per-query deadline budget, ms, for requests without their own
+    /// `deadline_ms` (0 = none: exhaustive scans)
+    pub default_deadline_ms: f64,
 }
 
 impl Default for ServeConfig {
@@ -91,6 +97,8 @@ impl Default for ServeConfig {
             queue_depth: 64,
             batch_window: 1,
             batch_deadline_ms: 0,
+            max_pending: 0,
+            default_deadline_ms: 0.0,
         }
     }
 }
@@ -135,6 +143,8 @@ impl Config {
             ("serve", "queue_depth") => self.serve.queue_depth = v.usize()?,
             ("serve", "batch_window") => self.serve.batch_window = v.usize()?,
             ("serve", "batch_deadline_ms") => self.serve.batch_deadline_ms = v.usize()? as u64,
+            ("serve", "max_pending") => self.serve.max_pending = v.usize()?,
+            ("serve", "default_deadline_ms") => self.serve.default_deadline_ms = v.f64()?,
             _ => bail!("unknown config key"),
         }
         Ok(())
@@ -300,9 +310,16 @@ mod tests {
         assert_eq!(c.serve.batch, 64);
         assert_eq!(c.serve.batch_window, 1);
         assert_eq!(c.serve.batch_deadline_ms, 0);
-        let c2 = Config::from_str("[serve]\nbatch_window = 16\nbatch_deadline_ms = 25\n").unwrap();
+        assert_eq!(c.serve.max_pending, 0);
+        assert_eq!(c.serve.default_deadline_ms, 0.0);
+        let c2 = Config::from_str(
+            "[serve]\nbatch_window = 16\nbatch_deadline_ms = 25\nmax_pending = 256\ndefault_deadline_ms = 40.5\n",
+        )
+        .unwrap();
         assert_eq!(c2.serve.batch_window, 16);
         assert_eq!(c2.serve.batch_deadline_ms, 25);
+        assert_eq!(c2.serve.max_pending, 256);
+        assert_eq!(c2.serve.default_deadline_ms, 40.5);
     }
 
     #[test]

@@ -96,6 +96,7 @@ mod tests {
             suite: Suite::UcrMon,
             k: 1,
             metric: Metric::Cdtw,
+            deadline_ms: None,
         }
     }
 

@@ -23,7 +23,13 @@
 //!   `(dist, pos)` merge of the shards' result heaps
 //! * [`coalescer`] — batch-window gathering for the serve loop, with
 //!   count-based *and* deadline-based flushing (`--batch-deadline-ms`)
-//! * [`service`] — lifecycle: spawn, submit, drain, shutdown
+//! * [`service`] — lifecycle: spawn, submit, drain, shutdown — plus the
+//!   failure model: admission control (`max_pending` sheds with a typed
+//!   `overloaded` error), per-query deadline budgets (`deadline_ms` on
+//!   the wire or a service default; out-of-time queries answer
+//!   `partial: true` or a typed `timeout`), and worker supervision
+//!   (per-job panic domains, dead-thread respawn with a single retry).
+//!   See `README.md` in this directory for the full failure model.
 
 #[cfg(feature = "xla")]
 pub mod batcher;
@@ -35,5 +41,5 @@ pub mod state;
 pub mod worker;
 
 pub use coalescer::BatchCoalescer;
-pub use protocol::{ErrorResponse, QueryRequest, QueryResponse};
+pub use protocol::{ErrorKind, ErrorResponse, QueryRequest, QueryResponse};
 pub use service::{Service, ServiceConfig};

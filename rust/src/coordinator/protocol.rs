@@ -9,6 +9,8 @@
 //! `pos`/`dist` fields always mirror the best match, so pre-top-k clients
 //! keep working unchanged.
 
+use std::fmt;
+
 use anyhow::{anyhow, Result};
 
 use crate::distances::metric::Metric;
@@ -29,19 +31,33 @@ pub struct QueryRequest {
     pub k: usize,
     /// elastic metric to score candidates under (wire default: cDTW)
     pub metric: Metric,
+    /// optional deadline budget in milliseconds: the service abandons the
+    /// scan at the next strip boundary once the budget is spent, answering
+    /// with a `timeout` error (no matches yet) or a `partial: true` top-k.
+    /// `None` (absent on the wire) means no deadline — that path reads no
+    /// clocks and stays bitwise-identical to the pre-deadline service.
+    pub deadline_ms: Option<f64>,
 }
 
 impl QueryRequest {
     pub fn to_json(&self) -> String {
-        obj(vec![
+        let mut fields = vec![
             ("id", Json::Num(self.id as f64)),
             ("window_ratio", Json::Num(self.window_ratio)),
             ("suite", Json::Str(self.suite.name().to_string())),
             ("k", Json::Num(self.k as f64)),
             ("metric", self.metric.to_json()),
-            ("query", Json::Arr(self.query.iter().map(|&v| Json::Num(v)).collect())),
-        ])
-        .to_string()
+        ];
+        // emitted only when set: deadline-free request lines stay
+        // byte-identical to the pre-deadline wire format
+        if let Some(d) = self.deadline_ms {
+            fields.push(("deadline_ms", Json::Num(d)));
+        }
+        fields.push((
+            "query",
+            Json::Arr(self.query.iter().map(|&v| Json::Num(v)).collect()),
+        ));
+        obj(fields).to_string()
     }
 
     pub fn from_json(line: &str) -> Result<Self> {
@@ -90,7 +106,19 @@ impl QueryRequest {
         // to ±inf — reject them here so a malformed request line can
         // never reach (and panic) a shard worker
         crate::search::subsequence::validate_series("query", &query)?;
-        Ok(Self { id, query, window_ratio, suite, k, metric })
+        // absent deadline = none: the pre-deadline wire format stays valid
+        let deadline_ms = match v.get("deadline_ms") {
+            Some(x) => {
+                let d = x.as_f64().ok_or_else(|| anyhow!("non-numeric deadline_ms"))?;
+                anyhow::ensure!(
+                    d.is_finite() && d > 0.0,
+                    "deadline_ms must be finite and > 0, got {d}"
+                );
+                Some(d)
+            }
+            None => None,
+        };
+        Ok(Self { id, query, window_ratio, suite, k, metric, deadline_ms })
     }
 }
 
@@ -101,26 +129,151 @@ pub fn is_stats_line(line: &str) -> bool {
     Json::parse(line).is_ok_and(|v| v.get("cmd").and_then(Json::as_str) == Some("stats"))
 }
 
+/// Machine-readable classification of an [`ErrorResponse`], so clients
+/// can branch on the failure class (retry later, back off, alert)
+/// without parsing the human-readable message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The query's deadline budget expired before any match was found.
+    Timeout,
+    /// Admission control shed the query: the pending-work budget
+    /// (`--max-pending`) was exhausted. The query was never scanned;
+    /// retrying after backoff is safe.
+    Overloaded,
+    /// A server-side fault (worker panic, lost worker thread): the query
+    /// failed through no fault of the request.
+    Internal,
+}
+
+impl ErrorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorKind::Timeout => "timeout",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::Internal => "internal",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "timeout" => Some(ErrorKind::Timeout),
+            "overloaded" => Some(ErrorKind::Overloaded),
+            "internal" => Some(ErrorKind::Internal),
+            _ => None,
+        }
+    }
+}
+
+/// Typed error: the deadline budget expired before any match was found.
+/// [`ErrorResponse::new`] maps it to [`ErrorKind::Timeout`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeadlineExceeded {
+    pub budget_ms: f64,
+}
+
+impl fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "deadline of {}ms exceeded", self.budget_ms)
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
+
+/// Typed error: admission control shed the query.
+/// [`ErrorResponse::new`] maps it to [`ErrorKind::Overloaded`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Overloaded {
+    pub pending: u64,
+    pub max_pending: usize,
+}
+
+impl fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "overloaded: {} queries pending (max {})",
+            self.pending, self.max_pending
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+/// Typed error: a shard worker panicked while executing this query's
+/// job. [`ErrorResponse::new`] maps it to [`ErrorKind::Internal`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerPanicked {
+    pub message: String,
+}
+
+impl fmt::Display for WorkerPanicked {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "shard worker panicked: {}", self.message)
+    }
+}
+
+impl std::error::Error for WorkerPanicked {}
+
+/// Typed error: a shard worker's channel closed mid-query (the thread
+/// died without replying). [`ErrorResponse::new`] maps it to
+/// [`ErrorKind::Internal`]; the service respawns the worker and retries
+/// once before surfacing this.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerLost;
+
+impl fmt::Display for WorkerLost {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "shard worker lost (thread died without replying)")
+    }
+}
+
+impl std::error::Error for WorkerLost {}
+
 /// The wire form of a request that failed — validation or execution:
-/// `{"id":N,"error":"..."}`. The serve loop answers the failing line with
-/// this and keeps serving instead of tearing the whole session down.
+/// `{"id":N,"error":"...","kind":"..."}`. The serve loop answers the
+/// failing line with this and keeps serving instead of tearing the whole
+/// session down. `kind` is emitted only for classified failures
+/// (`timeout` / `overloaded` / `internal`); validation errors carry no
+/// kind, so pre-robustness error lines stay byte-identical.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ErrorResponse {
     pub id: u64,
     pub error: String,
+    pub kind: Option<ErrorKind>,
 }
 
 impl ErrorResponse {
+    /// Build from an error chain, classifying the root cause: the typed
+    /// robustness errors ([`DeadlineExceeded`], [`Overloaded`],
+    /// [`WorkerPanicked`], [`WorkerLost`]) map to their wire kind; any
+    /// other error (validation, parse) carries no kind.
     pub fn new(id: u64, err: &anyhow::Error) -> Self {
-        Self { id, error: format!("{err:#}") }
+        let root = err.root_cause();
+        let kind = if root.downcast_ref::<DeadlineExceeded>().is_some() {
+            Some(ErrorKind::Timeout)
+        } else if root.downcast_ref::<Overloaded>().is_some() {
+            Some(ErrorKind::Overloaded)
+        } else if root.downcast_ref::<WorkerPanicked>().is_some()
+            || root.downcast_ref::<WorkerLost>().is_some()
+        {
+            Some(ErrorKind::Internal)
+        } else {
+            None
+        };
+        Self { id, error: format!("{err:#}"), kind }
     }
 
     pub fn to_json(&self) -> String {
-        obj(vec![
+        let mut fields = vec![
             ("id", Json::Num(self.id as f64)),
             ("error", Json::Str(self.error.clone())),
-        ])
-        .to_string()
+        ];
+        // emitted only for classified failures: validation error lines
+        // stay byte-identical to the pre-robustness wire format
+        if let Some(kind) = self.kind {
+            fields.push(("kind", Json::Str(kind.name().to_string())));
+        }
+        obj(fields).to_string()
     }
 
     pub fn from_json(line: &str) -> Result<Self> {
@@ -134,7 +287,16 @@ impl ErrorResponse {
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow!("error response missing error"))?
             .to_string();
-        Ok(Self { id, error })
+        // absent kind = unclassified: pre-robustness lines stay valid;
+        // an unknown kind name is rejected, not silently dropped
+        let kind = match v.get("kind").and_then(Json::as_str) {
+            Some(name) => Some(
+                ErrorKind::from_name(name)
+                    .ok_or_else(|| anyhow!("unknown error kind {name:?}"))?,
+            ),
+            None => None,
+        };
+        Ok(Self { id, error, kind })
     }
 
     /// Does this line carry an error response (vs a result)?
@@ -168,6 +330,11 @@ pub struct QueryResponse {
     /// (cohort-batched serving); 1 = served solo. Absent on the wire for
     /// pre-cohort responses, which parse as 1.
     pub cohort: usize,
+    /// true when the deadline budget expired mid-scan and the top-k was
+    /// assembled from the strips completed in time — a valid but possibly
+    /// non-optimal ranking. Absent on the wire when false, so complete
+    /// responses stay byte-identical to the pre-deadline format.
+    pub partial: bool,
 }
 
 impl QueryResponse {
@@ -200,6 +367,11 @@ impl QueryResponse {
         // to the pre-observability wire format
         if let Some(q) = self.queue_ms {
             fields.push(("queue_ms", Json::Num(q)));
+        }
+        // emitted only when the deadline truncated the scan: complete
+        // responses stay byte-identical to the pre-deadline wire format
+        if self.partial {
+            fields.push(("partial", Json::Bool(true)));
         }
         obj(fields).to_string()
     }
@@ -243,6 +415,8 @@ impl QueryResponse {
             dtw_calls: num("dtw_calls")? as u64,
             // pre-cohort responses have no field: they were served solo
             cohort: v.get("cohort").and_then(Json::as_usize).unwrap_or(1),
+            // absent on complete / pre-deadline lines: parses as false
+            partial: matches!(v.get("partial"), Some(Json::Bool(true))),
         })
     }
 }
@@ -260,9 +434,25 @@ mod tests {
             suite: Suite::UcrMon,
             k: 5,
             metric: Metric::Cdtw,
+            deadline_ms: None,
         };
         let back = QueryRequest::from_json(&r.to_json()).unwrap();
         assert_eq!(back, r);
+        // a deadline-free request never mentions the field…
+        assert!(!r.to_json().contains("deadline_ms"));
+        // …and a budgeted one round-trips it
+        let d = QueryRequest { deadline_ms: Some(250.0), ..r };
+        assert_eq!(QueryRequest::from_json(&d.to_json()).unwrap(), d);
+    }
+
+    #[test]
+    fn rejects_bad_deadlines_on_the_wire() {
+        for bad in ["0", "-5", "1e999", "\"fast\""] {
+            let line = format!(
+                r#"{{"id":1,"window_ratio":0.1,"suite":"mon","deadline_ms":{bad},"query":[1,2]}}"#
+            );
+            assert!(QueryRequest::from_json(&line).is_err(), "{line}");
+        }
     }
 
     #[test]
@@ -281,6 +471,7 @@ mod tests {
                 suite: Suite::UcrMon,
                 k: 2,
                 metric,
+                deadline_ms: None,
             };
             let line = r.to_json();
             assert!(line.contains(&format!("\"name\":\"{}\"", metric.name())), "{line}");
@@ -329,13 +520,20 @@ mod tests {
             pruned: 90,
             dtw_calls: 10,
             cohort: 4,
+            partial: false,
         };
         assert_eq!(QueryResponse::from_json(&r.to_json()).unwrap(), r);
         // a solo response (no queue wait) never mentions the field
         assert!(!r.to_json().contains("queue_ms"));
+        // a complete response never mentions partial
+        assert!(!r.to_json().contains("partial"));
         // …and a coalesced one round-trips it
-        let q = QueryResponse { queue_ms: Some(1.5), ..r };
+        let q = QueryResponse { queue_ms: Some(1.5), ..r.clone() };
         assert_eq!(QueryResponse::from_json(&q.to_json()).unwrap().queue_ms, Some(1.5));
+        // …and a deadline-truncated one round-trips the partial marker
+        let p = QueryResponse { partial: true, ..r };
+        assert!(p.to_json().contains("\"partial\":true"));
+        assert!(QueryResponse::from_json(&p.to_json()).unwrap().partial);
     }
 
     #[test]
@@ -360,7 +558,11 @@ mod tests {
     #[test]
     fn error_response_round_trips_and_is_distinguishable() {
         let e = ErrorResponse::new(9, &anyhow::anyhow!("query contains a non-finite value"));
+        // an unclassified (validation) error carries no kind and never
+        // mentions the field on the wire
+        assert_eq!(e.kind, None);
         let line = e.to_json();
+        assert!(!line.contains("kind"));
         assert_eq!(ErrorResponse::from_json(&line).unwrap(), e);
         assert!(ErrorResponse::is_error_line(&line));
         let ok = QueryResponse {
@@ -374,8 +576,44 @@ mod tests {
             pruned: 0,
             dtw_calls: 1,
             cohort: 1,
+            partial: false,
         };
         assert!(!ErrorResponse::is_error_line(&ok.to_json()));
+    }
+
+    #[test]
+    fn typed_errors_classify_onto_wire_kinds() {
+        for (err, kind, name) in [
+            (
+                anyhow::Error::new(DeadlineExceeded { budget_ms: 50.0 }),
+                ErrorKind::Timeout,
+                "timeout",
+            ),
+            (
+                anyhow::Error::new(Overloaded { pending: 65, max_pending: 64 }),
+                ErrorKind::Overloaded,
+                "overloaded",
+            ),
+            (
+                anyhow::Error::new(WorkerPanicked { message: "index oob".into() }),
+                ErrorKind::Internal,
+                "internal",
+            ),
+            (anyhow::Error::new(WorkerLost), ErrorKind::Internal, "internal"),
+        ] {
+            // classification survives context wrapping: new() inspects
+            // the root cause, not the outermost layer
+            let wrapped = err.context("query 9 failed");
+            let e = ErrorResponse::new(9, &wrapped);
+            assert_eq!(e.kind, Some(kind), "{e:?}");
+            let line = e.to_json();
+            assert!(line.contains(&format!("\"kind\":\"{name}\"")), "{line}");
+            assert_eq!(ErrorResponse::from_json(&line).unwrap(), e);
+        }
+        // unknown kinds are rejected, absent kinds parse as None
+        assert!(ErrorResponse::from_json(r#"{"id":1,"error":"x","kind":"zzz"}"#).is_err());
+        let legacy = ErrorResponse::from_json(r#"{"id":1,"error":"x"}"#).unwrap();
+        assert_eq!(legacy.kind, None);
     }
 
     #[test]

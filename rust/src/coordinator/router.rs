@@ -1,14 +1,38 @@
 //! Per-query routing: split the reference's candidate positions across the
 //! shard workers, fan the job out, fan the results in, merge the shards'
 //! local top-k lists and counters.
+//!
+//! ## Failure semantics
+//!
+//! Shard replies are `Result`s: a worker that panicked mid-job reports the
+//! panic message instead of results, and the fan-in converts it into a
+//! per-query [`WorkerPanicked`] error — one poisoned query never takes the
+//! fan-in thread (or its siblings in a cohort) down with it. A reply
+//! channel that disconnects before every shard reported means a worker
+//! thread died without replying at all; that surfaces as [`WorkerLost`],
+//! which the service treats as its cue to respawn dead workers.
+//!
+//! ## Deadlines
+//!
+//! With a `deadline`, the fan-in waits for each shard only until the
+//! deadline plus a short grace period (workers self-check the deadline at
+//! strip boundaries, so they normally report *truncated* results just
+//! after it passes; the grace only matters when a shard is stalled). On
+//! grace expiry the router cancels the query's [`CancelToken`] — shards
+//! still scanning stop at their next strip boundary — and returns
+//! whatever shards already reported, flagged truncated. Without a
+//! deadline the fan-in blocks indefinitely, reads no clocks, and is
+//! bitwise-identical to the pre-deadline behaviour.
 
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::state::SharedUb;
-use crate::coordinator::worker::{CohortJob, Job, WorkItem};
+use crate::coordinator::protocol::{WorkerLost, WorkerPanicked};
+use crate::coordinator::state::{CancelToken, SharedUb};
+use crate::coordinator::worker::{CohortJob, CohortShardReply, Job, ShardOk, ShardReply, WorkItem};
 use crate::distances::metric::Metric;
 use crate::index::ref_index::BucketStats;
 use crate::metrics::Counters;
@@ -18,6 +42,13 @@ use crate::search::subsequence::{
 };
 use crate::search::suite::Suite;
 
+/// Extra wait past a query's deadline before the fan-in gives up on a
+/// shard and cancels the query. Workers self-check deadlines at strip
+/// boundaries, so a healthy shard reports within one strip of the
+/// deadline; the grace is sized for scheduling jitter on top of that,
+/// and only a genuinely stalled worker exhausts it.
+const FANIN_GRACE: Duration = Duration::from_millis(250);
+
 /// Balanced shard ranges over `total` candidate positions.
 pub fn shard_ranges(total: usize, shards: usize) -> Vec<(usize, usize)> {
     let shards = shards.max(1);
@@ -25,6 +56,50 @@ pub fn shard_ranges(total: usize, shards: usize) -> Vec<(usize, usize)> {
         .map(|s| (s * total / shards, (s + 1) * total / shards))
         .filter(|(a, b)| a < b)
         .collect()
+}
+
+/// One shard reply: `Ok(Some(_))` on a report (which may itself be the
+/// worker's panic, already unwrapped to an error here), `Ok(None)` when
+/// the shard stayed silent past `deadline` + grace, `Err` when the reply
+/// channel disconnected (worker thread died without replying).
+fn recv_shard<T>(
+    rx: &Receiver<Result<T, String>>,
+    deadline: Option<Instant>,
+) -> Result<Option<T>> {
+    let reply = match deadline {
+        // no deadline: block until the shard reports; a disconnect here
+        // means a worker thread died without replying
+        None => rx.recv().map_err(|_| anyhow::Error::new(WorkerLost))?,
+        Some(d) => {
+            let wait = d.saturating_duration_since(Instant::now()) + FANIN_GRACE;
+            match rx.recv_timeout(wait) {
+                Ok(r) => r,
+                // shard still silent past deadline + grace: give up on it
+                Err(RecvTimeoutError::Timeout) => return Ok(None),
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow::Error::new(WorkerLost))
+                }
+            }
+        }
+    };
+    reply
+        .map(Some)
+        .map_err(|message| anyhow::Error::new(WorkerPanicked { message }))
+}
+
+/// Deterministic rank-and-cut for one query's pooled shard matches.
+/// NaN distances (a malformed kernel result) are rejected as a per-query
+/// error instead of panicking the fan-in thread.
+fn rank_matches(all: &mut Vec<Match>, k: usize) -> Result<()> {
+    anyhow::ensure!(
+        all.iter().all(|m| !m.dist.is_nan()),
+        "NaN distance in shard results"
+    );
+    // shards cover disjoint position ranges, so the union has no
+    // duplicates; rank deterministically and keep the k best
+    all.sort_by(|a, b| a.dist.total_cmp(&b.dist).then(a.pos.cmp(&b.pos)));
+    all.truncate(k);
+    Ok(())
 }
 
 /// Fan one top-k query out over the worker channels; blocks until every
@@ -68,15 +143,26 @@ pub fn route_query_topk(
     denv: Option<Arc<DataEnvelopes>>,
     stats: Option<Arc<BucketStats>>,
 ) -> Result<(Vec<Match>, Counters)> {
-    route_query_topk_obs(
-        workers, reference, query_raw, w, metric, suite, mode, k, sync_every, denv, stats,
+    let (matches, counters, _truncated) = route_query_topk_obs(
+        workers, reference, query_raw, w, metric, suite, mode, k, sync_every, denv, stats, None,
         ScanObs::OFF,
-    )
+    )?;
+    Ok((matches, counters))
 }
 
-/// [`route_query_topk`] with an observability handle: the fan-in phase
-/// (collecting and merging per-shard results) is timed into `obs`'s
-/// [`Stage::FanIn`] histogram. The service passes its registry cell here.
+/// [`route_query_topk`] with a deadline and an observability handle: the
+/// fan-in phase (collecting and merging per-shard results) is timed into
+/// `obs`'s [`Stage::FanIn`] histogram. The service passes its registry
+/// cell here.
+///
+/// The third element of the result is the **truncated** flag: `true` when
+/// any shard stopped at its deadline (or the fan-in gave up on a stalled
+/// shard), in which case the matches are a valid ranking of everything
+/// scanned in time but may miss better candidates. `truncated` implies a
+/// deadline was set; with `deadline: None` the scan is exhaustive, the
+/// flag is always `false`, and the path reads no clocks. A truncated
+/// query may legitimately return **zero** matches (nothing scanned in
+/// time) — only exhaustive scans treat empty results as an error.
 #[allow(clippy::too_many_arguments)]
 pub fn route_query_topk_obs(
     workers: &[Sender<WorkItem>],
@@ -90,8 +176,9 @@ pub fn route_query_topk_obs(
     sync_every: usize,
     denv: Option<Arc<DataEnvelopes>>,
     stats: Option<Arc<BucketStats>>,
+    deadline: Option<Instant>,
     obs: ScanObs<'_>,
-) -> Result<(Vec<Match>, Counters)> {
+) -> Result<(Vec<Match>, Counters, bool)> {
     let n = query_raw.len();
     anyhow::ensure!(n > 0, "empty query");
     anyhow::ensure!(k >= 1, "k must be >= 1");
@@ -112,13 +199,16 @@ pub fn route_query_topk_obs(
     let k = k.min(total);
     let ranges = shard_ranges(total, workers.len());
     let shared = SharedUb::new(f64::INFINITY);
+    // the token exists only for deadline queries: the no-deadline path
+    // allocates nothing and the workers check nothing extra
+    let cancel = deadline.map(|_| CancelToken::new());
     let denv = match denv {
         Some(d) => Some(d),
         None => metric
             .wants_data_envelopes(suite)
             .then(|| Arc::new(DataEnvelopes::new(reference, w))),
     };
-    let (reply_tx, reply_rx) = channel();
+    let (reply_tx, reply_rx) = channel::<ShardReply>();
     let mut dispatched = 0usize;
     for (i, &(start, end)) in ranges.iter().enumerate() {
         let job = Job {
@@ -133,6 +223,8 @@ pub fn route_query_topk_obs(
             k,
             shared: Arc::clone(&shared),
             sync_every,
+            deadline,
+            cancel: cancel.clone(),
             reply: reply_tx.clone(),
         };
         workers[i % workers.len()]
@@ -147,23 +239,30 @@ pub fn route_query_topk_obs(
     let t0 = obs.now();
     let mut all: Vec<Match> = Vec::new();
     let mut counters = Counters::new();
+    let mut truncated = false;
     for _ in 0..dispatched {
-        let (matches, c) = reply_rx.recv().map_err(|_| anyhow!("worker died mid-query"))?;
-        counters.merge(&c);
-        all.extend(matches);
+        match recv_shard(&reply_rx, deadline)? {
+            Some(ShardOk { matches, counters: c, truncated: t }) => {
+                counters.merge(&c);
+                truncated |= t;
+                all.extend(matches);
+            }
+            None => {
+                // a shard blew deadline + grace: stop the stragglers and
+                // serve what we have (their late replies land in a
+                // dropped receiver and vanish)
+                if let Some(c) = &cancel {
+                    c.cancel();
+                }
+                truncated = true;
+                break;
+            }
+        }
     }
-    // shards cover disjoint position ranges, so the union has no
-    // duplicates; rank deterministically and keep the k best
-    all.sort_by(|a, b| {
-        a.dist
-            .partial_cmp(&b.dist)
-            .expect("no NaN distances")
-            .then(a.pos.cmp(&b.pos))
-    });
-    all.truncate(k);
+    rank_matches(&mut all, k)?;
     obs.stage_since(Stage::FanIn, t0);
-    anyhow::ensure!(!all.is_empty(), "no match found");
-    Ok((all, counters))
+    anyhow::ensure!(truncated || !all.is_empty(), "no match found");
+    Ok((all, counters, truncated))
 }
 
 /// Fan one whole **query cohort** out over the worker channels: every
@@ -194,13 +293,25 @@ pub fn route_cohort_topk(
     denv: Option<Arc<DataEnvelopes>>,
     stats: Arc<BucketStats>,
 ) -> Result<Vec<(Vec<Match>, Counters)>> {
-    route_cohort_topk_obs(
-        workers, reference, queries, w, metric, suite, k, sync_every, denv, stats, ScanObs::OFF,
-    )
+    let per_query = route_cohort_topk_obs(
+        workers, reference, queries, w, metric, suite, k, sync_every, denv, stats, None,
+        ScanObs::OFF,
+    )?;
+    Ok(per_query.into_iter().map(|(m, c, _truncated)| (m, c)).collect())
 }
 
-/// [`route_cohort_topk`] with an observability handle — fan-in timing,
-/// exactly as [`route_query_topk_obs`].
+/// [`route_cohort_topk`] with per-member deadlines and an observability
+/// handle — fan-in timing, exactly as [`route_query_topk_obs`].
+///
+/// `deadlines`, when present, must be one entry per cohort member
+/// (`None` entries are exhaustive members). Each member self-checks its
+/// own deadline inside the shard scan; the fan-in additionally gives up
+/// on stalled shards — cancelling the whole cohort's [`CancelToken`] —
+/// only when **every** member carries a deadline (an exhaustive member
+/// pins the fan-in to blocking recv, because giving up would truncate
+/// it). Per-member truncation comes back as the third tuple element,
+/// with the same semantics as the single-query variant: truncated
+/// members may hold zero matches; exhaustive members never do.
 #[allow(clippy::too_many_arguments)]
 pub fn route_cohort_topk_obs(
     workers: &[Sender<WorkItem>],
@@ -213,8 +324,9 @@ pub fn route_cohort_topk_obs(
     sync_every: usize,
     denv: Option<Arc<DataEnvelopes>>,
     stats: Arc<BucketStats>,
+    deadlines: Option<&[Option<Instant>]>,
     obs: ScanObs<'_>,
-) -> Result<Vec<(Vec<Match>, Counters)>> {
+) -> Result<Vec<(Vec<Match>, Counters, bool)>> {
     anyhow::ensure!(!queries.is_empty(), "empty cohort");
     anyhow::ensure!(k >= 1, "k must be >= 1");
     let n = queries[0].len();
@@ -228,16 +340,31 @@ pub fn route_cohort_topk_obs(
         validate_series("query", q)?;
     }
     metric.validate()?;
+    if let Some(ds) = deadlines {
+        anyhow::ensure!(ds.len() == queries.len(), "one deadline slot per cohort member");
+    }
     let w = metric.effective_window(n, w);
     anyhow::ensure!(stats.qlen() == n, "stats bucket is for qlen {}, cohort has {n}", stats.qlen());
     let total = reference.len() - n + 1;
     let k = k.min(total);
     let ranges = shard_ranges(total, workers.len());
+    let member_deadline = |m: usize| deadlines.and_then(|ds| ds[m]);
+    // the fan-in may only give up (and cancel the shard pass) when no
+    // member demands an exhaustive scan; the latest member deadline then
+    // bounds the wait
+    let per_member: Vec<Option<Instant>> = (0..queries.len()).map(member_deadline).collect();
+    let fanin_deadline: Option<Instant> = if per_member.iter().all(|d| d.is_some()) {
+        per_member.iter().flatten().copied().max()
+    } else {
+        None
+    };
+    let any_deadline = per_member.iter().any(|d| d.is_some());
+    let cancel = any_deadline.then(CancelToken::new);
     // one private threshold per member: cohort batching shares reference
     // streaming, never abandon state
     let shareds: Vec<Arc<SharedUb>> =
         queries.iter().map(|_| SharedUb::new(f64::INFINITY)).collect();
-    let (reply_tx, reply_rx) = channel();
+    let (reply_tx, reply_rx) = channel::<CohortShardReply>();
     let mut dispatched = 0usize;
     for (i, &(start, end)) in ranges.iter().enumerate() {
         let job = CohortJob {
@@ -247,13 +374,17 @@ pub fn route_cohort_topk_obs(
             members: queries
                 .iter()
                 .zip(&shareds)
-                .map(|(q, s)| (QueryContext::with_metric_pooled(q, w, metric), Arc::clone(s)))
+                .zip(&per_member)
+                .map(|((q, s), d)| {
+                    (QueryContext::with_metric_pooled(q, w, metric), Arc::clone(s), *d)
+                })
                 .collect(),
             denv: denv.clone(),
             stats: Arc::clone(&stats),
             suite,
             k,
             sync_every,
+            cancel: cancel.clone(),
             reply: reply_tx.clone(),
         };
         workers[i % workers.len()]
@@ -263,26 +394,38 @@ pub fn route_cohort_topk_obs(
     }
     drop(reply_tx);
     let t0 = obs.now();
-    let mut per_query: Vec<(Vec<Match>, Counters)> =
-        queries.iter().map(|_| (Vec::new(), Counters::new())).collect();
+    let mut per_query: Vec<(Vec<Match>, Counters, bool)> =
+        queries.iter().map(|_| (Vec::new(), Counters::new(), false)).collect();
     for _ in 0..dispatched {
-        let shard = reply_rx.recv().map_err(|_| anyhow!("worker died mid-cohort"))?;
-        anyhow::ensure!(shard.len() == queries.len(), "cohort shard reply size mismatch");
-        for ((matches, counters), (m, c)) in per_query.iter_mut().zip(shard) {
-            matches.extend(m);
-            counters.merge(&c);
+        match recv_shard(&reply_rx, fanin_deadline)? {
+            Some(shard) => {
+                anyhow::ensure!(
+                    shard.len() == queries.len(),
+                    "cohort shard reply size mismatch"
+                );
+                for ((matches, counters, truncated), s) in per_query.iter_mut().zip(shard) {
+                    matches.extend(s.matches);
+                    counters.merge(&s.counters);
+                    *truncated |= s.truncated;
+                }
+            }
+            None => {
+                // a stalled shard blew every member's deadline: cancel
+                // the cohort pass and mark every member truncated (each
+                // is missing that shard's range)
+                if let Some(c) = &cancel {
+                    c.cancel();
+                }
+                for (_, _, truncated) in per_query.iter_mut() {
+                    *truncated = true;
+                }
+                break;
+            }
         }
     }
-    for (matches, _) in per_query.iter_mut() {
-        // shards cover disjoint ranges: no duplicates; rank and cut
-        matches.sort_by(|a, b| {
-            a.dist
-                .partial_cmp(&b.dist)
-                .expect("no NaN distances")
-                .then(a.pos.cmp(&b.pos))
-        });
-        matches.truncate(k);
-        anyhow::ensure!(!matches.is_empty(), "no match found");
+    for (matches, _, truncated) in per_query.iter_mut() {
+        rank_matches(matches, k)?;
+        anyhow::ensure!(*truncated || !matches.is_empty(), "no match found");
     }
     obs.stage_since(Stage::FanIn, t0);
     Ok(per_query)
@@ -332,5 +475,20 @@ mod tests {
                 assert!(covered.iter().all(|&c| c), "gap: total={total} shards={shards}");
             }
         }
+    }
+
+    #[test]
+    fn rank_matches_rejects_nan_and_sorts_ties_by_pos() {
+        let mut ok = vec![
+            Match { pos: 5, dist: 2.0 },
+            Match { pos: 1, dist: 2.0 },
+            Match { pos: 9, dist: 1.0 },
+        ];
+        rank_matches(&mut ok, 2).unwrap();
+        assert_eq!(ok.iter().map(|m| m.pos).collect::<Vec<_>>(), vec![9, 1]);
+
+        let mut bad = vec![Match { pos: 0, dist: f64::NAN }];
+        let err = rank_matches(&mut bad, 1).unwrap_err();
+        assert!(err.to_string().contains("NaN"), "{err}");
     }
 }

@@ -14,14 +14,18 @@
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 #[cfg(feature = "xla")]
 use crate::coordinator::batcher;
-use crate::coordinator::protocol::{is_stats_line, ErrorResponse, QueryRequest, QueryResponse};
+use crate::coordinator::protocol::{
+    is_stats_line, DeadlineExceeded, ErrorResponse, Overloaded, QueryRequest, QueryResponse,
+    WorkerLost,
+};
 use crate::coordinator::router::{route_cohort_topk_obs, route_query_topk_obs};
 use crate::coordinator::worker::{worker_loop, WorkItem, DEFAULT_SYNC_EVERY};
 use crate::distances::metric::Metric;
@@ -58,6 +62,15 @@ pub struct ServiceConfig {
     /// artifacts directory; `None` disables the XLA suite. Ignored when
     /// the crate is built without the `xla` feature.
     pub artifacts_dir: Option<std::path::PathBuf>,
+    /// admission limit: how many admitted-but-unanswered queries the
+    /// service tolerates before shedding new arrivals with an
+    /// `overloaded` error (`repro serve --max-pending`; 0 = unbounded,
+    /// the pre-admission behaviour).
+    pub max_pending: usize,
+    /// deadline budget, in milliseconds, applied to requests that carry
+    /// no `deadline_ms` of their own (`repro serve --default-deadline-ms`;
+    /// 0 = none — such queries scan exhaustively and read no clocks).
+    pub default_deadline_ms: f64,
 }
 
 impl Default for ServiceConfig {
@@ -69,7 +82,31 @@ impl Default for ServiceConfig {
             batch_window: 1,
             batch_deadline_ms: 0,
             artifacts_dir: None,
+            max_pending: 0,
+            default_deadline_ms: 0.0,
         }
+    }
+}
+
+/// One shard worker's channel and thread, kept together so a dead worker
+/// can be respawned in place (same shard index, same registry cell).
+struct WorkerSlot {
+    tx: Sender<WorkItem>,
+    /// `None` only if a respawn attempt itself failed; sends to the dead
+    /// `tx` then error as "worker pool shut down"
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Admission slot for one in-flight query: decrements the pending count
+/// when the query is answered (or abandoned), however the serving path
+/// exits.
+struct AdmitGuard<'a> {
+    pending: &'a AtomicU64,
+}
+
+impl Drop for AdmitGuard<'_> {
+    fn drop(&mut self) {
+        self.pending.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -117,8 +154,10 @@ fn engine_loop(
 pub struct Service {
     reference: Arc<Vec<f64>>,
     index: Arc<RefIndex>,
-    senders: Vec<Sender<WorkItem>>,
-    handles: Vec<JoinHandle<()>>,
+    /// worker pool behind a mutex so [`Service::revive_dead_workers`]
+    /// can swap dead slots while other threads keep submitting; locked
+    /// only to clone senders out or to respawn, never across a scan
+    workers: Mutex<Vec<WorkerSlot>>,
     #[cfg(feature = "xla")]
     engine_tx: Option<Sender<EngineJob>>,
     #[cfg(feature = "xla")]
@@ -127,8 +166,13 @@ pub struct Service {
     scan_mode: ScanMode,
     batch_window: usize,
     batch_deadline_ms: u64,
+    max_pending: usize,
+    default_deadline_ms: f64,
     busy: Arc<AtomicU64>,
     served: AtomicU64,
+    /// queries admitted but not yet answered (the admission-control
+    /// count that `max_pending` bounds)
+    pending: AtomicU64,
     /// sharded metrics registry: one cell per worker (handed out at spawn
     /// time), one for the service thread; merged by [`Service::metrics`]
     registry: MetricsRegistry,
@@ -146,18 +190,9 @@ impl Service {
         let index = Arc::new(RefIndex::new(Arc::clone(&reference)));
         let busy = Arc::new(AtomicU64::new(0));
         let registry = MetricsRegistry::new(cfg.shards);
-        let mut senders = Vec::new();
-        let mut handles = Vec::new();
+        let mut slots = Vec::new();
         for i in 0..cfg.shards {
-            let (tx, rx) = channel::<WorkItem>();
-            let busy = Arc::clone(&busy);
-            let cell = registry.worker_cell(i);
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("shard-{i}"))
-                    .spawn(move || worker_loop(rx, busy, Some(cell)))?,
-            );
-            senders.push(tx);
+            slots.push(Self::spawn_worker(i, &busy, &registry)?);
         }
         #[cfg(feature = "xla")]
         let (engine_tx, engine_handle) = match &cfg.artifacts_dir {
@@ -175,8 +210,7 @@ impl Service {
         Ok(Self {
             reference,
             index,
-            senders,
-            handles,
+            workers: Mutex::new(slots),
             #[cfg(feature = "xla")]
             engine_tx,
             #[cfg(feature = "xla")]
@@ -185,10 +219,104 @@ impl Service {
             scan_mode: cfg.scan_mode,
             batch_window: cfg.batch_window.max(1),
             batch_deadline_ms: cfg.batch_deadline_ms,
+            max_pending: cfg.max_pending,
+            default_deadline_ms: cfg.default_deadline_ms,
             busy,
             served: AtomicU64::new(0),
+            pending: AtomicU64::new(0),
             registry,
         })
+    }
+
+    /// Spawn one shard worker thread wired to the registry cell for its
+    /// index (a respawn reuses the dead worker's cell, so its counters
+    /// survive the thread).
+    fn spawn_worker(
+        i: usize,
+        busy: &Arc<AtomicU64>,
+        registry: &MetricsRegistry,
+    ) -> Result<WorkerSlot> {
+        let (tx, rx) = channel::<WorkItem>();
+        let busy = Arc::clone(busy);
+        let cell = registry.worker_cell(i);
+        let handle = std::thread::Builder::new()
+            .name(format!("shard-{i}"))
+            .spawn(move || worker_loop(rx, busy, Some(cell)))?;
+        Ok(WorkerSlot { tx, handle: Some(handle) })
+    }
+
+    /// The worker pool, poison-tolerant: a thread that panicked while
+    /// holding the lock left the slots intact (the lock guards only
+    /// clone/replace operations), so shutdown and respawn keep going.
+    fn pool(&self) -> MutexGuard<'_, Vec<WorkerSlot>> {
+        self.workers.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Snapshot of the live worker channels for one fan-out.
+    fn senders(&self) -> Vec<Sender<WorkItem>> {
+        self.pool().iter().map(|s| s.tx.clone()).collect()
+    }
+
+    /// Supervision sweep: join every worker thread that has died, record
+    /// it, and respawn a replacement on the same shard index (same
+    /// registry cell, same busy count). Returns how many were revived.
+    /// Called when a fan-in reports [`WorkerLost`]; harmless when every
+    /// worker is healthy.
+    pub fn revive_dead_workers(&self) -> usize {
+        let cell = self.registry.service_cell();
+        let mut pool = self.pool();
+        let mut revived = 0;
+        for (i, slot) in pool.iter_mut().enumerate() {
+            let dead = slot.handle.as_ref().map_or(true, |h| h.is_finished());
+            if !dead {
+                continue;
+            }
+            if let Some(h) = slot.handle.take() {
+                // per-job panics are caught inside the worker; a join
+                // error means a panic escaped the loop itself — record
+                // it the same way
+                if h.join().is_err() {
+                    cell.add_counter(Counters::SLOT_WORKER_PANICS, 1);
+                }
+            }
+            match Self::spawn_worker(i, &self.busy, &self.registry) {
+                Ok(fresh) => {
+                    *slot = fresh;
+                    cell.add_counter(Counters::SLOT_WORKER_RESPAWNS, 1);
+                    revived += 1;
+                }
+                // spawn failed (resource exhaustion): leave the slot
+                // dead — fan-outs to it surface "worker pool shut down"
+                Err(_) => {}
+            }
+        }
+        revived
+    }
+
+    /// Admission control: claim a pending slot or shed the query with a
+    /// typed [`Overloaded`] error (counted under `shed_queries`).
+    fn admit(&self) -> Result<AdmitGuard<'_>> {
+        let prev = self.pending.fetch_add(1, Ordering::Relaxed);
+        if self.max_pending > 0 && prev >= self.max_pending as u64 {
+            self.pending.fetch_sub(1, Ordering::Relaxed);
+            self.registry.service_cell().add_counter(Counters::SLOT_SHED_QUERIES, 1);
+            return Err(anyhow::Error::new(Overloaded {
+                pending: prev,
+                max_pending: self.max_pending,
+            }));
+        }
+        Ok(AdmitGuard { pending: &self.pending })
+    }
+
+    /// The deadline budget (ms) governing `req`: its own wire field if
+    /// present, else the service default; `None` means exhaustive.
+    fn budget_of(&self, req: &QueryRequest) -> Option<f64> {
+        req.deadline_ms
+            .filter(|ms| ms.is_finite() && *ms > 0.0)
+            .or_else(|| {
+                (self.default_deadline_ms.is_finite() && self.default_deadline_ms > 0.0)
+                    .then_some(self.default_deadline_ms)
+            })
     }
 
     /// Convenience: open artifacts if the directory exists.
@@ -238,7 +366,30 @@ impl Service {
 
     /// Serve one request to completion (blocking): top-k over the shard
     /// workers, reference-side artifacts served by the shared index.
+    ///
+    /// Failure surface: sheds with a typed [`Overloaded`] error when the
+    /// pending count is at `max_pending`; with a deadline budget (wire
+    /// `deadline_ms` or the service default) an out-of-time query
+    /// returns either a `partial: true` top-k of what was scanned or a
+    /// typed [`DeadlineExceeded`] error when nothing was; a worker panic
+    /// surfaces as a per-query error and a lost worker thread is
+    /// respawned and the fan-out retried once.
     pub fn submit(&self, req: &QueryRequest) -> Result<QueryResponse> {
+        let _admitted = self.admit()?;
+        let deadline = self
+            .budget_of(req)
+            .map(|ms| (Instant::now() + Duration::from_secs_f64(ms / 1e3), ms));
+        self.submit_admitted(req, deadline)
+    }
+
+    /// [`Service::submit`] past admission, with the resolved deadline
+    /// `(expiry, budget_ms)` — `None` scans exhaustively and reads no
+    /// clocks (the bitwise-pinned pre-deadline path).
+    fn submit_admitted(
+        &self,
+        req: &QueryRequest,
+        deadline: Option<(Instant, f64)>,
+    ) -> Result<QueryResponse> {
         let timer = Timer::start();
         // in-process callers can bypass the wire parser's validation, and
         // the XLA branch below never reaches the router's check — reject
@@ -247,11 +398,13 @@ impl Service {
         let w = req
             .metric
             .effective_window(req.query.len(), window_cells(req.query.len(), req.window_ratio));
-        let (matches, counters) = match req.suite {
+        let (matches, counters, truncated) = match req.suite {
             #[cfg(feature = "xla")]
             Suite::UcrMonXla => {
                 // the batched prefilter path keeps a single best-so-far
-                // and its LB_Keogh prefilter is DTW-specific
+                // and its LB_Keogh prefilter is DTW-specific; it also
+                // runs to completion — deadlines apply to the sharded
+                // scalar scans only
                 anyhow::ensure!(req.k == 1, "suite {} serves k = 1 only", req.suite.name());
                 anyhow::ensure!(
                     matches!(req.metric, Metric::Cdtw),
@@ -259,7 +412,7 @@ impl Service {
                     req.suite.name()
                 );
                 let (m, c) = self.submit_xla(req, w, false)?;
-                (vec![m], c)
+                (vec![m], c, false)
             }
             #[cfg(not(feature = "xla"))]
             Suite::UcrMonXla => anyhow::bail!(
@@ -282,27 +435,79 @@ impl Service {
                 // accounting and the fan-in stage time
                 let cell = self.registry.service_cell();
                 cell.flush_counters(&pre);
-                let (matches, mut counters) = route_query_topk_obs(
-                    &self.senders,
-                    &self.reference,
-                    &req.query,
-                    w,
-                    req.metric,
-                    req.suite,
-                    self.scan_mode,
-                    req.k,
-                    self.sync_every,
-                    denv,
-                    Some(stats),
-                    ScanObs(Some(cell)),
-                )?;
+                let route = |senders: &[Sender<WorkItem>]| {
+                    route_query_topk_obs(
+                        senders,
+                        &self.reference,
+                        &req.query,
+                        w,
+                        req.metric,
+                        req.suite,
+                        self.scan_mode,
+                        req.k,
+                        self.sync_every,
+                        denv.clone(),
+                        Some(Arc::clone(&stats)),
+                        deadline.map(|(d, _)| d),
+                        ScanObs(Some(cell)),
+                    )
+                };
+                let routed = match route(&self.senders()) {
+                    // a worker thread died without replying: supervise —
+                    // join + respawn the dead shard(s) — and retry once
+                    Err(e) if e.root_cause().downcast_ref::<WorkerLost>().is_some() => {
+                        self.revive_dead_workers();
+                        route(&self.senders())
+                    }
+                    r => r,
+                };
+                let (matches, mut counters, truncated) = routed?;
                 counters.merge(&pre);
                 cell.record_dist(DistKind::TopkTighten, counters.topk_updates);
-                (matches, counters)
+                (matches, counters, truncated)
             }
         };
+        self.finish_response(req.id, matches, counters, deadline, truncated, &timer, 1)
+    }
+
+    /// Shared tail of every serving path: deadline accounting (timeout
+    /// error, partial flag, slack histogram), served count, response
+    /// assembly.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_response(
+        &self,
+        id: u64,
+        matches: Vec<Match>,
+        counters: Counters,
+        deadline: Option<(Instant, f64)>,
+        truncated: bool,
+        timer: &Timer,
+        cohort: usize,
+    ) -> Result<QueryResponse> {
+        let cell = self.registry.service_cell();
+        if truncated {
+            // the deadline cut the scan short: a top-k of what was
+            // scanned in time goes out flagged partial; nothing scanned
+            // at all is a timeout
+            cell.add_counter(Counters::SLOT_DEADLINE_TIMEOUTS, 1);
+            if matches.is_empty() {
+                let budget_ms = deadline.map(|(_, ms)| ms).unwrap_or(0.0);
+                return Err(anyhow::Error::new(DeadlineExceeded { budget_ms }));
+            }
+        } else if let Some((d, _)) = deadline {
+            // in-budget deadline query: remaining slack at response time
+            let slack = d.saturating_duration_since(Instant::now());
+            cell.record_stage_ns(Stage::DeadlineSlack, slack.as_nanos() as u64);
+        }
         self.served.fetch_add(1, Ordering::Relaxed);
-        Ok(Self::make_response(req.id, matches, &counters, timer.elapsed_secs() * 1e3, 1))
+        Ok(Self::make_response(
+            id,
+            matches,
+            &counters,
+            timer.elapsed_secs() * 1e3,
+            cohort,
+            truncated,
+        ))
     }
 
     /// Assemble the wire response for one answered query.
@@ -312,6 +517,7 @@ impl Service {
         counters: &Counters,
         latency_ms: f64,
         cohort: usize,
+        partial: bool,
     ) -> QueryResponse {
         let pruned = counters.lb_kim_prunes
             + counters.lb_keogh_eq_prunes
@@ -329,6 +535,7 @@ impl Service {
             pruned,
             dtw_calls: counters.dtw_calls,
             cohort,
+            partial,
         }
     }
 
@@ -338,6 +545,7 @@ impl Service {
     #[cfg(feature = "xla")]
     pub fn submit_xla_full(&self, req: &QueryRequest) -> Result<QueryResponse> {
         let timer = Timer::start();
+        let _admitted = self.admit()?;
         validate_series("query", &req.query)?;
         anyhow::ensure!(
             matches!(req.metric, Metric::Cdtw),
@@ -357,6 +565,7 @@ impl Service {
             pruned: counters.xla_prunes,
             dtw_calls: counters.dtw_calls,
             cohort: 1,
+            partial: false,
         })
     }
 
@@ -374,7 +583,56 @@ impl Service {
     /// their latency (they were answered by the same scan) and carry the
     /// cohort size in [`QueryResponse::cohort`].
     pub fn submit_batch(&self, reqs: &[QueryRequest]) -> Vec<Result<QueryResponse>> {
-        let obs = ScanObs(Some(self.registry.service_cell()));
+        self.submit_batch_inner(reqs, None)
+    }
+
+    /// [`Service::submit_batch`] with optional per-request arrival
+    /// times: deadline budgets count from arrival (a query that waited
+    /// out its whole budget in the coalescer times out at admission,
+    /// before any scan work), and absent arrivals count from now.
+    fn submit_batch_inner(
+        &self,
+        reqs: &[QueryRequest],
+        arrivals: Option<&[Instant]>,
+    ) -> Vec<Result<QueryResponse>> {
+        let cell = self.registry.service_cell();
+        let obs = ScanObs(Some(cell));
+        // admission first: one pending slot per request, shed beyond
+        // max_pending; the guards live until the whole batch is answered
+        let mut shed: Vec<Option<anyhow::Error>> = Vec::with_capacity(reqs.len());
+        let mut guards: Vec<Option<AdmitGuard<'_>>> = Vec::with_capacity(reqs.len());
+        for _ in reqs {
+            match self.admit() {
+                Ok(g) => {
+                    guards.push(Some(g));
+                    shed.push(None);
+                }
+                Err(e) => {
+                    guards.push(None);
+                    shed.push(Some(e));
+                }
+            }
+        }
+        // deadline resolution: one clock read for the whole batch, and
+        // none at all when every request is exhaustive (bitwise pin)
+        let budgets: Vec<Option<f64>> = reqs.iter().map(|r| self.budget_of(r)).collect();
+        let (batch_now, deadlines): (Option<Instant>, Vec<Option<(Instant, f64)>>) =
+            if budgets.iter().all(Option::is_none) {
+                (None, vec![None; reqs.len()])
+            } else {
+                let now = Instant::now();
+                let ds = budgets
+                    .iter()
+                    .enumerate()
+                    .map(|(i, b)| {
+                        b.map(|ms| {
+                            let arrival = arrivals.map_or(now, |a| a[i]);
+                            (arrival + Duration::from_secs_f64(ms / 1e3), ms)
+                        })
+                    })
+                    .collect();
+                (Some(now), ds)
+            };
         let form_timer = obs.stage_timer(Stage::CohortForm);
         let mut out: Vec<Option<Result<QueryResponse>>> = reqs.iter().map(|_| None).collect();
         // cohort key: (qlen, effective window, metric, suite, k)
@@ -382,6 +640,19 @@ impl Service {
         let mut cohorts: Vec<(Key, Vec<usize>)> = Vec::new();
         let mut solos: Vec<usize> = Vec::new();
         for (i, req) in reqs.iter().enumerate() {
+            if let Some(e) = shed[i].take() {
+                out[i] = Some(Err(e));
+                continue;
+            }
+            if let (Some(now), Some((d, ms))) = (batch_now, deadlines[i]) {
+                // budget already spent waiting (coalescer queue): a
+                // timeout at admission, no scan work wasted on it
+                if d <= now {
+                    cell.add_counter(Counters::SLOT_DEADLINE_TIMEOUTS, 1);
+                    out[i] = Some(Err(anyhow::Error::new(DeadlineExceeded { budget_ms: ms })));
+                    continue;
+                }
+            }
             let eligible = self.scan_mode == ScanMode::Strip
                 && req.suite != Suite::UcrMonXla
                 && req.k >= 1
@@ -405,19 +676,21 @@ impl Service {
         // the timer covers only the grouping decision, not the serving
         form_timer.stop();
         for i in solos {
-            out[i] = Some(self.submit(&reqs[i]));
+            out[i] = Some(self.submit_admitted(&reqs[i], deadlines[i]));
         }
         for ((n, w, metric, suite, k), idxs) in cohorts {
             obs.record_dist(DistKind::CohortSize, idxs.len() as u64);
             if idxs.len() == 1 {
                 let qi = idxs[0];
-                out[qi] = Some(self.submit(&reqs[qi]));
+                out[qi] = Some(self.submit_admitted(&reqs[qi], deadlines[qi]));
                 continue;
             }
-            match self.submit_cohort(reqs, n, w, metric, suite, k, &idxs) {
+            let member_deadlines: Vec<Option<(Instant, f64)>> =
+                idxs.iter().map(|&qi| deadlines[qi]).collect();
+            match self.submit_cohort(reqs, n, w, metric, suite, k, &idxs, &member_deadlines) {
                 Ok(responses) => {
                     for (&qi, resp) in idxs.iter().zip(responses) {
-                        out[qi] = Some(Ok(resp));
+                        out[qi] = Some(resp);
                     }
                 }
                 // a cohort-level failure (e.g. worker pool gone) fails
@@ -455,7 +728,8 @@ impl Service {
             })
             .collect();
         let plain: Vec<QueryRequest> = reqs.iter().map(|(r, _)| r.clone()).collect();
-        let mut out = self.submit_batch(&plain);
+        let arrivals: Vec<Instant> = reqs.iter().map(|(_, enqueued)| *enqueued).collect();
+        let mut out = self.submit_batch_inner(&plain, Some(&arrivals));
         for (resp, waited_ms) in out.iter_mut().zip(queue_ms) {
             if let Ok(resp) = resp {
                 resp.queue_ms = Some(waited_ms);
@@ -466,7 +740,10 @@ impl Service {
 
     /// One cohort through the shared strip pass: per-member index
     /// accounting (first lookup builds, the rest hit), one
-    /// [`route_cohort_topk`] fan-out, one response per member.
+    /// [`route_cohort_topk`] fan-out, one response per member. The outer
+    /// `Result` is a cohort-level failure (worker pool gone, shard reply
+    /// mismatch) that fails every member; the inner per-member `Result`s
+    /// carry individual deadline timeouts.
     #[allow(clippy::too_many_arguments)]
     fn submit_cohort(
         &self,
@@ -477,7 +754,8 @@ impl Service {
         suite: Suite,
         k: usize,
         idxs: &[usize],
-    ) -> Result<Vec<QueryResponse>> {
+        deadlines: &[Option<(Instant, f64)>],
+    ) -> Result<Vec<Result<QueryResponse>>> {
         let timer = Timer::start();
         let cell = self.registry.service_cell();
         let mut pres = Vec::with_capacity(idxs.len());
@@ -490,29 +768,52 @@ impl Service {
         }
         let (stats, denv) = artifacts.expect("cohort has members");
         let queries: Vec<&[f64]> = idxs.iter().map(|&qi| reqs[qi].query.as_slice()).collect();
-        let per_query = route_cohort_topk_obs(
-            &self.senders,
-            &self.reference,
-            &queries,
-            w,
-            metric,
-            suite,
-            k,
-            self.sync_every,
-            denv,
-            stats,
-            ScanObs(Some(cell)),
-        )?;
-        let latency_ms = timer.elapsed_secs() * 1e3;
-        self.served.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+        // the router wants bare expiry instants, and only when at least
+        // one member has one (None keeps the exhaustive path clock-free)
+        let router_deadlines: Option<Vec<Option<Instant>>> = deadlines
+            .iter()
+            .any(Option::is_some)
+            .then(|| deadlines.iter().map(|d| d.map(|(at, _)| at)).collect());
+        let route = |senders: &[Sender<WorkItem>]| {
+            route_cohort_topk_obs(
+                senders,
+                &self.reference,
+                &queries,
+                w,
+                metric,
+                suite,
+                k,
+                self.sync_every,
+                denv.clone(),
+                Arc::clone(&stats),
+                router_deadlines.as_deref(),
+                ScanObs(Some(cell)),
+            )
+        };
+        let per_query = match route(&self.senders()) {
+            Err(e) if e.root_cause().downcast_ref::<WorkerLost>().is_some() => {
+                self.revive_dead_workers();
+                route(&self.senders())
+            }
+            r => r,
+        }?;
+        let cohort = idxs.len();
         Ok(idxs
             .iter()
             .zip(per_query)
-            .zip(pres)
-            .map(|((&qi, (matches, mut counters)), pre)| {
+            .zip(pres.into_iter().zip(deadlines))
+            .map(|((&qi, (matches, mut counters, truncated)), (pre, &deadline))| {
                 counters.merge(&pre);
                 cell.record_dist(DistKind::TopkTighten, counters.topk_updates);
-                Self::make_response(reqs[qi].id, matches, &counters, latency_ms, idxs.len())
+                self.finish_response(
+                    reqs[qi].id,
+                    matches,
+                    counters,
+                    deadline,
+                    truncated,
+                    &timer,
+                    cohort,
+                )
             })
             .collect())
     }
@@ -540,12 +841,30 @@ impl Service {
             .then(|| std::time::Duration::from_millis(self.batch_deadline_ms))
     }
 
+    /// Admission limit (0 = unbounded).
+    pub fn max_pending(&self) -> usize {
+        self.max_pending
+    }
+
+    /// Deadline budget applied to requests without their own
+    /// (`None` = none).
+    pub fn default_deadline_ms(&self) -> Option<f64> {
+        (self.default_deadline_ms.is_finite() && self.default_deadline_ms > 0.0)
+            .then_some(self.default_deadline_ms)
+    }
+
+    /// Queries admitted but not yet answered.
+    pub fn pending_queries(&self) -> u64 {
+        self.pending.load(Ordering::Relaxed)
+    }
+
     /// Point-in-time metrics: stamp the service-level gauges, then merge
     /// every registry cell into one [`MetricsSnapshot`].
     pub fn metrics(&self) -> MetricsSnapshot {
         let cell = self.registry.service_cell();
         cell.set_gauge(Gauge::BusyWorkers, self.busy_workers());
         cell.set_gauge(Gauge::QueriesServed, self.queries_served());
+        cell.set_gauge(Gauge::PendingQueries, self.pending_queries());
         self.registry.snapshot()
     }
 
@@ -583,14 +902,30 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
-        // closing the channels ends the worker loops
-        self.senders.clear();
+        // drain the pool first (poison-tolerant: a lock poisoned by a
+        // panicking submitter must not abort shutdown), then close each
+        // channel and join its thread — a panicked worker joins as Err,
+        // which is recorded, never re-thrown out of drop
+        let slots: Vec<WorkerSlot> = {
+            let mut pool = match self.workers.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            pool.drain(..).collect()
+        };
         #[cfg(feature = "xla")]
         {
             self.engine_tx = None;
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        let cell = self.registry.service_cell();
+        for WorkerSlot { tx, handle } in slots {
+            // closing the channel ends the worker loop
+            drop(tx);
+            if let Some(h) = handle {
+                if h.join().is_err() {
+                    cell.add_counter(Counters::SLOT_WORKER_PANICS, 1);
+                }
+            }
         }
         #[cfg(feature = "xla")]
         if let Some(h) = self.engine_handle.take() {
@@ -621,6 +956,7 @@ mod tests {
             suite: Suite::UcrMon,
             k: 1,
             metric: Metric::Cdtw,
+            deadline_ms: None,
         };
         let resp = svc.submit(&req).unwrap();
         let mut c = Counters::new();
@@ -646,6 +982,7 @@ mod tests {
             suite: Suite::UcrMon,
             k,
             metric: Metric::Cdtw,
+            deadline_ms: None,
         };
         let resp = svc.submit(&req).unwrap();
         let mut c = Counters::new();
@@ -673,6 +1010,7 @@ mod tests {
                 suite: Suite::UcrMon,
                 k: 2,
                 metric: Metric::Cdtw,
+                deadline_ms: None,
             };
             svc.submit(&req).unwrap();
         }
@@ -699,6 +1037,7 @@ mod tests {
                     suite: Suite::UcrMon,
                     k: 1,
                     metric: Metric::Cdtw,
+                    deadline_ms: None,
                 };
                 svc.submit(&req).unwrap()
             }));
@@ -725,6 +1064,7 @@ mod tests {
                 suite: Suite::UcrMon,
                 k,
                 metric,
+                deadline_ms: None,
             };
             let resp = svc.submit(&req).unwrap();
             let mut c = Counters::new();
@@ -756,6 +1096,7 @@ mod tests {
             suite: Suite::UcrMon,
             k: 6,
             metric: Metric::Cdtw,
+            deadline_ms: None,
         };
         let scalar_svc = Service::new(
             r.clone(),
@@ -847,6 +1188,7 @@ mod tests {
             suite: Suite::UcrMon,
             k: 3,
             metric: Metric::Cdtw,
+            deadline_ms: None,
         };
         let mut co = BatchCoalescer::new(svc.batch_window(), svc.batch_deadline());
         let t0 = Instant::now();
@@ -895,6 +1237,7 @@ mod tests {
                     suite: Suite::UcrMon,
                     k: 3,
                     metric: Metric::Cdtw,
+                    deadline_ms: None,
                 };
                 let resp = svc.submit(&req).unwrap();
                 // the registry is always attached — results must still be
@@ -959,6 +1302,7 @@ mod tests {
             suite: Suite::UcrMon,
             k,
             metric: Metric::Cdtw,
+            deadline_ms: None,
         };
         let mut bad = qs[0].clone();
         bad[5] = f64::NAN;
@@ -1005,6 +1349,7 @@ mod tests {
             suite: Suite::UcrMon,
             k: 2,
             metric: Metric::Cdtw,
+            deadline_ms: None,
         };
         let resp = QueryResponse::from_json(&svc.handle_line(&req.to_json())).unwrap();
         assert_eq!(resp.id, 5);
@@ -1040,6 +1385,7 @@ mod tests {
                 suite: Suite::UcrMon,
                 k: 1,
                 metric: Metric::Cdtw,
+                deadline_ms: None,
             };
             let err = svc.submit(&req).unwrap_err();
             assert!(err.to_string().contains("non-finite"), "{err}");
@@ -1051,8 +1397,224 @@ mod tests {
             suite: Suite::UcrMon,
             k: 1,
             metric: Metric::Cdtw,
+            deadline_ms: None,
         };
         assert!(svc.submit(&good).is_ok());
+    }
+
+    #[test]
+    fn generous_deadline_is_bitwise_identical_to_no_deadline() {
+        let r = Dataset::Ecg.generate(2400, 91);
+        let q = crate::data::extract_queries(&r, 1, 128, 0.1, 92).remove(0);
+        for mode in [ScanMode::Scalar, ScanMode::Strip] {
+            let svc = Service::new(
+                r.clone(),
+                &ServiceConfig { shards: 3, scan_mode: mode, ..Default::default() },
+            )
+            .unwrap();
+            let base = QueryRequest {
+                id: 1,
+                query: q.clone(),
+                window_ratio: 0.1,
+                suite: Suite::UcrMon,
+                k: 4,
+                metric: Metric::Cdtw,
+                deadline_ms: None,
+            };
+            let want = svc.submit(&base).unwrap();
+            assert!(!want.partial);
+            // a deadline no scan can plausibly hit: same results, down
+            // to the bits, plus a slack observation
+            let got = svc
+                .submit(&QueryRequest { deadline_ms: Some(60_000.0), ..base.clone() })
+                .unwrap();
+            assert!(!got.partial, "{mode:?}");
+            assert_eq!(got.matches.len(), want.matches.len(), "{mode:?}");
+            for (x, y) in got.matches.iter().zip(&want.matches) {
+                assert_eq!(x.pos, y.pos, "{mode:?}");
+                assert_eq!(x.dist.to_bits(), y.dist.to_bits(), "{mode:?}");
+            }
+            assert_eq!(got.candidates, want.candidates, "{mode:?}");
+            assert_eq!(got.dtw_calls, want.dtw_calls, "{mode:?}");
+            let snap = svc.metrics();
+            assert_eq!(
+                snap.stages[Stage::DeadlineSlack.index()].count(),
+                1,
+                "{mode:?}: one in-budget deadline query, one slack sample"
+            );
+            assert_eq!(snap.counters.deadline_timeouts, 0, "{mode:?}");
+            // the service-wide default budget takes the same path
+            let dsvc = Service::new(
+                r.clone(),
+                &ServiceConfig {
+                    shards: 3,
+                    scan_mode: mode,
+                    default_deadline_ms: 60_000.0,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(dsvc.default_deadline_ms(), Some(60_000.0));
+            let viad = dsvc.submit(&base).unwrap();
+            assert!(!viad.partial);
+            for (x, y) in viad.matches.iter().zip(&want.matches) {
+                assert_eq!(x.pos, y.pos, "{mode:?}");
+                assert_eq!(x.dist.to_bits(), y.dist.to_bits(), "{mode:?}");
+            }
+            assert!(dsvc.metrics().stages[Stage::DeadlineSlack.index()].count() >= 1);
+        }
+    }
+
+    #[test]
+    fn generous_deadline_cohorts_match_solo_bitwise() {
+        let r = Dataset::Refit.generate(2200, 93);
+        let qs = crate::data::extract_queries(&r, 3, 128, 0.1, 94);
+        let svc = Service::new(
+            r,
+            &ServiceConfig { shards: 2, batch_window: 4, ..Default::default() },
+        )
+        .unwrap();
+        let reqs: Vec<QueryRequest> = qs
+            .into_iter()
+            .enumerate()
+            .map(|(i, q)| QueryRequest {
+                id: i as u64,
+                query: q,
+                window_ratio: 0.1,
+                suite: Suite::UcrMon,
+                k: 3,
+                metric: Metric::Cdtw,
+                deadline_ms: Some(60_000.0),
+            })
+            .collect();
+        let got = svc.submit_batch(&reqs);
+        for (req, resp) in reqs.iter().zip(&got) {
+            let resp = resp.as_ref().unwrap();
+            assert!(!resp.partial);
+            assert_eq!(resp.cohort, reqs.len());
+            let solo = svc
+                .submit(&QueryRequest { deadline_ms: None, ..req.clone() })
+                .unwrap();
+            assert_eq!(resp.matches.len(), solo.matches.len());
+            for (x, y) in resp.matches.iter().zip(&solo.matches) {
+                assert_eq!(x.pos, y.pos);
+                assert_eq!(x.dist.to_bits(), y.dist.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn overload_sheds_with_typed_overloaded_errors() {
+        use crate::coordinator::protocol::{ErrorKind, Overloaded};
+        let r = Dataset::Ppg.generate(1500, 95);
+        let q = crate::data::extract_queries(&r, 1, 96, 0.1, 96).remove(0);
+        let svc = Service::new(
+            r,
+            &ServiceConfig { shards: 2, max_pending: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(svc.max_pending(), 1);
+        let req = QueryRequest {
+            id: 7,
+            query: q,
+            window_ratio: 0.1,
+            suite: Suite::UcrMon,
+            k: 1,
+            metric: Metric::Cdtw,
+            deadline_ms: None,
+        };
+        // a batch admits every member up front: with one slot, the
+        // first is served and the other two shed
+        let got = svc.submit_batch(&[req.clone(), req.clone(), req.clone()]);
+        assert!(got[0].is_ok());
+        for shed in &got[1..] {
+            let err = shed.as_ref().unwrap_err();
+            let o = err.root_cause().downcast_ref::<Overloaded>().expect("typed shed error");
+            assert_eq!(o.max_pending, 1);
+            let wire = ErrorResponse::new(7, err);
+            assert_eq!(wire.kind, Some(ErrorKind::Overloaded));
+        }
+        let snap = svc.metrics();
+        assert_eq!(snap.counters.shed_queries, 2);
+        assert_eq!(snap.gauges[Gauge::PendingQueries.index()], 0, "slots released");
+        // capacity freed: the service keeps serving
+        assert_eq!(svc.pending_queries(), 0);
+        assert!(svc.submit(&req).is_ok());
+    }
+
+    #[test]
+    fn expired_budget_times_out_at_admission_without_scanning() {
+        use crate::coordinator::protocol::{DeadlineExceeded, ErrorKind};
+        let r = Dataset::Ecg.generate(1500, 97);
+        let q = crate::data::extract_queries(&r, 1, 96, 0.1, 98).remove(0);
+        let svc = Service::new(r, &ServiceConfig::default()).unwrap();
+        let req = QueryRequest {
+            id: 3,
+            query: q,
+            window_ratio: 0.1,
+            suite: Suite::UcrMon,
+            k: 1,
+            metric: Metric::Cdtw,
+            deadline_ms: Some(1.0),
+        };
+        // the query waited out its whole 1ms budget in the coalescer
+        let stale = Instant::now().checked_sub(Duration::from_millis(50)).unwrap();
+        let err = svc.submit_batch_timed(&[(req, stale)]).remove(0).unwrap_err();
+        let d = err.root_cause().downcast_ref::<DeadlineExceeded>().expect("typed timeout");
+        assert_eq!(d.budget_ms, 1.0);
+        assert_eq!(ErrorResponse::new(3, &err).kind, Some(ErrorKind::Timeout));
+        let snap = svc.metrics();
+        assert_eq!(snap.counters.deadline_timeouts, 1);
+        assert_eq!(snap.counters.candidates, 0, "no scan work was spent on it");
+        assert_eq!(svc.queries_served(), 0);
+    }
+
+    #[test]
+    fn tiny_deadline_times_out_or_answers_partial_and_service_recovers() {
+        use crate::coordinator::protocol::{DeadlineExceeded, ErrorKind};
+        let r = Dataset::Pamap2.generate(8000, 99);
+        let q = crate::data::extract_queries(&r, 1, 128, 0.1, 100).remove(0);
+        let svc = Service::new(r.clone(), &ServiceConfig { shards: 2, ..Default::default() })
+            .unwrap();
+        let req = QueryRequest {
+            id: 11,
+            query: q.clone(),
+            window_ratio: 0.1,
+            suite: Suite::UcrMon,
+            k: 2,
+            metric: Metric::Cdtw,
+            deadline_ms: Some(0.001),
+        };
+        // 1µs cannot cover an 8k-point scan: either nothing was scanned
+        // in time (typed timeout) or some strips made it (partial top-k)
+        match svc.submit(&req) {
+            Ok(resp) => {
+                assert!(resp.partial, "in-budget answer impossible at 1µs");
+                assert!(!resp.matches.is_empty());
+                assert!(resp.matches.iter().all(|m| m.dist.is_finite()));
+            }
+            Err(e) => {
+                assert!(
+                    e.root_cause().downcast_ref::<DeadlineExceeded>().is_some(),
+                    "unexpected error: {e:#}"
+                );
+                assert_eq!(ErrorResponse::new(11, &e).kind, Some(ErrorKind::Timeout));
+            }
+        }
+        assert_eq!(svc.metrics().counters.deadline_timeouts, 1);
+        // the deadline hit is per-query state only: the next exhaustive
+        // submit answers bitwise-normally
+        let full = svc
+            .submit(&QueryRequest { deadline_ms: None, ..req.clone() })
+            .unwrap();
+        assert!(!full.partial);
+        let mut c = Counters::new();
+        let want =
+            search_subsequence_topk(&r, &q, window_cells(q.len(), 0.1), 2, Suite::UcrMon, &mut c);
+        for (g, m) in full.matches.iter().zip(&want) {
+            assert_eq!(g.pos, m.pos);
+            assert_eq!(g.dist.to_bits(), m.dist.to_bits());
+        }
     }
 
     #[test]
@@ -1067,6 +1629,7 @@ mod tests {
             suite: Suite::UcrMonXla,
             k: 1,
             metric: Metric::Cdtw,
+            deadline_ms: None,
         };
         assert!(svc.submit(&req).is_err());
         assert!(!svc.has_engine());
@@ -1091,6 +1654,7 @@ mod tests {
             suite: Suite::UcrMonXla,
             k: 1,
             metric: Metric::Cdtw,
+            deadline_ms: None,
         };
         let err = svc.submit(&req).unwrap_err();
         assert!(err.to_string().contains("unavailable"), "{err}");

@@ -1,6 +1,7 @@
-//! Shared search state: the global abandon threshold.
+//! Shared search state: the global abandon threshold and the
+//! cross-thread cancellation flag.
 //!
-//! This is the serving-layer analogue of the paper's upper-bound
+//! [`SharedUb`] is the serving-layer analogue of the paper's upper-bound
 //! tightening, generalised to top-k: every shard worker abandons against
 //! the tightest *k-th best* distance any shard has published (a shard
 //! whose local heap holds k results publishes its k-th best — the union
@@ -8,8 +9,14 @@
 //! value is a valid global cutoff; with k = 1 this degenerates to the
 //! seed's shared best-so-far). Implemented as an atomic f64 (bits in an
 //! `AtomicU64`) — lock-free on the hot path.
+//!
+//! [`CancelToken`] extends the same idea from distances to whole
+//! queries: when the router gives up on a query (its deadline expired
+//! during fan-in), it cancels the token so shards still scanning for it
+//! stop at their next strip boundary instead of finishing work nobody
+//! will read.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Lock-free shared upper bound (monotonically non-increasing).
@@ -50,6 +57,33 @@ impl SharedUb {
     }
 }
 
+/// One-way cross-thread cancellation flag: set once by the router when a
+/// query's deadline expires mid-fan-in, observed by shard workers at
+/// strip boundaries. Relaxed ordering is sufficient — cancellation is
+/// advisory (a shard that misses the flag merely finishes its strip) and
+/// carries no data dependency.
+#[derive(Debug, Default)]
+pub struct CancelToken {
+    flag: AtomicBool,
+}
+
+impl CancelToken {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Request cancellation (idempotent).
+    #[inline]
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,5 +113,19 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(ub.get(), 1.0);
+    }
+
+    #[test]
+    fn cancel_token_is_one_way_and_visible_across_threads() {
+        let token = CancelToken::new();
+        assert!(!token.is_cancelled());
+        let t = {
+            let token = Arc::clone(&token);
+            std::thread::spawn(move || token.cancel())
+        };
+        t.join().unwrap();
+        assert!(token.is_cancelled());
+        token.cancel(); // idempotent
+        assert!(token.is_cancelled());
     }
 }

@@ -8,12 +8,15 @@
 //! `end + qlen - 1` points — so every window is scanned by exactly one
 //! shard and none is missed (tested in `integration_coordinator`).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::bounds::batch::{CohortScratch, DEFAULT_STRIP};
-use crate::coordinator::state::SharedUb;
+use crate::coordinator::state::{CancelToken, SharedUb};
+use crate::fault;
 use crate::index::ref_index::BucketStats;
 use crate::index::topk::TopK;
 use crate::metrics::Counters;
@@ -73,13 +76,26 @@ pub fn scan_shard_topk(
         shared,
         sync_every,
         counters,
+        None,
+        None,
         ScanObs::OFF,
     )
+    .0
 }
 
-/// [`scan_shard_topk`] with an observability handle — the worker-loop
-/// entry, so scan-stage latencies land in the worker's registry cell.
-/// Attaching a cell changes no result bit.
+/// [`scan_shard_topk`] with an observability handle, an optional
+/// deadline and an optional cancellation token — the worker-loop entry,
+/// so scan-stage latencies land in the worker's registry cell. Attaching
+/// a cell changes no result bit.
+///
+/// Deadline and cancellation are honoured at block boundaries — in
+/// [`ScanMode::Strip`] the block *is* the strip, so this is the strip
+/// boundary the deadline contract names; in [`ScanMode::Scalar`] the
+/// granularity is `sync_every` positions. Every block that ran is
+/// complete, so counter conservation holds on truncated scans. Returns
+/// the local top-k plus whether the scan was truncated. With
+/// `deadline = None` and `cancel = None` no clock is read and the scan
+/// is bitwise-identical to the pre-deadline worker.
 #[allow(clippy::too_many_arguments)]
 pub fn scan_shard_topk_obs(
     reference: &[f64],
@@ -94,8 +110,10 @@ pub fn scan_shard_topk_obs(
     shared: &SharedUb,
     sync_every: usize,
     counters: &mut Counters,
+    deadline: Option<Instant>,
+    cancel: Option<&CancelToken>,
     obs: ScanObs<'_>,
-) -> TopK {
+) -> (TopK, bool) {
     let n = ctx.len();
     let end = end.min(reference.len().saturating_sub(n) + 1);
     let block = match mode {
@@ -103,8 +121,15 @@ pub fn scan_shard_topk_obs(
         ScanMode::Strip => DEFAULT_STRIP.min(sync_every.max(1)),
     };
     let mut topk = TopK::new(k);
+    let mut truncated = false;
     let mut block_start = start;
     while block_start < end {
+        if deadline.is_some_and(|d| Instant::now() >= d)
+            || cancel.is_some_and(|c| c.is_cancelled())
+        {
+            truncated = true;
+            break;
+        }
         let block_end = (block_start + block).min(end);
         topk.set_bound(shared.get());
         let src = match stats {
@@ -130,7 +155,7 @@ pub fn scan_shard_topk_obs(
         }
         block_start = block_end;
     }
-    topk
+    (topk, truncated)
 }
 
 /// The scalar (`k = 1`) shard scan the seed exposed; returns the shard's
@@ -173,6 +198,27 @@ pub enum WorkItem {
     Cohort(CohortJob),
 }
 
+/// A shard's successful contribution to one query: its local top-k
+/// (ascending), its counters, and whether a deadline or cancellation
+/// truncated its scan at a block boundary.
+pub struct ShardOk {
+    pub matches: Vec<Match>,
+    pub counters: Counters,
+    pub truncated: bool,
+}
+
+/// What a worker sends back for one shard of a single-query job: `Ok` is
+/// the shard's result (possibly truncated), `Err` carries the panic
+/// message when the scan panicked inside the worker's panic domain — so
+/// fan-in always receives `shards` replies and can never deadlock on a
+/// poisoned worker.
+pub type ShardReply = Result<ShardOk, String>;
+
+/// The cohort analogue of [`ShardReply`]: one [`ShardOk`] per member (in
+/// cohort order), or the panic message that took the whole shard pass
+/// down.
+pub type CohortShardReply = Result<Vec<ShardOk>, String>;
+
 /// One shard of a **query-cohort** scan: the worker runs one strip-major
 /// pass over `[start, end)` serving every member at once
 /// ([`crate::search::cohort::scan_cohort_topk`]); each member carries its
@@ -182,11 +228,12 @@ pub struct CohortJob {
     pub reference: Arc<Vec<f64>>,
     pub start: usize,
     pub end: usize,
-    /// one (fresh context, cross-shard threshold) pair per cohort member,
-    /// in cohort order — contexts are built pooled
+    /// one (fresh context, cross-shard threshold, deadline) triple per
+    /// cohort member, in cohort order — contexts are built pooled
     /// ([`QueryContext::with_metric_pooled`]): the worker's shared
-    /// [`CohortPool`] provides the kernel buffers
-    pub members: Vec<(QueryContext, Arc<SharedUb>)>,
+    /// [`CohortPool`] provides the kernel buffers. A member's deadline is
+    /// checked at its strip boundaries; `None` reads no clock.
+    pub members: Vec<(QueryContext, Arc<SharedUb>, Option<Instant>)>,
     /// reference envelopes served by the shared index (cohorts always
     /// run over an indexed reference)
     pub denv: Option<Arc<DataEnvelopes>>,
@@ -197,9 +244,11 @@ pub struct CohortJob {
     /// how many results each member wants
     pub k: usize,
     pub sync_every: usize,
-    /// per-member (local top-k ascending, per-member counters), in the
-    /// same order as `members`
-    pub reply: Sender<Vec<(Vec<Match>, Counters)>>,
+    /// set by the router when it gives up on this cohort's fan-in: the
+    /// scan stops at its next strip boundary
+    pub cancel: Option<Arc<CancelToken>>,
+    /// one [`ShardOk`] per member in cohort order, or the panic message
+    pub reply: Sender<CohortShardReply>,
 }
 
 /// A unit of shard work dispatched to a worker thread.
@@ -220,8 +269,122 @@ pub struct Job {
     pub k: usize,
     pub shared: Arc<SharedUb>,
     pub sync_every: usize,
-    /// local top-k (ascending) + this shard's counters
-    pub reply: Sender<(Vec<Match>, Counters)>,
+    /// optional deadline budget, checked at block boundaries
+    pub deadline: Option<Instant>,
+    /// set by the router when it gives up on this query's fan-in
+    pub cancel: Option<Arc<CancelToken>>,
+    /// this shard's result (or the panic message that killed the job)
+    pub reply: Sender<ShardReply>,
+}
+
+/// Decrements the busy gauge on drop, so it survives panics unwinding
+/// through the job body and early returns (injected worker death).
+struct BusyGuard<'a>(&'a AtomicU64);
+
+impl<'a> BusyGuard<'a> {
+    fn enter(busy: &'a AtomicU64) -> Self {
+        busy.fetch_add(1, Ordering::Relaxed);
+        Self(busy)
+    }
+}
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Human-readable form of a panic payload (panics carry `&str` or
+/// `String` in practice; anything else gets a placeholder).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one single-query shard job to completion. Factored out of the
+/// loop so [`worker_loop`] can wrap it in a panic domain; counters are
+/// flushed to the cell only on success, so a panicked job contributes
+/// nothing to the registry and the conservation identities stay intact.
+fn run_single(mut job: Job, cell: &Option<Arc<ObsCell>>) -> ShardOk {
+    if fault::fire(fault::WORKER_PANIC) {
+        panic!("injected fault: {}", fault::WORKER_PANIC);
+    }
+    let obs = ScanObs(cell.as_deref());
+    let mut counters = Counters::new();
+    let (topk, truncated) = scan_shard_topk_obs(
+        &job.reference,
+        job.start,
+        job.end,
+        &mut job.ctx,
+        job.denv.as_deref(),
+        job.stats.as_deref(),
+        job.suite,
+        job.scan_mode,
+        job.k,
+        &job.shared,
+        job.sync_every,
+        &mut counters,
+        job.deadline,
+        job.cancel.as_deref(),
+        obs,
+    );
+    if let Some(cell) = cell {
+        cell.flush_counters(&counters);
+    }
+    ShardOk { matches: topk.into_sorted(), counters, truncated }
+}
+
+/// Run one cohort shard job to completion (the cohort analogue of
+/// [`run_single`]).
+fn run_cohort(
+    job: CohortJob,
+    pool: &mut CohortPool,
+    scratch: &mut CohortScratch,
+    cell: &Option<Arc<ObsCell>>,
+) -> Vec<ShardOk> {
+    if fault::fire(fault::WORKER_PANIC) {
+        panic!("injected fault: {}", fault::WORKER_PANIC);
+    }
+    let obs = ScanObs(cell.as_deref());
+    let mut members: Vec<CohortMember> = job
+        .members
+        .into_iter()
+        .map(|(ctx, shared, deadline)| {
+            CohortMember::with_shared(ctx, job.k, shared).with_deadline(deadline)
+        })
+        .collect();
+    scan_cohort_topk_obs(
+        &job.reference,
+        job.start,
+        job.end,
+        &mut members,
+        &job.stats,
+        job.denv.as_deref(),
+        job.suite,
+        job.sync_every,
+        scratch,
+        pool,
+        job.cancel.as_deref(),
+        obs,
+    );
+    if let Some(cell) = cell {
+        for m in &members {
+            cell.flush_counters(&m.counters);
+        }
+    }
+    members
+        .into_iter()
+        .map(|m| ShardOk {
+            matches: m.topk.into_sorted(),
+            counters: m.counters,
+            truncated: m.timed_out,
+        })
+        .collect()
 }
 
 /// Worker loop: run jobs until the channel closes. The worker owns one
@@ -235,67 +398,64 @@ pub struct Job {
 /// service): the scan records stage latencies through it, and the finished
 /// per-job [`Counters`] delta is flushed into it once per job — the single
 /// point where scan counters enter the registry.
+///
+/// **Panic domain.** Each job executes inside `catch_unwind`: a panic in
+/// the scan is converted into an `Err(message)` reply (so the router's
+/// fan-in completes and maps it to an `internal` error for that query
+/// alone), `worker_panics` is bumped on the cell, and the loop keeps
+/// serving the next job on the same thread. The pool and scratch buffers
+/// are plain capacity with no invariants across jobs — every scan resets
+/// them before use — so reusing them after an unwind is sound.
 pub fn worker_loop(rx: Receiver<WorkItem>, busy: Arc<AtomicU64>, cell: Option<Arc<ObsCell>>) {
     let mut pool = CohortPool::default();
     let mut scratch = CohortScratch::default();
-    let obs = ScanObs(cell.as_deref());
     while let Ok(item) = rx.recv() {
-        busy.fetch_add(1, Ordering::Relaxed);
+        let _busy = BusyGuard::enter(&busy);
+        // fault sites modelling genuine worker death: the thread returns
+        // (its channel closes) or the job is dropped without a reply —
+        // either way fan-in sees a disconnected channel, not a hang
+        if fault::fire(fault::WORKER_EXIT) {
+            return;
+        }
+        if fault::fire(fault::REPLY_DROP) {
+            continue;
+        }
         match item {
-            WorkItem::Single(mut job) => {
-                let mut counters = Counters::new();
-                let topk = scan_shard_topk_obs(
-                    &job.reference,
-                    job.start,
-                    job.end,
-                    &mut job.ctx,
-                    job.denv.as_deref(),
-                    job.stats.as_deref(),
-                    job.suite,
-                    job.scan_mode,
-                    job.k,
-                    &job.shared,
-                    job.sync_every,
-                    &mut counters,
-                    obs,
-                );
-                if let Some(cell) = &cell {
-                    cell.flush_counters(&counters);
-                }
+            WorkItem::Single(job) => {
+                // the reply handle survives the panic domain so a panicked
+                // job still answers its shard
+                let reply = job.reply.clone();
+                let outcome = catch_unwind(AssertUnwindSafe(|| run_single(job, &cell)));
+                let reply_value = match outcome {
+                    Ok(ok) => Ok(ok),
+                    Err(payload) => {
+                        if let Some(cell) = &cell {
+                            cell.add_counter(Counters::SLOT_WORKER_PANICS, 1);
+                        }
+                        Err(panic_message(payload))
+                    }
+                };
                 // receiver may have given up (service shutdown): ignore
                 // send errors
-                let _ = job.reply.send((topk.into_sorted(), counters));
+                let _ = reply.send(reply_value);
             }
             WorkItem::Cohort(job) => {
-                let mut members: Vec<CohortMember> = job
-                    .members
-                    .into_iter()
-                    .map(|(ctx, shared)| CohortMember::with_shared(ctx, job.k, shared))
-                    .collect();
-                scan_cohort_topk_obs(
-                    &job.reference,
-                    job.start,
-                    job.end,
-                    &mut members,
-                    &job.stats,
-                    job.denv.as_deref(),
-                    job.suite,
-                    job.sync_every,
-                    &mut scratch,
-                    &mut pool,
-                    obs,
-                );
-                if let Some(cell) = &cell {
-                    for m in &members {
-                        cell.flush_counters(&m.counters);
+                let reply = job.reply.clone();
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    run_cohort(job, &mut pool, &mut scratch, &cell)
+                }));
+                let reply_value = match outcome {
+                    Ok(oks) => Ok(oks),
+                    Err(payload) => {
+                        if let Some(cell) = &cell {
+                            cell.add_counter(Counters::SLOT_WORKER_PANICS, 1);
+                        }
+                        Err(panic_message(payload))
                     }
-                }
-                let _ = job.reply.send(
-                    members.into_iter().map(|m| (m.topk.into_sorted(), m.counters)).collect(),
-                );
+                };
+                let _ = reply.send(reply_value);
             }
         }
-        busy.fetch_sub(1, Ordering::Relaxed);
     }
 }
 

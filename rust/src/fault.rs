@@ -1,0 +1,193 @@
+//! Fault injection (failpoints-style) for the coordinator's failure
+//! model. The whole module is behind the `fault-inject` cargo feature:
+//! the default build compiles the inert inline stubs below, so no fault
+//! site adds a single instruction to production code paths.
+//!
+//! A *site* is a named point in the pipeline that consults the registry
+//! when it is reached. Armed sites fire a bounded number of times and
+//! then disarm, so a respawned worker doesn't re-trip the same fault.
+//! Sites compiled in today:
+//!
+//! | site | location | effect when fired |
+//! |------|----------|-------------------|
+//! | `worker.panic` | worker loop, on job receipt | `panic!` inside the worker's catch_unwind domain |
+//! | `worker.exit` | worker loop, on job receipt | the worker thread returns (genuine death: its channel closes) |
+//! | `reply.drop` | worker loop, on job receipt | the job is dropped without a reply (fan-in sees a closed channel) |
+//! | `strip.stall` | `scan_topk_strips`, at each strip boundary | sleeps for the armed duration (a slow scan for deadline tests) |
+//!
+//! Tests arm sites in-process via [`arm`] / [`arm_stall`]; standalone
+//! binaries can arm at startup through the `REPRO_FAULTS` environment
+//! variable (`site=count` or `site=count:stall_ms`, comma-separated),
+//! read once on first use. The registry is a global mutex — tests that
+//! arm faults must serialise themselves (the conformance suite holds its
+//! own lock) because cargo runs tests concurrently.
+
+#[cfg(feature = "fault-inject")]
+mod enabled {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    use std::time::Duration;
+
+    #[derive(Debug, Clone, Copy)]
+    struct Armed {
+        /// remaining times this site fires before disarming
+        remaining: u64,
+        /// stall duration for sleep sites (zero for trip sites)
+        stall: Duration,
+    }
+
+    fn registry() -> &'static Mutex<HashMap<String, Armed>> {
+        static REGISTRY: OnceLock<Mutex<HashMap<String, Armed>>> = OnceLock::new();
+        REGISTRY.get_or_init(|| {
+            let mut map = HashMap::new();
+            if let Ok(spec) = std::env::var("REPRO_FAULTS") {
+                for part in spec.split(',').filter(|p| !p.is_empty()) {
+                    if let Some((site, rest)) = part.split_once('=') {
+                        let (count, stall_ms) = match rest.split_once(':') {
+                            Some((c, s)) => (c.parse().unwrap_or(0), s.parse().unwrap_or(0)),
+                            None => (rest.parse().unwrap_or(0), 0u64),
+                        };
+                        map.insert(
+                            site.to_string(),
+                            Armed {
+                                remaining: count,
+                                stall: Duration::from_millis(stall_ms),
+                            },
+                        );
+                    }
+                }
+            }
+            Mutex::new(map)
+        })
+    }
+
+    /// Arm `site` to fire `count` times, then disarm.
+    pub fn arm(site: &str, count: u64) {
+        registry()
+            .lock()
+            .unwrap()
+            .insert(site.to_string(), Armed { remaining: count, stall: Duration::ZERO });
+    }
+
+    /// Arm a stall site: each of the next `count` passages sleeps
+    /// `stall_ms` milliseconds.
+    pub fn arm_stall(site: &str, stall_ms: u64, count: u64) {
+        registry().lock().unwrap().insert(
+            site.to_string(),
+            Armed { remaining: count, stall: Duration::from_millis(stall_ms) },
+        );
+    }
+
+    /// Disarm every site.
+    pub fn reset() {
+        registry().lock().unwrap().clear();
+    }
+
+    /// Consult a trip site: true exactly `count` times after [`arm`].
+    pub fn fire(site: &str) -> bool {
+        let mut map = registry().lock().unwrap();
+        match map.get_mut(site) {
+            Some(armed) if armed.remaining > 0 => {
+                armed.remaining -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Consult a stall site: sleeps the armed duration if armed, and
+    /// reports whether it stalled.
+    pub fn fire_stall(site: &str) -> bool {
+        let stall = {
+            let mut map = registry().lock().unwrap();
+            match map.get_mut(site) {
+                Some(armed) if armed.remaining > 0 => {
+                    armed.remaining -= 1;
+                    Some(armed.stall)
+                }
+                _ => None,
+            }
+        };
+        // sleep outside the lock so a long stall can't serialise other sites
+        match stall {
+            Some(d) => {
+                std::thread::sleep(d);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+pub use enabled::{arm, arm_stall, fire, fire_stall, reset};
+
+// Default build: inert stubs. `#[inline(always)]` + constant returns let
+// every `if fault::fire(..)` site fold away entirely.
+#[cfg(not(feature = "fault-inject"))]
+mod disabled {
+    #[inline(always)]
+    pub fn arm(_site: &str, _count: u64) {}
+    #[inline(always)]
+    pub fn arm_stall(_site: &str, _stall_ms: u64, _count: u64) {}
+    #[inline(always)]
+    pub fn reset() {}
+    #[inline(always)]
+    pub fn fire(_site: &str) -> bool {
+        false
+    }
+    #[inline(always)]
+    pub fn fire_stall(_site: &str) -> bool {
+        false
+    }
+}
+
+#[cfg(not(feature = "fault-inject"))]
+pub use disabled::{arm, arm_stall, fire, fire_stall, reset};
+
+/// Site name: panic inside the worker loop on job receipt.
+pub const WORKER_PANIC: &str = "worker.panic";
+/// Site name: the worker thread returns (genuine death).
+pub const WORKER_EXIT: &str = "worker.exit";
+/// Site name: the job is dropped without a reply.
+pub const REPLY_DROP: &str = "reply.drop";
+/// Site name: sleep at each strip boundary of `scan_topk_strips`.
+pub const STRIP_STALL: &str = "strip.stall";
+
+#[cfg(all(test, feature = "fault-inject"))]
+mod tests {
+    use super::*;
+
+    // NOTE: the registry is process-global; this module keeps all its
+    // assertions in one #[test] so cargo's parallel runner can't
+    // interleave arms and fires.
+    #[test]
+    fn sites_fire_armed_count_then_disarm() {
+        reset();
+        assert!(!fire(WORKER_PANIC), "unarmed site must not fire");
+        arm(WORKER_PANIC, 2);
+        assert!(fire(WORKER_PANIC));
+        assert!(fire(WORKER_PANIC));
+        assert!(!fire(WORKER_PANIC), "site must disarm after its count");
+        arm_stall(STRIP_STALL, 1, 1);
+        assert!(fire_stall(STRIP_STALL));
+        assert!(!fire_stall(STRIP_STALL));
+        arm(REPLY_DROP, 1);
+        reset();
+        assert!(!fire(REPLY_DROP), "reset must disarm everything");
+    }
+}
+
+#[cfg(all(test, not(feature = "fault-inject")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_stubs_are_inert() {
+        arm(WORKER_PANIC, 10);
+        arm_stall(STRIP_STALL, 5, 10);
+        assert!(!fire(WORKER_PANIC));
+        assert!(!fire_stall(STRIP_STALL));
+        reset();
+    }
+}

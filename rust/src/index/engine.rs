@@ -149,7 +149,7 @@ impl Engine {
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("engine-shard-{i}"))
-                    .spawn(move || worker_loop(rx, busy))?,
+                    .spawn(move || worker_loop(rx, busy, None))?,
             );
             senders.push(tx);
         }

@@ -46,6 +46,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod distances;
+pub mod fault;
 pub mod index;
 pub mod metrics;
 pub mod norm;

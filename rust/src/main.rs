@@ -33,6 +33,7 @@ COMMANDS
               --dataset <name> [--queries N] [--shards N] [--suite S]
               [--k N] [--metric M] [--scan-mode strip|scalar]
               [--batch-window N] [--batch-deadline-ms N]
+              [--max-pending N] [--default-deadline-ms N]
               [--stats-every N] [--ref-len N] [--artifacts DIR]
   bench-suite run the paper's experiment grid and print Fig 5a/5b + tables
               [--axis length|window|all] [--ref-len N] [--datasets a,b]
@@ -55,6 +56,12 @@ Batching: --batch-window N coalesces N in-flight queries; same-shape
          --batch-deadline-ms N flushes a partial window once its oldest
          query has waited N ms, instead of holding it for the window to
          fill (0 = wait for the window, the default)
+Robustness: --max-pending N sheds queries beyond N in flight with an
+         overloaded error line (0 = unbounded, the default).
+         --default-deadline-ms N gives every query without its own
+         deadline_ms an N-ms budget; out-of-time queries answer with a
+         partial top-k (\"partial\":true) or a timeout error line
+         (0 = no budget, the default — exhaustive scans)
 Stats:   --stats-every N emits the live registry's metrics snapshot
          (pinned schema repro.metrics.v1, one JSON line on stderr) after
          every N responses, and once more at end of input (0 = off, the
@@ -196,6 +203,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let batch_window = args.usize_or("batch-window", cfg.serve.batch_window)?.max(1);
     let batch_deadline_ms = args.u64_or("batch-deadline-ms", cfg.serve.batch_deadline_ms)?;
+    let max_pending = args.usize_or("max-pending", cfg.serve.max_pending)?;
+    let default_deadline_ms = args.f64_or("default-deadline-ms", cfg.serve.default_deadline_ms)?;
     let stats_every = args.usize_or("stats-every", 0)?;
     let artifacts = PathBuf::from(args.get_or("artifacts", &cfg.serve.artifacts_dir));
 
@@ -208,12 +217,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             scan_mode,
             batch_window,
             batch_deadline_ms,
+            max_pending,
+            default_deadline_ms,
             artifacts_dir: artifacts.join("manifest.json").exists().then_some(artifacts),
             ..Default::default()
         },
     )?;
     println!(
-        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}, metric {}, top-{k}, {} scan, batch window {}, deadline {}) over {shards} shards",
+        "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}, metric {}, top-{k}, {} scan, batch window {}, deadline {}, max-pending {}, default-deadline {}) over {shards} shards",
         suite.name(),
         metric.name(),
         scan_mode.name(),
@@ -222,13 +233,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Some(d) => format!("{}ms", d.as_millis()),
             None => "none".into(),
         },
+        match svc.max_pending() {
+            0 => "unbounded".into(),
+            n => n.to_string(),
+        },
+        match svc.default_deadline_ms() {
+            Some(ms) => format!("{ms}ms"),
+            None => "none".into(),
+        },
     );
     let mut latencies = Vec::new();
     let t = Timer::start();
     let reqs: Vec<QueryRequest> = queries
         .into_iter()
         .enumerate()
-        .map(|(i, q)| QueryRequest { id: i as u64, query: q, window_ratio: ratio, suite, k, metric })
+        .map(|(i, q)| QueryRequest {
+            id: i as u64,
+            query: q,
+            window_ratio: ratio,
+            suite,
+            k,
+            metric,
+            deadline_ms: None,
+        })
         .collect();
     // a failing request answers with the protocol's error line and the
     // service keeps serving — one bad query must not end the session

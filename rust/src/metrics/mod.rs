@@ -89,6 +89,23 @@ pub struct Counters {
     /// rebuild during candidate scoring means the hoisting regressed —
     /// asserted zero-per-query in the cohort conformance tests
     pub cost_model_rebuilds: u64,
+    /// shard-worker panics caught by the worker loop's panic domain (or
+    /// observed at shutdown join): the query maps to an `internal`
+    /// `ErrorResponse` instead of deadlocking fan-in, and the supervisor
+    /// respawns the thread — nonzero here means a scan bug fired, not
+    /// that the service misbehaved
+    pub worker_panics: u64,
+    /// dead shard-worker threads respawned by the service supervisor (a
+    /// panicked or exited worker is replaced before the query is retried)
+    pub worker_respawns: u64,
+    /// queries shed at admission because the pending-work budget
+    /// (`--max-pending`) was exhausted — answered with an `overloaded`
+    /// `ErrorResponse` instead of buffering unboundedly
+    pub shed_queries: u64,
+    /// queries whose deadline budget expired — at admission or at a strip
+    /// boundary mid-scan — answered with a `timeout` error or a
+    /// `partial: true` top-k
+    pub deadline_timeouts: u64,
     /// distance-kernel calls per metric kind, indexed by
     /// [`Metric::index`] (every entry also counts into `dtw_calls`)
     pub metric_calls: [u64; Metric::COUNT],
@@ -133,7 +150,18 @@ impl Counters {
 
     /// Scalar counter fields, in declaration order — the fixed prefix of
     /// the slot mapping below.
-    pub const SCALAR_SLOTS: usize = 23;
+    pub const SCALAR_SLOTS: usize = 27;
+
+    /// Slot index of `worker_panics` — the service records supervision
+    /// events straight into its [`crate::obs::ObsCell`] by slot (they
+    /// never flow through a scan's `Counters`).
+    pub const SLOT_WORKER_PANICS: usize = 23;
+    /// Slot index of `worker_respawns`.
+    pub const SLOT_WORKER_RESPAWNS: usize = 24;
+    /// Slot index of `shed_queries`.
+    pub const SLOT_SHED_QUERIES: usize = 25;
+    /// Slot index of `deadline_timeouts`.
+    pub const SLOT_DEADLINE_TIMEOUTS: usize = 26;
 
     /// Total number of slots in the canonical flat form: every scalar
     /// field plus the per-metric call/abandon tallies.
@@ -168,6 +196,10 @@ impl Counters {
         "strip_sample_loads_saved",
         "kernel_workspace_regrows",
         "cost_model_rebuilds",
+        "worker_panics",
+        "worker_respawns",
+        "shed_queries",
+        "deadline_timeouts",
         "metric_calls_cdtw",
         "metric_calls_dtw",
         "metric_calls_wdtw",
@@ -209,6 +241,10 @@ impl Counters {
         s[20] = self.strip_sample_loads_saved;
         s[21] = self.kernel_workspace_regrows;
         s[22] = self.cost_model_rebuilds;
+        s[Self::SLOT_WORKER_PANICS] = self.worker_panics;
+        s[Self::SLOT_WORKER_RESPAWNS] = self.worker_respawns;
+        s[Self::SLOT_SHED_QUERIES] = self.shed_queries;
+        s[Self::SLOT_DEADLINE_TIMEOUTS] = self.deadline_timeouts;
         for i in 0..Metric::COUNT {
             s[Self::SCALAR_SLOTS + i] = self.metric_calls[i];
             s[Self::SCALAR_SLOTS + Metric::COUNT + i] = self.metric_abandons[i];
@@ -243,6 +279,10 @@ impl Counters {
             strip_sample_loads_saved: s[20],
             kernel_workspace_regrows: s[21],
             cost_model_rebuilds: s[22],
+            worker_panics: s[Self::SLOT_WORKER_PANICS],
+            worker_respawns: s[Self::SLOT_WORKER_RESPAWNS],
+            shed_queries: s[Self::SLOT_SHED_QUERIES],
+            deadline_timeouts: s[Self::SLOT_DEADLINE_TIMEOUTS],
             ..Default::default()
         };
         for i in 0..Metric::COUNT {
@@ -292,6 +332,10 @@ impl Counters {
         self.strip_sample_loads_saved += o.strip_sample_loads_saved;
         self.kernel_workspace_regrows += o.kernel_workspace_regrows;
         self.cost_model_rebuilds += o.cost_model_rebuilds;
+        self.worker_panics += o.worker_panics;
+        self.worker_respawns += o.worker_respawns;
+        self.shed_queries += o.shed_queries;
+        self.deadline_timeouts += o.deadline_timeouts;
         for i in 0..Metric::COUNT {
             self.metric_calls[i] += o.metric_calls[i];
             self.metric_abandons[i] += o.metric_abandons[i];
@@ -583,6 +627,10 @@ mod tests {
             &mut c.strip_sample_loads_saved,
             &mut c.kernel_workspace_regrows,
             &mut c.cost_model_rebuilds,
+            &mut c.worker_panics,
+            &mut c.worker_respawns,
+            &mut c.shed_queries,
+            &mut c.deadline_timeouts,
         ] {
             v += 1;
             *f = v;
@@ -615,6 +663,21 @@ mod tests {
                 Counters::SLOT_NAMES[Counters::SCALAR_SLOTS + Metric::COUNT + i],
                 format!("metric_abandons_{name}")
             );
+        }
+    }
+
+    #[test]
+    fn robustness_slot_constants_are_name_aligned() {
+        // the service records supervision events by slot index; a drifted
+        // constant would silently credit the wrong counter
+        for (slot, name) in [
+            (Counters::SLOT_WORKER_PANICS, "worker_panics"),
+            (Counters::SLOT_WORKER_RESPAWNS, "worker_respawns"),
+            (Counters::SLOT_SHED_QUERIES, "shed_queries"),
+            (Counters::SLOT_DEADLINE_TIMEOUTS, "deadline_timeouts"),
+        ] {
+            assert_eq!(Counters::SLOT_NAMES[slot], name);
+            assert!(slot < Counters::SCALAR_SLOTS);
         }
     }
 

@@ -54,10 +54,15 @@ pub enum Stage {
     KernelEval,
     /// Collecting and merging per-shard results in the router.
     FanIn,
+    /// Deadline slack: for a deadline-carrying query that completed in
+    /// time, the budget remaining at response build (ns). Only recorded
+    /// when a deadline was set, so the histogram's `count` equals the
+    /// number of in-budget deadline queries.
+    DeadlineSlack,
 }
 
 impl Stage {
-    pub const COUNT: usize = 8;
+    pub const COUNT: usize = 9;
     /// Snapshot-schema names, index-aligned with [`Stage::index`].
     pub const NAMES: [&'static str; Self::COUNT] = [
         "queue_wait",
@@ -68,6 +73,7 @@ impl Stage {
         "bound_improved",
         "kernel_eval",
         "fan_in",
+        "deadline_slack",
     ];
     pub const ALL: [Stage; Self::COUNT] = [
         Stage::QueueWait,
@@ -78,6 +84,7 @@ impl Stage {
         Stage::BoundImproved,
         Stage::KernelEval,
         Stage::FanIn,
+        Stage::DeadlineSlack,
     ];
 
     #[inline]
@@ -91,6 +98,7 @@ impl Stage {
             Stage::BoundImproved => 5,
             Stage::KernelEval => 6,
             Stage::FanIn => 7,
+            Stage::DeadlineSlack => 8,
         }
     }
 
@@ -140,14 +148,21 @@ pub enum Gauge {
     QueriesServed,
     /// Requests currently waiting in the batch coalescer.
     CoalescerPending,
+    /// Queries admitted and not yet answered — the value the
+    /// `--max-pending` admission budget is checked against.
+    PendingQueries,
 }
 
 impl Gauge {
-    pub const COUNT: usize = 3;
+    pub const COUNT: usize = 4;
     pub const NAMES: [&'static str; Self::COUNT] =
-        ["busy_workers", "queries_served", "coalescer_pending"];
-    pub const ALL: [Gauge; Self::COUNT] =
-        [Gauge::BusyWorkers, Gauge::QueriesServed, Gauge::CoalescerPending];
+        ["busy_workers", "queries_served", "coalescer_pending", "pending_queries"];
+    pub const ALL: [Gauge; Self::COUNT] = [
+        Gauge::BusyWorkers,
+        Gauge::QueriesServed,
+        Gauge::CoalescerPending,
+        Gauge::PendingQueries,
+    ];
 
     #[inline]
     pub fn index(self) -> usize {
@@ -155,6 +170,7 @@ impl Gauge {
             Gauge::BusyWorkers => 0,
             Gauge::QueriesServed => 1,
             Gauge::CoalescerPending => 2,
+            Gauge::PendingQueries => 3,
         }
     }
 

@@ -39,13 +39,15 @@
 //!   cohort.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::bounds::batch::{
     batch_lb_kim_pre, kim_loads_per_lane, lb_keogh_ec_unordered, lb_keogh_eq_unordered,
     CohortScratch, DEFAULT_STRIP,
 };
 use crate::bounds::cascade::CascadePolicy;
-use crate::coordinator::state::SharedUb;
+use crate::coordinator::state::{CancelToken, SharedUb};
+use crate::fault;
 use crate::distances::KernelWorkspace;
 use crate::index::ref_index::BucketStats;
 use crate::index::topk::TopK;
@@ -67,24 +69,41 @@ pub struct CohortMember {
     /// set once the member can never accept another candidate — later
     /// strips skip it entirely
     pub retired: bool,
+    /// optional deadline: checked before the member's bound lanes run on
+    /// each strip; past it the member is force-retired with `timed_out`
+    /// set (its top-k is whatever the completed strips produced). `None`
+    /// means no deadline — no clock is ever read for this member.
+    pub deadline: Option<Instant>,
+    /// true iff the member was retired by its deadline (or a cancelled
+    /// scan) rather than by threshold exhaustion — the caller turns this
+    /// into a `partial: true` response or a `timeout` error
+    pub timed_out: bool,
 }
 
 impl CohortMember {
     /// Member for a single-shard (no cross-shard threshold) cohort scan.
     pub fn new(ctx: QueryContext, k: usize) -> Self {
-        Self { ctx, topk: TopK::new(k), shared: None, counters: Counters::new(), retired: false }
+        Self {
+            ctx,
+            topk: TopK::new(k),
+            shared: None,
+            counters: Counters::new(),
+            retired: false,
+            deadline: None,
+            timed_out: false,
+        }
     }
 
     /// Member whose threshold syncs with `shared` at every strip, exactly
     /// as [`crate::coordinator::worker::scan_shard_topk`] syncs per block.
     pub fn with_shared(ctx: QueryContext, k: usize, shared: Arc<SharedUb>) -> Self {
-        Self {
-            ctx,
-            topk: TopK::new(k),
-            shared: Some(shared),
-            counters: Counters::new(),
-            retired: false,
-        }
+        Self { shared: Some(shared), ..Self::new(ctx, k) }
+    }
+
+    /// Attach a deadline budget (builder-style, used by cohort jobs).
+    pub fn with_deadline(mut self, deadline: Option<Instant>) -> Self {
+        self.deadline = deadline;
+        self
     }
 }
 
@@ -170,14 +189,23 @@ pub fn scan_cohort_topk(
         sync_every,
         scratch,
         pool,
+        None,
         ScanObs::OFF,
     );
 }
 
-/// [`scan_cohort_topk`] with an observability handle — what a shard
-/// worker serving a cohort job calls so bound-stage latencies and the
-/// per-strip survivor distribution land in its registry cell. Recording
-/// is write-only: results stay bitwise identical with a cell attached.
+/// [`scan_cohort_topk`] with an observability handle and an optional
+/// cancellation token — what a shard worker serving a cohort job calls
+/// so bound-stage latencies and the per-strip survivor distribution land
+/// in its registry cell. Recording is write-only: results stay bitwise
+/// identical with a cell attached.
+///
+/// Cancellation and per-member deadlines (see
+/// [`CohortMember::deadline`]) are honoured at strip boundaries only, so
+/// every strip a member did process is complete — the counter
+/// conservation identities hold on truncated scans exactly as on full
+/// ones. With no token and no member deadlines this path reads no clocks
+/// and behaves bitwise-identically to the pre-deadline scan.
 #[allow(clippy::too_many_arguments)]
 pub fn scan_cohort_topk_obs(
     reference: &[f64],
@@ -190,6 +218,7 @@ pub fn scan_cohort_topk_obs(
     sync_every: usize,
     scratch: &mut CohortScratch,
     pool: &mut CohortPool,
+    cancel: Option<&CancelToken>,
     obs: ScanObs<'_>,
 ) {
     if members.is_empty() {
@@ -229,6 +258,17 @@ pub fn scan_cohort_topk_obs(
         if members.iter().all(|m| m.retired) {
             break;
         }
+        // a cancelled scan (the router gave up on this cohort's fan-in)
+        // stops at the strip boundary: every live member is force-retired
+        // as timed out, keeping whatever its completed strips produced
+        if cancel.is_some_and(|c| c.is_cancelled()) {
+            for m in members.iter_mut().filter(|m| !m.retired) {
+                m.timed_out = true;
+                m.retired = true;
+            }
+            break;
+        }
+        fault::fire_stall(fault::STRIP_STALL);
         let len = (end - strip_start).min(strip_len);
         // the strip's shared stat lanes: loaded once, read by every member
         let (ms, ss) = stats.strip(strip_start, len);
@@ -243,6 +283,15 @@ pub fn scan_cohort_topk_obs(
         let mut first_live = true;
         for (mi, m) in members.iter_mut().enumerate() {
             if m.retired {
+                continue;
+            }
+            // deadline check at the member's strip boundary: a member past
+            // its budget keeps its completed-strip top-k and drops out of
+            // every remaining strip. Members without a deadline never read
+            // the clock.
+            if m.deadline.is_some_and(|d| Instant::now() >= d) {
+                m.timed_out = true;
+                m.retired = true;
                 continue;
             }
             if first_live {

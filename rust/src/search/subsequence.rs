@@ -577,6 +577,9 @@ fn scan_topk_strips(
     let mut scratch = std::mem::take(&mut ctx.strip);
     let mut strip_start = start;
     while strip_start < end {
+        // fault site: the conformance_faults suite arms this to model a
+        // slow scan; the default build compiles it to nothing
+        crate::fault::fire_stall(crate::fault::STRIP_STALL);
         let len = (end - strip_start).min(DEFAULT_STRIP);
         scratch.reset(len);
         match (&mut ws, stats) {

@@ -1,0 +1,282 @@
+//! Failure-model conformance: drives the compiled-in fault sites
+//! (`--features fault-inject`, see `src/fault.rs`) through the public
+//! service API and pins the robustness contract:
+//!
+//! * a fault never deadlocks fan-in and never kills the process — the
+//!   affected query answers with a typed error (or a `partial` top-k)
+//!   and the service keeps serving;
+//! * dead worker threads are respawned and the query retried once, so a
+//!   single thread death is invisible to the caller;
+//! * the counter conservation identities survive every fault (panicked
+//!   jobs flush nothing; truncated scans flush only whole strips):
+//!   `candidates == Σ prunes + dtw_calls` and
+//!   `dtw_calls == dtw_abandons + dtw_completions`.
+//!
+//! The fault registry is process-global, so every test serialises on
+//! [`FAULT_LOCK`] and resets the registry on entry and exit — cargo's
+//! parallel runner must never interleave two armed tests.
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+use repro::coordinator::protocol::{DeadlineExceeded, WorkerPanicked};
+use repro::coordinator::{ErrorKind, ErrorResponse, QueryRequest, Service, ServiceConfig};
+use repro::data::{extract_queries, Dataset};
+use repro::distances::metric::Metric;
+use repro::fault;
+use repro::metrics::Counters;
+use repro::search::subsequence::{search_subsequence_topk, window_cells, ScanMode};
+use repro::search::suite::Suite;
+
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Take the suite-wide lock (poison-tolerant: a failed test must not
+/// cascade into every later one) and start from a disarmed registry.
+fn armed_section() -> MutexGuard<'static, ()> {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    fault::reset();
+    guard
+}
+
+fn service(r: &[f64], shards: usize, mode: ScanMode) -> Service {
+    Service::new(r.to_vec(), &ServiceConfig { shards, scan_mode: mode, ..Default::default() })
+        .expect("service")
+}
+
+fn request(id: u64, q: &[f64], k: usize, deadline_ms: Option<f64>) -> QueryRequest {
+    QueryRequest {
+        id,
+        query: q.to_vec(),
+        window_ratio: 0.1,
+        suite: Suite::UcrMon,
+        k,
+        metric: Metric::Cdtw,
+        deadline_ms,
+    }
+}
+
+/// The registry-wide conservation identities every snapshot must satisfy
+/// — under faults included, because panicked jobs flush no counters and
+/// deadline-truncated scans flush only completed strips.
+fn assert_conserved(c: &Counters) {
+    assert_eq!(
+        c.candidates,
+        c.lb_kim_prunes
+            + c.lb_keogh_eq_prunes
+            + c.lb_keogh_ec_prunes
+            + c.lb_improved_prunes
+            + c.xla_prunes
+            + c.dtw_calls,
+        "candidate conservation broke: {c:?}"
+    );
+    assert_eq!(
+        c.dtw_calls,
+        c.dtw_abandons + c.dtw_completions,
+        "dtw outcome conservation broke: {c:?}"
+    );
+}
+
+fn expected_topk(r: &[f64], q: &[f64], k: usize) -> Vec<repro::search::subsequence::Match> {
+    let mut c = Counters::new();
+    search_subsequence_topk(r, q, window_cells(q.len(), 0.1), k, Suite::UcrMon, &mut c)
+}
+
+#[test]
+fn worker_panic_is_contained_to_one_query() {
+    let _lock = armed_section();
+    let r = Dataset::Ecg.generate(3000, 41);
+    let q = extract_queries(&r, 1, 96, 0.1, 42).remove(0);
+    let svc = service(&r, 2, ScanMode::Strip);
+
+    fault::arm(fault::WORKER_PANIC, 1);
+    let err = svc.submit(&request(1, &q, 3, None)).expect_err("poisoned shard must fail");
+    let p = err.root_cause().downcast_ref::<WorkerPanicked>().expect("typed panic error");
+    assert!(p.message.contains("injected fault"), "payload survives: {p:?}");
+    assert_eq!(ErrorResponse::new(1, &err).kind, Some(ErrorKind::Internal));
+
+    let snap = svc.metrics();
+    assert_eq!(snap.counters.worker_panics, 1);
+    assert_conserved(&snap.counters);
+
+    // the panic domain is per-job: the same pool answers the next query
+    // bitwise-correctly, no respawn needed (the thread never died)
+    let resp = svc.submit(&request(2, &q, 3, None)).expect("service keeps serving");
+    let want = expected_topk(&r, &q, 3);
+    assert_eq!(resp.matches.len(), want.len());
+    for (g, m) in resp.matches.iter().zip(&want) {
+        assert_eq!(g.pos, m.pos);
+        assert_eq!(g.dist.to_bits(), m.dist.to_bits());
+    }
+    assert_eq!(svc.metrics().counters.worker_respawns, 0);
+    assert_eq!(svc.queries_served(), 1);
+    fault::reset();
+}
+
+#[test]
+fn cohort_panic_fails_the_cohort_but_not_the_service() {
+    let _lock = armed_section();
+    let r = Dataset::Refit.generate(4000, 43);
+    let qs = extract_queries(&r, 3, 128, 0.1, 44);
+    let svc = service(&r, 2, ScanMode::Strip);
+    let reqs: Vec<QueryRequest> =
+        qs.iter().enumerate().map(|(i, q)| request(i as u64, q, 2, None)).collect();
+
+    fault::arm(fault::WORKER_PANIC, 1);
+    // same-shape queries form one cohort; one shard job panicking fails
+    // the whole cohort (there is no partial answer to salvage) — but the
+    // batch call itself completes and the pool survives
+    let got = svc.submit_batch(&reqs);
+    assert_eq!(got.len(), 3);
+    for member in &got {
+        let err = member.as_ref().expect_err("every cohort member fails together");
+        assert!(format!("{err:#}").contains("panicked"), "unexpected error: {err:#}");
+    }
+    let snap = svc.metrics();
+    assert_eq!(snap.counters.worker_panics, 1);
+    assert_conserved(&snap.counters);
+
+    // retried batch answers every member bitwise like a solo submit
+    let again = svc.submit_batch(&reqs);
+    for (i, member) in again.iter().enumerate() {
+        let resp = member.as_ref().expect("healthy batch");
+        let want = expected_topk(&r, &qs[i], 2);
+        for (g, m) in resp.matches.iter().zip(&want) {
+            assert_eq!(g.pos, m.pos);
+            assert_eq!(g.dist.to_bits(), m.dist.to_bits());
+        }
+    }
+    fault::reset();
+}
+
+#[test]
+fn exited_worker_is_respawned_and_the_query_retried() {
+    let _lock = armed_section();
+    let r = Dataset::FoG.generate(3000, 45);
+    let q = extract_queries(&r, 1, 96, 0.1, 46).remove(0);
+    let svc = service(&r, 2, ScanMode::Strip);
+
+    // the worker thread returns on job receipt: fan-in sees a closed
+    // channel, the supervisor respawns the shard, and the retry answers
+    // — the caller never observes the death
+    fault::arm(fault::WORKER_EXIT, 1);
+    let resp = svc.submit(&request(1, &q, 3, None)).expect("retry hides the dead worker");
+    let want = expected_topk(&r, &q, 3);
+    for (g, m) in resp.matches.iter().zip(&want) {
+        assert_eq!(g.pos, m.pos);
+        assert_eq!(g.dist.to_bits(), m.dist.to_bits());
+    }
+    let snap = svc.metrics();
+    assert!(snap.counters.worker_respawns >= 1, "dead shard must be respawned");
+    assert_eq!(snap.counters.worker_panics, 0, "a clean exit is not a panic");
+    assert_conserved(&snap.counters);
+
+    // the respawned pool is a full-strength pool
+    assert!(svc.submit(&request(2, &q, 3, None)).is_ok());
+    fault::reset();
+}
+
+#[test]
+fn dropped_reply_is_retried_without_respawning_a_live_worker() {
+    let _lock = armed_section();
+    let r = Dataset::Ppg.generate(3000, 47);
+    let q = extract_queries(&r, 1, 96, 0.1, 48).remove(0);
+    let svc = service(&r, 2, ScanMode::Strip);
+
+    // the job is dropped without a reply but the thread lives on: fan-in
+    // reports a lost worker, the supervision sweep finds nothing dead,
+    // and the retry goes to the same (healthy) pool
+    fault::arm(fault::REPLY_DROP, 1);
+    let resp = svc.submit(&request(1, &q, 1, None)).expect("retry answers");
+    let want = expected_topk(&r, &q, 1);
+    assert_eq!(resp.pos, want[0].pos);
+    assert_eq!(resp.dist.to_bits(), want[0].dist.to_bits());
+    let snap = svc.metrics();
+    assert_eq!(snap.counters.worker_respawns, 0, "no thread died, none respawned");
+    assert_conserved(&snap.counters);
+    fault::reset();
+}
+
+#[test]
+fn stalled_strips_honour_the_deadline_without_deadlock() {
+    let _lock = armed_section();
+    let r = Dataset::Pamap2.generate(6000, 49);
+    let q = extract_queries(&r, 1, 128, 0.1, 50).remove(0);
+    let svc = service(&r, 2, ScanMode::Strip);
+
+    // every strip boundary sleeps 40ms — far beyond the 25ms budget, and
+    // armed deep enough that an exhaustive scan would take minutes; the
+    // deadline check at the same boundary must cut the scan short
+    fault::arm_stall(fault::STRIP_STALL, 40, 1_000_000);
+    let t0 = Instant::now();
+    let outcome = svc.submit(&request(1, &q, 2, Some(25.0)));
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed.as_secs() < 30,
+        "stalled scan must be abandoned at a strip boundary, took {elapsed:?}"
+    );
+    match outcome {
+        Ok(resp) => {
+            assert!(resp.partial, "an in-budget answer is impossible while stalled");
+            assert!(resp.matches.iter().all(|m| m.dist.is_finite()));
+        }
+        Err(e) => {
+            assert!(
+                e.root_cause().downcast_ref::<DeadlineExceeded>().is_some(),
+                "unexpected error: {e:#}"
+            );
+            assert_eq!(ErrorResponse::new(1, &e).kind, Some(ErrorKind::Timeout));
+        }
+    }
+    let snap = svc.metrics();
+    assert_eq!(snap.counters.deadline_timeouts, 1);
+    assert_conserved(&snap.counters);
+
+    // disarmed, the same service answers the same query exhaustively and
+    // bitwise-correctly — the stall left no residue
+    fault::reset();
+    let full = svc.submit(&request(2, &q, 2, None)).expect("recovered");
+    assert!(!full.partial);
+    let want = expected_topk(&r, &q, 2);
+    for (g, m) in full.matches.iter().zip(&want) {
+        assert_eq!(g.pos, m.pos);
+        assert_eq!(g.dist.to_bits(), m.dist.to_bits());
+    }
+}
+
+#[test]
+fn counters_conserve_across_a_faulty_session() {
+    let _lock = armed_section();
+    let r = Dataset::Soccer.generate(5000, 51);
+    let qs = extract_queries(&r, 4, 128, 0.1, 52);
+    let svc = service(&r, 3, ScanMode::Strip);
+
+    // a session mixing every fault class: one panicked query, one lost
+    // worker (hidden by the retry), one stalled deadline query, and
+    // healthy traffic before/after
+    assert!(svc.submit(&request(0, &qs[0], 2, None)).is_ok());
+
+    fault::arm(fault::WORKER_PANIC, 1);
+    assert!(svc.submit(&request(1, &qs[1], 2, None)).is_err());
+
+    fault::arm(fault::WORKER_EXIT, 1);
+    assert!(svc.submit(&request(2, &qs[2], 2, None)).is_ok());
+
+    fault::arm_stall(fault::STRIP_STALL, 40, 1_000_000);
+    let _ = svc.submit(&request(3, &qs[3], 2, Some(25.0)));
+    fault::reset();
+
+    let snap = svc.metrics();
+    assert_conserved(&snap.counters);
+    assert_eq!(snap.counters.worker_panics, 1);
+    assert!(snap.counters.worker_respawns >= 1);
+    assert_eq!(snap.counters.deadline_timeouts, 1);
+    assert_eq!(snap.counters.shed_queries, 0);
+
+    // and the scarred service still serves bitwise-correct answers
+    let resp = svc.submit(&request(9, &qs[0], 2, None)).expect("still serving");
+    let want = expected_topk(&r, &qs[0], 2);
+    for (g, m) in resp.matches.iter().zip(&want) {
+        assert_eq!(g.pos, m.pos);
+        assert_eq!(g.dist.to_bits(), m.dist.to_bits());
+    }
+}

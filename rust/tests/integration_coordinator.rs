@@ -30,6 +30,7 @@ fn service_equals_direct_search_for_all_scalar_suites() {
                 suite: s,
                 k: 1,
                 metric: Metric::Cdtw,
+                deadline_ms: None,
             })
             .unwrap();
         let mut c = Counters::new();
@@ -56,6 +57,7 @@ fn shard_count_does_not_change_results() {
                 suite: Suite::UcrMon,
                 k: 1,
                 metric: Metric::Cdtw,
+                deadline_ms: None,
             })
             .unwrap();
         results.push((shards, resp.pos, resp.dist));
@@ -92,6 +94,7 @@ fn many_concurrent_clients_one_service() {
                     suite: Suite::UcrMon,
                     k: 1,
                     metric: Metric::Cdtw,
+                    deadline_ms: None,
                 })
                 .unwrap(),
             )
@@ -123,6 +126,7 @@ fn protocol_survives_the_wire() {
         suite: Suite::UcrMonNoLb,
         k: 3,
         metric: Metric::Erp { gap: 0.25 },
+        deadline_ms: None,
     };
     let line = req.to_json();
     assert!(!line.contains('\n'), "line-delimited");
@@ -144,6 +148,7 @@ fn protocol_survives_the_wire() {
         pruned: 900,
         dtw_calls: 100,
         cohort: 1,
+        partial: false,
     };
     assert_eq!(QueryResponse::from_json(&resp.to_json()).unwrap(), resp);
 }
@@ -220,6 +225,7 @@ fn empty_and_oversized_queries_error_cleanly() {
         suite: Suite::UcrMon,
         k: 1,
         metric: Metric::Cdtw,
+        deadline_ms: None,
     };
     assert!(svc.submit(&req).is_err());
 }
@@ -240,6 +246,7 @@ fn topk_over_service_is_ranked_and_consistent_across_shards() {
                 suite: Suite::UcrMon,
                 k,
                 metric: Metric::Cdtw,
+                deadline_ms: None,
             })
             .unwrap();
         assert_eq!(resp.matches.len(), k);

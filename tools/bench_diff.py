@@ -19,6 +19,12 @@ property-tests in-process; see ``rust/src/obs/README.md``):
     dtw_abandons == sum(metric_abandons_*)
     cost_model_rebuilds == 0
 
+The robustness counters (``worker_panics``, ``worker_respawns``,
+``shed_queries``, ``deadline_timeouts``) are absent in pre-robustness
+artifacts and read as 0 there — those services could not have shed or
+respawned. When present they must be non-negative integers, and the
+two-file mode reports their deltas.
+
 A counter absent from a document reads as unknown, and any identity
 that needs it is skipped (older artifacts predate some counters);
 present-but-inconsistent counters are hard failures.
@@ -43,6 +49,14 @@ CASCADE_STAGES = (
 # artifacts, where they read as 0 (those runs could not have pruned
 # there) rather than as unknown
 OPTIONAL_CASCADE_STAGES = ("lb_improved_prunes",)
+# failure-model counters (supervision, admission, deadlines): absent in
+# pre-robustness artifacts, where they read as 0 rather than as unknown
+ROBUSTNESS_COUNTERS = (
+    "worker_panics",
+    "worker_respawns",
+    "shed_queries",
+    "deadline_timeouts",
+)
 # run-identity fields are everything except the measurements
 MEASUREMENTS = {
     "seconds",
@@ -96,6 +110,10 @@ def check_counters(counters, where, problems):
     rebuilds = counters.get("cost_model_rebuilds")
     if rebuilds is not None and int(rebuilds) != 0:
         problems.append(f"{where}: cost_model_rebuilds {int(rebuilds)} != 0")
+    for name in ROBUSTNESS_COUNTERS:
+        v = counters.get(name, 0)
+        if int(v) != v or int(v) < 0:
+            problems.append(f"{where}: {name} {v!r} is not a non-negative count")
 
 
 def audit(doc, label, problems):
@@ -141,6 +159,12 @@ def print_deltas(base, curr):
         for key in ("dtw_calls", "dtw_abandons", "candidates"):
             if key in bc and key in cc and int(cc[key]) != int(bc[key]):
                 parts.append(f"{key} {int(bc[key])} -> {int(cc[key])}")
+        # robustness counters read absent as 0 on either side, so a new
+        # artifact's panics/sheds diff cleanly against an old baseline
+        for key in ROBUSTNESS_COUNTERS:
+            bv, cv = int(bc.get(key, 0)), int(cc.get(key, 0))
+            if bv != cv:
+                parts.append(f"{key} {bv} -> {cv}")
         print(f"  {ident}: {', '.join(parts) if parts else 'unchanged'}")
     total = len(curr.get("runs", []))
     print(f"  matched {matched}/{total} runs against the baseline")
