@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
                 k: 1,
                 metric: Metric::Cdtw,
                 deadline_ms: None,
+                tenant: None,
             })?;
             latencies.push(resp.latency_ms);
             answers.push((resp.pos, resp.dist));

@@ -197,6 +197,71 @@ def test_robustness_deltas_print_against_a_counterless_baseline(tmp_path):
     assert "shed_queries 0 -> 2" in res.stdout
 
 
+def test_absent_net_counters_read_as_zero(tmp_path):
+    # a pre-net snapshot carries none of conns_accepted / conns_rejected /
+    # conn_read_timeouts / quota_shed_queries: the audit passes (absent
+    # reads as 0, not unknown — no TCP front-end existed)
+    doc = json.loads(BASELINE.read_text())
+    snap = copy.deepcopy(doc["stats"])
+    for name in (
+        "conns_accepted",
+        "conns_rejected",
+        "conn_read_timeouts",
+        "quota_shed_queries",
+    ):
+        snap["counters"].pop(name, None)
+    p = tmp_path / "pre_net.json"
+    p.write_text(json.dumps(snap))
+    res = run_tool(p)
+    assert res.returncode == 0, res.stderr
+
+
+def test_present_net_counters_are_validated_and_diffed(tmp_path):
+    doc = json.loads(BASELINE.read_text())
+    snap = copy.deepcopy(doc["stats"])
+    snap["counters"]["conns_accepted"] = 5
+    snap["counters"]["conns_rejected"] = 1
+    snap["counters"]["quota_shed_queries"] = 2
+    curr = tmp_path / "net_run.json"
+    curr.write_text(json.dumps(snap))
+    # well-formed counts pass the audit
+    assert run_tool(curr).returncode == 0
+
+    # a non-integer count is a hard failure
+    bad = copy.deepcopy(snap)
+    bad["counters"]["conn_read_timeouts"] = 1.5
+    badp = tmp_path / "fractional.json"
+    badp.write_text(json.dumps(bad))
+    res = run_tool(badp)
+    assert res.returncode == 1
+    assert "conn_read_timeouts" in res.stderr
+
+    # ...and so is a negative one
+    bad2 = copy.deepcopy(snap)
+    bad2["counters"]["conns_rejected"] = -1
+    bad2p = tmp_path / "negative_net.json"
+    bad2p.write_text(json.dumps(bad2))
+    res = run_tool(bad2p)
+    assert res.returncode == 1
+    assert "conns_rejected" in res.stderr
+
+
+def test_net_deltas_print_against_a_counterless_baseline(tmp_path):
+    # baseline runs predate the net counters entirely; the current
+    # artifact saw two quota sheds — the delta reads the absent side as 0
+    doc = json.loads(BASELINE.read_text())
+    curr_doc = copy.deepcopy(doc)
+    for run in curr_doc["runs"]:
+        run["counters"]["quota_shed_queries"] = 2
+    base = tmp_path / "base.json"
+    curr = tmp_path / "curr.json"
+    base.write_text(json.dumps(doc))
+    curr.write_text(json.dumps(curr_doc))
+    res = run_tool(base, curr)
+    assert res.returncode == 0, res.stderr
+    assert "quota_shed_queries 0 -> 2" in res.stdout
+
+
 def test_unreadable_file_is_a_usage_error(tmp_path):
     res = run_tool(tmp_path / "nope.json")
     assert res.returncode == 2

@@ -1,0 +1,161 @@
+//! TCP front-end load: open-loop arrivals over a real loopback socket.
+//! A sender thread paces queries by wall clock (it never waits for a
+//! reply — open loop, so server-side queueing shows up as latency
+//! instead of silently throttling the offered load) while the main
+//! thread collects responses and measures end-to-end latency through
+//! the full stack: framing → quota check → dispatcher coalescing →
+//! `Service::submit_batch_timed` → writer queue → socket.
+//!
+//! Reports offered vs achieved q/s and p50/p95/max latency per offered
+//! rate, verifies every query is answered in order, pulls the closing
+//! metrics snapshot **over the wire** (a `{"cmd":"stats"}` frame, like
+//! any client) and emits `BENCH_net_load.json` for cross-PR tracking
+//! via `tools/bench_diff.py`.
+//!
+//! Scaling knobs (env): `REPRO_REF_LEN` (default 20000), `REPRO_DATASETS`
+//! (first entry; default ECG), `REPRO_QLENS` (first entry; default 128).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use repro::bench_support::grid_from_env;
+use repro::bench_support::report::BenchJson;
+use repro::coordinator::protocol::{QueryRequest, QueryResponse};
+use repro::coordinator::{Service, ServiceConfig};
+use repro::data::extract_queries;
+use repro::distances::metric::Metric;
+use repro::net::{NetConfig, NetServer};
+use repro::obs::MetricsSnapshot;
+use repro::search::suite::Suite;
+use repro::util::json::Json;
+
+fn main() {
+    let (grid, datasets) = grid_from_env(20_000);
+    let d = datasets[0];
+    let qlen = *grid.query_lengths.first().unwrap_or(&128);
+    let reference = d.generate(grid.ref_len, grid.seed);
+    let queries = extract_queries(&reference, 16, qlen, grid.query_noise, grid.seed ^ 11);
+    let svc = Arc::new(
+        Service::new(
+            reference,
+            &ServiceConfig {
+                shards: 2,
+                batch_window: 4,
+                batch_deadline_ms: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let server =
+        NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let addr = server.local_addr();
+    println!(
+        "net load (dataset {}, qlen {qlen}, ref_len {}, batch window 4/2ms): \
+         open-loop arrivals over loopback",
+        d.name(),
+        grid.ref_len
+    );
+    println!(
+        "{:>11} {:>8} {:>12} | {:>9} {:>9} {:>9}",
+        "offered q/s", "queries", "achieved q/s", "p50 ms", "p95 ms", "max ms"
+    );
+    let mut json = BenchJson::new("net_load");
+    for &rate in &[50.0f64, 200.0, 800.0] {
+        let n: usize = 120;
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let lines: Vec<String> = (0..n)
+            .map(|i| {
+                QueryRequest {
+                    id: i as u64,
+                    query: queries[i % queries.len()].clone(),
+                    window_ratio: 0.1,
+                    suite: Suite::UcrMon,
+                    k: 1,
+                    metric: Metric::Cdtw,
+                    deadline_ms: None,
+                    tenant: Some("bench".into()),
+                }
+                .to_json()
+            })
+            .collect();
+        let t0 = Instant::now();
+        let sender = std::thread::spawn({
+            let mut stream = stream.try_clone().unwrap();
+            move || {
+                let mut sent = Vec::with_capacity(lines.len());
+                for (i, l) in lines.iter().enumerate() {
+                    // open-loop pacing: send at the scheduled instant no
+                    // matter how far behind the responses are
+                    let due = t0 + Duration::from_secs_f64(i as f64 / rate);
+                    if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                        std::thread::sleep(wait);
+                    }
+                    sent.push(Instant::now());
+                    stream.write_all(l.as_bytes()).unwrap();
+                    stream.write_all(b"\n").unwrap();
+                }
+                sent
+            }
+        });
+        let mut recv = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = QueryResponse::from_json(line.trim_end()).expect("query response");
+            // one connection: responses come back in frame order
+            assert_eq!(resp.id, i as u64, "response order broke");
+            recv.push(Instant::now());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let sent = sender.join().expect("sender");
+        let mut lats: Vec<f64> = recv
+            .iter()
+            .zip(&sent)
+            .map(|(r, s)| r.duration_since(*s).as_secs_f64() * 1e3)
+            .collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
+        let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
+        let achieved = n as f64 / wall;
+        println!(
+            "{:>11.0} {:>8} {:>12.1} | {:>9.2} {:>9.2} {:>9.2}",
+            rate,
+            n,
+            achieved,
+            pct(0.5),
+            pct(0.95),
+            pct(1.0)
+        );
+        json.push(vec![
+            ("dataset", Json::Str(d.name().to_string())),
+            ("qlen", Json::Num(qlen as f64)),
+            ("offered_qps", Json::Num(rate)),
+            ("queries", Json::Num(n as f64)),
+            ("achieved_qps", Json::Num(achieved)),
+            ("p50_ms", Json::Num(pct(0.5))),
+            ("p95_ms", Json::Num(pct(0.95))),
+            ("max_ms", Json::Num(pct(1.0))),
+        ]);
+    }
+    // the closing snapshot travels the wire like any other frame, so the
+    // bench JSON carries the same counters a live operator would see
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut s = &stream;
+    s.write_all(b"{\"cmd\":\"stats\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let snap = MetricsSnapshot::from_json(&Json::parse(line.trim_end()).expect("stats json"))
+        .expect("pinned stats schema");
+    assert!(snap.counters.conns_accepted >= 4, "every bench connection was counted");
+    json.set_stats(&snap);
+    drop((reader, stream));
+    server.drain();
+    json.write_and_announce();
+}

@@ -103,12 +103,54 @@ impl Default for ServeConfig {
     }
 }
 
+/// TCP front-end settings (`repro serve --listen`). Every knob bounds a
+/// hostile-client resource; see `rust/src/net/README.md`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// default listen address for `--listen` without a value
+    pub listen: String,
+    /// open-connection bound; over-limit accepts are answered with an
+    /// `overloaded` error and closed (0 = unbounded)
+    pub max_conns: usize,
+    /// per-frame length cap, bytes; larger frames answer `frame_too_large`
+    pub max_frame_bytes: usize,
+    /// budget for assembling one frame, ms; slower senders are cut off
+    /// (0 = no budget)
+    pub read_timeout_ms: u64,
+    /// budget between frames, ms; idle connections are closed
+    /// (0 = no budget)
+    pub idle_timeout_ms: u64,
+    /// bounded per-connection response queue; a client that stops
+    /// reading is disconnected when it fills
+    pub write_queue: usize,
+    /// per-tenant token refill rate, tokens/second (0 = quotas off)
+    pub quota_rate: f64,
+    /// per-tenant bucket capacity (burst size)
+    pub quota_burst: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:7878".into(),
+            max_conns: 64,
+            max_frame_bytes: 1 << 20,
+            read_timeout_ms: 5_000,
+            idle_timeout_ms: 300_000,
+            write_queue: 64,
+            quota_rate: 0.0,
+            quota_burst: 8.0,
+        }
+    }
+}
+
 /// Top-level config.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
     pub grid: GridConfig,
     pub search: SearchConfig,
     pub serve: ServeConfig,
+    pub net: NetConfig,
 }
 
 impl Config {
@@ -145,6 +187,14 @@ impl Config {
             ("serve", "batch_deadline_ms") => self.serve.batch_deadline_ms = v.usize()? as u64,
             ("serve", "max_pending") => self.serve.max_pending = v.usize()?,
             ("serve", "default_deadline_ms") => self.serve.default_deadline_ms = v.f64()?,
+            ("net", "listen") => self.net.listen = v.string()?,
+            ("net", "max_conns") => self.net.max_conns = v.usize()?,
+            ("net", "max_frame_bytes") => self.net.max_frame_bytes = v.usize()?,
+            ("net", "read_timeout_ms") => self.net.read_timeout_ms = v.usize()? as u64,
+            ("net", "idle_timeout_ms") => self.net.idle_timeout_ms = v.usize()? as u64,
+            ("net", "write_queue") => self.net.write_queue = v.usize()?,
+            ("net", "quota_rate") => self.net.quota_rate = v.f64()?,
+            ("net", "quota_burst") => self.net.quota_burst = v.f64()?,
             _ => bail!("unknown config key"),
         }
         Ok(())
@@ -320,6 +370,22 @@ mod tests {
         assert_eq!(c2.serve.batch_deadline_ms, 25);
         assert_eq!(c2.serve.max_pending, 256);
         assert_eq!(c2.serve.default_deadline_ms, 40.5);
+        // untouched sections keep defaults too
+        assert_eq!(c2.net, NetConfig::default());
+        let c3 = Config::from_str(
+            "[net]\nlisten = \"0.0.0.0:9000\"\nmax_conns = 128\nmax_frame_bytes = 65536\n\
+             read_timeout_ms = 250\nidle_timeout_ms = 10_000\nwrite_queue = 8\n\
+             quota_rate = 50.0\nquota_burst = 100\n",
+        )
+        .unwrap();
+        assert_eq!(c3.net.listen, "0.0.0.0:9000");
+        assert_eq!(c3.net.max_conns, 128);
+        assert_eq!(c3.net.max_frame_bytes, 65536);
+        assert_eq!(c3.net.read_timeout_ms, 250);
+        assert_eq!(c3.net.idle_timeout_ms, 10_000);
+        assert_eq!(c3.net.write_queue, 8);
+        assert_eq!(c3.net.quota_rate, 50.0);
+        assert_eq!(c3.net.quota_burst, 100.0);
     }
 
     #[test]

@@ -97,6 +97,7 @@ mod tests {
             k: 1,
             metric: Metric::Cdtw,
             deadline_ms: None,
+            tenant: None,
         }
     }
 

@@ -37,6 +37,11 @@ pub struct QueryRequest {
     /// `None` (absent on the wire) means no deadline — that path reads no
     /// clocks and stays bitwise-identical to the pre-deadline service.
     pub deadline_ms: Option<f64>,
+    /// optional tenant key for the network front-end's per-tenant
+    /// token-bucket quotas. `None` (absent on the wire) bills the
+    /// anonymous bucket; the scan itself never reads it, so tenant-less
+    /// request lines stay byte-identical to the pre-quota wire format.
+    pub tenant: Option<String>,
 }
 
 impl QueryRequest {
@@ -52,6 +57,11 @@ impl QueryRequest {
         // byte-identical to the pre-deadline wire format
         if let Some(d) = self.deadline_ms {
             fields.push(("deadline_ms", Json::Num(d)));
+        }
+        // emitted only when set: tenant-less request lines stay
+        // byte-identical to the pre-quota wire format
+        if let Some(t) = &self.tenant {
+            fields.push(("tenant", Json::Str(t.clone())));
         }
         fields.push((
             "query",
@@ -118,7 +128,16 @@ impl QueryRequest {
             }
             None => None,
         };
-        Ok(Self { id, query, window_ratio, suite, k, metric, deadline_ms })
+        // absent tenant = anonymous: the pre-quota wire format stays valid
+        let tenant = match v.get("tenant") {
+            Some(t) => {
+                let t = t.as_str().ok_or_else(|| anyhow!("non-string tenant"))?;
+                anyhow::ensure!(!t.is_empty(), "tenant must be non-empty when present");
+                Some(t.to_string())
+            }
+            None => None,
+        };
+        Ok(Self { id, query, window_ratio, suite, k, metric, deadline_ms, tenant })
     }
 }
 
@@ -143,6 +162,14 @@ pub enum ErrorKind {
     /// A server-side fault (worker panic, lost worker thread): the query
     /// failed through no fault of the request.
     Internal,
+    /// The tenant's token bucket is empty: the query was shed before any
+    /// scan work. The error line carries `retry_after_ms`; retrying after
+    /// that long is guaranteed to find at least one token.
+    Quota,
+    /// The request frame exceeded the server's `--max-frame-bytes` cap.
+    /// The oversized line was discarded without being buffered whole;
+    /// resend a smaller frame.
+    FrameTooLarge,
 }
 
 impl ErrorKind {
@@ -151,6 +178,8 @@ impl ErrorKind {
             ErrorKind::Timeout => "timeout",
             ErrorKind::Overloaded => "overloaded",
             ErrorKind::Internal => "internal",
+            ErrorKind::Quota => "quota",
+            ErrorKind::FrameTooLarge => "frame_too_large",
         }
     }
 
@@ -159,6 +188,8 @@ impl ErrorKind {
             "timeout" => Some(ErrorKind::Timeout),
             "overloaded" => Some(ErrorKind::Overloaded),
             "internal" => Some(ErrorKind::Internal),
+            "quota" => Some(ErrorKind::Quota),
+            "frame_too_large" => Some(ErrorKind::FrameTooLarge),
             _ => None,
         }
     }
@@ -229,26 +260,92 @@ impl fmt::Display for WorkerLost {
 
 impl std::error::Error for WorkerLost {}
 
+/// Typed error: the tenant's token bucket had no token for this query,
+/// which was shed before any scan work. [`ErrorResponse::new`] maps it
+/// to [`ErrorKind::Quota`] and hoists `retry_after_ms` onto the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuotaExceeded {
+    pub tenant: String,
+    /// milliseconds until the bucket is guaranteed to hold ≥ 1 token
+    pub retry_after_ms: u64,
+}
+
+impl fmt::Display for QuotaExceeded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "quota exhausted for tenant {:?}: retry after {}ms",
+            self.tenant, self.retry_after_ms
+        )
+    }
+}
+
+impl std::error::Error for QuotaExceeded {}
+
+/// Typed error: a request frame exceeded the bounded reader's length
+/// cap and was discarded without being buffered whole.
+/// [`ErrorResponse::new`] maps it to [`ErrorKind::FrameTooLarge`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameTooLarge {
+    /// bytes seen before the frame was cut off (≥ `limit`)
+    pub len: usize,
+    pub limit: usize,
+}
+
+impl fmt::Display for FrameTooLarge {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "frame of >= {} bytes exceeds the {}-byte limit", self.len, self.limit)
+    }
+}
+
+impl std::error::Error for FrameTooLarge {}
+
 /// The wire form of a request that failed — validation or execution:
 /// `{"id":N,"error":"...","kind":"..."}`. The serve loop answers the
 /// failing line with this and keeps serving instead of tearing the whole
-/// session down. `kind` is emitted only for classified failures
-/// (`timeout` / `overloaded` / `internal`); validation errors carry no
-/// kind, so pre-robustness error lines stay byte-identical.
+/// session down. `kind` is emitted only for classified failures;
+/// validation errors carry no kind, so pre-robustness error lines stay
+/// byte-identical. `id` is `null` on the wire when the failing frame
+/// never yielded a request id (unparseable JSON) — a client still gets
+/// exactly one reply per frame. `retry_after_ms` rides along on quota
+/// sheds so clients can back off precisely.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ErrorResponse {
-    pub id: u64,
+    /// the failing request's id; `None` (wire `null`) when the frame
+    /// was too malformed to carry one
+    pub id: Option<u64>,
     pub error: String,
     pub kind: Option<ErrorKind>,
+    /// set on [`ErrorKind::Quota`] sheds: milliseconds until a retry is
+    /// guaranteed a token. Absent otherwise.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl ErrorResponse {
     /// Build from an error chain, classifying the root cause: the typed
     /// robustness errors ([`DeadlineExceeded`], [`Overloaded`],
-    /// [`WorkerPanicked`], [`WorkerLost`]) map to their wire kind; any
-    /// other error (validation, parse) carries no kind.
+    /// [`WorkerPanicked`], [`WorkerLost`], [`QuotaExceeded`],
+    /// [`FrameTooLarge`]) map to their wire kind; any other error
+    /// (validation, parse) carries no kind.
     pub fn new(id: u64, err: &anyhow::Error) -> Self {
+        Self::classify(Some(id), err)
+    }
+
+    /// Build the reply for a frame that failed before a request was
+    /// parsed: recovers the `id` field if the line is well-formed JSON
+    /// with a numeric id (e.g. a valid envelope with a bad query), else
+    /// answers with `"id":null` — one reply per frame, always.
+    pub fn for_line(line: &str, err: &anyhow::Error) -> Self {
+        let id = Json::parse(line)
+            .ok()
+            .and_then(|v| v.get("id").and_then(Json::as_f64))
+            .map(|n| n as u64);
+        Self::classify(id, err)
+    }
+
+    fn classify(id: Option<u64>, err: &anyhow::Error) -> Self {
         let root = err.root_cause();
+        let mut retry_after_ms = None;
         let kind = if root.downcast_ref::<DeadlineExceeded>().is_some() {
             Some(ErrorKind::Timeout)
         } else if root.downcast_ref::<Overloaded>().is_some() {
@@ -257,31 +354,47 @@ impl ErrorResponse {
             || root.downcast_ref::<WorkerLost>().is_some()
         {
             Some(ErrorKind::Internal)
+        } else if let Some(q) = root.downcast_ref::<QuotaExceeded>() {
+            retry_after_ms = Some(q.retry_after_ms);
+            Some(ErrorKind::Quota)
+        } else if root.downcast_ref::<FrameTooLarge>().is_some() {
+            Some(ErrorKind::FrameTooLarge)
         } else {
             None
         };
-        Self { id, error: format!("{err:#}"), kind }
+        Self { id, error: format!("{err:#}"), kind, retry_after_ms }
     }
 
     pub fn to_json(&self) -> String {
-        let mut fields = vec![
-            ("id", Json::Num(self.id as f64)),
-            ("error", Json::Str(self.error.clone())),
-        ];
+        let id = match self.id {
+            Some(id) => Json::Num(id as f64),
+            None => Json::Null,
+        };
+        let mut fields = vec![("id", id), ("error", Json::Str(self.error.clone()))];
         // emitted only for classified failures: validation error lines
         // stay byte-identical to the pre-robustness wire format
         if let Some(kind) = self.kind {
             fields.push(("kind", Json::Str(kind.name().to_string())));
+        }
+        // emitted only on quota sheds
+        if let Some(ms) = self.retry_after_ms {
+            fields.push(("retry_after_ms", Json::Num(ms as f64)));
         }
         obj(fields).to_string()
     }
 
     pub fn from_json(line: &str) -> Result<Self> {
         let v = Json::parse(line)?;
-        let id = v
-            .get("id")
-            .and_then(Json::as_f64)
-            .ok_or_else(|| anyhow!("error response missing id"))? as u64;
+        // a numeric id echoes the failing request; a JSON null means the
+        // frame never carried one. A missing field is still an error —
+        // every reply names its request, even if only as "unknown".
+        let id = match v.get("id") {
+            Some(Json::Null) => None,
+            Some(x) => {
+                Some(x.as_f64().ok_or_else(|| anyhow!("non-numeric error response id"))? as u64)
+            }
+            None => return Err(anyhow!("error response missing id")),
+        };
         let error = v
             .get("error")
             .and_then(Json::as_str)
@@ -296,7 +409,9 @@ impl ErrorResponse {
             ),
             None => None,
         };
-        Ok(Self { id, error, kind })
+        // absent on non-quota errors: parses as None
+        let retry_after_ms = v.get("retry_after_ms").and_then(Json::as_f64).map(|n| n as u64);
+        Ok(Self { id, error, kind, retry_after_ms })
     }
 
     /// Does this line carry an error response (vs a result)?
@@ -435,6 +550,7 @@ mod tests {
             k: 5,
             metric: Metric::Cdtw,
             deadline_ms: None,
+            tenant: None,
         };
         let back = QueryRequest::from_json(&r.to_json()).unwrap();
         assert_eq!(back, r);
@@ -443,6 +559,39 @@ mod tests {
         // …and a budgeted one round-trips it
         let d = QueryRequest { deadline_ms: Some(250.0), ..r };
         assert_eq!(QueryRequest::from_json(&d.to_json()).unwrap(), d);
+    }
+
+    #[test]
+    fn tenant_round_trips_and_absence_is_byte_identical() {
+        let anon = QueryRequest {
+            id: 7,
+            query: vec![1.0, 2.0],
+            window_ratio: 0.2,
+            suite: Suite::UcrMon,
+            k: 1,
+            metric: Metric::Cdtw,
+            deadline_ms: None,
+            tenant: None,
+        };
+        // a tenant-less request never mentions the field: old clients'
+        // lines are what this server emits too
+        assert!(!anon.to_json().contains("tenant"));
+        // …and the pre-quota wire format parses with tenant == None
+        let legacy =
+            QueryRequest::from_json(r#"{"id":1,"window_ratio":0.1,"suite":"mon","query":[1,2]}"#)
+                .unwrap();
+        assert_eq!(legacy.tenant, None);
+        // a tenanted one round-trips
+        let t = QueryRequest { tenant: Some("acme".into()), ..anon };
+        assert!(t.to_json().contains("\"tenant\":\"acme\""));
+        assert_eq!(QueryRequest::from_json(&t.to_json()).unwrap(), t);
+        // non-string / empty tenants are rejected, not silently dropped
+        for bad in ["7", "\"\"", "[\"a\"]"] {
+            let line = format!(
+                r#"{{"id":1,"window_ratio":0.1,"suite":"mon","tenant":{bad},"query":[1]}}"#
+            );
+            assert!(QueryRequest::from_json(&line).is_err(), "{line}");
+        }
     }
 
     #[test]
@@ -472,6 +621,7 @@ mod tests {
                 k: 2,
                 metric,
                 deadline_ms: None,
+                tenant: None,
             };
             let line = r.to_json();
             assert!(line.contains(&format!("\"name\":\"{}\"", metric.name())), "{line}");
@@ -600,6 +750,16 @@ mod tests {
                 "internal",
             ),
             (anyhow::Error::new(WorkerLost), ErrorKind::Internal, "internal"),
+            (
+                anyhow::Error::new(QuotaExceeded { tenant: "acme".into(), retry_after_ms: 40 }),
+                ErrorKind::Quota,
+                "quota",
+            ),
+            (
+                anyhow::Error::new(FrameTooLarge { len: 70_000, limit: 65_536 }),
+                ErrorKind::FrameTooLarge,
+                "frame_too_large",
+            ),
         ] {
             // classification survives context wrapping: new() inspects
             // the root cause, not the outermost layer
@@ -614,6 +774,44 @@ mod tests {
         assert!(ErrorResponse::from_json(r#"{"id":1,"error":"x","kind":"zzz"}"#).is_err());
         let legacy = ErrorResponse::from_json(r#"{"id":1,"error":"x"}"#).unwrap();
         assert_eq!(legacy.kind, None);
+        // …and absent retry_after_ms parses as None
+        assert_eq!(legacy.retry_after_ms, None);
+    }
+
+    #[test]
+    fn quota_sheds_carry_retry_after_ms_on_the_wire() {
+        let err =
+            anyhow::Error::new(QuotaExceeded { tenant: "acme".into(), retry_after_ms: 125 });
+        let e = ErrorResponse::new(4, &err.context("query 4 shed"));
+        assert_eq!(e.retry_after_ms, Some(125));
+        let line = e.to_json();
+        assert!(line.contains("\"retry_after_ms\":125"), "{line}");
+        assert_eq!(ErrorResponse::from_json(&line).unwrap(), e);
+        // non-quota errors never mention the field
+        let plain = ErrorResponse::new(4, &anyhow::anyhow!("bad query"));
+        assert!(!plain.to_json().contains("retry_after_ms"));
+    }
+
+    #[test]
+    fn unparseable_frames_answer_with_a_null_id() {
+        // no recoverable id: the reply pins id to JSON null
+        let e = ErrorResponse::for_line("not json at all", &anyhow::anyhow!("parse failed"));
+        assert_eq!(e.id, None);
+        let line = e.to_json();
+        assert!(line.contains("\"id\":null"), "{line}");
+        let back = ErrorResponse::from_json(&line).unwrap();
+        assert_eq!(back.id, None);
+        assert!(ErrorResponse::is_error_line(&line));
+        // a well-formed envelope with a bad payload still echoes its id
+        let e = ErrorResponse::for_line(
+            r#"{"id":31,"window_ratio":"wide"}"#,
+            &anyhow::anyhow!("request missing window_ratio"),
+        );
+        assert_eq!(e.id, Some(31));
+        // an id-bearing reply never reads as null
+        assert!(!e.to_json().contains("null"), "{}", e.to_json());
+        // a reply with no id field at all is malformed — rejected
+        assert!(ErrorResponse::from_json(r#"{"error":"x"}"#).is_err());
     }
 
     #[test]

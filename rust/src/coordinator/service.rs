@@ -880,6 +880,14 @@ impl Service {
         self.registry.service_cell().set_gauge(Gauge::CoalescerPending, n);
     }
 
+    /// Front-end hook: the service's own registry cell, so the network
+    /// layer records its connection counters / gauge / stage timings
+    /// into the same snapshot plane (single-entry rule: the net events
+    /// never flow through a scan's `Counters`).
+    pub(crate) fn obs_cell(&self) -> &crate::obs::ObsCell {
+        self.registry.service_cell()
+    }
+
     /// Answer one wire line: `{"cmd":"stats"}` with the live registry's
     /// pinned-schema snapshot, anything else as a query request (solo —
     /// a coalescing front-end should parse and batch instead). Always
@@ -894,8 +902,10 @@ impl Service {
                 Ok(resp) => resp.to_json(),
                 Err(e) => ErrorResponse::new(req.id, &e).to_json(),
             },
-            // the line never parsed: there is no request id to echo
-            Err(e) => ErrorResponse::new(0, &e).to_json(),
+            // the line never parsed into a request: echo its id if the
+            // JSON envelope carried one, else answer with "id":null —
+            // exactly one reply per frame, always
+            Err(e) => ErrorResponse::for_line(line, &e).to_json(),
         }
     }
 }
@@ -957,6 +967,7 @@ mod tests {
             k: 1,
             metric: Metric::Cdtw,
             deadline_ms: None,
+            tenant: None,
         };
         let resp = svc.submit(&req).unwrap();
         let mut c = Counters::new();
@@ -983,6 +994,7 @@ mod tests {
             k,
             metric: Metric::Cdtw,
             deadline_ms: None,
+            tenant: None,
         };
         let resp = svc.submit(&req).unwrap();
         let mut c = Counters::new();
@@ -1011,6 +1023,7 @@ mod tests {
                 k: 2,
                 metric: Metric::Cdtw,
                 deadline_ms: None,
+                tenant: None,
             };
             svc.submit(&req).unwrap();
         }
@@ -1038,6 +1051,7 @@ mod tests {
                     k: 1,
                     metric: Metric::Cdtw,
                     deadline_ms: None,
+                    tenant: None,
                 };
                 svc.submit(&req).unwrap()
             }));
@@ -1065,6 +1079,7 @@ mod tests {
                 k,
                 metric,
                 deadline_ms: None,
+                tenant: None,
             };
             let resp = svc.submit(&req).unwrap();
             let mut c = Counters::new();
@@ -1097,6 +1112,7 @@ mod tests {
             k: 6,
             metric: Metric::Cdtw,
             deadline_ms: None,
+            tenant: None,
         };
         let scalar_svc = Service::new(
             r.clone(),
@@ -1136,6 +1152,8 @@ mod tests {
                 suite: Suite::UcrMon,
                 k: 3,
                 metric: Metric::Cdtw,
+                deadline_ms: None,
+                tenant: None,
             })
             .collect();
         let batch = svc.submit_batch(&reqs);
@@ -1189,6 +1207,7 @@ mod tests {
             k: 3,
             metric: Metric::Cdtw,
             deadline_ms: None,
+            tenant: None,
         };
         let mut co = BatchCoalescer::new(svc.batch_window(), svc.batch_deadline());
         let t0 = Instant::now();
@@ -1238,6 +1257,7 @@ mod tests {
                     k: 3,
                     metric: Metric::Cdtw,
                     deadline_ms: None,
+                    tenant: None,
                 };
                 let resp = svc.submit(&req).unwrap();
                 // the registry is always attached — results must still be
@@ -1303,6 +1323,7 @@ mod tests {
             k,
             metric: Metric::Cdtw,
             deadline_ms: None,
+            tenant: None,
         };
         let mut bad = qs[0].clone();
         bad[5] = f64::NAN;
@@ -1350,6 +1371,7 @@ mod tests {
             k: 2,
             metric: Metric::Cdtw,
             deadline_ms: None,
+            tenant: None,
         };
         let resp = QueryResponse::from_json(&svc.handle_line(&req.to_json())).unwrap();
         assert_eq!(resp.id, 5);
@@ -1386,6 +1408,7 @@ mod tests {
                 k: 1,
                 metric: Metric::Cdtw,
                 deadline_ms: None,
+                tenant: None,
             };
             let err = svc.submit(&req).unwrap_err();
             assert!(err.to_string().contains("non-finite"), "{err}");
@@ -1398,6 +1421,7 @@ mod tests {
             k: 1,
             metric: Metric::Cdtw,
             deadline_ms: None,
+            tenant: None,
         };
         assert!(svc.submit(&good).is_ok());
     }
@@ -1420,6 +1444,7 @@ mod tests {
                 k: 4,
                 metric: Metric::Cdtw,
                 deadline_ms: None,
+                tenant: None,
             };
             let want = svc.submit(&base).unwrap();
             assert!(!want.partial);
@@ -1485,6 +1510,7 @@ mod tests {
                 k: 3,
                 metric: Metric::Cdtw,
                 deadline_ms: Some(60_000.0),
+                tenant: None,
             })
             .collect();
         let got = svc.submit_batch(&reqs);
@@ -1522,6 +1548,7 @@ mod tests {
             k: 1,
             metric: Metric::Cdtw,
             deadline_ms: None,
+            tenant: None,
         };
         // a batch admits every member up front: with one slot, the
         // first is served and the other two shed
@@ -1556,6 +1583,7 @@ mod tests {
             k: 1,
             metric: Metric::Cdtw,
             deadline_ms: Some(1.0),
+            tenant: None,
         };
         // the query waited out its whole 1ms budget in the coalescer
         let stale = Instant::now().checked_sub(Duration::from_millis(50)).unwrap();
@@ -1584,6 +1612,7 @@ mod tests {
             k: 2,
             metric: Metric::Cdtw,
             deadline_ms: Some(0.001),
+            tenant: None,
         };
         // 1µs cannot cover an 8k-point scan: either nothing was scanned
         // in time (typed timeout) or some strips made it (partial top-k)
@@ -1630,6 +1659,7 @@ mod tests {
             k: 1,
             metric: Metric::Cdtw,
             deadline_ms: None,
+            tenant: None,
         };
         assert!(svc.submit(&req).is_err());
         assert!(!svc.has_engine());
@@ -1655,6 +1685,7 @@ mod tests {
             k: 1,
             metric: Metric::Cdtw,
             deadline_ms: None,
+            tenant: None,
         };
         let err = svc.submit(&req).unwrap_err();
         assert!(err.to_string().contains("unavailable"), "{err}");

@@ -14,6 +14,9 @@
 //! | `worker.exit` | worker loop, on job receipt | the worker thread returns (genuine death: its channel closes) |
 //! | `reply.drop` | worker loop, on job receipt | the job is dropped without a reply (fan-in sees a closed channel) |
 //! | `strip.stall` | `scan_topk_strips`, at each strip boundary | sleeps for the armed duration (a slow scan for deadline tests) |
+//! | `conn.stall` | net reader, before dispatching a parsed frame | sleeps for the armed duration (a slow connection for drain tests) |
+//! | `conn.drop` | net reader, before dispatching a parsed frame | closes the connection as if the client vanished mid-session |
+//! | `accept.fail` | net accept loop, on a new connection | the accepted socket is dropped without a reply (a transient accept error) |
 //!
 //! Tests arm sites in-process via [`arm`] / [`arm_stall`]; standalone
 //! binaries can arm at startup through the `REPRO_FAULTS` environment
@@ -153,6 +156,13 @@ pub const WORKER_EXIT: &str = "worker.exit";
 pub const REPLY_DROP: &str = "reply.drop";
 /// Site name: sleep at each strip boundary of `scan_topk_strips`.
 pub const STRIP_STALL: &str = "strip.stall";
+/// Site name: sleep in the net reader before dispatching a parsed frame.
+pub const CONN_STALL: &str = "conn.stall";
+/// Site name: the net reader closes the connection as if the client
+/// vanished mid-session.
+pub const CONN_DROP: &str = "conn.drop";
+/// Site name: the accept loop drops a freshly accepted socket.
+pub const ACCEPT_FAIL: &str = "accept.fail";
 
 #[cfg(all(test, feature = "fault-inject"))]
 mod tests {

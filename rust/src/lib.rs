@@ -49,6 +49,7 @@ pub mod distances;
 pub mod fault;
 pub mod index;
 pub mod metrics;
+pub mod net;
 pub mod norm;
 pub mod obs;
 #[cfg(feature = "xla")]

@@ -28,13 +28,18 @@ COMMANDS
   search      locate a query in a reference stream
               --dataset <name|file> --qlen N --ratio R --suite S
               [--ref-len N] [--seed N] [--config F]
-  serve       run the search service over synthetic queries and report
-              latency/throughput
+  serve       run the search service: synthetic queries by default,
+              --stdin for a wire session on stdin/stdout, --listen for
+              the TCP front-end
               --dataset <name> [--queries N] [--shards N] [--suite S]
               [--k N] [--metric M] [--scan-mode strip|scalar]
               [--batch-window N] [--batch-deadline-ms N]
               [--max-pending N] [--default-deadline-ms N]
               [--stats-every N] [--ref-len N] [--artifacts DIR]
+              [--stdin] [--max-frame-bytes N]
+              [--listen [ADDR]] [--max-conns N] [--read-timeout-ms N]
+              [--idle-timeout-ms N] [--write-queue N]
+              [--quota-rate R] [--quota-burst N]
   bench-suite run the paper's experiment grid and print Fig 5a/5b + tables
               [--axis length|window|all] [--ref-len N] [--datasets a,b]
               [--qlens 128,256] [--ratios 0.1,0.2] [--queries N]
@@ -66,7 +71,22 @@ Stats:   --stats-every N emits the live registry's metrics snapshot
          (pinned schema repro.metrics.v1, one JSON line on stderr) after
          every N responses, and once more at end of input (0 = off, the
          default). Wire front-ends answer {\"cmd\":\"stats\"} lines from
-         the same registry (Service::handle_line)";
+         the same registry (Service::handle_line)
+Wire:    --stdin serves newline-delimited JSON frames from stdin, one
+         reply line per frame (unparseable frames answer \"id\":null;
+         frames over --max-frame-bytes answer frame_too_large and the
+         stream resyncs at the next newline).
+         --listen [ADDR] serves the same protocol over TCP (default
+         address from the [net] config section) with hostile-client
+         hardening: --max-conns bounds open connections (excess accepts
+         answer overloaded and close), --read-timeout-ms cuts slow-loris
+         senders, --idle-timeout-ms closes idle sessions, --write-queue
+         disconnects clients that stop reading, and --quota-rate /
+         --quota-burst token-bucket quotas per tenant (the optional
+         \"tenant\" request field) shed with retry_after_ms before any
+         scan work. Stdin becomes the control plane: \"drain\" or EOF
+         shuts down gracefully (in-flight queries answered, every
+         connection joined), \"stats\" prints a snapshot";
 
 fn main() {
     let args = match Args::from_env() {
@@ -210,7 +230,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let reference = load_reference(&dataset, ref_len, seed)?;
     let queries = extract_queries(&reference, n_queries, qlen, cfg.grid.query_noise, seed ^ 2);
-    let svc = Service::new(
+    let svc = std::sync::Arc::new(Service::new(
         reference,
         &ServiceConfig {
             shards,
@@ -222,7 +242,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
             artifacts_dir: artifacts.join("manifest.json").exists().then_some(artifacts),
             ..Default::default()
         },
-    )?;
+    )?);
+    if args.flag("listen") || args.get("listen").is_some() {
+        return serve_listen(args, &cfg, svc);
+    }
+    if args.flag("stdin") {
+        let max_frame = args.usize_or("max-frame-bytes", cfg.net.max_frame_bytes)?;
+        eprintln!(
+            "serving wire frames from stdin (max frame {max_frame} bytes, one reply per frame)"
+        );
+        let answered = repro::net::serve_frames(
+            &svc,
+            std::io::stdin().lock(),
+            &mut std::io::stdout().lock(),
+            max_frame,
+            stats_every,
+        )?;
+        eprintln!("end of input after {answered} frames");
+        return Ok(());
+    }
     println!(
         "serving {n_queries} queries (qlen {qlen}, ratio {ratio}, suite {}, metric {}, top-{k}, {} scan, batch window {}, deadline {}, max-pending {}, default-deadline {}) over {shards} shards",
         suite.name(),
@@ -255,6 +293,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             k,
             metric,
             deadline_ms: None,
+            tenant: None,
         })
         .collect();
     // a failing request answers with the protocol's error line and the
@@ -315,6 +354,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
         pct(0.95),
         latencies[latencies.len() - 1],
     );
+    Ok(())
+}
+
+/// The TCP front-end mode of `repro serve`: start the hardened listener,
+/// then turn stdin into the control plane — "drain" (or EOF) shuts down
+/// gracefully, "stats" prints a live metrics snapshot to stderr.
+fn serve_listen(args: &Args, cfg: &Config, svc: std::sync::Arc<Service>) -> Result<()> {
+    let addr = args.get_or("listen", &cfg.net.listen).to_string();
+    let net_cfg = repro::net::NetConfig {
+        max_conns: args.usize_or("max-conns", cfg.net.max_conns)?,
+        max_frame_bytes: args.usize_or("max-frame-bytes", cfg.net.max_frame_bytes)?,
+        read_timeout_ms: args.u64_or("read-timeout-ms", cfg.net.read_timeout_ms)?,
+        idle_timeout_ms: args.u64_or("idle-timeout-ms", cfg.net.idle_timeout_ms)?,
+        write_queue: args.usize_or("write-queue", cfg.net.write_queue)?,
+        quota_rate: args.f64_or("quota-rate", cfg.net.quota_rate)?,
+        quota_burst: args.f64_or("quota-burst", cfg.net.quota_burst)?,
+    };
+    let quotas = if net_cfg.quota_rate > 0.0 {
+        format!("{}/s burst {}", net_cfg.quota_rate, net_cfg.quota_burst)
+    } else {
+        "off".into()
+    };
+    let server = repro::net::NetServer::start(std::sync::Arc::clone(&svc), &addr, net_cfg.clone())?;
+    eprintln!(
+        "listening on {} (max-conns {}, frame cap {} bytes, read budget {}ms, idle budget {}ms, \
+         write queue {}, quotas {quotas}) — control plane on stdin: drain | stats",
+        server.local_addr(),
+        net_cfg.max_conns,
+        net_cfg.max_frame_bytes,
+        net_cfg.read_timeout_ms,
+        net_cfg.idle_timeout_ms,
+        net_cfg.write_queue,
+    );
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if stdin.read_line(&mut line)? == 0 {
+            break;
+        }
+        match line.trim() {
+            "drain" | "quit" | "exit" => break,
+            "stats" => eprintln!("{}", svc.stats_json()),
+            "" => {}
+            other => eprintln!("unknown control command {other:?} (drain | stats)"),
+        }
+    }
+    eprintln!("draining…");
+    server.drain();
+    eprintln!("drained cleanly after {} queries", svc.queries_served());
     Ok(())
 }
 

@@ -106,6 +106,19 @@ pub struct Counters {
     /// boundary mid-scan — answered with a `timeout` error or a
     /// `partial: true` top-k
     pub deadline_timeouts: u64,
+    /// TCP connections admitted by the network front-end's accept loop
+    pub conns_accepted: u64,
+    /// TCP connections refused at accept because the bounded registry
+    /// (`--max-conns`) was full — answered with an `overloaded`
+    /// `ErrorResponse` and closed, never buffered
+    pub conns_rejected: u64,
+    /// connections cut off because a frame stayed incomplete past the
+    /// read timeout (slow-loris defence) — the reader thread is released,
+    /// never pinned
+    pub conn_read_timeouts: u64,
+    /// queries shed by a per-tenant token bucket before any scan work —
+    /// answered with a `quota` `ErrorResponse` carrying `retry_after_ms`
+    pub quota_shed_queries: u64,
     /// distance-kernel calls per metric kind, indexed by
     /// [`Metric::index`] (every entry also counts into `dtw_calls`)
     pub metric_calls: [u64; Metric::COUNT],
@@ -150,7 +163,7 @@ impl Counters {
 
     /// Scalar counter fields, in declaration order — the fixed prefix of
     /// the slot mapping below.
-    pub const SCALAR_SLOTS: usize = 27;
+    pub const SCALAR_SLOTS: usize = 31;
 
     /// Slot index of `worker_panics` — the service records supervision
     /// events straight into its [`crate::obs::ObsCell`] by slot (they
@@ -162,6 +175,16 @@ impl Counters {
     pub const SLOT_SHED_QUERIES: usize = 25;
     /// Slot index of `deadline_timeouts`.
     pub const SLOT_DEADLINE_TIMEOUTS: usize = 26;
+    /// Slot index of `conns_accepted` — the network front-end records
+    /// connection events straight into the service cell by slot, like
+    /// the supervision events above.
+    pub const SLOT_CONNS_ACCEPTED: usize = 27;
+    /// Slot index of `conns_rejected`.
+    pub const SLOT_CONNS_REJECTED: usize = 28;
+    /// Slot index of `conn_read_timeouts`.
+    pub const SLOT_CONN_READ_TIMEOUTS: usize = 29;
+    /// Slot index of `quota_shed_queries`.
+    pub const SLOT_QUOTA_SHED_QUERIES: usize = 30;
 
     /// Total number of slots in the canonical flat form: every scalar
     /// field plus the per-metric call/abandon tallies.
@@ -200,6 +223,10 @@ impl Counters {
         "worker_respawns",
         "shed_queries",
         "deadline_timeouts",
+        "conns_accepted",
+        "conns_rejected",
+        "conn_read_timeouts",
+        "quota_shed_queries",
         "metric_calls_cdtw",
         "metric_calls_dtw",
         "metric_calls_wdtw",
@@ -245,6 +272,10 @@ impl Counters {
         s[Self::SLOT_WORKER_RESPAWNS] = self.worker_respawns;
         s[Self::SLOT_SHED_QUERIES] = self.shed_queries;
         s[Self::SLOT_DEADLINE_TIMEOUTS] = self.deadline_timeouts;
+        s[Self::SLOT_CONNS_ACCEPTED] = self.conns_accepted;
+        s[Self::SLOT_CONNS_REJECTED] = self.conns_rejected;
+        s[Self::SLOT_CONN_READ_TIMEOUTS] = self.conn_read_timeouts;
+        s[Self::SLOT_QUOTA_SHED_QUERIES] = self.quota_shed_queries;
         for i in 0..Metric::COUNT {
             s[Self::SCALAR_SLOTS + i] = self.metric_calls[i];
             s[Self::SCALAR_SLOTS + Metric::COUNT + i] = self.metric_abandons[i];
@@ -283,6 +314,10 @@ impl Counters {
             worker_respawns: s[Self::SLOT_WORKER_RESPAWNS],
             shed_queries: s[Self::SLOT_SHED_QUERIES],
             deadline_timeouts: s[Self::SLOT_DEADLINE_TIMEOUTS],
+            conns_accepted: s[Self::SLOT_CONNS_ACCEPTED],
+            conns_rejected: s[Self::SLOT_CONNS_REJECTED],
+            conn_read_timeouts: s[Self::SLOT_CONN_READ_TIMEOUTS],
+            quota_shed_queries: s[Self::SLOT_QUOTA_SHED_QUERIES],
             ..Default::default()
         };
         for i in 0..Metric::COUNT {
@@ -336,6 +371,10 @@ impl Counters {
         self.worker_respawns += o.worker_respawns;
         self.shed_queries += o.shed_queries;
         self.deadline_timeouts += o.deadline_timeouts;
+        self.conns_accepted += o.conns_accepted;
+        self.conns_rejected += o.conns_rejected;
+        self.conn_read_timeouts += o.conn_read_timeouts;
+        self.quota_shed_queries += o.quota_shed_queries;
         for i in 0..Metric::COUNT {
             self.metric_calls[i] += o.metric_calls[i];
             self.metric_abandons[i] += o.metric_abandons[i];
@@ -631,6 +670,10 @@ mod tests {
             &mut c.worker_respawns,
             &mut c.shed_queries,
             &mut c.deadline_timeouts,
+            &mut c.conns_accepted,
+            &mut c.conns_rejected,
+            &mut c.conn_read_timeouts,
+            &mut c.quota_shed_queries,
         ] {
             v += 1;
             *f = v;
@@ -675,6 +718,10 @@ mod tests {
             (Counters::SLOT_WORKER_RESPAWNS, "worker_respawns"),
             (Counters::SLOT_SHED_QUERIES, "shed_queries"),
             (Counters::SLOT_DEADLINE_TIMEOUTS, "deadline_timeouts"),
+            (Counters::SLOT_CONNS_ACCEPTED, "conns_accepted"),
+            (Counters::SLOT_CONNS_REJECTED, "conns_rejected"),
+            (Counters::SLOT_CONN_READ_TIMEOUTS, "conn_read_timeouts"),
+            (Counters::SLOT_QUOTA_SHED_QUERIES, "quota_shed_queries"),
         ] {
             assert_eq!(Counters::SLOT_NAMES[slot], name);
             assert!(slot < Counters::SCALAR_SLOTS);

@@ -1,0 +1,307 @@
+//! Bounded newline framing over any `Read` — the one framed reader both
+//! wire front-ends share (`--listen` TCP connections and the `--stdin`
+//! serve loop), so the hostile-input guarantees hold identically on both
+//! paths:
+//!
+//! * **Memory is bounded.** The internal buffer never holds more than
+//!   `max_frame_bytes` + one read chunk: a frame that exceeds the cap is
+//!   reported as [`FrameEvent::TooLarge`] the moment the cap is crossed
+//!   and its remaining bytes are *discarded*, never accumulated — an
+//!   unbounded line cannot grow a buffer the way a bare
+//!   `BufRead::read_line` would.
+//! * **Timeouts are resumable.** A read error (`WouldBlock` /
+//!   `TimedOut` from a socket read-timeout tick) propagates to the
+//!   caller with all buffered progress preserved; the caller decides
+//!   whether the connection is idle, mid-frame within budget, or due to
+//!   be cut, then calls [`FrameReader::next_frame`] again.
+//! * **Resync is automatic.** After a `TooLarge` report the reader is in
+//!   skip mode: subsequent calls discard bytes (without buffering) until
+//!   the oversized frame's terminating newline, then resume normal
+//!   framing — the stdin loop keeps serving, while the TCP path simply
+//!   closes the connection instead.
+//!
+//! A trailing `\r` is stripped from each frame (telnet-friendliness) and
+//! an unterminated final line before EOF is delivered as a frame, the
+//! same behaviour `read_line` gave the legacy loop.
+
+use std::io::{self, Read};
+
+use crate::coordinator::protocol::FrameTooLarge;
+
+/// One step of the framed reader.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FrameEvent {
+    /// A complete frame (delimiter stripped).
+    Frame(String),
+    /// The current frame crossed `max_frame_bytes`; the oversized bytes
+    /// were discarded and the reader will resync at the next newline.
+    TooLarge(FrameTooLarge),
+    /// End of input.
+    Eof,
+}
+
+/// Bounded, resumable newline framer. See the module docs for the
+/// guarantees.
+#[derive(Debug)]
+pub struct FrameReader<R> {
+    inner: R,
+    /// bytes read but not yet framed (≤ max_frame + one chunk)
+    buf: Vec<u8>,
+    /// prefix of `buf` already scanned and known newline-free
+    scanned: usize,
+    max_frame: usize,
+    /// discarding an oversized frame through its terminating newline
+    skipping: bool,
+    /// bytes discarded so far in skip mode (for the error report)
+    discarded: usize,
+    eof: bool,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(inner: R, max_frame_bytes: usize) -> Self {
+        Self {
+            inner,
+            buf: Vec::new(),
+            scanned: 0,
+            max_frame: max_frame_bytes.max(1),
+            skipping: false,
+            discarded: 0,
+            eof: false,
+        }
+    }
+
+    /// Bytes buffered toward an incomplete frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Is the reader holding a partial frame (including an oversized one
+    /// still being discarded)? Timeout policy branches on this: buffered
+    /// progress means a slow *frame* (read-timeout budget), an empty
+    /// buffer means an idle connection (idle-timeout budget).
+    pub fn mid_frame(&self) -> bool {
+        !self.buf.is_empty() || self.skipping
+    }
+
+    /// Read until one [`FrameEvent`] is available. I/O errors (including
+    /// socket timeout ticks) propagate with buffered progress intact.
+    pub fn next_frame(&mut self) -> io::Result<FrameEvent> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            // resolve what is already buffered before reading more
+            if let Some(rel) = self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
+                let pos = self.scanned + rel;
+                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
+                self.scanned = 0;
+                line.pop(); // the \n
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                if self.skipping {
+                    // the oversized frame (already reported) just ended:
+                    // resync complete, resume normal framing
+                    self.skipping = false;
+                    self.discarded = 0;
+                    continue;
+                }
+                if line.len() > self.max_frame {
+                    // whole frame arrived in one gulp but is over the cap
+                    return Ok(FrameEvent::TooLarge(FrameTooLarge {
+                        len: line.len(),
+                        limit: self.max_frame,
+                    }));
+                }
+                return Ok(FrameEvent::Frame(String::from_utf8_lossy(&line).into_owned()));
+            }
+            // no newline buffered
+            if self.skipping {
+                // keep memory flat while discarding the oversized frame
+                self.discarded = self.discarded.saturating_add(self.buf.len());
+                self.buf.clear();
+                self.scanned = 0;
+            } else if self.buf.len() > self.max_frame {
+                // cap crossed with no delimiter in sight: report now,
+                // discard what we hold, resync from the next newline
+                let len = self.buf.len();
+                self.buf.clear();
+                self.scanned = 0;
+                self.skipping = true;
+                self.discarded = len;
+                return Ok(FrameEvent::TooLarge(FrameTooLarge { len, limit: self.max_frame }));
+            } else {
+                self.scanned = self.buf.len();
+            }
+            if self.eof {
+                return Ok(FrameEvent::Eof);
+            }
+            let n = self.inner.read(&mut chunk)?;
+            if n == 0 {
+                self.eof = true;
+                if self.skipping {
+                    // the oversized frame (already reported) never ended
+                    self.skipping = false;
+                    self.discarded = 0;
+                    return Ok(FrameEvent::Eof);
+                }
+                if !self.buf.is_empty() {
+                    // unterminated final line: deliver it as a frame,
+                    // matching read_line's end-of-input behaviour
+                    let mut line = std::mem::take(&mut self.buf);
+                    self.scanned = 0;
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    if line.len() > self.max_frame {
+                        return Ok(FrameEvent::TooLarge(FrameTooLarge {
+                            len: line.len(),
+                            limit: self.max_frame,
+                        }));
+                    }
+                    return Ok(FrameEvent::Frame(String::from_utf8_lossy(&line).into_owned()));
+                }
+                return Ok(FrameEvent::Eof);
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frames(input: &str, cap: usize) -> Vec<FrameEvent> {
+        let mut fr = FrameReader::new(Cursor::new(input.as_bytes().to_vec()), cap);
+        let mut out = Vec::new();
+        loop {
+            let ev = fr.next_frame().unwrap();
+            let done = ev == FrameEvent::Eof;
+            out.push(ev);
+            if done {
+                return out;
+            }
+        }
+    }
+
+    #[test]
+    fn frames_split_on_newlines_and_strip_cr() {
+        assert_eq!(
+            frames("a\nbb\r\nccc", 100),
+            vec![
+                FrameEvent::Frame("a".into()),
+                FrameEvent::Frame("bb".into()),
+                // unterminated tail is still a frame, like read_line
+                FrameEvent::Frame("ccc".into()),
+                FrameEvent::Eof,
+            ]
+        );
+        assert_eq!(frames("", 100), vec![FrameEvent::Eof]);
+        // empty frames are delivered (the serve loop decides what to do)
+        assert_eq!(
+            frames("\n", 100),
+            vec![FrameEvent::Frame(String::new()), FrameEvent::Eof]
+        );
+    }
+
+    #[test]
+    fn oversized_frame_reports_once_and_resyncs() {
+        let evs = frames("ok\nxxxxxxxxxxxxxxxxxxxx\nafter\n", 8);
+        assert_eq!(evs[0], FrameEvent::Frame("ok".into()));
+        match &evs[1] {
+            FrameEvent::TooLarge(e) => {
+                assert!(e.len >= 8, "{e:?}");
+                assert_eq!(e.limit, 8);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // exactly one report, then the stream resumes cleanly
+        assert_eq!(evs[2], FrameEvent::Frame("after".into()));
+        assert_eq!(evs[3], FrameEvent::Eof);
+        assert_eq!(evs.len(), 4);
+    }
+
+    #[test]
+    fn oversized_frame_memory_stays_bounded() {
+        // a 1 MiB newline-free flood against a 64-byte cap: the buffer
+        // must never hold more than cap + one chunk
+        let flood = vec![b'z'; 1 << 20];
+        let mut fr = FrameReader::new(Cursor::new(flood), 64);
+        let mut saw_too_large = false;
+        loop {
+            match fr.next_frame().unwrap() {
+                FrameEvent::TooLarge(_) => saw_too_large = true,
+                FrameEvent::Eof => break,
+                FrameEvent::Frame(f) => panic!("no frame expected, got {} bytes", f.len()),
+            }
+            assert!(fr.buffered() <= 64 + 4096, "buffer grew to {}", fr.buffered());
+        }
+        assert!(saw_too_large);
+        assert!(fr.buffered() <= 64 + 4096);
+    }
+
+    /// A reader that yields its scripted chunks one at a time, with a
+    /// WouldBlock "timeout" between them — the socket-tick shape.
+    struct Chunked {
+        chunks: Vec<Option<Vec<u8>>>, // None = timeout tick
+        i: usize,
+    }
+
+    impl Read for Chunked {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            if self.i >= self.chunks.len() {
+                return Ok(0);
+            }
+            let i = self.i;
+            self.i += 1;
+            match &self.chunks[i] {
+                None => Err(io::Error::new(io::ErrorKind::WouldBlock, "tick")),
+                Some(c) => {
+                    let n = c.len().min(out.len());
+                    out[..n].copy_from_slice(&c[..n]);
+                    assert_eq!(n, c.len(), "test chunks fit the read buffer");
+                    Ok(n)
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn timeouts_preserve_partial_frames_across_calls() {
+        let mut fr = FrameReader::new(
+            Chunked {
+                chunks: vec![
+                    Some(b"{\"id\":".to_vec()),
+                    None, // tick mid-frame
+                    Some(b"1}\nrest\n".to_vec()),
+                ],
+                i: 0,
+            },
+            100,
+        );
+        // first call buffers the partial frame, then surfaces the tick
+        let err = fr.next_frame().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::WouldBlock);
+        assert!(fr.mid_frame());
+        assert_eq!(fr.buffered(), 6);
+        // the retry completes the frame from the preserved progress
+        assert_eq!(fr.next_frame().unwrap(), FrameEvent::Frame("{\"id\":1}".into()));
+        assert_eq!(fr.next_frame().unwrap(), FrameEvent::Frame("rest".into()));
+        assert_eq!(fr.next_frame().unwrap(), FrameEvent::Eof);
+    }
+
+    #[test]
+    fn idle_ticks_report_no_frame_in_progress() {
+        let mut fr = FrameReader::new(Chunked { chunks: vec![None], i: 0 }, 100);
+        assert_eq!(fr.next_frame().unwrap_err().kind(), io::ErrorKind::WouldBlock);
+        assert!(!fr.mid_frame(), "nothing buffered: the connection is idle, not slow");
+    }
+
+    #[test]
+    fn unterminated_oversized_tail_reports_then_eof() {
+        let evs = frames("tiny\nwaaaaaaaaaaaay-too-long-no-newline", 8);
+        assert_eq!(evs[0], FrameEvent::Frame("tiny".into()));
+        assert!(matches!(evs[1], FrameEvent::TooLarge(_)), "{evs:?}");
+        assert_eq!(evs[2], FrameEvent::Eof);
+    }
+}

@@ -1,0 +1,143 @@
+//! Network front-ends for the search service.
+//!
+//! Two wire front-ends share one newline-delimited JSON protocol and one
+//! hostile-input discipline:
+//!
+//! * [`serve_frames`] — the `--stdin` loop: frames from any `Read`
+//!   through the bounded [`FrameReader`], each answered with exactly one
+//!   line via `Service::handle_line` (oversized frames get a typed
+//!   `frame_too_large` error and the reader resyncs at the next newline).
+//! * [`NetServer`] — the `--listen` TCP server: bounded connection
+//!   registry, per-connection read/idle budgets, write backpressure,
+//!   per-tenant token-bucket quotas ([`TenantQuotas`]) and graceful
+//!   drain. See `net/README.md` for the lifecycle and `server.rs` for
+//!   the thread layout.
+//!
+//! Both paths end in the same coalescer → `Service::submit_batch_timed`
+//! pipeline, so responses are byte-identical to in-process serving
+//! (wall-clock timing fields aside).
+
+pub mod frame;
+pub mod quota;
+pub mod server;
+
+pub use frame::{FrameEvent, FrameReader};
+pub use quota::TenantQuotas;
+pub use server::{NetConfig, NetServer};
+
+use std::io::{Read, Write};
+
+use crate::coordinator::protocol::ErrorResponse;
+use crate::coordinator::Service;
+
+/// Serve newline-delimited frames from `input`, answering each with
+/// exactly one line on `output` — the hardened replacement for a bare
+/// `read_line` loop. Frames over `max_frame_bytes` are answered with a
+/// typed `frame_too_large` error line (`"id":null`) and the stream
+/// resyncs at the next newline; blank frames are skipped. With
+/// `stats_every > 0` a metrics snapshot goes to stderr after every that
+/// many responses and once more at end of input. Returns the number of
+/// frames answered.
+pub fn serve_frames<R: Read, W: Write>(
+    svc: &Service,
+    input: R,
+    output: &mut W,
+    max_frame_bytes: usize,
+    stats_every: usize,
+) -> std::io::Result<u64> {
+    let mut fr = FrameReader::new(input, max_frame_bytes);
+    let mut answered = 0u64;
+    let mut since_stats = 0usize;
+    loop {
+        let reply = match fr.next_frame()? {
+            FrameEvent::Frame(line) => {
+                if line.is_empty() {
+                    continue;
+                }
+                svc.handle_line(&line)
+            }
+            FrameEvent::TooLarge(e) => {
+                // one reply per frame holds even for a frame we refused
+                // to buffer; there is no id to echo, so it answers null
+                ErrorResponse::for_line("", &anyhow::Error::new(e)).to_json()
+            }
+            FrameEvent::Eof => break,
+        };
+        writeln!(output, "{reply}")?;
+        output.flush()?;
+        answered += 1;
+        since_stats += 1;
+        if stats_every > 0 && since_stats >= stats_every {
+            eprintln!("{}", svc.stats_json());
+            since_stats = 0;
+        }
+    }
+    if stats_every > 0 {
+        eprintln!("{}", svc.stats_json());
+    }
+    Ok(answered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{ErrorKind, QueryRequest, QueryResponse};
+    use crate::coordinator::ServiceConfig;
+    use crate::data::Dataset;
+    use crate::distances::metric::Metric;
+    use crate::search::suite::Suite;
+    use std::io::Cursor;
+
+    #[test]
+    fn serve_frames_answers_every_frame_exactly_once() {
+        let r = Dataset::Ecg.generate(1500, 91);
+        let q = crate::data::extract_queries(&r, 1, 64, 0.1, 92).remove(0);
+        let svc = Service::new(r, &ServiceConfig::default()).unwrap();
+        let req = QueryRequest {
+            id: 3,
+            query: q,
+            window_ratio: 0.1,
+            suite: Suite::UcrMon,
+            k: 1,
+            metric: Metric::Cdtw,
+            deadline_ms: None,
+            tenant: None,
+        };
+        let oversized = format!("{{\"id\":1,\"pad\":\"{}\"}}", "x".repeat(300));
+        let session = format!(
+            "{}\nnot json\n\n{}\n{{\"cmd\":\"stats\"}}\n{}",
+            req.to_json(),
+            oversized,
+            req.to_json(), // unterminated final line still gets served
+        );
+        let mut out = Vec::new();
+        let n = serve_frames(&svc, Cursor::new(session.into_bytes()), &mut out, 256, 0).unwrap();
+        let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().trim_end().lines().collect();
+        // 5 non-blank frames in, exactly 5 replies out (blank line: none)
+        assert_eq!(n, 5);
+        assert_eq!(lines.len(), 5);
+        // 1: served, identical to the in-process path modulo wall clocks
+        let normalized = |line: &str| match crate::util::json::Json::parse(line).unwrap() {
+            crate::util::json::Json::Obj(mut m) => {
+                m.remove("latency_ms");
+                m.remove("queue_ms");
+                crate::util::json::Json::Obj(m).to_string()
+            }
+            other => other.to_string(),
+        };
+        assert_eq!(normalized(lines[0]), normalized(&svc.handle_line(&req.to_json())));
+        assert_eq!(QueryResponse::from_json(lines[0]).unwrap().id, 3);
+        // 2: junk answers id:null, session continues
+        let junk = ErrorResponse::from_json(lines[1]).unwrap();
+        assert_eq!(junk.id, None);
+        // 3: the oversized frame answers frame_too_large without growing
+        // the buffer, and the reader resyncs
+        let big = ErrorResponse::from_json(lines[2]).unwrap();
+        assert_eq!(big.kind, Some(ErrorKind::FrameTooLarge), "{}", lines[2]);
+        assert_eq!(big.id, None);
+        // 4: stats from the live registry
+        assert!(lines[3].contains("repro.metrics.v1"));
+        // 5: the unterminated tail query is still answered
+        assert_eq!(QueryResponse::from_json(lines[4]).unwrap().id, 3);
+    }
+}

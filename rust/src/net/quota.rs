@@ -1,0 +1,166 @@
+//! Per-tenant token-bucket quotas for the network front-end.
+//!
+//! Each tenant (the optional `tenant` wire field; absent = the anonymous
+//! bucket) gets a bucket of `burst` tokens refilled continuously at
+//! `rate` tokens/second. A query costs one token; an empty bucket sheds
+//! the query *before any scan work* with a typed `quota` error carrying
+//! `retry_after_ms` — the milliseconds until the bucket is guaranteed to
+//! hold a whole token again, so a client honouring it never burns a
+//! retry.
+//!
+//! The table is clock-injected (`Instant` parameters, no internal
+//! `now()` calls) like the batch coalescer, so tests drive it with
+//! synthetic time. It is also *bounded*: a hostile client minting fresh
+//! tenant names cannot grow the map past [`TenantQuotas::MAX_TENANTS`] —
+//! beyond that the stalest bucket is evicted, which is lossless for the
+//! evicted tenant (an untouched bucket refills to full long before it
+//! is stale enough to evict, so it comes back full).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Shared token-bucket table; `try_acquire` is called by every
+/// connection reader thread, so the map sits behind one mutex (held for
+/// a few arithmetic ops per frame — far off any scan path).
+#[derive(Debug)]
+pub struct TenantQuotas {
+    /// tokens per second; <= 0 disables quotas entirely
+    rate: f64,
+    /// bucket capacity (burst size), >= 1 when enabled
+    burst: f64,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+impl TenantQuotas {
+    /// Hard cap on tracked tenants (hostile-client bound).
+    pub const MAX_TENANTS: usize = 10_000;
+
+    pub fn new(rate_per_sec: f64, burst: f64) -> Self {
+        Self {
+            rate: if rate_per_sec.is_finite() { rate_per_sec } else { 0.0 },
+            burst: burst.max(1.0),
+            buckets: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Quotas configured at all? When false, `try_acquire` is free and
+    /// always admits.
+    pub fn enabled(&self) -> bool {
+        self.rate > 0.0
+    }
+
+    /// Spend one token from `tenant`'s bucket at time `now`. On refusal
+    /// returns the milliseconds after which a retry is guaranteed to
+    /// find a whole token (>= 1).
+    pub fn try_acquire(&self, tenant: &str, now: Instant) -> Result<(), u64> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        let mut map = self.buckets.lock().unwrap_or_else(|p| p.into_inner());
+        if map.len() >= Self::MAX_TENANTS && !map.contains_key(tenant) {
+            // evict the stalest bucket to stay bounded; O(n) but only on
+            // the shed-adjacent path of a pathological tenant flood
+            if let Some(stalest) = map.iter().min_by_key(|(_, b)| b.last).map(|(k, _)| k.clone())
+            {
+                map.remove(&stalest);
+            }
+        }
+        let b = map
+            .entry(tenant.to_string())
+            .or_insert(Bucket { tokens: self.burst, last: now });
+        let dt = now.saturating_duration_since(b.last).as_secs_f64();
+        b.tokens = (b.tokens + dt * self.rate).min(self.burst);
+        b.last = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            let ms = ((1.0 - b.tokens) / self.rate * 1000.0).ceil() as u64;
+            Err(ms.max(1))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn burst_then_shed_then_refill() {
+        let q = TenantQuotas::new(10.0, 3.0); // 10 tokens/s, burst 3
+        assert!(q.enabled());
+        let t0 = Instant::now();
+        // a fresh bucket starts full: the burst is admitted
+        for _ in 0..3 {
+            assert_eq!(q.try_acquire("acme", t0), Ok(()));
+        }
+        // the 4th query at the same instant is shed, with the exact
+        // refill horizon: 1 token at 10/s = 100ms
+        assert_eq!(q.try_acquire("acme", t0), Err(100));
+        // honouring retry_after_ms is sufficient: the retry is admitted
+        assert_eq!(q.try_acquire("acme", t0 + Duration::from_millis(100)), Ok(()));
+        // …and the bucket never exceeds its burst, however long idle
+        let later = t0 + Duration::from_secs(3600);
+        for _ in 0..3 {
+            assert_eq!(q.try_acquire("acme", later), Ok(()));
+        }
+        assert!(q.try_acquire("acme", later).is_err());
+    }
+
+    #[test]
+    fn tenants_have_independent_buckets() {
+        let q = TenantQuotas::new(1.0, 1.0);
+        let t0 = Instant::now();
+        assert_eq!(q.try_acquire("a", t0), Ok(()));
+        assert!(q.try_acquire("a", t0).is_err(), "a is spent");
+        // b (and the anonymous bucket "") are unaffected
+        assert_eq!(q.try_acquire("b", t0), Ok(()));
+        assert_eq!(q.try_acquire("", t0), Ok(()));
+    }
+
+    #[test]
+    fn disabled_quotas_admit_everything() {
+        let q = TenantQuotas::new(0.0, 5.0);
+        assert!(!q.enabled());
+        let t0 = Instant::now();
+        for _ in 0..1000 {
+            assert_eq!(q.try_acquire("anyone", t0), Ok(()));
+        }
+    }
+
+    #[test]
+    fn retry_after_is_never_zero() {
+        // rate high enough that the naive horizon rounds to 0ms
+        let q = TenantQuotas::new(1e6, 1.0);
+        let t0 = Instant::now();
+        assert_eq!(q.try_acquire("t", t0), Ok(()));
+        match q.try_acquire("t", t0) {
+            Err(ms) => assert!(ms >= 1, "retry_after_ms must be >= 1, got {ms}"),
+            Ok(()) => {
+                // burst 1 spent at the same instant: must shed
+                panic!("expected shed");
+            }
+        }
+    }
+
+    #[test]
+    fn tenant_flood_stays_bounded() {
+        let q = TenantQuotas::new(5.0, 2.0);
+        let t0 = Instant::now();
+        for i in 0..(TenantQuotas::MAX_TENANTS + 50) {
+            let _ = q.try_acquire(&format!("tenant-{i}"), t0 + Duration::from_micros(i as u64));
+        }
+        let len = q.buckets.lock().unwrap().len();
+        assert!(len <= TenantQuotas::MAX_TENANTS, "map grew to {len}");
+        // old, evicted tenants come back with a full (fresh) bucket
+        assert_eq!(q.try_acquire("tenant-0", t0 + Duration::from_secs(1)), Ok(()));
+    }
+}

@@ -1,0 +1,749 @@
+//! The TCP front-end: a bounded, drainable thread-per-connection server
+//! over the newline-delimited wire protocol, designed around hostile
+//! clients. See `net/README.md` for the full lifecycle; the shape:
+//!
+//! * **accept thread** — owns the listener and the bounded connection
+//!   registry. Over-limit accepts are answered with a typed `overloaded`
+//!   error line and closed immediately; nothing about them is buffered.
+//! * **per-connection reader thread** — drives a [`FrameReader`] over
+//!   the socket with a short read-timeout tick, enforcing the mid-frame
+//!   read budget (slow-loris cut) and the idle budget. Stats lines,
+//!   parse errors and quota sheds are answered inline (zero scan work);
+//!   well-formed queries are handed to the dispatcher.
+//! * **per-connection writer thread** — drains a *bounded* response
+//!   queue onto the socket. A client that stops reading fills the queue;
+//!   the next response for it kills the connection instead of buffering
+//!   forever (backpressure disconnect).
+//! * **dispatcher thread** — owns the one [`BatchCoalescer`] every
+//!   connection feeds, so TCP serving reuses the exact coalescing →
+//!   `Service::submit_batch_timed` path (cohorts, deadlines, admission
+//!   control, worker supervision) the in-process serve loop uses.
+//!   Responses are pinned to the same wire bytes `Service::handle_line`
+//!   produces (timing fields aside — wall clocks differ by definition).
+//!
+//! Graceful drain ([`NetServer::drain`]): stop accepting, cut every
+//! connection's *read* half (no new frames), let the dispatcher finish
+//! every in-flight query under its deadline budget, deliver every
+//! response, then join all threads. No response is lost or half-written.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::protocol::{
+    is_stats_line, ErrorKind, ErrorResponse, Overloaded, QueryRequest, QuotaExceeded,
+};
+use crate::coordinator::{BatchCoalescer, Service};
+use crate::fault;
+use crate::metrics::Counters;
+use crate::obs::{Gauge, Stage};
+
+use super::frame::{FrameEvent, FrameReader};
+use super::quota::TenantQuotas;
+
+/// Socket poll tick: the read timeout handed to the kernel, NOT the
+/// hostile-client budget — each tick the reader re-checks its read/idle
+/// budgets and the shutdown flag, so cut-off latency is bounded by this
+/// regardless of the configured budgets.
+const TICK: Duration = Duration::from_millis(25);
+
+/// Front-end knobs (`repro serve --listen` flags / the `[net]` config
+/// section). Every bound exists to keep a hostile client from pinning a
+/// thread or growing a buffer.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// open-connection bound; accepts beyond it are answered with a
+    /// typed `overloaded` error and closed (0 = unbounded)
+    pub max_conns: usize,
+    /// per-frame length cap for the bounded reader
+    pub max_frame_bytes: usize,
+    /// budget for assembling one frame once its first byte arrived;
+    /// a frame incomplete past this is cut off (0 = no budget)
+    pub read_timeout_ms: u64,
+    /// budget between frames; a connection idle past this is closed
+    /// (0 = no budget)
+    pub idle_timeout_ms: u64,
+    /// bounded per-connection response queue; a response that finds the
+    /// queue full disconnects the non-reading client
+    pub write_queue: usize,
+    /// per-tenant token refill rate, tokens/second (0 = quotas off)
+    pub quota_rate: f64,
+    /// per-tenant bucket capacity (burst size)
+    pub quota_burst: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            max_conns: 64,
+            max_frame_bytes: 1 << 20,
+            read_timeout_ms: 5_000,
+            idle_timeout_ms: 300_000,
+            write_queue: 64,
+            quota_rate: 0.0,
+            quota_burst: 8.0,
+        }
+    }
+}
+
+/// State shared by the accept loop and every connection thread.
+struct Inner {
+    svc: Arc<Service>,
+    cfg: NetConfig,
+    quotas: TenantQuotas,
+    shutdown: AtomicBool,
+    conns: Mutex<Vec<Conn>>,
+}
+
+struct Conn {
+    stream: Arc<TcpStream>,
+    reader: JoinHandle<()>,
+    writer: JoinHandle<()>,
+}
+
+/// One query in flight from a connection to the dispatcher.
+struct Dispatch {
+    req: QueryRequest,
+    arrival: Instant,
+    reply: ReplyHandle,
+}
+
+/// Where a response line goes: the owning connection's bounded writer
+/// queue, plus the socket so a full queue can kill the connection.
+#[derive(Clone)]
+struct ReplyHandle {
+    tx: SyncSender<String>,
+    stream: Arc<TcpStream>,
+}
+
+impl ReplyHandle {
+    /// Enqueue one response line; a full queue means the client stopped
+    /// reading — disconnect it (both halves, so its reader and writer
+    /// threads wind down) instead of buffering without bound.
+    fn send_or_kill(&self, line: String) {
+        match self.tx.try_send(line) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                let _ = self.stream.shutdown(Shutdown::Both);
+            }
+            Err(TrySendError::Disconnected(_)) => {}
+        }
+    }
+}
+
+/// A running TCP front-end. Construct with [`NetServer::start`]; stop
+/// with [`NetServer::drain`] (dropping the server drains it too).
+pub struct NetServer {
+    inner: Arc<Inner>,
+    local_addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
+    /// the master dispatch sender; dropped during drain so the channel
+    /// closes once every connection reader has exited
+    dispatch_tx: Option<SyncSender<Dispatch>>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:7878"`, port 0 for ephemeral) and
+    /// start serving the `svc` pipeline over it.
+    pub fn start(svc: Arc<Service>, listen: &str, cfg: NetConfig) -> Result<NetServer> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding {listen:?}"))?;
+        let local_addr = listener.local_addr()?;
+        let quotas = TenantQuotas::new(cfg.quota_rate, cfg.quota_burst);
+        let inner = Arc::new(Inner {
+            svc,
+            cfg,
+            quotas,
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        // bounded dispatcher inbox: enough for the window plus headroom;
+        // a full inbox blocks readers (TCP backpressure to the client),
+        // never the dispatcher
+        let depth = inner.svc.max_pending().max(inner.svc.batch_window() * 2).max(64);
+        let (dispatch_tx, dispatch_rx) = mpsc::sync_channel::<Dispatch>(depth);
+        let dispatcher = {
+            let svc = Arc::clone(&inner.svc);
+            std::thread::Builder::new()
+                .name("net-dispatch".into())
+                .spawn(move || dispatcher_loop(&svc, dispatch_rx))
+                .context("spawning dispatcher")?
+        };
+        let accept = {
+            let inner = Arc::clone(&inner);
+            let dispatch_tx = dispatch_tx.clone();
+            std::thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || accept_loop(listener, &inner, &dispatch_tx))
+                .context("spawning accept loop")?
+        };
+        Ok(NetServer {
+            inner,
+            local_addr,
+            accept: Some(accept),
+            dispatcher: Some(dispatcher),
+            dispatch_tx: Some(dispatch_tx),
+        })
+    }
+
+    /// The bound address (useful with an ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Graceful shutdown: stop accepting, stop reading new frames, finish
+    /// and deliver every in-flight query, join every thread.
+    pub fn drain(mut self) {
+        self.drain_impl();
+    }
+
+    fn drain_impl(&mut self) {
+        if self.accept.is_none() {
+            return; // already drained
+        }
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        // wake the blocking accept() with a loopback poke; the loop sees
+        // the flag and exits
+        let poke: IpAddr = match self.local_addr {
+            SocketAddr::V4(_) => Ipv4Addr::LOCALHOST.into(),
+            SocketAddr::V6(_) => Ipv6Addr::LOCALHOST.into(),
+        };
+        let _ = TcpStream::connect_timeout(
+            &SocketAddr::new(poke, self.local_addr.port()),
+            Duration::from_secs(1),
+        );
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // no more frames: cut every connection's read half (in-flight
+        // replies still go out the write half), then join the readers
+        let conns: Vec<Conn> = std::mem::take(&mut *self.inner.conns.lock().unwrap());
+        for c in &conns {
+            let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        let mut writers = Vec::with_capacity(conns.len());
+        for c in conns {
+            let _ = c.reader.join();
+            writers.push(c.writer);
+        }
+        // every reader's dispatch sender is gone; dropping the master
+        // clone closes the channel, so the dispatcher flushes the
+        // coalescer tail, serves it, delivers the replies and exits
+        self.dispatch_tx = None;
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        // all reply senders are dropped now: writers drain what remains
+        // on their queues and exit — nothing is lost or half-written
+        for w in writers {
+            let _ = w.join();
+        }
+        self.inner.svc.obs_cell().set_gauge(Gauge::OpenConnections, 0);
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.drain_impl();
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: &Arc<Inner>, dispatch_tx: &SyncSender<Dispatch>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(_) => {
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue; // transient accept error (EMFILE, ECONNABORTED…)
+            }
+        };
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return; // the drain poke (or a late real client): stop here
+        }
+        if fault::fire(fault::ACCEPT_FAIL) {
+            continue; // injected transient failure: socket dropped unreplied
+        }
+        let cell = inner.svc.obs_cell();
+        let mut conns = inner.conns.lock().unwrap();
+        // reap connections whose threads have finished, so closed
+        // sessions free their registry slots without a background sweeper
+        let mut i = 0;
+        while i < conns.len() {
+            if conns[i].reader.is_finished() && conns[i].writer.is_finished() {
+                let c = conns.swap_remove(i);
+                let _ = c.reader.join();
+                let _ = c.writer.join();
+            } else {
+                i += 1;
+            }
+        }
+        if inner.cfg.max_conns > 0 && conns.len() >= inner.cfg.max_conns {
+            cell.add_counter(Counters::SLOT_CONNS_REJECTED, 1);
+            cell.set_gauge(Gauge::OpenConnections, conns.len() as u64);
+            drop(conns); // don't hold the registry over the reject write
+            let err = Overloaded {
+                pending: inner.cfg.max_conns as u64,
+                max_pending: inner.cfg.max_conns,
+            };
+            let reply = ErrorResponse {
+                id: None,
+                error: format!("connection refused: {err}"),
+                kind: Some(ErrorKind::Overloaded),
+                retry_after_ms: None,
+            };
+            let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+            let mut s = &stream;
+            let _ = s.write_all(format!("{}\n", reply.to_json()).as_bytes());
+            continue; // stream drops: closed
+        }
+        cell.add_counter(Counters::SLOT_CONNS_ACCEPTED, 1);
+        let _ = stream.set_read_timeout(Some(TICK));
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+        let _ = stream.set_nodelay(true);
+        let stream = Arc::new(stream);
+        let (resp_tx, resp_rx) = mpsc::sync_channel::<String>(inner.cfg.write_queue.max(1));
+        let writer = {
+            let inner = Arc::clone(inner);
+            let stream = Arc::clone(&stream);
+            std::thread::Builder::new()
+                .name("net-conn-writer".into())
+                .spawn(move || writer_loop(&inner, &stream, resp_rx))
+        };
+        let reader = {
+            let inner = Arc::clone(inner);
+            let stream = Arc::clone(&stream);
+            let dispatch_tx = dispatch_tx.clone();
+            std::thread::Builder::new()
+                .name("net-conn-reader".into())
+                .spawn(move || reader_loop(&inner, &stream, resp_tx, &dispatch_tx))
+        };
+        match (reader, writer) {
+            (Ok(reader), Ok(writer)) => {
+                conns.push(Conn { stream, reader, writer });
+                cell.set_gauge(Gauge::OpenConnections, conns.len() as u64);
+            }
+            // spawn failure (thread exhaustion): drop the socket; any
+            // half-spawned thread winds down on its closed channel
+            (r, w) => {
+                let _ = stream.shutdown(Shutdown::Both);
+                if let Ok(h) = r {
+                    let _ = h.join();
+                }
+                if let Ok(h) = w {
+                    let _ = h.join();
+                }
+            }
+        }
+    }
+}
+
+/// Drain the bounded response queue onto the socket. Exits when every
+/// sender (reader + in-flight dispatcher replies) is gone, or on the
+/// first write failure — in which case the socket is shut down so the
+/// reader stops accepting frames that could never be answered.
+fn writer_loop(inner: &Inner, stream: &Arc<TcpStream>, rx: Receiver<String>) {
+    let cell = inner.svc.obs_cell();
+    for mut line in rx {
+        let t0 = Instant::now();
+        line.push('\n');
+        let mut s: &TcpStream = stream;
+        if s.write_all(line.as_bytes()).and_then(|()| s.flush()).is_err() {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+        cell.record_stage_ns(Stage::ConnWrite, t0.elapsed().as_nanos() as u64);
+    }
+    // every sender is gone — the last response this connection will ever
+    // get has been written; close, so the client sees a clean FIN
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Why the reader stopped consuming a connection.
+enum ConnEnd {
+    /// client closed / drain cut the read half / client misbehaved
+    Closed,
+    /// a frame stayed incomplete past the read budget (slow loris)
+    ReadTimeout,
+}
+
+fn reader_loop(
+    inner: &Inner,
+    stream: &Arc<TcpStream>,
+    resp_tx: SyncSender<String>,
+    dispatch_tx: &SyncSender<Dispatch>,
+) {
+    let end = read_frames(inner, stream, &resp_tx, dispatch_tx);
+    match end {
+        // hostile cut: nothing owed to this client, close both halves so
+        // the slow sender cannot keep the socket (or a thread) pinned
+        ConnEnd::ReadTimeout => {
+            inner.svc.obs_cell().add_counter(Counters::SLOT_CONN_READ_TIMEOUTS, 1);
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        // orderly end: stop reading, but leave the write half open — the
+        // writer closes it after the in-flight replies have gone out
+        ConnEnd::Closed => {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+    }
+    // resp_tx drops here: the writer exits once in-flight replies (which
+    // hold their own senders) have been delivered
+}
+
+fn read_frames(
+    inner: &Inner,
+    stream: &Arc<TcpStream>,
+    resp_tx: &SyncSender<String>,
+    dispatch_tx: &SyncSender<Dispatch>,
+) -> ConnEnd {
+    let cell = inner.svc.obs_cell();
+    let read_budget = Duration::from_millis(inner.cfg.read_timeout_ms);
+    let idle_budget = Duration::from_millis(inner.cfg.idle_timeout_ms);
+    let reply = ReplyHandle { tx: resp_tx.clone(), stream: Arc::clone(stream) };
+    let mut fr = FrameReader::new(&**stream, inner.cfg.max_frame_bytes);
+    // when the first byte of the frame being assembled was seen
+    let mut frame_start: Option<Instant> = None;
+    let mut last_frame = Instant::now();
+    loop {
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return ConnEnd::Closed;
+        }
+        let call_start = Instant::now();
+        match fr.next_frame() {
+            Ok(FrameEvent::Frame(line)) => {
+                let t0 = frame_start.take().unwrap_or(call_start);
+                cell.record_stage_ns(Stage::ConnRead, t0.elapsed().as_nanos() as u64);
+                last_frame = Instant::now();
+                // pipelined bytes already buffered belong to the next frame
+                if fr.mid_frame() {
+                    frame_start = Some(last_frame);
+                }
+                if line.is_empty() {
+                    continue; // blank keep-alive line, nothing to answer
+                }
+                fault::fire_stall(fault::CONN_STALL);
+                if fault::fire(fault::CONN_DROP) {
+                    return ConnEnd::Closed; // injected vanish mid-session
+                }
+                if is_stats_line(&line) {
+                    reply.send_or_kill(inner.svc.stats_json());
+                    continue;
+                }
+                let req = match QueryRequest::from_json(&line) {
+                    Ok(req) => req,
+                    Err(e) => {
+                        // exactly one reply per frame, parseable or not
+                        reply.send_or_kill(ErrorResponse::for_line(&line, &e).to_json());
+                        continue;
+                    }
+                };
+                if inner.quotas.enabled() {
+                    let tenant = req.tenant.as_deref().unwrap_or("");
+                    if let Err(retry_after_ms) = inner.quotas.try_acquire(tenant, Instant::now())
+                    {
+                        // shed before any scan work, with the backoff
+                        // horizon on the wire
+                        cell.add_counter(Counters::SLOT_QUOTA_SHED_QUERIES, 1);
+                        let err = anyhow::Error::new(QuotaExceeded {
+                            tenant: if tenant.is_empty() {
+                                "anonymous".to_string()
+                            } else {
+                                tenant.to_string()
+                            },
+                            retry_after_ms,
+                        });
+                        reply.send_or_kill(ErrorResponse::new(req.id, &err).to_json());
+                        continue;
+                    }
+                }
+                let msg = Dispatch { req, arrival: Instant::now(), reply: reply.clone() };
+                if dispatch_tx.send(msg).is_err() {
+                    return ConnEnd::Closed; // dispatcher gone: draining
+                }
+            }
+            Ok(FrameEvent::TooLarge(e)) => {
+                // answer the typed error, then cut the connection — a
+                // client this far out of contract doesn't get a resync
+                let err = anyhow::Error::new(e);
+                reply.send_or_kill(ErrorResponse::for_line("", &err).to_json());
+                return ConnEnd::Closed;
+            }
+            Ok(FrameEvent::Eof) => return ConnEnd::Closed,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // the socket tick: re-check the budgets
+                if fr.mid_frame() {
+                    let t0 = *frame_start.get_or_insert(call_start);
+                    if !read_budget.is_zero() && t0.elapsed() >= read_budget {
+                        return ConnEnd::ReadTimeout; // slow loris: cut
+                    }
+                } else {
+                    frame_start = None;
+                    if !idle_budget.is_zero() && last_frame.elapsed() >= idle_budget {
+                        return ConnEnd::Closed; // idle past budget
+                    }
+                }
+            }
+            Err(_) => return ConnEnd::Closed, // connection reset etc.
+        }
+    }
+}
+
+/// The single consumer of every connection's queries: feeds the shared
+/// [`BatchCoalescer`] and serves flushed batches through
+/// `Service::submit_batch_timed`, exactly like the in-process serve
+/// loop. Reply handles queue in arrival order; the coalescer flushes
+/// FIFO, so handle k always belongs to batch member k.
+fn dispatcher_loop(svc: &Arc<Service>, rx: Receiver<Dispatch>) {
+    let mut coalescer = BatchCoalescer::new(svc.batch_window(), svc.batch_deadline());
+    let mut replies: VecDeque<ReplyHandle> = VecDeque::new();
+    // poll often enough to honour the batch deadline; with no deadline
+    // the coalescer only flushes on a full window (or at drain), so the
+    // tick only bounds shutdown latency
+    let tick = match svc.batch_deadline() {
+        Some(d) => d.clamp(Duration::from_millis(1), Duration::from_millis(10)),
+        None => Duration::from_secs(3600),
+    };
+    let serve = |batch: Vec<(QueryRequest, Instant)>, replies: &mut VecDeque<ReplyHandle>| {
+        let results = svc.submit_batch_timed(&batch);
+        for ((req, _), result) in batch.iter().zip(results) {
+            let reply = replies.pop_front().expect("one reply handle per coalesced request");
+            let line = match result {
+                Ok(resp) => resp.to_json(),
+                Err(e) => ErrorResponse::new(req.id, &e).to_json(),
+            };
+            reply.send_or_kill(line);
+        }
+    };
+    loop {
+        match rx.recv_timeout(tick) {
+            Ok(Dispatch { req, arrival, reply }) => {
+                replies.push_back(reply);
+                if let Some(batch) = coalescer.push(req, arrival) {
+                    serve(batch, &mut replies);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(batch) = coalescer.poll(Instant::now()) {
+                    serve(batch, &mut replies);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // drain: every reader is gone; flush and serve the tail
+                if let Some(batch) = coalescer.flush() {
+                    serve(batch, &mut replies);
+                }
+                svc.set_coalescer_pending(0);
+                return;
+            }
+        }
+        svc.set_coalescer_pending(coalescer.pending() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::QueryResponse;
+    use crate::coordinator::ServiceConfig;
+    use crate::data::Dataset;
+    use crate::distances::metric::Metric;
+    use crate::search::suite::Suite;
+    use crate::util::json::Json;
+    use std::io::{BufRead, BufReader};
+
+    fn service(shards: usize, window: usize) -> Arc<Service> {
+        let r = Dataset::Ecg.generate(1500, 91);
+        Arc::new(
+            Service::new(
+                r,
+                &ServiceConfig {
+                    shards,
+                    batch_window: window,
+                    batch_deadline_ms: if window > 1 { 5 } else { 0 },
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        )
+    }
+
+    fn request_line(id: u64) -> String {
+        let r = Dataset::Ecg.generate(1500, 91);
+        let q = crate::data::extract_queries(&r, 1, 64, 0.1, 92 + id).remove(0);
+        QueryRequest {
+            id,
+            query: q,
+            window_ratio: 0.1,
+            suite: Suite::UcrMon,
+            k: 2,
+            metric: Metric::Cdtw,
+            deadline_ms: None,
+            tenant: None,
+        }
+        .to_json()
+    }
+
+    struct Client {
+        stream: TcpStream,
+        reader: BufReader<TcpStream>,
+    }
+
+    impl Client {
+        fn connect(addr: SocketAddr) -> Client {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+            let reader = BufReader::new(stream.try_clone().unwrap());
+            Client { stream, reader }
+        }
+
+        fn send(&mut self, line: &str) {
+            self.stream.write_all(line.as_bytes()).unwrap();
+            if !line.ends_with('\n') {
+                self.stream.write_all(b"\n").unwrap();
+            }
+        }
+
+        fn recv(&mut self) -> String {
+            let mut line = String::new();
+            self.reader.read_line(&mut line).unwrap();
+            line.trim_end().to_string()
+        }
+    }
+
+    /// Strip the wall-clock fields that cannot match across processes,
+    /// keeping everything else for exact comparison.
+    fn normalized(line: &str) -> String {
+        match Json::parse(line).unwrap() {
+            Json::Obj(mut m) => {
+                m.remove("latency_ms");
+                m.remove("queue_ms");
+                Json::Obj(m).to_string()
+            }
+            other => other.to_string(),
+        }
+    }
+
+    #[test]
+    fn tcp_responses_match_in_process_handle_line() {
+        let svc = service(2, 1);
+        let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default())
+            .unwrap();
+        let mut c = Client::connect(server.local_addr());
+        let line = request_line(7);
+        c.send(&line);
+        let over_wire = c.recv();
+        let in_process = svc.handle_line(&line);
+        assert_eq!(normalized(&over_wire), normalized(&in_process));
+        // sanity: it really is a result with matches
+        let resp = QueryResponse::from_json(&over_wire).unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.matches.len(), 2);
+        // a stats line answers from the same live registry
+        c.send("{\"cmd\":\"stats\"}");
+        let stats = c.recv();
+        assert!(stats.contains("repro.metrics.v1"), "{stats}");
+        // junk answers id:null, and the session keeps serving
+        c.send("not json at all");
+        let err = c.recv();
+        assert!(ErrorResponse::is_error_line(&err), "{err}");
+        assert_eq!(ErrorResponse::from_json(&err).unwrap().id, None);
+        c.send(&request_line(8));
+        assert_eq!(QueryResponse::from_json(&c.recv()).unwrap().id, 8);
+        server.drain();
+    }
+
+    #[test]
+    fn over_limit_connections_are_rejected_with_overloaded() {
+        let svc = service(1, 1);
+        let cfg = NetConfig { max_conns: 1, ..NetConfig::default() };
+        let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg).unwrap();
+        let mut first = Client::connect(server.local_addr());
+        // prove the first session is live (and its registry slot taken)
+        first.send(&request_line(1));
+        let _ = first.recv();
+        let mut second = Client::connect(server.local_addr());
+        let reply = second.recv();
+        let err = ErrorResponse::from_json(&reply).unwrap();
+        assert_eq!(err.kind, Some(ErrorKind::Overloaded), "{reply}");
+        assert_eq!(err.id, None);
+        // the rejected socket is closed: EOF follows
+        let mut line = String::new();
+        assert_eq!(second.reader.read_line(&mut line).unwrap(), 0);
+        let snap = svc.metrics();
+        assert_eq!(snap.counters.conns_rejected, 1);
+        assert!(snap.counters.conns_accepted >= 1);
+        server.drain();
+    }
+
+    #[test]
+    fn quota_exhaustion_sheds_with_retry_after_and_no_scan_work() {
+        let svc = service(1, 1);
+        let cfg = NetConfig { quota_rate: 1.0, quota_burst: 2.0, ..NetConfig::default() };
+        let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg).unwrap();
+        let mut c = Client::connect(server.local_addr());
+        let line = request_line(0);
+        // burst of 2 admitted…
+        for id in 0..2u64 {
+            c.send(&line.replace("\"id\":0", &format!("\"id\":{id}")));
+            assert!(QueryResponse::from_json(&c.recv()).is_ok());
+        }
+        let candidates_before = svc.metrics().counters.candidates;
+        // …the third is shed before any scan work
+        c.send(&line.replace("\"id\":0", "\"id\":99"));
+        let shed = ErrorResponse::from_json(&c.recv()).unwrap();
+        assert_eq!(shed.kind, Some(ErrorKind::Quota));
+        assert_eq!(shed.id, Some(99));
+        let retry = shed.retry_after_ms.expect("quota sheds carry retry_after_ms");
+        assert!(retry >= 1);
+        let snap = svc.metrics();
+        assert_eq!(snap.counters.quota_shed_queries, 1);
+        assert_eq!(snap.counters.candidates, candidates_before, "shed did zero scan work");
+        // a different tenant is unaffected
+        c.send(&line.replace("\"id\":0", "\"id\":5,\"tenant\":\"other\""));
+        assert_eq!(QueryResponse::from_json(&c.recv()).unwrap().id, 5);
+        server.drain();
+    }
+
+    #[test]
+    fn drain_answers_in_flight_then_joins_everything() {
+        let svc = service(2, 4);
+        let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default())
+            .unwrap();
+        let addr = server.local_addr();
+        let mut clients: Vec<Client> = (0..3).map(|_| Client::connect(addr)).collect();
+        for (i, c) in clients.iter_mut().enumerate() {
+            c.send(&request_line(i as u64));
+        }
+        // wait until every query has been served (a frame still sitting
+        // unread in a kernel buffer is legitimately dropped by drain);
+        // the responses may still be anywhere between the dispatcher and
+        // the writer queues — drain must deliver every one of them
+        let t0 = Instant::now();
+        while svc.queries_served() < 3 {
+            assert!(t0.elapsed() < Duration::from_secs(30), "queries never served");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        server.drain();
+        for (i, c) in clients.iter_mut().enumerate() {
+            let resp = QueryResponse::from_json(&c.recv()).unwrap();
+            assert_eq!(resp.id, i as u64);
+            // …and the connection is cleanly closed afterwards
+            let mut line = String::new();
+            assert_eq!(c.reader.read_line(&mut line).unwrap(), 0);
+        }
+        assert_eq!(svc.metrics().gauges[Gauge::OpenConnections.index()], 0);
+    }
+}

@@ -59,10 +59,18 @@ pub enum Stage {
     /// when a deadline was set, so the histogram's `count` equals the
     /// number of in-budget deadline queries.
     DeadlineSlack,
+    /// Time the network front-end spent assembling one complete request
+    /// frame from a connection's socket (first byte of the frame to its
+    /// newline) — a slow client shows up here before the timeout cuts it.
+    ConnRead,
+    /// Time spent writing one response line back onto a connection's
+    /// socket (kernel-buffer stalls show up here before backpressure
+    /// disconnects the client).
+    ConnWrite,
 }
 
 impl Stage {
-    pub const COUNT: usize = 9;
+    pub const COUNT: usize = 11;
     /// Snapshot-schema names, index-aligned with [`Stage::index`].
     pub const NAMES: [&'static str; Self::COUNT] = [
         "queue_wait",
@@ -74,6 +82,8 @@ impl Stage {
         "kernel_eval",
         "fan_in",
         "deadline_slack",
+        "conn_read",
+        "conn_write",
     ];
     pub const ALL: [Stage; Self::COUNT] = [
         Stage::QueueWait,
@@ -85,6 +95,8 @@ impl Stage {
         Stage::KernelEval,
         Stage::FanIn,
         Stage::DeadlineSlack,
+        Stage::ConnRead,
+        Stage::ConnWrite,
     ];
 
     #[inline]
@@ -99,6 +111,8 @@ impl Stage {
             Stage::KernelEval => 6,
             Stage::FanIn => 7,
             Stage::DeadlineSlack => 8,
+            Stage::ConnRead => 9,
+            Stage::ConnWrite => 10,
         }
     }
 
@@ -151,17 +165,26 @@ pub enum Gauge {
     /// Queries admitted and not yet answered — the value the
     /// `--max-pending` admission budget is checked against.
     PendingQueries,
+    /// TCP connections currently open on the network front-end — the
+    /// value the `--max-conns` registry bound is checked against.
+    OpenConnections,
 }
 
 impl Gauge {
-    pub const COUNT: usize = 4;
-    pub const NAMES: [&'static str; Self::COUNT] =
-        ["busy_workers", "queries_served", "coalescer_pending", "pending_queries"];
+    pub const COUNT: usize = 5;
+    pub const NAMES: [&'static str; Self::COUNT] = [
+        "busy_workers",
+        "queries_served",
+        "coalescer_pending",
+        "pending_queries",
+        "open_connections",
+    ];
     pub const ALL: [Gauge; Self::COUNT] = [
         Gauge::BusyWorkers,
         Gauge::QueriesServed,
         Gauge::CoalescerPending,
         Gauge::PendingQueries,
+        Gauge::OpenConnections,
     ];
 
     #[inline]
@@ -171,6 +194,7 @@ impl Gauge {
             Gauge::QueriesServed => 1,
             Gauge::CoalescerPending => 2,
             Gauge::PendingQueries => 3,
+            Gauge::OpenConnections => 4,
         }
     }
 

@@ -52,6 +52,7 @@ fn request(id: u64, q: &[f64], k: usize, deadline_ms: Option<f64>) -> QueryReque
         k,
         metric: Metric::Cdtw,
         deadline_ms,
+        tenant: None,
     }
 }
 

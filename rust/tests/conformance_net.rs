@@ -1,0 +1,325 @@
+//! TCP front-end conformance (`--features fault-inject`): hostile-client
+//! behaviour over real loopback sockets. Pins the contract of
+//! `rust/src/net/`:
+//!
+//! * a slow-loris sender is cut off by the read budget without pinning a
+//!   thread — the service keeps serving other connections;
+//! * an oversized frame is answered with a typed `frame_too_large` error
+//!   the moment the cap is crossed, never buffered;
+//! * a mid-frame disconnect poisons nothing;
+//! * quota exhaustion sheds with `retry_after_ms` and zero scan work,
+//!   and honouring the backoff is sufficient for readmission;
+//! * graceful drain completes every in-flight query with a response
+//!   byte-identical to in-process `Service::handle_line` (wall-clock
+//!   timing fields aside);
+//! * the counter conservation identities survive a faulty session with
+//!   the `conn.*` / `accept.*` sites armed.
+//!
+//! The fault registry is process-global, so every test here serialises
+//! on [`FAULT_LOCK`] (same discipline as `conformance_faults.rs`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use repro::coordinator::protocol::{ErrorKind, ErrorResponse, QueryRequest, QueryResponse};
+use repro::coordinator::{Service, ServiceConfig};
+use repro::data::{extract_queries, Dataset};
+use repro::distances::metric::Metric;
+use repro::fault;
+use repro::metrics::Counters;
+use repro::net::{NetConfig, NetServer};
+use repro::search::suite::Suite;
+use repro::util::json::Json;
+
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Take the suite-wide lock (poison-tolerant) and start from a disarmed
+/// registry. Every test takes it — even the ones that arm nothing —
+/// because an armed site from a concurrent test would otherwise fire
+/// inside the wrong session.
+fn armed_section() -> MutexGuard<'static, ()> {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    fault::reset();
+    guard
+}
+
+fn service(shards: usize, window: usize) -> Arc<Service> {
+    let r = Dataset::Ecg.generate(3000, 41);
+    Arc::new(
+        Service::new(
+            r,
+            &ServiceConfig {
+                shards,
+                batch_window: window,
+                batch_deadline_ms: if window > 1 { 5 } else { 0 },
+                ..Default::default()
+            },
+        )
+        .expect("service"),
+    )
+}
+
+fn request_line(id: u64) -> String {
+    let r = Dataset::Ecg.generate(3000, 41);
+    let q = extract_queries(&r, 1, 96, 0.1, 42 + id).remove(0);
+    QueryRequest {
+        id,
+        query: q,
+        window_ratio: 0.1,
+        suite: Suite::UcrMon,
+        k: 2,
+        metric: Metric::Cdtw,
+        deadline_ms: None,
+        tenant: None,
+    }
+    .to_json()
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.stream.write_all(line.as_bytes()).expect("send");
+        self.stream.write_all(b"\n").expect("send newline");
+    }
+
+    fn recv(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("recv");
+        line.trim_end().to_string()
+    }
+
+    /// Next read yields end-of-stream (the server closed the session).
+    fn expect_eof(&mut self) {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).unwrap_or(0);
+        assert_eq!(n, 0, "expected EOF, got {line:?}");
+    }
+}
+
+/// Strip the wall-clock fields (`latency_ms`, `queue_ms`) that cannot
+/// match across serving paths; everything else must be byte-identical.
+fn normalized(line: &str) -> String {
+    match Json::parse(line).expect("valid response json") {
+        Json::Obj(mut m) => {
+            m.remove("latency_ms");
+            m.remove("queue_ms");
+            Json::Obj(m).to_string()
+        }
+        other => other.to_string(),
+    }
+}
+
+/// The registry-wide conservation identities (same as the fault suite):
+/// they must hold across net-layer faults too, because a dropped
+/// connection or shed query must flush either all of a scan's counters
+/// or none of them.
+fn assert_conserved(c: &Counters) {
+    assert_eq!(
+        c.candidates,
+        c.lb_kim_prunes
+            + c.lb_keogh_eq_prunes
+            + c.lb_keogh_ec_prunes
+            + c.lb_improved_prunes
+            + c.xla_prunes
+            + c.dtw_calls,
+        "candidate conservation broke: {c:?}"
+    );
+    assert_eq!(
+        c.dtw_calls,
+        c.dtw_abandons + c.dtw_completions,
+        "dtw outcome conservation broke: {c:?}"
+    );
+}
+
+#[test]
+fn slow_loris_is_cut_by_the_read_budget() {
+    let _lock = armed_section();
+    let svc = service(2, 1);
+    let cfg = NetConfig {
+        read_timeout_ms: 150,
+        idle_timeout_ms: 60_000,
+        ..NetConfig::default()
+    };
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg).unwrap();
+    let mut loris = Client::connect(server.local_addr());
+    // half a frame, then silence: the read budget must cut the session
+    loris.stream.write_all(b"{\"id\":1,\"query\":[0.1,").unwrap();
+    let t0 = Instant::now();
+    loris.expect_eof();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "cut took {:?} — the budget did not fire",
+        t0.elapsed()
+    );
+    let snap = svc.metrics();
+    assert_eq!(snap.counters.conn_read_timeouts, 1);
+    // the thread the loris held is free again: a well-behaved client is
+    // served immediately on a fresh connection
+    let mut ok = Client::connect(server.local_addr());
+    ok.send(&request_line(2));
+    assert_eq!(QueryResponse::from_json(&ok.recv()).unwrap().id, 2);
+    assert_conserved(&svc.metrics().counters);
+    server.drain();
+}
+
+#[test]
+fn oversized_frame_is_refused_at_the_cap_not_buffered() {
+    let _lock = armed_section();
+    let svc = service(1, 1);
+    let cfg = NetConfig { max_frame_bytes: 256, ..NetConfig::default() };
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg).unwrap();
+
+    // a newline-terminated frame over the cap answers the typed error…
+    let mut c = Client::connect(server.local_addr());
+    c.send(&format!("{{\"id\":9,\"pad\":\"{}\"}}", "x".repeat(400)));
+    let err = ErrorResponse::from_json(&c.recv()).expect("typed reply");
+    assert_eq!(err.kind, Some(ErrorKind::FrameTooLarge));
+    assert_eq!(err.id, None, "an unbuffered frame has no id to echo");
+    c.expect_eof();
+
+    // …and a newline-free flood is refused the moment the cap is
+    // crossed, while the sender is still mid-flood
+    let mut flood = Client::connect(server.local_addr());
+    flood.stream.write_all(&[b'z'; 8 * 1024]).unwrap();
+    let err = ErrorResponse::from_json(&flood.recv()).expect("typed reply mid-flood");
+    assert_eq!(err.kind, Some(ErrorKind::FrameTooLarge));
+    flood.expect_eof();
+
+    // no scan work happened for either; the service is unharmed
+    assert_eq!(svc.queries_served(), 0);
+    assert_conserved(&svc.metrics().counters);
+    let mut ok = Client::connect(server.local_addr());
+    ok.send(&request_line(1));
+    assert_eq!(QueryResponse::from_json(&ok.recv()).unwrap().id, 1);
+    server.drain();
+}
+
+#[test]
+fn mid_frame_disconnect_poisons_nothing() {
+    let _lock = armed_section();
+    let svc = service(2, 1);
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default()).unwrap();
+    for _ in 0..3 {
+        let mut c = Client::connect(server.local_addr());
+        // half a frame, then the client vanishes
+        c.stream.write_all(b"{\"id\":7,\"query\":[0.25,0.5").unwrap();
+        drop(c);
+    }
+    // the service keeps serving, bitwise-correctly, on both a fresh
+    // connection and the in-process path
+    let mut ok = Client::connect(server.local_addr());
+    let line = request_line(3);
+    ok.send(&line);
+    let over_wire = ok.recv();
+    assert_eq!(normalized(&over_wire), normalized(&svc.handle_line(&line)));
+    assert_conserved(&svc.metrics().counters);
+    server.drain();
+}
+
+#[test]
+fn quota_exhaustion_sheds_before_scan_work_and_backoff_readmits() {
+    let _lock = armed_section();
+    let svc = service(1, 1);
+    let cfg = NetConfig { quota_rate: 20.0, quota_burst: 2.0, ..NetConfig::default() };
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg).unwrap();
+    let mut c = Client::connect(server.local_addr());
+    let line = request_line(0).replacen('{', "{\"tenant\":\"acme\",", 1);
+    for id in 0..2u64 {
+        c.send(&line.replace("\"id\":0", &format!("\"id\":{id}")));
+        assert!(QueryResponse::from_json(&c.recv()).is_ok(), "burst admitted");
+    }
+    let candidates_before = svc.metrics().counters.candidates;
+    // the burst is spent: the next query sheds with the backoff horizon,
+    // before any scan work
+    c.send(&line.replace("\"id\":0", "\"id\":40"));
+    let shed = ErrorResponse::from_json(&c.recv()).expect("typed shed");
+    assert_eq!(shed.kind, Some(ErrorKind::Quota));
+    assert_eq!(shed.id, Some(40));
+    let retry_ms = shed.retry_after_ms.expect("shed carries retry_after_ms");
+    assert!(retry_ms >= 1);
+    let snap = svc.metrics();
+    assert_eq!(snap.counters.quota_shed_queries, 1);
+    assert_eq!(snap.counters.candidates, candidates_before, "shed did zero scan work");
+    // honouring the advertised backoff is sufficient for readmission
+    std::thread::sleep(Duration::from_millis(retry_ms + 20));
+    c.send(&line.replace("\"id\":0", "\"id\":41"));
+    assert_eq!(QueryResponse::from_json(&c.recv()).unwrap().id, 41);
+    assert_conserved(&svc.metrics().counters);
+    server.drain();
+}
+
+#[test]
+fn drain_under_load_answers_in_flight_byte_identical() {
+    let _lock = armed_section();
+    let svc = service(2, 1);
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let mut c = Client::connect(server.local_addr());
+    let line = request_line(11);
+    // hold the frame in the reader for 300ms so the drain below starts
+    // while the query is demonstrably still in flight
+    fault::arm_stall(fault::CONN_STALL, 300, 1);
+    c.send(&line);
+    // give the reader time to pick the frame up and enter the stall
+    std::thread::sleep(Duration::from_millis(60));
+    server.drain();
+    // the stalled query was finished under drain and its response
+    // delivered before the connection closed — byte-identical to the
+    // in-process path, modulo wall clocks
+    let over_wire = c.recv();
+    assert_eq!(QueryResponse::from_json(&over_wire).unwrap().id, 11);
+    assert_eq!(normalized(&over_wire), normalized(&svc.handle_line(&line)));
+    c.expect_eof();
+    assert_conserved(&svc.metrics().counters);
+    fault::reset();
+}
+
+#[test]
+fn faulty_session_keeps_counters_conserved() {
+    let _lock = armed_section();
+    let svc = service(2, 1);
+    let cfg = NetConfig { max_conns: 2, ..NetConfig::default() };
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg).unwrap();
+
+    // an injected transient accept failure: the socket is dropped
+    // without a reply, and nothing is registered for it
+    fault::arm(fault::ACCEPT_FAIL, 1);
+    let mut dropped_at_accept = Client::connect(server.local_addr());
+    dropped_at_accept.expect_eof();
+
+    // an injected mid-session vanish: the first parsed frame closes the
+    // connection as if the client disappeared — no reply, no poison
+    fault::arm(fault::CONN_DROP, 1);
+    let mut vanished = Client::connect(server.local_addr());
+    vanished.send(&request_line(1));
+    vanished.expect_eof();
+
+    // a normal session through the same server still serves
+    let mut ok = Client::connect(server.local_addr());
+    for id in 2..4u64 {
+        ok.send(&request_line(id));
+        assert_eq!(QueryResponse::from_json(&ok.recv()).unwrap().id, id);
+    }
+
+    let snap = svc.metrics();
+    // the accept-failed socket was never registered; the other two were
+    assert_eq!(snap.counters.conns_accepted, 2);
+    assert_eq!(snap.counters.conns_rejected, 0);
+    assert_eq!(snap.counters.quota_shed_queries, 0);
+    assert_eq!(svc.queries_served(), 2);
+    assert_conserved(&snap.counters);
+    server.drain();
+    fault::reset();
+}

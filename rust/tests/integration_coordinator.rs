@@ -31,6 +31,7 @@ fn service_equals_direct_search_for_all_scalar_suites() {
                 k: 1,
                 metric: Metric::Cdtw,
                 deadline_ms: None,
+                tenant: None,
             })
             .unwrap();
         let mut c = Counters::new();
@@ -58,6 +59,7 @@ fn shard_count_does_not_change_results() {
                 k: 1,
                 metric: Metric::Cdtw,
                 deadline_ms: None,
+                tenant: None,
             })
             .unwrap();
         results.push((shards, resp.pos, resp.dist));
@@ -95,6 +97,7 @@ fn many_concurrent_clients_one_service() {
                     k: 1,
                     metric: Metric::Cdtw,
                     deadline_ms: None,
+                    tenant: None,
                 })
                 .unwrap(),
             )
@@ -127,6 +130,7 @@ fn protocol_survives_the_wire() {
         k: 3,
         metric: Metric::Erp { gap: 0.25 },
         deadline_ms: None,
+        tenant: None,
     };
     let line = req.to_json();
     assert!(!line.contains('\n'), "line-delimited");
@@ -226,6 +230,7 @@ fn empty_and_oversized_queries_error_cleanly() {
         k: 1,
         metric: Metric::Cdtw,
         deadline_ms: None,
+        tenant: None,
     };
     assert!(svc.submit(&req).is_err());
 }
@@ -247,6 +252,7 @@ fn topk_over_service_is_ranked_and_consistent_across_shards() {
                 k,
                 metric: Metric::Cdtw,
                 deadline_ms: None,
+                tenant: None,
             })
             .unwrap();
         assert_eq!(resp.matches.len(), k);

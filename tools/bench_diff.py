@@ -23,7 +23,10 @@ The robustness counters (``worker_panics``, ``worker_respawns``,
 ``shed_queries``, ``deadline_timeouts``) are absent in pre-robustness
 artifacts and read as 0 there — those services could not have shed or
 respawned. When present they must be non-negative integers, and the
-two-file mode reports their deltas.
+two-file mode reports their deltas. The net front-end counters
+(``conns_accepted``, ``conns_rejected``, ``conn_read_timeouts``,
+``quota_shed_queries``) follow the same rule: absent in pre-net
+artifacts (no TCP front-end existed) and read as 0 there.
 
 A counter absent from a document reads as unknown, and any identity
 that needs it is skipped (older artifacts predate some counters);
@@ -56,6 +59,14 @@ ROBUSTNESS_COUNTERS = (
     "worker_respawns",
     "shed_queries",
     "deadline_timeouts",
+)
+# TCP front-end counters: absent in artifacts from before the net layer
+# existed, where they read as 0 rather than as unknown
+NET_COUNTERS = (
+    "conns_accepted",
+    "conns_rejected",
+    "conn_read_timeouts",
+    "quota_shed_queries",
 )
 # run-identity fields are everything except the measurements
 MEASUREMENTS = {
@@ -110,7 +121,7 @@ def check_counters(counters, where, problems):
     rebuilds = counters.get("cost_model_rebuilds")
     if rebuilds is not None and int(rebuilds) != 0:
         problems.append(f"{where}: cost_model_rebuilds {int(rebuilds)} != 0")
-    for name in ROBUSTNESS_COUNTERS:
+    for name in ROBUSTNESS_COUNTERS + NET_COUNTERS:
         v = counters.get(name, 0)
         if int(v) != v or int(v) < 0:
             problems.append(f"{where}: {name} {v!r} is not a non-negative count")
@@ -159,9 +170,10 @@ def print_deltas(base, curr):
         for key in ("dtw_calls", "dtw_abandons", "candidates"):
             if key in bc and key in cc and int(cc[key]) != int(bc[key]):
                 parts.append(f"{key} {int(bc[key])} -> {int(cc[key])}")
-        # robustness counters read absent as 0 on either side, so a new
-        # artifact's panics/sheds diff cleanly against an old baseline
-        for key in ROBUSTNESS_COUNTERS:
+        # robustness + net counters read absent as 0 on either side, so a
+        # new artifact's panics/sheds/conns diff cleanly against an old
+        # baseline
+        for key in ROBUSTNESS_COUNTERS + NET_COUNTERS:
             bv, cv = int(bc.get(key, 0)), int(cc.get(key, 0))
             if bv != cv:
                 parts.append(f"{key} {bv} -> {cv}")
