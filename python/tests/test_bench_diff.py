@@ -262,6 +262,97 @@ def test_net_deltas_print_against_a_counterless_baseline(tmp_path):
     assert "quota_shed_queries 0 -> 2" in res.stdout
 
 
+def test_absent_lane_counters_read_as_zero(tmp_path):
+    # a pre-wavefront snapshot carries none of kernel_multi_calls /
+    # kernel_lanes_filled / kernel_lane_abandons: the audit passes
+    # (absent reads as 0, not unknown — no lane packing existed)
+    doc = json.loads(BASELINE.read_text())
+    snap = copy.deepcopy(doc["stats"])
+    for name in (
+        "kernel_multi_calls",
+        "kernel_lanes_filled",
+        "kernel_lane_abandons",
+    ):
+        snap["counters"].pop(name, None)
+    p = tmp_path / "pre_lanes.json"
+    p.write_text(json.dumps(snap))
+    res = run_tool(p)
+    assert res.returncode == 0, res.stderr
+
+
+def test_present_lane_counters_are_validated_and_diffed(tmp_path):
+    doc = json.loads(BASELINE.read_text())
+    snap = copy.deepcopy(doc["stats"])
+    snap["counters"]["kernel_multi_calls"] = 3
+    snap["counters"]["kernel_lanes_filled"] = 10
+    snap["counters"]["kernel_lane_abandons"] = 4
+    curr = tmp_path / "lanes_run.json"
+    curr.write_text(json.dumps(snap))
+    # well-formed counts pass the audit
+    assert run_tool(curr).returncode == 0
+
+    # a fractional count is a hard failure
+    bad = copy.deepcopy(snap)
+    bad["counters"]["kernel_lanes_filled"] = 2.5
+    badp = tmp_path / "fractional_lanes.json"
+    badp.write_text(json.dumps(bad))
+    res = run_tool(badp)
+    assert res.returncode == 1
+    assert "kernel_lanes_filled" in res.stderr
+
+    # ...and so is a negative one
+    bad2 = copy.deepcopy(snap)
+    bad2["counters"]["kernel_lane_abandons"] = -1
+    bad2p = tmp_path / "negative_lanes.json"
+    bad2p.write_text(json.dumps(bad2))
+    res = run_tool(bad2p)
+    assert res.returncode == 1
+    assert "kernel_lane_abandons" in res.stderr
+
+
+def test_lane_occupancy_invariants_are_enforced(tmp_path):
+    doc = json.loads(BASELINE.read_text())
+
+    # a multi-lane call carries >= 2 lanes by definition: 3 calls cannot
+    # have filled only 4 lanes
+    under = copy.deepcopy(doc["stats"])
+    under["counters"]["kernel_multi_calls"] = 3
+    under["counters"]["kernel_lanes_filled"] = 4
+    p = tmp_path / "under_occupied.json"
+    p.write_text(json.dumps(under))
+    res = run_tool(p)
+    assert res.returncode == 1
+    assert "kernel_lanes_filled" in res.stderr
+
+    # lane abandons are a subset of lanes filled
+    over = copy.deepcopy(doc["stats"])
+    over["counters"]["kernel_multi_calls"] = 2
+    over["counters"]["kernel_lanes_filled"] = 5
+    over["counters"]["kernel_lane_abandons"] = 6
+    p2 = tmp_path / "over_abandoned.json"
+    p2.write_text(json.dumps(over))
+    res = run_tool(p2)
+    assert res.returncode == 1
+    assert "kernel_lane_abandons" in res.stderr
+
+
+def test_lane_deltas_print_against_a_counterless_baseline(tmp_path):
+    # baseline runs predate the lane counters entirely; the current
+    # artifact packed lanes — the delta reads the absent side as 0
+    doc = json.loads(BASELINE.read_text())
+    curr_doc = copy.deepcopy(doc)
+    for run in curr_doc["runs"]:
+        run["counters"]["kernel_multi_calls"] = 2
+        run["counters"]["kernel_lanes_filled"] = 7
+    base = tmp_path / "base.json"
+    curr = tmp_path / "curr.json"
+    base.write_text(json.dumps(doc))
+    curr.write_text(json.dumps(curr_doc))
+    res = run_tool(base, curr)
+    assert res.returncode == 0, res.stderr
+    assert "kernel_lanes_filled 0 -> 7" in res.stdout
+
+
 def test_unreadable_file_is_a_usage_error(tmp_path):
     res = run_tool(tmp_path / "nope.json")
     assert res.returncode == 2

@@ -1,0 +1,190 @@
+//! Multi-candidate wavefront kernel throughput: cohort-batched
+//! `Engine::search_batch` with the scalar kernel (lanes = 1) vs lane
+//! widths {2, 4, 8}, in f64 and f32 DP precision. Gates on every run:
+//!
+//! * **f64, any lane width** — matches are bitwise-identical to the
+//!   scalar kernel's (positions and distance bits);
+//! * **f32** — distances track the f64 oracle within a relative epsilon
+//!   and the best match's position is preserved (f32 thresholds only
+//!   ever widen, so the f32 scan can over-admit but never over-prune);
+//! * **occupancy** — every multi-lane engine actually packed groups:
+//!   `kernel_multi_calls > 0` and
+//!   `kernel_lanes_filled >= 2 * kernel_multi_calls`.
+//!
+//! Emits `BENCH_kernel_lanes.json` with the whole-run counter totals as
+//! a pinned-schema snapshot, so `tools/bench_diff.py` audits the lane
+//! occupancy and conservation identities offline.
+//!
+//! Scaling knobs (env): `REPRO_REF_LEN` (default 12000), `REPRO_DATASETS`
+//! (default ECG,PPG), `REPRO_QLENS` (first entry; default 128).
+
+use repro::bench_support::grid_from_env;
+use repro::bench_support::harness::{bench, fmt_secs};
+use repro::bench_support::report::BenchJson;
+use repro::data::extract_queries;
+use repro::distances::kernel::Precision;
+use repro::index::{Engine, EngineConfig, Query, TopKResult};
+use repro::metrics::Counters;
+use repro::obs::MetricsSnapshot;
+use repro::search::subsequence::ScanTuning;
+use repro::util::json::Json;
+
+/// Relative tolerance for f32 DP lines against the f64 oracle. The
+/// conformance suite pins ~1e-4 on single kernel calls; the bench allows
+/// a little slack for the worst window over a whole scan.
+const F32_REL_TOL: f64 = 1e-3;
+
+fn merged(results: &[TopKResult]) -> Counters {
+    let mut c = Counters::new();
+    for r in results {
+        c.merge(&r.counters);
+    }
+    c
+}
+
+fn assert_bitwise(oracle: &[TopKResult], got: &[TopKResult], what: &str) {
+    for (i, (a, b)) in oracle.iter().zip(got).enumerate() {
+        assert_eq!(a.matches.len(), b.matches.len(), "{what} q{i}");
+        for (x, y) in a.matches.iter().zip(&b.matches) {
+            assert_eq!(x.pos, y.pos, "{what} q{i}");
+            assert_eq!(x.dist.to_bits(), y.dist.to_bits(), "{what} q{i}");
+        }
+    }
+}
+
+fn assert_epsilon(oracle: &[TopKResult], got: &[TopKResult], what: &str) {
+    for (i, (a, b)) in oracle.iter().zip(got).enumerate() {
+        assert_eq!(a.matches.len(), b.matches.len(), "{what} q{i}");
+        // the best match is unambiguous on noisy synthetic data; deeper
+        // ranks may legally swap when f32 rounding reorders near-ties,
+        // so the tail is gated on distances only (sorted on both sides)
+        assert_eq!(a.best().pos, b.best().pos, "{what} q{i}");
+        for (x, y) in a.matches.iter().zip(&b.matches) {
+            let scale = x.dist.abs().max(1.0);
+            assert!(
+                (x.dist - y.dist).abs() <= F32_REL_TOL * scale,
+                "{what} q{i}: f32 dist {} drifted from f64 {}",
+                y.dist,
+                x.dist
+            );
+        }
+    }
+}
+
+fn main() {
+    let (grid, mut datasets) = grid_from_env(12_000);
+    if std::env::var("REPRO_DATASETS").is_err() {
+        datasets.truncate(2); // default: a quick two-dataset sweep
+    }
+    let qlen = *grid.query_lengths.first().unwrap_or(&128);
+    let (ratio, k, batch) = (0.1, 5usize, 8usize);
+    let lane_widths = [1usize, 2, 4, 8];
+    println!(
+        "kernel lanes (qlen {qlen}, ratio {ratio}, k={k}, batch {batch}, ref_len {}): \
+         scalar vs wavefront lane widths, f64 + f32",
+        grid.ref_len
+    );
+    println!(
+        "{:<8} {:>5} {:>4} | {:>10} {:>8} | {:>11} {:>11} {:>9}",
+        "dataset", "lanes", "prec", "time", "speedup", "multi_calls", "lanes_fill", "occupancy"
+    );
+    let mut json = BenchJson::new("kernel_lanes");
+    let mut total = Counters::new();
+    for &d in &datasets {
+        let reference = d.generate(grid.ref_len, grid.seed);
+        let queries: Vec<Query> =
+            extract_queries(&reference, batch, qlen, grid.query_noise, grid.seed ^ 11)
+                .into_iter()
+                .map(|q| Query::new(q, ratio))
+                .collect();
+        let mut oracle: Option<Vec<TopKResult>> = None;
+        let mut scalar_median = 0.0f64;
+        for precision in [Precision::F64, Precision::F32] {
+            for &lanes in &lane_widths {
+                let engine = Engine::new(
+                    reference.clone(),
+                    &EngineConfig {
+                        shards: 2,
+                        tuning: ScanTuning::default()
+                            .with_lanes(lanes)
+                            .with_precision(precision),
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let mut results = Vec::new();
+                let stats = bench(0, 3, || {
+                    results = engine.search_batch(&queries, k).unwrap();
+                });
+                let c = merged(&results);
+                total.merge(&c);
+                match (precision, &oracle) {
+                    // the very first run (f64, lanes = 1) IS the oracle
+                    (Precision::F64, None) => {
+                        scalar_median = stats.median;
+                        oracle = Some(results.clone());
+                    }
+                    (Precision::F64, Some(o)) => {
+                        assert_bitwise(o, &results, &format!("{} lanes={lanes}", d.name()));
+                    }
+                    (Precision::F32, Some(o)) => {
+                        assert_epsilon(
+                            o,
+                            &results,
+                            &format!("{} lanes={lanes} f32", d.name()),
+                        );
+                    }
+                    (Precision::F32, None) => unreachable!("f64 sweep runs first"),
+                }
+                if lanes >= 2 {
+                    assert!(
+                        c.kernel_multi_calls > 0,
+                        "{} lanes={lanes} {}: no lane group ever packed",
+                        d.name(),
+                        precision.name()
+                    );
+                    assert!(
+                        c.kernel_lanes_filled >= 2 * c.kernel_multi_calls,
+                        "{} lanes={lanes} {}: occupancy below 2",
+                        d.name(),
+                        precision.name()
+                    );
+                } else {
+                    assert_eq!(c.kernel_multi_calls, 0, "scalar engine packed lanes");
+                }
+                let occupancy = if c.kernel_multi_calls > 0 {
+                    c.kernel_lanes_filled as f64 / c.kernel_multi_calls as f64
+                } else {
+                    0.0
+                };
+                println!(
+                    "{:<8} {:>5} {:>4} | {:>10} {:>7.2}x | {:>11} {:>11} {:>9.2}",
+                    d.name(),
+                    lanes,
+                    precision.name(),
+                    fmt_secs(stats.median),
+                    scalar_median / stats.median,
+                    c.kernel_multi_calls,
+                    c.kernel_lanes_filled,
+                    occupancy,
+                );
+                json.push(vec![
+                    ("dataset", Json::Str(d.name().to_string())),
+                    ("lanes", Json::Num(lanes as f64)),
+                    ("precision", Json::Str(precision.name().to_string())),
+                    ("batch", Json::Num(batch as f64)),
+                    ("qlen", Json::Num(qlen as f64)),
+                    ("ratio", Json::Num(ratio)),
+                    ("k", Json::Num(k as f64)),
+                    ("seconds", Json::Num(stats.median)),
+                    ("lane_occupancy", Json::Num(occupancy)),
+                    ("counters", BenchJson::counters_json(&c)),
+                ]);
+            }
+        }
+    }
+    // embed the whole-run counter totals as a pinned-schema snapshot so
+    // tools/bench_diff.py can audit occupancy + conservation offline
+    json.set_stats(&MetricsSnapshot::from_counters(&total));
+    json.write_and_announce();
+}

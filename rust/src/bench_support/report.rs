@@ -134,6 +134,15 @@ impl BenchJson {
                 "strip_stat_loads_saved",
                 Json::Num(c.strip_stat_loads_saved as f64),
             ),
+            ("kernel_multi_calls", Json::Num(c.kernel_multi_calls as f64)),
+            (
+                "kernel_lanes_filled",
+                Json::Num(c.kernel_lanes_filled as f64),
+            ),
+            (
+                "kernel_lane_abandons",
+                Json::Num(c.kernel_lane_abandons as f64),
+            ),
         ])
     }
 

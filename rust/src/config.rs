@@ -86,6 +86,12 @@ pub struct ServeConfig {
     /// per-query deadline budget, ms, for requests without their own
     /// `deadline_ms` (0 = none: exhaustive scans)
     pub default_deadline_ms: f64,
+    /// wavefront lane width for the shard workers' kernel (1 = scalar
+    /// kernel, the bitwise baseline; clamped to the kernel's MAX_LANES)
+    pub lanes: usize,
+    /// DP line precision: "f64" (default, bitwise-pinned) or "f32"
+    /// (opt-in storage halving under the epsilon contract)
+    pub precision: String,
 }
 
 impl Default for ServeConfig {
@@ -99,6 +105,8 @@ impl Default for ServeConfig {
             batch_deadline_ms: 0,
             max_pending: 0,
             default_deadline_ms: 0.0,
+            lanes: 1,
+            precision: "f64".into(),
         }
     }
 }
@@ -187,6 +195,8 @@ impl Config {
             ("serve", "batch_deadline_ms") => self.serve.batch_deadline_ms = v.usize()? as u64,
             ("serve", "max_pending") => self.serve.max_pending = v.usize()?,
             ("serve", "default_deadline_ms") => self.serve.default_deadline_ms = v.f64()?,
+            ("serve", "lanes") => self.serve.lanes = v.usize()?,
+            ("serve", "precision") => self.serve.precision = v.string()?,
             ("net", "listen") => self.net.listen = v.string()?,
             ("net", "max_conns") => self.net.max_conns = v.usize()?,
             ("net", "max_frame_bytes") => self.net.max_frame_bytes = v.usize()?,
@@ -370,6 +380,12 @@ mod tests {
         assert_eq!(c2.serve.batch_deadline_ms, 25);
         assert_eq!(c2.serve.max_pending, 256);
         assert_eq!(c2.serve.default_deadline_ms, 40.5);
+        // kernel tuning keeps the scalar defaults unless set...
+        assert_eq!(c2.serve.lanes, 1);
+        assert_eq!(c2.serve.precision, "f64");
+        let c2b = Config::from_str("[serve]\nlanes = 4\nprecision = \"f32\"\n").unwrap();
+        assert_eq!(c2b.serve.lanes, 4);
+        assert_eq!(c2b.serve.precision, "f32");
         // untouched sections keep defaults too
         assert_eq!(c2.net, NetConfig::default());
         let c3 = Config::from_str(

@@ -38,7 +38,7 @@ use crate::index::ref_index::BucketStats;
 use crate::metrics::Counters;
 use crate::obs::{ScanObs, Stage};
 use crate::search::subsequence::{
-    validate_series, DataEnvelopes, Match, QueryContext, ScanMode,
+    validate_series, DataEnvelopes, Match, QueryContext, ScanMode, ScanTuning,
 };
 use crate::search::suite::Suite;
 
@@ -140,12 +140,13 @@ pub fn route_query_topk(
     mode: ScanMode,
     k: usize,
     sync_every: usize,
+    tuning: ScanTuning,
     denv: Option<Arc<DataEnvelopes>>,
     stats: Option<Arc<BucketStats>>,
 ) -> Result<(Vec<Match>, Counters)> {
     let (matches, counters, _truncated) = route_query_topk_obs(
-        workers, reference, query_raw, w, metric, suite, mode, k, sync_every, denv, stats, None,
-        ScanObs::OFF,
+        workers, reference, query_raw, w, metric, suite, mode, k, sync_every, tuning, denv, stats,
+        None, ScanObs::OFF,
     )?;
     Ok((matches, counters))
 }
@@ -174,6 +175,7 @@ pub fn route_query_topk_obs(
     mode: ScanMode,
     k: usize,
     sync_every: usize,
+    tuning: ScanTuning,
     denv: Option<Arc<DataEnvelopes>>,
     stats: Option<Arc<BucketStats>>,
     deadline: Option<Instant>,
@@ -215,7 +217,7 @@ pub fn route_query_topk_obs(
             reference: Arc::clone(reference),
             start,
             end,
-            ctx: QueryContext::with_metric(query_raw, w, metric),
+            ctx: QueryContext::with_metric(query_raw, w, metric).with_tuning(tuning),
             denv: denv.clone(),
             stats: stats.clone(),
             suite,
@@ -290,11 +292,12 @@ pub fn route_cohort_topk(
     suite: Suite,
     k: usize,
     sync_every: usize,
+    tuning: ScanTuning,
     denv: Option<Arc<DataEnvelopes>>,
     stats: Arc<BucketStats>,
 ) -> Result<Vec<(Vec<Match>, Counters)>> {
     let per_query = route_cohort_topk_obs(
-        workers, reference, queries, w, metric, suite, k, sync_every, denv, stats, None,
+        workers, reference, queries, w, metric, suite, k, sync_every, tuning, denv, stats, None,
         ScanObs::OFF,
     )?;
     Ok(per_query.into_iter().map(|(m, c, _truncated)| (m, c)).collect())
@@ -322,6 +325,7 @@ pub fn route_cohort_topk_obs(
     suite: Suite,
     k: usize,
     sync_every: usize,
+    tuning: ScanTuning,
     denv: Option<Arc<DataEnvelopes>>,
     stats: Arc<BucketStats>,
     deadlines: Option<&[Option<Instant>]>,
@@ -376,7 +380,8 @@ pub fn route_cohort_topk_obs(
                 .zip(&shareds)
                 .zip(&per_member)
                 .map(|((q, s), d)| {
-                    (QueryContext::with_metric_pooled(q, w, metric), Arc::clone(s), *d)
+                    let ctx = QueryContext::with_metric_pooled(q, w, metric).with_tuning(tuning);
+                    (ctx, Arc::clone(s), *d)
                 })
                 .collect(),
             denv: denv.clone(),
@@ -450,6 +455,7 @@ pub fn route_query(
         ScanMode::Scalar,
         1,
         sync_every,
+        ScanTuning::default(),
         None,
         None,
     )?;

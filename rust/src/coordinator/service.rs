@@ -34,7 +34,7 @@ use crate::metrics::{Counters, Timer};
 use crate::obs::{DistKind, Gauge, MetricsRegistry, MetricsSnapshot, ScanObs, Stage};
 #[cfg(feature = "xla")]
 use crate::runtime::XlaEngine;
-use crate::search::subsequence::{validate_series, window_cells, Match, ScanMode};
+use crate::search::subsequence::{validate_series, window_cells, Match, ScanMode, ScanTuning};
 use crate::search::suite::Suite;
 
 /// Service construction knobs (see also [`crate::config::ServeConfig`]).
@@ -71,6 +71,10 @@ pub struct ServiceConfig {
     /// no `deadline_ms` of their own (`repro serve --default-deadline-ms`;
     /// 0 = none — such queries scan exhaustively and read no clocks).
     pub default_deadline_ms: f64,
+    /// kernel tuning the shard workers scan with: wavefront lane width
+    /// (`repro serve --lanes`; 1 = scalar kernel, the default) and DP
+    /// line precision (`repro serve --precision f32|f64`)
+    pub tuning: ScanTuning,
 }
 
 impl Default for ServiceConfig {
@@ -84,6 +88,7 @@ impl Default for ServiceConfig {
             artifacts_dir: None,
             max_pending: 0,
             default_deadline_ms: 0.0,
+            tuning: ScanTuning::default(),
         }
     }
 }
@@ -164,6 +169,7 @@ pub struct Service {
     engine_handle: Option<JoinHandle<()>>,
     sync_every: usize,
     scan_mode: ScanMode,
+    tuning: ScanTuning,
     batch_window: usize,
     batch_deadline_ms: u64,
     max_pending: usize,
@@ -217,6 +223,7 @@ impl Service {
             engine_handle,
             sync_every: cfg.sync_every,
             scan_mode: cfg.scan_mode,
+            tuning: cfg.tuning,
             batch_window: cfg.batch_window.max(1),
             batch_deadline_ms: cfg.batch_deadline_ms,
             max_pending: cfg.max_pending,
@@ -446,6 +453,7 @@ impl Service {
                         self.scan_mode,
                         req.k,
                         self.sync_every,
+                        self.tuning,
                         denv.clone(),
                         Some(Arc::clone(&stats)),
                         deadline.map(|(d, _)| d),
@@ -784,6 +792,7 @@ impl Service {
                 suite,
                 k,
                 self.sync_every,
+                self.tuning,
                 denv.clone(),
                 Arc::clone(&stats),
                 router_deadlines.as_deref(),

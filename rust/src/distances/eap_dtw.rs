@@ -9,7 +9,7 @@
 //! (§5): the Sakoe-Chiba band `w` and per-line threshold tightening from
 //! the cumulative LB_Keogh tail `cb`.
 
-use super::kernel::{eap_kernel, eap_kernel_counted, DtwCost, KernelEval};
+use super::kernel::{eap_kernel, eap_kernel_counted, eap_kernel_f32, DtwCost, KernelEval};
 use super::{lines_cols, KernelWorkspace};
 
 /// Unwindowed EAPrunedDTW — the paper's Algorithm 3 exactly: exact DTW when
@@ -46,6 +46,22 @@ pub(crate) fn eap_cdtw_eval(
 ) -> KernelEval {
     let (li, co) = lines_cols(a, b);
     eap_kernel(&DtwCost { li, co }, w, ub, cb, ws)
+}
+
+/// [`eap_cdtw_eval`] on f32 DP lines — the opt-in `--precision f32`
+/// storage mode. Thresholds are inflated on narrowing so this may only
+/// over-admit relative to the exact run (never over-prune); the returned
+/// distance is epsilon-close to the f64 value, not bitwise.
+pub(crate) fn eap_cdtw_eval_f32(
+    a: &[f64],
+    b: &[f64],
+    w: usize,
+    ub: f64,
+    cb: Option<&[f64]>,
+    ws: &mut KernelWorkspace,
+) -> KernelEval {
+    let (li, co) = lines_cols(a, b);
+    eap_kernel_f32(&DtwCost { li, co }, w, ub, cb, ws)
 }
 
 /// [`eap_cdtw`] that also reports how many DP cells were actually
@@ -175,6 +191,19 @@ mod tests {
             let got = eap_cdtw(&S, &T, w, exact, Some(&cb), &mut ws);
             assert_eq!(got, exact);
         }
+    }
+
+    #[test]
+    fn f32_eval_tracks_f64_and_keeps_the_tie() {
+        let mut ws = DtwWorkspace::default();
+        let exact = eap_cdtw(&S, &T, 6, f64::INFINITY, None, &mut ws);
+        let e32 = eap_cdtw_eval_f32(&S, &T, 6, f64::INFINITY, None, &mut ws);
+        assert!(!e32.abandoned);
+        assert!((e32.dist - exact).abs() / exact <= 1e-4);
+        // the f32 contract: an ub the f64 run completes under must also
+        // complete in f32 (inflated thresholds over-admit, never over-prune)
+        let tie = eap_cdtw_eval_f32(&S, &T, 6, exact, None, &mut ws);
+        assert!(!tie.abandoned);
     }
 
     #[test]

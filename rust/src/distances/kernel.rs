@@ -14,6 +14,27 @@
 //! invariants and abandon conditions are documented in
 //! `distances/README.md`; bitwise identity with the retired specialised
 //! kernels is pinned by the property tests below.
+//!
+//! Two widening axes sit on top of the scalar core (the paper brackets
+//! its contribution "vectorization and approximation aside" — this is
+//! exactly that headroom):
+//!
+//! * **Multi-candidate wavefront** ([`eap_kernel_multi`] /
+//!   [`eap_kernel_multi_dyn`]): N same-shape candidates advance their
+//!   band recurrences in row lockstep, one candidate per *lane*, each
+//!   lane carrying its own upper bound, `next_start`/`pp`/`ppp` band
+//!   state and DP lines ([`MultiWorkspace`]). A lane that abandons is
+//!   retired from the active set immediately (swap-remove compaction),
+//!   so dead candidates stop costing row work. The f64 multi-lane path
+//!   is **bitwise identical** to evaluating each lane through the scalar
+//!   kernel (`tests/conformance_lanes.rs`) — the DP cell values never
+//!   depend on the threshold, only the control flow does.
+//! * **Opt-in f32 storage** ([`Precision::F32`], [`eap_kernel_f32`]):
+//!   the core is generic over a [`Scalar`] line type. `f64` is the
+//!   bitwise-pinned default; `f32` halves line bandwidth and is gated by
+//!   an epsilon contract instead — thresholds are *inflated* by
+//!   [`F32_UB_REL_MARGIN`] (and rounded up one ulp) when narrowed, so
+//!   accumulated f32 rounding can only over-admit, never over-prune.
 
 use super::KernelWorkspace;
 use crate::distances::cost::sqed;
@@ -70,6 +91,175 @@ impl KernelEval {
     }
 }
 
+/// DP line storage width. `F64` is the default and is bitwise-pinned
+/// against the retired kernels; `F32` is the opt-in approximate mode
+/// (`--precision f32`), gated by the epsilon contract in
+/// `tests/conformance_lanes.rs` — it may only over-admit, never
+/// over-prune, so a completed f32 evaluation is a true
+/// `<= ub`-or-slightly-above distance, and an f32 abandon is sound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    F64,
+    F32,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+}
+
+/// Relative slack added to every threshold when narrowing it to f32:
+/// `th32 = next_up((th + MARGIN * |th|) as f32)`. Accumulated f32
+/// rounding over a DP line is orders of magnitude below 1e-3 relative,
+/// so an f32 comparison `d32 <= th32` admits every cell the exact f64
+/// run would admit — the f32 path can only *over-admit* (evaluate a
+/// candidate fully where f64 would have abandoned), never over-prune.
+pub const F32_UB_REL_MARGIN: f64 = 1e-3;
+
+/// `f32::next_up` polyfill (stable only since Rust 1.86; the crate pins
+/// 1.82): the smallest f32 strictly greater than `x`, with `-0.0`/`0.0`
+/// both mapping to the smallest positive subnormal.
+#[inline(always)]
+fn next_up_f32(x: f32) -> f32 {
+    if x.is_nan() || x == f32::INFINITY {
+        return x;
+    }
+    if x == 0.0 {
+        return f32::from_bits(1);
+    }
+    let bits = x.to_bits();
+    if x > 0.0 {
+        f32::from_bits(bits + 1)
+    } else {
+        f32::from_bits(bits - 1)
+    }
+}
+
+/// The DP line scalar the band core is generic over. The `f64` impl is a
+/// pure pass-through — instantiating the core at `f64` is *code motion*,
+/// not a behaviour change, and stays bitwise-pinned by the retired-kernel
+/// property tests. The `f32` impl narrows costs on load and inflates
+/// thresholds ([`F32_UB_REL_MARGIN`]) so pruning stays admissible.
+pub trait Scalar: Copy + PartialOrd + std::fmt::Debug + 'static {
+    const ZERO: Self;
+    const INF: Self;
+    const NAME: &'static str;
+    /// Narrow a cost-model value (step cost or border) onto the line.
+    fn from_cost(v: f64) -> Self;
+    /// Narrow an upper bound / line threshold. Must never round down
+    /// below the exact value (f32 inflates and rounds up one ulp).
+    fn threshold(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn add(self, o: Self) -> Self;
+    fn min2(self, o: Self) -> Self;
+    /// (Re)initialise this scalar's two DP lines in `ws` to `len + 1`
+    /// cells of `+inf` (counts a regrow exactly like the f64 reset).
+    fn reset_lines(ws: &mut KernelWorkspace, len: usize);
+    fn swap_lines(ws: &mut KernelWorkspace);
+    fn lines_mut(ws: &mut KernelWorkspace) -> (&mut [Self], &mut [Self]);
+    fn final_cell(ws: &KernelWorkspace, m: usize) -> Self;
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const INF: Self = f64::INFINITY;
+    const NAME: &'static str = "f64";
+    #[inline(always)]
+    fn from_cost(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn threshold(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+    #[inline(always)]
+    fn min2(self, o: Self) -> Self {
+        self.min(o)
+    }
+    #[inline(always)]
+    fn reset_lines(ws: &mut KernelWorkspace, len: usize) {
+        ws.reset(len);
+    }
+    #[inline(always)]
+    fn swap_lines(ws: &mut KernelWorkspace) {
+        std::mem::swap(&mut ws.prev, &mut ws.curr);
+    }
+    #[inline(always)]
+    fn lines_mut(ws: &mut KernelWorkspace) -> (&mut [Self], &mut [Self]) {
+        (&mut ws.prev, &mut ws.curr)
+    }
+    #[inline(always)]
+    fn final_cell(ws: &KernelWorkspace, m: usize) -> Self {
+        ws.curr[m]
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const INF: Self = f32::INFINITY;
+    const NAME: &'static str = "f32";
+    #[inline(always)]
+    fn from_cost(v: f64) -> Self {
+        v as f32
+    }
+    #[inline(always)]
+    fn threshold(v: f64) -> Self {
+        if !v.is_finite() {
+            return v as f32;
+        }
+        next_up_f32((v + F32_UB_REL_MARGIN * v.abs()) as f32)
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+    #[inline(always)]
+    fn min2(self, o: Self) -> Self {
+        self.min(o)
+    }
+    #[inline(always)]
+    fn reset_lines(ws: &mut KernelWorkspace, len: usize) {
+        ws.reset32(len);
+    }
+    #[inline(always)]
+    fn swap_lines(ws: &mut KernelWorkspace) {
+        std::mem::swap(&mut ws.prev32, &mut ws.curr32);
+    }
+    #[inline(always)]
+    fn lines_mut(ws: &mut KernelWorkspace) -> (&mut [Self], &mut [Self]) {
+        (&mut ws.prev32, &mut ws.curr32)
+    }
+    #[inline(always)]
+    fn final_cell(ws: &KernelWorkspace, m: usize) -> Self {
+        ws.curr32[m]
+    }
+}
+
 /// EAPruned evaluation of a [`CostModel`] under Sakoe-Chiba band `w` and
 /// upper bound `ub`. `cb`, valid for [`CostModel::UNIFORM`] models only,
 /// is the cumulative lower-bound tail over column positions
@@ -84,7 +274,7 @@ pub fn eap_kernel<C: CostModel>(
     ws: &mut KernelWorkspace,
 ) -> KernelEval {
     let mut cells = 0u64;
-    eap_core::<C, false>(model, w, ub, cb, ws, &mut cells)
+    eap_core::<f64, C, false>(model, w, ub, cb, ws, &mut cells)
 }
 
 /// [`eap_kernel`] that also reports how many DP cells were computed (the
@@ -98,12 +288,213 @@ pub fn eap_kernel_counted<C: CostModel>(
     ws: &mut KernelWorkspace,
 ) -> (KernelEval, u64) {
     let mut cells = 0u64;
-    let e = eap_core::<C, true>(model, w, ub, cb, ws, &mut cells);
+    let e = eap_core::<f64, C, true>(model, w, ub, cb, ws, &mut cells);
     (e, cells)
 }
 
+/// [`eap_kernel`] on f32 DP lines — the opt-in [`Precision::F32`] mode.
+/// Costs narrow on load; `ub`/`cb` thresholds are inflated on narrowing
+/// ([`F32_UB_REL_MARGIN`]) so the run may only over-admit relative to the
+/// exact f64 evaluation. The returned distance is the f32 accumulation
+/// widened back to f64 — epsilon-close to exact, not bitwise.
+#[inline]
+pub fn eap_kernel_f32<C: CostModel>(
+    model: &C,
+    w: usize,
+    ub: f64,
+    cb: Option<&[f64]>,
+    ws: &mut KernelWorkspace,
+) -> KernelEval {
+    let mut cells = 0u64;
+    eap_core::<f32, C, false>(model, w, ub, cb, ws, &mut cells)
+}
+
+/// Per-lane band bookkeeping: the left discard frontier, the pruning
+/// point being built on the current line, and the previous line's
+/// pruning point (Algorithm 3's `next_start` / `pp` / `ppp`).
+#[derive(Debug, Clone, Copy, Default)]
+struct BandState {
+    next_start: usize,
+    pp: usize,
+    ppp: usize,
+}
+
+/// Row 0 of the DP table: uniform models have the classic +inf border
+/// row (initial pruning point right after the origin); finite border
+/// rows (ERP) are materialised up to the band edge, the initial pruning
+/// point landing on the first border cell strictly above `ub` (borders
+/// non-decreasing). Returns the initial `ppp`.
 #[inline(always)]
-fn eap_core<C: CostModel, const COUNT: bool>(
+fn init_row0<S: Scalar, C: CostModel>(model: &C, w: usize, ub: S, curr: &mut [S]) -> usize {
+    let m = model.n_cols();
+    let mut ppp = 1usize;
+    if !C::UNIFORM {
+        let row0_end = m.min(w);
+        ppp = row0_end + 1;
+        let mut prev_border = 0.0f64;
+        for j in 1..=row0_end {
+            let bf = model.border_row(j);
+            debug_assert!(bf >= prev_border, "border_row must be non-decreasing");
+            prev_border = bf;
+            let b = S::from_cost(bf);
+            curr[j] = b;
+            if b > ub {
+                ppp = j;
+                break;
+            }
+        }
+    }
+    ppp
+}
+
+/// Line threshold for row `i`: ub minus the future cost any path still
+/// pays. `cb` is a DTW lower bound, so it is const-folded away for
+/// non-UNIFORM models — tightening ERP/MSM/TWE/WDTW with it would
+/// over-prune (the debug_assert at the call sites catches the misuse,
+/// this makes it harmless in release builds too).
+#[inline(always)]
+fn line_threshold<C: CostModel>(ub: f64, cb: Option<&[f64]>, i: usize, w: usize, m: usize) -> f64 {
+    match cb {
+        Some(cb) if C::UNIFORM => {
+            let idx = i.checked_add(w).and_then(|x| x.checked_add(1)).map_or(m, |x| x.min(m));
+            ub - cb[idx]
+        }
+        _ => ub,
+    }
+}
+
+/// Advance one candidate's recurrence through row `i`: the four-stage
+/// banded walk of Algorithm 3, verbatim from the pre-wavefront scalar
+/// kernel (shared by the scalar and multi-lane paths — pure code
+/// motion, so the f64 scalar path stays bitwise-pinned). Returns `true`
+/// iff the band collapsed on this row (early abandon).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn advance_row<S: Scalar, C: CostModel, const COUNT: bool>(
+    model: &C,
+    i: usize,
+    w: usize,
+    m: usize,
+    th: S,
+    st: &mut BandState,
+    prev: &[S],
+    curr: &mut [S],
+    cells: &mut u64,
+) -> bool {
+    let band_lo = i.saturating_sub(w).max(1);
+    let band_hi = i.checked_add(w).map_or(m, |x| x.min(m));
+    // band-left folds into next_start: both only ever move right
+    if band_lo > st.next_start {
+        st.next_start = band_lo;
+    }
+    let mut j = st.next_start;
+    // Left sentinel (the live border for column 0, +inf otherwise);
+    // `left` register-carries curr[j-1] across all four stages (see
+    // dtw.rs — IEEE-exact reassociation).
+    let mut left = if j == 1 { S::from_cost(model.border_col(i)) } else { S::INF };
+    curr[j - 1] = left;
+
+    // Stage 1: the discard-point region. Uniform models have no
+    // viable left neighbour here (two-dependency update, every
+    // above-threshold cell advances the border); a possibly-live
+    // finite border keeps the 3-way min and gates the advance.
+    while j == st.next_start && j < st.ppp {
+        let left_v = left;
+        let d = if C::UNIFORM {
+            S::from_cost(model.diag(i, j)).add(prev[j].min2(prev[j - 1]))
+        } else {
+            prev[j]
+                .add(S::from_cost(model.top(i, j)))
+                .min2(prev[j - 1].add(S::from_cost(model.diag(i, j))))
+                .min2(left_v.add(S::from_cost(model.left(i, j))))
+        };
+        curr[j] = d;
+        left = d;
+        if COUNT {
+            *cells += 1;
+        }
+        if d <= th {
+            st.pp = j + 1;
+        } else if C::UNIFORM || left_v > th {
+            st.next_start += 1;
+        }
+        j += 1;
+    }
+    // Stage 2: interior — the classic three-way min.
+    while j < st.ppp {
+        let d = if C::UNIFORM {
+            let bp = prev[j].min2(prev[j - 1]);
+            S::from_cost(model.diag(i, j)).add(left.min2(bp))
+        } else {
+            prev[j]
+                .add(S::from_cost(model.top(i, j)))
+                .min2(prev[j - 1].add(S::from_cost(model.diag(i, j))))
+                .min2(left.add(S::from_cost(model.left(i, j))))
+        };
+        curr[j] = d;
+        left = d;
+        if COUNT {
+            *cells += 1;
+        }
+        if d <= th {
+            st.pp = j + 1;
+        }
+        j += 1;
+    }
+    // Stage 3: the previous pruning point's column (top dependency
+    // excluded — prev cells at/right of ppp are above the threshold).
+    // The borders can collide here: everything left above the
+    // threshold too → nothing viable remains, abandon (Fig. 4b).
+    if j <= band_hi {
+        let left_v = left;
+        let d = if C::UNIFORM {
+            if j == st.next_start {
+                S::from_cost(model.diag(i, j)).add(prev[j - 1])
+            } else {
+                S::from_cost(model.diag(i, j)).add(left_v.min2(prev[j - 1]))
+            }
+        } else {
+            prev[j - 1]
+                .add(S::from_cost(model.diag(i, j)))
+                .min2(left_v.add(S::from_cost(model.left(i, j))))
+        };
+        curr[j] = d;
+        left = d;
+        if COUNT {
+            *cells += 1;
+        }
+        if d <= th {
+            st.pp = j + 1;
+        } else if j == st.next_start && (C::UNIFORM || left_v > th) {
+            return true;
+        }
+        j += 1;
+    } else if j == st.next_start {
+        // Discard points swallowed the whole banded line (Algorithm
+        // 2's abandon); sound with finite borders because stage 1
+        // gates the advance on the left value.
+        return true;
+    }
+    // Stage 4: right of the pruning point — left dependency only;
+    // the first above-threshold value prunes the rest of the line.
+    while j == st.pp && j <= band_hi {
+        let d = left.add(S::from_cost(model.left(i, j)));
+        curr[j] = d;
+        left = d;
+        if COUNT {
+            *cells += 1;
+        }
+        if d <= th {
+            st.pp = j + 1;
+        }
+        j += 1;
+    }
+    st.ppp = st.pp;
+    false
+}
+
+#[inline(always)]
+fn eap_core<S: Scalar, C: CostModel, const COUNT: bool>(
     model: &C,
     w: usize,
     ub: f64,
@@ -124,164 +515,240 @@ fn eap_core<C: CostModel, const COUNT: bool>(
         debug_assert_eq!(cb.len(), m + 1);
         debug_assert!(cb[m] == 0.0);
     }
-    ws.reset(m);
-    ws.curr[0] = 0.0;
-
-    // Row 0. Uniform models have the classic +inf border row (initial
-    // pruning point right after the origin); finite border rows (ERP) are
-    // materialised up to the band edge, the initial pruning point landing
-    // on the first border cell strictly above ub (borders non-decreasing).
-    let mut ppp = 1usize;
-    if !C::UNIFORM {
-        let row0_end = m.min(w);
-        ppp = row0_end + 1;
-        let mut prev_border = 0.0f64;
-        for j in 1..=row0_end {
-            let b = model.border_row(j);
-            debug_assert!(b >= prev_border, "border_row must be non-decreasing");
-            prev_border = b;
-            ws.curr[j] = b;
-            if b > ub {
-                ppp = j;
-                break;
-            }
-        }
-    }
-
-    let mut next_start = 1usize; // first non-discarded column (left border)
-    let mut pp = 0usize; // pruning point being built on the current line
+    S::reset_lines(ws, m);
+    let ppp = {
+        let (_, curr) = S::lines_mut(ws);
+        curr[0] = S::ZERO;
+        init_row0::<S, C>(model, w, S::threshold(ub), curr)
+    };
+    let mut st = BandState { next_start: 1, pp: 0, ppp };
 
     for i in 1..=n {
-        std::mem::swap(&mut ws.prev, &mut ws.curr);
-        let band_lo = i.saturating_sub(w).max(1);
-        let band_hi = i.checked_add(w).map_or(m, |x| x.min(m));
-        // band-left folds into next_start: both only ever move right
-        if band_lo > next_start {
-            next_start = band_lo;
-        }
-        // Line threshold: ub minus the future cost any path still pays.
-        // cb is a DTW lower bound, so it is const-folded away for
-        // non-UNIFORM models — tightening ERP/MSM/TWE/WDTW with it would
-        // over-prune (the debug_assert above catches the misuse, this
-        // makes it harmless in release builds too).
-        let th = match cb {
-            Some(cb) if C::UNIFORM => {
-                let idx = i
-                    .checked_add(w)
-                    .and_then(|x| x.checked_add(1))
-                    .map_or(m, |x| x.min(m));
-                ub - cb[idx]
-            }
-            _ => ub,
-        };
-        let prev = &mut ws.prev;
-        let curr = &mut ws.curr;
-        let mut j = next_start;
-        // Left sentinel (the live border for column 0, +inf otherwise);
-        // `left` register-carries curr[j-1] across all four stages (see
-        // dtw.rs — IEEE-exact reassociation).
-        let mut left = if j == 1 { model.border_col(i) } else { f64::INFINITY };
-        curr[j - 1] = left;
-
-        // Stage 1: the discard-point region. Uniform models have no
-        // viable left neighbour here (two-dependency update, every
-        // above-threshold cell advances the border); a possibly-live
-        // finite border keeps the 3-way min and gates the advance.
-        while j == next_start && j < ppp {
-            let left_v = left;
-            let d = if C::UNIFORM {
-                model.diag(i, j) + prev[j].min(prev[j - 1])
-            } else {
-                (prev[j] + model.top(i, j))
-                    .min(prev[j - 1] + model.diag(i, j))
-                    .min(left_v + model.left(i, j))
-            };
-            curr[j] = d;
-            left = d;
-            if COUNT {
-                *cells += 1;
-            }
-            if d <= th {
-                pp = j + 1;
-            } else if C::UNIFORM || left_v > th {
-                next_start += 1;
-            }
-            j += 1;
-        }
-        // Stage 2: interior — the classic three-way min.
-        while j < ppp {
-            let d = if C::UNIFORM {
-                let bp = prev[j].min(prev[j - 1]);
-                model.diag(i, j) + left.min(bp)
-            } else {
-                (prev[j] + model.top(i, j))
-                    .min(prev[j - 1] + model.diag(i, j))
-                    .min(left + model.left(i, j))
-            };
-            curr[j] = d;
-            left = d;
-            if COUNT {
-                *cells += 1;
-            }
-            if d <= th {
-                pp = j + 1;
-            }
-            j += 1;
-        }
-        // Stage 3: the previous pruning point's column (top dependency
-        // excluded — prev cells at/right of ppp are above the threshold).
-        // The borders can collide here: everything left above the
-        // threshold too → nothing viable remains, abandon (Fig. 4b).
-        if j <= band_hi {
-            let left_v = left;
-            let d = if C::UNIFORM {
-                if j == next_start {
-                    model.diag(i, j) + prev[j - 1]
-                } else {
-                    model.diag(i, j) + left_v.min(prev[j - 1])
-                }
-            } else {
-                (prev[j - 1] + model.diag(i, j)).min(left_v + model.left(i, j))
-            };
-            curr[j] = d;
-            left = d;
-            if COUNT {
-                *cells += 1;
-            }
-            if d <= th {
-                pp = j + 1;
-            } else if j == next_start && (C::UNIFORM || left_v > th) {
-                return KernelEval::abandon();
-            }
-            j += 1;
-        } else if j == next_start {
-            // Discard points swallowed the whole banded line (Algorithm
-            // 2's abandon); sound with finite borders because stage 1
-            // gates the advance on the left value.
+        S::swap_lines(ws);
+        let th = S::threshold(line_threshold::<C>(ub, cb, i, w, m));
+        let (prev, curr) = S::lines_mut(ws);
+        if advance_row::<S, C, COUNT>(model, i, w, m, th, &mut st, prev, curr, cells) {
             return KernelEval::abandon();
         }
-        // Stage 4: right of the pruning point — left dependency only;
-        // the first above-threshold value prunes the rest of the line.
-        while j == pp && j <= band_hi {
-            let d = left + model.left(i, j);
-            curr[j] = d;
-            left = d;
-            if COUNT {
-                *cells += 1;
-            }
-            if d <= th {
-                pp = j + 1;
-            }
-            j += 1;
-        }
-        ppp = pp;
     }
     // Exact only if the last line's pruning point cleared the last column.
-    if ppp > m {
-        KernelEval::done(ws.curr[m])
+    if st.ppp > m {
+        KernelEval::done(S::final_cell(ws, m).to_f64())
     } else {
         KernelEval::abandon()
     }
+}
+
+/// Widest lane group the packers form (`ScanTuning::lanes` is clamped to
+/// this). 8 f64 lines fit comfortably in L1 for serving-sized queries.
+pub const MAX_LANES: usize = 8;
+
+/// Row cadence at which a multi-lane evaluation re-reads each live
+/// lane's threshold through the `refresh` closure — the same
+/// strip-boundary cadence the deadline checks use ([`crate::bounds::batch::DEFAULT_STRIP`]).
+/// A refresh may only *tighten* (it is folded in with `min`), so any
+/// completed lane still returns the exact bitwise distance.
+pub const LANE_REFRESH_ROWS: usize = 64;
+
+/// Per-lane state for a multi-candidate wavefront evaluation: one
+/// [`KernelWorkspace`] (DP line pair) per lane, the band bookkeeping,
+/// the live upper bounds, and the compacting active-lane set. Reused
+/// across groups; [`MultiWorkspace::warm`] pre-sizes everything so the
+/// scan hot path never allocates.
+#[derive(Debug, Default, Clone)]
+pub struct MultiWorkspace {
+    lanes: Vec<KernelWorkspace>,
+    states: Vec<BandState>,
+    ubs: Vec<f64>,
+    /// indices of lanes still advancing; abandoned lanes are
+    /// swap-removed so the row loop never touches them again
+    active: Vec<usize>,
+}
+
+impl MultiWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, lanes: usize) {
+        while self.lanes.len() < lanes {
+            self.lanes.push(KernelWorkspace::default());
+        }
+        if self.states.len() < lanes {
+            self.states.resize(lanes, BandState::default());
+        }
+        if self.ubs.len() < lanes {
+            self.ubs.resize(lanes, f64::INFINITY);
+        }
+    }
+
+    /// Pre-size `lanes` lane workspaces for candidates of `len` points
+    /// without counting a regrow (the pool warm-up path).
+    pub fn warm(&mut self, lanes: usize, len: usize, precision: Precision) {
+        self.ensure(lanes);
+        for lw in &mut self.lanes[..lanes] {
+            match precision {
+                Precision::F64 => lw.warm(len),
+                Precision::F32 => lw.warm32(len),
+            }
+        }
+        if self.active.capacity() < lanes {
+            self.active.reserve(lanes - self.active.len());
+        }
+    }
+
+    /// Borrow one lane's workspace directly — the lone-survivor
+    /// fall-through evaluates through the scalar kernel on lane 0.
+    pub fn lane_ws(&mut self, lane: usize) -> &mut KernelWorkspace {
+        self.ensure(lane + 1);
+        &mut self.lanes[lane]
+    }
+
+    /// Total regrowth tally across lanes (see
+    /// [`crate::metrics::Counters::kernel_workspace_regrows`]).
+    pub fn regrows(&self) -> u64 {
+        self.lanes.iter().map(KernelWorkspace::regrows).sum()
+    }
+}
+
+/// Multi-candidate wavefront evaluation: advance `models.len()` same-shape
+/// candidates' band recurrences in row lockstep, one candidate per lane.
+/// Each lane carries its own upper bound (`ubs`), optional cumulative
+/// bound tail (`cbs`, [`CostModel::UNIFORM`] only) and band state; a lane
+/// whose band collapses is retired and compacted out of the active set.
+/// Every [`LANE_REFRESH_ROWS`] rows each live lane's threshold is
+/// re-read through `refresh(lane)` and folded in with `min` (monotone —
+/// a refresh can only tighten; pass `|l| ubs[l]` for a no-op).
+///
+/// `out` is filled with one [`KernelEval`] per lane, index-aligned with
+/// `models`. On f64 every lane's outcome is bitwise-identical to a
+/// scalar [`eap_kernel`] call with the same (model, w, ub, cb) — lanes
+/// share no DP state, only the row loop.
+///
+/// All models must share one `(n_lines, n_cols)` shape — that is what
+/// makes a lane group (cohorts and strip survivors already guarantee it).
+#[allow(clippy::too_many_arguments)]
+pub fn eap_kernel_multi_dyn<S: Scalar, C: CostModel>(
+    models: &[C],
+    w: usize,
+    ubs: &[f64],
+    cbs: &[Option<&[f64]>],
+    ws: &mut MultiWorkspace,
+    mut refresh: impl FnMut(usize) -> f64,
+    out: &mut Vec<KernelEval>,
+) {
+    let lanes = models.len();
+    assert_eq!(ubs.len(), lanes, "one ub per lane");
+    assert_eq!(cbs.len(), lanes, "one cb slot per lane");
+    out.clear();
+    if lanes == 0 {
+        return;
+    }
+    let n = models[0].n_lines();
+    let m = models[0].n_cols();
+    debug_assert!(
+        models.iter().all(|mo| mo.n_lines() == n && mo.n_cols() == m),
+        "lane group must share one (n_lines, n_cols) shape"
+    );
+    if n == 0 || m == 0 {
+        let e = if n == m { KernelEval::done(0.0) } else { KernelEval::infeasible() };
+        out.resize(lanes, e);
+        return;
+    }
+    if n.abs_diff(m) > w {
+        out.resize(lanes, KernelEval::infeasible());
+        return;
+    }
+    ws.ensure(lanes);
+    // abandon placeholders: lanes retired mid-scan keep this outcome,
+    // surviving lanes overwrite it after the row loop
+    out.resize(lanes, KernelEval::abandon());
+    ws.active.clear();
+    for lane in 0..lanes {
+        debug_assert!(
+            cbs[lane].is_none() || C::UNIFORM,
+            "cb tightening needs a uniform-cost model"
+        );
+        if let Some(cb) = cbs[lane] {
+            debug_assert_eq!(cb.len(), m + 1);
+            debug_assert!(cb[m] == 0.0);
+        }
+        ws.ubs[lane] = ubs[lane];
+        let lw = &mut ws.lanes[lane];
+        S::reset_lines(lw, m);
+        let (_, curr) = S::lines_mut(lw);
+        curr[0] = S::ZERO;
+        let ppp = init_row0::<S, C>(&models[lane], w, S::threshold(ubs[lane]), curr);
+        ws.states[lane] = BandState { next_start: 1, pp: 0, ppp };
+        ws.active.push(lane);
+    }
+    let mut cells = 0u64;
+    for i in 1..=n {
+        if ws.active.is_empty() {
+            break;
+        }
+        // Threshold staleness fix: a group is packed with thresholds
+        // frozen at formation time, so a sibling finishing early (in an
+        // earlier group, or via the owner's top-k tightening) would go
+        // unnoticed for the rest of the evaluation. Re-reading here at
+        // strip-boundary cadence folds fresher bounds in monotonically.
+        if i % LANE_REFRESH_ROWS == 0 {
+            for k in 0..ws.active.len() {
+                let lane = ws.active[k];
+                let t = refresh(lane);
+                if t < ws.ubs[lane] {
+                    ws.ubs[lane] = t;
+                }
+            }
+        }
+        let mut idx = 0;
+        while idx < ws.active.len() {
+            let lane = ws.active[idx];
+            let th_f = line_threshold::<C>(ws.ubs[lane], cbs[lane], i, w, m);
+            let lw = &mut ws.lanes[lane];
+            S::swap_lines(lw);
+            let th = S::threshold(th_f);
+            let (prev, curr) = S::lines_mut(lw);
+            let dead = advance_row::<S, C, false>(
+                &models[lane],
+                i,
+                w,
+                m,
+                th,
+                &mut ws.states[lane],
+                prev,
+                curr,
+                &mut cells,
+            );
+            if dead {
+                // retire + compact: the abandoned candidate stops
+                // costing row work from the very next row
+                ws.active.swap_remove(idx);
+            } else {
+                idx += 1;
+            }
+        }
+    }
+    for &lane in &ws.active {
+        out[lane] = if ws.states[lane].ppp > m {
+            KernelEval::done(S::final_cell(&ws.lanes[lane], m).to_f64())
+        } else {
+            KernelEval::abandon()
+        };
+    }
+}
+
+/// Const-width convenience wrapper over [`eap_kernel_multi_dyn`]: f64
+/// lanes, no `cb` tails, thresholds frozen at the call (no refresh).
+pub fn eap_kernel_multi<C: CostModel, const LANES: usize>(
+    models: &[C; LANES],
+    w: usize,
+    ubs: &[f64; LANES],
+    ws: &mut MultiWorkspace,
+    out: &mut Vec<KernelEval>,
+) {
+    let cbs = [None::<&[f64]>; LANES];
+    eap_kernel_multi_dyn::<f64, C>(models, w, ubs, &cbs, ws, |lane| ubs[lane], out);
 }
 
 /// DTW's cost structure — squared-Euclidean cost on every move, infinite
@@ -734,6 +1201,94 @@ mod tests {
             let want = naive_kernel(&dtw, w);
             let got = eap_kernel(&dtw, w, f64::INFINITY, None, &mut ws).dist;
             assert!((got - want).abs() < 1e-12, "dtw w={w}");
+        }
+    }
+
+    #[test]
+    fn multi_lane_f64_matches_scalar_lanes_bitwise() {
+        // quick in-file smoke check; the cross-metric, random-lane-count
+        // property suite lives in tests/conformance_lanes.rs
+        let mut ws = DtwWorkspace::default();
+        let mut mws = MultiWorkspace::default();
+        let mut rnd = xorshift(0xFACE);
+        let n = 23;
+        let q: Vec<f64> = (0..n).map(|_| rnd()).collect();
+        let cands: Vec<Vec<f64>> = (0..4).map(|_| (0..n).map(|_| rnd()).collect()).collect();
+        let w = 5;
+        let exact: Vec<f64> = cands
+            .iter()
+            .map(|c| eap_kernel(&DtwCost { li: &q, co: c }, w, f64::INFINITY, None, &mut ws).dist)
+            .collect();
+        // mixed per-lane bounds: inf / tie / a planted first-rows abandon
+        // (ub = 0 retires mid-group) / a tight bound
+        let ubs = [f64::INFINITY, exact[1], 0.0, exact[3] * 0.5];
+        let models: Vec<DtwCost> = cands.iter().map(|c| DtwCost { li: &q, co: c }).collect();
+        let cbs = [None::<&[f64]>; 4];
+        let mut out = Vec::new();
+        eap_kernel_multi_dyn::<f64, _>(&models, w, &ubs, &cbs, &mut mws, |l| ubs[l], &mut out);
+        assert_eq!(out.len(), 4);
+        for (lane, e) in out.iter().enumerate() {
+            let want = eap_kernel(&models[lane], w, ubs[lane], None, &mut ws);
+            assert_eq!(e.dist.to_bits(), want.dist.to_bits(), "lane {lane}");
+            assert_eq!(e.abandoned, want.abandoned, "lane {lane}");
+        }
+        assert!(out[2].abandoned && out[3].abandoned);
+        assert!(!out[0].abandoned && !out[1].abandoned);
+    }
+
+    #[test]
+    fn const_lane_wrapper_delegates_to_dyn() {
+        let mut ws = DtwWorkspace::default();
+        let mut mws = MultiWorkspace::default();
+        let mut rnd = xorshift(0xBEEF);
+        let n = 12;
+        let q: Vec<f64> = (0..n).map(|_| rnd()).collect();
+        let c0: Vec<f64> = (0..n).map(|_| rnd()).collect();
+        let c1: Vec<f64> = (0..n).map(|_| rnd()).collect();
+        let models = [DtwCost { li: &q, co: &c0 }, DtwCost { li: &q, co: &c1 }];
+        let mut out = Vec::new();
+        eap_kernel_multi::<_, 2>(&models, n, &[f64::INFINITY; 2], &mut mws, &mut out);
+        for (lane, e) in out.iter().enumerate() {
+            let want = eap_kernel(&models[lane], n, f64::INFINITY, None, &mut ws);
+            assert_eq!(e.dist.to_bits(), want.dist.to_bits(), "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn f32_thresholds_only_widen() {
+        assert_eq!(<f32 as Scalar>::threshold(f64::INFINITY), f32::INFINITY);
+        assert!(<f32 as Scalar>::threshold(1.0) > 1.0_f32);
+        assert!(<f32 as Scalar>::threshold(0.0) > 0.0_f32);
+        assert!(<f32 as Scalar>::threshold(-1.0) > -1.0_f32);
+        assert_eq!(next_up_f32(0.0), f32::from_bits(1));
+        assert_eq!(next_up_f32(-0.0), f32::from_bits(1));
+        assert!(next_up_f32(-f32::MIN_POSITIVE) > -f32::MIN_POSITIVE);
+        assert_eq!(next_up_f32(f32::INFINITY), f32::INFINITY);
+    }
+
+    #[test]
+    fn f32_kernel_tracks_f64_within_epsilon_and_never_over_prunes() {
+        let mut ws = DtwWorkspace::default();
+        let mut rnd = xorshift(0xF32F);
+        for n in [9usize, 31] {
+            let a: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rnd()).collect();
+            for w in [2usize, n] {
+                let model = DtwCost { li: &a, co: &b };
+                let d64 = eap_kernel(&model, w, f64::INFINITY, None, &mut ws).dist;
+                let e32 = eap_kernel_f32(&model, w, f64::INFINITY, None, &mut ws);
+                assert!(!e32.abandoned);
+                let rel = (e32.dist - d64).abs() / d64.abs().max(1e-12);
+                assert!(rel <= 1e-4, "n={n} w={w} rel={rel}");
+                // exact-tie bound: f64 completes, so the inflated-f32 run
+                // must complete too (over-admit, never over-prune)
+                let tie = eap_kernel_f32(&model, w, d64, None, &mut ws);
+                assert!(!tie.abandoned, "n={n} w={w}");
+                if d64 > 0.0 {
+                    let below = eap_kernel_f32(&model, w, d64 * 0.5, None, &mut ws);
+                    assert!(below.abandoned, "n={n} w={w}");
+                }
+            }
         }
     }
 }

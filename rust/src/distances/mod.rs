@@ -32,13 +32,18 @@ pub mod pruned_dtw;
 /// allocation-free: two DP lines of `len + 1` cells. One type serves
 /// every kernel in the zoo, so pools
 /// ([`crate::search::cohort::CohortPool`]) size it once per cohort and
-/// swap it into any evaluation.
+/// swap it into any evaluation. The f32 line pair backs the opt-in
+/// [`kernel::Precision::F32`] storage mode and stays empty (no
+/// allocation) on the default f64 paths.
 #[derive(Debug, Default, Clone)]
 pub struct KernelWorkspace {
     pub(crate) prev: Vec<f64>,
     pub(crate) curr: Vec<f64>,
-    /// times [`KernelWorkspace::reset`] grew a line beyond capacity —
-    /// pooled workspaces must never regrow after warm-up
+    pub(crate) prev32: Vec<f32>,
+    pub(crate) curr32: Vec<f32>,
+    /// times [`KernelWorkspace::reset`] / [`KernelWorkspace::reset32`]
+    /// grew a line beyond capacity — pooled workspaces must never regrow
+    /// after warm-up
     /// ([`crate::metrics::Counters::kernel_workspace_regrows`]).
     regrows: u64,
 }
@@ -50,7 +55,13 @@ pub type DtwWorkspace = KernelWorkspace;
 impl KernelWorkspace {
     /// Workspace able to handle series up to `cap` points.
     pub fn with_capacity(cap: usize) -> Self {
-        Self { prev: Vec::with_capacity(cap + 1), curr: Vec::with_capacity(cap + 1), regrows: 0 }
+        Self {
+            prev: Vec::with_capacity(cap + 1),
+            curr: Vec::with_capacity(cap + 1),
+            prev32: Vec::new(),
+            curr32: Vec::new(),
+            regrows: 0,
+        }
     }
 
     /// (Re)initialise both lines to `len + 1` cells of `+inf`.
@@ -63,6 +74,40 @@ impl KernelWorkspace {
         self.prev.resize(len + 1, f64::INFINITY);
         self.curr.clear();
         self.curr.resize(len + 1, f64::INFINITY);
+    }
+
+    /// (Re)initialise the f32 line pair to `len + 1` cells of `+inf`
+    /// (the [`kernel::Precision::F32`] storage mode).
+    #[inline]
+    pub(crate) fn reset32(&mut self, len: usize) {
+        if self.prev32.capacity() < len + 1 || self.curr32.capacity() < len + 1 {
+            self.regrows += 1;
+        }
+        self.prev32.clear();
+        self.prev32.resize(len + 1, f32::INFINITY);
+        self.curr32.clear();
+        self.curr32.resize(len + 1, f32::INFINITY);
+    }
+
+    /// Pre-size the f64 line pair for series of `len` points *without*
+    /// counting a regrow — the pool warm-up path.
+    pub(crate) fn warm(&mut self, len: usize) {
+        if self.prev.capacity() < len + 1 {
+            self.prev.reserve(len + 1 - self.prev.len());
+        }
+        if self.curr.capacity() < len + 1 {
+            self.curr.reserve(len + 1 - self.curr.len());
+        }
+    }
+
+    /// [`KernelWorkspace::warm`] for the f32 line pair.
+    pub(crate) fn warm32(&mut self, len: usize) {
+        if self.prev32.capacity() < len + 1 {
+            self.prev32.reserve(len + 1 - self.prev32.len());
+        }
+        if self.curr32.capacity() < len + 1 {
+            self.curr32.reserve(len + 1 - self.curr32.len());
+        }
     }
 
     /// How often a reset had to allocate; a pooled workspace warmed to the

@@ -27,7 +27,7 @@ use crate::coordinator::worker::{worker_loop, WorkItem, DEFAULT_SYNC_EVERY};
 use crate::distances::metric::Metric;
 use crate::index::ref_index::RefIndex;
 use crate::metrics::Counters;
-use crate::search::subsequence::{validate_series, window_cells, Match, ScanMode};
+use crate::search::subsequence::{validate_series, window_cells, Match, ScanMode, ScanTuning};
 use crate::search::suite::Suite;
 
 /// One query of a batch: raw (un-normalised) points plus its warping
@@ -100,6 +100,9 @@ pub struct EngineConfig {
     /// by default, sequential as the A/B baseline — both return bitwise
     /// identical results
     pub batch: BatchMode,
+    /// kernel tuning the shard workers scan with: wavefront lane width
+    /// (1 = scalar kernel, the default) and DP line precision
+    pub tuning: ScanTuning,
 }
 
 impl Default for EngineConfig {
@@ -110,6 +113,7 @@ impl Default for EngineConfig {
             suite: Suite::UcrMon,
             scan_mode: ScanMode::default(),
             batch: BatchMode::default(),
+            tuning: ScanTuning::default(),
         }
     }
 }
@@ -121,6 +125,7 @@ pub struct Engine {
     sync_every: usize,
     scan_mode: ScanMode,
     batch: BatchMode,
+    tuning: ScanTuning,
     senders: Vec<Sender<WorkItem>>,
     handles: Vec<JoinHandle<()>>,
     busy: Arc<AtomicU64>,
@@ -159,6 +164,7 @@ impl Engine {
             sync_every: cfg.sync_every,
             scan_mode: cfg.scan_mode,
             batch: cfg.batch,
+            tuning: cfg.tuning,
             senders,
             handles,
             busy,
@@ -203,6 +209,7 @@ impl Engine {
             self.scan_mode,
             k,
             self.sync_every,
+            self.tuning,
             denv,
             Some(stats),
         )?;
@@ -302,6 +309,7 @@ impl Engine {
                 self.suite,
                 k,
                 self.sync_every,
+                self.tuning,
                 denv,
                 stats,
             )?;

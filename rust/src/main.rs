@@ -15,7 +15,7 @@ use repro::distances::metric::Metric;
 use repro::metrics::{Counters, Timer};
 #[cfg(feature = "xla")]
 use repro::runtime::XlaEngine;
-use repro::search::subsequence::{search_subsequence, window_cells, ScanMode};
+use repro::search::subsequence::{search_subsequence, window_cells, ScanMode, ScanTuning};
 use repro::search::suite::Suite;
 use repro::util::cli::Args;
 
@@ -33,6 +33,7 @@ COMMANDS
               the TCP front-end
               --dataset <name> [--queries N] [--shards N] [--suite S]
               [--k N] [--metric M] [--scan-mode strip|scalar]
+              [--lanes N] [--precision f64|f32]
               [--batch-window N] [--batch-deadline-ms N]
               [--max-pending N] [--default-deadline-ms N]
               [--stats-every N] [--ref-len N] [--artifacts DIR]
@@ -55,6 +56,11 @@ Metrics: cdtw (default) | dtw | wdtw | erp | msm | twe (default parameters;
          per-request parameters travel in the protocol's metric object)
 Scan modes: strip (default; batched bounds + LB-ordered DTW) | scalar
          (the legacy per-candidate loop — same results, A/B baseline)
+Kernel:  --lanes N packs up to N cascade survivors per strip into one
+         multi-candidate wavefront kernel pass (1 = scalar kernel, the
+         default; same top-k results, bitwise). --precision f32 stores
+         the kernel's DP lines in f32 (opt-in; distances track f64
+         within a relative epsilon and pruning only ever loosens)
 Batching: --batch-window N coalesces N in-flight queries; same-shape
          queries form cohorts served by one shared strip pass over the
          reference (same results as solo serving, bitwise).
@@ -221,6 +227,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("unknown scan mode {name:?} (strip|scalar)"))?,
         None => ScanMode::default(),
     };
+    let lanes = args.usize_or("lanes", cfg.serve.lanes)?.max(1);
+    let precision = {
+        let name = args.get_or("precision", &cfg.serve.precision).to_string();
+        repro::distances::kernel::Precision::from_name(&name)
+            .ok_or_else(|| anyhow!("unknown precision {name:?} (f64|f32)"))?
+    };
     let batch_window = args.usize_or("batch-window", cfg.serve.batch_window)?.max(1);
     let batch_deadline_ms = args.u64_or("batch-deadline-ms", cfg.serve.batch_deadline_ms)?;
     let max_pending = args.usize_or("max-pending", cfg.serve.max_pending)?;
@@ -240,6 +252,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_pending,
             default_deadline_ms,
             artifacts_dir: artifacts.join("manifest.json").exists().then_some(artifacts),
+            tuning: ScanTuning::default().with_lanes(lanes).with_precision(precision),
             ..Default::default()
         },
     )?);

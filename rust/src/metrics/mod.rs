@@ -119,6 +119,19 @@ pub struct Counters {
     /// queries shed by a per-tenant token bucket before any scan work —
     /// answered with a `quota` `ErrorResponse` carrying `retry_after_ms`
     pub quota_shed_queries: u64,
+    /// multi-lane wavefront kernel invocations (lane groups of ≥ 2
+    /// candidates evaluated in lockstep; lone survivors fall through to
+    /// the scalar kernel and are not counted here)
+    pub kernel_multi_calls: u64,
+    /// candidate lanes evaluated across all multi-lane invocations — each
+    /// lane also counts into `dtw_calls` (and its per-metric tally), so
+    /// the `dtw_calls == dtw_abandons + dtw_completions` identity holds
+    /// unchanged; `kernel_lanes_filled / kernel_multi_calls` is the mean
+    /// lane occupancy the benches gate on
+    pub kernel_lanes_filled: u64,
+    /// lanes retired by per-lane early abandon inside a multi-lane
+    /// invocation (a subset of `dtw_abandons`; `<= kernel_lanes_filled`)
+    pub kernel_lane_abandons: u64,
     /// distance-kernel calls per metric kind, indexed by
     /// [`Metric::index`] (every entry also counts into `dtw_calls`)
     pub metric_calls: [u64; Metric::COUNT],
@@ -163,7 +176,7 @@ impl Counters {
 
     /// Scalar counter fields, in declaration order — the fixed prefix of
     /// the slot mapping below.
-    pub const SCALAR_SLOTS: usize = 31;
+    pub const SCALAR_SLOTS: usize = 34;
 
     /// Slot index of `worker_panics` — the service records supervision
     /// events straight into its [`crate::obs::ObsCell`] by slot (they
@@ -185,6 +198,12 @@ impl Counters {
     pub const SLOT_CONN_READ_TIMEOUTS: usize = 29;
     /// Slot index of `quota_shed_queries`.
     pub const SLOT_QUOTA_SHED_QUERIES: usize = 30;
+    /// Slot index of `kernel_multi_calls`.
+    pub const SLOT_KERNEL_MULTI_CALLS: usize = 31;
+    /// Slot index of `kernel_lanes_filled`.
+    pub const SLOT_KERNEL_LANES_FILLED: usize = 32;
+    /// Slot index of `kernel_lane_abandons`.
+    pub const SLOT_KERNEL_LANE_ABANDONS: usize = 33;
 
     /// Total number of slots in the canonical flat form: every scalar
     /// field plus the per-metric call/abandon tallies.
@@ -227,6 +246,9 @@ impl Counters {
         "conns_rejected",
         "conn_read_timeouts",
         "quota_shed_queries",
+        "kernel_multi_calls",
+        "kernel_lanes_filled",
+        "kernel_lane_abandons",
         "metric_calls_cdtw",
         "metric_calls_dtw",
         "metric_calls_wdtw",
@@ -276,6 +298,9 @@ impl Counters {
         s[Self::SLOT_CONNS_REJECTED] = self.conns_rejected;
         s[Self::SLOT_CONN_READ_TIMEOUTS] = self.conn_read_timeouts;
         s[Self::SLOT_QUOTA_SHED_QUERIES] = self.quota_shed_queries;
+        s[Self::SLOT_KERNEL_MULTI_CALLS] = self.kernel_multi_calls;
+        s[Self::SLOT_KERNEL_LANES_FILLED] = self.kernel_lanes_filled;
+        s[Self::SLOT_KERNEL_LANE_ABANDONS] = self.kernel_lane_abandons;
         for i in 0..Metric::COUNT {
             s[Self::SCALAR_SLOTS + i] = self.metric_calls[i];
             s[Self::SCALAR_SLOTS + Metric::COUNT + i] = self.metric_abandons[i];
@@ -318,6 +343,9 @@ impl Counters {
             conns_rejected: s[Self::SLOT_CONNS_REJECTED],
             conn_read_timeouts: s[Self::SLOT_CONN_READ_TIMEOUTS],
             quota_shed_queries: s[Self::SLOT_QUOTA_SHED_QUERIES],
+            kernel_multi_calls: s[Self::SLOT_KERNEL_MULTI_CALLS],
+            kernel_lanes_filled: s[Self::SLOT_KERNEL_LANES_FILLED],
+            kernel_lane_abandons: s[Self::SLOT_KERNEL_LANE_ABANDONS],
             ..Default::default()
         };
         for i in 0..Metric::COUNT {
@@ -375,6 +403,9 @@ impl Counters {
         self.conns_rejected += o.conns_rejected;
         self.conn_read_timeouts += o.conn_read_timeouts;
         self.quota_shed_queries += o.quota_shed_queries;
+        self.kernel_multi_calls += o.kernel_multi_calls;
+        self.kernel_lanes_filled += o.kernel_lanes_filled;
+        self.kernel_lane_abandons += o.kernel_lane_abandons;
         for i in 0..Metric::COUNT {
             self.metric_calls[i] += o.metric_calls[i];
             self.metric_abandons[i] += o.metric_abandons[i];
@@ -674,6 +705,9 @@ mod tests {
             &mut c.conns_rejected,
             &mut c.conn_read_timeouts,
             &mut c.quota_shed_queries,
+            &mut c.kernel_multi_calls,
+            &mut c.kernel_lanes_filled,
+            &mut c.kernel_lane_abandons,
         ] {
             v += 1;
             *f = v;
@@ -722,6 +756,9 @@ mod tests {
             (Counters::SLOT_CONNS_REJECTED, "conns_rejected"),
             (Counters::SLOT_CONN_READ_TIMEOUTS, "conn_read_timeouts"),
             (Counters::SLOT_QUOTA_SHED_QUERIES, "quota_shed_queries"),
+            (Counters::SLOT_KERNEL_MULTI_CALLS, "kernel_multi_calls"),
+            (Counters::SLOT_KERNEL_LANES_FILLED, "kernel_lanes_filled"),
+            (Counters::SLOT_KERNEL_LANE_ABANDONS, "kernel_lane_abandons"),
         ] {
             assert_eq!(Counters::SLOT_NAMES[slot], name);
             assert!(slot < Counters::SCALAR_SLOTS);

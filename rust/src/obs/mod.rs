@@ -130,14 +130,23 @@ pub enum DistKind {
     StripSurvivors,
     /// Top-k threshold tightenings per query (how fast the bound closed).
     TopkTighten,
+    /// Lanes filled per multi-lane wavefront kernel invocation (always
+    /// ≥ 2 — lone survivors take the scalar kernel). The mass of this
+    /// histogram is the lane-packing efficiency the kernel_lanes bench
+    /// gates on.
+    LaneOccupancy,
 }
 
 impl DistKind {
-    pub const COUNT: usize = 3;
+    pub const COUNT: usize = 4;
     pub const NAMES: [&'static str; Self::COUNT] =
-        ["cohort_size", "strip_survivors", "topk_tighten"];
-    pub const ALL: [DistKind; Self::COUNT] =
-        [DistKind::CohortSize, DistKind::StripSurvivors, DistKind::TopkTighten];
+        ["cohort_size", "strip_survivors", "topk_tighten", "lane_occupancy"];
+    pub const ALL: [DistKind; Self::COUNT] = [
+        DistKind::CohortSize,
+        DistKind::StripSurvivors,
+        DistKind::TopkTighten,
+        DistKind::LaneOccupancy,
+    ];
 
     #[inline]
     pub fn index(self) -> usize {
@@ -145,6 +154,7 @@ impl DistKind {
             DistKind::CohortSize => 0,
             DistKind::StripSurvivors => 1,
             DistKind::TopkTighten => 2,
+            DistKind::LaneOccupancy => 3,
         }
     }
 

@@ -53,7 +53,7 @@ use crate::index::ref_index::BucketStats;
 use crate::index::topk::TopK;
 use crate::metrics::Counters;
 use crate::obs::{DistKind, ScanObs, Stage};
-use crate::search::subsequence::{eval_survivor, DataEnvelopes, QueryContext};
+use crate::search::subsequence::{eval_survivor, flush_lane_group, DataEnvelopes, QueryContext};
 use crate::search::suite::Suite;
 
 /// One query's state through a cohort scan: its context, its private
@@ -132,6 +132,9 @@ impl CohortPool {
         if self.ws.curr.capacity() < n + 1 {
             self.ws.curr.reserve(n + 1 - self.ws.curr.len());
         }
+        // the f32 lines too: a few KB keeps the opt-in `--precision f32`
+        // path inside the same no-regrow contract as the default
+        self.ws.warm32(n);
     }
 
     /// Capacity fingerprint for the regrowth debug assertion.
@@ -422,6 +425,10 @@ pub fn scan_cohort_topk_obs(
                     obs,
                 );
             }
+            // lane groups never span strips: a partial group left by this
+            // member's survivor list is evaluated now, against the
+            // member's freshest private threshold
+            flush_lane_group(&mut m.ctx, &mut m.topk, &mut m.counters, obs);
             pool.swap_into(&mut m.ctx);
             debug_assert_eq!(
                 pool.caps(),

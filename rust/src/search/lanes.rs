@@ -1,0 +1,295 @@
+//! Survivor **lane packing** for the multi-candidate wavefront kernel.
+//!
+//! The strip and cohort scans evaluate cascade survivors one at a time
+//! through the scalar kernel. When lane evaluation is enabled
+//! (`ScanTuning::lanes >= 2` on a DTW-family metric under an EAPruned
+//! suite core), survivors are instead *deferred* into a [`LanePacker`]:
+//! each survivor's z-normalised window, cumulative-bound tail and
+//! pack-time threshold are copied into the next free lane, and when the
+//! group is full — or the strip's survivor list ends — the whole group
+//! advances in row lockstep through
+//! [`crate::distances::kernel::eap_kernel_multi_dyn`]. A group holding a
+//! single survivor at flush time falls through to the scalar
+//! [`crate::distances::kernel::eap_kernel`] — the bitwise-pinned oracle —
+//! so lone survivors cost exactly what they always did.
+//!
+//! Groups are per-member and never span strips, so all lanes share one
+//! `(qlen, w)` shape by construction. Thresholds are frozen per lane at
+//! pack time and re-tightened from the owner's [`crate::index::topk::TopK`]
+//! at flush; because DP cell values never depend on the threshold, the
+//! deferred evaluation returns bitwise-identical distances for every
+//! completed candidate, and the final top-k contents match sequential
+//! evaluation exactly (`tests/conformance_lanes.rs`).
+
+use crate::distances::kernel::{
+    eap_kernel, eap_kernel_f32, eap_kernel_multi_dyn, DtwCost, KernelEval, MultiWorkspace,
+    Precision, MAX_LANES,
+};
+
+/// Accumulates deferred survivors into lanes and evaluates them as one
+/// wavefront group. Owned by a `QueryContext`; all buffers are reused
+/// across groups so the steady-state scan never allocates.
+#[derive(Debug, Clone)]
+pub struct LanePacker {
+    /// configured group width (1 = lane evaluation off)
+    width: usize,
+    precision: Precision,
+    /// per-lane copies of the survivor's z-normalised window
+    zbufs: Vec<Vec<f64>>,
+    /// per-lane copies of the cumulative-bound tail (valid when `has_cb`)
+    cbs: Vec<Vec<f64>>,
+    has_cb: Vec<bool>,
+    /// per-lane pack-time thresholds (tightened again at flush)
+    ubs: Vec<f64>,
+    /// per-lane candidate start positions
+    positions: Vec<usize>,
+    /// lanes currently pending
+    len: usize,
+    mws: MultiWorkspace,
+    out: Vec<KernelEval>,
+}
+
+impl Default for LanePacker {
+    fn default() -> Self {
+        Self {
+            width: 1,
+            precision: Precision::F64,
+            zbufs: Vec::new(),
+            cbs: Vec::new(),
+            has_cb: Vec::new(),
+            ubs: Vec::new(),
+            positions: Vec::new(),
+            len: 0,
+            mws: MultiWorkspace::new(),
+            out: Vec::new(),
+        }
+    }
+}
+
+impl LanePacker {
+    /// Set the group width (clamped to `1..=MAX_LANES`) and the DP line
+    /// precision. Width 1 disables deferral entirely — the scans check
+    /// [`LanePacker::width`] before routing survivors here.
+    pub fn configure(&mut self, lanes: usize, precision: Precision) {
+        self.width = lanes.clamp(1, MAX_LANES);
+        self.precision = precision;
+        debug_assert_eq!(self.len, 0, "reconfigure with lanes pending");
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    #[inline]
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Lanes pending evaluation.
+    #[inline]
+    pub fn lanes_pending(&self) -> usize {
+        self.len
+    }
+
+    /// Defer one survivor into the next free lane, copying its
+    /// z-normalised window, optional cumulative-bound tail and current
+    /// threshold. Returns `true` when the group is now full and must be
+    /// flushed before the next push.
+    pub fn push(&mut self, pos: usize, zwin: &[f64], cb: Option<&[f64]>, ub: f64) -> bool {
+        let k = self.len;
+        debug_assert!(k < self.width, "push into a full lane group");
+        if k == 0 {
+            // idempotent, non-counting warm-up so the multi workspace
+            // never registers a regrow mid-scan
+            self.mws.warm(self.width, zwin.len(), self.precision);
+        }
+        if self.zbufs.len() <= k {
+            self.zbufs.push(Vec::with_capacity(zwin.len()));
+            self.cbs.push(Vec::new());
+            self.has_cb.push(false);
+            self.ubs.push(f64::INFINITY);
+            self.positions.push(0);
+        }
+        self.zbufs[k].clear();
+        self.zbufs[k].extend_from_slice(zwin);
+        self.cbs[k].clear();
+        match cb {
+            Some(cb) => {
+                self.cbs[k].extend_from_slice(cb);
+                self.has_cb[k] = true;
+            }
+            None => self.has_cb[k] = false,
+        }
+        self.ubs[k] = ub;
+        self.positions[k] = pos;
+        self.len += 1;
+        self.len >= self.width
+    }
+
+    /// Evaluate every pending lane against query `q` under band `w`.
+    /// `fresh` is the owner's *current* top-k threshold: each lane's
+    /// pack-time bound is tightened to it first (monotone — sibling
+    /// completions since pack time can only have shrunk it), which is the
+    /// flush-time half of the staleness fix; the in-kernel
+    /// `LANE_REFRESH_ROWS` hook is the row-cadence half. Results are read
+    /// back with [`LanePacker::result`].
+    pub fn eval(&mut self, q: &[f64], w: usize, fresh: f64) {
+        let len = self.len;
+        self.out.clear();
+        if len == 0 {
+            return;
+        }
+        for ub in &mut self.ubs[..len] {
+            if fresh < *ub {
+                *ub = fresh;
+            }
+        }
+        let Self { zbufs, cbs, has_cb, ubs, mws, out, precision, .. } = self;
+        if len == 1 {
+            // lone survivor: the scalar kernel, bitwise the pre-lane path
+            let model = DtwCost { li: q, co: &zbufs[0] };
+            let cb = has_cb[0].then(|| cbs[0].as_slice());
+            let ws = mws.lane_ws(0);
+            let e = match precision {
+                Precision::F64 => eap_kernel(&model, w, ubs[0], cb, ws),
+                Precision::F32 => eap_kernel_f32(&model, w, ubs[0], cb, ws),
+            };
+            out.push(e);
+            return;
+        }
+        let mut models: [DtwCost<'_>; MAX_LANES] =
+            std::array::from_fn(|_| DtwCost { li: q, co: &[] });
+        let mut cb_slices = [None::<&[f64]>; MAX_LANES];
+        for i in 0..len {
+            models[i].co = &zbufs[i];
+            if has_cb[i] {
+                cb_slices[i] = Some(cbs[i].as_slice());
+            }
+        }
+        // thresholds were just refreshed and no top-k offer can land
+        // mid-flush, so the row-cadence refresh closure is a no-op here
+        // (the conformance suite drives it with genuinely tightening
+        // closures)
+        let ub_now: &[f64] = &ubs[..len];
+        match precision {
+            Precision::F64 => eap_kernel_multi_dyn::<f64, _>(
+                &models[..len],
+                w,
+                ub_now,
+                &cb_slices[..len],
+                mws,
+                |l| ub_now[l],
+                out,
+            ),
+            Precision::F32 => eap_kernel_multi_dyn::<f32, _>(
+                &models[..len],
+                w,
+                ub_now,
+                &cb_slices[..len],
+                mws,
+                |l| ub_now[l],
+                out,
+            ),
+        }
+    }
+
+    /// Lane `k`'s (position, outcome) after [`LanePacker::eval`].
+    #[inline]
+    pub fn result(&self, k: usize) -> (usize, KernelEval) {
+        (self.positions[k], self.out[k])
+    }
+
+    /// Drop the evaluated group; the buffers stay warm for the next one.
+    #[inline]
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.out.clear();
+    }
+
+    /// Total line-regrowth events across the lane workspaces (0 after the
+    /// push-time warm-up — the pool-hygiene invariant).
+    pub fn regrows(&self) -> u64 {
+        self.mws.regrows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distances::DtwWorkspace;
+
+    fn xorshift(seed: u64) -> impl FnMut() -> f64 {
+        let mut x = seed;
+        move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) * 2.0 - 1.0
+        }
+    }
+
+    #[test]
+    fn packed_groups_match_scalar_evaluation_bitwise() {
+        let mut rnd = xorshift(0xA11E);
+        let n = 19;
+        let w = 4;
+        let q: Vec<f64> = (0..n).map(|_| rnd()).collect();
+        let cands: Vec<Vec<f64>> = (0..7).map(|_| (0..n).map(|_| rnd()).collect()).collect();
+        let mut packer = LanePacker::default();
+        packer.configure(3, Precision::F64);
+        let mut ws = DtwWorkspace::default();
+        let mut scalar = Vec::new();
+        let mut packed = Vec::new();
+        for (pos, c) in cands.iter().enumerate() {
+            scalar.push(eap_kernel(
+                &DtwCost { li: &q, co: c },
+                w,
+                f64::INFINITY,
+                None,
+                &mut ws,
+            ));
+            if packer.push(pos, c, None, f64::INFINITY) {
+                packer.eval(&q, w, f64::INFINITY);
+                for k in 0..packer.lanes_pending() {
+                    packed.push(packer.result(k));
+                }
+                packer.clear();
+            }
+        }
+        // 7 = 3 + 3 + a lone trailing survivor through the scalar branch
+        assert_eq!(packer.lanes_pending(), 1);
+        packer.eval(&q, w, f64::INFINITY);
+        packed.push(packer.result(0));
+        packer.clear();
+        assert_eq!(packed.len(), cands.len());
+        for (k, (pos, e)) in packed.iter().enumerate() {
+            assert_eq!(*pos, k);
+            assert_eq!(e.dist.to_bits(), scalar[k].dist.to_bits(), "lane {k}");
+            assert_eq!(e.abandoned, scalar[k].abandoned, "lane {k}");
+        }
+        assert_eq!(packer.regrows(), 0, "push-time warm must pre-size the lanes");
+    }
+
+    #[test]
+    fn flush_time_refresh_only_tightens() {
+        let mut rnd = xorshift(0x7157);
+        let n = 11;
+        let q: Vec<f64> = (0..n).map(|_| rnd()).collect();
+        let c: Vec<f64> = (0..n).map(|_| rnd()).collect();
+        let mut ws = DtwWorkspace::default();
+        let exact = eap_kernel(&DtwCost { li: &q, co: &c }, n, f64::INFINITY, None, &mut ws).dist;
+        let mut packer = LanePacker::default();
+        packer.configure(2, Precision::F64);
+        // packed loose, flushed tight: the fresh threshold must win
+        packer.push(0, &c, None, f64::INFINITY);
+        packer.eval(&q, n, exact * 0.5);
+        assert!(packer.result(0).1.abandoned);
+        packer.clear();
+        // packed tight, flushed loose: the pack-time bound must survive
+        packer.push(0, &c, None, exact * 0.5);
+        packer.eval(&q, n, f64::INFINITY);
+        assert!(packer.result(0).1.abandoned);
+        packer.clear();
+    }
+}

@@ -1,10 +1,12 @@
 //! The similarity-search engine (system S10): the UCR-style subsequence
 //! search loop, the four suite variants of the paper's evaluation (plus our
-//! XLA-prefilter variant), whole-series NN1 search, and the query-cohort
+//! XLA-prefilter variant), whole-series NN1 search, the query-cohort
 //! batch scan ([`cohort`]) that serves many same-shape queries from one
-//! strip pass over the reference.
+//! strip pass over the reference, and the survivor lane packing
+//! ([`lanes`]) that feeds the multi-candidate wavefront kernel.
 
 pub mod cohort;
+pub mod lanes;
 pub mod nn1;
 pub mod subsequence;
 pub mod suite;

@@ -29,6 +29,8 @@ use crate::bounds::lb_keogh::{
 };
 use crate::bounds::lb_kim::lb_kim_hierarchy;
 use crate::distances::cache::CostModelCache;
+use crate::distances::eap_dtw::eap_cdtw_eval_f32;
+use crate::distances::kernel::Precision;
 use crate::distances::metric::Metric;
 use crate::distances::KernelWorkspace;
 use crate::index::ref_index::BucketStats;
@@ -36,6 +38,7 @@ use crate::index::topk::TopK;
 use crate::metrics::Counters;
 use crate::norm::znorm::{znorm, znorm_point, WindowStats};
 use crate::obs::{DistKind, ScanObs, Stage};
+use crate::search::lanes::LanePacker;
 use crate::search::suite::Suite;
 
 /// A located subsequence match.
@@ -91,6 +94,43 @@ impl ScanMode {
     }
 }
 
+/// Optional widening knobs for a scan, carried per query: how many
+/// survivor candidates the wavefront kernel advances in lockstep
+/// (`lanes`, 1 = scalar, clamped to
+/// [`crate::distances::kernel::MAX_LANES`]) and the DP line storage
+/// width (`precision`). The defaults reproduce the pre-tuning scan
+/// bit-for-bit; `lanes >= 2` keeps the top-k *contents* bitwise
+/// identical on f64 (pinned by `tests/conformance_lanes.rs`) while
+/// changing counter attribution; `Precision::F32` trades bitwise
+/// equality for the epsilon contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScanTuning {
+    /// survivor lanes per wavefront kernel invocation (1 = off)
+    pub lanes: usize,
+    /// DP line storage scalar for DTW-family kernels
+    pub precision: Precision,
+}
+
+impl Default for ScanTuning {
+    fn default() -> Self {
+        Self { lanes: 1, precision: Precision::F64 }
+    }
+}
+
+impl ScanTuning {
+    /// Parse a `--lanes` CLI value: clamped into `1..=MAX_LANES` by the
+    /// packer, 0 treated as "off" (1).
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        self.lanes = lanes.max(1);
+        self
+    }
+
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+}
+
 /// Everything derived from one (query, window) pair, reusable across scans
 /// and shards: the z-normalised query, its sorted order, envelopes, and
 /// all work buffers.
@@ -130,6 +170,11 @@ pub struct QueryContext {
     /// prepared once at build time so per-candidate kernel dispatch
     /// borrows instead of reallocating
     cost_cache: CostModelCache,
+    /// survivor lane packer for the multi-candidate wavefront kernel
+    /// (width 1 — inert — unless [`QueryContext::with_tuning`] widens it)
+    lanes: LanePacker,
+    /// DP line storage width for DTW-family kernel calls (f64 default)
+    precision: Precision,
     /// elastic metric every candidate is scored under
     pub metric: Metric,
 }
@@ -204,8 +249,35 @@ impl QueryContext {
             strip: StripScratch::default(),
             improved: ImprovedScratch::new(),
             cost_cache,
+            lanes: LanePacker::default(),
+            precision: Precision::F64,
             metric,
         }
+    }
+
+    /// Apply a [`ScanTuning`] to this context: configure the survivor
+    /// lane packer and the DP storage precision. The default tuning is a
+    /// no-op (scalar f64 — the bitwise-pinned path).
+    pub fn with_tuning(mut self, tuning: ScanTuning) -> Self {
+        self.precision = tuning.precision;
+        self.lanes.configure(tuning.lanes, tuning.precision);
+        if tuning.precision == Precision::F32 {
+            // pre-size the context-side f32 lines without counting a
+            // regrow, mirroring the f64 lines' build-time capacity
+            self.ws.warm32(self.q.len());
+        }
+        self
+    }
+
+    /// Should this scan defer survivors into lane groups? Only the
+    /// DTW-family metrics under an EAPruned suite core qualify: the lane
+    /// kernel instantiates the uniform [`crate::distances::kernel::DtwCost`]
+    /// model directly, which is exactly what those paths' scalar
+    /// dispatch evaluates. Everything else keeps the scalar route even
+    /// when lanes are configured.
+    #[inline]
+    fn lane_eligible(&self, suite: Suite) -> bool {
+        self.lanes.width() >= 2 && self.metric.uses_envelopes() && suite.core_is_eap()
     }
 
     /// Swap the kernel workspace and z-buffer with a caller-owned pool —
@@ -730,6 +802,9 @@ fn scan_topk_strips(
                 obs,
             );
         }
+        // lane groups never span strips: a partially-filled group is
+        // flushed here (a single pending lane takes the scalar kernel)
+        flush_lane_group(ctx, topk, counters, obs);
         strip_start += len;
     }
     ctx.strip = scratch;
@@ -825,7 +900,98 @@ pub(crate) fn eval_survivor(
             return;
         }
     }
+    if ctx.lane_eligible(suite) {
+        defer_survivor(pos, lb1, lb2, have2, bsf, ctx, cascade, topk, counters, obs);
+        return;
+    }
     score_candidate(pos, lb1, lb2, have2, bsf, ctx, suite, cascade, topk, counters, obs);
+}
+
+/// Defer one cascade survivor into the context's lane packer instead of
+/// scoring it immediately: the z-normalised window, the same
+/// cumulative-bound tail [`score_candidate`] would have used, and the
+/// current threshold are copied into the next free lane. A full group is
+/// flushed on the spot; a partial one waits for its strip's survivor
+/// list to end ([`flush_lane_group`] at the strip boundary).
+///
+/// Deferral never changes the final top-k *contents*: thresholds frozen
+/// at pack time are only ever looser than sequential evaluation's, so a
+/// deferred lane can over-admit (complete where sequential would have
+/// abandoned) but never over-prune, and every completed distance is
+/// bitwise the scalar kernel's.
+#[allow(clippy::too_many_arguments)]
+fn defer_survivor(
+    pos: usize,
+    lb1: f64,
+    lb2: f64,
+    have2: bool,
+    bsf: f64,
+    ctx: &mut QueryContext,
+    cascade: CascadePolicy,
+    topk: &mut TopK,
+    counters: &mut Counters,
+    obs: ScanObs<'_>,
+) {
+    let full = {
+        // same tighter-Keogh selection as score_candidate
+        let cb = if cascade.tighten && (cascade.keogh_eq || have2) {
+            let src = if have2 && lb2 > lb1 { &ctx.cb2 } else { &ctx.cb1 };
+            cumulate_bound(src, &mut ctx.cb_cum);
+            Some(ctx.cb_cum.as_slice())
+        } else {
+            None
+        };
+        ctx.lanes.push(pos, &ctx.zbuf, cb, bsf)
+    };
+    if full {
+        flush_lane_group(ctx, topk, counters, obs);
+    }
+}
+
+/// Evaluate and drain the context's pending lane group: refresh every
+/// lane's threshold from the owner's [`TopK`], run the wavefront kernel
+/// (or the scalar kernel for a lone survivor), then account each lane
+/// exactly as a scalar evaluation would — one metric call + outcome per
+/// lane, so `dtw_calls == dtw_abandons + dtw_completions` folds the
+/// multi-lane path in unchanged — plus the lane-packing counters and the
+/// `lane_occupancy` histogram for groups of two or more.
+pub(crate) fn flush_lane_group(
+    ctx: &mut QueryContext,
+    topk: &mut TopK,
+    counters: &mut Counters,
+    obs: ScanObs<'_>,
+) {
+    let pending = ctx.lanes.lanes_pending();
+    if pending == 0 {
+        return;
+    }
+    let metric = ctx.metric;
+    let t0 = obs.now();
+    {
+        let QueryContext { q, w, lanes, .. } = ctx;
+        lanes.eval(q, *w, topk.threshold());
+    }
+    obs.stage_since(Stage::KernelEval, t0);
+    let mut lane_abandons = 0u64;
+    for k in 0..pending {
+        let (pos, e) = ctx.lanes.result(k);
+        counters.record_metric_call(metric);
+        counters.record_metric_outcome(metric, e.abandoned);
+        if e.abandoned {
+            lane_abandons += 1;
+        }
+        if !e.abandoned && e.dist.is_finite() && topk.offer(Match { pos, dist: e.dist }) {
+            counters.topk_updates += 1;
+            counters.ub_updates += 1;
+        }
+    }
+    if pending >= 2 {
+        counters.kernel_multi_calls += 1;
+        counters.kernel_lanes_filled += pending as u64;
+        counters.kernel_lane_abandons += lane_abandons;
+        obs.record_dist(DistKind::LaneOccupancy, pending as u64);
+    }
+    ctx.lanes.clear();
 }
 
 /// One candidate through cascade + DTW core + collector. `indexed` marks
@@ -963,16 +1129,23 @@ fn score_candidate(
     // (an infeasible band — impossible here, windows match the query
     // length — would not be an abandon)
     let t0 = obs.now();
-    let out = metric.eval_outcome_cached(
-        &ctx.q,
-        &ctx.zbuf,
-        ctx.w,
-        bsf,
-        cb,
-        suite,
-        &mut ctx.ws,
-        &mut ctx.cost_cache,
-    );
+    // opt-in f32 DP lines take the dedicated entry point on the exact
+    // route (DTW-family metric, EAPruned core) the lane path covers;
+    // everything else keeps the f64 dispatch verbatim
+    let out = if ctx.precision == Precision::F32 && metric.uses_envelopes() && suite.core_is_eap() {
+        eap_cdtw_eval_f32(&ctx.q, &ctx.zbuf, ctx.w, bsf, cb, &mut ctx.ws)
+    } else {
+        metric.eval_outcome_cached(
+            &ctx.q,
+            &ctx.zbuf,
+            ctx.w,
+            bsf,
+            cb,
+            suite,
+            &mut ctx.ws,
+            &mut ctx.cost_cache,
+        )
+    };
     obs.stage_since(Stage::KernelEval, t0);
     counters.cost_model_rebuilds += ctx.cost_cache.take_rebuilds();
     counters.record_metric_outcome(metric, out.abandoned);

@@ -49,6 +49,16 @@ impl Suite {
         }
     }
 
+    /// Whether this suite's DTW core is the unified EAPruned band kernel
+    /// (the UCR-MON family). Only those cores can be widened — the
+    /// multi-lane wavefront and the f32 storage mode are kernel features,
+    /// so the comparator cores (UCR, UCR-USP) always take the scalar f64
+    /// path regardless of tuning.
+    #[inline]
+    pub fn core_is_eap(&self) -> bool {
+        matches!(self, Suite::UcrMon | Suite::UcrMonNoLb | Suite::UcrMonXla)
+    }
+
     pub fn cascade(&self) -> CascadePolicy {
         match self {
             Suite::UcrMonNoLb => CascadePolicy::none(),
@@ -135,6 +145,15 @@ mod tests {
                 assert_eq!(tie, want, "{} tie w={w}", s.name());
             }
         }
+    }
+
+    #[test]
+    fn only_the_mon_family_is_lane_eligible() {
+        assert!(!Suite::Ucr.core_is_eap());
+        assert!(!Suite::UcrUsp.core_is_eap());
+        assert!(Suite::UcrMon.core_is_eap());
+        assert!(Suite::UcrMonNoLb.core_is_eap());
+        assert!(Suite::UcrMonXla.core_is_eap());
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Conformance suite for the multi-candidate wavefront kernel and the
+//! opt-in f32 DP precision (`distances/kernel.rs`).
+//!
+//! **f64 contract — bitwise.** A multi-lane evaluation advances N
+//! candidates in row lockstep but shares no DP state between lanes, and
+//! a lane's cell values never depend on its threshold (the threshold
+//! only gates control flow). So every lane's outcome — distance bits
+//! *and* abandoned flag — must equal a scalar [`eap_kernel`] call with
+//! the same `(model, w, ub, cb)`. The property is pinned across all six
+//! metric cost models, random lane counts, and mixed per-lane bounds
+//! (`inf` / exact tie / 0 / half-exact), including lanes retired
+//! mid-group and a planted first-block abandon.
+//!
+//! **f32 contract — epsilon, over-admit only.** f32 lines round, so the
+//! gate is relative error against the f64 oracle plus the pruning
+//! direction: thresholds are inflated on narrowing, hence an f32 run may
+//! evaluate a candidate f64 would have abandoned (over-admit) but must
+//! never abandon a candidate f64 completes (over-prune).
+
+use repro::distances::kernel::{
+    eap_kernel, eap_kernel_f32, eap_kernel_multi, eap_kernel_multi_dyn, CostModel, DtwCost,
+    KernelEval, MultiWorkspace, Precision, LANE_REFRESH_ROWS, MAX_LANES,
+};
+use repro::distances::elastic::erp::Erp;
+use repro::distances::elastic::msm::Msm;
+use repro::distances::elastic::twe::Twe;
+use repro::distances::elastic::wdtw::Wdtw;
+use repro::distances::DtwWorkspace;
+use repro::index::{Engine, EngineConfig, Query};
+use repro::metrics::Counters;
+use repro::search::subsequence::ScanTuning;
+
+fn xorshift(seed: u64) -> impl FnMut() -> f64 {
+    let mut x = seed;
+    move || {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        (x as f64 / u64::MAX as f64) * 2.0 - 1.0
+    }
+}
+
+fn series(rnd: &mut impl FnMut() -> f64, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rnd()).collect()
+}
+
+/// Mixed per-lane upper bounds cycling through the interesting regimes:
+/// no bound, the exact tie (must still complete — strict `>` abandon),
+/// a planted first-rows abandon, and a mid-scan abandon.
+fn mixed_ub(lane: usize, exact: f64) -> f64 {
+    match lane % 4 {
+        0 => f64::INFINITY,
+        1 => exact,
+        2 => 0.0,
+        _ => exact * 0.5,
+    }
+}
+
+/// Evaluate `models` through the multi-lane path and through per-lane
+/// scalar calls, asserting bitwise-identical outcomes lane by lane.
+fn assert_lanes_match_scalar<C: CostModel>(
+    models: &[C],
+    w: usize,
+    ubs: &[f64],
+    mws: &mut MultiWorkspace,
+    ws: &mut DtwWorkspace,
+    tag: &str,
+) -> Vec<KernelEval> {
+    let cbs = vec![None::<&[f64]>; models.len()];
+    let mut out = Vec::new();
+    eap_kernel_multi_dyn::<f64, C>(models, w, ubs, &cbs, mws, |l| ubs[l], &mut out);
+    assert_eq!(out.len(), models.len(), "{tag}: one outcome per lane");
+    for (lane, e) in out.iter().enumerate() {
+        let want = eap_kernel(&models[lane], w, ubs[lane], None, ws);
+        assert_eq!(e.dist.to_bits(), want.dist.to_bits(), "{tag} lane {lane}");
+        assert_eq!(e.abandoned, want.abandoned, "{tag} lane {lane}");
+    }
+    out
+}
+
+/// The tentpole f64 property: across all six metric cost models, random
+/// lane counts in `2..=MAX_LANES`, and mixed per-lane bounds, every lane
+/// of a wavefront evaluation is bitwise-identical to the scalar kernel.
+#[test]
+fn multi_lane_f64_bitwise_matches_scalar_for_all_six_metrics() {
+    let mut ws = DtwWorkspace::default();
+    let mut mws = MultiWorkspace::default();
+    for seed in 1..=5u64 {
+        let mut rnd = xorshift(0x1A7E5 ^ (seed << 9));
+        let lanes = 2 + (seed as usize * 3) % (MAX_LANES - 1); // 2..=8
+        for n in [11usize, 27] {
+            let q = series(&mut rnd, n);
+            let cands: Vec<Vec<f64>> = (0..lanes).map(|_| series(&mut rnd, n)).collect();
+            let w = (n / 4).max(1);
+            let tag = |m: &str| format!("{m} seed={seed} lanes={lanes} n={n}");
+            macro_rules! pin {
+                ($name:literal, $mk:expr, $w:expr) => {{
+                    let models: Vec<_> = cands.iter().map($mk).collect();
+                    let exact: Vec<f64> = models
+                        .iter()
+                        .map(|mo| eap_kernel(mo, $w, f64::INFINITY, None, &mut ws).dist)
+                        .collect();
+                    let ubs: Vec<f64> =
+                        (0..lanes).map(|l| mixed_ub(l, exact[l])).collect();
+                    assert_lanes_match_scalar(
+                        &models, $w, &ubs, &mut mws, &mut ws, &tag($name),
+                    );
+                }};
+            }
+            pin!("cdtw", |c: &Vec<f64>| DtwCost { li: &q, co: c }, w);
+            pin!("dtw", |c: &Vec<f64>| DtwCost { li: &q, co: c }, n);
+            pin!("wdtw", |c: &Vec<f64>| Wdtw::new(&q, c, 0.05), n);
+            pin!("erp", |c: &Vec<f64>| Erp::new(&q, c, 0.25), w);
+            pin!("msm", |c: &Vec<f64>| Msm::new(&q, c, 0.5), w);
+            pin!("twe", |c: &Vec<f64>| Twe::new(&q, c, 0.05, 1.0), w);
+        }
+    }
+}
+
+/// A lane retired mid-group must not perturb its siblings: plant one
+/// candidate far from the query (abandons in the first rows under a
+/// modest bound) between two unbounded lanes and pin all three bitwise.
+#[test]
+fn planted_first_block_abandon_retires_lane_without_perturbing_siblings() {
+    let mut ws = DtwWorkspace::default();
+    let mut mws = MultiWorkspace::default();
+    let mut rnd = xorshift(0xD15C);
+    let n = 40;
+    let q = series(&mut rnd, n);
+    let near = series(&mut rnd, n);
+    // offset +100: every cell costs >= ~9801, so any finite bound from
+    // the near candidates' scale collapses the band on the first row
+    let far: Vec<f64> = series(&mut rnd, n).iter().map(|v| v + 100.0).collect();
+    let near2 = series(&mut rnd, n);
+    let models = [
+        DtwCost { li: &q, co: &near },
+        DtwCost { li: &q, co: &far },
+        DtwCost { li: &q, co: &near2 },
+    ];
+    let ubs = [f64::INFINITY, 1.0, f64::INFINITY];
+    mws.warm(3, n, Precision::F64);
+    let out =
+        assert_lanes_match_scalar(&models, n, &ubs, &mut mws, &mut ws, "planted-abandon");
+    assert!(out[1].abandoned, "the planted far candidate must abandon");
+    assert!(!out[0].abandoned && !out[2].abandoned, "siblings must complete");
+    assert_eq!(mws.regrows(), 0, "pre-warmed lanes must not regrow");
+}
+
+#[test]
+fn const_width_wrapper_delegates_to_dyn() {
+    let mut ws = DtwWorkspace::default();
+    let mut mws = MultiWorkspace::default();
+    let mut rnd = xorshift(0xC0457);
+    let n = 16;
+    let q = series(&mut rnd, n);
+    let cands: Vec<Vec<f64>> = (0..4).map(|_| series(&mut rnd, n)).collect();
+    let models: [DtwCost; 4] = std::array::from_fn(|i| DtwCost { li: &q, co: &cands[i] });
+    let exact = eap_kernel(&models[1], n, f64::INFINITY, None, &mut ws).dist;
+    let ubs = [f64::INFINITY, exact, 0.0, exact * 0.5];
+    let mut out = Vec::new();
+    eap_kernel_multi::<_, 4>(&models, n, &ubs, &mut mws, &mut out);
+    for (lane, e) in out.iter().enumerate() {
+        let want = eap_kernel(&models[lane], n, ubs[lane], None, &mut ws);
+        assert_eq!(e.dist.to_bits(), want.dist.to_bits(), "lane {lane}");
+        assert_eq!(e.abandoned, want.abandoned, "lane {lane}");
+    }
+}
+
+/// The mid-kernel refresh cadence (`LANE_REFRESH_ROWS`) folds re-read
+/// thresholds in with `min`: a refresh that returns the frozen bound or
+/// anything looser is a no-op (bitwise), and a refresh that tightens to
+/// 0 retires every lane still in flight at the cadence row.
+#[test]
+fn mid_kernel_threshold_refresh_only_tightens() {
+    let mut ws = DtwWorkspace::default();
+    let mut mws = MultiWorkspace::default();
+    let mut rnd = xorshift(0x5713F);
+    let n = LANE_REFRESH_ROWS + 36; // the refresh fires mid-evaluation
+    let q = series(&mut rnd, n);
+    let cands: Vec<Vec<f64>> = (0..3).map(|_| series(&mut rnd, n)).collect();
+    let models: Vec<DtwCost> = cands.iter().map(|c| DtwCost { li: &q, co: c }).collect();
+    let exact: Vec<f64> = models
+        .iter()
+        .map(|mo| eap_kernel(mo, n, f64::INFINITY, None, &mut ws).dist)
+        .collect();
+    let ubs = [f64::INFINITY, exact[1], exact[2] * 2.0];
+    let cbs = [None::<&[f64]>; 3];
+    // looser refresh (2x the frozen bound, inf stays inf): ignored
+    let loosen = |l: usize| ubs[l] * 2.0;
+    let mut out = Vec::new();
+    eap_kernel_multi_dyn::<f64, _>(&models, n, &ubs, &cbs, &mut mws, loosen, &mut out);
+    for (lane, e) in out.iter().enumerate() {
+        let want = eap_kernel(&models[lane], n, ubs[lane], None, &mut ws);
+        assert_eq!(e.dist.to_bits(), want.dist.to_bits(), "loosened lane {lane}");
+        assert_eq!(e.abandoned, want.abandoned, "loosened lane {lane}");
+    }
+    // tightened-to-0 refresh: every lane survives to the cadence row
+    // (bounds above are all >= exact), then collapses on it
+    eap_kernel_multi_dyn::<f64, _>(&models, n, &ubs, &cbs, &mut mws, |_| 0.0, &mut out);
+    for (lane, e) in out.iter().enumerate() {
+        assert!(e.abandoned, "tightened lane {lane} must retire at the refresh row");
+    }
+}
+
+/// End-to-end f64 identity: a lanes=4 engine returns bitwise-identical
+/// top-k results to the scalar lanes=1 engine, actually packs groups
+/// (`kernel_multi_calls > 0`), and keeps the occupancy and conservation
+/// identities that `tools/bench_diff.py` audits offline.
+#[test]
+fn engine_with_lanes_is_bitwise_identical_to_scalar_and_packs_groups() {
+    let (reference, queries) = engine_workload();
+    let k = 3;
+    let scalar = engine_with(&reference, ScanTuning::default());
+    let lanes4 = engine_with(&reference, ScanTuning::default().with_lanes(4));
+    let want = scalar.search_batch(&queries, k).unwrap();
+    let got = lanes4.search_batch(&queries, k).unwrap();
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(a.matches.len(), b.matches.len(), "q{i}");
+        for (x, y) in a.matches.iter().zip(&b.matches) {
+            assert_eq!(x.pos, y.pos, "q{i}");
+            assert_eq!(x.dist.to_bits(), y.dist.to_bits(), "q{i}");
+        }
+    }
+    let base = merged(&want);
+    assert_eq!(base.kernel_multi_calls, 0, "scalar engine must not pack lanes");
+    assert_eq!(base.kernel_lanes_filled, 0);
+    let c = merged(&got);
+    assert!(c.kernel_multi_calls > 0, "lanes=4 engine never packed a group");
+    assert!(
+        c.kernel_lanes_filled >= 2 * c.kernel_multi_calls,
+        "mean occupancy below 2: {} filled / {} calls",
+        c.kernel_lanes_filled,
+        c.kernel_multi_calls
+    );
+    assert!(c.kernel_lane_abandons <= c.kernel_lanes_filled);
+    assert!(c.kernel_lane_abandons <= c.dtw_abandons, "lane abandons are a subset");
+    // multi-lane calls fold into the conservation identity unchanged
+    assert_eq!(c.dtw_calls, c.dtw_abandons + c.dtw_completions);
+    assert_eq!(c.kernel_workspace_regrows, 0, "lane packing must not regrow");
+}
+
+/// f32 epsilon contract at the kernel level: multi-lane f32 is bitwise
+/// per-lane f32-scalar (same lockstep argument as f64); against the f64
+/// oracle it is epsilon-close and prunes only in the sound direction —
+/// a tie bound f64 completes must complete in f32 too.
+#[test]
+fn f32_lanes_bitwise_match_f32_scalar_and_track_f64_within_epsilon() {
+    let mut ws = DtwWorkspace::default();
+    let mut mws = MultiWorkspace::default();
+    for seed in 1..=3u64 {
+        let mut rnd = xorshift(0xF32 ^ (seed << 11));
+        let n = 33;
+        let q = series(&mut rnd, n);
+        let cands: Vec<Vec<f64>> = (0..4).map(|_| series(&mut rnd, n)).collect();
+        let models: Vec<DtwCost> = cands.iter().map(|c| DtwCost { li: &q, co: c }).collect();
+        let d64: Vec<f64> = models
+            .iter()
+            .map(|mo| eap_kernel(mo, n, f64::INFINITY, None, &mut ws).dist)
+            .collect();
+        // lane 1 carries the f64-exact tie: f64 completes at that bound,
+        // so the inflated f32 threshold must complete too (over-admit
+        // only); lane 3's half-exact bound must still abandon.
+        let ubs = [f64::INFINITY, d64[1], f64::INFINITY, d64[3] * 0.5];
+        let cbs = [None::<&[f64]>; 4];
+        let mut out = Vec::new();
+        eap_kernel_multi_dyn::<f32, _>(&models, n, &ubs, &cbs, &mut mws, |l| ubs[l], &mut out);
+        for (lane, e) in out.iter().enumerate() {
+            let want = eap_kernel_f32(&models[lane], n, ubs[lane], None, &mut ws);
+            assert_eq!(e.dist.to_bits(), want.dist.to_bits(), "seed={seed} lane {lane}");
+            assert_eq!(e.abandoned, want.abandoned, "seed={seed} lane {lane}");
+        }
+        assert!(!out[0].abandoned && !out[2].abandoned);
+        assert!(!out[1].abandoned, "f32 over-pruned the exact-tie lane");
+        assert!(out[3].abandoned, "half-exact bound must abandon in f32 too");
+        for (lane, e) in out.iter().enumerate() {
+            if !e.abandoned {
+                let rel = (e.dist - d64[lane]).abs() / d64[lane].abs().max(1e-12);
+                assert!(rel <= 1e-4, "seed={seed} lane {lane} rel={rel}");
+            }
+        }
+    }
+}
+
+/// End-to-end f32: a `--precision f32` engine (scalar and lanes=4)
+/// returns the same top-k positions as the f64 oracle on well-separated
+/// synthetic data, with distances epsilon-close.
+#[test]
+fn engine_f32_precision_tracks_f64_oracle_within_epsilon() {
+    let (reference, queries) = engine_workload();
+    let k = 3;
+    let oracle = engine_with(&reference, ScanTuning::default());
+    let want = oracle.search_batch(&queries, k).unwrap();
+    for lanes in [1usize, 4] {
+        let engine = engine_with(
+            &reference,
+            ScanTuning::default().with_lanes(lanes).with_precision(Precision::F32),
+        );
+        let got = engine.search_batch(&queries, k).unwrap();
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a.matches.len(), b.matches.len(), "lanes={lanes} q{i}");
+            assert_eq!(a.best().pos, b.best().pos, "lanes={lanes} q{i}");
+            for (x, y) in a.matches.iter().zip(&b.matches) {
+                let scale = x.dist.abs().max(1.0);
+                assert!(
+                    (x.dist - y.dist).abs() <= 1e-3 * scale,
+                    "lanes={lanes} q{i}: f32 dist {} vs f64 {}",
+                    y.dist,
+                    x.dist
+                );
+            }
+        }
+        let c = merged(&got);
+        assert_eq!(c.kernel_workspace_regrows, 0, "f32 lines must be pre-warmed");
+        if lanes >= 2 {
+            assert!(c.kernel_multi_calls > 0, "f32 lanes engine never packed a group");
+        }
+    }
+}
+
+fn merged(results: &[repro::index::TopKResult]) -> Counters {
+    let mut c = Counters::new();
+    for r in results {
+        c.merge(&r.counters);
+    }
+    c
+}
+
+fn engine_with(reference: &[f64], tuning: ScanTuning) -> Engine {
+    Engine::new(reference.to_vec(), &EngineConfig { shards: 2, tuning, ..Default::default() })
+        .unwrap()
+}
+
+/// A small strip-scan workload with well-separated matches: a noisy
+/// multi-tone reference and near-copy queries cut from it.
+fn engine_workload() -> (Vec<f64>, Vec<Query>) {
+    let mut rnd = xorshift(0xE26);
+    let n = 2000;
+    let reference: Vec<f64> = (0..n)
+        .map(|i| {
+            let t = i as f64;
+            (t * 0.031).sin() + 0.5 * (t * 0.0071).cos() + 0.05 * rnd()
+        })
+        .collect();
+    let qlen = 64;
+    let queries = (0..8)
+        .map(|qi| {
+            let start = (qi * 211) % (n - qlen);
+            let q: Vec<f64> =
+                reference[start..start + qlen].iter().map(|v| v + 0.02 * rnd()).collect();
+            Query::new(q, 0.1)
+        })
+        .collect();
+    (reference, queries)
+}

@@ -26,7 +26,11 @@ respawned. When present they must be non-negative integers, and the
 two-file mode reports their deltas. The net front-end counters
 (``conns_accepted``, ``conns_rejected``, ``conn_read_timeouts``,
 ``quota_shed_queries``) follow the same rule: absent in pre-net
-artifacts (no TCP front-end existed) and read as 0 there.
+artifacts (no TCP front-end existed) and read as 0 there. So do the
+wavefront-kernel lane counters (``kernel_multi_calls``,
+``kernel_lanes_filled``, ``kernel_lane_abandons``), which additionally
+must satisfy ``kernel_lanes_filled >= 2 * kernel_multi_calls`` and
+``kernel_lane_abandons <= kernel_lanes_filled``.
 
 A counter absent from a document reads as unknown, and any identity
 that needs it is skipped (older artifacts predate some counters);
@@ -68,12 +72,24 @@ NET_COUNTERS = (
     "conn_read_timeouts",
     "quota_shed_queries",
 )
+# multi-candidate wavefront kernel counters: absent in artifacts from
+# before lane packing existed, where they read as 0 rather than as
+# unknown. A multi-lane call carries >= 2 lanes by definition and lane
+# abandons are a subset of lanes filled, so when present:
+#     kernel_lanes_filled  >= 2 * kernel_multi_calls
+#     kernel_lane_abandons <= kernel_lanes_filled
+LANE_COUNTERS = (
+    "kernel_multi_calls",
+    "kernel_lanes_filled",
+    "kernel_lane_abandons",
+)
 # run-identity fields are everything except the measurements
 MEASUREMENTS = {
     "seconds",
     "ns_per_op",
     "queries_per_sec",
     "ref_bytes_per_query",
+    "lane_occupancy",
     "counters",
 }
 
@@ -121,10 +137,23 @@ def check_counters(counters, where, problems):
     rebuilds = counters.get("cost_model_rebuilds")
     if rebuilds is not None and int(rebuilds) != 0:
         problems.append(f"{where}: cost_model_rebuilds {int(rebuilds)} != 0")
-    for name in ROBUSTNESS_COUNTERS + NET_COUNTERS:
+    for name in ROBUSTNESS_COUNTERS + NET_COUNTERS + LANE_COUNTERS:
         v = counters.get(name, 0)
         if int(v) != v or int(v) < 0:
             problems.append(f"{where}: {name} {v!r} is not a non-negative count")
+    multi = int(counters.get("kernel_multi_calls", 0))
+    filled = int(counters.get("kernel_lanes_filled", 0))
+    abandons = int(counters.get("kernel_lane_abandons", 0))
+    if filled < 2 * multi:
+        problems.append(
+            f"{where}: kernel_lanes_filled {filled}"
+            f" < 2 * kernel_multi_calls {multi}"
+        )
+    if abandons > filled:
+        problems.append(
+            f"{where}: kernel_lane_abandons {abandons}"
+            f" > kernel_lanes_filled {filled}"
+        )
 
 
 def audit(doc, label, problems):
@@ -170,10 +199,10 @@ def print_deltas(base, curr):
         for key in ("dtw_calls", "dtw_abandons", "candidates"):
             if key in bc and key in cc and int(cc[key]) != int(bc[key]):
                 parts.append(f"{key} {int(bc[key])} -> {int(cc[key])}")
-        # robustness + net counters read absent as 0 on either side, so a
-        # new artifact's panics/sheds/conns diff cleanly against an old
-        # baseline
-        for key in ROBUSTNESS_COUNTERS + NET_COUNTERS:
+        # robustness + net + lane counters read absent as 0 on either
+        # side, so a new artifact's panics/sheds/conns/lane-packing diff
+        # cleanly against an old baseline
+        for key in ROBUSTNESS_COUNTERS + NET_COUNTERS + LANE_COUNTERS:
             bv, cv = int(bc.get(key, 0)), int(cc.get(key, 0))
             if bv != cv:
                 parts.append(f"{key} {bv} -> {cv}")
